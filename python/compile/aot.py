@@ -1,0 +1,177 @@
+"""AOT pipeline: lower the L2 model grid to HLO text + export weights.
+
+Python runs ONCE here (``make artifacts``); the rust coordinator serves
+from the produced files and never imports python.
+
+Interchange format is HLO **text**, not ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids, which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (/opt/xla-example/README.md).
+Lowered with ``return_tuple=True`` — the rust side unwraps the 1-tuple
+(or 3-tuple for registration blocks).
+
+Outputs (under --out-dir, default ../artifacts):
+
+    manifest.json            artifact + weight-layout + schedule index
+    <model>_<kind>_n<ن>_b<B>.hlo.txt
+    weights_<model>.bin      flat little-endian f32 stream
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import BATCH_BUCKETS, IMAGE_CHANNELS, MODELS, ModelConfig
+from .weights import BLOCK_WEIGHT_ORDER, block_weight_shapes, export_weights
+from . import model as model_lib
+
+MANIFEST_VERSION = 3
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _artifact_name(model: str, kind: str, n: int, batch: int) -> str:
+    return f"{model}_{kind}_n{n}_b{batch}"
+
+
+def _lower_grid(cfg: ModelConfig):
+    """Yield (name, kind, n, batch, lowered) for the whole artifact grid."""
+    for batch in BATCH_BUCKETS:
+        for n in cfg.all_token_counts():
+            yield (
+                _artifact_name(cfg.name, "blky", n, batch),
+                "block_y",
+                n,
+                batch,
+                model_lib.lower_block_y(cfg, n, batch),
+            )
+        for n in cfg.token_buckets():
+            yield (
+                _artifact_name(cfg.name, "blkv", n, batch),
+                "block_kv",
+                n,
+                batch,
+                model_lib.lower_block_kv(cfg, n, batch),
+            )
+    yield (
+        _artifact_name(cfg.name, "breg", cfg.tokens, 1),
+        "block_reg",
+        cfg.tokens,
+        1,
+        model_lib.lower_block_reg(cfg),
+    )
+
+
+def _inputs_fingerprint() -> str:
+    """Hash of the compile-path sources, for make-style staleness checks."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def build(out_dir: str, models=None, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "fingerprint": _inputs_fingerprint(),
+        "image_channels": IMAGE_CHANNELS,
+        "batch_buckets": BATCH_BUCKETS,
+        "block_weight_order": BLOCK_WEIGHT_ORDER,
+        "models": {},
+    }
+    t_total = time.time()
+    for name, cfg in MODELS.items():
+        if models and name not in models:
+            continue
+        t0 = time.time()
+        artifacts = []
+        for art_name, kind, n, batch, lowered in _lower_grid(cfg):
+            text = to_hlo_text(lowered)
+            fname = art_name + ".hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            artifacts.append(
+                {"name": art_name, "file": fname, "kind": kind, "n": n, "batch": batch}
+            )
+        data, entries = export_weights(cfg)
+        wname = f"weights_{name}.bin"
+        data.astype("<f4").tofile(os.path.join(out_dir, wname))
+        manifest["models"][name] = {
+            "latent_hw": cfg.latent_hw,
+            "tokens": cfg.tokens,
+            "hidden": cfg.hidden,
+            "heads": cfg.heads,
+            "blocks": cfg.blocks,
+            "steps": cfg.steps,
+            "paper_analogue": cfg.paper_analogue,
+            "token_buckets": cfg.token_buckets(),
+            "weights_file": wname,
+            "weights": entries,
+            "block_weight_shapes": {
+                k: list(v) for k, v in block_weight_shapes(cfg).items()
+            },
+            "artifacts": artifacts,
+        }
+        if verbose:
+            print(
+                f"[aot] {name}: {len(artifacts)} artifacts, "
+                f"{data.size * 4 / 1e6:.1f} MB weights, {time.time() - t0:.1f}s",
+                file=sys.stderr,
+            )
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"[aot] total {time.time() - t_total:.1f}s -> {out_dir}", file=sys.stderr)
+    return manifest
+
+
+def is_fresh(out_dir: str) -> bool:
+    """True if the manifest exists and matches the current sources."""
+    path = os.path.join(out_dir, "manifest.json")
+    if not os.path.exists(path):
+        return False
+    try:
+        with open(path) as f:
+            m = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return False
+    return (
+        m.get("version") == MANIFEST_VERSION
+        and m.get("fingerprint") == _inputs_fingerprint()
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--models", nargs="*", help="subset of model presets")
+    ap.add_argument(
+        "--force", action="store_true", help="rebuild even if artifacts are fresh"
+    )
+    args = ap.parse_args()
+    if not args.force and not args.models and is_fresh(args.out_dir):
+        print("[aot] artifacts fresh; skipping (use --force to rebuild)", file=sys.stderr)
+        return
+    build(args.out_dir, models=args.models)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Model and bucket configuration shared by the AOT pipeline and (via
+artifacts/manifest.json) by the rust coordinator.
+
+Three mini diffusion-transformer denoisers stand in for the paper's
+SD2.1 / SDXL / Flux (see DESIGN.md "Substitutions"): they keep the same
+*relative* compute intensities and the same systems behaviour (compute
+scales with the mask ratio, cache size scales with ``(1-m)*L*H``) at a
+CPU-PJRT-feasible scale.
+"""
+
+from dataclasses import dataclass, field
+from typing import List
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A mini DiT denoiser configuration.
+
+    Attributes:
+        name: preset id, referenced by the rust side.
+        latent_hw: latent grid side; token count ``L = latent_hw ** 2``.
+        hidden: transformer hidden size ``H``.
+        heads: attention heads (``H % heads == 0``).
+        blocks: number of transformer blocks ``N``.
+        steps: denoising steps per request.
+        paper_analogue: which production model this preset stands in for.
+    """
+
+    name: str
+    latent_hw: int
+    hidden: int
+    heads: int
+    blocks: int
+    steps: int
+    paper_analogue: str
+
+    @property
+    def tokens(self) -> int:
+        """Token length L (latent pixels mapped to tokens, paper §2.1)."""
+        return self.latent_hw * self.latent_hw
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    @property
+    def ffn_dim(self) -> int:
+        """Feed-forward inner size (4H, matching Table 1's analysis)."""
+        return 4 * self.hidden
+
+    def token_buckets(self) -> List[int]:
+        """Masked-token shape buckets: L/16, L/8, L/4, L/2 (DESIGN.md).
+
+        A request with k masked tokens is padded (with real unmasked
+        tokens) to the smallest bucket >= k; the full block (n == L)
+        covers the mask-agnostic path.
+        """
+        L = self.tokens
+        return [L // 16, L // 8, L // 4, L // 2]
+
+    def all_token_counts(self) -> List[int]:
+        return self.token_buckets() + [self.tokens]
+
+
+# Batch-size buckets. Paper serves max batch 4 (SD2.1 on A10) or 8
+# (SDXL/Flux on H800); the grid covers both.
+BATCH_BUCKETS: List[int] = [1, 2, 4, 8]
+
+# Denoising-step count is the per-model default (paper: "default settings
+# ... for the best image quality").
+MODELS = {
+    "sd21m": ModelConfig(
+        name="sd21m",
+        latent_hw=8,
+        hidden=64,
+        heads=4,
+        blocks=4,
+        steps=8,
+        paper_analogue="SD2.1 on A10",
+    ),
+    "sdxlm": ModelConfig(
+        name="sdxlm",
+        latent_hw=12,
+        hidden=96,
+        heads=6,
+        blocks=6,
+        steps=10,
+        paper_analogue="SDXL on H800",
+    ),
+    "fluxm": ModelConfig(
+        name="fluxm",
+        latent_hw=16,
+        hidden=128,
+        heads=8,
+        blocks=8,
+        steps=12,
+        paper_analogue="Flux on H800",
+    ),
+}
+
+# Channels per token of the decoded "image" (VAE-analogue patch size).
+IMAGE_CHANNELS = 4
+
+# Weight-initialization scale: small enough that the residual stream stays
+# numerically tame over `steps` iterations of a random denoiser.
+INIT_SCALE = 0.02
+
+
+def model_by_name(name: str) -> ModelConfig:
+    try:
+        return MODELS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown model {name!r}; available: {sorted(MODELS)}"
+        ) from None

@@ -1,0 +1,6 @@
+"""L1 Pallas kernels: masked attention (paper Fig. 5/7) and fused FFN."""
+
+from .masked_attention import masked_attention
+from .ffn import fused_ffn
+
+__all__ = ["masked_attention", "fused_ffn"]

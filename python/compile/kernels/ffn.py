@@ -1,0 +1,89 @@
+"""Pallas fused feed-forward kernel (the block's second hot-spot).
+
+``gelu(x @ w1 + b1) @ w2 + b2`` fused in one kernel so the (R, F)
+intermediate never round-trips through HBM. Rows are tiled; both weight
+matrices are resident in VMEM per grid cell (mini-model sizes: H=128,
+F=512 -> 384 KiB, far under the 16 MiB budget; at paper scale the row
+tile loop would be extended with an F-tile loop).
+
+Token-wise per Fig. 5: this kernel runs over the compute-set rows only
+(masked tokens + bucket filler), which is where the 1/m FLOP saving of
+Table 1 comes from.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_PREFERRED_BR = 64
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One row-tile grid cell: fused matmul + GeLU + matmul.
+
+    Refs: x_ref (br, H); w1_ref (H, F); b1_ref (1, F); w2_ref (F, H);
+    b2_ref (1, H); o_ref (br, H).
+    """
+    x = x_ref[:, :]
+    h = jnp.dot(x, w1_ref[:, :], preferred_element_type=jnp.float32)
+    h = h + b1_ref[0, :]
+    h = jax.nn.gelu(h, approximate=True)
+    y = jnp.dot(h, w2_ref[:, :], preferred_element_type=jnp.float32)
+    o_ref[:, :] = (y + b2_ref[0, :]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_ffn(
+    x: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused two-layer GeLU FFN over token rows.
+
+    Args:
+        x: (R, H) compute-set token rows (R = B * n).
+        w1: (H, F); b1: (F,); w2: (F, H); b2: (H,).
+        interpret: Pallas interpret mode (required on CPU PJRT).
+
+    Returns:
+        (R, H) FFN output.
+    """
+    R, H = x.shape
+    F = w1.shape[1]
+    if w1.shape != (H, F) or w2.shape != (F, H):
+        raise ValueError(f"weight shapes {w1.shape}/{w2.shape} != ({H},{F})/({F},{H})")
+    br = _largest_divisor_leq(R, _PREFERRED_BR)
+    grid = (R // br,)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, H), lambda i: (i, 0)),
+            pl.BlockSpec((H, F), lambda i: (0, 0)),
+            pl.BlockSpec((1, F), lambda i: (0, 0)),
+            pl.BlockSpec((F, H), lambda i: (0, 0)),
+            pl.BlockSpec((1, H), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, H), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, H), x.dtype),
+        interpret=interpret,
+    )(x, w1, b1.reshape(1, F), w2, b2.reshape(1, H))
+
+
+def vmem_footprint_bytes(r: int, h: int, f: int, dtype_bytes: int = 4) -> int:
+    """Structural VMEM estimate for one grid cell (EXPERIMENTS.md §Perf)."""
+    br = _largest_divisor_leq(r, _PREFERRED_BR)
+    return (br * h + h * f + f + f * h + h + br * f + br * h) * dtype_bytes

@@ -1,0 +1,135 @@
+"""Pallas masked attention — InstGenIE's L1 compute hot-spot.
+
+The paper's mask-aware editing (Fig. 5-Bottom / Fig. 7) computes attention
+for the *masked* tokens only. FISEdit does this on GPUs with gather/scatter
+sparse kernels; the TPU adaptation here (DESIGN.md §Hardware-Adaptation)
+instead relies on the host-side *masked-first permutation*, which turns the
+sparsity into a leading-dimension crop, so the kernel only ever sees dense
+tiles:
+
+- grid cell = one (batch, head, q-tile); Q tile (bq, dh) lives in VMEM;
+- K/V are streamed tile-by-tile (bk, dh) with a flash-attention-style
+  *online softmax* (running max / running sum), so the (n x m) score
+  matrix never materializes — on a real TPU this is what keeps the VMEM
+  footprint flat in the sequence length;
+- the same kernel serves both cache modes: cache-Y restricts K/V to the
+  compute set (m == n); cache-KV passes K/V replenished with the cached
+  unmasked rows (m == L).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO for execution and the
+TPU tiling story is validated structurally (see EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Preferred tile sizes. On a real TPU these would be multiples of the
+# (8, 128) vector-register tile; our mini models have dh in {16}, n down
+# to 4, so we take the largest divisor <= the preferred size.
+_PREFERRED_BQ = 32
+_PREFERRED_BK = 64
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, bk: int, m: int):
+    """One (batch, head, q-tile) grid cell with online softmax over K tiles.
+
+    Refs (VMEM views selected by BlockSpec):
+        q_ref: (1, 1, bq, dh)   o_ref: (1, 1, bq, dh)
+        k_ref: (1, 1, m, dh)    v_ref: (1, 1, m, dh)
+    """
+    q = q_ref[0, 0, :, :]  # (bq, dh)
+    bq, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    nk = m // bk
+
+    def body(j, carry):
+        m_run, l_run, acc = carry
+        k = k_ref[0, 0, pl.ds(j * bk, bk), :]  # (bk, dh)
+        v = v_ref[0, 0, pl.ds(j * bk, bk), :]  # (bk, dh)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))  # (bq,)
+        alpha = jnp.exp(m_run - m_new)  # rescale of old accumulator
+        p = jnp.exp(s - m_new[:, None])  # (bq, bk)
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    init = (
+        jnp.full((bq,), -jnp.inf, jnp.float32),
+        jnp.zeros((bq,), jnp.float32),
+        jnp.zeros((bq, dh), jnp.float32),
+    )
+    m_run, l_run, acc = jax.lax.fori_loop(0, nk, body, init)
+    out = acc / l_run[:, None]
+    o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Masked-token attention (paper Fig. 5-Bottom / Fig. 7).
+
+    Args:
+        q: (B, heads, n, dh) queries of the compute-set (masked) tokens.
+        k: (B, heads, m, dh) keys — m == n (cache-Y) or m == L (cache-KV,
+           with the unmasked rows replenished from the activation cache).
+        v: (B, heads, m, dh) values, same m as keys.
+        interpret: run the Pallas kernel in interpret mode (required on
+           CPU PJRT; compile-only on real TPUs).
+
+    Returns:
+        (B, heads, n, dh) attention outputs for the compute-set tokens.
+    """
+    B, heads, n, dh = q.shape
+    m = k.shape[2]
+    if k.shape != (B, heads, m, dh) or v.shape != (B, heads, m, dh):
+        raise ValueError(f"shape mismatch q={q.shape} k={k.shape} v={v.shape}")
+    bq = _largest_divisor_leq(n, _PREFERRED_BQ)
+    bk = _largest_divisor_leq(m, _PREFERRED_BK)
+
+    grid = (B, heads, n // bq)
+    kernel = functools.partial(_attention_kernel, bk=bk, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, m, dh), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, m, dh), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, heads, n, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_footprint_bytes(n: int, m: int, dh: int, dtype_bytes: int = 4) -> int:
+    """Structural VMEM estimate for one grid cell (EXPERIMENTS.md §Perf).
+
+    Q tile + K tile + V tile + accumulator + running stats. Used to check
+    the BlockSpec stays inside a ~16 MiB VMEM budget for the paper-scale
+    shapes (L = 4096 tokens, dh = 128).
+    """
+    bq = _largest_divisor_leq(n, _PREFERRED_BQ)
+    bk = _largest_divisor_leq(m, _PREFERRED_BK)
+    tiles = bq * dh + 2 * bk * dh  # q + current k/v tiles
+    acc = bq * dh + 2 * bq  # accumulator + m_run/l_run
+    return (tiles + acc) * dtype_bytes

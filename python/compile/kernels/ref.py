@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness contract).
+
+Every Pallas kernel in this package must match its reference here to
+float32 tolerance; ``python/tests/test_kernels.py`` sweeps shapes and
+dtypes with hypothesis.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Scaled dot-product attention.
+
+    Args:
+        q: (B, heads, n, dh) queries — in InstGenIE, only the masked
+           (compute-set) tokens (paper Fig. 5-Bottom).
+        k: (B, heads, m, dh) keys; ``m == n`` in cache-Y mode (attention
+           restricted to the compute set) or ``m == L`` in cache-KV mode
+           (cached unmasked K/V replenished, paper Fig. 7).
+        v: (B, heads, m, dh) values.
+
+    Returns:
+        (B, heads, n, dh) attention output.
+    """
+    dh = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.asarray(dh, q.dtype)
+    )
+    a = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", a, v)
+
+
+def ffn_ref(
+    x: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+) -> jax.Array:
+    """Two-layer GeLU feed-forward: ``gelu(x @ w1 + b1) @ w2 + b2``.
+
+    Args:
+        x: (R, H) rows (R = B * n flattened tokens).
+        w1: (H, F), b1: (F,), w2: (F, H), b2: (H,).
+    """
+    h = jax.nn.gelu(x @ w1 + b1, approximate=True)
+    return h @ w2 + b2
+
+
+def layer_norm_ref(x: jax.Array, g: jax.Array, b: jax.Array) -> jax.Array:
+    """LayerNorm over the trailing (hidden) axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * g + b

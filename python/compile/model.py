@@ -1,0 +1,227 @@
+"""L2 — the mini DiT denoiser, in the three mask-aware variants.
+
+Each transformer block follows the paper's Fig. 5 decomposition:
+
+    x ──ln1──▶ QKV proj ──▶ attention ──▶ out proj ──(+x)──▶
+      ──ln2──▶ fused FFN ──(+residual)──▶ y
+
+All token-wise operators (projections, LayerNorm, FFN) run over the
+*compute set* only — the masked tokens plus bucket filler — which is where
+Table 1's 1/m FLOP reduction comes from. The attention kernel is L1
+(``kernels.masked_attention``); the FFN is L1 (``kernels.fused_ffn``).
+
+Variants (one AOT executable per (variant, token bucket, batch bucket)):
+
+- ``block_y``      cache-Y mode (Fig. 5-Bottom, the default): attention is
+                   restricted to the compute set; the cached Y of unmasked
+                   tokens is replenished host-side by the rust coordinator.
+                   At n == L this *is* the standard full block.
+- ``block_kv``     cache-KV mode (Fig. 7, the ablation): Q from the compute
+                   set attends over computed K/V ++ cached unmasked K/V.
+- ``block_reg``    template registration: full block that additionally
+                   returns the K/V projections so the coordinator can
+                   populate the activation cache in one pass.
+
+Weights are positional arguments (see weights.BLOCK_WEIGHT_ORDER), so one
+lowered executable serves every block index.
+"""
+
+from typing import List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .configs import ModelConfig
+from .kernels.ref import layer_norm_ref as _layer_norm
+
+
+class BlockWeights(NamedTuple):
+    """Positional weight bundle; order must match weights.BLOCK_WEIGHT_ORDER."""
+
+    ln1_g: jax.Array
+    ln1_b: jax.Array
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+    ln2_g: jax.Array
+    ln2_b: jax.Array
+    w1: jax.Array
+    b1: jax.Array
+    w2: jax.Array
+    b2: jax.Array
+
+
+def _split_heads(x: jax.Array, heads: int) -> jax.Array:
+    """(B, n, H) -> (B, heads, n, dh)."""
+    B, n, H = x.shape
+    return x.reshape(B, n, heads, H // heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    """(B, heads, n, dh) -> (B, n, H)."""
+    B, h, n, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, n, h * dh)
+
+
+def _qkv(h: jax.Array, w: BlockWeights, heads: int):
+    q = _split_heads(h @ w.wq, heads)
+    k = _split_heads(h @ w.wk, heads)
+    v = _split_heads(h @ w.wv, heads)
+    return q, k, v
+
+
+def _ffn_rows(h2: jax.Array, w: BlockWeights) -> jax.Array:
+    B, n, H = h2.shape
+    y = kernels.fused_ffn(h2.reshape(B * n, H), w.w1, w.b1, w.w2, w.b2)
+    return y.reshape(B, n, H)
+
+
+def block_y(x: jax.Array, w: BlockWeights, *, heads: int) -> jax.Array:
+    """Cache-Y block: everything restricted to the compute set.
+
+    Args:
+        x: (B, n, H) compute-set hidden states (masked tokens first, then
+           bucket filler — the masked-first permutation is host-side).
+        w: block weights.
+
+    Returns:
+        (B, n, H) block output for the compute set. The unmasked rows of
+        the full (B, L, H) output are replenished from the activation
+        cache by the coordinator (paper Fig. 5-Bottom).
+    """
+    h = _layer_norm(x, w.ln1_g, w.ln1_b)
+    q, k, v = _qkv(h, w, heads)
+    att = _merge_heads(kernels.masked_attention(q, k, v))
+    x = x + att @ w.wo
+    h2 = _layer_norm(x, w.ln2_g, w.ln2_b)
+    return x + _ffn_rows(h2, w)
+
+
+def block_kv(
+    x: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    w: BlockWeights,
+    *,
+    heads: int,
+) -> jax.Array:
+    """Cache-KV block (Fig. 7): masked Q attends over the full sequence.
+
+    Args:
+        x: (B, n, H) compute-set hidden states.
+        k_cache: (B, L - n, H) cached K projections of the unmasked rows
+            (template activations, gathered into the request's permutation
+            by the cache engine).
+        v_cache: (B, L - n, H) cached V projections.
+
+    Returns:
+        (B, n, H) block output for the compute set.
+    """
+    h = _layer_norm(x, w.ln1_g, w.ln1_b)
+    q, k, v = _qkv(h, w, heads)
+    heads_n = q.shape[1]
+    kc = _split_heads(k_cache, heads_n)
+    vc = _split_heads(v_cache, heads_n)
+    k_all = jnp.concatenate([k, kc], axis=2)
+    v_all = jnp.concatenate([v, vc], axis=2)
+    att = _merge_heads(kernels.masked_attention(q, k_all, v_all))
+    x = x + att @ w.wo
+    h2 = _layer_norm(x, w.ln2_g, w.ln2_b)
+    return x + _ffn_rows(h2, w)
+
+
+def block_reg(x: jax.Array, w: BlockWeights, *, heads: int):
+    """Registration block: full computation + K/V taps for cache building.
+
+    Returns:
+        (y, k, v): y is the (B, L, H) block output; k and v are the
+        (B, L, H) post-projection K/V (canonical token order) that the
+        cache engine stores for cache-KV mode.
+    """
+    h = _layer_norm(x, w.ln1_g, w.ln1_b)
+    k_flat = h @ w.wk
+    v_flat = h @ w.wv
+    q = _split_heads(h @ w.wq, heads)
+    k = _split_heads(k_flat, heads)
+    v = _split_heads(v_flat, heads)
+    att = _merge_heads(kernels.masked_attention(q, k, v))
+    x = x + att @ w.wo
+    h2 = _layer_norm(x, w.ln2_g, w.ln2_b)
+    y = x + _ffn_rows(h2, w)
+    return y, k_flat, v_flat
+
+
+def denoiser_step_full(
+    x: jax.Array, all_weights: List[BlockWeights], *, heads: int
+) -> jax.Array:
+    """Reference full denoiser step (all blocks, all tokens).
+
+    Used by the python tests as the L2 oracle; the rust coordinator chains
+    per-block executables instead (so the pipeline DP can mix cached and
+    full blocks).
+    """
+    for w in all_weights:
+        x = block_y(x, w, heads=heads)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Lowering entry points (called by aot.py). Weights are flattened to
+# positional leaves so the HLO parameter order is stable and documented.
+# ---------------------------------------------------------------------------
+
+
+def lower_block_y(cfg: ModelConfig, n: int, batch: int):
+    """jit-lowered cache-Y block for (n tokens, batch) bucket."""
+
+    def fn(x, *wflat):
+        return (block_y(x, BlockWeights(*wflat), heads=cfg.heads),)
+
+    return _lower(cfg, fn, [(batch, n, cfg.hidden)])
+
+
+def lower_block_kv(cfg: ModelConfig, n: int, batch: int):
+    """jit-lowered cache-KV block for (n tokens, batch) bucket."""
+    L = cfg.tokens
+
+    def fn(x, kc, vc, *wflat):
+        return (
+            block_kv(x, kc, vc, BlockWeights(*wflat), heads=cfg.heads),
+        )
+
+    return _lower(
+        cfg,
+        fn,
+        [
+            (batch, n, cfg.hidden),
+            (batch, L - n, cfg.hidden),
+            (batch, L - n, cfg.hidden),
+        ],
+    )
+
+
+def lower_block_reg(cfg: ModelConfig):
+    """jit-lowered registration block (batch 1, full sequence)."""
+
+    def fn(x, *wflat):
+        return block_reg(x, BlockWeights(*wflat), heads=cfg.heads)
+
+    return _lower(cfg, fn, [(1, cfg.tokens, cfg.hidden)])
+
+
+def _weight_specs(cfg: ModelConfig):
+    from .weights import BLOCK_WEIGHT_ORDER, block_weight_shapes
+
+    shapes = block_weight_shapes(cfg)
+    return [
+        jax.ShapeDtypeStruct(shapes[name], jnp.float32)
+        for name in BLOCK_WEIGHT_ORDER
+    ]
+
+
+def _lower(cfg: ModelConfig, fn, data_shapes):
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in data_shapes]
+    specs += _weight_specs(cfg)
+    return jax.jit(fn).lower(*specs)

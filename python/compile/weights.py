@@ -1,0 +1,155 @@
+"""Deterministic weight generation + binary export for the rust runtime.
+
+Weights are *runtime inputs* to the AOT executables (DESIGN.md "Model
+weights"): one executable per (kind, token-bucket, batch-bucket) is shared
+across all block indices, and the rust coordinator feeds per-block weight
+buffers loaded from ``artifacts/weights_<model>.bin``.
+
+Binary format: a flat little-endian float32 stream; the tensor layout
+(name, shape, offset in floats) is recorded in ``manifest.json`` so the
+rust side needs no parsing heuristics.
+"""
+
+import hashlib
+import math
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+def _stable_seed(*parts) -> int:
+    """Process-independent seed (python's hash() is salted per process)."""
+    h = hashlib.sha256("/".join(str(p) for p in parts).encode()).digest()
+    return int.from_bytes(h[:4], "little")
+
+from .configs import IMAGE_CHANNELS, INIT_SCALE, ModelConfig
+
+# Per-block weight tensors, in the exact positional order the block
+# executables take them after the data arguments. Shapes use H = hidden,
+# F = ffn_dim.
+BLOCK_WEIGHT_ORDER: List[str] = [
+    "ln1_g",  # (H,)
+    "ln1_b",  # (H,)
+    "wq",     # (H, H)
+    "wk",     # (H, H)
+    "wv",     # (H, H)
+    "wo",     # (H, H)
+    "ln2_g",  # (H,)
+    "ln2_b",  # (H,)
+    "w1",     # (H, F)
+    "b1",     # (F,)
+    "w2",     # (F, H)
+    "b2",     # (H,)
+]
+
+
+def block_weight_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    H, F = cfg.hidden, cfg.ffn_dim
+    return {
+        "ln1_g": (H,),
+        "ln1_b": (H,),
+        "wq": (H, H),
+        "wk": (H, H),
+        "wv": (H, H),
+        "wo": (H, H),
+        "ln2_g": (H,),
+        "ln2_b": (H,),
+        "w1": (H, F),
+        "b1": (F,),
+        "w2": (F, H),
+        "b2": (H,),
+    }
+
+
+def _init(rng: np.random.Generator, shape: Tuple[int, ...], name: str) -> np.ndarray:
+    """Weight init keeping the residual stream tame over many steps."""
+    if name.startswith("ln") and name.endswith("_g"):
+        return np.ones(shape, np.float32)
+    if name.endswith("_b") or name in ("b1", "b2"):
+        return np.zeros(shape, np.float32)
+    return rng.normal(0.0, INIT_SCALE, size=shape).astype(np.float32)
+
+
+def make_block_weights(cfg: ModelConfig, block_idx: int) -> Dict[str, np.ndarray]:
+    """Deterministic weights for one transformer block (seeded by name+idx)."""
+    seed = _stable_seed(cfg.name, "block", block_idx)
+    rng = np.random.default_rng(seed)
+    return {
+        name: _init(rng, shape, name)
+        for name, shape in block_weight_shapes(cfg).items()
+    }
+
+
+def make_timestep_table(cfg: ModelConfig) -> np.ndarray:
+    """Sinusoidal timestep embeddings, (steps, H).
+
+    Added host-side by the rust coordinator before block 0 each denoise
+    step (DESIGN.md: conditioning enters the compute rows only, so the
+    unmasked rows of a request follow the template trajectory exactly).
+    """
+    H = cfg.hidden
+    t = np.arange(cfg.steps, dtype=np.float32)[:, None]
+    half = H // 2
+    freqs = np.exp(-math.log(10_000.0) * np.arange(half, dtype=np.float32) / half)
+    ang = t * freqs[None, :]
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=1)
+    return (emb * 0.1).astype(np.float32)
+
+
+def make_sigma_schedule(cfg: ModelConfig) -> np.ndarray:
+    """Karras-flavoured decreasing noise schedule, (steps + 1,) ending at 0."""
+    steps = cfg.steps
+    rho = 3.0
+    i = np.arange(steps, dtype=np.float32)
+    sig = (1.0 ** (1 / rho) + i / max(steps - 1, 1) * (0.05 ** (1 / rho) - 1.0 ** (1 / rho))) ** rho
+    return np.concatenate([sig, [0.0]]).astype(np.float32)
+
+
+def make_decoder(cfg: ModelConfig) -> np.ndarray:
+    """VAE-analogue decoder (H, IMAGE_CHANNELS); applied host-side in post."""
+    seed = _stable_seed(cfg.name, "decoder")
+    rng = np.random.default_rng(seed)
+    return rng.normal(0.0, 1.0 / math.sqrt(cfg.hidden), size=(cfg.hidden, IMAGE_CHANNELS)).astype(np.float32)
+
+
+def make_encoder(cfg: ModelConfig) -> np.ndarray:
+    """VAE-analogue encoder (IMAGE_CHANNELS, H); applied host-side in pre."""
+    seed = _stable_seed(cfg.name, "encoder")
+    rng = np.random.default_rng(seed)
+    return rng.normal(0.0, 1.0 / math.sqrt(IMAGE_CHANNELS), size=(IMAGE_CHANNELS, cfg.hidden)).astype(np.float32)
+
+
+def export_weights(cfg: ModelConfig):
+    """Build the flat f32 stream + layout manifest for one model.
+
+    Returns:
+        (data, entries): ``data`` is a 1-D float32 array; ``entries`` is a
+        list of {name, shape, offset (floats), len (floats)} dicts.
+    """
+    tensors: List[Tuple[str, np.ndarray]] = []
+    for b in range(cfg.blocks):
+        weights = make_block_weights(cfg, b)
+        for name in BLOCK_WEIGHT_ORDER:
+            tensors.append((f"block{b}.{name}", weights[name]))
+    tensors.append(("temb", make_timestep_table(cfg)))
+    tensors.append(("sigmas", make_sigma_schedule(cfg)))
+    tensors.append(("decoder", make_decoder(cfg)))
+    tensors.append(("encoder", make_encoder(cfg)))
+
+    entries = []
+    chunks = []
+    offset = 0
+    for name, arr in tensors:
+        flat = np.ascontiguousarray(arr, np.float32).reshape(-1)
+        entries.append(
+            {
+                "name": name,
+                "shape": list(arr.shape),
+                "offset": offset,
+                "len": int(flat.size),
+            }
+        )
+        chunks.append(flat)
+        offset += int(flat.size)
+    data = np.concatenate(chunks)
+    return data, entries

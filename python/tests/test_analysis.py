@@ -1,0 +1,25 @@
+"""Fig. 6 claims hold on the mini models: unmasked activations are more
+similar across requests than masked ones, and attention mass concentrates
+on the diagonal quadrants."""
+
+from compile.analysis import run
+
+
+def test_unmasked_activations_more_similar():
+    r = run(model="sd21m", mask_ratio=0.25, seed=0)
+    assert r["cos_unmasked"] > r["cos_masked"]
+    assert r["cos_unmasked"] > 0.95  # "highly similar" (paper Fig. 6-Left)
+
+
+def test_attention_quadrants_diagonal_dominant():
+    r = run(model="sd21m", mask_ratio=0.25, seed=0)
+    q = r["attention_quadrants"]
+    # each row's diagonal entry carries more mass than its off-diagonal,
+    # normalised by quadrant size (masked quadrant is small).
+    L_frac = r["mask_ratio"]
+    mm = q[0][0] / L_frac
+    mu = q[0][1] / (1 - L_frac)
+    uu = q[1][1] / (1 - L_frac)
+    um = q[1][0] / L_frac
+    assert mm > mu
+    assert uu > um

@@ -1,0 +1,165 @@
+"""L2 model semantics: the mask-aware reuse contract, in python.
+
+The key equivalences the rust coordinator relies on:
+
+1. cache-KV with *exact* caches == the full block, restricted to the
+   compute rows (Fig. 7 is exact when the cache is exact);
+2. cache-Y at n == L *is* the full block;
+3. block_reg's Y output matches block_y, and its K/V taps match the
+   projections (so the registration pass populates a correct cache);
+4. weights/schedules are deterministic (rust reloads them by byte offset).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile.configs import MODELS
+from compile.weights import (
+    BLOCK_WEIGHT_ORDER,
+    block_weight_shapes,
+    export_weights,
+    make_block_weights,
+    make_sigma_schedule,
+    make_timestep_table,
+)
+
+CFG = MODELS["sd21m"]
+
+
+def _weights(cfg=CFG, idx=0) -> M.BlockWeights:
+    w = make_block_weights(cfg, idx)
+    return M.BlockWeights(*[jnp.asarray(w[k]) for k in BLOCK_WEIGHT_ORDER])
+
+
+def _x(rng, b, n, h):
+    return jnp.asarray(rng.normal(0.0, 1.0, size=(b, n, h)), jnp.float32)
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1), n=st.sampled_from([4, 8, 16, 32])
+)
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_block_kv_with_exact_cache_matches_full(seed, n):
+    """Fig. 7 contract: exact K/V cache reproduces the full block exactly.
+
+    Build a full sequence x (L tokens), run block_reg to get the true K/V,
+    then run block_kv over the first n rows with the rest of K/V supplied
+    as "cache" — the outputs must match the full block's first n rows.
+    """
+    rng = np.random.default_rng(seed)
+    w = _weights()
+    L, H = CFG.tokens, CFG.hidden
+    x = _x(rng, 1, L, H)
+    y_full, k_full, v_full = M.block_reg(x, w, heads=CFG.heads)
+    out = M.block_kv(
+        x[:, :n, :],
+        k_full[:, n:, :],
+        v_full[:, n:, :],
+        w,
+        heads=CFG.heads,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(y_full[:, :n, :]), atol=3e-5, rtol=3e-5
+    )
+
+
+def test_block_y_at_full_length_is_standard_block():
+    rng = np.random.default_rng(0)
+    w = _weights()
+    x = _x(rng, 2, CFG.tokens, CFG.hidden)
+    y_reg, _, _ = M.block_reg(
+        jnp.concatenate([x[:1], x[1:]], axis=0)[:1], w, heads=CFG.heads
+    )
+    y = M.block_y(x, w, heads=CFG.heads)
+    np.testing.assert_allclose(
+        np.asarray(y[:1]), np.asarray(y_reg), atol=3e-5, rtol=3e-5
+    )
+
+
+def test_block_reg_kv_taps_are_projections():
+    rng = np.random.default_rng(1)
+    w = _weights()
+    x = _x(rng, 1, CFG.tokens, CFG.hidden)
+    from compile.kernels.ref import layer_norm_ref
+
+    _, k, v = M.block_reg(x, w, heads=CFG.heads)
+    h = layer_norm_ref(x, w.ln1_g, w.ln1_b)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(h @ w.wk), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(h @ w.wv), atol=2e-5, rtol=2e-5)
+
+
+def test_block_y_token_independence_outside_attention():
+    """Unmasked-token independence: rows outside the compute set do not
+    change the compute-set output (cache-Y mode never sees them at all) —
+    the paper's token-wise-operator argument (§3.1) holds by construction.
+    """
+    rng = np.random.default_rng(2)
+    w = _weights()
+    n, H = 8, CFG.hidden
+    x = _x(rng, 1, n, H)
+    out1 = M.block_y(x, w, heads=CFG.heads)
+    out2 = M.block_y(x + 0.0, w, heads=CFG.heads)  # identical inputs
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_weights_deterministic_and_layout_stable():
+    for cfg in MODELS.values():
+        d1, e1 = export_weights(cfg)
+        d2, e2 = export_weights(cfg)
+        np.testing.assert_array_equal(d1, d2)
+        assert e1 == e2
+        # layout covers the stream exactly, in order
+        off = 0
+        for e in e1:
+            assert e["offset"] == off
+            assert e["len"] == int(np.prod(e["shape"]))
+            off += e["len"]
+        assert off == d1.size
+        names = {e["name"] for e in e1}
+        for b in range(cfg.blocks):
+            for wname in BLOCK_WEIGHT_ORDER:
+                assert f"block{b}.{wname}" in names
+        for extra in ("temb", "sigmas", "decoder", "encoder"):
+            assert extra in names
+
+
+def test_sigma_schedule_monotone_to_zero():
+    for cfg in MODELS.values():
+        sig = make_sigma_schedule(cfg)
+        assert sig.shape == (cfg.steps + 1,)
+        assert np.all(np.diff(sig) < 0)
+        assert sig[-1] == 0.0
+        assert sig[0] == 1.0
+
+
+def test_timestep_table_shape_and_scale():
+    for cfg in MODELS.values():
+        t = make_timestep_table(cfg)
+        assert t.shape == (cfg.steps, cfg.hidden)
+        assert np.all(np.abs(t) <= 0.1 + 1e-6)
+
+
+def test_denoiser_step_full_is_stable():
+    """The residual stream stays bounded through all blocks (random
+    weights with INIT_SCALE must not blow up over a full step)."""
+    rng = np.random.default_rng(3)
+    cfg = MODELS["sdxlm"]
+    ws = [
+        M.BlockWeights(
+            *[jnp.asarray(make_block_weights(cfg, b)[k]) for k in BLOCK_WEIGHT_ORDER]
+        )
+        for b in range(cfg.blocks)
+    ]
+    x = _x(rng, 1, cfg.tokens, cfg.hidden)
+    y = M.denoiser_step_full(x, ws, heads=cfg.heads)
+    assert np.all(np.isfinite(np.asarray(y)))
+    assert float(jnp.max(jnp.abs(y))) < 100.0
+
+
+def test_block_weight_shapes_consistent_with_order():
+    for cfg in MODELS.values():
+        shapes = block_weight_shapes(cfg)
+        assert list(shapes.keys()) == BLOCK_WEIGHT_ORDER

@@ -1,0 +1,94 @@
+//! Shared plumbing for the paper-figure benches (harness = false).
+//!
+//! Each bench binary regenerates one table/figure of the paper's
+//! evaluation, printing the same rows/series and saving CSV under
+//! `bench_results/`. Scale is controlled by `INSTGENIE_BENCH_SCALE`
+//! (default 1.0; raise for tighter statistics, lower for smoke runs).
+
+#![allow(dead_code)]
+
+use std::time::Duration;
+
+use instgenie::cache::LatencyModel;
+use instgenie::cluster::{Cluster, ClusterOpts};
+use instgenie::config::{EngineConfig, SystemKind};
+use instgenie::metrics::{Recorder, Report};
+use instgenie::runtime::Manifest;
+use instgenie::scheduler;
+use instgenie::workload::{replay, MaskDist, TraceGen};
+
+pub fn scale() -> f64 {
+    std::env::var("INSTGENIE_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0)
+}
+
+pub fn scaled(n: usize) -> usize {
+    ((n as f64 * scale()).round() as usize).max(4)
+}
+
+/// Launch a cluster with common bench defaults.
+pub fn launch(
+    model: &str,
+    workers: usize,
+    engine: EngineConfig,
+    sched_name: &str,
+    templates: usize,
+    warmup: bool,
+) -> Cluster {
+    let manifest = Manifest::load("artifacts").expect("run `make artifacts` first");
+    let mcfg = manifest.model(model).expect("model").config.clone();
+    let lat = LatencyModel::load_or_nominal("artifacts", model);
+    let sched = scheduler::by_name(sched_name, &mcfg, &lat, engine.cache_mode, engine.max_batch)
+        .expect("scheduler");
+    Cluster::launch(
+        ClusterOpts {
+            workers,
+            engine,
+            model: model.into(),
+            artifact_dir: "artifacts".into(),
+            templates: (0..templates).map(|i| format!("tpl-{i}")).collect(),
+            lat_model: lat,
+            warmup,
+        },
+        sched,
+    )
+    .expect("cluster launch")
+}
+
+/// Run a Poisson trace through a cluster, returning the metrics report.
+pub fn serve_trace(
+    cluster: Cluster,
+    rps: f64,
+    requests: usize,
+    dist: MaskDist,
+    templates: usize,
+    seed: u64,
+) -> Report {
+    let gen = TraceGen::new(rps, dist, templates, seed);
+    let events = gen.generate(requests);
+    let t0 = std::time::Instant::now();
+    replay(&events, |ev| {
+        cluster.submit_event(ev);
+    });
+    let ok = cluster.await_completed(events.len(), Duration::from_secs(900));
+    assert!(ok, "serving timed out");
+    let makespan = t0.elapsed().as_secs_f64();
+    let responses = cluster.shutdown().expect("shutdown");
+    let mut rec = Recorder::new();
+    for r in &responses {
+        rec.record(r);
+    }
+    rec.report(makespan)
+}
+
+/// One engine config per paper baseline (the §6 line-up).
+pub fn systems() -> Vec<(&'static str, EngineConfig)> {
+    vec![
+        ("instgenie", EngineConfig::for_system(SystemKind::InstGenIE)),
+        ("diffusers", EngineConfig::for_system(SystemKind::Diffusers)),
+        ("fisedit", EngineConfig::for_system(SystemKind::FisEdit)),
+        ("teacache", EngineConfig::for_system(SystemKind::TeaCache)),
+    ]
+}

@@ -1,0 +1,76 @@
+//! Fig. 12 — end-to-end request serving latency vs request rate, for all
+//! four systems (the paper's headline comparison: up to 14.7x lower mean
+//! latency than Diffusers, 4x vs FISEdit, 6x vs TeaCache), plus the
+//! rightmost queuing-time bars.
+//!
+//! Testbed scale: 2 workers, production mask distribution, ~32 requests
+//! per point (scale with INSTGENIE_BENCH_SCALE). Absolute numbers are
+//! CPU-PJRT-scale; the comparison *shape* is the reproduction target.
+
+#[path = "common.rs"]
+mod common;
+
+use instgenie::util::bench::{fmt_secs, Table};
+use instgenie::workload::MaskDist;
+
+fn main() {
+    let full = std::env::var("INSTGENIE_BENCH_FULL").is_ok();
+    let models: &[(&str, &[f64])] = if full {
+        &[
+            ("sd21m", &[2.0, 4.0, 8.0]),
+            ("sdxlm", &[0.5, 1.0, 2.0]),
+            ("fluxm", &[0.25, 0.5, 1.0]),
+        ]
+    } else {
+        &[("sd21m", &[2.0, 6.0]), ("sdxlm", &[0.5, 1.5])]
+    };
+    let requests = common::scaled(32);
+
+    let mut table = Table::new(
+        "Fig. 12: end-to-end latency vs RPS (2 workers, production masks)",
+        &["model", "rps", "system", "mean_e2e", "p95_e2e", "queue_mean", "tput"],
+    );
+    let mut queue_bars = Table::new(
+        "Fig. 12-Rightmost: normalized queuing time at the top RPS",
+        &["model", "system", "queue_norm"],
+    );
+
+    for (model, rates) in models {
+        for &rps in *rates {
+            let mut ig_queue = None;
+            for (name, mut engine) in common::systems() {
+                engine.prepost_cpu_us = 1000;
+                let cluster = common::launch(model, 2, engine, "mask-aware", 4, true);
+                let rep = common::serve_trace(
+                    cluster,
+                    rps,
+                    requests,
+                    MaskDist::Production,
+                    4,
+                    42,
+                );
+                table.rowf(&[
+                    model,
+                    &format!("{rps}"),
+                    &name,
+                    &fmt_secs(rep.e2e.mean),
+                    &fmt_secs(rep.e2e.p95),
+                    &fmt_secs(rep.queue.mean),
+                    &format!("{:.2}", rep.throughput),
+                ]);
+                if rps == *rates.last().unwrap() {
+                    let base = *ig_queue.get_or_insert(rep.queue.mean.max(1e-9));
+                    queue_bars.rowf(&[
+                        model,
+                        &name,
+                        &format!("{:.2}", rep.queue.mean / base),
+                    ]);
+                }
+            }
+        }
+    }
+    table.print();
+    table.save_csv("fig12_e2e").ok();
+    queue_bars.print();
+    queue_bars.save_csv("fig12_queue_bars").ok();
+}

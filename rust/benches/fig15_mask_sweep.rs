@@ -1,0 +1,112 @@
+//! Fig. 15 — mask-aware editing latency scales linearly with mask ratio.
+//!
+//! Left: kernel/block-level latency vs mask ratio (attention + linear
+//! dominate a block; we time the full AOT block, the unit the pipeline
+//! schedules). Right: image-level edit latency vs mask ratio, per model,
+//! plus the speedup at m = 0.2 (paper: 1.3x / 2.2x / 1.9x for
+//! SD2.1 / SDXL / Flux).
+
+#[path = "common.rs"]
+mod common;
+
+use instgenie::config::{EngineConfig, SystemKind};
+use instgenie::model::Latent;
+use instgenie::runtime::ModelRuntime;
+use instgenie::util::bench::{fmt_secs, time_it, Table};
+use instgenie::util::stats::linear_fit;
+use instgenie::workload::MaskDist;
+
+fn main() {
+    kernel_level();
+    image_level();
+}
+
+fn kernel_level() {
+    let mut table = Table::new(
+        "Fig. 15-Left: block latency vs mask ratio (batch 1)",
+        &["model", "mask_ratio", "tokens", "latency", "per_full"],
+    );
+    let mut csv = Table::new("csv", &["model", "ratio", "latency_s"]);
+    for model in ["sd21m", "sdxlm", "fluxm"] {
+        let rt = ModelRuntime::create("artifacts", model).expect("runtime");
+        let cfg = rt.config.clone();
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let full = {
+            let x = Latent::noise(cfg.tokens, cfg.hidden, 1, 1.0);
+            time_it(3, common::scaled(20), || {
+                rt.run_block_y(0, cfg.tokens, 1, x.data()).unwrap();
+            })
+            .mean
+        };
+        for n in cfg.all_token_counts() {
+            let x = Latent::noise(n, cfg.hidden, 1, 1.0);
+            let s = time_it(3, common::scaled(20), || {
+                rt.run_block_y(0, n, 1, x.data()).unwrap();
+            });
+            let ratio = n as f64 / cfg.tokens as f64;
+            xs.push(ratio);
+            ys.push(s.mean);
+            table.rowf(&[
+                &model,
+                &format!("{ratio:.3}"),
+                &n,
+                &fmt_secs(s.mean),
+                &format!("{:.2}x", s.mean / full),
+            ]);
+            csv.rowf(&[&model, &format!("{ratio:.4}"), &format!("{:.6e}", s.mean)]);
+        }
+        let fit = linear_fit(&xs, &ys);
+        println!("  {model}: latency vs ratio linear fit R² = {:.4}", fit.r2);
+    }
+    table.print();
+    csv.save_csv("fig15_kernel").ok();
+}
+
+fn image_level() {
+    let mut table = Table::new(
+        "Fig. 15-Right: image edit latency vs mask ratio (single request)",
+        &["model", "mask_ratio", "instgenie", "full_regen", "speedup"],
+    );
+    let mut csv = Table::new("csv", &["model", "ratio", "instgenie_s", "full_s"]);
+    for model in ["sd21m", "sdxlm", "fluxm"] {
+        for ratio in [0.05, 0.1, 0.2, 0.4] {
+            let ig = single_request_latency(model, SystemKind::InstGenIE, ratio);
+            let full = single_request_latency(model, SystemKind::Diffusers, ratio);
+            if (ratio - 0.2).abs() < 1e-9 {
+                println!("  {model} @ m=0.2: speedup {:.2}x (paper: SD2.1 1.3x / SDXL 2.2x / Flux 1.9x)", full / ig);
+            }
+            table.rowf(&[
+                &model,
+                &format!("{ratio:.2}"),
+                &fmt_secs(ig),
+                &fmt_secs(full),
+                &format!("{:.2}x", full / ig),
+            ]);
+            csv.rowf(&[
+                &model,
+                &format!("{ratio:.2}"),
+                &format!("{ig:.6}"),
+                &format!("{full:.6}"),
+            ]);
+        }
+    }
+    table.print();
+    csv.save_csv("fig15_image").ok();
+}
+
+fn single_request_latency(model: &str, system: SystemKind, ratio: f64) -> f64 {
+    let mut engine = EngineConfig::for_system(system);
+    engine.max_batch = 1;
+    engine.prepost_cpu_us = 0;
+    let cluster = common::launch(model, 1, engine, "request-lb", 1, true);
+    let report = common::serve_trace(
+        cluster,
+        0.35, // sequential-ish arrivals: isolate inference latency
+        common::scaled(6),
+        MaskDist::Fixed(ratio),
+        1,
+        9,
+    );
+    report.inference.p50
+}

@@ -1,0 +1,93 @@
+//! Fig. 16-Left + Fig. 4-Middle — batching strategies (§4.3 / §6.4).
+//!
+//! The paper's two effects, isolated for the single-core CPU testbed
+//! (where batch compute is linear, unlike a GPU's ~1.29x-per-4 batch —
+//! see EXPERIMENTS.md "Testbed deltas"):
+//!
+//! 1. **Queuing** (Fig. 4-Middle): static batching makes new arrivals
+//!    wait for whole-batch completion; step-level continuous batching
+//!    admits them in one denoise step. Paper: ~2x queuing reduction.
+//! 2. **Interruptions** (Fig. 16-Left): the strawman continuous batcher
+//!    runs CPU-bound pre/post-processing inline on the engine thread,
+//!    interrupting the denoise loop (paper: up to 8 interruptions, +40%
+//!    P95); disaggregation moves it to a separate pool (+0
+//!    interruptions). Measured at batch 1 so batch-composition effects
+//!    cannot confound the comparison.
+
+#[path = "common.rs"]
+mod common;
+
+use instgenie::config::{BatchingPolicy, EngineConfig, SystemKind};
+use instgenie::util::bench::{fmt_secs, Table};
+use instgenie::workload::MaskDist;
+
+fn main() {
+    queuing();
+    interruptions();
+}
+
+fn queuing() {
+    let model = std::env::var("INSTGENIE_BENCH_MODEL").unwrap_or_else(|_| "sdxlm".into());
+    let requests = common::scaled(60);
+    let mut table = Table::new(
+        &format!("Fig. 4-Middle: queuing time, static vs continuous ({model}, 1 worker)"),
+        &["rps", "policy", "mean_queue", "p95_queue", "p95_e2e"],
+    );
+    for rps in [15.0, 30.0] {
+        for (name, policy) in [
+            ("static", BatchingPolicy::Static),
+            ("continuous", BatchingPolicy::ContinuousDisaggregated),
+        ] {
+            let mut engine = EngineConfig::for_system(SystemKind::InstGenIE);
+            engine.batching = policy;
+            engine.max_batch = 4;
+            engine.prepost_cpu_us = 1_000;
+            let cluster = common::launch(&model, 1, engine, "request-lb", 3, true);
+            let rep =
+                common::serve_trace(cluster, rps, requests, MaskDist::Production, 3, 21);
+            table.rowf(&[
+                &format!("{rps}"),
+                &name,
+                &fmt_secs(rep.queue.mean),
+                &fmt_secs(rep.queue.p95),
+                &fmt_secs(rep.e2e.p95),
+            ]);
+        }
+    }
+    table.print();
+    table.save_csv("fig4_mid_queuing").ok();
+}
+
+fn interruptions() {
+    let model = std::env::var("INSTGENIE_BENCH_MODEL").unwrap_or_else(|_| "sdxlm".into());
+    let requests = common::scaled(40);
+    let mut table = Table::new(
+        &format!("Fig. 16-Left: strawman vs disaggregated continuous batching ({model})"),
+        &["policy", "interruptions/req", "mean_inf", "p95_e2e"],
+    );
+    // Same continuous policy + cap on both sides; only the *placement* of
+    // pre/post-processing differs. On this 1-core testbed the latency
+    // gain of disaggregation cannot materialize (there is no second core
+    // to hide CPU work on), so the structural metric — how often the
+    // denoise loop is interrupted — is the reproduction target; see
+    // EXPERIMENTS.md "Testbed deltas".
+    for (name, policy) in [
+        ("strawman-cb (inline)", BatchingPolicy::ContinuousInline),
+        ("instgenie-cb (disagg)", BatchingPolicy::ContinuousDisaggregated),
+    ] {
+        let mut engine = EngineConfig::for_system(SystemKind::InstGenIE);
+        engine.batching = policy;
+        engine.max_batch = 4;
+        engine.prepost_cpu_us = 4_000;
+        let cluster = common::launch(&model, 1, engine, "request-lb", 3, true);
+        let rep = common::serve_trace(cluster, 25.0, requests, MaskDist::Production, 3, 22);
+        table.rowf(&[
+            &name,
+            &format!("{:.1}", rep.mean_interruptions),
+            &fmt_secs(rep.inference.mean),
+            &fmt_secs(rep.e2e.p95),
+        ]);
+    }
+    table.print();
+    table.save_csv("fig16_batching").ok();
+}

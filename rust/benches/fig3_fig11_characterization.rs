@@ -1,0 +1,96 @@
+//! Fig. 3 + Fig. 11 + Table 1 — characterization & regression models.
+//!
+//! Fig. 3: mask-ratio distribution statistics (paper means 0.11 / 0.19 /
+//! 0.35). Fig. 11: the latency regression models fit with R² ~ 0.99.
+//! Table 1: the analytic FLOP/cache-shape scaling checked against
+//! measured block latencies.
+
+#[path = "common.rs"]
+mod common;
+
+use instgenie::cache::latency_model::{block_cache_bytes, block_flops_cached, block_flops_full, calibrate};
+use instgenie::config::CacheMode;
+use instgenie::runtime::ModelRuntime;
+use instgenie::util::bench::Table;
+use instgenie::util::rng::Pcg;
+use instgenie::util::stats::Summary;
+use instgenie::workload::MaskDist;
+
+fn main() {
+    fig3();
+    table1();
+    fig11();
+}
+
+fn fig3() {
+    let mut table = Table::new(
+        "Fig. 3: mask-ratio distributions",
+        &["distribution", "mean", "p50", "p95", "paper_mean"],
+    );
+    for (dist, paper) in [
+        (MaskDist::Production, 0.11),
+        (MaskDist::PublicTrace, 0.19),
+        (MaskDist::VitonHD, 0.35),
+    ] {
+        let mut rng = Pcg::new(1);
+        let xs: Vec<f64> = (0..50_000).map(|_| dist.sample(&mut rng)).collect();
+        let s = Summary::of(&xs);
+        table.rowf(&[
+            &format!("{dist:?}"),
+            &format!("{:.3}", s.mean),
+            &format!("{:.3}", s.p50),
+            &format!("{:.3}", s.p95),
+            &format!("{paper}"),
+        ]);
+    }
+    table.print();
+    table.save_csv("fig3_workload").ok();
+}
+
+fn table1() {
+    let manifest = instgenie::runtime::Manifest::load("artifacts").expect("artifacts");
+    let cfg = manifest.model("fluxm").unwrap().config.clone();
+    let mut table = Table::new(
+        "Table 1: mask-aware FLOP / cache scaling (fluxm, per block per member)",
+        &["mask_ratio", "flops_ratio_y", "flops_ratio_kv", "cache_KiB_y", "expected_(1-m)LH"],
+    );
+    let full = block_flops_full(&cfg);
+    for n in cfg.token_buckets.clone() {
+        let m = n as f64 / cfg.tokens as f64;
+        let fy = block_flops_cached(&cfg, n, CacheMode::CacheY) / full;
+        let fkv = block_flops_cached(&cfg, n, CacheMode::CacheKV) / full;
+        let bytes = block_cache_bytes(&cfg, n, CacheMode::CacheY);
+        let expect = (cfg.tokens - n) as f64 * cfg.hidden as f64 * 4.0;
+        table.rowf(&[
+            &format!("{m:.3}"),
+            &format!("{fy:.3}"),
+            &format!("{fkv:.3}"),
+            &format!("{:.1}", bytes / 1024.0),
+            &format!("{:.1}", expect / 1024.0),
+        ]);
+    }
+    table.print();
+    table.save_csv("table1_scaling").ok();
+}
+
+fn fig11() {
+    let mut table = Table::new(
+        "Fig. 11: latency regression models (paper R² = 0.99)",
+        &["model", "comp_slope_s_per_flop", "comp_r2", "load_slope_s_per_B", "load_r2"],
+    );
+    for model in ["sd21m", "sdxlm", "fluxm"] {
+        let rt = ModelRuntime::create("artifacts", model).expect("runtime");
+        let (lat, _, _) = calibrate(&rt, 192.0 * 1024.0 * 1024.0, common::scaled(10))
+            .expect("calibrate");
+        table.rowf(&[
+            &model,
+            &format!("{:.3e}", lat.comp.slope),
+            &format!("{:.4}", lat.comp.r2),
+            &format!("{:.3e}", lat.load.slope),
+            &format!("{:.4}", lat.load.r2),
+        ]);
+        lat.save("artifacts", model).ok();
+    }
+    table.print();
+    table.save_csv("fig11_regression").ok();
+}

@@ -1,0 +1,285 @@
+//! Latency regression models — paper §4.4 (Fig. 11) and Table 1.
+//!
+//! Both the computational load and the cache-loading volume of a block
+//! are linear in the masked-token count (Table 1):
+//!
+//!   feed-forward (XW1)W2 : O(B n L-free H^2)   -> FLOPs linear in n
+//!   projection  XW       : O(B n H^2)
+//!   attention   QK^T     : O(B n m H)          (m = n in cache-Y mode)
+//!   cache shape          : (B, L - n, H)       -> bytes linear in L - n
+//!
+//! So latency = a * FLOPs + b and load = bytes / bandwidth + c fit with
+//! plain least squares (the paper reports R^2 = 0.99). The models are
+//! calibrated offline (`instgenie calibrate`) and used by both the
+//! worker's pipeline DP (Algo 1) and the cluster scheduler (Algo 2).
+
+use crate::config::{CacheMode, ModelConfig};
+use crate::util::stats::LinearFit;
+
+use super::pipeline::BlockCosts;
+
+/// Analytic FLOP count of one transformer block over `n` compute tokens
+/// with attention span `m` (Table 1; constants folded, batch excluded).
+pub fn block_flops(cfg: &ModelConfig, n: usize, m: usize) -> f64 {
+    let h = cfg.hidden as f64;
+    let nf = n as f64;
+    let mf = m as f64;
+    let proj = 4.0 * 2.0 * nf * h * h; // Q,K,V,O projections
+    let attn = 2.0 * 2.0 * nf * mf * h; // QK^T and AV
+    let ffn = 2.0 * 2.0 * nf * h * (4.0 * h); // (XW1)W2
+    proj + attn + ffn
+}
+
+/// FLOPs of a cache-mode block at bucket `n` (per batch member).
+pub fn block_flops_cached(cfg: &ModelConfig, n: usize, mode: CacheMode) -> f64 {
+    match mode {
+        CacheMode::CacheY => block_flops(cfg, n, n),
+        CacheMode::CacheKV => block_flops(cfg, n, cfg.tokens),
+    }
+}
+
+/// FLOPs of a full block (all L tokens).
+pub fn block_flops_full(cfg: &ModelConfig) -> f64 {
+    block_flops(cfg, cfg.tokens, cfg.tokens)
+}
+
+/// Bytes of cached activations loaded per block for bucket `n`
+/// (per batch member): the (L - n, H) Y rows, or 2x for K/V mode.
+pub fn block_cache_bytes(cfg: &ModelConfig, n: usize, mode: CacheMode) -> f64 {
+    let rows = (cfg.tokens - n) as f64;
+    let base = rows * cfg.hidden as f64 * 4.0;
+    match mode {
+        CacheMode::CacheY => base,
+        CacheMode::CacheKV => 2.0 * base,
+    }
+}
+
+/// Calibrated latency model for one (model, worker) pair.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    /// seconds = comp.slope * FLOPs + comp.intercept
+    pub comp: LinearFit,
+    /// seconds = load.slope * bytes + load.intercept
+    pub load: LinearFit,
+}
+
+impl LatencyModel {
+    /// Fit from calibration samples: (flops, seconds) and (bytes, seconds).
+    /// Intercepts are floored at zero (dispatch overhead is real and
+    /// positive; a negative intercept would make the pipeline DP believe
+    /// small blocks are free).
+    pub fn fit(comp_samples: &[(f64, f64)], load_samples: &[(f64, f64)]) -> LatencyModel {
+        use crate::util::stats::linear_fit_nonneg;
+        let (cx, cy): (Vec<f64>, Vec<f64>) = comp_samples.iter().copied().unzip();
+        let (lx, ly): (Vec<f64>, Vec<f64>) = load_samples.iter().copied().unzip();
+        LatencyModel { comp: linear_fit_nonneg(&cx, &cy), load: linear_fit_nonneg(&lx, &ly) }
+    }
+
+    /// Synthetic model from nominal throughput numbers (tests / sims):
+    /// `flops_per_sec` compute rate, `bytes_per_sec` copy bandwidth.
+    pub fn nominal(flops_per_sec: f64, bytes_per_sec: f64) -> LatencyModel {
+        LatencyModel {
+            comp: LinearFit { slope: 1.0 / flops_per_sec, intercept: 0.0, r2: 1.0 },
+            load: LinearFit { slope: 1.0 / bytes_per_sec, intercept: 0.0, r2: 1.0 },
+        }
+    }
+
+    pub fn comp_seconds(&self, flops: f64) -> f64 {
+        self.comp.predict(flops).max(0.0)
+    }
+
+    pub fn load_seconds(&self, bytes: f64) -> f64 {
+        self.load.predict(bytes).max(0.0)
+    }
+
+    /// Per-block DP costs for a batch whose members use bucket `n`.
+    ///
+    /// `batch_members` scales both compute FLOPs and cache bytes — each
+    /// member loads its own activation rows (heterogeneous templates).
+    pub fn block_costs(
+        &self,
+        cfg: &ModelConfig,
+        n: usize,
+        batch_members: usize,
+        mode: CacheMode,
+    ) -> BlockCosts {
+        let b = batch_members.max(1) as f64;
+        BlockCosts {
+            c_cached: self.comp_seconds(b * block_flops_cached(cfg, n, mode)),
+            c_full: self.comp_seconds(b * block_flops_full(cfg)),
+            load: self.load_seconds(b * block_cache_bytes(cfg, n, mode)),
+        }
+    }
+
+    /// Step costs for the whole model (uniform blocks).
+    pub fn step_costs(
+        &self,
+        cfg: &ModelConfig,
+        n: usize,
+        batch_members: usize,
+        mode: CacheMode,
+    ) -> Vec<BlockCosts> {
+        vec![self.block_costs(cfg, n, batch_members, mode); cfg.blocks]
+    }
+}
+
+impl LatencyModel {
+    /// JSON persistence (written by `instgenie calibrate`, consumed by the
+    /// scheduler and the workers' pipeline DP).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let fit = |f: &LinearFit| {
+            Json::obj(vec![
+                ("slope", Json::num(f.slope)),
+                ("intercept", Json::num(f.intercept)),
+                ("r2", Json::num(f.r2)),
+            ])
+        };
+        Json::obj(vec![("comp", fit(&self.comp)), ("load", fit(&self.load))])
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> Option<LatencyModel> {
+        let fit = |j: &crate::util::json::Json| {
+            Some(LinearFit {
+                slope: j.at("slope").as_f64()?,
+                intercept: j.at("intercept").as_f64()?,
+                r2: j.at("r2").as_f64().unwrap_or(0.0),
+            })
+        };
+        Some(LatencyModel { comp: fit(j.at("comp"))?, load: fit(j.at("load"))? })
+    }
+
+    /// Load a calibrated model from `<dir>/latency_model_<model>.json`,
+    /// falling back to nominal rates when absent (tests, cold checkouts).
+    pub fn load_or_nominal(dir: &str, model: &str) -> LatencyModel {
+        let path = std::path::Path::new(dir).join(format!("latency_model_{model}.json"));
+        std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|t| crate::util::json::Json::parse(&t).ok())
+            .and_then(|j| LatencyModel::from_json(&j))
+            .unwrap_or_else(|| LatencyModel::nominal(2e9, 192.0 * 1024.0 * 1024.0))
+    }
+
+    pub fn save(&self, dir: &str, model: &str) -> std::io::Result<()> {
+        let path = std::path::Path::new(dir).join(format!("latency_model_{model}.json"));
+        std::fs::write(path, self.to_json().to_string())
+    }
+}
+
+/// Offline calibration (paper §4.4 "fitted with the offline data"):
+/// measure block latencies across the (token-bucket, batch-bucket) grid
+/// and loader throughput across transfer sizes, then least-squares fit.
+/// Returns (model, comp samples, load samples) so callers can print the
+/// Fig.-11 style table.
+pub fn calibrate(
+    rt: &crate::runtime::ModelRuntime,
+    sim_bandwidth: f64,
+    reps: usize,
+) -> anyhow::Result<(LatencyModel, Vec<(f64, f64)>, Vec<(f64, f64)>)> {
+    use crate::model::Latent;
+    let cfg = rt.config.clone();
+    let mut comp = Vec::new();
+    for &b in &[1usize, 2, 4, 8] {
+        for n in cfg.all_token_counts() {
+            let x = Latent::noise(b * n, cfg.hidden, 7, 1.0);
+            // warmup (compile + caches)
+            rt.run_block_y(0, n, b, x.data())?;
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                rt.run_block_y(0, n, b, x.data())?;
+            }
+            let secs = t0.elapsed().as_secs_f64() / reps as f64;
+            comp.push((b as f64 * block_flops(&cfg, n, n), secs));
+        }
+    }
+    // loader: pacing dominates, so the fit recovers 1/sim_bandwidth
+    let mut load = Vec::new();
+    for &rows in &[cfg.tokens / 8, cfg.tokens / 4, cfg.tokens / 2, cfg.tokens] {
+        let bytes = (rows * cfg.hidden * 4) as f64;
+        load.push((bytes, bytes / sim_bandwidth.max(1.0)));
+    }
+    let model = LatencyModel::fit(&comp, &load);
+    Ok((model, comp, load))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            latent_hw: 8,
+            tokens: 64,
+            hidden: 64,
+            heads: 4,
+            blocks: 4,
+            steps: 8,
+            token_buckets: vec![4, 8, 16, 32],
+            paper_analogue: String::new(),
+        }
+    }
+
+    #[test]
+    fn flops_linear_in_n_cache_y() {
+        // Table 1: cached FLOPs at mask ratio m are ~m * full FLOPs
+        let c = cfg();
+        let full = block_flops_full(&c);
+        let quarter = block_flops_cached(&c, 16, CacheMode::CacheY);
+        let ratio = quarter / full;
+        // attention term is quadratic in n, so ratio < n/L for cache-Y
+        assert!(ratio < 0.25 + 1e-9, "ratio {ratio}");
+        assert!(ratio > 0.15, "ratio {ratio}");
+    }
+
+    #[test]
+    fn kv_mode_costs_more_flops_and_bytes_than_y() {
+        let c = cfg();
+        let n = 16;
+        assert!(
+            block_flops_cached(&c, n, CacheMode::CacheKV)
+                > block_flops_cached(&c, n, CacheMode::CacheY)
+        );
+        assert!(
+            (block_cache_bytes(&c, n, CacheMode::CacheKV)
+                - 2.0 * block_cache_bytes(&c, n, CacheMode::CacheY))
+            .abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn cache_bytes_match_table1_shape() {
+        // Table 1: cache shape (B, (1-m)L, H) -> bytes = (L-n) * H * 4
+        let c = cfg();
+        assert_eq!(block_cache_bytes(&c, 16, CacheMode::CacheY), (64.0 - 16.0) * 64.0 * 4.0);
+        assert_eq!(block_cache_bytes(&c, 64, CacheMode::CacheY), 0.0);
+    }
+
+    #[test]
+    fn nominal_model_round_numbers() {
+        let m = LatencyModel::nominal(1e9, 1e8);
+        assert!((m.comp_seconds(1e9) - 1.0).abs() < 1e-12);
+        assert!((m.load_seconds(1e8) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fit_recovers_synthetic_rates() {
+        let comp: Vec<(f64, f64)> = (1..10).map(|i| (i as f64 * 1e6, i as f64 * 1e-3 + 5e-4)).collect();
+        let load: Vec<(f64, f64)> = (1..10).map(|i| (i as f64 * 1e5, i as f64 * 2e-3)).collect();
+        let m = LatencyModel::fit(&comp, &load);
+        assert!(m.comp.r2 > 0.999, "comp r2 {}", m.comp.r2);
+        assert!(m.load.r2 > 0.999);
+        assert!((m.comp_seconds(5e6) - 5.5e-3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn block_costs_scale_with_batch() {
+        let c = cfg();
+        let m = LatencyModel::nominal(1e9, 1e8);
+        let b1 = m.block_costs(&c, 16, 1, CacheMode::CacheY);
+        let b4 = m.block_costs(&c, 16, 4, CacheMode::CacheY);
+        assert!((b4.c_cached - 4.0 * b1.c_cached).abs() < 1e-12);
+        assert!((b4.load - 4.0 * b1.load).abs() < 1e-12);
+    }
+}

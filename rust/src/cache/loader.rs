@@ -1,0 +1,246 @@
+//! Cache-load stream — the simulated DRAM→HBM copy engine (paper §4.2).
+//!
+//! A dedicated loader thread plays the role of the CUDA copy stream: the
+//! worker submits, in pipeline-plan order, one gather job per cached
+//! block; the loader gathers each batch member's unmasked rows from its
+//! template activations (a real memcpy) and *paces* the job to the
+//! configured bandwidth, so the load:compute ratio matches the paper's
+//! PCIe regime (DESIGN.md "Substitutions"). The worker blocks on the
+//! completion channel when it reaches a cached block whose activations
+//! have not landed — that wait is exactly the pipeline bubble the DP of
+//! Algorithm 1 squeezes out.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::cache::store::TemplateActivations;
+use crate::config::CacheMode;
+
+/// What to stage for one batch member of one block.
+#[derive(Clone)]
+pub struct MemberGather {
+    pub store: Arc<TemplateActivations>,
+    /// Denoise step of this member (members batch at different steps
+    /// under continuous batching).
+    pub step: usize,
+    /// Token ids (canonical order) whose cached rows to stage.
+    pub ids: Arc<Vec<usize>>,
+}
+
+/// Staged activations of one block for the whole batch.
+pub struct StagedBlock {
+    pub block: usize,
+    /// Per member: gathered Y rows `(|ids|, H)`.
+    pub y: Vec<Vec<f32>>,
+    /// Per member: gathered K/V rows (cache-KV mode only).
+    pub kv: Option<Vec<(Vec<f32>, Vec<f32>)>>,
+}
+
+struct Job {
+    block: usize,
+    members: Vec<MemberGather>,
+    mode: CacheMode,
+    done: Sender<StagedBlock>,
+}
+
+/// Handle to the loader thread.
+pub struct CacheLoader {
+    tx: Option<Sender<Job>>,
+    handle: Option<JoinHandle<()>>,
+    bandwidth: f64,
+}
+
+impl CacheLoader {
+    /// Spawn the loader with the given simulated bandwidth (bytes/sec;
+    /// `0` disables pacing — the "ideal" ablation of Fig. 4-Left).
+    pub fn spawn(bandwidth: f64) -> CacheLoader {
+        let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
+        let handle = std::thread::Builder::new()
+            .name("cache-loader".into())
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    let t0 = Instant::now();
+                    let staged = gather(job.block, &job.members, job.mode);
+                    pace(staged_bytes(&staged), bandwidth, t0);
+                    let _ = job.done.send(staged);
+                }
+            })
+            .expect("spawn cache-loader");
+        CacheLoader { tx: Some(tx), handle: Some(handle), bandwidth }
+    }
+
+    pub fn bandwidth(&self) -> f64 {
+        self.bandwidth
+    }
+
+    /// Submit a gather job; completion arrives on the returned receiver.
+    /// Jobs are processed FIFO — submission order *is* the load-stream
+    /// order assumed by the pipeline DP.
+    pub fn submit(
+        &self,
+        block: usize,
+        members: Vec<MemberGather>,
+        mode: CacheMode,
+    ) -> Receiver<StagedBlock> {
+        let (done_tx, done_rx) = channel();
+        self.tx
+            .as_ref()
+            .expect("loader alive")
+            .send(Job { block, members, mode, done: done_tx })
+            .expect("loader thread alive");
+        done_rx
+    }
+
+    /// Synchronous gather without the loader thread (naive-loading
+    /// ablation: the compute stream itself performs the load).
+    pub fn gather_sync(
+        &self,
+        block: usize,
+        members: Vec<MemberGather>,
+        mode: CacheMode,
+    ) -> StagedBlock {
+        let t0 = Instant::now();
+        let staged = gather(block, &members, mode);
+        pace(staged_bytes(&staged), self.bandwidth, t0);
+        staged
+    }
+}
+
+impl Drop for CacheLoader {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn gather(block: usize, members: &[MemberGather], mode: CacheMode) -> StagedBlock {
+    let mut y = Vec::with_capacity(members.len());
+    let mut kv = matches!(mode, CacheMode::CacheKV).then(Vec::new);
+    for m in members {
+        let entry = m.store.entry(m.step, block);
+        let h = m.store.hidden;
+        let mut rows = vec![0f32; m.ids.len() * h];
+        gather_rows(&entry.y, h, &m.ids, &mut rows);
+        y.push(rows);
+        if let Some(kvs) = kv.as_mut() {
+            let (ks, vs) = entry
+                .kv
+                .as_ref()
+                .expect("cache-KV mode requires K/V-registered templates");
+            let mut kr = vec![0f32; m.ids.len() * h];
+            let mut vr = vec![0f32; m.ids.len() * h];
+            gather_rows(ks, h, &m.ids, &mut kr);
+            gather_rows(vs, h, &m.ids, &mut vr);
+            kvs.push((kr, vr));
+        }
+    }
+    StagedBlock { block, y, kv }
+}
+
+fn gather_rows(src: &[f32], h: usize, ids: &[usize], out: &mut [f32]) {
+    for (i, &id) in ids.iter().enumerate() {
+        out[i * h..(i + 1) * h].copy_from_slice(&src[id * h..(id + 1) * h]);
+    }
+}
+
+fn staged_bytes(s: &StagedBlock) -> usize {
+    let y: usize = s.y.iter().map(|v| v.len() * 4).sum();
+    let kv: usize = s
+        .kv
+        .as_ref()
+        .map(|kvs| kvs.iter().map(|(k, v)| (k.len() + v.len()) * 4).sum())
+        .unwrap_or(0);
+    y + kv
+}
+
+fn pace(bytes: usize, bandwidth: f64, t0: Instant) {
+    if bandwidth <= 0.0 {
+        return;
+    }
+    let want = bytes as f64 / bandwidth;
+    let spent = t0.elapsed().as_secs_f64();
+    if want > spent {
+        std::thread::sleep(std::time::Duration::from_secs_f64(want - spent));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::store::CacheEntry;
+
+    fn store(kv: bool) -> Arc<TemplateActivations> {
+        let tokens = 4;
+        let hidden = 2;
+        let entries = (0..4)
+            .map(|i| CacheEntry {
+                y: (0..tokens * hidden).map(|j| (i * 10 + j) as f32).collect(),
+                kv: kv.then(|| {
+                    (
+                        vec![(i * 100) as f32; tokens * hidden],
+                        vec![(i * 1000) as f32; tokens * hidden],
+                    )
+                }),
+            })
+            .collect();
+        Arc::new(TemplateActivations::from_parts(
+            "t".into(),
+            "m".into(),
+            2,
+            2,
+            tokens,
+            hidden,
+            0,
+            entries,
+        ))
+    }
+
+    #[test]
+    fn gathers_requested_rows_in_order() {
+        let loader = CacheLoader::spawn(0.0);
+        let m = MemberGather { store: store(false), step: 1, ids: Arc::new(vec![3, 1]) };
+        let rx = loader.submit(0, vec![m], CacheMode::CacheY);
+        let staged = rx.recv().unwrap();
+        assert_eq!(staged.block, 0);
+        // entry(1, 0) has base 2*10; row 3 = [26, 27], row 1 = [22, 23]
+        assert_eq!(staged.y[0], vec![26.0, 27.0, 22.0, 23.0]);
+        assert!(staged.kv.is_none());
+    }
+
+    #[test]
+    fn kv_mode_stages_kv() {
+        let loader = CacheLoader::spawn(0.0);
+        let m = MemberGather { store: store(true), step: 0, ids: Arc::new(vec![0]) };
+        let staged = loader.submit(1, vec![m], CacheMode::CacheKV).recv().unwrap();
+        let kv = staged.kv.unwrap();
+        assert_eq!(kv[0].0, vec![100.0, 100.0]);
+        assert_eq!(kv[0].1, vec![1000.0, 1000.0]);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let loader = CacheLoader::spawn(0.0);
+        let mk = |step| MemberGather { store: store(false), step, ids: Arc::new(vec![0]) };
+        let rx0 = loader.submit(0, vec![mk(0)], CacheMode::CacheY);
+        let rx1 = loader.submit(1, vec![mk(0)], CacheMode::CacheY);
+        // both complete; block tags intact
+        assert_eq!(rx0.recv().unwrap().block, 0);
+        assert_eq!(rx1.recv().unwrap().block, 1);
+    }
+
+    #[test]
+    fn pacing_enforces_bandwidth() {
+        // 2 members x 2 rows x 2 floats x 4B = 32B staged... use a tiny
+        // bandwidth so the job must take >= 40ms
+        let loader = CacheLoader::spawn(32.0 / 0.04);
+        let mk = || MemberGather { store: store(false), step: 0, ids: Arc::new(vec![0, 2]) };
+        let t0 = Instant::now();
+        let rx = loader.submit(0, vec![mk(), mk()], CacheMode::CacheY);
+        rx.recv().unwrap();
+        assert!(t0.elapsed().as_millis() >= 35, "pacing skipped");
+    }
+}

@@ -1,0 +1,212 @@
+//! Activation store — the cached intermediate activations of registered
+//! image templates (paper §3.1/§4.2).
+//!
+//! Registering a template runs the **full** model once (the registration
+//! block taps Y and the K/V projections) and records, for every
+//! (denoise step, block), the `(L, H)` activations in canonical token
+//! order. A later edit request gathers the rows of *its* unmasked suffix
+//! from these tensors — any mask shape can reuse the same template cache,
+//! which is what makes the 35 000-fold template reuse of the production
+//! trace (§2.2) pay off.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::CacheMode;
+use crate::model::Latent;
+use crate::runtime::ModelRuntime;
+use crate::util::rng::hash_str;
+
+/// Cached activations of one (step, block).
+#[derive(Debug, Clone)]
+pub struct CacheEntry {
+    /// Block output Y, (L, H) flattened — cache-Y mode (Fig. 5-Bottom).
+    pub y: Vec<f32>,
+    /// K/V projections, (L, H) each — cache-KV mode (Fig. 7). `None` when
+    /// the store was registered Y-only (half the memory, per the paper's
+    /// note that K/V caching doubles the cache size).
+    pub kv: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+/// All cached activations of one template on one model.
+#[derive(Debug)]
+pub struct TemplateActivations {
+    pub template_id: String,
+    pub model: String,
+    pub steps: usize,
+    pub blocks: usize,
+    pub tokens: usize,
+    pub hidden: usize,
+    /// Noise seed of the template trajectory (requests start from the
+    /// same x_T so their unmasked rows follow the template exactly).
+    pub seed: u64,
+    /// entries[step * blocks + block]
+    entries: Vec<CacheEntry>,
+}
+
+impl TemplateActivations {
+    pub fn entry(&self, step: usize, block: usize) -> &CacheEntry {
+        &self.entries[step * self.blocks + block]
+    }
+
+    /// Template eps at `step` = final block's Y (the model predicts eps as
+    /// its final hidden state); unmasked latent rows advance with this.
+    pub fn eps(&self, step: usize) -> &[f32] {
+        &self.entry(step, self.blocks - 1).y
+    }
+
+    /// Total cache footprint in bytes.
+    pub fn size_bytes(&self) -> usize {
+        self.entries
+            .iter()
+            .map(|e| {
+                4 * (e.y.len() + e.kv.as_ref().map(|(k, v)| k.len() + v.len()).unwrap_or(0))
+            })
+            .sum()
+    }
+
+    /// Deterministic noise seed for a template id.
+    pub fn seed_for(template_id: &str) -> u64 {
+        hash_str(template_id)
+    }
+
+    /// Rebuild the template's initial latent x_T.
+    pub fn initial_latent(&self) -> Latent {
+        Latent::noise(self.tokens, self.hidden, self.seed, 1.0)
+    }
+
+    /// Construct from raw parts (disk-tier deserialization).
+    pub fn from_parts(
+        template_id: String,
+        model: String,
+        steps: usize,
+        blocks: usize,
+        tokens: usize,
+        hidden: usize,
+        seed: u64,
+        entries: Vec<CacheEntry>,
+    ) -> TemplateActivations {
+        assert_eq!(entries.len(), steps * blocks);
+        TemplateActivations {
+            template_id,
+            model,
+            steps,
+            blocks,
+            tokens,
+            hidden,
+            seed,
+            entries,
+        }
+    }
+
+    pub fn entries(&self) -> &[CacheEntry] {
+        &self.entries
+    }
+}
+
+/// Run the full model on a template and capture its activations.
+///
+/// `mode` controls whether K/V taps are stored alongside Y (doubling the
+/// cache, Fig. 7). Returns the populated store plus the final denoised
+/// template latent (useful for quality baselines).
+pub fn register_template(
+    rt: &ModelRuntime,
+    template_id: &str,
+    mode: CacheMode,
+) -> Result<(Arc<TemplateActivations>, Latent)> {
+    let cfg = &rt.config;
+    let seed = TemplateActivations::seed_for(template_id);
+    let mut x = Latent::noise(cfg.tokens, cfg.hidden, seed, 1.0);
+    let sched = rt.schedule().clone();
+    let all_ids: Vec<usize> = (0..cfg.tokens).collect();
+    let mut entries = Vec::with_capacity(cfg.steps * cfg.blocks);
+
+    for t in 0..cfg.steps {
+        // h = x + temb[t] (template conditioning is zero; DESIGN.md)
+        let temb = rt.weights().temb_row(t).to_vec();
+        let mut h = x.data().to_vec();
+        for (i, v) in h.iter_mut().enumerate() {
+            *v += temb[i % cfg.hidden];
+        }
+        for b in 0..cfg.blocks {
+            let (y, k, v) = rt.run_block_reg(b, &h)?;
+            entries.push(CacheEntry {
+                y: y.clone(),
+                kv: match mode {
+                    CacheMode::CacheY => None,
+                    CacheMode::CacheKV => Some((k, v)),
+                },
+            });
+            h = y;
+        }
+        // eps = final hidden; advance all rows
+        sched.update_rows(t, x.data_mut(), cfg.hidden, &all_ids, &h);
+    }
+
+    let store = TemplateActivations::from_parts(
+        template_id.to_string(),
+        cfg.name.clone(),
+        cfg.steps,
+        cfg.blocks,
+        cfg.tokens,
+        cfg.hidden,
+        seed,
+        entries,
+    );
+    Ok((Arc::new(store), x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy(steps: usize, blocks: usize) -> TemplateActivations {
+        let tokens = 4;
+        let hidden = 2;
+        let entries = (0..steps * blocks)
+            .map(|i| CacheEntry { y: vec![i as f32; tokens * hidden], kv: None })
+            .collect();
+        TemplateActivations::from_parts(
+            "t".into(),
+            "m".into(),
+            steps,
+            blocks,
+            tokens,
+            hidden,
+            7,
+            entries,
+        )
+    }
+
+    #[test]
+    fn entry_indexing() {
+        let s = dummy(3, 2);
+        assert_eq!(s.entry(0, 0).y[0], 0.0);
+        assert_eq!(s.entry(0, 1).y[0], 1.0);
+        assert_eq!(s.entry(1, 0).y[0], 2.0);
+        assert_eq!(s.entry(2, 1).y[0], 5.0);
+        // eps(t) is the final block's Y
+        assert_eq!(s.eps(1)[0], 3.0);
+    }
+
+    #[test]
+    fn size_accounts_kv() {
+        let mut s = dummy(1, 1);
+        assert_eq!(s.size_bytes(), 4 * 8);
+        s.entries[0].kv = Some((vec![0.0; 8], vec![0.0; 8]));
+        assert_eq!(s.size_bytes(), 4 * 24);
+    }
+
+    #[test]
+    fn seed_is_stable_per_template() {
+        assert_eq!(
+            TemplateActivations::seed_for("tpl-1"),
+            TemplateActivations::seed_for("tpl-1")
+        );
+        assert_ne!(
+            TemplateActivations::seed_for("tpl-1"),
+            TemplateActivations::seed_for("tpl-2")
+        );
+    }
+}

@@ -1,0 +1,353 @@
+//! Hierarchical activation storage — paper §4.2 "Hierarchical storage".
+//!
+//! Host tier: byte-budgeted map of templates with LRU eviction to the
+//! disk tier (real spill files). A request whose template is only on disk
+//! pays a promotion (real file IO + bandwidth pacing) — the paper hides
+//! this under queuing time by starting promotion at enqueue, which the
+//! worker reproduces by prefetching via the pre/post pool.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::store::{CacheEntry, TemplateActivations};
+
+/// Counters for cache-behaviour observability (and tests).
+#[derive(Debug, Default, Clone)]
+pub struct TierStats {
+    pub host_hits: u64,
+    pub disk_promotions: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+struct HostSlot {
+    store: Arc<TemplateActivations>,
+    last_used: Instant,
+}
+
+/// Byte-budgeted host tier + disk spill tier.
+pub struct TieredStore {
+    budget: usize,
+    spill_dir: PathBuf,
+    /// Simulated disk bandwidth (bytes/s); promotion pacing.
+    disk_bandwidth: f64,
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    host: HashMap<String, HostSlot>,
+    bytes: usize,
+    stats: TierStats,
+}
+
+impl TieredStore {
+    pub fn new(budget: usize, spill_dir: PathBuf, disk_bandwidth: f64) -> TieredStore {
+        TieredStore {
+            budget,
+            spill_dir,
+            disk_bandwidth,
+            inner: Mutex::new(Inner {
+                host: HashMap::new(),
+                bytes: 0,
+                stats: TierStats::default(),
+            }),
+        }
+    }
+
+    pub fn stats(&self) -> TierStats {
+        self.inner.lock().unwrap().stats.clone()
+    }
+
+    pub fn host_bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Insert a freshly registered template (evicting LRU to disk if the
+    /// budget overflows).
+    pub fn insert(&self, store: Arc<TemplateActivations>) -> Result<()> {
+        let size = store.size_bytes();
+        let mut inner = self.inner.lock().unwrap();
+        inner.bytes += size;
+        inner.host.insert(
+            store.template_id.clone(),
+            HostSlot { store, last_used: Instant::now() },
+        );
+        self.evict_to_budget(&mut inner)?;
+        Ok(())
+    }
+
+    /// Fetch a template's activations, promoting from disk if required.
+    /// Returns `Ok(None)` when the template is unknown to both tiers
+    /// (caller must register it).
+    pub fn get(&self, template_id: &str) -> Result<Option<Arc<TemplateActivations>>> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(slot) = inner.host.get_mut(template_id) {
+                slot.last_used = Instant::now();
+                let store = Arc::clone(&slot.store);
+                inner.stats.host_hits += 1;
+                return Ok(Some(store));
+            }
+        }
+        // disk promotion outside the lock (real IO)
+        let path = self.spill_path(template_id);
+        if !path.exists() {
+            self.inner.lock().unwrap().stats.misses += 1;
+            return Ok(None);
+        }
+        let t0 = Instant::now();
+        let store = Arc::new(read_spill(&path)?);
+        pace(store.size_bytes(), self.disk_bandwidth, t0);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.stats.disk_promotions += 1;
+            inner.bytes += store.size_bytes();
+            inner.host.insert(
+                template_id.to_string(),
+                HostSlot { store: Arc::clone(&store), last_used: Instant::now() },
+            );
+            self.evict_to_budget(&mut inner)?;
+        }
+        Ok(Some(store))
+    }
+
+    /// True if the template is resident in the host tier.
+    pub fn is_host_resident(&self, template_id: &str) -> bool {
+        self.inner.lock().unwrap().host.contains_key(template_id)
+    }
+
+    fn evict_to_budget(&self, inner: &mut Inner) -> Result<()> {
+        while inner.bytes > self.budget && inner.host.len() > 1 {
+            // LRU victim
+            let victim = inner
+                .host
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty");
+            let slot = inner.host.remove(&victim).unwrap();
+            inner.bytes -= slot.store.size_bytes();
+            inner.stats.evictions += 1;
+            let path = self.spill_path(&victim);
+            if !path.exists() {
+                write_spill(&path, &slot.store)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn spill_path(&self, template_id: &str) -> PathBuf {
+        // template ids are caller-controlled; sanitize for the filesystem
+        let safe: String = template_id
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+            .collect();
+        self.spill_dir.join(format!("{safe}.actcache"))
+    }
+}
+
+/// Sleep long enough that `bytes` took `bytes / bandwidth` seconds since
+/// `t0` (bandwidth pacing for the simulated storage hierarchy).
+fn pace(bytes: usize, bandwidth: f64, t0: Instant) {
+    if bandwidth <= 0.0 {
+        return;
+    }
+    let want = bytes as f64 / bandwidth;
+    let spent = t0.elapsed().as_secs_f64();
+    if want > spent {
+        std::thread::sleep(std::time::Duration::from_secs_f64(want - spent));
+    }
+}
+
+// -- spill file format -------------------------------------------------------
+// header (little-endian u64s): magic, steps, blocks, tokens, hidden, seed,
+// has_kv; then entries in (step, block) order, each y [+ k, v] as raw f32.
+
+#[allow(clippy::unusual_byte_groupings)]
+const SPILL_MAGIC: u64 = 0x1057_6e13_ac71_ca11;
+
+fn write_spill(path: &PathBuf, store: &TemplateActivations) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let has_kv = store.entries().first().map(|e| e.kv.is_some()).unwrap_or(false);
+    let mut buf: Vec<u8> = Vec::with_capacity(store.size_bytes() + 64);
+    for v in [
+        SPILL_MAGIC,
+        store.steps as u64,
+        store.blocks as u64,
+        store.tokens as u64,
+        store.hidden as u64,
+        store.seed,
+        has_kv as u64,
+    ] {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    let mut push = |xs: &[f32]| {
+        for x in xs {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    };
+    for e in store.entries() {
+        push(&e.y);
+        if let Some((k, v)) = &e.kv {
+            push(k);
+            push(v);
+        }
+    }
+    std::fs::write(path, &buf).with_context(|| format!("writing spill {path:?}"))?;
+    Ok(())
+}
+
+fn read_spill(path: &PathBuf) -> Result<TemplateActivations> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading spill {path:?}"))?;
+    if bytes.len() < 56 {
+        bail!("spill file too short");
+    }
+    let u64_at = |i: usize| {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&bytes[i * 8..(i + 1) * 8]);
+        u64::from_le_bytes(b)
+    };
+    if u64_at(0) != SPILL_MAGIC {
+        bail!("bad spill magic");
+    }
+    let steps = u64_at(1) as usize;
+    let blocks = u64_at(2) as usize;
+    let tokens = u64_at(3) as usize;
+    let hidden = u64_at(4) as usize;
+    let seed = u64_at(5);
+    let has_kv = u64_at(6) != 0;
+    let lh = tokens * hidden;
+    let per_entry = lh * if has_kv { 3 } else { 1 };
+    let want = 56 + steps * blocks * per_entry * 4;
+    if bytes.len() != want {
+        bail!("spill size mismatch: {} vs {}", bytes.len(), want);
+    }
+    let mut off = 56;
+    let mut read_f32s = |n: usize| {
+        let mut out = vec![0f32; n];
+        for v in out.iter_mut() {
+            let mut b = [0u8; 4];
+            b.copy_from_slice(&bytes[off..off + 4]);
+            *v = f32::from_le_bytes(b);
+            off += 4;
+        }
+        out
+    };
+    let mut entries = Vec::with_capacity(steps * blocks);
+    for _ in 0..steps * blocks {
+        let y = read_f32s(lh);
+        let kv = if has_kv {
+            Some((read_f32s(lh), read_f32s(lh)))
+        } else {
+            None
+        };
+        entries.push(CacheEntry { y, kv });
+    }
+    let id = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("unknown")
+        .to_string();
+    Ok(TemplateActivations::from_parts(
+        id, String::new(), steps, blocks, tokens, hidden, seed, entries,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy(id: &str, steps: usize, blocks: usize, kv: bool) -> Arc<TemplateActivations> {
+        let tokens = 4;
+        let hidden = 2;
+        let entries = (0..steps * blocks)
+            .map(|i| CacheEntry {
+                y: vec![i as f32; tokens * hidden],
+                kv: kv.then(|| (vec![1.0; tokens * hidden], vec![2.0; tokens * hidden])),
+            })
+            .collect();
+        Arc::new(TemplateActivations::from_parts(
+            id.into(),
+            "m".into(),
+            steps,
+            blocks,
+            tokens,
+            hidden,
+            3,
+            entries,
+        ))
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ig-tier-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn spill_round_trip() {
+        let dir = tmp_dir("rt");
+        let s = dummy("abc", 2, 3, true);
+        let path = dir.join("abc.actcache");
+        write_spill(&path, &s).unwrap();
+        let back = read_spill(&path).unwrap();
+        assert_eq!(back.steps, 2);
+        assert_eq!(back.blocks, 3);
+        assert_eq!(back.entry(1, 2).y, s.entry(1, 2).y);
+        assert_eq!(back.entry(0, 1).kv, s.entry(0, 1).kv);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lru_evicts_to_disk_and_promotes_back() {
+        let dir = tmp_dir("lru");
+        let one_size = dummy("x", 2, 2, false).size_bytes();
+        // budget fits exactly two templates
+        let store = TieredStore::new(2 * one_size, dir.clone(), 0.0);
+        store.insert(dummy("a", 2, 2, false)).unwrap();
+        store.get("a").unwrap().unwrap(); // touch a
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        store.insert(dummy("b", 2, 2, false)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        store.insert(dummy("c", 2, 2, false)).unwrap(); // evicts LRU = a
+        assert!(!store.is_host_resident("a"));
+        assert!(store.is_host_resident("b") && store.is_host_resident("c"));
+        // promotion from disk
+        let a = store.get("a").unwrap().unwrap();
+        assert_eq!(a.entry(1, 1).y[0], 3.0);
+        let stats = store.stats();
+        assert_eq!(stats.disk_promotions, 1);
+        assert!(stats.evictions >= 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_template_is_none() {
+        let dir = tmp_dir("none");
+        let store = TieredStore::new(1 << 20, dir.clone(), 0.0);
+        assert!(store.get("ghost").unwrap().is_none());
+        assert_eq!(store.stats().misses, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn disk_pacing_slows_promotion() {
+        let dir = tmp_dir("pace");
+        let s = dummy("slow", 4, 4, false);
+        let size = s.size_bytes();
+        let store = TieredStore::new(size, dir.clone(), size as f64 / 0.05); // 50ms/promotion
+        store.insert(s).unwrap();
+        store.insert(dummy("other", 4, 4, false)).unwrap(); // evict "slow"
+        assert!(!store.is_host_resident("slow"));
+        let t0 = Instant::now();
+        store.get("slow").unwrap().unwrap();
+        assert!(t0.elapsed().as_millis() >= 45, "promotion not paced");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,196 @@
+//! Cluster deployment: N workers + scheduler + response collection
+//! (paper Fig. 8: scheduler routes ① ② , workers serve ③ ④ , results
+//! return ⑤ ).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::cache::store::register_template;
+use crate::cache::tier::TieredStore;
+use crate::cache::LatencyModel;
+use crate::config::{EngineConfig, ModelConfig};
+use crate::engine::queue::Submitter;
+use crate::engine::request::{EditRequest, EditResponse};
+use crate::engine::worker::Worker;
+use crate::runtime::ModelRuntime;
+use crate::scheduler::{Outstanding, Scheduler};
+use crate::workload::TraceEvent;
+
+/// A running cluster.
+pub struct Cluster {
+    submitters: Vec<Submitter>,
+    stops: Vec<Arc<AtomicBool>>,
+    handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    collector: Option<std::thread::JoinHandle<()>>,
+    book: Arc<Mutex<Vec<Vec<Outstanding>>>>,
+    scheduler: Mutex<Box<dyn Scheduler>>,
+    responses: Arc<Mutex<Vec<EditResponse>>>,
+    pub model: ModelConfig,
+    started: Instant,
+}
+
+/// Launch options.
+pub struct ClusterOpts {
+    pub workers: usize,
+    pub engine: EngineConfig,
+    pub model: String,
+    pub artifact_dir: String,
+    pub templates: Vec<String>,
+    pub lat_model: LatencyModel,
+    /// Pre-compile the program grid on every worker before serving
+    /// (recommended for latency benches).
+    pub warmup: bool,
+}
+
+impl Cluster {
+    /// Register templates, spawn workers, start the collector.
+    pub fn launch(opts: ClusterOpts, scheduler: Box<dyn Scheduler>) -> Result<Cluster> {
+        anyhow::ensure!(opts.workers > 0, "need >= 1 worker");
+        let tiers = Arc::new(TieredStore::new(
+            opts.engine.host_cache_budget,
+            opts.engine.spill_dir.clone(),
+            0.0, // cluster benches exercise the host tier; disk pacing off
+        ));
+
+        // one registration pass populates the shared host tier
+        {
+            let reg_rt = ModelRuntime::create(&opts.artifact_dir, &opts.model)
+                .context("registration runtime")?;
+            for tpl in &opts.templates {
+                let (acts, _) = register_template(&reg_rt, tpl, opts.engine.cache_mode)?;
+                tiers.insert(acts)?;
+            }
+        }
+
+        let (tx, rx) = channel::<EditResponse>();
+        let mut submitters = Vec::new();
+        let mut stops = Vec::new();
+        let mut handles = Vec::new();
+        let mut model_cfg = None;
+        for w in 0..opts.workers {
+            let rt = ModelRuntime::create(&opts.artifact_dir, &opts.model)?;
+            if opts.warmup {
+                rt.warmup(&[1, 2, 4, 8])?;
+            }
+            model_cfg.get_or_insert_with(|| rt.config.clone());
+            let worker = Worker::new(
+                w,
+                opts.engine.clone(),
+                rt,
+                Arc::clone(&tiers),
+                opts.lat_model.clone(),
+                tx.clone(),
+            );
+            submitters.push(worker.submitter());
+            stops.push(worker.stop_flag());
+            handles.push(worker.start());
+        }
+        drop(tx); // collector exits once all workers drop their senders
+
+        let book: Arc<Mutex<Vec<Vec<Outstanding>>>> =
+            Arc::new(Mutex::new(vec![Vec::new(); opts.workers]));
+        let responses = Arc::new(Mutex::new(Vec::new()));
+        let collector = {
+            let book = Arc::clone(&book);
+            let responses = Arc::clone(&responses);
+            std::thread::Builder::new()
+                .name("collector".into())
+                .spawn(move || {
+                    while let Ok(resp) = rx.recv() {
+                        let mut b = book.lock().unwrap();
+                        for worker in b.iter_mut() {
+                            if let Some(pos) = worker.iter().position(|o| o.id == resp.id) {
+                                worker.swap_remove(pos);
+                                break;
+                            }
+                        }
+                        drop(b);
+                        responses.lock().unwrap().push(resp);
+                    }
+                })
+                .expect("spawn collector")
+        };
+
+        Ok(Cluster {
+            submitters,
+            stops,
+            handles,
+            collector: Some(collector),
+            book,
+            scheduler: Mutex::new(scheduler),
+            responses,
+            model: model_cfg.expect("at least one worker"),
+            started: Instant::now(),
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.submitters.len()
+    }
+
+    /// Route + submit one request; returns the chosen worker.
+    pub fn submit(&self, req: EditRequest) -> usize {
+        let outstanding = Outstanding {
+            id: req.id,
+            masked_tokens: req.mask.masked_count(),
+            remaining_steps: self.model.steps,
+        };
+        let w = {
+            let book = self.book.lock().unwrap();
+            let mut sched = self.scheduler.lock().unwrap();
+            let w = sched.pick(&outstanding, &book);
+            w.min(self.submitters.len() - 1)
+        };
+        self.book.lock().unwrap()[w].push(outstanding);
+        self.submitters[w].submit(req);
+        w
+    }
+
+    /// Convenience: realize and submit a trace event.
+    pub fn submit_event(&self, ev: &TraceEvent) -> usize {
+        let mask = ev.mask(self.model.latent_hw);
+        let mut req = EditRequest::new(ev.id, ev.template.clone(), mask, ev.prompt_seed);
+        req.arrival = Instant::now();
+        self.submit(req)
+    }
+
+    pub fn completed(&self) -> usize {
+        self.responses.lock().unwrap().len()
+    }
+
+    /// Block until `n` responses arrived (or timeout). Returns success.
+    pub fn await_completed(&self, n: usize, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while self.completed() < n {
+            if Instant::now() > deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        true
+    }
+
+    /// Seconds since launch (makespan for reports).
+    pub fn elapsed(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Stop workers, drain, and return all responses.
+    pub fn shutdown(mut self) -> Result<Vec<EditResponse>> {
+        for s in &self.stops {
+            s.store(true, Ordering::Relaxed);
+        }
+        for h in self.handles.drain(..) {
+            h.join().expect("worker thread")?;
+        }
+        if let Some(c) = self.collector.take() {
+            c.join().expect("collector thread");
+        }
+        let out = std::mem::take(&mut *self.responses.lock().unwrap());
+        Ok(out)
+    }
+}

@@ -1,0 +1,226 @@
+//! Configuration: model presets (mirroring python/compile/configs.py via
+//! artifacts/manifest.json), engine and cluster settings.
+
+use std::path::PathBuf;
+
+/// Static description of a mini diffusion model (loaded from the manifest;
+/// the python side is the single source of truth).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub latent_hw: usize,
+    pub tokens: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub blocks: usize,
+    pub steps: usize,
+    pub token_buckets: Vec<usize>,
+    pub paper_analogue: String,
+}
+
+impl ModelConfig {
+    /// Smallest token bucket covering `k` masked tokens (falls back to the
+    /// full sequence when the mask exceeds every bucket).
+    pub fn bucket_for(&self, k: usize) -> usize {
+        for &b in &self.token_buckets {
+            if b >= k {
+                return b;
+            }
+        }
+        self.tokens
+    }
+
+    /// All compiled token counts: buckets plus the full block.
+    pub fn all_token_counts(&self) -> Vec<usize> {
+        let mut v = self.token_buckets.clone();
+        v.push(self.tokens);
+        v
+    }
+}
+
+/// Which baseline/system an engine runs as (paper §6 baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SystemKind {
+    /// InstGenIE: mask-aware + bubble-free pipeline + continuous batching.
+    InstGenIE,
+    /// HuggingFace Diffusers: full-image recompute + static batching.
+    Diffusers,
+    /// FISEdit: mask-aware sparse compute, but batch size 1 only.
+    FisEdit,
+    /// TeaCache: step-skipping via timestep-embedding distance; full
+    /// recompute on non-skipped steps, static batching.
+    TeaCache,
+}
+
+impl SystemKind {
+    pub fn parse(s: &str) -> Option<SystemKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "instgenie" => Some(SystemKind::InstGenIE),
+            "diffusers" => Some(SystemKind::Diffusers),
+            "fisedit" => Some(SystemKind::FisEdit),
+            "teacache" => Some(SystemKind::TeaCache),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemKind::InstGenIE => "instgenie",
+            SystemKind::Diffusers => "diffusers",
+            SystemKind::FisEdit => "fisedit",
+            SystemKind::TeaCache => "teacache",
+        }
+    }
+}
+
+/// Batching policy of a worker (§4.3 / §6.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchingPolicy {
+    /// Fixed running batch until every member finishes (baselines [9, 19]).
+    Static,
+    /// Step-level join/leave, but pre/post run inline on the engine thread
+    /// (the paper's strawman, Fig. 10-Top).
+    ContinuousInline,
+    /// Step-level join/leave with pre/post disaggregated to a separate
+    /// pool (InstGenIE, Fig. 10-Bottom).
+    ContinuousDisaggregated,
+}
+
+/// Activation-cache mode (§3.1): cache the block outputs Y (default) or
+/// the K/V projections (Fig. 7 alternative, 2x cache for slightly better
+/// latency at small mask ratios).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheMode {
+    CacheY,
+    CacheKV,
+}
+
+/// Per-worker engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub system: SystemKind,
+    pub batching: BatchingPolicy,
+    pub cache_mode: CacheMode,
+    pub max_batch: usize,
+    /// Simulated DRAM->HBM bandwidth for cache loading, bytes/sec.
+    /// Calibrated so the load:compute latency ratio matches the paper's
+    /// H800 + PCIe Gen5 regime (DESIGN.md "Substitutions").
+    pub sim_bandwidth: f64,
+    /// Host-tier cache budget in bytes before spilling to disk (LRU).
+    pub host_cache_budget: usize,
+    /// Directory for disk-tier spill files.
+    pub spill_dir: PathBuf,
+    /// Disable the bubble-free DP and always use the cache for every block
+    /// (the strawman pipeline of Fig. 9-Middle) — for ablations.
+    pub force_all_cached: bool,
+    /// Disable overlap entirely (naive loading, Fig. 9-Top) — ablations.
+    pub naive_loading: bool,
+    /// TeaCache skip threshold (timestep-embedding L1 distance).
+    pub teacache_threshold: f64,
+    /// Threads in the pre/post-processing pool (disaggregated mode).
+    pub prepost_threads: usize,
+    /// Extra CPU work per pre/post op, microseconds (models the paper's
+    /// serialization/deserialization cost; §6.4 measures its interference).
+    pub prepost_cpu_us: u64,
+}
+
+impl EngineConfig {
+    pub fn instgenie() -> EngineConfig {
+        EngineConfig {
+            system: SystemKind::InstGenIE,
+            batching: BatchingPolicy::ContinuousDisaggregated,
+            cache_mode: CacheMode::CacheY,
+            max_batch: 8,
+            // Calibrated so per-block load latency ~ per-block cached
+            // compute latency at the trace-average mask ratio (~0.1-0.2),
+            // matching the paper's H800 + PCIe Gen5 regime where naive
+            // loading costs ~+102% vs ideal (Fig. 4-Left). See
+            // EXPERIMENTS.md "Bandwidth calibration".
+            sim_bandwidth: 384.0 * 1024.0 * 1024.0,
+            host_cache_budget: 512 << 20,
+            spill_dir: PathBuf::from("artifacts/cache_spill"),
+            force_all_cached: false,
+            naive_loading: false,
+            teacache_threshold: 0.05,
+            prepost_threads: 2,
+            prepost_cpu_us: 2_000,
+        }
+    }
+
+    pub fn for_system(system: SystemKind) -> EngineConfig {
+        let mut c = EngineConfig::instgenie();
+        c.system = system;
+        match system {
+            SystemKind::InstGenIE => {}
+            SystemKind::Diffusers => {
+                c.batching = BatchingPolicy::Static;
+            }
+            SystemKind::FisEdit => {
+                c.batching = BatchingPolicy::Static;
+                c.max_batch = 1;
+            }
+            SystemKind::TeaCache => {
+                c.batching = BatchingPolicy::Static;
+            }
+        }
+        c
+    }
+}
+
+/// Cluster-level configuration (scheduler + N workers).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub workers: usize,
+    pub engine: EngineConfig,
+}
+
+impl ClusterConfig {
+    pub fn new(workers: usize, engine: EngineConfig) -> ClusterConfig {
+        ClusterConfig { workers, engine }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            latent_hw: 8,
+            tokens: 64,
+            hidden: 64,
+            heads: 4,
+            blocks: 4,
+            steps: 8,
+            token_buckets: vec![4, 8, 16, 32],
+            paper_analogue: String::new(),
+        }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let c = cfg();
+        assert_eq!(c.bucket_for(1), 4);
+        assert_eq!(c.bucket_for(4), 4);
+        assert_eq!(c.bucket_for(5), 8);
+        assert_eq!(c.bucket_for(33), 64); // falls to full sequence
+        assert_eq!(c.bucket_for(64), 64);
+    }
+
+    #[test]
+    fn system_kind_parse() {
+        assert_eq!(SystemKind::parse("InstGenIE"), Some(SystemKind::InstGenIE));
+        assert_eq!(SystemKind::parse("diffusers"), Some(SystemKind::Diffusers));
+        assert_eq!(SystemKind::parse("nope"), None);
+        assert_eq!(SystemKind::FisEdit.name(), "fisedit");
+    }
+
+    #[test]
+    fn baseline_configs_match_paper_constraints() {
+        let f = EngineConfig::for_system(SystemKind::FisEdit);
+        assert_eq!(f.max_batch, 1); // FISEdit cannot batch different masks
+        let d = EngineConfig::for_system(SystemKind::Diffusers);
+        assert_eq!(d.batching, BatchingPolicy::Static);
+    }
+}

@@ -1,0 +1,12 @@
+//! The worker engine (paper §4.2/§4.3): step loop, continuous batching
+//! with disaggregated pre/post-processing, and the baseline modes.
+
+pub mod prepost;
+pub mod queue;
+pub mod request;
+pub mod teacache;
+pub mod worker;
+
+pub use queue::{Submitter, WorkerQueue};
+pub use request::{EditRequest, EditResponse, RequestTiming};
+pub use worker::{Worker, WorkerSnapshot};

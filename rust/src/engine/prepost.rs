@@ -1,0 +1,120 @@
+//! Pre/post-processing — the CPU-intensive image work of §4.3.
+//!
+//! Preprocessing: mask -> masked-first permutation, prompt -> conditioning
+//! vector, plus the serialization/deserialization CPU burn the paper
+//! measures (0.36 s average per interruption on their stack; scaled here
+//! via `prepost_cpu_us` to stay proportional to our step latency).
+//! Postprocessing: latent -> decoded "image" (host matmul through the
+//! VAE-analogue decoder) + serialization burn.
+//!
+//! These functions are *where* they run matters: inline on the engine
+//! thread (strawman continuous batching, Fig. 10-Top) or on the
+//! disaggregated pool (InstGenIE, Fig. 10-Bottom).
+
+use std::sync::Arc;
+
+use crate::engine::request::EditRequest;
+use crate::model::Permutation;
+use crate::util::rng::Pcg;
+use crate::util::tensor::Tensor;
+
+/// A request after preprocessing, ready to join a batch.
+pub struct PreparedRequest {
+    pub request: EditRequest,
+    pub perm: Arc<Permutation>,
+    /// Per-request conditioning vector (H,), added to the *masked* rows of
+    /// the denoiser input each step (DESIGN.md: unmasked rows follow the
+    /// template trajectory exactly).
+    pub conditioning: Vec<f32>,
+    /// Ids of the genuinely masked tokens (prefix of the permutation).
+    pub masked_count: usize,
+}
+
+/// Burn `us` microseconds of real CPU (models image serialization; the
+/// work must be genuine so inline execution visibly blocks the step loop).
+pub fn cpu_burn_us(us: u64) {
+    let t0 = std::time::Instant::now();
+    let mut acc = 0u64;
+    while (t0.elapsed().as_micros() as u64) < us {
+        // branchy integer mix the optimizer cannot elide
+        for i in 0..256u64 {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+    }
+}
+
+/// Preprocess a request (CPU-intensive, paper Fig. 10 "Pre.").
+pub fn preprocess(req: EditRequest, hidden: usize, cpu_us: u64) -> PreparedRequest {
+    // real serialization work: round-trip the mask through a byte buffer
+    let ids = req.mask.masked_ids();
+    let mut buf = Vec::with_capacity(ids.len() * 4);
+    for &id in ids {
+        buf.extend_from_slice(&(id as u32).to_le_bytes());
+    }
+    let decoded: Vec<usize> = buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize)
+        .collect();
+    debug_assert_eq!(&decoded, ids);
+    cpu_burn_us(cpu_us);
+
+    let perm = Arc::new(Permutation::masked_first(&req.mask));
+    let mut rng = Pcg::new(req.prompt_seed);
+    let mut conditioning = vec![0f32; hidden];
+    rng.fill_normal_f32(&mut conditioning, 0.5);
+    let masked_count = req.mask.masked_count();
+    PreparedRequest { request: req, perm, conditioning, masked_count }
+}
+
+/// Postprocess a finished latent (paper Fig. 10 "Post."): decode to the
+/// image space and burn serialization CPU.
+pub fn postprocess(latent: &Tensor, decoder: &Tensor, cpu_us: u64) -> Tensor {
+    let mut img = latent.matmul(decoder).expect("decoder shape");
+    img.map_inplace(|v| v.tanh());
+    // serialization burn proportional to image size + fixed cost
+    cpu_burn_us(cpu_us);
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::MaskSpec;
+
+    #[test]
+    fn preprocess_builds_masked_first_perm() {
+        let mask = MaskSpec::new(vec![5, 2], 16);
+        let req = EditRequest::new(1, "t", mask, 7);
+        let p = preprocess(req, 8, 0);
+        assert_eq!(p.masked_count, 2);
+        assert_eq!(&p.perm.compute_ids(2), &[2, 5]);
+        assert_eq!(p.conditioning.len(), 8);
+    }
+
+    #[test]
+    fn conditioning_is_prompt_deterministic() {
+        let mk = |seed| {
+            let mask = MaskSpec::new(vec![0], 4);
+            preprocess(EditRequest::new(1, "t", mask, seed), 4, 0).conditioning
+        };
+        assert_eq!(mk(1), mk(1));
+        assert_ne!(mk(1), mk(2));
+    }
+
+    #[test]
+    fn cpu_burn_takes_time() {
+        let t0 = std::time::Instant::now();
+        cpu_burn_us(3_000);
+        assert!(t0.elapsed().as_micros() >= 3_000);
+    }
+
+    #[test]
+    fn postprocess_decodes_shape() {
+        let latent = Tensor::from_vec(&[4, 3], vec![0.1; 12]).unwrap();
+        let dec = Tensor::from_vec(&[3, 2], vec![0.5; 6]).unwrap();
+        let img = postprocess(&latent, &dec, 0);
+        assert_eq!(img.shape(), &[4, 2]);
+        assert!(img.data().iter().all(|v| v.abs() <= 1.0)); // tanh range
+    }
+}

@@ -1,0 +1,194 @@
+//! Worker request queue + submission handle.
+//!
+//! Two lanes: `raw` requests await preprocessing on the engine thread
+//! (static / strawman-continuous policies), `ready` requests were
+//! preprocessed on the disaggregated pool (InstGenIE policy). The paper's
+//! disaggregation (§4.3) is exactly the difference between these lanes.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::engine::prepost::{preprocess, PreparedRequest};
+use crate::engine::request::EditRequest;
+use crate::util::pool::ThreadPool;
+
+#[derive(Default)]
+struct Inner {
+    raw: VecDeque<EditRequest>,
+    ready: VecDeque<PreparedRequest>,
+    preprocessing: usize,
+    closed: bool,
+}
+
+/// Shared queue between submitters and the engine thread.
+pub struct WorkerQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl WorkerQueue {
+    pub fn new() -> Arc<WorkerQueue> {
+        Arc::new(WorkerQueue { inner: Mutex::new(Inner::default()), cv: Condvar::new() })
+    }
+
+    pub fn push_raw(&self, req: EditRequest) {
+        let mut g = self.inner.lock().unwrap();
+        g.raw.push_back(req);
+        self.cv.notify_all();
+    }
+
+    pub fn push_ready(&self, prep: PreparedRequest) {
+        let mut g = self.inner.lock().unwrap();
+        g.ready.push_back(prep);
+        g.preprocessing = g.preprocessing.saturating_sub(1);
+        self.cv.notify_all();
+    }
+
+    fn note_preprocessing(&self) {
+        self.inner.lock().unwrap().preprocessing += 1;
+    }
+
+    pub fn pop_raw(&self) -> Option<EditRequest> {
+        self.inner.lock().unwrap().raw.pop_front()
+    }
+
+    pub fn pop_ready(&self) -> Option<PreparedRequest> {
+        self.inner.lock().unwrap().ready.pop_front()
+    }
+
+    /// Pop the front raw request only if it satisfies `pred` (bucket-aware
+    /// admission: FIFO, no reordering, hence no starvation).
+    pub fn pop_raw_if(&self, pred: impl Fn(&EditRequest) -> bool) -> Option<EditRequest> {
+        let mut g = self.inner.lock().unwrap();
+        if g.raw.front().map(&pred).unwrap_or(false) {
+            g.raw.pop_front()
+        } else {
+            None
+        }
+    }
+
+    /// Pop the front prepared request only if it satisfies `pred`.
+    pub fn pop_ready_if(
+        &self,
+        pred: impl Fn(&PreparedRequest) -> bool,
+    ) -> Option<PreparedRequest> {
+        let mut g = self.inner.lock().unwrap();
+        if g.ready.front().map(&pred).unwrap_or(false) {
+            g.ready.pop_front()
+        } else {
+            None
+        }
+    }
+
+    /// Pending work (either lane + in-flight preprocessing).
+    pub fn pending(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.raw.len() + g.ready.len() + g.preprocessing
+    }
+
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Park the engine thread briefly when idle.
+    pub fn wait_for_work(&self, timeout: Duration) {
+        let g = self.inner.lock().unwrap();
+        if g.raw.is_empty() && g.ready.is_empty() && !g.closed {
+            let _ = self.cv.wait_timeout(g, timeout).unwrap();
+        }
+    }
+}
+
+/// Submission handle owned by the scheduler / HTTP frontend.
+#[derive(Clone)]
+pub struct Submitter {
+    queue: Arc<WorkerQueue>,
+    pool: Option<Arc<ThreadPool>>,
+    hidden: usize,
+    cpu_us: u64,
+}
+
+impl Submitter {
+    /// `pool: Some(...)` enables disaggregated preprocessing (InstGenIE);
+    /// `None` leaves requests raw for the engine thread (baselines).
+    pub fn new(
+        queue: Arc<WorkerQueue>,
+        pool: Option<Arc<ThreadPool>>,
+        hidden: usize,
+        cpu_us: u64,
+    ) -> Submitter {
+        Submitter { queue, pool, hidden, cpu_us }
+    }
+
+    pub fn submit(&self, req: EditRequest) {
+        match &self.pool {
+            Some(pool) => {
+                self.queue.note_preprocessing();
+                let queue = Arc::clone(&self.queue);
+                let hidden = self.hidden;
+                let cpu_us = self.cpu_us;
+                pool.submit(move || {
+                    let prep = preprocess(req, hidden, cpu_us);
+                    queue.push_ready(prep);
+                });
+            }
+            None => self.queue.push_raw(req),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::MaskSpec;
+
+    fn req(id: u64) -> EditRequest {
+        EditRequest::new(id, "t", MaskSpec::new(vec![0, 1], 16), id)
+    }
+
+    #[test]
+    fn raw_lane_fifo() {
+        let q = WorkerQueue::new();
+        q.push_raw(req(1));
+        q.push_raw(req(2));
+        assert_eq!(q.pending(), 2);
+        assert_eq!(q.pop_raw().unwrap().id, 1);
+        assert_eq!(q.pop_raw().unwrap().id, 2);
+        assert!(q.pop_raw().is_none());
+    }
+
+    #[test]
+    fn disaggregated_submitter_preprocesses_off_thread() {
+        let q = WorkerQueue::new();
+        let pool = Arc::new(ThreadPool::new("pp", 2));
+        let s = Submitter::new(Arc::clone(&q), Some(pool), 8, 0);
+        s.submit(req(7));
+        // pending counts the in-flight preprocess immediately
+        assert!(q.pending() >= 1);
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        loop {
+            if let Some(p) = q.pop_ready() {
+                assert_eq!(p.request.id, 7);
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "preprocess never landed");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(q.pending(), 0);
+    }
+
+    #[test]
+    fn inline_submitter_keeps_raw() {
+        let q = WorkerQueue::new();
+        let s = Submitter::new(Arc::clone(&q), None, 8, 0);
+        s.submit(req(3));
+        assert!(q.pop_ready().is_none());
+        assert_eq!(q.pop_raw().unwrap().id, 3);
+    }
+}

@@ -1,0 +1,74 @@
+//! Request/response types and per-request lifecycle timing.
+
+use std::time::Instant;
+
+use crate::model::MaskSpec;
+use crate::util::tensor::Tensor;
+
+/// An image-editing request (paper §2.1: template + mask + conditions).
+#[derive(Debug, Clone)]
+pub struct EditRequest {
+    pub id: u64,
+    /// Image template to edit; its activations may already be cached.
+    pub template_id: String,
+    /// The edit mask (token ids to regenerate).
+    pub mask: MaskSpec,
+    /// Seed deriving the conditioning vector (the "prompt").
+    pub prompt_seed: u64,
+    /// Arrival time at the system boundary.
+    pub arrival: Instant,
+}
+
+impl EditRequest {
+    pub fn new(id: u64, template_id: impl Into<String>, mask: MaskSpec, prompt_seed: u64) -> Self {
+        EditRequest {
+            id,
+            template_id: template_id.into(),
+            mask,
+            prompt_seed,
+            arrival: Instant::now(),
+        }
+    }
+}
+
+/// Lifecycle timing of one served request (all in seconds).
+#[derive(Debug, Clone, Default)]
+pub struct RequestTiming {
+    /// arrival -> joined the running batch (paper's queuing time).
+    pub queue: f64,
+    /// joined -> last denoise step done (model inference latency).
+    pub inference: f64,
+    /// arrival -> response ready (end-to-end latency, Fig. 12's metric).
+    pub e2e: f64,
+    /// Times the member's denoising was interrupted by CPU-bound
+    /// pre/post-processing on the engine thread (§6.4 microbenchmark).
+    pub interruptions: u32,
+    /// Denoise steps executed (TeaCache skips reduce this).
+    pub steps_computed: u32,
+}
+
+/// The served result.
+#[derive(Debug, Clone)]
+pub struct EditResponse {
+    pub id: u64,
+    pub template_id: String,
+    /// Decoded "image": (L, C) patch tensor.
+    pub image: Tensor,
+    /// Final latent (L, H) — kept for quality evaluation (Table 2).
+    pub latent: Tensor,
+    pub timing: RequestTiming,
+    pub mask_ratio: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_construction() {
+        let m = MaskSpec::new(vec![0, 1], 16);
+        let r = EditRequest::new(1, "tpl", m, 99);
+        assert_eq!(r.template_id, "tpl");
+        assert_eq!(r.mask.masked_count(), 2);
+    }
+}

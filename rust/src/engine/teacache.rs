@@ -1,0 +1,79 @@
+//! TeaCache baseline — timestep-embedding-gated step skipping.
+//!
+//! TeaCache [39] observes that consecutive denoise steps with similar
+//! timestep embeddings produce similar model outputs, and skips the model
+//! call by replaying the previous eps when the embedding moved less than
+//! a threshold. It trades image quality for latency (paper §6.2 shows
+//! degraded FID/SSIM); no mask awareness, no continuous batching.
+
+/// Per-request skip gate.
+#[derive(Debug, Clone)]
+pub struct TeaCacheGate {
+    threshold: f64,
+    /// Accumulated relative embedding distance since the last computed step.
+    accumulated: f64,
+    last_emb: Option<Vec<f32>>,
+}
+
+impl TeaCacheGate {
+    pub fn new(threshold: f64) -> TeaCacheGate {
+        TeaCacheGate { threshold, accumulated: 0.0, last_emb: None }
+    }
+
+    /// Decide for the step with embedding `emb`: `true` = skip the model
+    /// call and reuse the previous eps. The first step always computes.
+    pub fn should_skip(&mut self, emb: &[f32]) -> bool {
+        match &self.last_emb {
+            None => {
+                self.last_emb = Some(emb.to_vec());
+                self.accumulated = 0.0;
+                false
+            }
+            Some(prev) => {
+                let dist: f64 = prev
+                    .iter()
+                    .zip(emb)
+                    .map(|(a, b)| (a - b).abs() as f64)
+                    .sum::<f64>()
+                    / emb.len() as f64;
+                self.accumulated += dist;
+                if self.accumulated < self.threshold {
+                    true // close enough: replay previous eps
+                } else {
+                    self.accumulated = 0.0;
+                    self.last_emb = Some(emb.to_vec());
+                    false
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_always_computes() {
+        let mut g = TeaCacheGate::new(1.0);
+        assert!(!g.should_skip(&[0.0, 0.0]));
+    }
+
+    #[test]
+    fn skips_similar_steps_until_drift_accumulates() {
+        let mut g = TeaCacheGate::new(0.25);
+        assert!(!g.should_skip(&[0.0, 0.0])); // first step computes
+        assert!(g.should_skip(&[0.1, 0.1])); // acc 0.1 < 0.25 -> skip
+        assert!(!g.should_skip(&[0.2, 0.2])); // acc 0.1+0.2 >= 0.25 -> compute
+        // after recompute the accumulator resets, so a nearby step skips
+        assert!(g.should_skip(&[0.25, 0.25]));
+    }
+
+    #[test]
+    fn zero_threshold_never_skips_after_motion() {
+        let mut g = TeaCacheGate::new(0.0);
+        assert!(!g.should_skip(&[0.0]));
+        assert!(!g.should_skip(&[0.5]));
+        assert!(!g.should_skip(&[1.0]));
+    }
+}

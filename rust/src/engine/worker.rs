@@ -1,0 +1,646 @@
+//! The worker engine: denoising step loop with continuous batching,
+//! mask-aware cached inference and the bubble-free load pipeline.
+//!
+//! One worker = one "GPU replica": an engine thread running the step loop,
+//! a cache-loader thread (the copy stream), and — in disaggregated mode —
+//! a small pre/post-processing pool. All four baselines of §6 are modes of
+//! this engine (`SystemKind`), so the comparisons isolate exactly the
+//! paper's design axes:
+//!
+//! - `InstGenIE`   mask-aware cached blocks + Algo-1 pipeline + step-level
+//!                 continuous batching + disaggregated pre/post.
+//! - `Diffusers`   full-image recompute, static batching.
+//! - `FisEdit`     mask-aware compute with GPU-resident activations (free
+//!                 loads) but batch = 1 and no continuous batching.
+//! - `TeaCache`    full-image recompute with timestep-gated step skipping,
+//!                 static batching.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::cache::loader::{CacheLoader, MemberGather, StagedBlock};
+use crate::cache::pipeline::{self, BlockCosts, PipelinePlan};
+use crate::cache::store::{register_template, TemplateActivations};
+use crate::cache::tier::TieredStore;
+use crate::cache::LatencyModel;
+use crate::config::{BatchingPolicy, CacheMode, EngineConfig, SystemKind};
+use crate::engine::prepost::{postprocess, preprocess, PreparedRequest};
+use crate::engine::queue::{Submitter, WorkerQueue};
+use crate::engine::request::{EditResponse, RequestTiming};
+use crate::engine::teacache::TeaCacheGate;
+use crate::model::Latent;
+use crate::util::pool::ThreadPool;
+use crate::util::tensor::Tensor;
+
+/// An in-flight batch member.
+struct Member {
+    prep: PreparedRequest,
+    acts: Arc<TemplateActivations>,
+    latent: Latent,
+    step: usize,
+    joined: Instant,
+    interruptions: u32,
+    steps_computed: u32,
+    /// Cached compute-set ids Arc for loader jobs (avoids re-allocating
+    /// the suffix id vector per block).
+    cached_ids: Arc<Vec<usize>>,
+    cached_bucket: usize,
+    /// TeaCache: replayed eps (full (L, H)) + gate.
+    last_eps: Option<Vec<f32>>,
+    gate: Option<TeaCacheGate>,
+}
+
+/// Live load/state snapshot for the cluster scheduler (§4.4).
+#[derive(Debug, Clone, Default)]
+pub struct WorkerSnapshot {
+    pub worker_id: usize,
+    pub queued: usize,
+    pub running: usize,
+    /// Sum over queued+running requests of masked-token counts.
+    pub queued_masked_tokens: usize,
+    /// Mask ratios of queued + running requests (scheduler cost model).
+    pub mask_ratios: Vec<f64>,
+}
+
+/// Shared mutable state published by the engine thread.
+#[derive(Default)]
+pub struct WorkerShared {
+    running: AtomicUsize,
+    running_masked: AtomicUsize,
+    steps_executed: AtomicUsize,
+}
+
+/// The worker engine. Construct, then call [`Worker::start`].
+pub struct Worker {
+    pub id: usize,
+    cfg: EngineConfig,
+    rt: crate::runtime::ModelRuntime,
+    tiers: Arc<TieredStore>,
+    loader: CacheLoader,
+    lat_model: LatencyModel,
+    queue: Arc<WorkerQueue>,
+    prepost: Arc<ThreadPool>,
+    results: Sender<EditResponse>,
+    shared: Arc<WorkerShared>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Worker {
+    pub fn new(
+        id: usize,
+        cfg: EngineConfig,
+        rt: crate::runtime::ModelRuntime,
+        tiers: Arc<TieredStore>,
+        lat_model: LatencyModel,
+        results: Sender<EditResponse>,
+    ) -> Worker {
+        // FISEdit keeps activations GPU-resident -> free loads.
+        let bandwidth = if cfg.system == SystemKind::FisEdit { 0.0 } else { cfg.sim_bandwidth };
+        let loader = CacheLoader::spawn(bandwidth);
+        // The copy stream is bandwidth-paced by construction, so the DP's
+        // load model is exact: seconds = bytes / bandwidth. (The compute
+        // model stays calibrated from measurements.)
+        let mut lat_model = lat_model;
+        lat_model.load = crate::util::stats::LinearFit {
+            slope: if bandwidth > 0.0 { 1.0 / bandwidth } else { 0.0 },
+            intercept: 0.0,
+            r2: 1.0,
+        };
+        let prepost = Arc::new(ThreadPool::new(
+            &format!("prepost-{id}"),
+            cfg.prepost_threads.max(1),
+        ));
+        Worker {
+            id,
+            cfg,
+            rt,
+            tiers,
+            loader,
+            lat_model,
+            queue: WorkerQueue::new(),
+            prepost,
+            results,
+            shared: Arc::new(WorkerShared::default()),
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Submission handle (disaggregation decided by the batching policy).
+    pub fn submitter(&self) -> Submitter {
+        let pool = matches!(self.cfg.batching, BatchingPolicy::ContinuousDisaggregated)
+            .then(|| Arc::clone(&self.prepost));
+        Submitter::new(
+            Arc::clone(&self.queue),
+            pool,
+            self.rt.config.hidden,
+            self.cfg.prepost_cpu_us,
+        )
+    }
+
+    pub fn queue(&self) -> Arc<WorkerQueue> {
+        Arc::clone(&self.queue)
+    }
+
+    pub fn shared(&self) -> Arc<WorkerShared> {
+        Arc::clone(&self.shared)
+    }
+
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Snapshot for the scheduler (running + queued composition).
+    pub fn snapshot(&self) -> WorkerSnapshot {
+        WorkerSnapshot {
+            worker_id: self.id,
+            queued: self.queue.pending(),
+            running: self.shared.running.load(Ordering::Relaxed),
+            queued_masked_tokens: self.shared.running_masked.load(Ordering::Relaxed),
+            mask_ratios: Vec::new(),
+        }
+    }
+
+    /// Run the engine loop on the current thread until stopped + drained.
+    pub fn run(mut self) -> Result<()> {
+        let mut members: Vec<Member> = Vec::new();
+        loop {
+            self.admit(&mut members)?;
+            if members.is_empty() {
+                if self.stop.load(Ordering::Relaxed)
+                    && self.queue.pending() == 0
+                {
+                    break;
+                }
+                self.queue.wait_for_work(Duration::from_millis(1));
+                continue;
+            }
+            self.run_step(&mut members)?;
+            self.complete_finished(&mut members);
+            self.publish(&members);
+        }
+        Ok(())
+    }
+
+    /// Spawn the engine loop on its own thread.
+    pub fn start(self) -> std::thread::JoinHandle<Result<()>> {
+        std::thread::Builder::new()
+            .name(format!("worker-{}", self.id))
+            .spawn(move || self.run())
+            .expect("spawn worker")
+    }
+
+    // -- admission -----------------------------------------------------------
+
+    fn admit(&mut self, members: &mut Vec<Member>) -> Result<()> {
+        let cap = self.cfg.max_batch.min(self.rt.max_batch_bucket());
+        match self.cfg.batching {
+            BatchingPolicy::Static => {
+                // join only when the running batch has fully drained
+                if !members.is_empty() {
+                    return Ok(());
+                }
+                while members.len() < cap {
+                    let Some(prep) = self.take_prepared(members) else { break };
+                    let m = self.make_member(prep)?;
+                    members.push(m);
+                }
+            }
+            BatchingPolicy::ContinuousInline | BatchingPolicy::ContinuousDisaggregated => {
+                // Step-level join (the paper's continuous batching, §4.3),
+                // bucket-aware: a joining request must not inflate the
+                // running batch's token bucket unless the batch is nearly
+                // empty (<= 1 member). FIFO on the front of the queue, so
+                // deferred large-mask requests cannot starve. This is the
+                // shape-bucketed analogue of the paper's heterogeneous-
+                // mask batching (their kernels handle per-member token
+                // counts; XLA programs are shape-static).
+                while members.len() < cap {
+                    let batch_bucket = members
+                        .iter()
+                        .map(|m| m.cached_bucket)
+                        .max()
+                        .unwrap_or(usize::MAX);
+                    let admit_any = members.len() <= 1;
+                    let fits = |k: usize| {
+                        admit_any
+                            || !self.mask_aware()
+                            || self.rt.config.bucket_for(k) <= batch_bucket
+                    };
+                    let Some(prep) = self.take_prepared_if(members, &fits) else { break };
+                    let m = self.make_member(prep)?;
+                    members.push(m);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pull one prepared request, preprocessing inline when the policy
+    /// demands it (counting interruptions for current members — the §6.4
+    /// microbenchmark's metric).
+    fn take_prepared(&self, members: &mut [Member]) -> Option<PreparedRequest> {
+        self.take_prepared_if(members, &|_| true)
+    }
+
+    /// Like [`Self::take_prepared`], but only admits the queue front when
+    /// its masked-token count satisfies `fits`.
+    fn take_prepared_if(
+        &self,
+        members: &mut [Member],
+        fits: &dyn Fn(usize) -> bool,
+    ) -> Option<PreparedRequest> {
+        match self.cfg.batching {
+            BatchingPolicy::ContinuousDisaggregated => {
+                self.queue.pop_ready_if(|p| fits(p.masked_count))
+            }
+            _ => {
+                let req = self.queue.pop_raw_if(|r| fits(r.mask.masked_count()))?;
+                if !members.is_empty() {
+                    for m in members.iter_mut() {
+                        m.interruptions += 1;
+                    }
+                }
+                Some(preprocess(req, self.rt.config.hidden, self.cfg.prepost_cpu_us))
+            }
+        }
+    }
+
+    fn make_member(&self, prep: PreparedRequest) -> Result<Member> {
+        let acts = self.ensure_registered(&prep.request.template_id)?;
+        let latent = acts.initial_latent();
+        let cfg = &self.rt.config;
+        let bucket = cfg.bucket_for(prep.masked_count);
+        let cached_ids = Arc::new(prep.perm.cached_ids(bucket).to_vec());
+        let gate = (self.cfg.system == SystemKind::TeaCache)
+            .then(|| TeaCacheGate::new(self.cfg.teacache_threshold));
+        Ok(Member {
+            prep,
+            acts,
+            latent,
+            step: 0,
+            joined: Instant::now(),
+            interruptions: 0,
+            steps_computed: 0,
+            cached_ids,
+            cached_bucket: bucket,
+            last_eps: None,
+            gate,
+        })
+    }
+
+    /// Fetch (and on cold miss, register) a template's activations.
+    pub fn ensure_registered(&self, template_id: &str) -> Result<Arc<TemplateActivations>> {
+        if let Some(acts) = self.tiers.get(template_id)? {
+            return Ok(acts);
+        }
+        let (acts, _) = register_template(&self.rt, template_id, self.cfg.cache_mode)
+            .context("template registration")?;
+        self.tiers.insert(Arc::clone(&acts))?;
+        Ok(acts)
+    }
+
+    // -- step execution -------------------------------------------------------
+
+    fn mask_aware(&self) -> bool {
+        matches!(self.cfg.system, SystemKind::InstGenIE | SystemKind::FisEdit)
+    }
+
+    fn run_step(&mut self, members: &mut [Member]) -> Result<()> {
+        if self.mask_aware() {
+            let n = members
+                .iter()
+                .map(|m| m.cached_bucket)
+                .max()
+                .unwrap_or(self.rt.config.tokens);
+            if n >= self.rt.config.tokens {
+                self.step_full(members)
+            } else {
+                self.step_masked(members, n)
+            }
+        } else {
+            self.step_full(members)
+        }
+        .map(|_| self.shared.steps_executed.fetch_add(1, Ordering::Relaxed))
+        .map(|_| ())
+    }
+
+    /// Build a member's denoiser input h = x + temb(t) (+ conditioning on
+    /// the genuinely masked rows).
+    fn build_hidden(&self, m: &Member) -> Vec<f32> {
+        let cfg = &self.rt.config;
+        let h = cfg.hidden;
+        let temb = self.rt.weights().temb_row(m.step);
+        let mut out = m.latent.data().to_vec();
+        for (i, v) in out.iter_mut().enumerate() {
+            *v += temb[i % h];
+        }
+        for &id in m.prep.perm.compute_ids(m.prep.masked_count) {
+            let row = &mut out[id * h..(id + 1) * h];
+            for (v, c) in row.iter_mut().zip(&m.prep.conditioning) {
+                *v += c;
+            }
+        }
+        out
+    }
+
+    /// Full-sequence step (Diffusers / TeaCache / mask saturating bucket).
+    fn step_full(&mut self, members: &mut [Member]) -> Result<()> {
+        let cfg = self.rt.config.clone();
+        let (l, h) = (cfg.tokens, cfg.hidden);
+        let b = members.len();
+        let bb = self.rt.batch_bucket_for(b);
+
+        // TeaCache: gate each member; if everyone skips, replay without
+        // touching the device.
+        let mut compute_mask: Vec<bool> = vec![true; b];
+        if self.cfg.system == SystemKind::TeaCache {
+            for (i, m) in members.iter_mut().enumerate() {
+                let temb = self.rt.weights().temb_row(m.step).to_vec();
+                let gate = m.gate.as_mut().expect("teacache gate");
+                compute_mask[i] = !(gate.should_skip(&temb) && m.last_eps.is_some());
+            }
+        }
+
+        let any_compute = compute_mask.iter().any(|&c| c);
+        let mut eps_rows: Vec<Vec<f32>> = Vec::with_capacity(b);
+        if any_compute {
+            // pack (bb, L, H); padding slots replicate member 0
+            let mut x = vec![0f32; bb * l * h];
+            for i in 0..bb {
+                let m = &members[i.min(b - 1)];
+                let src = self.build_hidden(m);
+                x[i * l * h..(i + 1) * l * h].copy_from_slice(&src);
+            }
+            let mut cur = x;
+            for blk in 0..cfg.blocks {
+                cur = self.rt.run_block_y(blk, l, bb, &cur)?;
+            }
+            for (i, m) in members.iter().enumerate() {
+                let _ = m;
+                eps_rows.push(cur[i * l * h..(i + 1) * l * h].to_vec());
+            }
+        }
+
+        // per-member latent update
+        for (i, m) in members.iter_mut().enumerate() {
+            let eps: Vec<f32> = if compute_mask[i] {
+                let e = eps_rows[i].clone();
+                m.last_eps = Some(e.clone());
+                m.steps_computed += 1;
+                e
+            } else {
+                m.last_eps.clone().expect("replayed eps")
+            };
+            let sched = self.rt.schedule();
+            // masked rows follow the computed eps...
+            let masked: Vec<usize> =
+                m.prep.perm.compute_ids(m.prep.masked_count).to_vec();
+            let mut eps_masked = vec![0f32; masked.len() * h];
+            for (r, &id) in masked.iter().enumerate() {
+                eps_masked[r * h..(r + 1) * h].copy_from_slice(&eps[id * h..(id + 1) * h]);
+            }
+            sched.update_rows(m.step, m.latent.data_mut(), h, &masked, &eps_masked);
+            // ...unmasked rows are pinned to the template trajectory
+            // (standard diffusion inpainting: regenerate only the mask).
+            let unmasked: Vec<usize> = m.prep.perm.cached_ids(m.prep.masked_count).to_vec();
+            let teps = m.acts.eps(m.step);
+            let mut eps_unm = vec![0f32; unmasked.len() * h];
+            for (r, &id) in unmasked.iter().enumerate() {
+                eps_unm[r * h..(r + 1) * h].copy_from_slice(&teps[id * h..(id + 1) * h]);
+            }
+            sched.update_rows(m.step, m.latent.data_mut(), h, &unmasked, &eps_unm);
+            m.step += 1;
+        }
+        Ok(())
+    }
+
+    /// Mask-aware step at token bucket `n` with the Algo-1 pipeline.
+    fn step_masked(&mut self, members: &mut [Member], n: usize) -> Result<()> {
+        let cfg = self.rt.config.clone();
+        let (l, h) = (cfg.tokens, cfg.hidden);
+        let b = members.len();
+        let bb = self.rt.batch_bucket_for(b);
+        let mode = self.cfg.cache_mode;
+
+        // -- plan (Algo 1) ---------------------------------------------------
+        let costs: Vec<BlockCosts> = self.lat_model.step_costs(&cfg, n, b, mode);
+        let plan: PipelinePlan = if self.cfg.force_all_cached || self.cfg.naive_loading {
+            PipelinePlan { use_cache: vec![true; cfg.blocks], latency: 0.0 }
+        } else {
+            pipeline::plan(&costs)
+        };
+
+        // cached-row id sets at this bucket (may exceed a member's own
+        // bucket; the permutation prefix property makes this safe)
+        let cached_ids: Vec<Arc<Vec<usize>>> = members
+            .iter()
+            .map(|m| {
+                if m.cached_bucket == n {
+                    Arc::clone(&m.cached_ids)
+                } else {
+                    Arc::new(m.prep.perm.cached_ids(n).to_vec())
+                }
+            })
+            .collect();
+
+        // -- submit loads (pipeline order) ------------------------------------
+        let mut staged_rx: Vec<Option<Receiver<StagedBlock>>> = (0..cfg.blocks).map(|_| None).collect();
+        let mut staged_now: Vec<Option<StagedBlock>> = (0..cfg.blocks).map(|_| None).collect();
+        let gathers = |step_of: &dyn Fn(usize) -> usize| -> Vec<MemberGather> {
+            members
+                .iter()
+                .enumerate()
+                .map(|(i, m)| MemberGather {
+                    store: Arc::clone(&m.acts),
+                    step: step_of(i),
+                    ids: Arc::clone(&cached_ids[i]),
+                })
+                .collect()
+        };
+        let steps: Vec<usize> = members.iter().map(|m| m.step).collect();
+        if self.cfg.naive_loading {
+            // Fig. 9-Top: the compute stream performs all loads up front.
+            for blk in 0..cfg.blocks {
+                if plan.use_cache[blk] {
+                    let g = gathers(&|i| steps[i]);
+                    staged_now[blk] = Some(self.loader.gather_sync(blk, g, mode));
+                }
+            }
+        } else {
+            for blk in 0..cfg.blocks {
+                if plan.use_cache[blk] {
+                    let g = gathers(&|i| steps[i]);
+                    staged_rx[blk] = Some(self.loader.submit(blk, g, mode));
+                }
+            }
+        }
+
+        // -- hidden state: one full (L, H) buffer per member -----------------
+        let mut hidden: Vec<Vec<f32>> = members.iter().map(|m| self.build_hidden(m)).collect();
+
+        // reusable packed buffers (hot loop: no per-block allocation)
+        let mut packed = vec![0f32; bb * n * h];
+        let mut full = Vec::new();
+        let mut kc = Vec::new();
+        let mut vc = Vec::new();
+
+        for blk in 0..cfg.blocks {
+            if plan.use_cache[blk] {
+                // wait for the copy stream (a bubble iff the DP mispredicts)
+                let staged = match staged_now[blk].take() {
+                    Some(s) => s,
+                    None => staged_rx[blk]
+                        .take()
+                        .expect("staged rx")
+                        .recv()
+                        .expect("loader alive"),
+                };
+                // pack compute rows
+                for i in 0..bb {
+                    let mi = i.min(b - 1);
+                    let ids = members[mi].prep.perm.compute_ids(n);
+                    gather_rows(&hidden[mi], h, ids, &mut packed[i * n * h..(i + 1) * n * h]);
+                }
+                let out = match mode {
+                    CacheMode::CacheY => self.rt.run_block_y(blk, n, bb, &packed)?,
+                    CacheMode::CacheKV => {
+                        let kvs = staged.kv.as_ref().expect("kv staged");
+                        let rows = l - n;
+                        kc.resize(bb * rows * h, 0.0);
+                        vc.resize(bb * rows * h, 0.0);
+                        for i in 0..bb {
+                            let (k, v) = &kvs[i.min(b - 1)];
+                            kc[i * rows * h..(i + 1) * rows * h].copy_from_slice(k);
+                            vc[i * rows * h..(i + 1) * rows * h].copy_from_slice(v);
+                        }
+                        self.rt.run_block_kv(blk, n, bb, &packed, &kc, &vc)?
+                    }
+                };
+                // scatter computed rows + replenish cached rows (Fig. 5)
+                for (i, m) in members.iter().enumerate() {
+                    let ids = m.prep.perm.compute_ids(n);
+                    scatter_rows(&mut hidden[i], h, ids, &out[i * n * h..(i + 1) * n * h]);
+                    scatter_rows(&mut hidden[i], h, &cached_ids[i], &staged.y[i]);
+                }
+            } else {
+                // full block: all L tokens, no load
+                full.resize(bb * l * h, 0.0);
+                for i in 0..bb {
+                    let mi = i.min(b - 1);
+                    full[i * l * h..(i + 1) * l * h].copy_from_slice(&hidden[mi]);
+                }
+                let out = self.rt.run_block_y(blk, l, bb, &full)?;
+                for (i, hbuf) in hidden.iter_mut().enumerate() {
+                    hbuf.copy_from_slice(&out[i * l * h..(i + 1) * l * h]);
+                }
+            }
+        }
+
+        // -- latent update ----------------------------------------------------
+        for (i, m) in members.iter_mut().enumerate() {
+            let sched = self.rt.schedule();
+            let masked: Vec<usize> = m.prep.perm.compute_ids(m.prep.masked_count).to_vec();
+            let mut eps_masked = vec![0f32; masked.len() * h];
+            for (r, &id) in masked.iter().enumerate() {
+                eps_masked[r * h..(r + 1) * h]
+                    .copy_from_slice(&hidden[i][id * h..(id + 1) * h]);
+            }
+            sched.update_rows(m.step, m.latent.data_mut(), h, &masked, &eps_masked);
+            let unmasked: Vec<usize> = m.prep.perm.cached_ids(m.prep.masked_count).to_vec();
+            let teps = m.acts.eps(m.step);
+            let mut eps_unm = vec![0f32; unmasked.len() * h];
+            for (r, &id) in unmasked.iter().enumerate() {
+                eps_unm[r * h..(r + 1) * h].copy_from_slice(&teps[id * h..(id + 1) * h]);
+            }
+            sched.update_rows(m.step, m.latent.data_mut(), h, &unmasked, &eps_unm);
+            m.step += 1;
+            m.steps_computed += 1;
+        }
+        Ok(())
+    }
+
+    // -- completion -----------------------------------------------------------
+
+    fn complete_finished(&mut self, members: &mut Vec<Member>) {
+        let total_steps = self.rt.config.steps;
+        let mut i = 0;
+        while i < members.len() {
+            if members[i].step >= total_steps {
+                let m = members.swap_remove(i);
+                let remaining = members.len();
+                self.finish_member(m, remaining, members);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn finish_member(&self, m: Member, _remaining: usize, others: &mut [Member]) {
+        let cfg = &self.rt.config;
+        let latent = Tensor::from_vec(
+            &[cfg.tokens, cfg.hidden],
+            m.latent.data().to_vec(),
+        )
+        .expect("latent tensor");
+        let decoder = self.rt.weights().decoder.clone();
+        let mut timing = RequestTiming {
+            queue: (m.joined - m.prep.request.arrival).as_secs_f64(),
+            inference: m.joined.elapsed().as_secs_f64(),
+            e2e: 0.0,
+            interruptions: m.interruptions,
+            steps_computed: m.steps_computed,
+        };
+        let arrival = m.prep.request.arrival;
+        let id = m.prep.request.id;
+        let template_id = m.prep.request.template_id.clone();
+        let ratio = m.prep.request.mask.ratio();
+        let results = self.results.clone();
+        let cpu_us = self.cfg.prepost_cpu_us;
+
+        let work = move || {
+            let image = postprocess(&latent, &decoder, cpu_us);
+            timing.e2e = arrival.elapsed().as_secs_f64();
+            let _ = results.send(EditResponse {
+                id,
+                template_id,
+                image,
+                latent,
+                timing,
+                mask_ratio: ratio,
+            });
+        };
+
+        match self.cfg.batching {
+            BatchingPolicy::ContinuousDisaggregated => self.prepost.submit(work),
+            _ => {
+                // inline postprocess interrupts every remaining member
+                for o in others.iter_mut() {
+                    o.interruptions += 1;
+                }
+                work();
+            }
+        }
+    }
+
+    fn publish(&self, members: &[Member]) {
+        self.shared.running.store(members.len(), Ordering::Relaxed);
+        let masked: usize = members.iter().map(|m| m.prep.masked_count).sum();
+        self.shared.running_masked.store(masked, Ordering::Relaxed);
+    }
+}
+
+fn gather_rows(src: &[f32], h: usize, ids: &[usize], out: &mut [f32]) {
+    for (i, &id) in ids.iter().enumerate() {
+        out[i * h..(i + 1) * h].copy_from_slice(&src[id * h..(id + 1) * h]);
+    }
+}
+
+fn scatter_rows(dst: &mut [f32], h: usize, ids: &[usize], src: &[f32]) {
+    for (i, &id) in ids.iter().enumerate() {
+        dst[id * h..(id + 1) * h].copy_from_slice(&src[i * h..(i + 1) * h]);
+    }
+}

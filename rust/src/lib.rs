@@ -1,0 +1,41 @@
+//! # InstGenIE — mask-aware generative image-editing serving
+//!
+//! A reproduction of *"InstGenIE: Generative Image Editing Made Efficient
+//! with Mask-aware Caching and Scheduling"* as a three-layer Rust + JAX +
+//! Pallas system: this crate is the Layer-3 coordinator, executing
+//! AOT-lowered XLA programs (Layer 2 model / Layer 1 Pallas kernels, built
+//! by `python/compile/`) through the PJRT C API.
+//!
+//! Key subsystems (paper section in parentheses):
+//! - [`runtime`]: PJRT client, artifact registry, block executor.
+//! - [`model`]: masks, latents, masked-first permutation, noise schedule.
+//! - [`cache`]: activation store, tiered storage, loader stream, the
+//!   bubble-free pipeline DP (§4.2, Algo 1), latency regressions (§4.4).
+//! - [`engine`]: worker step loop, continuous batching + disaggregated
+//!   pre/post-processing (§4.3), baseline modes (Diffusers / FISEdit /
+//!   TeaCache).
+//! - [`scheduler`]: mask-aware load balancing (§4.4, Algo 2) + baselines.
+//! - [`cluster`]: multi-worker deployment glue.
+//! - [`workload`]: Fig.-3 mask-ratio distributions, Poisson traffic,
+//!   trace record/replay.
+//! - [`metrics`], [`quality`], [`server`]: observability, image-quality
+//!   metrics (Table 2), and a minimal HTTP frontend.
+//! - [`util`]: in-tree substrates (RNG, JSON, stats, thread pool, bench
+//!   harness, property testing) — see DESIGN.md "Offline-crate
+//!   substitution".
+
+pub mod cache;
+pub mod cluster;
+pub mod config;
+pub mod engine;
+pub mod metrics;
+pub mod model;
+pub mod quality;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod util;
+pub mod workload;
+
+/// Repository-relative default artifact directory.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,252 @@
+//! InstGenIE CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   serve           launch a cluster + HTTP frontend
+//!   run             replay a generated trace through a cluster, report
+//!   calibrate       fit + save the latency regression models (Fig. 11)
+//!   workload-stats  mask-ratio distribution statistics (Fig. 3)
+//!   register        pre-register templates into the spill tier
+//!   info            print manifest / model inventory
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use instgenie::cache::latency_model::{calibrate, LatencyModel};
+use instgenie::cluster::{Cluster, ClusterOpts};
+use instgenie::config::{BatchingPolicy, CacheMode, EngineConfig, SystemKind};
+use instgenie::metrics::Recorder;
+use instgenie::runtime::{Manifest, ModelRuntime};
+use instgenie::scheduler;
+use instgenie::server::HttpServer;
+use instgenie::util::cli::Args;
+use instgenie::util::stats::Summary;
+use instgenie::workload::{replay, MaskDist, TraceGen};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.command.as_str() {
+        "serve" => cmd_serve(&args),
+        "run" => cmd_run(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "workload-stats" => cmd_workload_stats(&args),
+        "register" => cmd_register(&args),
+        "info" => cmd_info(&args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            bail!("unknown command {other:?}")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "instgenie — mask-aware image-editing serving (paper reproduction)\n\
+         commands:\n\
+         \x20 serve          --model sdxlm --workers 2 --addr 127.0.0.1:8801 --system instgenie\n\
+         \x20 run            --model sdxlm --workers 2 --rps 1.0 --requests 40 --system instgenie\n\
+         \x20                --scheduler mask-aware --dist production --templates 4\n\
+         \x20 calibrate      --model fluxm [--reps 20]\n\
+         \x20 workload-stats --dist production|public|viton\n\
+         \x20 register       --model sdxlm --templates 4\n\
+         \x20 info"
+    );
+}
+
+fn engine_config(args: &Args) -> Result<EngineConfig> {
+    let system = SystemKind::parse(&args.str("system", "instgenie"))
+        .context("bad --system (instgenie|diffusers|fisedit|teacache)")?;
+    let mut cfg = EngineConfig::for_system(system);
+    if let Some(b) = args.flags.get("batching") {
+        cfg.batching = match b.as_str() {
+            "static" => BatchingPolicy::Static,
+            "continuous-inline" => BatchingPolicy::ContinuousInline,
+            "continuous" => BatchingPolicy::ContinuousDisaggregated,
+            other => bail!("bad --batching {other:?}"),
+        };
+    }
+    if args.str("cache-mode", "y") == "kv" {
+        cfg.cache_mode = CacheMode::CacheKV;
+    }
+    cfg.max_batch = args.usize("max-batch", cfg.max_batch);
+    cfg.sim_bandwidth = args.f64("bandwidth", cfg.sim_bandwidth);
+    cfg.prepost_cpu_us = args.u64("prepost-us", cfg.prepost_cpu_us);
+    cfg.force_all_cached = args.bool("force-all-cached");
+    cfg.naive_loading = args.bool("naive-loading");
+    Ok(cfg)
+}
+
+fn launch_cluster(args: &Args) -> Result<Cluster> {
+    let model = args.str("model", "sdxlm");
+    let artifact_dir = args.str("artifacts", "artifacts");
+    let engine = engine_config(args)?;
+    let templates: Vec<String> = (0..args.usize("templates", 4))
+        .map(|i| format!("tpl-{i}"))
+        .collect();
+    let lat = LatencyModel::load_or_nominal(&artifact_dir, &model);
+    let manifest = Manifest::load(&artifact_dir)?;
+    let mcfg = manifest.model(&model)?.config.clone();
+    let sched = scheduler::by_name(
+        &args.str("scheduler", "mask-aware"),
+        &mcfg,
+        &lat,
+        engine.cache_mode,
+        engine.max_batch,
+    )
+    .context("bad --scheduler")?;
+    Cluster::launch(
+        ClusterOpts {
+            workers: args.usize("workers", 2),
+            engine,
+            model,
+            artifact_dir,
+            templates,
+            lat_model: lat,
+            warmup: args.bool("warmup"),
+        },
+        sched,
+    )
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cluster = Arc::new(launch_cluster(args)?);
+    let addr = args.str("addr", "127.0.0.1:8801");
+    let server = Arc::new(HttpServer::new(cluster, 1_000_000));
+    server.serve(&addr)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cluster = launch_cluster(args)?;
+    let gen = TraceGen::new(
+        args.f64("rps", 1.0),
+        MaskDist::parse(&args.str("dist", "production")).context("bad --dist")?,
+        args.usize("templates", 4),
+        args.u64("seed", 42),
+    );
+    let events = gen.generate(args.usize("requests", 40));
+    eprintln!(
+        "[run] {} requests at {} rps over {} workers (system={}, scheduler={})",
+        events.len(),
+        args.f64("rps", 1.0),
+        cluster.workers(),
+        args.str("system", "instgenie"),
+        args.str("scheduler", "mask-aware"),
+    );
+    let t0 = std::time::Instant::now();
+    replay(&events, |ev| {
+        cluster.submit_event(ev);
+    });
+    cluster.await_completed(events.len(), std::time::Duration::from_secs(600));
+    let makespan = t0.elapsed().as_secs_f64();
+    let responses = cluster.shutdown()?;
+    let mut rec = Recorder::new();
+    for r in &responses {
+        rec.record(r);
+    }
+    let report = rec.report(makespan);
+    println!("{}", report.line());
+    println!("{}", report.to_json());
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let artifact_dir = args.str("artifacts", "artifacts");
+    let models: Vec<String> = match args.flags.get("model") {
+        Some(m) => vec![m.clone()],
+        None => vec!["sd21m".into(), "sdxlm".into(), "fluxm".into()],
+    };
+    for model in models {
+        let rt = ModelRuntime::create(&artifact_dir, &model)?;
+        let bw = args.f64("bandwidth", EngineConfig::instgenie().sim_bandwidth);
+        let (lat, comp, load) = calibrate(&rt, bw, args.usize("reps", 10))?;
+        lat.save(&artifact_dir, &model)?;
+        println!(
+            "[calibrate] {model}: comp fit slope={:.3e}s/FLOP intercept={:.1}µs R²={:.4} ({} pts)",
+            lat.comp.slope,
+            lat.comp.intercept * 1e6,
+            lat.comp.r2,
+            comp.len()
+        );
+        println!(
+            "[calibrate] {model}: load fit slope={:.3e}s/B  intercept={:.1}µs R²={:.4} ({} pts)",
+            lat.load.slope,
+            lat.load.intercept * 1e6,
+            lat.load.r2,
+            load.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_workload_stats(args: &Args) -> Result<()> {
+    use instgenie::util::rng::Pcg;
+    let dists = match args.flags.get("dist") {
+        Some(d) => vec![MaskDist::parse(d).context("bad --dist")?],
+        None => vec![MaskDist::Production, MaskDist::PublicTrace, MaskDist::VitonHD],
+    };
+    println!("Fig. 3 — mask-ratio distributions (paper means: 0.11 / 0.19 / 0.35)");
+    for dist in dists {
+        let mut rng = Pcg::new(args.u64("seed", 1));
+        let xs: Vec<f64> = (0..args.usize("samples", 50_000))
+            .map(|_| dist.sample(&mut rng))
+            .collect();
+        let s = Summary::of(&xs);
+        println!(
+            "{:?}: mean={:.3} p50={:.3} p95={:.3} max={:.3}",
+            dist, s.mean, s.p50, s.p95, s.max
+        );
+    }
+    Ok(())
+}
+
+fn cmd_register(args: &Args) -> Result<()> {
+    use instgenie::cache::store::register_template;
+    use instgenie::cache::tier::TieredStore;
+    let artifact_dir = args.str("artifacts", "artifacts");
+    let model = args.str("model", "sdxlm");
+    let rt = ModelRuntime::create(&artifact_dir, &model)?;
+    let mode = if args.str("cache-mode", "y") == "kv" {
+        CacheMode::CacheKV
+    } else {
+        CacheMode::CacheY
+    };
+    let tiers = TieredStore::new(
+        0, // zero budget: spill immediately, pre-warming the disk tier
+        format!("{artifact_dir}/cache_spill").into(),
+        0.0,
+    );
+    for i in 0..args.usize("templates", 4) {
+        let id = format!("tpl-{i}");
+        let t0 = std::time::Instant::now();
+        let (acts, _) = register_template(&rt, &id, mode)?;
+        let mb = acts.size_bytes() as f64 / 1e6;
+        tiers.insert(acts)?;
+        println!("[register] {id}: {mb:.1} MB in {:?}", t0.elapsed());
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(args.str("artifacts", "artifacts"))?;
+    println!("artifact dir: {:?}", manifest.dir);
+    println!("batch buckets: {:?}", manifest.batch_buckets);
+    for (name, m) in &manifest.models {
+        let c = &m.config;
+        println!(
+            "{name}: L={} H={} heads={} blocks={} steps={} buckets={:?} ({} artifacts, analogue: {})",
+            c.tokens,
+            c.hidden,
+            c.heads,
+            c.blocks,
+            c.steps,
+            c.token_buckets,
+            m.artifacts.len(),
+            c.paper_analogue,
+        );
+    }
+    Ok(())
+}

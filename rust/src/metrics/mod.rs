@@ -1,0 +1,159 @@
+//! Serving metrics: per-request latency decomposition, throughput, and
+//! report tables (the quantities of Fig. 4/12/14/16).
+
+use crate::engine::request::EditResponse;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Aggregated serving metrics over a run.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub queue: Summary,
+    pub inference: Summary,
+    pub e2e: Summary,
+    pub completed: usize,
+    /// Requests per second actually completed (makespan-based).
+    pub throughput: f64,
+    pub mean_interruptions: f64,
+    pub mean_steps_computed: f64,
+    pub makespan: f64,
+}
+
+/// Collects responses and derives the report.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    queue: Vec<f64>,
+    inference: Vec<f64>,
+    e2e: Vec<f64>,
+    interruptions: Vec<f64>,
+    steps: Vec<f64>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn record(&mut self, resp: &EditResponse) {
+        self.queue.push(resp.timing.queue);
+        self.inference.push(resp.timing.inference);
+        self.e2e.push(resp.timing.e2e);
+        self.interruptions.push(resp.timing.interruptions as f64);
+        self.steps.push(resp.timing.steps_computed as f64);
+    }
+
+    pub fn len(&self) -> usize {
+        self.e2e.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.e2e.is_empty()
+    }
+
+    /// Build the report; `makespan` = wall-clock of the serving window.
+    pub fn report(&self, makespan: f64) -> Report {
+        Report {
+            queue: Summary::of(&self.queue),
+            inference: Summary::of(&self.inference),
+            e2e: Summary::of(&self.e2e),
+            completed: self.e2e.len(),
+            throughput: if makespan > 0.0 { self.e2e.len() as f64 / makespan } else { 0.0 },
+            mean_interruptions: mean_or0(&self.interruptions),
+            mean_steps_computed: mean_or0(&self.steps),
+            makespan,
+        }
+    }
+}
+
+fn mean_or0(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+impl Report {
+    /// One-line human summary.
+    pub fn line(&self) -> String {
+        format!(
+            "n={} tput={:.2}req/s e2e(mean/p50/p95)={:.3}/{:.3}/{:.3}s queue(mean)={:.3}s inf(mean)={:.3}s intr={:.1}",
+            self.completed,
+            self.throughput,
+            self.e2e.mean,
+            self.e2e.p50,
+            self.e2e.p95,
+            self.queue.mean,
+            self.inference.mean,
+            self.mean_interruptions,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let s = |x: &Summary| {
+            Json::obj(vec![
+                ("mean", Json::num(x.mean)),
+                ("p50", Json::num(x.p50)),
+                ("p95", Json::num(x.p95)),
+                ("p99", Json::num(x.p99)),
+            ])
+        };
+        Json::obj(vec![
+            ("completed", Json::num(self.completed as f64)),
+            ("throughput", Json::num(self.throughput)),
+            ("queue", s(&self.queue)),
+            ("inference", s(&self.inference)),
+            ("e2e", s(&self.e2e)),
+            ("mean_interruptions", Json::num(self.mean_interruptions)),
+            ("mean_steps_computed", Json::num(self.mean_steps_computed)),
+            ("makespan", Json::num(self.makespan)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::request::RequestTiming;
+    use crate::util::tensor::Tensor;
+
+    fn resp(queue: f64, inf: f64) -> EditResponse {
+        EditResponse {
+            id: 0,
+            template_id: "t".into(),
+            image: Tensor::zeros(&[1, 1]),
+            latent: Tensor::zeros(&[1, 1]),
+            timing: RequestTiming {
+                queue,
+                inference: inf,
+                e2e: queue + inf,
+                interruptions: 2,
+                steps_computed: 8,
+            },
+            mask_ratio: 0.1,
+        }
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let mut r = Recorder::new();
+        r.record(&resp(0.1, 0.5));
+        r.record(&resp(0.3, 0.5));
+        let rep = r.report(2.0);
+        assert_eq!(rep.completed, 2);
+        assert!((rep.throughput - 1.0).abs() < 1e-12);
+        assert!((rep.queue.mean - 0.2).abs() < 1e-12);
+        assert!((rep.e2e.mean - 0.7).abs() < 1e-12);
+        assert_eq!(rep.mean_interruptions, 2.0);
+        // json emits without panicking and parses back
+        let j = rep.to_json().to_string();
+        assert!(Json::parse(&j).is_ok());
+    }
+
+    #[test]
+    fn empty_recorder_safe() {
+        let rep = Recorder::new().report(1.0);
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.throughput, 0.0);
+    }
+}

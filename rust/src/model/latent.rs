@@ -1,0 +1,155 @@
+//! Per-request latent state and batch packing.
+//!
+//! Each in-flight request owns a full `(L, H)` latent in canonical token
+//! order. The step loop packs the *compute rows* (the masked-first prefix
+//! of each member's permutation) of up to B requests into one dense
+//! `(B, n, H)` buffer for the block executables, and scatters results
+//! back. Buffers are caller-provided and reused across steps — the pack /
+//! unpack path is allocation-free (§Perf target).
+
+use crate::model::mask::Permutation;
+use crate::util::rng::Pcg;
+
+/// Full-latent state of one request (canonical token order).
+#[derive(Debug, Clone)]
+pub struct Latent {
+    data: Vec<f32>,
+    tokens: usize,
+    hidden: usize,
+}
+
+impl Latent {
+    pub fn zeros(tokens: usize, hidden: usize) -> Latent {
+        Latent { data: vec![0.0; tokens * hidden], tokens, hidden }
+    }
+
+    /// Seeded standard-normal latent (template trajectory starts).
+    pub fn noise(tokens: usize, hidden: usize, seed: u64, scale: f32) -> Latent {
+        let mut l = Latent::zeros(tokens, hidden);
+        Pcg::new(seed).fill_normal_f32(&mut l.data, scale);
+        l
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn row(&self, t: usize) -> &[f32] {
+        &self.data[t * self.hidden..(t + 1) * self.hidden]
+    }
+
+    /// Gather token rows by id into `out` (ids.len() x H).
+    pub fn gather_into(&self, ids: &[usize], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), ids.len() * self.hidden);
+        for (i, &id) in ids.iter().enumerate() {
+            out[i * self.hidden..(i + 1) * self.hidden]
+                .copy_from_slice(self.row(id));
+        }
+    }
+
+    /// Scatter rows back by id.
+    pub fn scatter_from(&mut self, ids: &[usize], src: &[f32]) {
+        debug_assert_eq!(src.len(), ids.len() * self.hidden);
+        let h = self.hidden;
+        for (i, &id) in ids.iter().enumerate() {
+            self.data[id * h..(id + 1) * h]
+                .copy_from_slice(&src[i * h..(i + 1) * h]);
+        }
+    }
+}
+
+/// Reusable packing buffer for a `(B, n, H)` compute batch.
+#[derive(Debug, Default)]
+pub struct PackBuffer {
+    pub data: Vec<f32>,
+}
+
+impl PackBuffer {
+    /// Pack the bucket-`n` compute rows of `members` into `(B, n, H)`;
+    /// `conditioning(i, row_buf)` lets the caller add the per-member
+    /// timestep embedding + prompt conditioning in the same pass (one
+    /// traversal, no extra buffer).
+    pub fn pack(
+        &mut self,
+        members: &[(&Latent, &Permutation)],
+        n: usize,
+        mut conditioning: impl FnMut(usize, &mut [f32]),
+    ) {
+        let b = members.len();
+        let h = members.first().map(|(l, _)| l.hidden()).unwrap_or(0);
+        self.data.resize(b * n * h, 0.0);
+        for (i, (latent, perm)) in members.iter().enumerate() {
+            let dst = &mut self.data[i * n * h..(i + 1) * n * h];
+            latent.gather_into(perm.compute_ids(n), dst);
+            conditioning(i, dst);
+        }
+    }
+
+    /// Member `i`'s rows within the packed buffer.
+    pub fn member(&self, i: usize, n: usize, h: usize) -> &[f32] {
+        &self.data[i * n * h..(i + 1) * n * h]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::mask::MaskSpec;
+
+    #[test]
+    fn gather_scatter_round_trip() {
+        let mut l = Latent::noise(8, 4, 42, 1.0);
+        let ids = [3usize, 1, 7];
+        let mut buf = vec![0.0; ids.len() * 4];
+        l.gather_into(&ids, &mut buf);
+        let before = l.data().to_vec();
+        l.scatter_from(&ids, &buf);
+        assert_eq!(l.data(), &before[..]);
+    }
+
+    #[test]
+    fn noise_is_seed_deterministic() {
+        let a = Latent::noise(16, 8, 7, 0.5);
+        let b = Latent::noise(16, 8, 7, 0.5);
+        assert_eq!(a.data(), b.data());
+        let c = Latent::noise(16, 8, 8, 0.5);
+        assert_ne!(a.data(), c.data());
+    }
+
+    #[test]
+    fn pack_applies_conditioning_per_member() {
+        let mut rng = Pcg::new(0);
+        let m1 = MaskSpec::synth(4, 0.25, &mut rng);
+        let m2 = MaskSpec::synth(4, 0.25, &mut rng);
+        let p1 = Permutation::masked_first(&m1);
+        let p2 = Permutation::masked_first(&m2);
+        let l1 = Latent::noise(16, 2, 1, 1.0);
+        let l2 = Latent::noise(16, 2, 2, 1.0);
+        let n = 4;
+        let mut pb = PackBuffer::default();
+        pb.pack(&[(&l1, &p1), (&l2, &p2)], n, |i, rows| {
+            for v in rows.iter_mut() {
+                *v += (i + 1) as f32 * 100.0;
+            }
+        });
+        // member 0 rows got +100, member 1 rows +200
+        let r0 = pb.member(0, n, 2);
+        let want0 = l1.row(p1.compute_ids(n)[0])[0] + 100.0;
+        assert!((r0[0] - want0).abs() < 1e-6);
+        let r1 = pb.member(1, n, 2);
+        let want1 = l2.row(p2.compute_ids(n)[0])[0] + 200.0;
+        assert!((r1[0] - want1).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,197 @@
+//! Masks and the masked-first permutation (paper §2.1/§3.1).
+//!
+//! A mask selects the latent tokens to be edited. The coordinator permutes
+//! each request's tokens *masked-first* so the L1 kernel sees sparsity as
+//! a dense leading-dimension crop (DESIGN.md §Hardware-Adaptation), and
+//! pads the compute set up to the shape bucket with real unmasked tokens
+//! (computed redundantly instead of read from cache — no validity masks
+//! anywhere in the kernels).
+
+use crate::util::rng::Pcg;
+
+/// A mask over the latent token grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaskSpec {
+    /// Token ids (canonical order) inside the mask, sorted.
+    masked: Vec<usize>,
+    /// Total token count L.
+    tokens: usize,
+}
+
+impl MaskSpec {
+    pub fn new(mut masked: Vec<usize>, tokens: usize) -> MaskSpec {
+        masked.sort_unstable();
+        masked.dedup();
+        assert!(masked.last().map(|&m| m < tokens).unwrap_or(true));
+        assert!(!masked.is_empty(), "empty mask");
+        MaskSpec { masked, tokens }
+    }
+
+    /// Synthesize a contiguous-blob mask of roughly `ratio * L` tokens on
+    /// the `hw x hw` grid (rectangular region grown from a random anchor,
+    /// mimicking production edit regions: try-on garments, faces, hands).
+    pub fn synth(hw: usize, ratio: f64, rng: &mut Pcg) -> MaskSpec {
+        let tokens = hw * hw;
+        let want = ((ratio * tokens as f64).round() as usize).clamp(1, tokens);
+        // rectangle with aspect jitter
+        let aspect = rng.range_f64(0.5, 2.0);
+        let mut h = ((want as f64 * aspect).sqrt().round() as usize).clamp(1, hw);
+        let mut w = want.div_ceil(h).clamp(1, hw);
+        while h * w < want && (h < hw || w < hw) {
+            if h < hw {
+                h += 1;
+            } else {
+                w += 1;
+            }
+        }
+        let r0 = rng.below(hw - h + 1);
+        let c0 = rng.below(hw - w + 1);
+        let mut ids = Vec::with_capacity(want);
+        'outer: for r in r0..r0 + h {
+            for c in c0..c0 + w {
+                ids.push(r * hw + c);
+                if ids.len() == want {
+                    break 'outer;
+                }
+            }
+        }
+        MaskSpec::new(ids, tokens)
+    }
+
+    pub fn masked_ids(&self) -> &[usize] {
+        &self.masked
+    }
+
+    pub fn masked_count(&self) -> usize {
+        self.masked.len()
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// Mask ratio m (paper Table 1).
+    pub fn ratio(&self) -> f64 {
+        self.masked.len() as f64 / self.tokens as f64
+    }
+
+    pub fn is_masked(&self, id: usize) -> bool {
+        self.masked.binary_search(&id).is_ok()
+    }
+}
+
+/// The masked-first token permutation of one request.
+///
+/// `order[0..k]` are the masked ids, `order[k..]` the unmasked ids in
+/// ascending canonical order. The *compute set* for a bucket `n >= k` is
+/// `order[0..n]` — a prefix, so growing the bucket only appends filler
+/// (the prefix property the continuous batcher relies on: a request can
+/// join a batch with any bucket `>=` its own without re-permutation).
+#[derive(Debug, Clone)]
+pub struct Permutation {
+    order: Vec<usize>,
+    k: usize,
+}
+
+impl Permutation {
+    pub fn masked_first(mask: &MaskSpec) -> Permutation {
+        let l = mask.tokens();
+        let mut order = Vec::with_capacity(l);
+        order.extend_from_slice(mask.masked_ids());
+        order.extend((0..l).filter(|&t| !mask.is_masked(t)));
+        debug_assert_eq!(order.len(), l);
+        Permutation { order, k: mask.masked_count() }
+    }
+
+    /// Token ids of the compute set for bucket `n` (prefix of the order).
+    pub fn compute_ids(&self, n: usize) -> &[usize] {
+        &self.order[..n]
+    }
+
+    /// Token ids replenished from cache for bucket `n` (the suffix).
+    pub fn cached_ids(&self, n: usize) -> &[usize] {
+        &self.order[n..]
+    }
+
+    /// Number of genuinely masked tokens k.
+    pub fn masked_count(&self) -> usize {
+        self.k
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.order.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn synth_hits_target_ratio() {
+        let mut rng = Pcg::new(1);
+        for &ratio in &[0.02, 0.1, 0.35, 0.9] {
+            let m = MaskSpec::synth(16, ratio, &mut rng);
+            let got = m.ratio();
+            assert!(
+                (got - ratio).abs() < 0.08,
+                "ratio {ratio} got {got} ({} ids)",
+                m.masked_count()
+            );
+        }
+    }
+
+    #[test]
+    fn permutation_prefix_property() {
+        let mut rng = Pcg::new(2);
+        let m = MaskSpec::synth(8, 0.2, &mut rng);
+        let p = Permutation::masked_first(&m);
+        let k = p.masked_count();
+        // masked ids form exactly the first k entries
+        for &id in p.compute_ids(k) {
+            assert!(m.is_masked(id));
+        }
+        // filler beyond k is unmasked
+        for &id in &p.compute_ids(k + 5)[k..] {
+            assert!(!m.is_masked(id));
+        }
+    }
+
+    #[test]
+    fn permutation_is_bijection_property() {
+        prop_check("masked-first order is a permutation", 100, |rng| {
+            let hw = 4 + rng.below(13); // 4..16
+            let ratio = rng.range_f64(0.01, 0.99);
+            let m = MaskSpec::synth(hw, ratio, rng);
+            let p = Permutation::masked_first(&m);
+            let l = m.tokens();
+            let mut seen = vec![false; l];
+            for &id in p.compute_ids(l) {
+                prop_assert!(id < l, "id {id} out of range {l}");
+                prop_assert!(!seen[id], "duplicate id {id}");
+                seen[id] = true;
+            }
+            prop_assert!(seen.iter().all(|&s| s), "missing ids");
+            // cached_ids ++ compute_ids partition the tokens at every bucket
+            for n in [p.masked_count(), l / 2, l] {
+                if n >= p.masked_count() && n <= l {
+                    prop_assert!(
+                        p.compute_ids(n).len() + p.cached_ids(n).len() == l,
+                        "partition broken at n={n}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mask_dedups_and_sorts() {
+        let m = MaskSpec::new(vec![5, 1, 5, 3], 8);
+        assert_eq!(m.masked_ids(), &[1, 3, 5]);
+        assert!(m.is_masked(3));
+        assert!(!m.is_masked(2));
+    }
+}

@@ -1,0 +1,10 @@
+//! Model-side host types: masks, masked-first permutation, latents,
+//! packing, and the denoising schedule.
+
+pub mod latent;
+pub mod mask;
+pub mod schedule;
+
+pub use latent::{Latent, PackBuffer};
+pub use mask::{MaskSpec, Permutation};
+pub use schedule::Schedule;

@@ -1,0 +1,92 @@
+//! Denoising schedule + host-side step update (paper §2.1).
+//!
+//! The sigma schedule and timestep-embedding table are produced by the
+//! python compile path (single source of truth) and shipped in the weights
+//! file; this module applies the per-step latent update
+//! `x_{t+1} = x_t - (sigma_t - sigma_{t+1}) * eps` on the host. The model
+//! predicts eps as its final hidden state (DESIGN.md simplification).
+
+/// Noise schedule: decreasing sigmas, `steps + 1` entries ending at 0.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    sigmas: Vec<f32>,
+}
+
+impl Schedule {
+    pub fn new(sigmas: Vec<f32>) -> Schedule {
+        assert!(sigmas.len() >= 2);
+        assert!(sigmas.windows(2).all(|w| w[0] > w[1]), "sigmas must decrease");
+        assert_eq!(*sigmas.last().unwrap(), 0.0);
+        Schedule { sigmas }
+    }
+
+    pub fn steps(&self) -> usize {
+        self.sigmas.len() - 1
+    }
+
+    pub fn sigma(&self, step: usize) -> f32 {
+        self.sigmas[step]
+    }
+
+    /// Step size `sigma_t - sigma_{t+1}` for denoise step `t`.
+    pub fn delta(&self, step: usize) -> f32 {
+        self.sigmas[step] - self.sigmas[step + 1]
+    }
+
+    /// Apply the update to selected rows of a (L, H) latent:
+    /// `x[id] -= delta(step) * eps[row]` where `eps` holds one row per id.
+    pub fn update_rows(
+        &self,
+        step: usize,
+        latent: &mut [f32],
+        hidden: usize,
+        ids: &[usize],
+        eps: &[f32],
+    ) {
+        debug_assert_eq!(eps.len(), ids.len() * hidden);
+        let d = self.delta(step);
+        for (row, &id) in ids.iter().enumerate() {
+            let x = &mut latent[id * hidden..(id + 1) * hidden];
+            let e = &eps[row * hidden..(row + 1) * hidden];
+            for (xv, ev) in x.iter_mut().zip(e) {
+                *xv -= d * ev;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> Schedule {
+        Schedule::new(vec![1.0, 0.6, 0.3, 0.0])
+    }
+
+    #[test]
+    fn deltas_sum_to_initial_sigma() {
+        let s = sched();
+        let total: f32 = (0..s.steps()).map(|t| s.delta(t)).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn update_rows_touches_only_ids() {
+        let s = sched();
+        let h = 2;
+        let mut latent = vec![1.0f32; 4 * h];
+        let eps = vec![1.0f32; 2 * h];
+        s.update_rows(0, &mut latent, h, &[1, 3], &eps);
+        let d = s.delta(0);
+        assert_eq!(latent[0], 1.0); // row 0 untouched
+        assert!((latent[2] - (1.0 - d)).abs() < 1e-6); // row 1 updated
+        assert_eq!(latent[4], 1.0); // row 2 untouched
+        assert!((latent[6] - (1.0 - d)).abs() < 1e-6); // row 3 updated
+    }
+
+    #[test]
+    #[should_panic(expected = "decrease")]
+    fn rejects_non_monotone() {
+        Schedule::new(vec![1.0, 1.2, 0.0]);
+    }
+}

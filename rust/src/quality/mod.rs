@@ -1,0 +1,219 @@
+//! Image-quality metrics (paper Table 2), adapted to the mini testbed.
+//!
+//! - **SSIM**: the standard windowed structural-similarity index over the
+//!   decoded patch images (full implementation).
+//! - **Fréchet feature distance**: the FID construction — Fréchet distance
+//!   between Gaussian fits of two feature-vector sets — with our
+//!   VAE-analogue encoder as the feature network and diagonal covariance
+//!   (documented substitution: real FID uses InceptionV3 + full
+//!   covariance).
+//! - **Conditioning alignment**: CLIP-score analogue — cosine similarity
+//!   between the output's pooled feature and the request's conditioning
+//!   vector (both live in the model's hidden space).
+
+use crate::util::tensor::Tensor;
+
+/// Windowed SSIM between two images shaped (hw*hw, C), gridded to
+/// hw x hw per channel. Returns the mean SSIM over windows and channels.
+pub fn ssim(a: &Tensor, b: &Tensor, hw: usize, window: usize) -> f64 {
+    assert_eq!(a.shape(), b.shape(), "ssim shape mismatch");
+    let c = *a.shape().last().unwrap();
+    assert_eq!(a.shape()[0], hw * hw, "ssim grid mismatch");
+    let win = window.min(hw).max(1);
+    // dynamic range of tanh-decoded images is [-1, 1] -> L = 2
+    let (c1, c2) = ((0.01f64 * 2.0).powi(2), (0.03f64 * 2.0).powi(2));
+
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for ch in 0..c {
+        let pix = |t: &Tensor, r: usize, col: usize| t.data()[(r * hw + col) * c + ch] as f64;
+        for r0 in 0..=(hw - win) {
+            for c0 in 0..=(hw - win) {
+                let mut ma = 0.0;
+                let mut mb = 0.0;
+                let n = (win * win) as f64;
+                for r in r0..r0 + win {
+                    for cc in c0..c0 + win {
+                        ma += pix(a, r, cc);
+                        mb += pix(b, r, cc);
+                    }
+                }
+                ma /= n;
+                mb /= n;
+                let (mut va, mut vb, mut cov) = (0.0, 0.0, 0.0);
+                for r in r0..r0 + win {
+                    for cc in c0..c0 + win {
+                        let da = pix(a, r, cc) - ma;
+                        let db = pix(b, r, cc) - mb;
+                        va += da * da;
+                        vb += db * db;
+                        cov += da * db;
+                    }
+                }
+                va /= n - 1.0;
+                vb /= n - 1.0;
+                cov /= n - 1.0;
+                let s = ((2.0 * ma * mb + c1) * (2.0 * cov + c2))
+                    / ((ma * ma + mb * mb + c1) * (va + vb + c2));
+                total += s;
+                count += 1;
+            }
+        }
+    }
+    total / count as f64
+}
+
+/// Fréchet distance between diagonal-Gaussian fits of two feature sets.
+/// Lower = more similar (FID-style; 0 for identical sets).
+pub fn frechet_distance(a: &[Vec<f32>], b: &[Vec<f32>]) -> f64 {
+    assert!(!a.is_empty() && !b.is_empty());
+    let d = a[0].len();
+    let fit = |xs: &[Vec<f32>]| {
+        let n = xs.len() as f64;
+        let mut mu = vec![0.0f64; d];
+        for x in xs {
+            for (m, v) in mu.iter_mut().zip(x) {
+                *m += *v as f64 / n;
+            }
+        }
+        let mut var = vec![0.0f64; d];
+        for x in xs {
+            for i in 0..d {
+                var[i] += (x[i] as f64 - mu[i]).powi(2) / n;
+            }
+        }
+        (mu, var)
+    };
+    let (mu1, v1) = fit(a);
+    let (mu2, v2) = fit(b);
+    let mut dist = 0.0;
+    for i in 0..d {
+        dist += (mu1[i] - mu2[i]).powi(2);
+        dist += v1[i] + v2[i] - 2.0 * (v1[i] * v2[i]).sqrt();
+    }
+    dist.max(0.0)
+}
+
+/// Pooled image feature: mean over tokens of (image @ encoder), living in
+/// the model's hidden space (the feature net of our FID/CLIP analogues).
+pub fn image_feature(image: &Tensor, encoder: &Tensor) -> Vec<f32> {
+    let feat = image.matmul(encoder).expect("encoder shape");
+    let (rows, h) = (feat.shape()[0], feat.shape()[1]);
+    let mut pooled = vec![0f32; h];
+    for r in 0..rows {
+        for (p, v) in pooled.iter_mut().zip(feat.row(r)) {
+            *p += v / rows as f32;
+        }
+    }
+    pooled
+}
+
+/// CLIP-score analogue: cosine(pooled output feature, conditioning).
+pub fn alignment_score(image: &Tensor, encoder: &Tensor, conditioning: &[f32]) -> f64 {
+    let feat = image_feature(image, encoder);
+    cosine(&feat, conditioning)
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+    let na: f64 = a.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na * nb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn img(hw: usize, c: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg::new(seed);
+        let mut t = Tensor::zeros(&[hw * hw, c]);
+        rng.fill_normal_f32(t.data_mut(), 0.4);
+        t.map_inplace(|v| v.tanh());
+        t
+    }
+
+    #[test]
+    fn ssim_identity_is_one() {
+        let a = img(8, 4, 1);
+        let s = ssim(&a, &a, 8, 4);
+        assert!((s - 1.0).abs() < 1e-9, "ssim {s}");
+    }
+
+    #[test]
+    fn ssim_decreases_with_noise() {
+        let a = img(8, 4, 1);
+        let mut slight = a.clone();
+        let mut rng = Pcg::new(2);
+        slight.map_inplace(|v| v + 0.05 * rng.normal() as f32);
+        let mut heavy = a.clone();
+        heavy.map_inplace(|v| v + 0.5 * rng.normal() as f32);
+        let s1 = ssim(&a, &slight, 8, 4);
+        let s2 = ssim(&a, &heavy, 8, 4);
+        assert!(s1 > s2, "slight {s1} heavy {s2}");
+        assert!(s1 > 0.7 && s2 < s1);
+    }
+
+    #[test]
+    fn ssim_symmetry() {
+        let a = img(8, 4, 3);
+        let b = img(8, 4, 4);
+        assert!((ssim(&a, &b, 8, 4) - ssim(&b, &a, 8, 4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frechet_zero_for_identical_sets() {
+        let set: Vec<Vec<f32>> = (0..20)
+            .map(|i| {
+                let mut rng = Pcg::new(i);
+                (0..8).map(|_| rng.normal() as f32).collect()
+            })
+            .collect();
+        assert!(frechet_distance(&set, &set) < 1e-9);
+    }
+
+    #[test]
+    fn frechet_grows_with_mean_shift() {
+        let base: Vec<Vec<f32>> = (0..50)
+            .map(|i| {
+                let mut rng = Pcg::new(i);
+                (0..8).map(|_| rng.normal() as f32).collect()
+            })
+            .collect();
+        let near: Vec<Vec<f32>> = base
+            .iter()
+            .map(|v| v.iter().map(|x| x + 0.1).collect())
+            .collect();
+        let far: Vec<Vec<f32>> = base
+            .iter()
+            .map(|v| v.iter().map(|x| x + 1.0).collect())
+            .collect();
+        let dn = frechet_distance(&base, &near);
+        let df = frechet_distance(&base, &far);
+        assert!(df > dn, "near {dn} far {df}");
+    }
+
+    #[test]
+    fn alignment_favors_matching_conditioning() {
+        let hw = 8;
+        let c = 4;
+        let h = 16;
+        let mut rng = Pcg::new(9);
+        let mut enc = Tensor::zeros(&[c, h]);
+        rng.fill_normal_f32(enc.data_mut(), 0.5);
+        let image = img(hw, c, 10);
+        let feat = image_feature(&image, &enc);
+        // conditioning equal to the feature scores ~1; random scores lower
+        let aligned = alignment_score(&image, &enc, &feat);
+        let mut other = vec![0f32; h];
+        rng.fill_normal_f32(&mut other, 1.0);
+        let misaligned = alignment_score(&image, &enc, &other);
+        assert!((aligned - 1.0).abs() < 1e-6);
+        assert!(misaligned < aligned);
+    }
+}

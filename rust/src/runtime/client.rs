@@ -1,0 +1,108 @@
+//! PJRT client wrapper: lazy compile + executable cache.
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO **text** -> HloModuleProto
+//! (the text parser reassigns instruction ids, sidestepping the 64-bit-id
+//! incompatibility between jax >= 0.5 protos and xla_extension 0.5.1) ->
+//! XlaComputation -> PJRT compile. Executables are cached by artifact
+//! name; compilation happens on first use so startup stays fast even
+//! though the grid holds ~40 programs per model.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Shared PJRT CPU client with an executable cache.
+pub struct Client {
+    client: PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<PjRtLoadedExecutable>>>,
+}
+
+// NOTE: no Send/Sync impls here on purpose. The xla crate's PjRtClient
+// wraps an `Rc`, whose refcount updates are not atomic — a Client must
+// stay on the thread that uses it. Each worker therefore owns a private
+// Client + ModelRuntime (see runtime::executor for the Send invariant).
+
+impl Client {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Client> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Client { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file, caching by `key`.
+    pub fn load_hlo(
+        &self,
+        key: &str,
+        path: &Path,
+    ) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(key) {
+            return Ok(std::sync::Arc::clone(exe));
+        }
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), std::sync::Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Upload a host f32 buffer to the device (for persistent weights).
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .context("uploading buffer")
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal shape {:?} vs len {}", dims, data.len());
+    let lit = Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64).context("reshaping literal")
+}
+
+/// Copy an output buffer back to host f32s.
+pub fn buffer_to_vec(buf: &PjRtBuffer) -> Result<Vec<f32>> {
+    let lit = buf.to_literal_sync().context("device->host copy")?;
+    lit.to_vec::<f32>().context("literal to f32 vec")
+}
+
+/// Unpack a 1-tuple result literal (lowering uses return_tuple=True).
+pub fn tuple1_to_vec(buf: &PjRtBuffer) -> Result<Vec<f32>> {
+    let lit = buf.to_literal_sync().context("device->host copy")?;
+    let inner = lit.to_tuple1().context("unwrapping 1-tuple")?;
+    inner.to_vec::<f32>().context("tuple elem to f32 vec")
+}
+
+/// Unpack an N-tuple result literal into vectors.
+pub fn tuple_to_vecs(buf: &PjRtBuffer) -> Result<Vec<Vec<f32>>> {
+    let lit = buf.to_literal_sync().context("device->host copy")?;
+    let parts = lit.to_tuple().context("unwrapping tuple")?;
+    parts
+        .into_iter()
+        .map(|p| p.to_vec::<f32>().context("tuple elem to f32 vec"))
+        .collect()
+}

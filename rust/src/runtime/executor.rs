@@ -1,0 +1,225 @@
+//! Block executor: the bridge between the coordinator's step loop and the
+//! AOT-compiled XLA programs.
+//!
+//! One `ModelRuntime` per (worker, model): it owns the PJRT client handle,
+//! the device-resident weights, and the schedule/embedding tables, and
+//! exposes typed `run_block_*` calls operating on host f32 slices. Data
+//! (activations) travel host->device per call — they change every step —
+//! while weights stay resident (see weights.rs).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+use xla::PjRtBuffer;
+
+use super::client::{buffer_to_vec, literal_f32, tuple_to_vecs, Client};
+use super::manifest::{ArtifactKind, Manifest, ModelManifest};
+use super::weights::{DeviceWeights, HostWeights};
+use crate::config::ModelConfig;
+use crate::model::Schedule;
+
+/// Executable handle + metadata for one grid entry.
+struct Program {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+}
+
+/// Per-model runtime: compiled programs + weights + schedule.
+pub struct ModelRuntime {
+    client: Arc<Client>,
+    manifest: ModelManifest,
+    pub config: ModelConfig,
+    batch_buckets: Vec<usize>,
+    host_weights: HostWeights,
+    device_weights: DeviceWeights,
+    schedule: Schedule,
+}
+
+// SAFETY: ModelRuntime transitively holds `Rc`-based PJRT handles, so it
+// is only sound to *move* a runtime (together with the sole Arc<Client>
+// strong reference it was built from) onto another thread and use it
+// exclusively there. The engine upholds this: each Worker constructs its
+// own Client + ModelRuntime pair via `ModelRuntime::create`, moves them
+// into the worker thread, and never shares them. Loader / pre-post
+// threads operate on plain host data only.
+unsafe impl Send for ModelRuntime {}
+
+impl ModelRuntime {
+    /// Construct a private client + runtime pair (the only safe way to
+    /// build a runtime that will move to a worker thread).
+    pub fn create(artifact_dir: &str, model: &str) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = Arc::new(Client::cpu()?);
+        ModelRuntime::load(client, &manifest, model)
+    }
+
+    /// Load a model runtime from the manifest (lazy program compilation).
+    pub fn load(client: Arc<Client>, manifest: &Manifest, model: &str) -> Result<ModelRuntime> {
+        let man = manifest.model(model)?.clone();
+        let config = man.config.clone();
+        let host_weights = HostWeights::load(&man)?;
+        let device_weights = DeviceWeights::upload(&client, &host_weights)?;
+        let schedule = Schedule::new(host_weights.sigmas.clone());
+        Ok(ModelRuntime {
+            client,
+            manifest: man,
+            config,
+            batch_buckets: manifest.batch_buckets.clone(),
+            host_weights,
+            device_weights,
+            schedule,
+        })
+    }
+
+    /// Smallest compiled batch bucket covering `b` members.
+    pub fn batch_bucket_for(&self, b: usize) -> usize {
+        for &bb in &self.batch_buckets {
+            if bb >= b {
+                return bb;
+            }
+        }
+        *self.batch_buckets.last().unwrap_or(&1)
+    }
+
+    /// Largest compiled batch bucket (engine max-batch clamp).
+    pub fn max_batch_bucket(&self) -> usize {
+        *self.batch_buckets.last().unwrap_or(&1)
+    }
+
+    pub fn schedule(&self) -> &Schedule {
+        &self.schedule
+    }
+
+    pub fn weights(&self) -> &HostWeights {
+        &self.host_weights
+    }
+
+    pub fn client(&self) -> &Arc<Client> {
+        &self.client
+    }
+
+    fn program(&self, kind: ArtifactKind, n: usize, batch: usize) -> Result<Program> {
+        let art = self.manifest.artifact(kind, n, batch)?;
+        let exe = self.client.load_hlo(&art.name, &art.file)?;
+        Ok(Program { exe })
+    }
+
+    /// Eagerly compile the programs a serving run will need (avoids
+    /// first-request compile latency in latency-sensitive benches).
+    pub fn warmup(&self, batches: &[usize]) -> Result<()> {
+        for &b in batches {
+            for n in self.config.all_token_counts() {
+                self.program(ArtifactKind::BlockY, n, b)?;
+            }
+            for &n in &self.config.token_buckets {
+                self.program(ArtifactKind::BlockKV, n, b)?;
+            }
+        }
+        self.program(ArtifactKind::BlockReg, self.config.tokens, 1)?;
+        Ok(())
+    }
+
+    /// Execute one cache-Y (or full, n == L) block.
+    ///
+    /// `x` is the packed `(batch, n, H)` compute-set input; returns the
+    /// block output in the same layout.
+    pub fn run_block_y(
+        &self,
+        block_idx: usize,
+        n: usize,
+        batch: usize,
+        x: &[f32],
+    ) -> Result<Vec<f32>> {
+        let h = self.config.hidden;
+        anyhow::ensure!(x.len() == batch * n * h, "run_block_y input shape");
+        let prog = self.program(ArtifactKind::BlockY, n, batch)?;
+        let x_buf = self.client.upload(x, &[batch, n, h])?;
+        let out = self.execute_with_weights(&prog, vec![x_buf], block_idx)?;
+        let mut parts = tuple_to_vecs(&out)?;
+        anyhow::ensure!(parts.len() == 1, "block_y returns 1-tuple");
+        Ok(parts.pop().unwrap())
+    }
+
+    /// Execute one cache-KV block: masked Q attends over computed K/V ++
+    /// cached unmasked K/V (`k_cache`/`v_cache`: `(batch, L - n, H)`).
+    pub fn run_block_kv(
+        &self,
+        block_idx: usize,
+        n: usize,
+        batch: usize,
+        x: &[f32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+    ) -> Result<Vec<f32>> {
+        let h = self.config.hidden;
+        let l = self.config.tokens;
+        anyhow::ensure!(x.len() == batch * n * h, "run_block_kv x shape");
+        anyhow::ensure!(
+            k_cache.len() == batch * (l - n) * h && v_cache.len() == k_cache.len(),
+            "run_block_kv cache shape"
+        );
+        let prog = self.program(ArtifactKind::BlockKV, n, batch)?;
+        let x_buf = self.client.upload(x, &[batch, n, h])?;
+        let k_buf = self.client.upload(k_cache, &[batch, l - n, h])?;
+        let v_buf = self.client.upload(v_cache, &[batch, l - n, h])?;
+        let out = self.execute_with_weights(&prog, vec![x_buf, k_buf, v_buf], block_idx)?;
+        let mut parts = tuple_to_vecs(&out)?;
+        anyhow::ensure!(parts.len() == 1, "block_kv returns 1-tuple");
+        Ok(parts.pop().unwrap())
+    }
+
+    /// Execute one registration block (batch 1, full sequence):
+    /// returns (y, k, v), each `(L, H)` flattened.
+    pub fn run_block_reg(&self, block_idx: usize, x: &[f32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let h = self.config.hidden;
+        let l = self.config.tokens;
+        anyhow::ensure!(x.len() == l * h, "run_block_reg input shape");
+        let prog = self.program(ArtifactKind::BlockReg, l, 1)?;
+        let x_buf = self.client.upload(x, &[1, l, h])?;
+        let out = self.execute_with_weights(&prog, vec![x_buf], block_idx)?;
+        let mut parts = tuple_to_vecs(&out)?;
+        anyhow::ensure!(parts.len() == 3, "block_reg returns (y, k, v)");
+        let v = parts.pop().unwrap();
+        let k = parts.pop().unwrap();
+        let y = parts.pop().unwrap();
+        Ok((y, k, v))
+    }
+
+    fn execute_with_weights(
+        &self,
+        prog: &Program,
+        data_args: Vec<PjRtBuffer>,
+        block_idx: usize,
+    ) -> Result<PjRtBuffer> {
+        let wbufs = &self.device_weights.blocks[block_idx];
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(data_args.len() + wbufs.len());
+        args.extend(data_args.iter());
+        args.extend(wbufs.iter());
+        let mut results = prog
+            .exe
+            .execute_b(&args)
+            .context("PJRT execute")?;
+        let mut replica = results
+            .pop()
+            .and_then(|mut r| if r.is_empty() { None } else { Some(r.remove(0)) })
+            .context("empty execution result")?;
+        // results is Vec<Vec<buffer>>: [replica][output]; tuple packing
+        // means a single output buffer.
+        let _ = &mut replica;
+        Ok(replica)
+    }
+
+    /// Upload helper for tests/benches.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client.upload(data, dims)
+    }
+
+    /// Fetch helper for tests/benches.
+    pub fn fetch(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        buffer_to_vec(buf)
+    }
+}
+
+/// Literal re-export for integration tests.
+pub fn make_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    literal_f32(data, dims)
+}

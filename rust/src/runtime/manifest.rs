@@ -1,0 +1,228 @@
+//! artifacts/manifest.json loading — the contract between the python
+//! compile path and the rust coordinator.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+/// Kind of a compiled block program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// Cache-Y / full block: x -> y over the compute set (n == L is the
+    /// standard full block).
+    BlockY,
+    /// Cache-KV block: (x, k_cache, v_cache) -> y.
+    BlockKV,
+    /// Registration block: x -> (y, k, v) at batch 1, full sequence.
+    BlockReg,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<ArtifactKind> {
+        Ok(match s {
+            "block_y" => ArtifactKind::BlockY,
+            "block_kv" => ArtifactKind::BlockKV,
+            "block_reg" => ArtifactKind::BlockReg,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One compiled HLO program in the grid.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: ArtifactKind,
+    pub n: usize,
+    pub batch: usize,
+}
+
+/// A named tensor inside the weights file.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Everything the runtime needs to know about one model.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub config: ModelConfig,
+    pub weights_file: PathBuf,
+    pub weights: Vec<WeightEntry>,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub block_weight_order: Vec<String>,
+}
+
+/// The parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+    pub batch_buckets: Vec<usize>,
+    pub image_channels: usize,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+
+        let block_weight_order: Vec<String> = v
+            .at("block_weight_order")
+            .as_arr()
+            .context("block_weight_order")?
+            .iter()
+            .filter_map(|x| x.as_str().map(String::from))
+            .collect();
+
+        let mut models = BTreeMap::new();
+        for (name, m) in v.at("models").as_obj().context("models")?.iter() {
+            let config = ModelConfig {
+                name: name.clone(),
+                latent_hw: m.at("latent_hw").as_usize().context("latent_hw")?,
+                tokens: m.at("tokens").as_usize().context("tokens")?,
+                hidden: m.at("hidden").as_usize().context("hidden")?,
+                heads: m.at("heads").as_usize().context("heads")?,
+                blocks: m.at("blocks").as_usize().context("blocks")?,
+                steps: m.at("steps").as_usize().context("steps")?,
+                token_buckets: m.at("token_buckets").usize_list(),
+                paper_analogue: m
+                    .at("paper_analogue")
+                    .as_str()
+                    .unwrap_or_default()
+                    .to_string(),
+            };
+            let weights = m
+                .at("weights")
+                .as_arr()
+                .context("weights")?
+                .iter()
+                .map(|w| {
+                    Ok(WeightEntry {
+                        name: w.at("name").as_str().context("w.name")?.to_string(),
+                        shape: w.at("shape").usize_list(),
+                        offset: w.at("offset").as_usize().context("w.offset")?,
+                        len: w.at("len").as_usize().context("w.len")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let artifacts = m
+                .at("artifacts")
+                .as_arr()
+                .context("artifacts")?
+                .iter()
+                .map(|a| {
+                    Ok(ArtifactEntry {
+                        name: a.at("name").as_str().context("a.name")?.to_string(),
+                        file: dir.join(a.at("file").as_str().context("a.file")?),
+                        kind: ArtifactKind::parse(a.at("kind").as_str().context("a.kind")?)?,
+                        n: a.at("n").as_usize().context("a.n")?,
+                        batch: a.at("batch").as_usize().context("a.batch")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    config,
+                    weights_file: dir.join(
+                        m.at("weights_file").as_str().context("weights_file")?,
+                    ),
+                    weights,
+                    artifacts,
+                    block_weight_order: block_weight_order.clone(),
+                },
+            );
+        }
+        Ok(Manifest {
+            dir,
+            models,
+            batch_buckets: v.at("batch_buckets").usize_list(),
+            image_channels: v.at("image_channels").as_usize().unwrap_or(4),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name:?} not in manifest"))
+    }
+
+    /// Smallest batch bucket covering `b`.
+    pub fn batch_bucket_for(&self, b: usize) -> usize {
+        for &bb in &self.batch_buckets {
+            if bb >= b {
+                return bb;
+            }
+        }
+        *self.batch_buckets.last().unwrap_or(&1)
+    }
+}
+
+impl ModelManifest {
+    /// Find the artifact for (kind, n, batch).
+    pub fn artifact(&self, kind: ArtifactKind, n: usize, batch: usize) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.n == n && a.batch == batch)
+            .with_context(|| {
+                format!(
+                    "no artifact kind={kind:?} n={n} batch={batch} for {}",
+                    self.config.name
+                )
+            })
+    }
+
+    pub fn weight(&self, name: &str) -> Result<&WeightEntry> {
+        self.weights
+            .iter()
+            .find(|w| w.name == name)
+            .with_context(|| format!("weight {name:?} missing"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Unit-level parse check against a synthetic manifest (integration
+    /// tests in rust/tests/ cover the real artifacts/ directory).
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join(format!("ig-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = r#"{
+          "version": 3, "image_channels": 4, "batch_buckets": [1, 2, 4, 8],
+          "block_weight_order": ["ln1_g", "wq"],
+          "models": {"tiny": {
+            "latent_hw": 4, "tokens": 16, "hidden": 8, "heads": 2,
+            "blocks": 2, "steps": 3, "token_buckets": [2, 4, 8],
+            "paper_analogue": "test", "weights_file": "w.bin",
+            "weights": [{"name": "block0.wq", "shape": [8, 8], "offset": 0, "len": 64}],
+            "artifacts": [{"name": "a", "file": "a.hlo.txt",
+                           "kind": "block_y", "n": 4, "batch": 2}]
+          }}}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        assert_eq!(man.batch_bucket_for(3), 4);
+        assert_eq!(man.batch_bucket_for(9), 8); // saturates at max bucket
+        let m = man.model("tiny").unwrap();
+        assert_eq!(m.config.tokens, 16);
+        assert!(m.artifact(ArtifactKind::BlockY, 4, 2).is_ok());
+        assert!(m.artifact(ArtifactKind::BlockKV, 4, 2).is_err());
+        assert_eq!(m.weight("block0.wq").unwrap().len, 64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

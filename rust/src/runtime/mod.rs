@@ -1,0 +1,11 @@
+//! Runtime layer: PJRT client, manifest/artifact registry, weights, and
+//! the block executor (start point: /opt/xla-example/load_hlo).
+
+pub mod client;
+pub mod executor;
+pub mod manifest;
+pub mod weights;
+
+pub use client::Client;
+pub use executor::ModelRuntime;
+pub use manifest::{ArtifactKind, Manifest, ModelManifest};

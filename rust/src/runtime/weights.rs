@@ -1,0 +1,92 @@
+//! Weights loading: artifacts/weights_<model>.bin -> host tensors +
+//! persistent device buffers.
+//!
+//! The flat little-endian f32 stream is indexed by the manifest's layout
+//! entries; per-block weights are uploaded to the PJRT device **once** at
+//! startup and passed to every block execution as `PjRtBuffer`s, so the
+//! hot path never re-copies weights host->device.
+
+use anyhow::{Context, Result};
+use xla::PjRtBuffer;
+
+use super::client::Client;
+use super::manifest::ModelManifest;
+use crate::util::tensor::Tensor;
+
+/// Host-side copy of everything in the weights file.
+pub struct HostWeights {
+    /// Per block: tensors in manifest block_weight_order.
+    pub blocks: Vec<Vec<Tensor>>,
+    /// (steps, H) timestep-embedding table.
+    pub temb: Tensor,
+    /// (steps + 1,) sigma schedule.
+    pub sigmas: Vec<f32>,
+    /// (H, C) VAE-analogue decoder.
+    pub decoder: Tensor,
+    /// (C, H) VAE-analogue encoder.
+    pub encoder: Tensor,
+}
+
+impl HostWeights {
+    /// Read and slice the weights file per the manifest layout.
+    pub fn load(man: &ModelManifest) -> Result<HostWeights> {
+        let bytes = std::fs::read(&man.weights_file)
+            .with_context(|| format!("reading {:?}", man.weights_file))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "weights file not f32-aligned");
+        let mut data = vec![0f32; bytes.len() / 4];
+        for (i, ch) in bytes.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        }
+
+        let slice_of = |name: &str| -> Result<Tensor> {
+            let e = man.weight(name)?;
+            anyhow::ensure!(
+                e.offset + e.len <= data.len(),
+                "weight {name} out of bounds"
+            );
+            Tensor::from_vec(&e.shape, data[e.offset..e.offset + e.len].to_vec())
+        };
+
+        let mut blocks = Vec::with_capacity(man.config.blocks);
+        for b in 0..man.config.blocks {
+            let mut ws = Vec::with_capacity(man.block_weight_order.len());
+            for wname in &man.block_weight_order {
+                ws.push(slice_of(&format!("block{b}.{wname}"))?);
+            }
+            blocks.push(ws);
+        }
+        Ok(HostWeights {
+            blocks,
+            temb: slice_of("temb")?,
+            sigmas: slice_of("sigmas")?.into_vec(),
+            decoder: slice_of("decoder")?,
+            encoder: slice_of("encoder")?,
+        })
+    }
+
+    /// Timestep-embedding row for denoise step `t`.
+    pub fn temb_row(&self, t: usize) -> &[f32] {
+        self.temb.row(t)
+    }
+}
+
+/// Device-resident per-block weight buffers.
+pub struct DeviceWeights {
+    /// blocks[b] = the 12 weight buffers in block_weight_order.
+    pub blocks: Vec<Vec<PjRtBuffer>>,
+}
+
+impl DeviceWeights {
+    /// Upload every block's weights once.
+    pub fn upload(client: &Client, host: &HostWeights) -> Result<DeviceWeights> {
+        let mut blocks = Vec::with_capacity(host.blocks.len());
+        for ws in &host.blocks {
+            let mut bufs = Vec::with_capacity(ws.len());
+            for t in ws {
+                bufs.push(client.upload(t.data(), t.shape())?);
+            }
+            blocks.push(bufs);
+        }
+        Ok(DeviceWeights { blocks })
+    }
+}

@@ -1,0 +1,277 @@
+//! Cluster request scheduling — paper §4.4, Algorithm 2, plus the
+//! baselines it is evaluated against (§6.5).
+//!
+//! The scheduler tracks, per worker, the *outstanding* requests (queued +
+//! running) it has dispatched; completions retire them. The mask-aware
+//! policy estimates each candidate worker's completion latency by pushing
+//! the hypothetical batch through the same regression models + pipeline
+//! DP the workers use (Algo 2 extends Algo 1), and routes to the minimum.
+
+use crate::cache::pipeline;
+use crate::cache::LatencyModel;
+use crate::config::{CacheMode, ModelConfig};
+
+/// One dispatched-but-unfinished request, as the scheduler sees it.
+#[derive(Debug, Clone)]
+pub struct Outstanding {
+    pub id: u64,
+    pub masked_tokens: usize,
+    pub remaining_steps: usize,
+}
+
+/// Per-worker outstanding sets (indexed by worker id).
+pub type Book = [Vec<Outstanding>];
+
+/// A routing policy.
+pub trait Scheduler: Send {
+    fn name(&self) -> &'static str;
+
+    /// Choose a worker for `req` given the current book.
+    fn pick(&mut self, req: &Outstanding, book: &Book) -> usize;
+}
+
+/// Round-robin (the weakest baseline; also used by Diffusers deployments).
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin { next: 0 }
+    }
+}
+
+impl Default for RoundRobin {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn pick(&mut self, _req: &Outstanding, book: &Book) -> usize {
+        let w = self.next % book.len();
+        self.next = self.next.wrapping_add(1);
+        w
+    }
+}
+
+/// Request-granularity load balance: fewest outstanding requests (§6.5
+/// baseline; what LLM routers call least-requests).
+pub struct LeastRequests;
+
+impl Scheduler for LeastRequests {
+    fn name(&self) -> &'static str {
+        "request-lb"
+    }
+
+    fn pick(&mut self, _req: &Outstanding, book: &Book) -> usize {
+        (0..book.len()).min_by_key(|&w| book[w].len()).unwrap_or(0)
+    }
+}
+
+/// Token-granularity load balance: fewest outstanding masked tokens
+/// (§6.5 baseline; least-tokens in LLM serving).
+pub struct LeastTokens;
+
+impl Scheduler for LeastTokens {
+    fn name(&self) -> &'static str {
+        "token-lb"
+    }
+
+    fn pick(&mut self, _req: &Outstanding, book: &Book) -> usize {
+        (0..book.len())
+            .min_by_key(|&w| {
+                book[w]
+                    .iter()
+                    .map(|o| o.masked_tokens * o.remaining_steps)
+                    .sum::<usize>()
+            })
+            .unwrap_or(0)
+    }
+}
+
+/// Mask-aware scheduling (Algorithm 2): cost = estimated completion
+/// latency of the worker's backlog with the new request included, using
+/// the calibrated regression models and the pipeline DP.
+pub struct MaskAware {
+    cfg: ModelConfig,
+    lat: LatencyModel,
+    mode: CacheMode,
+    max_batch: usize,
+}
+
+impl MaskAware {
+    pub fn new(cfg: ModelConfig, lat: LatencyModel, mode: CacheMode, max_batch: usize) -> MaskAware {
+        MaskAware { cfg, lat, mode, max_batch }
+    }
+
+    /// Algo 2's CalcCost: simulate the backlog in admission order as
+    /// batches of up to `max_batch`, scoring each batch's steps with the
+    /// DP step latency (Algo 1 on estimated costs).
+    pub fn calc_cost(&self, backlog: &[Outstanding]) -> f64 {
+        if backlog.is_empty() {
+            return 0.0;
+        }
+        let mut cost = 0.0;
+        for chunk in backlog.chunks(self.max_batch) {
+            let n = chunk
+                .iter()
+                .map(|o| self.cfg.bucket_for(o.masked_tokens))
+                .max()
+                .unwrap_or(self.cfg.tokens);
+            let steps = chunk.iter().map(|o| o.remaining_steps).max().unwrap_or(0);
+            let step_latency = if n >= self.cfg.tokens {
+                pipeline::full_latency(&self.lat.step_costs(
+                    &self.cfg,
+                    self.cfg.tokens,
+                    chunk.len(),
+                    self.mode,
+                ))
+            } else {
+                pipeline::plan(&self.lat.step_costs(&self.cfg, n, chunk.len(), self.mode))
+                    .latency
+            };
+            cost += step_latency * steps as f64;
+        }
+        cost
+    }
+}
+
+impl Scheduler for MaskAware {
+    fn name(&self) -> &'static str {
+        "mask-aware"
+    }
+
+    fn pick(&mut self, req: &Outstanding, book: &Book) -> usize {
+        let mut best = 0;
+        let mut best_cost = f64::INFINITY;
+        for (w, outstanding) in book.iter().enumerate() {
+            let mut hypo = outstanding.clone();
+            hypo.push(req.clone());
+            let cost = self.calc_cost(&hypo);
+            if cost < best_cost {
+                best_cost = cost;
+                best = w;
+            }
+        }
+        best
+    }
+}
+
+/// Construct a scheduler by name (CLI / bench plumbing).
+pub fn by_name(
+    name: &str,
+    cfg: &ModelConfig,
+    lat: &LatencyModel,
+    mode: CacheMode,
+    max_batch: usize,
+) -> Option<Box<dyn Scheduler>> {
+    match name {
+        "round-robin" => Some(Box::new(RoundRobin::new())),
+        "request-lb" => Some(Box::new(LeastRequests)),
+        "token-lb" => Some(Box::new(LeastTokens)),
+        "mask-aware" => Some(Box::new(MaskAware::new(
+            cfg.clone(),
+            lat.clone(),
+            mode,
+            max_batch,
+        ))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Pcg;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            latent_hw: 8,
+            tokens: 64,
+            hidden: 64,
+            heads: 4,
+            blocks: 4,
+            steps: 8,
+            token_buckets: vec![4, 8, 16, 32],
+            paper_analogue: String::new(),
+        }
+    }
+
+    fn o(id: u64, masked: usize) -> Outstanding {
+        Outstanding { id, masked_tokens: masked, remaining_steps: 8 }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut s = RoundRobin::new();
+        let book = vec![vec![], vec![], vec![]];
+        let picks: Vec<usize> = (0..6).map(|i| s.pick(&o(i, 4), &book)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_requests_balances_counts() {
+        let mut s = LeastRequests;
+        let book = vec![vec![o(1, 4), o(2, 4)], vec![o(3, 4)], vec![]];
+        assert_eq!(s.pick(&o(9, 4), &book), 2);
+    }
+
+    #[test]
+    fn least_tokens_prefers_light_worker() {
+        let mut s = LeastTokens;
+        // worker 0 has 1 big request, worker 1 has 2 small ones
+        let book = vec![vec![o(1, 32)], vec![o(2, 2), o(3, 2)]];
+        assert_eq!(s.pick(&o(9, 4), &book), 1);
+    }
+
+    #[test]
+    fn mask_aware_sees_through_request_counts() {
+        // request-count LB would pick worker 1 (1 outstanding vs 2), but
+        // its single huge-mask request costs more than two tiny ones —
+        // the mask-aware policy must pick worker 0.
+        let mut s = MaskAware::new(cfg(), LatencyModel::nominal(1e9, 1e8), CacheMode::CacheY, 8);
+        let book = vec![vec![o(1, 2), o(2, 2)], vec![o(3, 64)]];
+        assert_eq!(s.pick(&o(9, 2), &book), 0);
+        let mut lr = LeastRequests;
+        assert_eq!(lr.pick(&o(9, 2), &book), 1);
+    }
+
+    #[test]
+    fn mask_aware_cost_monotone_in_backlog() {
+        prop_check("adding requests never lowers cost", 100, |rng: &mut Pcg| {
+            let s = MaskAware::new(cfg(), LatencyModel::nominal(1e9, 1e8), CacheMode::CacheY, 8);
+            let mut backlog: Vec<Outstanding> = (0..rng.below(10))
+                .map(|i| o(i as u64, 1 + rng.below(64)))
+                .collect();
+            let before = s.calc_cost(&backlog);
+            backlog.push(o(99, 1 + rng.below(64)));
+            let after = s.calc_cost(&backlog);
+            prop_assert!(after >= before - 1e-12, "cost dropped {before} -> {after}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_backlog_costs_zero() {
+        let s = MaskAware::new(cfg(), LatencyModel::nominal(1e9, 1e8), CacheMode::CacheY, 8);
+        assert_eq!(s.calc_cost(&[]), 0.0);
+    }
+
+    #[test]
+    fn by_name_covers_all() {
+        let c = cfg();
+        let l = LatencyModel::nominal(1e9, 1e8);
+        for n in ["round-robin", "request-lb", "token-lb", "mask-aware"] {
+            assert!(by_name(n, &c, &l, CacheMode::CacheY, 8).is_some(), "{n}");
+        }
+        assert!(by_name("nope", &c, &l, CacheMode::CacheY, 8).is_none());
+    }
+}

@@ -1,0 +1,145 @@
+//! Minimal HTTP/1.1 frontend (the paper's FastAPI analogue; DESIGN.md
+//! "Offline-crate substitution").
+//!
+//! Endpoints:
+//! - `POST /edit`  body `{"template": "tpl-0", "mask_ratio": 0.15,
+//!   "prompt_seed": 7}` — routes through the cluster scheduler, blocks
+//!   until the edit completes, returns timing + image stats as JSON.
+//! - `GET /stats` — completed count + uptime.
+//! - `GET /healthz` — liveness.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::Cluster;
+use crate::engine::request::EditRequest;
+use crate::model::MaskSpec;
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+
+/// Serve a cluster over HTTP until the process is killed.
+pub struct HttpServer {
+    cluster: Arc<Cluster>,
+    next_id: AtomicU64,
+}
+
+impl HttpServer {
+    pub fn new(cluster: Arc<Cluster>, first_id: u64) -> HttpServer {
+        HttpServer { cluster, next_id: AtomicU64::new(first_id) }
+    }
+
+    /// Bind and serve (blocking). One thread per connection — fine for a
+    /// control-plane frontend; the data plane is the worker engine.
+    pub fn serve(self: Arc<Self>, addr: &str) -> Result<()> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        eprintln!("[http] listening on {addr}");
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let this = Arc::clone(&self);
+            std::thread::spawn(move || {
+                let _ = this.handle(stream);
+            });
+        }
+        Ok(())
+    }
+
+    fn handle(&self, mut stream: TcpStream) -> Result<()> {
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        let (method, path, body) = read_request(&mut stream)?;
+        let (status, reply) = self.route(&method, &path, &body);
+        write_response(&mut stream, status, &reply.to_string())
+    }
+
+    /// Route a request (separated from IO for unit testing).
+    pub fn route(&self, method: &str, path: &str, body: &str) -> (u16, Json) {
+        match (method, path) {
+            ("GET", "/healthz") => (200, Json::obj(vec![("ok", Json::Bool(true))])),
+            ("GET", "/stats") => (
+                200,
+                Json::obj(vec![
+                    ("completed", Json::num(self.cluster.completed() as f64)),
+                    ("uptime_secs", Json::num(self.cluster.elapsed())),
+                    ("workers", Json::num(self.cluster.workers() as f64)),
+                ]),
+            ),
+            ("POST", "/edit") => match self.edit(body) {
+                Ok(j) => (200, j),
+                Err(e) => (400, Json::obj(vec![("error", Json::str(e.to_string()))])),
+            },
+            _ => (404, Json::obj(vec![("error", Json::str("not found"))])),
+        }
+    }
+
+    fn edit(&self, body: &str) -> Result<Json> {
+        let j = Json::parse(body).context("invalid JSON body")?;
+        let template = j.at("template").as_str().unwrap_or("tpl-0").to_string();
+        let ratio = j.at("mask_ratio").as_f64().unwrap_or(0.15).clamp(0.001, 1.0);
+        let seed = j.at("prompt_seed").as_f64().unwrap_or(0.0) as u64;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+
+        let hw = self.cluster.model.latent_hw;
+        let mut rng = Pcg::with_stream(seed, 0x6d61_736b);
+        let mask = MaskSpec::synth(hw, ratio, &mut rng);
+        let req = EditRequest::new(id, template, mask, seed);
+        let before = self.cluster.completed();
+        let worker = self.cluster.submit(req);
+        // block until our response count grows past the id (simple
+        // rendezvous: the frontend is synchronous per connection)
+        let ok = self
+            .cluster
+            .await_completed(before + 1, Duration::from_secs(120));
+        anyhow::ensure!(ok, "edit timed out");
+        Ok(Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("worker", Json::num(worker as f64)),
+            ("completed", Json::num(self.cluster.completed() as f64)),
+        ]))
+    }
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("/").to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_length.min(1 << 20)];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok((method, path, String::from_utf8_lossy(&body).into_owned()))
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Tiny CLI flag parser (offline substitute for `clap`).
+//!
+//! Grammar: `instgenie <subcommand> [--flag value] [--switch]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut it = raw.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                // `--k=v`, `--k v`, or bare switch `--k`
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Args { command, flags, positional }
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, k: &str, default: &str) -> String {
+        self.flags.get(k).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn f64(&self, k: &str, default: f64) -> f64 {
+        self.flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize(&self, k: &str, default: usize) -> usize {
+        self.flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, k: &str, default: u64) -> u64 {
+        self.flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, k: &str) -> bool {
+        matches!(self.flags.get(k).map(String::as_str), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("serve --model fluxm --rps 2.5 --workers 4 --disagg");
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.str("model", "x"), "fluxm");
+        assert_eq!(a.f64("rps", 0.0), 2.5);
+        assert_eq!(a.usize("workers", 0), 4);
+        assert!(a.bool("disagg"));
+        assert!(!a.bool("missing"));
+    }
+
+    #[test]
+    fn equals_syntax_and_positional() {
+        let a = parse("bench --mode=static trace.jsonl");
+        assert_eq!(a.str("mode", ""), "static");
+        assert_eq!(a.positional, vec!["trace.jsonl"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("serve");
+        assert_eq!(a.usize("workers", 8), 8);
+        assert_eq!(a.str("model", "sdxlm"), "sdxlm");
+    }
+}

@@ -1,0 +1,13 @@
+//! In-tree substrates (DESIGN.md "Offline-crate substitution"): the cargo
+//! registry available in this environment only carries the `xla` crate's
+//! dependency closure, so the pieces a serving system would normally pull
+//! from crates.io are implemented here, each with its own tests.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tensor;

@@ -1,0 +1,142 @@
+//! Fixed-size worker thread pool (offline substitute for tokio's blocking
+//! pool). Used for the disaggregated pre/post-processing of §4.3: the
+//! denoising step-loop thread never runs CPU-bound image work itself; it
+//! submits jobs here and receives completions over channels.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of named worker threads.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers named `<name>-<i>`.
+    pub fn new(name: &str, size: usize) -> ThreadPool {
+        assert!(size > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                queued.fetch_sub(1, Ordering::Relaxed);
+                            }
+                            Err(_) => break, // pool dropped
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, queued }
+    }
+
+    /// Submit a job; never blocks.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.queued.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(job))
+            .expect("pool workers alive");
+    }
+
+    /// Jobs submitted but not yet finished (approximate; for backpressure).
+    pub fn in_flight(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers drain then exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// One-shot result slot: submit work to a pool, await the value elsewhere.
+pub struct Promise<T> {
+    rx: Receiver<T>,
+}
+
+impl<T: Send + 'static> Promise<T> {
+    /// Run `f` on `pool`, returning a promise for its result.
+    pub fn spawn<F>(pool: &ThreadPool, f: F) -> Promise<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        pool.submit(move || {
+            let _ = tx.send(f());
+        });
+        Promise { rx }
+    }
+
+    /// Block until the result is ready.
+    pub fn wait(self) -> T {
+        self.rx.recv().expect("promise completed")
+    }
+
+    /// Non-blocking poll.
+    pub fn try_take(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new("t", 4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn promise_returns_value() {
+        let pool = ThreadPool::new("p", 2);
+        let p = Promise::spawn(&pool, || 21 * 2);
+        assert_eq!(p.wait(), 42);
+    }
+
+    #[test]
+    fn promises_run_concurrently() {
+        let pool = ThreadPool::new("c", 2);
+        let t0 = std::time::Instant::now();
+        let a = Promise::spawn(&pool, || std::thread::sleep(std::time::Duration::from_millis(50)));
+        let b = Promise::spawn(&pool, || std::thread::sleep(std::time::Duration::from_millis(50)));
+        a.wait();
+        b.wait();
+        assert!(t0.elapsed() < std::time::Duration::from_millis(95));
+    }
+}

@@ -1,0 +1,81 @@
+//! Randomized property-testing driver (offline substitute for `proptest`).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check("routing conserves requests", 200, |rng| {
+//!     let n = 1 + rng.below(50);
+//!     /* build random input, assert invariant, return Ok(()) or Err(msg) */
+//!     Ok(())
+//! });
+//! ```
+//! On failure it reports the failing case's seed so the case replays
+//! deterministically (`PROP_SEED=<seed>` env var re-runs just that case).
+
+use crate::util::rng::Pcg;
+
+/// Run `cases` random cases of a property; panics with the failing seed.
+pub fn prop_check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Pcg) -> Result<(), String>,
+{
+    // replay mode: run a single seed
+    if let Ok(seed) = std::env::var("PROP_SEED") {
+        if let Ok(seed) = seed.parse::<u64>() {
+            let mut rng = Pcg::new(seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!("property {name:?} failed on replay seed {seed}: {msg}");
+            }
+            return;
+        }
+    }
+    let base = 0x5eed_0000u64;
+    for case in 0..cases {
+        let seed = base + case as u64;
+        let mut rng = Pcg::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed}): {msg}\n\
+                 replay with PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Assertion helper producing `Result<(), String>` for `prop_check`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_for_true_property() {
+        prop_check("sorting is idempotent", 50, |rng| {
+            let mut v: Vec<u32> = (0..rng.below(20)).map(|_| rng.next_u32()).collect();
+            v.sort_unstable();
+            let w = {
+                let mut w = v.clone();
+                w.sort_unstable();
+                w
+            };
+            prop_assert!(v == w, "idempotence violated");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with PROP_SEED=")]
+    fn fails_with_seed_report() {
+        prop_check("always fails eventually", 10, |rng| {
+            prop_assert!(rng.f64() < 0.5, "coin came up heads");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,176 @@
+//! Statistics kit: percentiles, summaries, least-squares regression, R².
+//!
+//! Used by the metrics recorder (latency percentiles), the latency models
+//! of §4.4 (linear regression + R², Fig. 11) and the bench harness.
+
+/// Percentile of a sample (linear interpolation, p in [0, 100]).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let p = p.clamp(0.0, 100.0);
+    let idx = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = idx - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Summary of a latency sample.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: s.len(),
+            mean: mean(&s),
+            p50: percentile(&s, 50.0),
+            p95: percentile(&s, 95.0),
+            p99: percentile(&s, 99.0),
+            min: s[0],
+            max: *s.last().unwrap(),
+        }
+    }
+}
+
+/// Ordinary least squares fit `y = a * x + b` with R².
+///
+/// The paper's latency models (§4.4) are linear in FLOPs / bytes derived
+/// from the mask ratio (Table 1); Fig. 11 reports R² = 0.99.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearFit {
+    pub slope: f64,
+    pub intercept: f64,
+    pub r2: f64,
+}
+
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> LinearFit {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need >= 2 points");
+    let n = xs.len() as f64;
+    let mx = mean(xs);
+    let my = mean(ys);
+    let sxx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let slope = if sxx.abs() < 1e-30 { 0.0 } else { sxy / sxx };
+    let intercept = my - slope * mx;
+    let ss_tot: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| (y - (slope * x + intercept)).powi(2))
+        .sum();
+    let r2 = if ss_tot.abs() < 1e-30 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    let _ = n;
+    LinearFit { slope, intercept, r2 }
+}
+
+impl LinearFit {
+    pub fn predict(&self, x: f64) -> f64 {
+        self.slope * x + self.intercept
+    }
+}
+
+/// Least squares with a non-negative intercept — latency models must not
+/// predict negative (or zero) time for small shapes where fixed dispatch
+/// overhead dominates. When plain OLS yields a negative intercept, the
+/// intercept is floored at the smallest observed sample and the slope is
+/// refit through that floor.
+pub fn linear_fit_nonneg(xs: &[f64], ys: &[f64]) -> LinearFit {
+    let fit = linear_fit(xs, ys);
+    if fit.intercept >= 0.0 {
+        return fit;
+    }
+    let b = ys.iter().cloned().fold(f64::INFINITY, f64::min).max(0.0);
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * (y - b)).sum();
+    let slope = if sxx.abs() < 1e-30 { 0.0 } else { (sxy / sxx).max(0.0) };
+    let my = mean(ys);
+    let ss_tot: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| (y - (slope * x + b)).powi(2))
+        .sum();
+    let r2 = if ss_tot.abs() < 1e-30 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    LinearFit { slope, intercept: b, r2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 1.0).collect();
+        let fit = linear_fit(&xs, &ys);
+        assert!((fit.slope - 3.0).abs() < 1e-9);
+        assert!((fit.intercept - 1.0).abs() < 1e-9);
+        assert!((fit.r2 - 1.0).abs() < 1e-12);
+        assert!((fit.predict(20.0) - 61.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_fit_noisy_r2_below_one() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| 2.0 * x + if i % 2 == 0 { 5.0 } else { -5.0 })
+            .collect();
+        let fit = linear_fit(&xs, &ys);
+        assert!(fit.r2 < 1.0);
+        assert!(fit.r2 > 0.9); // signal dominates
+    }
+}

@@ -1,0 +1,189 @@
+//! Host-side f32 tensor: shaped storage for latents, activation caches and
+//! quality metrics. Deliberately small — the heavy math runs in XLA; this
+//! type covers packing/gather/scatter on the coordinator hot path plus the
+//! host-side VAE-analogue matmuls in pre/post-processing.
+
+use anyhow::{bail, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Row view for a 2-D tensor (rows, cols).
+    pub fn row(&self, r: usize) -> &[f32] {
+        let cols = *self.shape.last().unwrap();
+        &self.data[r * cols..(r + 1) * cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let cols = *self.shape.last().unwrap();
+        &mut self.data[r * cols..(r + 1) * cols]
+    }
+
+    /// Gather rows of a 2-D tensor into `out` (len(ids) x cols).
+    pub fn gather_rows_into(&self, ids: &[usize], out: &mut [f32]) {
+        let cols = *self.shape.last().unwrap();
+        debug_assert_eq!(out.len(), ids.len() * cols);
+        for (i, &id) in ids.iter().enumerate() {
+            out[i * cols..(i + 1) * cols]
+                .copy_from_slice(&self.data[id * cols..(id + 1) * cols]);
+        }
+    }
+
+    /// Scatter rows from `src` (len(ids) x cols) into this 2-D tensor.
+    pub fn scatter_rows_from(&mut self, ids: &[usize], src: &[f32]) {
+        let cols = *self.shape.last().unwrap();
+        debug_assert_eq!(src.len(), ids.len() * cols);
+        for (i, &id) in ids.iter().enumerate() {
+            self.data[id * cols..(id + 1) * cols]
+                .copy_from_slice(&src[i * cols..(i + 1) * cols]);
+        }
+    }
+
+    /// `self (R x K) @ other (K x C)` — host matmul for VAE-analogue
+    /// encode/decode in pre/post-processing (deliberately CPU work,
+    /// mirroring the paper's CPU-intensive image processing).
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        let (r, k) = match self.shape[..] {
+            [r, k] => (r, k),
+            _ => bail!("matmul lhs must be 2-D, got {:?}", self.shape),
+        };
+        let (k2, c) = match other.shape[..] {
+            [k2, c] => (k2, c),
+            _ => bail!("matmul rhs must be 2-D, got {:?}", other.shape),
+        };
+        if k != k2 {
+            bail!("matmul inner dims {k} vs {k2}");
+        }
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let o_row = &mut out[i * c..(i + 1) * c];
+            for (kk, &a) in a_row.iter().enumerate() {
+                let b_row = &other.data[kk * c..(kk + 1) * c];
+                for (o, &b) in o_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor::from_vec(&[r, c], out)
+    }
+
+    /// Elementwise `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn map_inplace(&mut self, mut f: impl FnMut(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// Maximum absolute difference (test helper / quality metrics).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked_construction() {
+        assert!(Tensor::from_vec(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::from_vec(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn gather_scatter_round_trip() {
+        let t = Tensor::from_vec(&[4, 2], (0..8).map(|x| x as f32).collect()).unwrap();
+        let ids = [2usize, 0];
+        let mut buf = vec![0.0; 4];
+        t.gather_rows_into(&ids, &mut buf);
+        assert_eq!(buf, vec![4.0, 5.0, 0.0, 1.0]);
+        let mut t2 = Tensor::zeros(&[4, 2]);
+        t2.scatter_rows_from(&ids, &buf);
+        assert_eq!(t2.row(2), &[4.0, 5.0]);
+        assert_eq!(t2.row(0), &[0.0, 1.0]);
+        assert_eq!(t2.row(1), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_shape_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn axpy_and_map() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::from_vec(&[3], vec![1.0, 1.0, 1.0]).unwrap();
+        a.axpy(2.0, &b);
+        assert_eq!(a.data(), &[3.0, 4.0, 5.0]);
+        a.map_inplace(|x| x * 0.5);
+        assert_eq!(a.data(), &[1.5, 2.0, 2.5]);
+    }
+}

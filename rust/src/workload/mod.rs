@@ -1,0 +1,269 @@
+//! Workload synthesis — the paper's §2.2 characterization as generators.
+//!
+//! Mask-ratio distributions are Beta fits matching the trace statistics of
+//! Fig. 3 (production mean 0.11, public trace [37] mean 0.19, VITON-HD
+//! mean 0.35; all strongly right-skewed). Arrivals are Poisson (§6.1).
+//! Template selection is heavily skewed (the production trace reuses 970
+//! templates ~35 000 times each), modelled with a Zipf-like draw.
+
+use std::time::Duration;
+
+use crate::model::MaskSpec;
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+
+/// Mask-ratio distribution family (paper Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MaskDist {
+    /// Production face-swap trace: mean 0.11, long right tail.
+    Production,
+    /// Public trace [37]: mean 0.19.
+    PublicTrace,
+    /// VITON-HD virtual try-on benchmark: mean 0.35.
+    VitonHD,
+    /// Degenerate (kernel-sweep benches).
+    Fixed(f64),
+    /// Uniform in [lo, hi] (ablation stress).
+    Uniform(f64, f64),
+}
+
+impl MaskDist {
+    pub fn parse(s: &str) -> Option<MaskDist> {
+        match s {
+            "production" => Some(MaskDist::Production),
+            "public" => Some(MaskDist::PublicTrace),
+            "viton" => Some(MaskDist::VitonHD),
+            other => other.parse::<f64>().ok().map(MaskDist::Fixed),
+        }
+    }
+
+    /// Beta parameters matching the trace mean + skew.
+    fn beta_params(&self) -> Option<(f64, f64)> {
+        match self {
+            MaskDist::Production => Some((1.1, 8.9)),  // mean 0.110
+            MaskDist::PublicTrace => Some((1.3, 5.54)), // mean 0.190
+            MaskDist::VitonHD => Some((2.2, 4.086)),    // mean 0.350
+            _ => None,
+        }
+    }
+
+    /// Nominal mean of the distribution.
+    pub fn mean(&self) -> f64 {
+        match self {
+            MaskDist::Fixed(m) => *m,
+            MaskDist::Uniform(lo, hi) => 0.5 * (lo + hi),
+            d => {
+                let (a, b) = d.beta_params().unwrap();
+                a / (a + b)
+            }
+        }
+    }
+
+    /// Sample a mask ratio in (0, 1].
+    pub fn sample(&self, rng: &mut Pcg) -> f64 {
+        let r = match self {
+            MaskDist::Fixed(m) => *m,
+            MaskDist::Uniform(lo, hi) => rng.range_f64(*lo, *hi),
+            d => {
+                let (a, b) = d.beta_params().unwrap();
+                rng.beta(a, b)
+            }
+        };
+        r.clamp(1e-3, 1.0)
+    }
+}
+
+/// One generated request event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub id: u64,
+    /// Arrival offset from trace start, seconds.
+    pub at: f64,
+    pub template: String,
+    pub mask_ratio: f64,
+    pub prompt_seed: u64,
+}
+
+impl TraceEvent {
+    /// Realize the mask on a given latent grid (deterministic per event).
+    pub fn mask(&self, latent_hw: usize) -> MaskSpec {
+        let mut rng = Pcg::with_stream(self.prompt_seed, 0x6d61_736b);
+        MaskSpec::synth(latent_hw, self.mask_ratio, &mut rng)
+    }
+}
+
+/// Poisson request-trace generator.
+#[derive(Debug, Clone)]
+pub struct TraceGen {
+    pub rps: f64,
+    pub dist: MaskDist,
+    pub templates: usize,
+    pub seed: u64,
+}
+
+impl TraceGen {
+    pub fn new(rps: f64, dist: MaskDist, templates: usize, seed: u64) -> TraceGen {
+        assert!(rps > 0.0 && templates > 0);
+        TraceGen { rps, dist, templates, seed }
+    }
+
+    /// Generate `count` events with Poisson inter-arrivals.
+    pub fn generate(&self, count: usize) -> Vec<TraceEvent> {
+        let mut rng = Pcg::new(self.seed);
+        let mut t = 0.0;
+        (0..count)
+            .map(|i| {
+                t += rng.exponential(self.rps);
+                // Zipf-ish template popularity: template 0 is hottest
+                let z = rng.f64();
+                let tpl = ((self.templates as f64) * z * z) as usize % self.templates;
+                TraceEvent {
+                    id: i as u64,
+                    at: t,
+                    template: format!("tpl-{tpl}"),
+                    mask_ratio: self.dist.sample(&mut rng),
+                    prompt_seed: rng.next_u64() >> 12, // 52 bits: JSON f64-exact
+                }
+            })
+            .collect()
+    }
+
+    /// Distinct template ids used by this generator.
+    pub fn template_ids(&self) -> Vec<String> {
+        (0..self.templates).map(|i| format!("tpl-{i}")).collect()
+    }
+}
+
+/// Replay helper: sleep until each event is due, then hand it off.
+pub fn replay<F: FnMut(&TraceEvent)>(events: &[TraceEvent], mut submit: F) {
+    let start = std::time::Instant::now();
+    for ev in events {
+        let due = Duration::from_secs_f64(ev.at);
+        let now = start.elapsed();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        submit(ev);
+    }
+}
+
+// -- JSONL trace record/replay ------------------------------------------------
+
+pub fn to_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        let j = Json::obj(vec![
+            ("id", Json::num(e.id as f64)),
+            ("at", Json::num(e.at)),
+            ("template", Json::str(e.template.clone())),
+            ("mask_ratio", Json::num(e.mask_ratio)),
+            ("prompt_seed", Json::num(e.prompt_seed as f64)),
+        ]);
+        out.push_str(&j.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+pub fn from_jsonl(text: &str) -> anyhow::Result<Vec<TraceEvent>> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            let j = Json::parse(l)?;
+            Ok(TraceEvent {
+                id: j.at("id").as_f64().unwrap_or(0.0) as u64,
+                at: j.at("at").as_f64().unwrap_or(0.0),
+                template: j.at("template").as_str().unwrap_or("tpl-0").to_string(),
+                mask_ratio: j.at("mask_ratio").as_f64().unwrap_or(0.1),
+                prompt_seed: j.at("prompt_seed").as_f64().unwrap_or(0.0) as u64,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::mean;
+
+    #[test]
+    fn beta_means_match_paper_fig3() {
+        let mut rng = Pcg::new(1);
+        for (dist, want) in [
+            (MaskDist::Production, 0.11),
+            (MaskDist::PublicTrace, 0.19),
+            (MaskDist::VitonHD, 0.35),
+        ] {
+            let xs: Vec<f64> = (0..30_000).map(|_| dist.sample(&mut rng)).collect();
+            let m = mean(&xs);
+            assert!((m - want).abs() < 0.01, "{dist:?} mean {m} want {want}");
+            assert!(xs.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn production_is_right_skewed() {
+        let mut rng = Pcg::new(2);
+        let d = MaskDist::Production;
+        let xs: Vec<f64> = (0..20_000).map(|_| d.sample(&mut rng)).collect();
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2];
+        assert!(median < mean(&xs), "right skew: median {median} < mean");
+    }
+
+    #[test]
+    fn poisson_interarrival_rate() {
+        let g = TraceGen::new(4.0, MaskDist::Fixed(0.1), 4, 7);
+        let ev = g.generate(8_000);
+        let total = ev.last().unwrap().at;
+        let rate = ev.len() as f64 / total;
+        assert!((rate - 4.0).abs() < 0.2, "rate {rate}");
+        // arrival times strictly increase
+        assert!(ev.windows(2).all(|w| w[0].at < w[1].at));
+    }
+
+    #[test]
+    fn trace_is_seed_deterministic() {
+        let a = TraceGen::new(1.0, MaskDist::Production, 8, 42).generate(100);
+        let b = TraceGen::new(1.0, MaskDist::Production, 8, 42).generate(100);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn template_popularity_is_skewed() {
+        let g = TraceGen::new(1.0, MaskDist::Fixed(0.1), 10, 3);
+        let ev = g.generate(10_000);
+        let mut counts = vec![0usize; 10];
+        for e in &ev {
+            let idx: usize = e.template[4..].parse().unwrap();
+            counts[idx] += 1;
+        }
+        // hottest template should far exceed the uniform share
+        let max = *counts.iter().max().unwrap();
+        assert!(max > 2 * ev.len() / 10, "not skewed: {counts:?}");
+    }
+
+    #[test]
+    fn jsonl_round_trip() {
+        let g = TraceGen::new(2.0, MaskDist::PublicTrace, 4, 5);
+        let ev = g.generate(50);
+        let text = to_jsonl(&ev);
+        let back = from_jsonl(&text).unwrap();
+        assert_eq!(ev, back);
+    }
+
+    #[test]
+    fn event_mask_is_deterministic() {
+        let e = TraceEvent {
+            id: 1,
+            at: 0.0,
+            template: "tpl-0".into(),
+            mask_ratio: 0.2,
+            prompt_seed: 99,
+        };
+        assert_eq!(e.mask(8), e.mask(8));
+        let got = e.mask(8).ratio();
+        assert!((got - 0.2).abs() < 0.1);
+    }
+}

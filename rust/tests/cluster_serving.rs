@@ -1,0 +1,167 @@
+//! Integration: full cluster serving across systems, policies and
+//! schedulers (requires `make artifacts`; tests skip silently otherwise).
+
+use std::time::Duration;
+
+use instgenie::cache::LatencyModel;
+use instgenie::cluster::{Cluster, ClusterOpts};
+use instgenie::config::{BatchingPolicy, CacheMode, EngineConfig, SystemKind};
+use instgenie::metrics::Recorder;
+use instgenie::runtime::Manifest;
+use instgenie::scheduler;
+use instgenie::workload::{MaskDist, TraceGen};
+
+fn launch(system: SystemKind, workers: usize, sched_name: &str) -> Option<Cluster> {
+    let manifest = Manifest::load("artifacts").ok()?;
+    let mcfg = manifest.model("sd21m").ok()?.config.clone();
+    let mut engine = EngineConfig::for_system(system);
+    engine.prepost_cpu_us = 200; // keep tests quick
+    let lat = LatencyModel::load_or_nominal("artifacts", "sd21m");
+    let sched = scheduler::by_name(sched_name, &mcfg, &lat, engine.cache_mode, engine.max_batch)
+        .expect("scheduler");
+    Some(
+        Cluster::launch(
+            ClusterOpts {
+                workers,
+                engine,
+                model: "sd21m".into(),
+                artifact_dir: "artifacts".into(),
+                templates: vec!["tpl-0".into(), "tpl-1".into()],
+                lat_model: lat,
+                warmup: false,
+            },
+            sched,
+        )
+        .expect("launch"),
+    )
+}
+
+fn run_trace(cluster: &Cluster, rps: f64, count: usize) {
+    let gen = TraceGen::new(rps, MaskDist::Production, 2, 7);
+    let events = gen.generate(count);
+    instgenie::workload::replay(&events, |ev| {
+        cluster.submit_event(ev);
+    });
+    assert!(
+        cluster.await_completed(count, Duration::from_secs(120)),
+        "timed out waiting for {count} responses"
+    );
+}
+
+#[test]
+fn instgenie_cluster_serves_all_requests() {
+    let Some(cluster) = launch(SystemKind::InstGenIE, 2, "mask-aware") else { return };
+    run_trace(&cluster, 8.0, 16);
+    let responses = cluster.shutdown().expect("shutdown");
+    assert_eq!(responses.len(), 16);
+    let mut rec = Recorder::new();
+    for r in &responses {
+        assert!(r.image.data().iter().all(|v| v.is_finite()));
+        assert!(r.latent.data().iter().all(|v| v.is_finite()));
+        assert_eq!(r.timing.steps_computed, 8); // sd21m steps
+        rec.record(r);
+    }
+    let rep = rec.report(1.0);
+    assert!(rep.e2e.mean > 0.0 && rep.queue.mean >= 0.0);
+    // disaggregated continuous batching: the engine thread is never
+    // interrupted by pre/post processing
+    assert_eq!(rep.mean_interruptions, 0.0);
+}
+
+#[test]
+fn all_baseline_systems_complete() {
+    for system in [SystemKind::Diffusers, SystemKind::FisEdit, SystemKind::TeaCache] {
+        let Some(cluster) = launch(system, 1, "request-lb") else { return };
+        run_trace(&cluster, 8.0, 6);
+        let responses = cluster.shutdown().expect("shutdown");
+        assert_eq!(responses.len(), 6, "{system:?}");
+        if system == SystemKind::TeaCache {
+            // TeaCache must actually skip some steps
+            let skipped = responses
+                .iter()
+                .any(|r| r.timing.steps_computed < 8);
+            assert!(skipped, "teacache never skipped");
+        }
+    }
+}
+
+#[test]
+fn continuous_beats_static_on_queueing() {
+    // burst of requests at one worker: static batching forces the burst
+    // tail to wait for whole-batch completion; continuous joins per step.
+    let run = |policy: BatchingPolicy| {
+        let mut engine = EngineConfig::for_system(SystemKind::InstGenIE);
+        engine.batching = policy;
+        engine.max_batch = 4;
+        engine.prepost_cpu_us = 100;
+        let manifest = Manifest::load("artifacts").unwrap();
+        let mcfg = manifest.model("sd21m").unwrap().config.clone();
+        let lat = LatencyModel::load_or_nominal("artifacts", "sd21m");
+        let sched =
+            scheduler::by_name("request-lb", &mcfg, &lat, engine.cache_mode, 4).unwrap();
+        let cluster = Cluster::launch(
+            ClusterOpts {
+                workers: 1,
+                engine,
+                model: "sd21m".into(),
+                artifact_dir: "artifacts".into(),
+                templates: vec!["tpl-0".into()],
+                lat_model: lat,
+                warmup: true, // latency comparison: exclude compile jitter
+            },
+            sched,
+        )
+        .unwrap();
+        run_trace(&cluster, 30.0, 12);
+        let responses = cluster.shutdown().unwrap();
+        let mut rec = Recorder::new();
+        for r in &responses {
+            rec.record(r);
+        }
+        rec.report(1.0).queue.mean
+    };
+    let q_static = run(BatchingPolicy::Static);
+    let q_cont = run(BatchingPolicy::ContinuousDisaggregated);
+    assert!(
+        q_cont < q_static,
+        "continuous queuing {q_cont:.4}s !< static {q_static:.4}s"
+    );
+}
+
+#[test]
+fn strawman_inline_batching_interrupts_requests() {
+    let Ok(manifest) = Manifest::load("artifacts") else { return };
+    let mcfg = manifest.model("sd21m").unwrap().config.clone();
+    let mut engine = EngineConfig::for_system(SystemKind::InstGenIE);
+    engine.batching = BatchingPolicy::ContinuousInline;
+    engine.prepost_cpu_us = 100;
+    let lat = LatencyModel::load_or_nominal("artifacts", "sd21m");
+    let sched = scheduler::by_name("request-lb", &mcfg, &lat, engine.cache_mode, 8).unwrap();
+    let cluster = Cluster::launch(
+        ClusterOpts {
+            workers: 1,
+            engine,
+            model: "sd21m".into(),
+            artifact_dir: "artifacts".into(),
+            templates: vec!["tpl-0".into()],
+            lat_model: lat,
+            warmup: false,
+        },
+        sched,
+    )
+    .unwrap();
+    run_trace(&cluster, 20.0, 10);
+    let responses = cluster.shutdown().unwrap();
+    let total_intr: u32 = responses.iter().map(|r| r.timing.interruptions).sum();
+    assert!(total_intr > 0, "inline pre/post never interrupted the batch");
+}
+
+#[test]
+fn schedulers_all_route_and_complete() {
+    for sched_name in ["round-robin", "request-lb", "token-lb", "mask-aware"] {
+        let Some(cluster) = launch(SystemKind::InstGenIE, 3, sched_name) else { return };
+        run_trace(&cluster, 16.0, 12);
+        let responses = cluster.shutdown().expect("shutdown");
+        assert_eq!(responses.len(), 12, "{sched_name}");
+    }
+}

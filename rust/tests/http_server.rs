@@ -1,0 +1,86 @@
+//! Integration: the HTTP frontend routes edits through the cluster
+//! (paper Fig. 8's user-facing path ① … ⑤ ).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use instgenie::cache::LatencyModel;
+use instgenie::cluster::{Cluster, ClusterOpts};
+use instgenie::config::{EngineConfig, SystemKind};
+use instgenie::runtime::Manifest;
+use instgenie::scheduler;
+use instgenie::server::HttpServer;
+use instgenie::util::json::Json;
+
+fn http(addr: &str, req: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(req.as_bytes()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+#[test]
+fn edit_stats_healthz_round_trip() {
+    let Ok(manifest) = Manifest::load("artifacts") else { return };
+    let mcfg = manifest.model("sd21m").unwrap().config.clone();
+    let mut engine = EngineConfig::for_system(SystemKind::InstGenIE);
+    engine.prepost_cpu_us = 100;
+    let lat = LatencyModel::load_or_nominal("artifacts", "sd21m");
+    let sched = scheduler::by_name("mask-aware", &mcfg, &lat, engine.cache_mode, 8).unwrap();
+    let cluster = Arc::new(
+        Cluster::launch(
+            ClusterOpts {
+                workers: 1,
+                engine,
+                model: "sd21m".into(),
+                artifact_dir: "artifacts".into(),
+                templates: vec!["tpl-0".into()],
+                lat_model: lat,
+                warmup: false,
+            },
+            sched,
+        )
+        .unwrap(),
+    );
+    let server = Arc::new(HttpServer::new(Arc::clone(&cluster), 1));
+    // route() unit path (no sockets)
+    let (code, body) = server.route("GET", "/healthz", "");
+    assert_eq!(code, 200);
+    assert_eq!(body.at("ok").as_bool(), Some(true));
+    let (code, _) = server.route("GET", "/nope", "");
+    assert_eq!(code, 404);
+    let (code, body) = server.route("POST", "/edit", "{not json");
+    assert_eq!(code, 400, "{body}");
+
+    // full socket path
+    let addr = "127.0.0.1:18923";
+    {
+        let server = Arc::clone(&server);
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            let _ = server.serve(&addr);
+        });
+    }
+    std::thread::sleep(Duration::from_millis(100));
+
+    let body = r#"{"template": "tpl-0", "mask_ratio": 0.15, "prompt_seed": 7}"#;
+    let req = format!(
+        "POST /edit HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let resp = http(addr, &req);
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    let json_body = resp.split("\r\n\r\n").nth(1).unwrap();
+    let j = Json::parse(json_body).unwrap();
+    assert_eq!(j.at("id").as_usize(), Some(1));
+
+    let resp = http(addr, "GET /stats HTTP/1.1\r\nHost: x\r\n\r\n");
+    assert!(resp.starts_with("HTTP/1.1 200"));
+    let j = Json::parse(resp.split("\r\n\r\n").nth(1).unwrap()).unwrap();
+    assert!(j.at("completed").as_usize().unwrap_or(0) >= 1);
+}

@@ -1,0 +1,120 @@
+//! Integration: the python-AOT -> rust-PJRT round trip on real artifacts.
+//!
+//! Requires `make artifacts` (skipped otherwise). These tests pin the
+//! core reuse contract end-to-end through the production load path:
+//! HLO text -> PJRT compile -> execute with device-resident weights.
+
+use std::sync::Arc;
+
+use instgenie::model::{Latent, MaskSpec, Permutation};
+use instgenie::runtime::{Client, Manifest, ModelRuntime};
+
+fn runtime(model: &str) -> Option<ModelRuntime> {
+    let manifest = Manifest::load("artifacts").ok()?;
+    let client = Arc::new(Client::cpu().expect("PJRT CPU client"));
+    Some(ModelRuntime::load(client, &manifest, model).expect("load model"))
+}
+
+#[test]
+fn block_y_full_matches_registration_block() {
+    let Some(rt) = runtime("sd21m") else { return };
+    let cfg = &rt.config;
+    let x = Latent::noise(cfg.tokens, cfg.hidden, 7, 1.0);
+    let (y_reg, _, _) = rt.run_block_reg(0, x.data()).expect("reg");
+    let y_full = rt
+        .run_block_y(0, cfg.tokens, 1, x.data())
+        .expect("full block");
+    assert_eq!(y_reg.len(), y_full.len());
+    let max_diff = y_reg
+        .iter()
+        .zip(&y_full)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "max diff {max_diff}");
+}
+
+#[test]
+fn block_kv_with_exact_cache_matches_full_rows() {
+    // Paper Fig. 7 contract through the production path: compute the full
+    // block once (registration), then run the cache-KV block over a
+    // masked-first compute set with the cached K/V of the other rows —
+    // outputs must match the corresponding rows of the full output.
+    let Some(rt) = runtime("sd21m") else { return };
+    let cfg = rt.config.clone();
+    let mut rng = instgenie::util::rng::Pcg::new(3);
+    let mask = MaskSpec::synth(cfg.latent_hw, 0.2, &mut rng);
+    let perm = Permutation::masked_first(&mask);
+    let n = cfg.bucket_for(perm.masked_count());
+
+    let x = Latent::noise(cfg.tokens, cfg.hidden, 11, 1.0);
+    let (y_full, k_full, v_full) = rt.run_block_reg(1, x.data()).expect("reg");
+
+    // gather compute rows of x and cached rows of k/v per the permutation
+    let h = cfg.hidden;
+    let mut x_m = vec![0.0f32; n * h];
+    x.gather_into(perm.compute_ids(n), &mut x_m);
+    let gather = |src: &[f32], ids: &[usize]| {
+        let mut out = vec![0.0f32; ids.len() * h];
+        for (i, &id) in ids.iter().enumerate() {
+            out[i * h..(i + 1) * h].copy_from_slice(&src[id * h..(id + 1) * h]);
+        }
+        out
+    };
+    let kc = gather(&k_full, perm.cached_ids(n));
+    let vc = gather(&v_full, perm.cached_ids(n));
+
+    let y_m = rt
+        .run_block_kv(1, n, 1, &x_m, &kc, &vc)
+        .expect("kv block");
+
+    let y_want = gather(&y_full, perm.compute_ids(n));
+    let max_diff = y_m
+        .iter()
+        .zip(&y_want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "max diff {max_diff}");
+}
+
+#[test]
+fn batched_execution_is_member_independent() {
+    // A batch of 2 identical members must produce identical outputs, and
+    // each must equal the batch-1 result (continuous batching relies on
+    // member independence inside a batch).
+    let Some(rt) = runtime("sd21m") else { return };
+    let cfg = &rt.config;
+    let n = cfg.token_buckets[2];
+    let h = cfg.hidden;
+    let x1 = Latent::noise(n, h, 5, 1.0);
+    let single = rt.run_block_y(0, n, 1, x1.data()).expect("b1");
+    let mut x2 = x1.data().to_vec();
+    x2.extend_from_slice(x1.data());
+    let pair = rt.run_block_y(0, n, 2, &x2).expect("b2");
+    assert_eq!(pair.len(), 2 * single.len());
+    for (i, want) in single.iter().enumerate() {
+        assert!((pair[i] - want).abs() < 1e-4, "member 0 row {i}");
+        assert!((pair[single.len() + i] - want).abs() < 1e-4, "member 1 row {i}");
+    }
+}
+
+#[test]
+fn warmup_compiles_grid() {
+    let Some(rt) = runtime("sd21m") else { return };
+    rt.warmup(&[1, 2]).expect("warmup");
+    assert!(rt.client().compiled_count() >= 2 * (5 + 4) + 1);
+}
+
+#[test]
+fn all_models_load_and_execute() {
+    let Ok(manifest) = Manifest::load("artifacts") else { return };
+    let client = Arc::new(Client::cpu().expect("client"));
+    for name in ["sd21m", "sdxlm", "fluxm"] {
+        let rt = ModelRuntime::load(Arc::clone(&client), &manifest, name).expect("load");
+        let cfg = &rt.config;
+        let n = cfg.token_buckets[0];
+        let x = Latent::noise(n, cfg.hidden, 1, 1.0);
+        let y = rt.run_block_y(cfg.blocks - 1, n, 1, x.data()).expect("exec");
+        assert_eq!(y.len(), n * cfg.hidden);
+        assert!(y.iter().all(|v| v.is_finite()), "{name} produced non-finite");
+    }
+}
