@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# CI gate: build, test, format, lint.
+#
+# Usage: ./ci.sh [--no-clippy]
+# Runs from the directory containing Cargo.toml (repo root or rust/),
+# so it works both in the assembled workspace and a bare checkout.
+
+set -euo pipefail
+
+here="$(cd "$(dirname "$0")" && pwd)"
+if [[ -f "$here/Cargo.toml" ]]; then
+  cd "$here"
+elif [[ -f "$here/rust/Cargo.toml" ]]; then
+  cd "$here/rust"
+else
+  echo "ci.sh: no Cargo.toml found under $here or $here/rust" >&2
+  exit 1
+fi
+
+run() {
+  echo "== $* =="
+  "$@"
+}
+
+run cargo build --release
+run cargo test -q
+run cargo fmt --check
+if [[ "${1:-}" != "--no-clippy" ]]; then
+  run cargo clippy --all-targets -- -D warnings
+fi
+
+echo "ci.sh: all checks passed"

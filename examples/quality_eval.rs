@@ -16,7 +16,7 @@ use std::sync::Arc;
 
 use instgenie::cache::{LatencyModel, TieredStore};
 use instgenie::config::{CacheMode, EngineConfig, SystemKind};
-use instgenie::engine::{EditRequest, EditResponse, Worker};
+use instgenie::engine::{EditRequest, EditResponse, Worker, WorkerEvent};
 use instgenie::model::MaskSpec;
 use instgenie::quality::{alignment_score, frechet_distance, image_feature, ssim};
 use instgenie::runtime::ModelRuntime;
@@ -52,9 +52,11 @@ fn serve(
         submit.submit(EditRequest::new(i, "q-template", mask, 2000 + i));
     }
     let mut out = BTreeMap::new();
-    for _ in 0..REQUESTS {
-        let r: EditResponse = rx.recv()?;
-        out.insert(r.id, r);
+    while out.len() < REQUESTS {
+        if let WorkerEvent::Finished { result, .. } = rx.recv()? {
+            let r: EditResponse = result?; // fail fast, don't hang the loop
+            out.insert(r.id, r);
+        }
     }
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
     handle.join().unwrap()?;

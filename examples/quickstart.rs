@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use instgenie::cache::{LatencyModel, TieredStore};
 use instgenie::config::{EngineConfig, SystemKind};
-use instgenie::engine::{EditRequest, Worker};
+use instgenie::engine::{EditRequestBuilder, Worker, WorkerEvent};
 use instgenie::model::MaskSpec;
 use instgenie::runtime::ModelRuntime;
 use instgenie::util::rng::Pcg;
@@ -57,19 +57,31 @@ fn main() -> anyhow::Result<()> {
             mask.tokens(),
             mask.ratio()
         );
-        submit.submit(EditRequest::new(i, "quickstart-template", mask, 100 + i));
+        let req = EditRequestBuilder::new(i)
+            .template("quickstart-template")
+            .prompt_seed(100 + i)
+            .mask(mask)
+            .build()?;
+        submit.submit(req);
     }
-    for _ in 0..3 {
-        let resp = results_rx.recv()?;
-        println!(
-            "  -> done id={} queue={:.1}ms inference={:.1}ms e2e={:.1}ms image={}x{}",
-            resp.id,
-            resp.timing.queue * 1e3,
-            resp.timing.inference * 1e3,
-            resp.timing.e2e * 1e3,
-            resp.image.shape()[0],
-            resp.image.shape()[1],
-        );
+    let mut done = 0;
+    while done < 3 {
+        match results_rx.recv()? {
+            WorkerEvent::Started { id, .. } => println!("  .. id={id} joined the batch"),
+            WorkerEvent::Finished { result, .. } => {
+                let resp = result?;
+                println!(
+                    "  -> done id={} queue={:.1}ms inference={:.1}ms e2e={:.1}ms image={}x{}",
+                    resp.id,
+                    resp.timing.queue * 1e3,
+                    resp.timing.inference * 1e3,
+                    resp.timing.e2e * 1e3,
+                    resp.image.shape()[0],
+                    resp.image.shape()[1],
+                );
+                done += 1;
+            }
+        }
     }
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
     handle.join().unwrap()?;

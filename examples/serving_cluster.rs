@@ -61,14 +61,19 @@ fn main() -> anyhow::Result<()> {
         events.iter().map(|e| e.mask_ratio).sum::<f64>() / events.len() as f64
     );
 
+    // submit returns one ticket per request; each resolves to its *own*
+    // response (the handle-based lifecycle the HTTP frontend builds on)
     let t0 = std::time::Instant::now();
+    let mut tickets = Vec::with_capacity(requests);
     replay(&events, |ev| {
-        cluster.submit_event(ev);
+        tickets.push(cluster.submit_event(ev));
     });
-    anyhow::ensure!(
-        cluster.await_completed(requests, Duration::from_secs(600)),
-        "serving timed out"
-    );
+    for t in &tickets {
+        let resp = t
+            .wait(Duration::from_secs(600))
+            .map_err(|e| anyhow::anyhow!("request {} failed: {e}", t.id()))?;
+        anyhow::ensure!(resp.id == t.id(), "ticket resolved to a foreign response");
+    }
     let makespan = t0.elapsed().as_secs_f64();
 
     let responses = cluster.shutdown()?;

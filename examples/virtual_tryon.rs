@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use instgenie::cache::{LatencyModel, TieredStore};
 use instgenie::config::{EngineConfig, SystemKind};
-use instgenie::engine::{EditRequest, Worker};
+use instgenie::engine::{EditRequest, Worker, WorkerEvent};
 use instgenie::model::MaskSpec;
 use instgenie::runtime::ModelRuntime;
 use instgenie::util::rng::Pcg;
@@ -82,10 +82,12 @@ fn main() -> anyhow::Result<()> {
 
     let mut ratios = Vec::new();
     let mut lat = Vec::new();
-    for _ in 0..id {
-        let r = rx.recv()?;
-        ratios.push(r.mask_ratio);
-        lat.push(r.timing.e2e);
+    while (ratios.len() as u64) < id {
+        if let WorkerEvent::Finished { result, .. } = rx.recv()? {
+            let r = result?; // a failed request aborts instead of hanging
+            ratios.push(r.mask_ratio);
+            lat.push(r.timing.e2e);
+        }
     }
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
     handle.join().unwrap()?;

@@ -1,0 +1,395 @@
+//! Per-request lifecycle tracking: the completion table behind
+//! [`EditTicket`].
+//!
+//! Every request submitted through [`crate::cluster::Cluster::submit`]
+//! gets an entry here. Workers report `Started`/`Finished` events; the
+//! cluster collector translates them into state transitions, and tickets
+//! (plus the batch-replay rendezvous `Cluster::await_completed`) block on
+//! a single registry Condvar instead of sleep-polling. Terminal entries
+//! are retained so `GET /v1/edits/{id}` can poll results after
+//! completion, until the client evicts them (`DELETE` on a finished id)
+//! or the cluster shuts down.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::engine::request::{EditError, EditResponse};
+
+/// Where a request is in its life.
+#[derive(Debug, Clone)]
+pub enum RequestState {
+    /// Accepted, waiting in a worker queue (or in preprocessing).
+    Queued,
+    /// Joined a worker's running batch.
+    Running,
+    /// Completed; the response is held for polling frontends.
+    Done(Arc<EditResponse>),
+    /// Terminated without a response (cancelled, failed, shutdown).
+    Failed(EditError),
+}
+
+impl RequestState {
+    /// Stable label for status endpoints: queued / running / done /
+    /// cancelled / failed.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RequestState::Queued => "queued",
+            RequestState::Running => "running",
+            RequestState::Done(_) => "done",
+            RequestState::Failed(EditError::Cancelled) => "cancelled",
+            RequestState::Failed(_) => "failed",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, RequestState::Done(_) | RequestState::Failed(_))
+    }
+}
+
+/// Snapshot of one request's lifecycle entry.
+#[derive(Debug, Clone)]
+pub struct RequestStatus {
+    pub id: u64,
+    pub worker: usize,
+    pub state: RequestState,
+    /// Seconds since submission (age for status endpoints).
+    pub age_secs: f64,
+}
+
+/// Result of a cancellation attempt.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// Removed from the worker queue; the ticket resolves to `Cancelled`.
+    Cancelled,
+    /// The request already joined a batch or finished.
+    TooLate,
+    /// No such request id.
+    NotFound,
+}
+
+struct Entry {
+    worker: usize,
+    submitted: Instant,
+    state: RequestState,
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: HashMap<u64, Entry>,
+    /// Requests that reached a terminal state (success or failure).
+    finished: usize,
+}
+
+/// The per-id completion table shared by the cluster, its collector, and
+/// all outstanding tickets.
+pub struct RequestRegistry {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl Default for RequestRegistry {
+    fn default() -> Self {
+        RequestRegistry { inner: Mutex::new(Inner::default()), cv: Condvar::new() }
+    }
+}
+
+impl RequestRegistry {
+    pub fn new() -> Arc<RequestRegistry> {
+        Arc::new(RequestRegistry::default())
+    }
+
+    /// Create the entry for a freshly routed request and hand back its
+    /// ticket. Re-registering a live id is a caller bug.
+    pub fn register(self: &Arc<Self>, id: u64, worker: usize) -> EditTicket {
+        let mut g = self.inner.lock().unwrap();
+        let prev = g.entries.insert(
+            id,
+            Entry { worker, submitted: Instant::now(), state: RequestState::Queued },
+        );
+        if let Some(prev) = prev {
+            if !prev.state.is_terminal() {
+                panic!("request id {id} registered twice while in flight");
+            }
+            // a terminal entry with a recycled id was superseded; its
+            // finished count already landed, nothing to adjust
+        }
+        EditTicket { id, worker, registry: Arc::clone(self) }
+    }
+
+    /// Queued -> Running (worker admitted the request into its batch).
+    pub fn mark_running(&self, id: u64) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(e) = g.entries.get_mut(&id) {
+            if matches!(e.state, RequestState::Queued) {
+                e.state = RequestState::Running;
+                self.cv.notify_all();
+            }
+        }
+    }
+
+    /// Resolve a request. First terminal transition wins; returns whether
+    /// this call performed it. Successful responses are taken as `Arc` so
+    /// the caller can retain a handle without a second tensor copy.
+    pub fn fulfill(&self, id: u64, result: Result<Arc<EditResponse>, EditError>) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let Some(e) = g.entries.get_mut(&id) else { return false };
+        if e.state.is_terminal() {
+            return false;
+        }
+        e.state = match result {
+            Ok(resp) => RequestState::Done(resp),
+            Err(err) => RequestState::Failed(err),
+        };
+        g.finished += 1;
+        self.cv.notify_all();
+        true
+    }
+
+    /// Drop a terminal entry (client acknowledged the result). Keeps
+    /// serve-mode memory bounded for clients that reap what they poll;
+    /// live entries are never evicted. Returns whether an entry was
+    /// removed.
+    pub fn evict_terminal(&self, id: u64) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.entries.get(&id) {
+            Some(e) if e.state.is_terminal() => {
+                g.entries.remove(&id);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Fail every non-terminal entry (cluster shutdown).
+    pub fn fail_all_pending(&self, err: EditError) {
+        let mut g = self.inner.lock().unwrap();
+        let mut newly = 0;
+        for e in g.entries.values_mut() {
+            if !e.state.is_terminal() {
+                e.state = RequestState::Failed(err.clone());
+                newly += 1;
+            }
+        }
+        g.finished += newly;
+        if newly > 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// The worker a still-queued request was routed to (cancellation
+    /// pre-check); `None` once it is running or terminal, or unknown.
+    pub fn worker_if_queued(&self, id: u64) -> Option<usize> {
+        let g = self.inner.lock().unwrap();
+        g.entries
+            .get(&id)
+            .filter(|e| matches!(e.state, RequestState::Queued))
+            .map(|e| e.worker)
+    }
+
+    pub fn status(&self, id: u64) -> Option<RequestStatus> {
+        let g = self.inner.lock().unwrap();
+        g.entries.get(&id).map(|e| RequestStatus {
+            id,
+            worker: e.worker,
+            state: e.state.clone(),
+            age_secs: e.submitted.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Requests that reached a terminal state so far.
+    pub fn finished(&self) -> usize {
+        self.inner.lock().unwrap().finished
+    }
+
+    /// Block until at least `n` requests finished (success, failure, or
+    /// cancellation), or `timeout` elapsed. Condvar-based — no polling.
+    pub fn await_finished(&self, n: usize, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        while g.finished < n {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+        true
+    }
+
+    /// Number of tracked entries (live + retained terminal).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn wait_terminal(&self, id: u64, timeout: Duration) -> Result<Arc<EditResponse>, EditError> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            match g.entries.get(&id).map(|e| &e.state) {
+                Some(RequestState::Done(resp)) => return Ok(Arc::clone(resp)),
+                Some(RequestState::Failed(err)) => return Err(err.clone()),
+                Some(_) => {}
+                None => return Err(EditError::WorkerShutdown),
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(EditError::Timeout);
+            }
+            let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+}
+
+/// Handle to one in-flight edit: returned by `Cluster::submit`, fulfilled
+/// by the collector through the shared [`RequestRegistry`].
+#[derive(Clone)]
+pub struct EditTicket {
+    id: u64,
+    worker: usize,
+    registry: Arc<RequestRegistry>,
+}
+
+impl EditTicket {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The worker the scheduler routed this request to.
+    pub fn worker(&self) -> usize {
+        self.worker
+    }
+
+    /// Current lifecycle snapshot (the entry outlives completion).
+    pub fn status(&self) -> Option<RequestStatus> {
+        self.registry.status(self.id)
+    }
+
+    /// Block until this request resolves, with `Err(Timeout)` after
+    /// `timeout`. Waiting again after a terminal state returns the same
+    /// outcome (responses are retained in the registry until evicted).
+    pub fn wait(&self, timeout: Duration) -> Result<Arc<EditResponse>, EditError> {
+        self.registry.wait_terminal(self.id, timeout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::request::RequestTiming;
+    use crate::util::tensor::Tensor;
+
+    fn resp(id: u64) -> EditResponse {
+        EditResponse {
+            id,
+            template_id: "t".into(),
+            image: Tensor::zeros(&[2, 2]),
+            latent: Tensor::zeros(&[2, 2]),
+            timing: RequestTiming::default(),
+            mask_ratio: 0.1,
+        }
+    }
+
+    #[test]
+    fn ticket_resolves_after_fulfill() {
+        let reg = RequestRegistry::new();
+        let t = reg.register(1, 0);
+        assert_eq!(t.status().unwrap().state.label(), "queued");
+        reg.mark_running(1);
+        assert_eq!(t.status().unwrap().state.label(), "running");
+        assert!(reg.fulfill(1, Ok(Arc::new(resp(1)))));
+        let got = t.wait(Duration::from_millis(10)).expect("done");
+        assert_eq!(got.id, 1);
+        // idempotent: a second fulfillment is ignored, wait re-reads
+        assert!(!reg.fulfill(1, Err(EditError::Cancelled)));
+        assert!(t.wait(Duration::from_millis(10)).is_ok());
+        assert_eq!(reg.finished(), 1);
+    }
+
+    #[test]
+    fn ticket_wait_times_out() {
+        let reg = RequestRegistry::new();
+        let t = reg.register(2, 0);
+        let t0 = Instant::now();
+        assert!(matches!(t.wait(Duration::from_millis(20)), Err(EditError::Timeout)));
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn ticket_unblocks_from_another_thread() {
+        let reg = RequestRegistry::new();
+        let t = reg.register(3, 1);
+        let reg2 = Arc::clone(&reg);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            reg2.fulfill(3, Ok(Arc::new(resp(3))));
+        });
+        let got = t.wait(Duration::from_secs(5)).expect("fulfilled");
+        assert_eq!(got.id, 3);
+        assert_eq!(t.worker(), 1);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn cancelled_state_labels() {
+        let reg = RequestRegistry::new();
+        let t = reg.register(4, 0);
+        assert_eq!(reg.worker_if_queued(4), Some(0));
+        assert!(reg.fulfill(4, Err(EditError::Cancelled)));
+        assert_eq!(reg.worker_if_queued(4), None);
+        assert_eq!(t.status().unwrap().state.label(), "cancelled");
+        assert!(matches!(t.wait(Duration::from_millis(5)), Err(EditError::Cancelled)));
+    }
+
+    #[test]
+    fn fail_all_pending_skips_terminal() {
+        let reg = RequestRegistry::new();
+        let a = reg.register(5, 0);
+        let b = reg.register(6, 0);
+        reg.fulfill(5, Ok(Arc::new(resp(5))));
+        reg.fail_all_pending(EditError::WorkerShutdown);
+        assert!(a.wait(Duration::from_millis(5)).is_ok());
+        assert!(matches!(b.wait(Duration::from_millis(5)), Err(EditError::WorkerShutdown)));
+        assert_eq!(reg.finished(), 2);
+    }
+
+    #[test]
+    fn evict_terminal_frees_entries_but_never_live_ones() {
+        let reg = RequestRegistry::new();
+        let t = reg.register(10, 0);
+        assert!(!reg.evict_terminal(10), "queued entries must survive");
+        reg.fulfill(10, Ok(Arc::new(resp(10))));
+        assert!(reg.evict_terminal(10));
+        assert!(reg.status(10).is_none());
+        assert!(!reg.evict_terminal(10), "already gone");
+        // a waiter on an evicted entry resolves instead of hanging
+        assert!(matches!(
+            t.wait(Duration::from_millis(5)),
+            Err(EditError::WorkerShutdown)
+        ));
+        // eviction does not roll back the finished counter
+        assert_eq!(reg.finished(), 1);
+    }
+
+    #[test]
+    fn await_finished_counts_terminals() {
+        let reg = RequestRegistry::new();
+        let _a = reg.register(7, 0);
+        let _b = reg.register(8, 0);
+        assert!(!reg.await_finished(1, Duration::from_millis(10)));
+        reg.fulfill(7, Err(EditError::Cancelled));
+        let reg2 = Arc::clone(&reg);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            reg2.fulfill(8, Ok(Arc::new(resp(8))));
+        });
+        assert!(reg.await_finished(2, Duration::from_secs(5)));
+        h.join().unwrap();
+    }
+}

@@ -1,7 +1,19 @@
 //! Cluster deployment: N workers + scheduler + response collection
 //! (paper Fig. 8: scheduler routes ① ② , workers serve ③ ④ , results
 //! return ⑤ ).
+//!
+//! The request lifecycle is handle-based: [`Cluster::submit`] routes a
+//! request and returns an [`EditTicket`] whose `wait(timeout)` resolves to
+//! that request's own `Result<EditResponse, EditError>` — fulfilled by the
+//! collector through the per-id [`RequestRegistry`] (no global completion
+//! counting, so concurrent frontends can never observe each other's
+//! results). Queued requests can be cancelled ([`Cluster::cancel`]), and
+//! the batch-replay rendezvous [`Cluster::await_completed`] blocks on the
+//! registry Condvar instead of sleep-polling.
 
+pub mod lifecycle;
+
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
@@ -13,22 +25,38 @@ use crate::cache::store::register_template;
 use crate::cache::tier::TieredStore;
 use crate::cache::LatencyModel;
 use crate::config::{EngineConfig, ModelConfig};
-use crate::engine::queue::Submitter;
-use crate::engine::request::{EditRequest, EditResponse};
+use crate::engine::queue::{Submitter, WorkerQueue};
+use crate::engine::request::{EditError, EditRequest, EditResponse, WorkerEvent};
 use crate::engine::worker::Worker;
 use crate::runtime::ModelRuntime;
 use crate::scheduler::{Outstanding, Scheduler};
 use crate::workload::TraceEvent;
 
+pub use lifecycle::{CancelOutcome, EditTicket, RequestRegistry, RequestState, RequestStatus};
+
+/// Per-worker load snapshot for stats endpoints.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerDepth {
+    pub worker: usize,
+    /// Requests waiting in the worker's queue (either lane + preprocess).
+    pub queued: usize,
+    /// Requests dispatched to the worker and not yet completed.
+    pub outstanding: usize,
+}
+
 /// A running cluster.
 pub struct Cluster {
     submitters: Vec<Submitter>,
+    queues: Vec<Arc<WorkerQueue>>,
     stops: Vec<Arc<AtomicBool>>,
     handles: Vec<std::thread::JoinHandle<Result<()>>>,
     collector: Option<std::thread::JoinHandle<()>>,
     book: Arc<Mutex<Vec<Vec<Outstanding>>>>,
     scheduler: Mutex<Box<dyn Scheduler>>,
-    responses: Arc<Mutex<Vec<EditResponse>>>,
+    registry: Arc<RequestRegistry>,
+    responses: Arc<Mutex<Vec<Arc<EditResponse>>>>,
+    retain_responses: Arc<AtomicBool>,
+    templates: HashSet<String>,
     pub model: ModelConfig,
     started: Instant,
 }
@@ -66,8 +94,9 @@ impl Cluster {
             }
         }
 
-        let (tx, rx) = channel::<EditResponse>();
+        let (tx, rx) = channel::<WorkerEvent>();
         let mut submitters = Vec::new();
+        let mut queues = Vec::new();
         let mut stops = Vec::new();
         let mut handles = Vec::new();
         let mut model_cfg = None;
@@ -86,6 +115,7 @@ impl Cluster {
                 tx.clone(),
             );
             submitters.push(worker.submitter());
+            queues.push(worker.queue());
             stops.push(worker.stop_flag());
             handles.push(worker.start());
         }
@@ -93,23 +123,43 @@ impl Cluster {
 
         let book: Arc<Mutex<Vec<Vec<Outstanding>>>> =
             Arc::new(Mutex::new(vec![Vec::new(); opts.workers]));
-        let responses = Arc::new(Mutex::new(Vec::new()));
+        let registry = RequestRegistry::new();
+        let responses: Arc<Mutex<Vec<Arc<EditResponse>>>> = Arc::new(Mutex::new(Vec::new()));
+        let retain_responses = Arc::new(AtomicBool::new(true));
         let collector = {
             let book = Arc::clone(&book);
+            let registry = Arc::clone(&registry);
             let responses = Arc::clone(&responses);
+            let retain = Arc::clone(&retain_responses);
             std::thread::Builder::new()
                 .name("collector".into())
                 .spawn(move || {
-                    while let Ok(resp) = rx.recv() {
-                        let mut b = book.lock().unwrap();
-                        for worker in b.iter_mut() {
-                            if let Some(pos) = worker.iter().position(|o| o.id == resp.id) {
-                                worker.swap_remove(pos);
-                                break;
+                    while let Ok(event) = rx.recv() {
+                        match event {
+                            WorkerEvent::Started { id, .. } => registry.mark_running(id),
+                            WorkerEvent::Finished { id, worker, result } => {
+                                let mut b = book.lock().unwrap();
+                                if let Some(lane) = b.get_mut(worker) {
+                                    if let Some(pos) =
+                                        lane.iter().position(|o| o.id == id)
+                                    {
+                                        lane.swap_remove(pos);
+                                    }
+                                }
+                                drop(b);
+                                // one Arc per response, shared between the
+                                // registry (polling) and the replay log
+                                let result = result.map(Arc::new);
+                                let resp = result.as_ref().ok().map(Arc::clone);
+                                if registry.fulfill(id, result)
+                                    && retain.load(Ordering::Relaxed)
+                                {
+                                    if let Some(resp) = resp {
+                                        responses.lock().unwrap().push(resp);
+                                    }
+                                }
                             }
                         }
-                        drop(b);
-                        responses.lock().unwrap().push(resp);
                     }
                 })
                 .expect("spawn collector")
@@ -117,12 +167,16 @@ impl Cluster {
 
         Ok(Cluster {
             submitters,
+            queues,
             stops,
             handles,
             collector: Some(collector),
             book,
             scheduler: Mutex::new(scheduler),
+            registry,
             responses,
+            retain_responses,
+            templates: opts.templates.iter().cloned().collect(),
             model: model_cfg.expect("at least one worker"),
             started: Instant::now(),
         })
@@ -132,8 +186,14 @@ impl Cluster {
         self.submitters.len()
     }
 
-    /// Route + submit one request; returns the chosen worker.
-    pub fn submit(&self, req: EditRequest) -> usize {
+    /// Templates pre-registered at launch (the valid set for the HTTP
+    /// frontend; workers can still cold-register ids submitted directly).
+    pub fn has_template(&self, template_id: &str) -> bool {
+        self.templates.contains(template_id)
+    }
+
+    /// Route + submit one request; returns its completion handle.
+    pub fn submit(&self, req: EditRequest) -> EditTicket {
         let outstanding = Outstanding {
             id: req.id,
             masked_tokens: req.mask.masked_count(),
@@ -145,33 +205,102 @@ impl Cluster {
             let w = sched.pick(&outstanding, &book);
             w.min(self.submitters.len() - 1)
         };
+        let ticket = self.registry.register(req.id, w);
         self.book.lock().unwrap()[w].push(outstanding);
         self.submitters[w].submit(req);
-        w
+        ticket
+    }
+
+    /// Like [`Cluster::submit`], but rejects templates that were not
+    /// registered at launch. Library-facing convenience over the same
+    /// [`Cluster::has_template`] predicate the HTTP frontend checks
+    /// before allocating an id.
+    pub fn submit_checked(&self, req: EditRequest) -> Result<EditTicket, EditError> {
+        if !self.has_template(&req.template_id) {
+            return Err(EditError::UnknownTemplate(req.template_id));
+        }
+        Ok(self.submit(req))
     }
 
     /// Convenience: realize and submit a trace event.
-    pub fn submit_event(&self, ev: &TraceEvent) -> usize {
+    pub fn submit_event(&self, ev: &TraceEvent) -> EditTicket {
         let mask = ev.mask(self.model.latent_hw);
         let mut req = EditRequest::new(ev.id, ev.template.clone(), mask, ev.prompt_seed);
         req.arrival = Instant::now();
         self.submit(req)
     }
 
-    pub fn completed(&self) -> usize {
-        self.responses.lock().unwrap().len()
+    /// Cancel a request that is still waiting in its worker queue. The
+    /// removal races fairly with admission: whoever takes the queue lock
+    /// first wins, so a cancelled request never also completes.
+    pub fn cancel(&self, id: u64) -> CancelOutcome {
+        let Some(w) = self.registry.worker_if_queued(id) else {
+            return if self.registry.status(id).is_some() {
+                CancelOutcome::TooLate
+            } else {
+                CancelOutcome::NotFound
+            };
+        };
+        if !self.queues[w].remove(id) {
+            // popped for admission (or mid-preprocess) before we got there
+            return CancelOutcome::TooLate;
+        }
+        // retire the scheduler's outstanding entry ourselves — the worker
+        // will never emit a Finished event for this id
+        let mut b = self.book.lock().unwrap();
+        if let Some(pos) = b[w].iter().position(|o| o.id == id) {
+            b[w].swap_remove(pos);
+        }
+        drop(b);
+        self.registry.fulfill(id, Err(EditError::Cancelled));
+        CancelOutcome::Cancelled
     }
 
-    /// Block until `n` responses arrived (or timeout). Returns success.
+    /// Lifecycle snapshot of one request (None for unknown ids).
+    pub fn status(&self, id: u64) -> Option<RequestStatus> {
+        self.registry.status(id)
+    }
+
+    /// Drop a *terminal* lifecycle entry once its result was consumed
+    /// (`DELETE /v1/edits/{id}` on a finished request). Live entries are
+    /// never evicted; returns whether one was removed.
+    pub fn evict(&self, id: u64) -> bool {
+        self.registry.evict_terminal(id)
+    }
+
+    /// Enable/disable the replay log of successful responses. Batch
+    /// replay (`run`, benches, tests) reads it back from [`Cluster::
+    /// shutdown`]; long-lived online frontends turn it off so memory is
+    /// bounded by live requests + unevicted registry entries only.
+    pub fn set_retain_responses(&self, retain: bool) {
+        self.retain_responses.store(retain, Ordering::Relaxed);
+    }
+
+    /// Per-worker queue depth + dispatched-but-unfinished counts.
+    pub fn queue_depths(&self) -> Vec<WorkerDepth> {
+        let book = self.book.lock().unwrap();
+        self.queues
+            .iter()
+            .enumerate()
+            .map(|(w, q)| WorkerDepth {
+                worker: w,
+                queued: q.pending(),
+                outstanding: book.get(w).map(|l| l.len()).unwrap_or(0),
+            })
+            .collect()
+    }
+
+    /// Requests that reached a terminal state (success, failure, or
+    /// cancellation).
+    pub fn completed(&self) -> usize {
+        self.registry.finished()
+    }
+
+    /// Block until `n` requests finished (or timeout). Returns success.
+    /// Condvar-backed (signaled by the collector) — kept for the `run`
+    /// subcommand's batch replay; online frontends wait on their tickets.
     pub fn await_completed(&self, n: usize, timeout: Duration) -> bool {
-        let deadline = Instant::now() + timeout;
-        while self.completed() < n {
-            if Instant::now() > deadline {
-                return false;
-            }
-            std::thread::sleep(Duration::from_millis(2));
-        }
-        true
+        self.registry.await_finished(n, timeout)
     }
 
     /// Seconds since launch (makespan for reports).
@@ -179,8 +308,9 @@ impl Cluster {
         self.started.elapsed().as_secs_f64()
     }
 
-    /// Stop workers, drain, and return all responses.
-    pub fn shutdown(mut self) -> Result<Vec<EditResponse>> {
+    /// Stop workers, drain, and return all successful responses. Tickets
+    /// still outstanding afterwards resolve to `WorkerShutdown`.
+    pub fn shutdown(mut self) -> Result<Vec<Arc<EditResponse>>> {
         for s in &self.stops {
             s.store(true, Ordering::Relaxed);
         }
@@ -190,6 +320,7 @@ impl Cluster {
         if let Some(c) = self.collector.take() {
             c.join().expect("collector thread");
         }
+        self.registry.fail_all_pending(EditError::WorkerShutdown);
         let out = std::mem::take(&mut *self.responses.lock().unwrap());
         Ok(out)
     }

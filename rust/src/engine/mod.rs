@@ -8,5 +8,7 @@ pub mod teacache;
 pub mod worker;
 
 pub use queue::{Submitter, WorkerQueue};
-pub use request::{EditRequest, EditResponse, RequestTiming};
+pub use request::{
+    EditError, EditRequest, EditRequestBuilder, EditResponse, RequestTiming, WorkerEvent,
+};
 pub use worker::{Worker, WorkerSnapshot};

@@ -81,6 +81,22 @@ impl WorkerQueue {
         }
     }
 
+    /// Remove a queued request by id from either lane (cancellation).
+    /// Returns `true` iff the request was still queued here; a request
+    /// mid-preprocess or already admitted to the batch is not removable.
+    pub fn remove(&self, id: u64) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(pos) = g.raw.iter().position(|r| r.id == id) {
+            g.raw.remove(pos);
+            return true;
+        }
+        if let Some(pos) = g.ready.iter().position(|p| p.request.id == id) {
+            g.ready.remove(pos);
+            return true;
+        }
+        false
+    }
+
     /// Pending work (either lane + in-flight preprocessing).
     pub fn pending(&self) -> usize {
         let g = self.inner.lock().unwrap();
@@ -181,6 +197,24 @@ mod tests {
             std::thread::sleep(Duration::from_millis(1));
         }
         assert_eq!(q.pending(), 0);
+    }
+
+    #[test]
+    fn remove_cancels_queued_requests_in_both_lanes() {
+        let q = WorkerQueue::new();
+        q.push_raw(req(1));
+        q.push_raw(req(2));
+        assert!(q.remove(1));
+        assert!(!q.remove(1), "already removed");
+        assert_eq!(q.pending(), 1);
+        assert_eq!(q.pop_raw().unwrap().id, 2);
+
+        // ready lane: preprocess inline, then cancel before admission
+        let prep = crate::engine::prepost::preprocess(req(9), 8, 0);
+        q.push_ready(prep);
+        assert!(q.remove(9));
+        assert!(q.pop_ready().is_none());
+        assert!(!q.remove(42), "unknown id");
     }
 
     #[test]

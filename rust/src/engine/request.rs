@@ -1,9 +1,20 @@
-//! Request/response types and per-request lifecycle timing.
+//! Request/response types, structured errors, and per-request lifecycle
+//! timing.
+//!
+//! The request lifecycle is handle-based: `Cluster::submit` returns an
+//! `EditTicket` (see [`crate::cluster::lifecycle`]) fulfilled by the
+//! collector with either an [`EditResponse`] or a typed [`EditError`].
+//! Workers report progress to the collector as [`WorkerEvent`]s.
 
 use std::time::Instant;
 
 use crate::model::MaskSpec;
+use crate::util::rng::Pcg;
 use crate::util::tensor::Tensor;
+
+/// RNG stream tag for synthesized masks (shared by CLI + HTTP frontends
+/// so a given `prompt_seed` always derives the same mask).
+pub const MASK_STREAM: u64 = 0x6d61_736b; // "mask"
 
 /// An image-editing request (paper §2.1: template + mask + conditions).
 #[derive(Debug, Clone)]
@@ -60,6 +71,161 @@ pub struct EditResponse {
     pub mask_ratio: f64,
 }
 
+/// Why a request did not produce an [`EditResponse`]. Threaded from the
+/// worker through the collector into the ticket, and mapped onto HTTP
+/// status codes by the frontend.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum EditError {
+    #[error("unknown template {0:?}")]
+    UnknownTemplate(String),
+    #[error("invalid mask: {0}")]
+    InvalidMask(String),
+    #[error("request cancelled")]
+    Cancelled,
+    #[error("timed out waiting for completion")]
+    Timeout,
+    #[error("worker shut down before completing the request")]
+    WorkerShutdown,
+    /// Engine-side fault (artifact IO, cache failure) — a server error,
+    /// not a client one.
+    #[error("internal error: {0}")]
+    Internal(String),
+}
+
+impl EditError {
+    /// HTTP status the frontend returns for this failure.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            EditError::UnknownTemplate(_) => 404,
+            EditError::InvalidMask(_) => 400,
+            EditError::Cancelled => 409,
+            EditError::Timeout => 504,
+            EditError::WorkerShutdown => 503,
+            EditError::Internal(_) => 500,
+        }
+    }
+
+    /// Stable machine-readable tag (the `error_kind` JSON field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            EditError::UnknownTemplate(_) => "unknown_template",
+            EditError::InvalidMask(_) => "invalid_mask",
+            EditError::Cancelled => "cancelled",
+            EditError::Timeout => "timeout",
+            EditError::WorkerShutdown => "worker_shutdown",
+            EditError::Internal(_) => "internal",
+        }
+    }
+}
+
+/// Progress report from a worker engine to the cluster collector.
+#[derive(Debug)]
+pub enum WorkerEvent {
+    /// The request joined the running batch (queued -> running).
+    Started { id: u64, worker: usize },
+    /// The request left the engine, successfully or not.
+    Finished { id: u64, worker: usize, result: Result<EditResponse, EditError> },
+}
+
+impl WorkerEvent {
+    pub fn id(&self) -> u64 {
+        match self {
+            WorkerEvent::Started { id, .. } | WorkerEvent::Finished { id, .. } => *id,
+        }
+    }
+
+    /// Unwrap a successful completion (convenience for single-worker
+    /// drivers that only care about responses).
+    pub fn into_response(self) -> Option<EditResponse> {
+        match self {
+            WorkerEvent::Finished { result: Ok(resp), .. } => Some(resp),
+            _ => None,
+        }
+    }
+}
+
+/// Validating builder for [`EditRequest`] — the only construction path the
+/// frontends use, so malformed requests are rejected *before* they reach a
+/// worker queue.
+#[derive(Debug, Clone)]
+pub struct EditRequestBuilder {
+    id: u64,
+    template_id: String,
+    mask: Option<MaskSpec>,
+    prompt_seed: u64,
+    expect_tokens: Option<usize>,
+}
+
+impl EditRequestBuilder {
+    pub fn new(id: u64) -> EditRequestBuilder {
+        EditRequestBuilder {
+            id,
+            template_id: String::new(),
+            mask: None,
+            prompt_seed: 0,
+            expect_tokens: None,
+        }
+    }
+
+    pub fn template(mut self, template_id: impl Into<String>) -> Self {
+        self.template_id = template_id.into();
+        self
+    }
+
+    pub fn mask(mut self, mask: MaskSpec) -> Self {
+        self.mask = Some(mask);
+        self
+    }
+
+    pub fn prompt_seed(mut self, seed: u64) -> Self {
+        self.prompt_seed = seed;
+        self
+    }
+
+    /// Require the mask to cover exactly `tokens` latent tokens (the
+    /// serving model's L); mismatches fail `build()` with `InvalidMask`.
+    pub fn expect_tokens(mut self, tokens: usize) -> Self {
+        self.expect_tokens = Some(tokens);
+        self
+    }
+
+    /// Synthesize a contiguous blob mask of `ratio * hw^2` tokens, seeded
+    /// from the prompt seed (set the seed first). Rejects ratios outside
+    /// `(0, 1]` instead of silently clamping.
+    pub fn synth_mask(self, hw: usize, ratio: f64) -> Result<Self, EditError> {
+        if !(ratio > 0.0 && ratio <= 1.0) {
+            return Err(EditError::InvalidMask(format!(
+                "mask_ratio {ratio} outside (0, 1]"
+            )));
+        }
+        let mut rng = Pcg::with_stream(self.prompt_seed, MASK_STREAM);
+        let mask = MaskSpec::synth(hw, ratio, &mut rng);
+        Ok(self.mask(mask))
+    }
+
+    /// Validate and construct the request (arrival stamped at build time).
+    pub fn build(self) -> Result<EditRequest, EditError> {
+        if self.template_id.is_empty() {
+            return Err(EditError::UnknownTemplate(String::new()));
+        }
+        let mask = self
+            .mask
+            .ok_or_else(|| EditError::InvalidMask("mask is required".into()))?;
+        if mask.masked_count() == 0 {
+            return Err(EditError::InvalidMask("mask selects no tokens".into()));
+        }
+        if let Some(l) = self.expect_tokens {
+            if mask.tokens() != l {
+                return Err(EditError::InvalidMask(format!(
+                    "mask covers {} tokens but the model serves {l}",
+                    mask.tokens()
+                )));
+            }
+        }
+        Ok(EditRequest::new(self.id, self.template_id, mask, self.prompt_seed))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -70,5 +236,100 @@ mod tests {
         let r = EditRequest::new(1, "tpl", m, 99);
         assert_eq!(r.template_id, "tpl");
         assert_eq!(r.mask.masked_count(), 2);
+    }
+
+    #[test]
+    fn builder_valid_request() {
+        let r = EditRequestBuilder::new(7)
+            .template("tpl-0")
+            .prompt_seed(3)
+            .mask(MaskSpec::new(vec![0, 1, 2], 16))
+            .expect_tokens(16)
+            .build()
+            .expect("valid");
+        assert_eq!(r.id, 7);
+        assert_eq!(r.template_id, "tpl-0");
+        assert_eq!(r.prompt_seed, 3);
+        assert_eq!(r.mask.masked_count(), 3);
+    }
+
+    #[test]
+    fn builder_rejects_missing_template() {
+        let err = EditRequestBuilder::new(1)
+            .mask(MaskSpec::new(vec![0], 16))
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, EditError::UnknownTemplate(_)));
+    }
+
+    #[test]
+    fn builder_rejects_missing_mask() {
+        let err = EditRequestBuilder::new(1).template("t").build().unwrap_err();
+        assert!(matches!(err, EditError::InvalidMask(_)));
+    }
+
+    #[test]
+    fn builder_rejects_token_mismatch() {
+        let err = EditRequestBuilder::new(1)
+            .template("t")
+            .mask(MaskSpec::new(vec![0], 16))
+            .expect_tokens(64)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, EditError::InvalidMask(_)));
+    }
+
+    #[test]
+    fn builder_rejects_out_of_range_ratio() {
+        for ratio in [0.0, -0.5, 1.5] {
+            let err = EditRequestBuilder::new(1)
+                .template("t")
+                .synth_mask(8, ratio)
+                .unwrap_err();
+            assert!(matches!(err, EditError::InvalidMask(_)), "ratio {ratio}");
+        }
+        // in-range ratio synthesizes deterministically from the seed
+        let a = EditRequestBuilder::new(1)
+            .template("t")
+            .prompt_seed(9)
+            .synth_mask(8, 0.2)
+            .unwrap()
+            .build()
+            .unwrap();
+        let b = EditRequestBuilder::new(1)
+            .template("t")
+            .prompt_seed(9)
+            .synth_mask(8, 0.2)
+            .unwrap()
+            .build()
+            .unwrap();
+        assert_eq!(a.mask, b.mask);
+    }
+
+    #[test]
+    fn edit_error_http_mapping() {
+        assert_eq!(EditError::UnknownTemplate("x".into()).http_status(), 404);
+        assert_eq!(EditError::InvalidMask("m".into()).http_status(), 400);
+        assert_eq!(EditError::Cancelled.http_status(), 409);
+        assert_eq!(EditError::Timeout.http_status(), 504);
+        assert_eq!(EditError::WorkerShutdown.http_status(), 503);
+        assert_eq!(EditError::Internal("io".into()).http_status(), 500);
+        assert_eq!(EditError::Cancelled.kind(), "cancelled");
+        assert_eq!(EditError::Timeout.kind(), "timeout");
+        assert_eq!(EditError::Internal("io".into()).kind(), "internal");
+    }
+
+    #[test]
+    fn worker_event_accessors() {
+        let ev = WorkerEvent::Started { id: 4, worker: 0 };
+        assert_eq!(ev.id(), 4);
+        assert!(ev.into_response().is_none());
+        let ev = WorkerEvent::Finished {
+            id: 5,
+            worker: 0,
+            result: Err(EditError::Cancelled),
+        };
+        assert_eq!(ev.id(), 5);
+        assert!(ev.into_response().is_none());
     }
 }

@@ -30,7 +30,7 @@ use crate::cache::LatencyModel;
 use crate::config::{BatchingPolicy, CacheMode, EngineConfig, SystemKind};
 use crate::engine::prepost::{postprocess, preprocess, PreparedRequest};
 use crate::engine::queue::{Submitter, WorkerQueue};
-use crate::engine::request::{EditResponse, RequestTiming};
+use crate::engine::request::{EditError, EditResponse, RequestTiming, WorkerEvent};
 use crate::engine::teacache::TeaCacheGate;
 use crate::model::Latent;
 use crate::util::pool::ThreadPool;
@@ -84,7 +84,7 @@ pub struct Worker {
     lat_model: LatencyModel,
     queue: Arc<WorkerQueue>,
     prepost: Arc<ThreadPool>,
-    results: Sender<EditResponse>,
+    events: Sender<WorkerEvent>,
     shared: Arc<WorkerShared>,
     stop: Arc<AtomicBool>,
 }
@@ -96,7 +96,7 @@ impl Worker {
         rt: crate::runtime::ModelRuntime,
         tiers: Arc<TieredStore>,
         lat_model: LatencyModel,
-        results: Sender<EditResponse>,
+        events: Sender<WorkerEvent>,
     ) -> Worker {
         // FISEdit keeps activations GPU-resident -> free loads.
         let bandwidth = if cfg.system == SystemKind::FisEdit { 0.0 } else { cfg.sim_bandwidth };
@@ -123,7 +123,7 @@ impl Worker {
             lat_model,
             queue: WorkerQueue::new(),
             prepost,
-            results,
+            events,
             shared: Arc::new(WorkerShared::default()),
             stop: Arc::new(AtomicBool::new(false)),
         }
@@ -205,8 +205,7 @@ impl Worker {
                 }
                 while members.len() < cap {
                     let Some(prep) = self.take_prepared(members) else { break };
-                    let m = self.make_member(prep)?;
-                    members.push(m);
+                    self.admit_member(prep, members);
                 }
             }
             BatchingPolicy::ContinuousInline | BatchingPolicy::ContinuousDisaggregated => {
@@ -231,12 +230,36 @@ impl Worker {
                             || self.rt.config.bucket_for(k) <= batch_bucket
                     };
                     let Some(prep) = self.take_prepared_if(members, &fits) else { break };
-                    let m = self.make_member(prep)?;
-                    members.push(m);
+                    self.admit_member(prep, members);
                 }
             }
         }
         Ok(())
+    }
+
+    /// Turn a prepared request into a batch member, reporting the
+    /// queued -> running transition to the collector. Registration
+    /// failures become per-request errors instead of killing the engine.
+    fn admit_member(&self, prep: PreparedRequest, members: &mut Vec<Member>) {
+        let id = prep.request.id;
+        let template = prep.request.template_id.clone();
+        match self.make_member(prep) {
+            Ok(m) => {
+                let _ = self.events.send(WorkerEvent::Started { id, worker: self.id });
+                members.push(m);
+            }
+            Err(e) => {
+                // registration/cache faults are server errors; template
+                // existence was the frontend's check, not ours
+                let _ = self.events.send(WorkerEvent::Finished {
+                    id,
+                    worker: self.id,
+                    result: Err(EditError::Internal(format!(
+                        "admitting {template:?}: {e:#}"
+                    ))),
+                });
+            }
+        }
     }
 
     /// Pull one prepared request, preprocessing inline when the policy
@@ -598,19 +621,24 @@ impl Worker {
         let id = m.prep.request.id;
         let template_id = m.prep.request.template_id.clone();
         let ratio = m.prep.request.mask.ratio();
-        let results = self.results.clone();
+        let events = self.events.clone();
+        let worker = self.id;
         let cpu_us = self.cfg.prepost_cpu_us;
 
         let work = move || {
             let image = postprocess(&latent, &decoder, cpu_us);
             timing.e2e = arrival.elapsed().as_secs_f64();
-            let _ = results.send(EditResponse {
+            let _ = events.send(WorkerEvent::Finished {
                 id,
-                template_id,
-                image,
-                latent,
-                timing,
-                mask_ratio: ratio,
+                worker,
+                result: Ok(EditResponse {
+                    id,
+                    template_id,
+                    image,
+                    latent,
+                    timing,
+                    mask_ratio: ratio,
+                }),
             });
         };
 

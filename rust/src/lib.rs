@@ -15,11 +15,15 @@
 //!   pre/post-processing (§4.3), baseline modes (Diffusers / FISEdit /
 //!   TeaCache).
 //! - [`scheduler`]: mask-aware load balancing (§4.4, Algo 2) + baselines.
-//! - [`cluster`]: multi-worker deployment glue.
+//! - [`cluster`]: multi-worker deployment glue and the handle-based
+//!   request lifecycle — `Cluster::submit` returns an `EditTicket`
+//!   resolved per-id by the collector (`cluster::lifecycle`), with typed
+//!   `EditError`s and queued-request cancellation.
 //! - [`workload`]: Fig.-3 mask-ratio distributions, Poisson traffic,
 //!   trace record/replay.
 //! - [`metrics`], [`quality`], [`server`]: observability, image-quality
-//!   metrics (Table 2), and a minimal HTTP frontend.
+//!   metrics (Table 2), and the HTTP frontend (async `/v1/edits` submit /
+//!   poll / cancel endpoints plus a synchronous `/edit` wrapper).
 //! - [`util`]: in-tree substrates (RNG, JSON, stats, thread pool, bench
 //!   harness, property testing) — see DESIGN.md "Offline-crate
 //!   substitution".

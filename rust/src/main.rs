@@ -13,7 +13,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use instgenie::cache::latency_model::{calibrate, LatencyModel};
-use instgenie::cluster::{Cluster, ClusterOpts};
+use instgenie::cluster::{Cluster, ClusterOpts, RequestState};
 use instgenie::config::{BatchingPolicy, CacheMode, EngineConfig, SystemKind};
 use instgenie::metrics::Recorder;
 use instgenie::runtime::{Manifest, ModelRuntime};
@@ -53,7 +53,18 @@ fn print_help() {
          \x20 calibrate      --model fluxm [--reps 20]\n\
          \x20 workload-stats --dist production|public|viton\n\
          \x20 register       --model sdxlm --templates 4\n\
-         \x20 info"
+         \x20 info\n\
+         \n\
+         serve exposes the v1 request-lifecycle HTTP API:\n\
+         \x20 POST   /v1/edits       async submit -> 202 {{id, status_url}}\n\
+         \x20        curl -s localhost:8801/v1/edits -d '{{\"template\":\"tpl-0\",\"mask_ratio\":0.2,\"prompt_seed\":7}}'\n\
+         \x20 GET    /v1/edits/{{id}}  poll: queued|running|done (+ timing, image stats)\n\
+         \x20        curl -s localhost:8801/v1/edits/1000000\n\
+         \x20 DELETE /v1/edits/{{id}}  cancel while queued -> cancelled\n\
+         \x20        curl -s -X DELETE localhost:8801/v1/edits/1000000\n\
+         \x20 GET    /v1/stats       per-worker queue depths + completions\n\
+         \x20 POST   /edit           synchronous submit+wait wrapper\n\
+         \x20 GET    /healthz        liveness"
     );
 }
 
@@ -137,13 +148,21 @@ fn cmd_run(args: &Args) -> Result<()> {
         args.str("scheduler", "mask-aware"),
     );
     let t0 = std::time::Instant::now();
+    let mut tickets = Vec::with_capacity(events.len());
     replay(&events, |ev| {
-        cluster.submit_event(ev);
+        tickets.push(cluster.submit_event(ev));
     });
     cluster.await_completed(events.len(), std::time::Duration::from_secs(600));
     let makespan = t0.elapsed().as_secs_f64();
-    let responses = cluster.shutdown()?;
     let mut rec = Recorder::new();
+    for t in &tickets {
+        if let Some(st) = t.status() {
+            if let RequestState::Failed(e) = st.state {
+                rec.record_failure(&e);
+            }
+        }
+    }
+    let responses = cluster.shutdown()?;
     for r in &responses {
         rec.record(r);
     }

@@ -1,7 +1,7 @@
 //! Serving metrics: per-request latency decomposition, throughput, and
 //! report tables (the quantities of Fig. 4/12/14/16).
 
-use crate::engine::request::EditResponse;
+use crate::engine::request::{EditError, EditResponse};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -17,6 +17,9 @@ pub struct Report {
     pub mean_interruptions: f64,
     pub mean_steps_computed: f64,
     pub makespan: f64,
+    /// Requests that ended without a response (cancelled / failed /
+    /// shutdown).
+    pub failed: usize,
 }
 
 /// Collects responses and derives the report.
@@ -27,6 +30,7 @@ pub struct Recorder {
     e2e: Vec<f64>,
     interruptions: Vec<f64>,
     steps: Vec<f64>,
+    failures: Vec<&'static str>,
 }
 
 impl Recorder {
@@ -40,6 +44,11 @@ impl Recorder {
         self.e2e.push(resp.timing.e2e);
         self.interruptions.push(resp.timing.interruptions as f64);
         self.steps.push(resp.timing.steps_computed as f64);
+    }
+
+    /// Account a request that terminated without a response.
+    pub fn record_failure(&mut self, err: &EditError) {
+        self.failures.push(err.kind());
     }
 
     pub fn len(&self) -> usize {
@@ -61,6 +70,7 @@ impl Recorder {
             mean_interruptions: mean_or0(&self.interruptions),
             mean_steps_computed: mean_or0(&self.steps),
             makespan,
+            failed: self.failures.len(),
         }
     }
 }
@@ -86,7 +96,7 @@ impl Report {
             self.queue.mean,
             self.inference.mean,
             self.mean_interruptions,
-        )
+        ) + &if self.failed > 0 { format!(" failed={}", self.failed) } else { String::new() }
     }
 
     pub fn to_json(&self) -> Json {
@@ -107,6 +117,7 @@ impl Report {
             ("mean_interruptions", Json::num(self.mean_interruptions)),
             ("mean_steps_computed", Json::num(self.mean_steps_computed)),
             ("makespan", Json::num(self.makespan)),
+            ("failed", Json::num(self.failed as f64)),
         ])
     }
 }
@@ -139,8 +150,11 @@ mod tests {
         let mut r = Recorder::new();
         r.record(&resp(0.1, 0.5));
         r.record(&resp(0.3, 0.5));
+        r.record_failure(&EditError::Cancelled);
         let rep = r.report(2.0);
         assert_eq!(rep.completed, 2);
+        assert_eq!(rep.failed, 1);
+        assert!(rep.line().contains("failed=1"));
         assert!((rep.throughput - 1.0).abs() < 1e-12);
         assert!((rep.queue.mean - 0.2).abs() < 1e-12);
         assert!((rep.e2e.mean - 0.7).abs() < 1e-12);

@@ -1,12 +1,43 @@
 //! Minimal HTTP/1.1 frontend (the paper's FastAPI analogue; DESIGN.md
 //! "Offline-crate substitution").
 //!
-//! Endpoints:
-//! - `POST /edit`  body `{"template": "tpl-0", "mask_ratio": 0.15,
-//!   "prompt_seed": 7}` — routes through the cluster scheduler, blocks
-//!   until the edit completes, returns timing + image stats as JSON.
-//! - `GET /stats` — completed count + uptime.
-//! - `GET /healthz` — liveness.
+//! # API v1 — handle-based request lifecycle
+//!
+//! - `POST /v1/edits` — async submit. Body
+//!   `{"template": "tpl-0", "mask_ratio": 0.15, "prompt_seed": 7}`;
+//!   validates via [`EditRequestBuilder`], routes through the cluster
+//!   scheduler, and returns `202 {"id", "status": "queued",
+//!   "status_url", "worker"}` immediately.
+//! - `GET /v1/edits/{id}` — poll one request:
+//!   `{"status": "queued" | "running" | "done" | "cancelled" | "failed"}`
+//!   plus, once done, the full per-request `timing` decomposition
+//!   (queue / inference / e2e / interruptions / steps_computed) and
+//!   decoded-image stats.
+//! - `DELETE /v1/edits/{id}` — cancel while still queued
+//!   (`200 "cancelled"`); on an already-finished request it evicts the
+//!   retained result instead (`200 "evicted"`, freeing serve-mode
+//!   memory); `409` while running, `404` for unknown ids.
+//! - `GET /v1/stats` — uptime, completions, and per-worker queue depths.
+//! - `POST /edit` — synchronous compatibility wrapper: submit + wait on
+//!   the request's own ticket (no cross-request rendezvous), returning
+//!   timing + image stats.
+//! - `GET /stats`, `GET /healthz` — legacy counters / liveness.
+//!
+//! Failures are typed ([`EditError`]) and mapped onto status codes:
+//! 404 unknown template, 400 invalid mask, 409 cancelled, 504 timeout,
+//! 503 worker shutdown, 500 internal engine fault. Bodies over 1 MiB are
+//! rejected with `413` instead of being silently truncated.
+//!
+//! ```text
+//! curl -s localhost:8801/v1/edits -d '{"template":"tpl-0","mask_ratio":0.2}'
+//!   -> {"id": 1000000, "status": "queued", "status_url": "/v1/edits/1000000", ...}
+//! curl -s localhost:8801/v1/edits/1000000
+//!   -> {"id": 1000000, "status": "done", "timing": {"queue": ..., "e2e": ...}, ...}
+//! curl -s -X DELETE localhost:8801/v1/edits/1000001
+//!   -> {"id": 1000001, "status": "cancelled"}
+//! curl -s localhost:8801/v1/stats
+//!   -> {"completed": 1, "workers": [{"worker": 0, "queued": 0, ...}], ...}
+//! ```
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -16,11 +47,16 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::cluster::Cluster;
-use crate::engine::request::EditRequest;
-use crate::model::MaskSpec;
+use crate::cluster::{CancelOutcome, Cluster, RequestState};
+use crate::engine::request::{EditError, EditRequest, EditRequestBuilder, EditResponse};
 use crate::util::json::Json;
-use crate::util::rng::Pcg;
+use crate::util::tensor::Tensor;
+
+/// Largest accepted request body; larger uploads get `413`.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// How long the synchronous `POST /edit` wrapper waits on its ticket.
+const SYNC_EDIT_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Serve a cluster over HTTP until the process is killed.
 pub struct HttpServer {
@@ -30,6 +66,9 @@ pub struct HttpServer {
 
 impl HttpServer {
     pub fn new(cluster: Arc<Cluster>, first_id: u64) -> HttpServer {
+        // online serving is long-lived: don't accumulate the batch-replay
+        // response log (results live in the registry until evicted)
+        cluster.set_retain_responses(false);
         HttpServer { cluster, next_id: AtomicU64::new(first_id) }
     }
 
@@ -50,13 +89,26 @@ impl HttpServer {
 
     fn handle(&self, mut stream: TcpStream) -> Result<()> {
         stream.set_read_timeout(Some(Duration::from_secs(10)))?;
-        let (method, path, body) = read_request(&mut stream)?;
-        let (status, reply) = self.route(&method, &path, &body);
+        let (status, reply) = match read_request(&mut stream)? {
+            ReadOutcome::TooLarge { declared } => (
+                413,
+                error_obj(&format!(
+                    "body of {declared} bytes exceeds the {MAX_BODY_BYTES}-byte limit"
+                )),
+            ),
+            ReadOutcome::Request { method, path, body } => self.route(&method, &path, &body),
+        };
         write_response(&mut stream, status, &reply.to_string())
     }
 
     /// Route a request (separated from IO for unit testing).
     pub fn route(&self, method: &str, path: &str, body: &str) -> (u16, Json) {
+        if let Some(rest) = path.strip_prefix("/v1/edits/") {
+            return match rest.parse::<u64>() {
+                Ok(id) => self.edit_by_id(method, id),
+                Err(_) => (400, error_obj(&format!("bad request id {rest:?}"))),
+            };
+        }
         match (method, path) {
             ("GET", "/healthz") => (200, Json::obj(vec![("ok", Json::Bool(true))])),
             ("GET", "/stats") => (
@@ -67,42 +119,234 @@ impl HttpServer {
                     ("workers", Json::num(self.cluster.workers() as f64)),
                 ]),
             ),
-            ("POST", "/edit") => match self.edit(body) {
-                Ok(j) => (200, j),
-                Err(e) => (400, Json::obj(vec![("error", Json::str(e.to_string()))])),
-            },
-            _ => (404, Json::obj(vec![("error", Json::str("not found"))])),
+            ("GET", "/v1/stats") => self.stats_v1(),
+            ("POST", "/edit") => self.edit_sync(body),
+            ("POST", "/v1/edits") => self.edit_async(body),
+            _ => (404, error_obj("not found")),
         }
     }
 
-    fn edit(&self, body: &str) -> Result<Json> {
-        let j = Json::parse(body).context("invalid JSON body")?;
+    /// Parse + validate a submit body into an `EditRequest`. The id is
+    /// allocated only after validation, so rejected submissions never
+    /// burn ids.
+    fn build_request(&self, body: &str) -> Result<EditRequest, (u16, Json)> {
+        let j = Json::parse(body)
+            .map_err(|e| (400, error_obj(&format!("invalid JSON body: {e}"))))?;
         let template = j.at("template").as_str().unwrap_or("tpl-0").to_string();
-        let ratio = j.at("mask_ratio").as_f64().unwrap_or(0.15).clamp(0.001, 1.0);
+        let ratio = j.at("mask_ratio").as_f64().unwrap_or(0.15);
         let seed = j.at("prompt_seed").as_f64().unwrap_or(0.0) as u64;
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-
+        if !self.cluster.has_template(&template) {
+            return Err(edit_error_reply(&EditError::UnknownTemplate(template)));
+        }
         let hw = self.cluster.model.latent_hw;
-        let mut rng = Pcg::with_stream(seed, 0x6d61_736b);
-        let mask = MaskSpec::synth(hw, ratio, &mut rng);
-        let req = EditRequest::new(id, template, mask, seed);
-        let before = self.cluster.completed();
-        let worker = self.cluster.submit(req);
-        // block until our response count grows past the id (simple
-        // rendezvous: the frontend is synchronous per connection)
-        let ok = self
+        let mut req = EditRequestBuilder::new(0)
+            .template(template)
+            .prompt_seed(seed)
+            .synth_mask(hw, ratio)
+            .and_then(|b| b.expect_tokens(hw * hw).build())
+            .map_err(|e| edit_error_reply(&e))?;
+        req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        Ok(req)
+    }
+
+    /// `POST /edit`: submit + wait on this request's *own* ticket.
+    fn edit_sync(&self, body: &str) -> (u16, Json) {
+        let req = match self.build_request(body) {
+            Ok(r) => r,
+            Err(reply) => return reply,
+        };
+        let ticket = self.cluster.submit(req);
+        let outcome = ticket.wait(SYNC_EDIT_TIMEOUT);
+        // same meaning as the polling endpoint's field: wall time since
+        // submission (read before the entry is dropped)
+        let age = ticket.status().map(|s| s.age_secs).unwrap_or(0.0);
+        // the result is consumed right here — release the registry entry
+        // (no-op on a Timeout, whose entry is still live)
+        self.cluster.evict(ticket.id());
+        match outcome {
+            Ok(resp) => (200, done_body(ticket.id(), ticket.worker(), age, &resp)),
+            Err(e) => edit_error_reply(&e),
+        }
+    }
+
+    /// `POST /v1/edits`: async submit, returns the polling handle.
+    fn edit_async(&self, body: &str) -> (u16, Json) {
+        let req = match self.build_request(body) {
+            Ok(r) => r,
+            Err(reply) => return reply,
+        };
+        let ticket = self.cluster.submit(req);
+        (
+            202,
+            Json::obj(vec![
+                ("id", Json::num(ticket.id() as f64)),
+                ("status", Json::str("queued")),
+                ("status_url", Json::str(format!("/v1/edits/{}", ticket.id()))),
+                ("worker", Json::num(ticket.worker() as f64)),
+            ]),
+        )
+    }
+
+    /// `GET`/`DELETE /v1/edits/{id}`.
+    fn edit_by_id(&self, method: &str, id: u64) -> (u16, Json) {
+        match method {
+            "GET" => match self.cluster.status(id) {
+                None => (404, error_obj(&format!("no such request {id}"))),
+                Some(st) => {
+                    let reply = match &st.state {
+                        RequestState::Done(resp) => {
+                            done_body(id, st.worker, st.age_secs, resp)
+                        }
+                        RequestState::Failed(err) => {
+                            let mut pairs =
+                                status_pairs(id, st.state.label(), st.worker, st.age_secs);
+                            if *err != EditError::Cancelled {
+                                pairs.push(("error", Json::str(err.to_string())));
+                                pairs.push(("error_kind", Json::str(err.kind())));
+                            }
+                            Json::obj(pairs)
+                        }
+                        _ => Json::obj(status_pairs(
+                            id,
+                            st.state.label(),
+                            st.worker,
+                            st.age_secs,
+                        )),
+                    };
+                    (200, reply)
+                }
+            },
+            "DELETE" => match self.cluster.cancel(id) {
+                CancelOutcome::Cancelled => (
+                    200,
+                    Json::obj(vec![
+                        ("id", Json::num(id as f64)),
+                        ("status", Json::str("cancelled")),
+                    ]),
+                ),
+                // terminal entries are evicted instead (result already
+                // delivered; frees the retained response)
+                CancelOutcome::TooLate if self.cluster.evict(id) => (
+                    200,
+                    Json::obj(vec![
+                        ("id", Json::num(id as f64)),
+                        ("status", Json::str("evicted")),
+                    ]),
+                ),
+                CancelOutcome::TooLate => {
+                    (409, error_obj("too late to cancel: request is running"))
+                }
+                CancelOutcome::NotFound => {
+                    (404, error_obj(&format!("no such request {id}")))
+                }
+            },
+            _ => (405, error_obj("method not allowed")),
+        }
+    }
+
+    /// `GET /v1/stats`: per-worker queue depths + completion counters.
+    fn stats_v1(&self) -> (u16, Json) {
+        let depths = self
             .cluster
-            .await_completed(before + 1, Duration::from_secs(120));
-        anyhow::ensure!(ok, "edit timed out");
-        Ok(Json::obj(vec![
-            ("id", Json::num(id as f64)),
-            ("worker", Json::num(worker as f64)),
-            ("completed", Json::num(self.cluster.completed() as f64)),
-        ]))
+            .queue_depths()
+            .into_iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("worker", Json::num(d.worker as f64)),
+                    ("queued", Json::num(d.queued as f64)),
+                    ("outstanding", Json::num(d.outstanding as f64)),
+                ])
+            })
+            .collect();
+        (
+            200,
+            Json::obj(vec![
+                ("completed", Json::num(self.cluster.completed() as f64)),
+                ("uptime_secs", Json::num(self.cluster.elapsed())),
+                ("workers", Json::arr(depths)),
+            ]),
+        )
     }
 }
 
-fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
+fn status_pairs<'a>(
+    id: u64,
+    label: &'static str,
+    worker: usize,
+    age_secs: f64,
+) -> Vec<(&'a str, Json)> {
+    vec![
+        ("id", Json::num(id as f64)),
+        ("status", Json::str(label)),
+        ("worker", Json::num(worker as f64)),
+        ("age_secs", Json::num(age_secs)),
+    ]
+}
+
+/// Completed-request body: status + timing decomposition + image stats.
+fn done_body(id: u64, worker: usize, age_secs: f64, resp: &EditResponse) -> Json {
+    let t = &resp.timing;
+    let mut pairs = status_pairs(id, "done", worker, age_secs);
+    pairs.push(("template", Json::str(resp.template_id.clone())));
+    pairs.push(("mask_ratio", Json::num(resp.mask_ratio)));
+    pairs.push((
+        "timing",
+        Json::obj(vec![
+            ("queue", Json::num(t.queue)),
+            ("inference", Json::num(t.inference)),
+            ("e2e", Json::num(t.e2e)),
+            ("interruptions", Json::num(t.interruptions as f64)),
+            ("steps_computed", Json::num(t.steps_computed as f64)),
+        ]),
+    ));
+    pairs.push(("image", image_stats(&resp.image)));
+    Json::obj(pairs)
+}
+
+/// Shape + value summary of the decoded image (the response payload of a
+/// simulation frontend: stats instead of pixels).
+fn image_stats(image: &Tensor) -> Json {
+    let data = image.data();
+    let n = data.len().max(1) as f64;
+    let mean = data.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in data {
+        lo = lo.min(v as f64);
+        hi = hi.max(v as f64);
+    }
+    let shape = image.shape();
+    Json::obj(vec![
+        ("rows", Json::num(shape.first().copied().unwrap_or(0) as f64)),
+        ("cols", Json::num(shape.get(1).copied().unwrap_or(0) as f64)),
+        ("mean", Json::num(mean)),
+        ("min", Json::num(if data.is_empty() { 0.0 } else { lo })),
+        ("max", Json::num(if data.is_empty() { 0.0 } else { hi })),
+    ])
+}
+
+fn error_obj(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::str(msg))])
+}
+
+/// Map a typed [`EditError`] to its HTTP reply.
+fn edit_error_reply(e: &EditError) -> (u16, Json) {
+    (
+        e.http_status(),
+        Json::obj(vec![
+            ("error", Json::str(e.to_string())),
+            ("error_kind", Json::str(e.kind())),
+        ]),
+    )
+}
+
+enum ReadOutcome {
+    Request { method: String, path: String, body: String },
+    /// Declared Content-Length exceeded [`MAX_BODY_BYTES`] (or did not
+    /// parse, which gets the same refusal); the body was not read.
+    TooLarge { declared: usize },
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<ReadOutcome> {
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     reader.read_line(&mut line)?;
@@ -118,21 +362,36 @@ fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
             break;
         }
         if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
-            content_length = v.trim().parse().unwrap_or(0);
+            // an unparseable length (e.g. a value overflowing usize) must
+            // not fall back to "no body" and sneak past the size guard
+            content_length = v.trim().parse().unwrap_or(usize::MAX);
         }
     }
-    let mut body = vec![0u8; content_length.min(1 << 20)];
+    if content_length > MAX_BODY_BYTES {
+        return Ok(ReadOutcome::TooLarge { declared: content_length });
+    }
+    let mut body = vec![0u8; content_length];
     if content_length > 0 {
         reader.read_exact(&mut body)?;
     }
-    Ok((method, path, String::from_utf8_lossy(&body).into_owned()))
+    Ok(ReadOutcome::Request {
+        method,
+        path,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    })
 }
 
 fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
     let reason = match status {
         200 => "OK",
+        202 => "Accepted",
         400 => "Bad Request",
         404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Internal Server Error",
     };
     write!(

@@ -1,14 +1,19 @@
 //! Integration: full cluster serving across systems, policies and
-//! schedulers (requires `make artifacts`; tests skip silently otherwise).
+//! schedulers (requires `make artifacts`; tests skip silently otherwise),
+//! plus the handle-based lifecycle — per-request tickets, typed errors,
+//! and queued-request cancellation.
 
 use std::time::Duration;
 
 use instgenie::cache::LatencyModel;
-use instgenie::cluster::{Cluster, ClusterOpts};
+use instgenie::cluster::{CancelOutcome, Cluster, ClusterOpts};
 use instgenie::config::{BatchingPolicy, CacheMode, EngineConfig, SystemKind};
+use instgenie::engine::request::{EditError, EditRequestBuilder};
 use instgenie::metrics::Recorder;
+use instgenie::model::MaskSpec;
 use instgenie::runtime::Manifest;
 use instgenie::scheduler;
+use instgenie::util::rng::Pcg;
 use instgenie::workload::{MaskDist, TraceGen};
 
 fn launch(system: SystemKind, workers: usize, sched_name: &str) -> Option<Cluster> {
@@ -46,6 +51,106 @@ fn run_trace(cluster: &Cluster, rps: f64, count: usize) {
         cluster.await_completed(count, Duration::from_secs(120)),
         "timed out waiting for {count} responses"
     );
+}
+
+#[test]
+fn tickets_resolve_to_their_own_responses() {
+    let Some(cluster) = launch(SystemKind::InstGenIE, 2, "mask-aware") else { return };
+    let hw = cluster.model.latent_hw;
+    let mut rng = Pcg::new(11);
+    let tickets: Vec<_> = (0..6u64)
+        .map(|i| {
+            let req = EditRequestBuilder::new(i)
+                .template(if i % 2 == 0 { "tpl-0" } else { "tpl-1" })
+                .prompt_seed(100 + i)
+                .mask(MaskSpec::synth(hw, 0.12, &mut rng))
+                .build()
+                .expect("valid request");
+            cluster.submit_checked(req).expect("known template")
+        })
+        .collect();
+    for (i, t) in tickets.iter().enumerate() {
+        let resp = t.wait(Duration::from_secs(120)).expect("completion");
+        assert_eq!(resp.id, i as u64, "ticket must resolve to its own result");
+        assert_eq!(t.id(), i as u64);
+        assert!(resp.timing.e2e > 0.0);
+        // terminal states are retained: waiting again returns the same
+        assert_eq!(t.wait(Duration::from_millis(1)).unwrap().id, i as u64);
+        assert_eq!(t.status().unwrap().state.label(), "done");
+    }
+    // unknown templates are rejected before reaching a worker queue
+    let req = EditRequestBuilder::new(99)
+        .template("no-such-template")
+        .mask(MaskSpec::synth(hw, 0.1, &mut rng))
+        .build()
+        .unwrap();
+    assert!(matches!(
+        cluster.submit_checked(req),
+        Err(EditError::UnknownTemplate(_))
+    ));
+    cluster.shutdown().expect("shutdown");
+}
+
+#[test]
+fn cancel_queued_request_yields_cancelled() {
+    // inline batching with batch=1: later submissions stay in the raw
+    // queue while the first request runs -> deterministic cancel window
+    let Ok(manifest) = Manifest::load("artifacts") else { return };
+    let mcfg = manifest.model("sd21m").unwrap().config.clone();
+    let mut engine = EngineConfig::for_system(SystemKind::InstGenIE);
+    engine.batching = BatchingPolicy::ContinuousInline;
+    engine.max_batch = 1;
+    engine.prepost_cpu_us = 100;
+    let lat = LatencyModel::load_or_nominal("artifacts", "sd21m");
+    let sched = scheduler::by_name("request-lb", &mcfg, &lat, engine.cache_mode, 1).unwrap();
+    let cluster = Cluster::launch(
+        ClusterOpts {
+            workers: 1,
+            engine,
+            model: "sd21m".into(),
+            artifact_dir: "artifacts".into(),
+            templates: vec!["tpl-0".into()],
+            lat_model: lat,
+            warmup: false,
+        },
+        sched,
+    )
+    .unwrap();
+    let hw = cluster.model.latent_hw;
+    let mut rng = Pcg::new(5);
+    let tickets: Vec<_> = (0..4u64)
+        .map(|i| {
+            let req = EditRequestBuilder::new(i)
+                .template("tpl-0")
+                .prompt_seed(i)
+                .mask(MaskSpec::synth(hw, 0.1, &mut rng))
+                .build()
+                .unwrap();
+            cluster.submit(req)
+        })
+        .collect();
+    // the last request cannot have been admitted yet (batch=1, FIFO)
+    let victim = tickets.last().unwrap();
+    assert_eq!(cluster.cancel(victim.id()), CancelOutcome::Cancelled);
+    assert!(matches!(
+        victim.wait(Duration::from_secs(1)),
+        Err(EditError::Cancelled)
+    ));
+    assert_eq!(victim.status().unwrap().state.label(), "cancelled");
+    // double-cancel and unknown ids are distinct outcomes
+    assert_eq!(cluster.cancel(victim.id()), CancelOutcome::TooLate);
+    assert_eq!(cluster.cancel(424242), CancelOutcome::NotFound);
+    // the survivors complete untouched; cancellation retired the book
+    // entry, so the collector's accounting still drains cleanly
+    for t in &tickets[..3] {
+        assert_eq!(
+            t.wait(Duration::from_secs(120)).expect("survivor").id,
+            t.id()
+        );
+    }
+    assert!(cluster.queue_depths().iter().all(|d| d.outstanding == 0));
+    let responses = cluster.shutdown().expect("shutdown");
+    assert_eq!(responses.len(), 3);
 }
 
 #[test]

@@ -1,14 +1,17 @@
 //! Integration: the HTTP frontend routes edits through the cluster
-//! (paper Fig. 8's user-facing path ① … ⑤ ).
+//! (paper Fig. 8's user-facing path ① … ⑤ ) — covering the async v1
+//! lifecycle endpoints (submit / poll / cancel), the synchronous `/edit`
+//! wrapper (per-ticket, no cross-request rendezvous), oversized-body
+//! rejection, and structured error mapping.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use instgenie::cache::LatencyModel;
 use instgenie::cluster::{Cluster, ClusterOpts};
-use instgenie::config::{EngineConfig, SystemKind};
+use instgenie::config::{BatchingPolicy, EngineConfig, SystemKind};
 use instgenie::runtime::Manifest;
 use instgenie::scheduler;
 use instgenie::server::HttpServer;
@@ -23,14 +26,39 @@ fn http(addr: &str, req: &str) -> String {
     out
 }
 
-#[test]
-fn edit_stats_healthz_round_trip() {
-    let Ok(manifest) = Manifest::load("artifacts") else { return };
+fn post(addr: &str, path: &str, body: &str) -> String {
+    http(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn get(addr: &str, path: &str) -> String {
+    http(addr, &format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n"))
+}
+
+fn delete(addr: &str, path: &str) -> String {
+    http(addr, &format!("DELETE {path} HTTP/1.1\r\nHost: x\r\n\r\n"))
+}
+
+fn body_json(resp: &str) -> Json {
+    Json::parse(resp.split("\r\n\r\n").nth(1).expect("body")).expect("json body")
+}
+
+/// Launch cluster + HTTP server on `addr`; None when artifacts are absent.
+fn serve(addr: &str, first_id: u64, tweak: impl FnOnce(&mut EngineConfig)) -> Option<Arc<HttpServer>> {
+    let manifest = Manifest::load("artifacts").ok()?;
     let mcfg = manifest.model("sd21m").unwrap().config.clone();
     let mut engine = EngineConfig::for_system(SystemKind::InstGenIE);
     engine.prepost_cpu_us = 100;
+    tweak(&mut engine);
     let lat = LatencyModel::load_or_nominal("artifacts", "sd21m");
-    let sched = scheduler::by_name("mask-aware", &mcfg, &lat, engine.cache_mode, 8).unwrap();
+    let sched =
+        scheduler::by_name("mask-aware", &mcfg, &lat, engine.cache_mode, engine.max_batch)
+            .unwrap();
     let cluster = Arc::new(
         Cluster::launch(
             ClusterOpts {
@@ -38,7 +66,7 @@ fn edit_stats_healthz_round_trip() {
                 engine,
                 model: "sd21m".into(),
                 artifact_dir: "artifacts".into(),
-                templates: vec!["tpl-0".into()],
+                templates: vec!["tpl-0".into(), "tpl-1".into()],
                 lat_model: lat,
                 warmup: false,
             },
@@ -46,18 +74,7 @@ fn edit_stats_healthz_round_trip() {
         )
         .unwrap(),
     );
-    let server = Arc::new(HttpServer::new(Arc::clone(&cluster), 1));
-    // route() unit path (no sockets)
-    let (code, body) = server.route("GET", "/healthz", "");
-    assert_eq!(code, 200);
-    assert_eq!(body.at("ok").as_bool(), Some(true));
-    let (code, _) = server.route("GET", "/nope", "");
-    assert_eq!(code, 404);
-    let (code, body) = server.route("POST", "/edit", "{not json");
-    assert_eq!(code, 400, "{body}");
-
-    // full socket path
-    let addr = "127.0.0.1:18923";
+    let server = Arc::new(HttpServer::new(cluster, first_id));
     {
         let server = Arc::clone(&server);
         let addr = addr.to_string();
@@ -66,21 +83,198 @@ fn edit_stats_healthz_round_trip() {
         });
     }
     std::thread::sleep(Duration::from_millis(100));
+    Some(server)
+}
 
-    let body = r#"{"template": "tpl-0", "mask_ratio": 0.15, "prompt_seed": 7}"#;
-    let req = format!(
-        "POST /edit HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
-        body.len(),
-        body
-    );
-    let resp = http(addr, &req);
+#[test]
+fn edit_stats_healthz_round_trip() {
+    let Some(server) = serve("127.0.0.1:18923", 1, |_| {}) else { return };
+    let addr = "127.0.0.1:18923";
+    // route() unit path (no sockets)
+    let (code, body) = server.route("GET", "/healthz", "");
+    assert_eq!(code, 200);
+    assert_eq!(body.at("ok").as_bool(), Some(true));
+    let (code, _) = server.route("GET", "/nope", "");
+    assert_eq!(code, 404);
+    let (code, body) = server.route("POST", "/edit", "{not json");
+    assert_eq!(code, 400, "{body}");
+    // typed validation errors surface before submission
+    let (code, body) = server.route("POST", "/edit", r#"{"mask_ratio": 7.5}"#);
+    assert_eq!(code, 400, "{body}");
+    assert_eq!(body.at("error_kind").as_str(), Some("invalid_mask"));
+    let (code, body) =
+        server.route("POST", "/edit", r#"{"template": "no-such-template"}"#);
+    assert_eq!(code, 404, "{body}");
+    assert_eq!(body.at("error_kind").as_str(), Some("unknown_template"));
+
+    // full socket path: synchronous wrapper returns this request's own
+    // result with the timing decomposition
+    let resp = post(addr, "/edit", r#"{"template": "tpl-0", "mask_ratio": 0.15, "prompt_seed": 7}"#);
     assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
-    let json_body = resp.split("\r\n\r\n").nth(1).unwrap();
-    let j = Json::parse(json_body).unwrap();
+    let j = body_json(&resp);
     assert_eq!(j.at("id").as_usize(), Some(1));
+    assert_eq!(j.at("status").as_str(), Some("done"));
+    assert!(j.at("timing").at("e2e").as_f64().unwrap() > 0.0);
+    assert_eq!(j.at("timing").at("steps_computed").as_usize(), Some(8));
 
-    let resp = http(addr, "GET /stats HTTP/1.1\r\nHost: x\r\n\r\n");
+    let resp = get(addr, "/stats");
     assert!(resp.starts_with("HTTP/1.1 200"));
-    let j = Json::parse(resp.split("\r\n\r\n").nth(1).unwrap()).unwrap();
+    let j = body_json(&resp);
     assert!(j.at("completed").as_usize().unwrap_or(0) >= 1);
+
+    let resp = get(addr, "/v1/stats");
+    let j = body_json(&resp);
+    let workers = j.at("workers").as_arr().expect("workers array");
+    assert_eq!(workers.len(), 1);
+    assert!(workers[0].at("queued").as_usize().is_some());
+    assert!(workers[0].at("outstanding").as_usize().is_some());
+}
+
+#[test]
+fn v1_submit_poll_done_round_trip() {
+    let Some(_server) = serve("127.0.0.1:18924", 100, |_| {}) else { return };
+    let addr = "127.0.0.1:18924";
+
+    let resp = post(addr, "/v1/edits", r#"{"template": "tpl-1", "mask_ratio": 0.2, "prompt_seed": 3}"#);
+    assert!(resp.starts_with("HTTP/1.1 202"), "{resp}");
+    let j = body_json(&resp);
+    let id = j.at("id").as_usize().expect("id");
+    assert_eq!(id, 100);
+    assert_eq!(j.at("status").as_str(), Some("queued"));
+    assert_eq!(j.at("status_url").as_str(), Some("/v1/edits/100"));
+
+    // poll until done; every intermediate state must be a legal one
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let done = loop {
+        let j = body_json(&get(addr, &format!("/v1/edits/{id}")));
+        match j.at("status").as_str() {
+            Some("done") => break j,
+            Some("queued") | Some("running") => {}
+            other => panic!("unexpected status {other:?}"),
+        }
+        assert!(Instant::now() < deadline, "poll timed out");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    // full per-request timing + image stats in the terminal state
+    assert_eq!(done.at("template").as_str(), Some("tpl-1"));
+    let t = done.at("timing");
+    assert!(t.at("queue").as_f64().unwrap() >= 0.0);
+    assert!(t.at("inference").as_f64().unwrap() > 0.0);
+    assert!(t.at("e2e").as_f64().unwrap() > 0.0);
+    assert_eq!(t.at("steps_computed").as_usize(), Some(8));
+    assert!(done.at("image").at("rows").as_usize().unwrap() > 0);
+    assert!(done.at("image").at("mean").as_f64().is_some());
+
+    // unknown ids and malformed ids
+    let resp = get(addr, "/v1/edits/999999");
+    assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+    let resp = get(addr, "/v1/edits/notanid");
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+}
+
+#[test]
+fn v1_cancel_queued_request() {
+    // inline batching with batch=1 keeps later submissions in the raw
+    // queue for several inference rounds -> deterministic cancel window
+    let Some(_server) = serve("127.0.0.1:18925", 500, |e| {
+        e.batching = BatchingPolicy::ContinuousInline;
+        e.max_batch = 1;
+        // inline preprocess burns 20 ms per admission, widening the
+        // window in which the tail request is still cancellable
+        e.prepost_cpu_us = 20_000;
+    }) else {
+        return;
+    };
+    let addr = "127.0.0.1:18925";
+
+    let mut ids = Vec::new();
+    for seed in 0..4 {
+        let resp = post(
+            addr,
+            "/v1/edits",
+            &format!(r#"{{"template": "tpl-0", "mask_ratio": 0.1, "prompt_seed": {seed}}}"#),
+        );
+        assert!(resp.starts_with("HTTP/1.1 202"), "{resp}");
+        ids.push(body_json(&resp).at("id").as_usize().unwrap());
+    }
+    // the last request cannot have been admitted yet (batch=1, FIFO)
+    let victim = *ids.last().unwrap();
+    let resp = delete(addr, &format!("/v1/edits/{victim}"));
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert_eq!(body_json(&resp).at("status").as_str(), Some("cancelled"));
+
+    // cancelled is terminal + visible; a second DELETE evicts the entry
+    let j = body_json(&get(addr, &format!("/v1/edits/{victim}")));
+    assert_eq!(j.at("status").as_str(), Some("cancelled"));
+    let resp = delete(addr, &format!("/v1/edits/{victim}"));
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert_eq!(body_json(&resp).at("status").as_str(), Some("evicted"));
+    let resp = get(addr, &format!("/v1/edits/{victim}"));
+    assert!(resp.starts_with("HTTP/1.1 404"), "evicted entries are gone: {resp}");
+    let resp = delete(addr, &format!("/v1/edits/{victim}"));
+    assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+    let resp = delete(addr, "/v1/edits/424242");
+    assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+
+    // the surviving requests still complete
+    let deadline = Instant::now() + Duration::from_secs(120);
+    for id in &ids[..3] {
+        loop {
+            let j = body_json(&get(addr, &format!("/v1/edits/{id}")));
+            if j.at("status").as_str() == Some("done") {
+                break;
+            }
+            assert!(Instant::now() < deadline, "survivors never completed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+}
+
+#[test]
+fn oversized_body_yields_413() {
+    let Some(_server) = serve("127.0.0.1:18926", 900, |_| {}) else { return };
+    // declare 2 MiB: the server must refuse instead of truncating the read
+    let resp = http(
+        "127.0.0.1:18926",
+        &format!(
+            "POST /edit HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n",
+            2 << 20
+        ),
+    );
+    assert!(resp.starts_with("HTTP/1.1 413"), "{resp}");
+}
+
+#[test]
+fn concurrent_sync_edits_get_their_own_results() {
+    // Regression for the global-rendezvous race: two concurrent POST
+    // /edit used to block on "total completions grew", so one connection
+    // could unblock on the *other* request's completion. With tickets,
+    // each response carries its own id + full timing.
+    let Some(_server) = serve("127.0.0.1:18927", 700, |_| {}) else { return };
+    let addr = "127.0.0.1:18927";
+    let spawn = |seed: u64| {
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            post(
+                &addr,
+                "/edit",
+                &format!(r#"{{"template": "tpl-0", "mask_ratio": 0.12, "prompt_seed": {seed}}}"#),
+            )
+        })
+    };
+    let a = spawn(11);
+    let b = spawn(22);
+    let ra = a.join().unwrap();
+    let rb = b.join().unwrap();
+    let mut ids = Vec::new();
+    for resp in [&ra, &rb] {
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        let j = body_json(resp);
+        assert_eq!(j.at("status").as_str(), Some("done"));
+        // a borrowed completion would miss this request's own timing
+        assert_eq!(j.at("timing").at("steps_computed").as_usize(), Some(8));
+        assert!(j.at("timing").at("e2e").as_f64().unwrap() > 0.0);
+        ids.push(j.at("id").as_usize().unwrap());
+    }
+    assert_ne!(ids[0], ids[1], "each connection must resolve its own ticket");
 }
