@@ -29,4 +29,13 @@ if [[ "${1:-}" != "--no-clippy" ]]; then
   run cargo clippy --all-targets -- -D warnings
 fi
 
+# Cluster bench smoke: throughput + p50/p99 per scheduler, written to
+# BENCH_cluster.json to seed the perf trajectory. Needs the compiled
+# model artifacts; skipped on bare checkouts (the bench also self-skips).
+if [[ -d artifacts ]]; then
+  run cargo run --release --example cluster_bench -- 24 8 2
+else
+  echo "ci.sh: artifacts/ absent; skipping cluster bench smoke"
+fi
+
 echo "ci.sh: all checks passed"

@@ -1,0 +1,116 @@
+//! Cluster bench smoke: replay one Poisson trace per routing policy
+//! through a small cluster and write `BENCH_cluster.json` (throughput +
+//! p50/p99 end-to-end latency per scheduler). `ci.sh` runs this after
+//! the test suite so every PR leaves a comparable perf record.
+//!
+//! Run: `cargo run --release --example cluster_bench -- [requests] [rps] [workers]`
+
+use std::time::Duration;
+
+use instgenie::cache::LatencyModel;
+use instgenie::cluster::{Cluster, ClusterOpts};
+use instgenie::config::{EngineConfig, SystemKind};
+use instgenie::metrics::Recorder;
+use instgenie::runtime::Manifest;
+use instgenie::scheduler;
+use instgenie::util::json::Json;
+use instgenie::workload::{replay, MaskDist, TraceGen};
+
+const TEMPLATES: usize = 2;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(24);
+    let rps: f64 = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(8.0);
+    let workers: usize = args.get(2).and_then(|a| a.parse().ok()).unwrap_or(2);
+
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("[cluster_bench] no artifacts; skipping (run `make artifacts`)");
+        return Ok(());
+    };
+    // smallest model for a smoke run, falling back to whatever is built
+    let model = if manifest.models.contains_key("sd21m") {
+        "sd21m".to_string()
+    } else {
+        match manifest.models.keys().next() {
+            Some(m) => m.clone(),
+            None => {
+                eprintln!("[cluster_bench] empty manifest; skipping");
+                return Ok(());
+            }
+        }
+    };
+    let mcfg = manifest.model(&model)?.config.clone();
+    let lat = LatencyModel::load_or_nominal("artifacts", &model);
+
+    println!("== cluster bench smoke: model={model} workers={workers} rps={rps} requests={requests} ==");
+    let mut rows: Vec<(&str, Json)> = Vec::new();
+    for sched_name in scheduler::POLICY_NAMES {
+        let mut engine = EngineConfig::for_system(SystemKind::InstGenIE);
+        engine.prepost_cpu_us = 200;
+        let sched =
+            scheduler::by_name(sched_name, &mcfg, &lat, engine.cache_mode, engine.max_batch)
+                .expect("scheduler");
+        let cluster = Cluster::launch(
+            ClusterOpts {
+                workers,
+                engine,
+                model: model.clone(),
+                artifact_dir: "artifacts".into(),
+                templates: (0..TEMPLATES).map(|i| format!("tpl-{i}")).collect(),
+                lat_model: lat.clone(),
+                warmup: true,
+            },
+            sched,
+        )?;
+        let gen = TraceGen::new(rps, MaskDist::Production, TEMPLATES, 42);
+        let events = gen.generate(requests);
+        let t0 = std::time::Instant::now();
+        replay(&events, |ev| {
+            cluster.submit_event(ev);
+        });
+        anyhow::ensure!(
+            cluster.await_completed(events.len(), Duration::from_secs(600)),
+            "{sched_name}: serving timed out"
+        );
+        let makespan = t0.elapsed().as_secs_f64();
+        let responses = cluster.shutdown()?;
+        let mut rec = Recorder::new();
+        for r in &responses {
+            rec.record(r);
+        }
+        let rep = rec.report(makespan);
+        println!(
+            "{sched_name:>12}: tput={:.2} req/s  e2e p50={:.1}ms p99={:.1}ms  queue mean={:.1}ms",
+            rep.throughput,
+            rep.e2e.p50 * 1e3,
+            rep.e2e.p99 * 1e3,
+            rep.queue.mean * 1e3,
+        );
+        rows.push((
+            sched_name,
+            Json::obj(vec![
+                ("throughput", Json::num(rep.throughput)),
+                ("p50_e2e", Json::num(rep.e2e.p50)),
+                ("p95_e2e", Json::num(rep.e2e.p95)),
+                ("p99_e2e", Json::num(rep.e2e.p99)),
+                ("mean_e2e", Json::num(rep.e2e.mean)),
+                ("mean_queue", Json::num(rep.queue.mean)),
+                ("completed", Json::num(rep.completed as f64)),
+                ("makespan", Json::num(rep.makespan)),
+            ]),
+        ));
+    }
+
+    let out = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("workers", Json::num(workers as f64)),
+        ("requests", Json::num(requests as f64)),
+        ("rps", Json::num(rps)),
+        ("templates", Json::num(TEMPLATES as f64)),
+        ("schedulers", Json::obj(rows)),
+    ]);
+    std::fs::write("BENCH_cluster.json", out.to_string())?;
+    println!("[cluster_bench] wrote BENCH_cluster.json");
+    Ok(())
+}

@@ -12,9 +12,12 @@ use std::time::Duration;
 use instgenie::cache::LatencyModel;
 use instgenie::cluster::{Cluster, ClusterOpts};
 use instgenie::config::{EngineConfig, SystemKind};
+use instgenie::engine::request::EditRequestBuilder;
 use instgenie::metrics::Recorder;
+use instgenie::model::MaskSpec;
 use instgenie::runtime::Manifest;
 use instgenie::scheduler;
+use instgenie::util::rng::Pcg;
 use instgenie::workload::{replay, MaskDist, TraceGen};
 
 fn main() -> anyhow::Result<()> {
@@ -75,6 +78,45 @@ fn main() -> anyhow::Result<()> {
         anyhow::ensure!(resp.id == t.id(), "ticket resolved to a foreign response");
     }
     let makespan = t0.elapsed().as_secs_f64();
+
+    // online template lifecycle: register a template while the cluster is
+    // live (background trace), edit against it without a restart, then
+    // retire it — freeing its bytes on every worker tier
+    println!("\nregistering tpl-online while serving...");
+    cluster.register_template_async("tpl-online");
+    cluster
+        .await_template("tpl-online", Duration::from_secs(600))
+        .map_err(|e| anyhow::anyhow!("online registration: {e}"))?;
+    let status = cluster
+        .template_status("tpl-online")
+        .expect("registered template");
+    println!(
+        "tpl-online ready: {} bytes, residency per worker: {:?}",
+        status.info.bytes,
+        status
+            .residency
+            .iter()
+            .map(|r| r.label())
+            .collect::<Vec<_>>()
+    );
+    let mut rng = Pcg::new(7);
+    let req = EditRequestBuilder::new(1_000_000)
+        .template("tpl-online")
+        .prompt_seed(9)
+        .mask(MaskSpec::synth(cluster.model.latent_hw, 0.15, &mut rng))
+        .build()
+        .map_err(|e| anyhow::anyhow!("build: {e}"))?;
+    let ticket = cluster
+        .submit_checked(req)
+        .map_err(|e| anyhow::anyhow!("submit: {e}"))?;
+    let resp = ticket
+        .wait(Duration::from_secs(600))
+        .map_err(|e| anyhow::anyhow!("online edit: {e}"))?;
+    println!(
+        "online edit served in {:.1}ms e2e; retiring tpl-online: {:?}",
+        resp.timing.e2e * 1e3,
+        cluster.retire_template("tpl-online"),
+    );
 
     let responses = cluster.shutdown()?;
     let mut rec = Recorder::new();

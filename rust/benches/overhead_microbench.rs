@@ -9,7 +9,7 @@ use instgenie::cache::LatencyModel;
 use instgenie::config::CacheMode;
 use instgenie::model::{Latent, MaskSpec, PackBuffer, Permutation};
 use instgenie::runtime::Manifest;
-use instgenie::scheduler::{MaskAware, Outstanding, Scheduler};
+use instgenie::scheduler::{MaskAware, Outstanding, RouteCtx, Scheduler};
 use instgenie::util::bench::{fmt_secs, time_it, Table};
 use instgenie::util::rng::Pcg;
 
@@ -37,8 +37,9 @@ fn main() {
         })
         .collect();
     let req = Outstanding { id: 99, masked_tokens: 32, remaining_steps: cfg.steps };
+    let ctx = RouteCtx::default();
     let s = time_it(10, common::scaled(200), || {
-        std::hint::black_box(sched.pick(&req, &book));
+        std::hint::black_box(sched.pick(&req, &book, &ctx));
     });
     table.rowf(&[&"scheduler decision (Algo 2)", &fmt_secs(s.mean), &"0.6 ms"]);
 

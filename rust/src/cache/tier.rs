@@ -5,6 +5,12 @@
 //! pays a promotion (real file IO + bandwidth pacing) — the paper hides
 //! this under queuing time by starting promotion at enqueue, which the
 //! worker reproduces by prefetching via the pre/post pool.
+//!
+//! In a cluster each worker owns its own host tier (residency is what the
+//! scheduler routes on) while the disk tier is shared: spill writes are
+//! atomic (temp file + rename), so concurrent evictions of the same
+//! template by different workers are safe, and [`TieredStore::remove`]
+//! (template retirement) frees both tiers.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -22,6 +28,29 @@ pub struct TierStats {
     pub disk_promotions: u64,
     pub misses: u64,
     pub evictions: u64,
+}
+
+/// Where a template currently lives in one worker's tier hierarchy — the
+/// signal the cluster scheduler weighs as "cache loading" load (§4.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Residency {
+    /// Hot in the host tier: serving needs no cache load.
+    Host,
+    /// Spilled to the disk tier: serving pays a promotion.
+    Disk,
+    /// Unknown to both tiers: serving needs a full registration.
+    Absent,
+}
+
+impl Residency {
+    /// Stable label for status endpoints.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Residency::Host => "host",
+            Residency::Disk => "disk",
+            Residency::Absent => "absent",
+        }
+    }
 }
 
 struct HostSlot {
@@ -42,6 +71,10 @@ struct Inner {
     host: HashMap<String, HostSlot>,
     bytes: usize,
     stats: TierStats,
+    /// Templates removed (retired) since the last explicit insert: an
+    /// in-flight disk promotion that raced [`TieredStore::remove`] must
+    /// not resurrect their bytes in the host tier.
+    tombstones: std::collections::HashSet<String>,
 }
 
 impl TieredStore {
@@ -54,6 +87,7 @@ impl TieredStore {
                 host: HashMap::new(),
                 bytes: 0,
                 stats: TierStats::default(),
+                tombstones: std::collections::HashSet::new(),
             }),
         }
     }
@@ -66,18 +100,58 @@ impl TieredStore {
         self.inner.lock().unwrap().bytes
     }
 
+    /// Templates currently resident in the host tier.
+    pub fn host_templates(&self) -> usize {
+        self.inner.lock().unwrap().host.len()
+    }
+
     /// Insert a freshly registered template (evicting LRU to disk if the
-    /// budget overflows).
+    /// budget overflows). Re-inserting a resident template replaces it
+    /// without double-counting its bytes.
     pub fn insert(&self, store: Arc<TemplateActivations>) -> Result<()> {
         let size = store.size_bytes();
         let mut inner = self.inner.lock().unwrap();
+        inner.tombstones.remove(&store.template_id); // re-registration revives
         inner.bytes += size;
-        inner.host.insert(
+        if let Some(old) = inner.host.insert(
             store.template_id.clone(),
             HostSlot { store, last_used: Instant::now() },
-        );
+        ) {
+            inner.bytes -= old.store.size_bytes();
+        }
         self.evict_to_budget(&mut inner)?;
         Ok(())
+    }
+
+    /// Drop a template from both tiers (retirement): frees its host-tier
+    /// bytes and deletes its spill file. Returns the host bytes freed.
+    pub fn remove(&self, template_id: &str) -> usize {
+        let freed = {
+            let mut inner = self.inner.lock().unwrap();
+            // block concurrent in-flight promotions from re-inserting
+            inner.tombstones.insert(template_id.to_string());
+            match inner.host.remove(template_id) {
+                Some(slot) => {
+                    let size = slot.store.size_bytes();
+                    inner.bytes -= size;
+                    size
+                }
+                None => 0,
+            }
+        };
+        let _ = std::fs::remove_file(self.spill_path(template_id));
+        freed
+    }
+
+    /// Which tier (if any) holds the template right now.
+    pub fn residency(&self, template_id: &str) -> Residency {
+        if self.inner.lock().unwrap().host.contains_key(template_id) {
+            Residency::Host
+        } else if self.spill_path(template_id).exists() {
+            Residency::Disk
+        } else {
+            Residency::Absent
+        }
     }
 
     /// Fetch a template's activations, promoting from disk if required.
@@ -100,16 +174,44 @@ impl TieredStore {
             return Ok(None);
         }
         let t0 = Instant::now();
-        let store = Arc::new(read_spill(&path)?);
+        let store = match read_spill(&path) {
+            Ok(s) => Arc::new(s),
+            Err(_) => {
+                // corrupt or foreign-format spill: drop it and treat the
+                // template as absent (callers re-register) rather than
+                // poisoning the engine with an IO error
+                let _ = std::fs::remove_file(&path);
+                self.inner.lock().unwrap().stats.misses += 1;
+                return Ok(None);
+            }
+        };
+        // the spill embeds its template id: a *different* id that merely
+        // sanitizes to the same filename must never be served as ours
+        // (the file legitimately belongs to the other template, so it is
+        // left in place)
+        if store.template_id != template_id {
+            self.inner.lock().unwrap().stats.misses += 1;
+            return Ok(None);
+        }
         pace(store.size_bytes(), self.disk_bandwidth, t0);
         {
             let mut inner = self.inner.lock().unwrap();
             inner.stats.disk_promotions += 1;
+            // a removal (retirement) raced this promotion: serve the
+            // already-read activations to the draining caller, but do not
+            // resurrect the template's bytes in the host tier
+            if inner.tombstones.contains(template_id) {
+                return Ok(Some(store));
+            }
             inner.bytes += store.size_bytes();
-            inner.host.insert(
+            // a concurrent promotion (enqueue-time prefetch vs admission)
+            // may have landed first: replace without double-counting
+            if let Some(old) = inner.host.insert(
                 template_id.to_string(),
                 HostSlot { store: Arc::clone(&store), last_used: Instant::now() },
-            );
+            ) {
+                inner.bytes -= old.store.size_bytes();
+            }
             self.evict_to_budget(&mut inner)?;
         }
         Ok(Some(store))
@@ -165,17 +267,27 @@ fn pace(bytes: usize, bandwidth: f64, t0: Instant) {
 
 // -- spill file format -------------------------------------------------------
 // header (little-endian u64s): magic, steps, blocks, tokens, hidden, seed,
-// has_kv; then entries in (step, block) order, each y [+ k, v] as raw f32.
+// has_kv, id_len; then the template id (id_len raw bytes — filenames are
+// sanitized, so distinct ids can share a path and the embedded id is the
+// authority); then entries in (step, block) order, each y [+ k, v] as raw
+// f32.
 
 #[allow(clippy::unusual_byte_groupings)]
-const SPILL_MAGIC: u64 = 0x1057_6e13_ac71_ca11;
+const SPILL_MAGIC: u64 = 0x1057_6e13_ac71_ca12;
+
+const SPILL_HEADER_BYTES: usize = 8 * 8;
+
+/// Per-process unique suffix for atomic spill writes.
+static SPILL_TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
 
 fn write_spill(path: &PathBuf, store: &TemplateActivations) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let has_kv = store.entries().first().map(|e| e.kv.is_some()).unwrap_or(false);
-    let mut buf: Vec<u8> = Vec::with_capacity(store.size_bytes() + 64);
+    let id = store.template_id.as_bytes();
+    let mut buf: Vec<u8> =
+        Vec::with_capacity(store.size_bytes() + SPILL_HEADER_BYTES + id.len());
     for v in [
         SPILL_MAGIC,
         store.steps as u64,
@@ -184,9 +296,11 @@ fn write_spill(path: &PathBuf, store: &TemplateActivations) -> Result<()> {
         store.hidden as u64,
         store.seed,
         has_kv as u64,
+        id.len() as u64,
     ] {
         buf.extend_from_slice(&v.to_le_bytes());
     }
+    buf.extend_from_slice(id);
     let mut push = |xs: &[f32]| {
         for x in xs {
             buf.extend_from_slice(&x.to_le_bytes());
@@ -199,13 +313,22 @@ fn write_spill(path: &PathBuf, store: &TemplateActivations) -> Result<()> {
             push(v);
         }
     }
-    std::fs::write(path, &buf).with_context(|| format!("writing spill {path:?}"))?;
+    // atomic publish: workers share the disk tier, so a concurrent
+    // eviction of the same template must never interleave writes —
+    // readers see either the old complete file or the new one
+    let tmp = path.with_extension(format!(
+        "tmp-{}-{}",
+        std::process::id(),
+        SPILL_TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+    std::fs::write(&tmp, &buf).with_context(|| format!("writing spill {tmp:?}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("publishing spill {path:?}"))?;
     Ok(())
 }
 
 fn read_spill(path: &PathBuf) -> Result<TemplateActivations> {
     let bytes = std::fs::read(path).with_context(|| format!("reading spill {path:?}"))?;
-    if bytes.len() < 56 {
+    if bytes.len() < SPILL_HEADER_BYTES {
         bail!("spill file too short");
     }
     let u64_at = |i: usize| {
@@ -222,13 +345,24 @@ fn read_spill(path: &PathBuf) -> Result<TemplateActivations> {
     let hidden = u64_at(4) as usize;
     let seed = u64_at(5);
     let has_kv = u64_at(6) != 0;
+    let id_len = u64_at(7) as usize;
     let lh = tokens * hidden;
     let per_entry = lh * if has_kv { 3 } else { 1 };
-    let want = 56 + steps * blocks * per_entry * 4;
+    let want = steps
+        .checked_mul(blocks)
+        .and_then(|n| n.checked_mul(per_entry))
+        .and_then(|n| n.checked_mul(4))
+        .and_then(|n| n.checked_add(SPILL_HEADER_BYTES))
+        .and_then(|n| n.checked_add(id_len))
+        .unwrap_or(usize::MAX);
     if bytes.len() != want {
         bail!("spill size mismatch: {} vs {}", bytes.len(), want);
     }
-    let mut off = 56;
+    let id = String::from_utf8(
+        bytes[SPILL_HEADER_BYTES..SPILL_HEADER_BYTES + id_len].to_vec(),
+    )
+    .context("spill template id not utf-8")?;
+    let mut off = SPILL_HEADER_BYTES + id_len;
     let mut read_f32s = |n: usize| {
         let mut out = vec![0f32; n];
         for v in out.iter_mut() {
@@ -249,11 +383,6 @@ fn read_spill(path: &PathBuf) -> Result<TemplateActivations> {
         };
         entries.push(CacheEntry { y, kv });
     }
-    let id = path
-        .file_stem()
-        .and_then(|s| s.to_str())
-        .unwrap_or("unknown")
-        .to_string();
     Ok(TemplateActivations::from_parts(
         id, String::new(), steps, blocks, tokens, hidden, seed, entries,
     ))
@@ -297,6 +426,7 @@ mod tests {
         let path = dir.join("abc.actcache");
         write_spill(&path, &s).unwrap();
         let back = read_spill(&path).unwrap();
+        assert_eq!(back.template_id, "abc", "spill embeds its template id");
         assert_eq!(back.steps, 2);
         assert_eq!(back.blocks, 3);
         assert_eq!(back.entry(1, 2).y, s.entry(1, 2).y);
@@ -334,6 +464,192 @@ mod tests {
         assert!(store.get("ghost").unwrap().is_none());
         assert_eq!(store.stats().misses, 1);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn remove_frees_both_tiers() {
+        let dir = tmp_dir("rm");
+        let one_size = dummy("x", 2, 2, false).size_bytes();
+        let store = TieredStore::new(one_size, dir.clone(), 0.0);
+        store.insert(dummy("a", 2, 2, false)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        store.insert(dummy("b", 2, 2, false)).unwrap(); // spills a to disk
+        assert_eq!(store.residency("a"), Residency::Disk);
+        assert_eq!(store.residency("b"), Residency::Host);
+        assert_eq!(store.residency("ghost"), Residency::Absent);
+        // removing frees host bytes and deletes the spill file
+        assert_eq!(store.remove("b"), one_size);
+        assert_eq!(store.remove("a"), 0, "a held no host bytes");
+        assert_eq!(store.residency("a"), Residency::Absent);
+        assert_eq!(store.host_bytes(), 0);
+        assert_eq!(store.host_templates(), 0);
+        assert!(store.get("a").unwrap().is_none(), "removed templates are gone");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sanitized_path_collision_never_serves_foreign_template() {
+        let dir = tmp_dir("collide");
+        let one_size = dummy("x", 2, 2, false).size_bytes();
+        let store = TieredStore::new(one_size, dir.clone(), 0.0);
+        // "a/b" sanitizes to the same spill path as "a_b"
+        store.insert(dummy("a/b", 2, 2, false)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        store.insert(dummy("a_b", 2, 2, false)).unwrap(); // spills "a/b"
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        // evicts "a_b"; the shared path already exists, keeping "a/b"
+        store.insert(dummy("other", 2, 2, false)).unwrap();
+        // the spill embeds id "a/b": a get for "a_b" must refuse it
+        // instead of serving a foreign template's activations
+        assert!(store.get("a_b").unwrap().is_none());
+        // the rightful owner still promotes
+        let back = store.get("a/b").unwrap().expect("owner promotes");
+        assert_eq!(back.template_id, "a/b");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_spill_reads_as_miss_and_is_dropped() {
+        let dir = tmp_dir("corrupt");
+        let store = TieredStore::new(1 << 20, dir.clone(), 0.0);
+        let path = store.spill_path("bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(&path, b"not a spill file").unwrap();
+        assert!(store.get("bad").unwrap().is_none(), "corrupt file is a miss");
+        assert!(!path.exists(), "corrupt file is dropped");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tombstoned_promotion_serves_but_does_not_resurrect() {
+        let dir = tmp_dir("tomb");
+        let one = dummy("a", 2, 2, false);
+        let store = TieredStore::new(one.size_bytes(), dir.clone(), 0.0);
+        store.insert(Arc::clone(&one)).unwrap();
+        assert_eq!(store.remove("a"), one.size_bytes());
+        // simulate a promotion racing the removal: the spill file is
+        // still readable when the promotion gets to the host insert
+        write_spill(&store.spill_path("a"), &one).unwrap();
+        let got = store.get("a").unwrap().expect("draining reader is served");
+        assert_eq!(got.entry(0, 0).y, one.entry(0, 0).y);
+        assert!(!store.is_host_resident("a"), "retired bytes must not resurrect");
+        assert_eq!(store.host_bytes(), 0);
+        // explicit re-registration revives the template
+        store.insert(Arc::clone(&one)).unwrap();
+        assert!(store.is_host_resident("a"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reinsert_does_not_double_count_bytes() {
+        let dir = tmp_dir("dup");
+        let store = TieredStore::new(1 << 20, dir.clone(), 0.0);
+        let s = dummy("a", 2, 2, false);
+        let size = s.size_bytes();
+        store.insert(Arc::clone(&s)).unwrap();
+        store.insert(s).unwrap();
+        assert_eq!(store.host_bytes(), size);
+        assert_eq!(store.host_templates(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Property: under random insert/get sequences with a byte budget that
+    /// fits exactly two (equal-sized) templates, (1) host bytes never
+    /// exceed the budget, (2) exactly the two least-recently-used
+    /// templates have been evicted (host tier == 2 MRU set), and (3) a
+    /// template promoted back from disk is bit-identical to what was
+    /// inserted.
+    #[test]
+    fn property_random_ops_hold_tier_invariants() {
+        use crate::prop_assert;
+        use crate::util::prop::prop_check;
+
+        // deterministic per-template payload so bit-identity is checkable
+        let make = |i: usize| {
+            let tokens = 4;
+            let hidden = 2;
+            let entries = (0..4)
+                .map(|e| CacheEntry {
+                    y: (0..tokens * hidden)
+                        .map(|k| (i * 1000 + e * 10 + k) as f32 * 0.5)
+                        .collect(),
+                    kv: None,
+                })
+                .collect();
+            Arc::new(TemplateActivations::from_parts(
+                format!("p{i}"),
+                "m".into(),
+                2,
+                2,
+                tokens,
+                hidden,
+                3,
+                entries,
+            ))
+        };
+        let one_size = make(0).size_bytes();
+        let budget = 2 * one_size;
+        let base = tmp_dir("prop");
+        let case = std::cell::Cell::new(0usize);
+
+        prop_check("tiered store invariants", 12, |rng| {
+            case.set(case.get() + 1);
+            let dir = base.join(format!("case-{}", case.get()));
+            std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+            let store = TieredStore::new(budget, dir.clone(), 0.0);
+            let mut inserted: Vec<bool> = vec![false; 4];
+            let mut touched: Vec<usize> = Vec::new(); // recency, MRU last
+            let touch = |touched: &mut Vec<usize>, i: usize| {
+                touched.retain(|&t| t != i);
+                touched.push(i);
+            };
+            for _ in 0..12 {
+                let i = rng.below(4);
+                if rng.below(2) == 0 {
+                    store.insert(make(i)).map_err(|e| e.to_string())?;
+                    inserted[i] = true;
+                    touch(&mut touched, i);
+                } else {
+                    let got = store.get(&format!("p{i}")).map_err(|e| e.to_string())?;
+                    if inserted[i] {
+                        let got = got.ok_or("known template vanished")?;
+                        let want = make(i);
+                        for e in 0..4 {
+                            prop_assert!(
+                                got.entries()[e].y == want.entries()[e].y,
+                                "promoted template p{i} not bit-identical at entry {e}"
+                            );
+                        }
+                        touch(&mut touched, i);
+                    } else {
+                        prop_assert!(got.is_none(), "uninserted template p{i} resolved");
+                    }
+                }
+                // distinct LRU timestamps for the next eviction decision
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                prop_assert!(
+                    store.host_bytes() <= budget,
+                    "host bytes {} exceed budget {budget}",
+                    store.host_bytes()
+                );
+                // the host tier holds exactly the MRU-2 of touched templates
+                let expect: Vec<usize> =
+                    touched.iter().rev().take(2).copied().collect();
+                for t in 0..4 {
+                    let id = format!("p{t}");
+                    let want_host = expect.contains(&t);
+                    prop_assert!(
+                        store.is_host_resident(&id) == want_host,
+                        "p{t}: host residency {} but LRU model says {want_host} \
+                         (recency {touched:?})",
+                        store.is_host_resident(&id)
+                    );
+                }
+            }
+            std::fs::remove_dir_all(&dir).ok();
+            Ok(())
+        });
+        std::fs::remove_dir_all(&base).ok();
     }
 
     #[test]

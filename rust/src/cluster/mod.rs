@@ -10,10 +10,22 @@
 //! results). Queued requests can be cancelled ([`Cluster::cancel`]), and
 //! the batch-replay rendezvous [`Cluster::await_completed`] blocks on the
 //! registry Condvar instead of sleep-polling.
+//!
+//! Templates are an **online** resource (§2.2: they arrive continuously):
+//! each worker owns its own cache tier ([`TieredStore`]), fronted by the
+//! cluster-level [`TemplateRegistry`] that owns the authoritative set,
+//! reference counts in-flight edits, and tracks registration epochs.
+//! [`Cluster::register_template_async`] traces a new template on a
+//! low-priority background lane while serving continues;
+//! [`Cluster::retire_template`] drains in-flight edits and then frees the
+//! template's bytes on every worker tier. Routing sees per-worker
+//! residency through [`RouteCtx`], so the mask-aware and cache-aware
+//! policies charge a cache-load penalty to workers whose host tier is
+//! cold for the request's template (Algorithm 2's "computation + cache
+//! loading" cost).
 
 pub mod lifecycle;
 
-use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
@@ -21,15 +33,19 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::cache::store::register_template;
-use crate::cache::tier::TieredStore;
+use crate::cache::store::{register_template, TemplateActivations};
+use crate::cache::tier::{Residency, TierStats, TieredStore};
 use crate::cache::LatencyModel;
-use crate::config::{EngineConfig, ModelConfig};
+use crate::config::{CacheMode, EngineConfig, ModelConfig};
 use crate::engine::queue::{Submitter, WorkerQueue};
 use crate::engine::request::{EditError, EditRequest, EditResponse, WorkerEvent};
 use crate::engine::worker::Worker;
 use crate::runtime::ModelRuntime;
-use crate::scheduler::{Outstanding, Scheduler};
+use crate::scheduler::{Outstanding, RouteCtx, Scheduler};
+use crate::templates::{
+    RegisterAdmission, RetireOutcome, TemplateInfo, TemplateRegistry,
+};
+use crate::util::pool::ThreadPool;
 use crate::workload::TraceEvent;
 
 pub use lifecycle::{CancelOutcome, EditTicket, RequestRegistry, RequestState, RequestStatus};
@@ -44,19 +60,48 @@ pub struct WorkerDepth {
     pub outstanding: usize,
 }
 
+/// Per-worker cache-tier snapshot for stats endpoints: the §4.2 hierarchy
+/// made observable over HTTP.
+#[derive(Debug, Clone)]
+pub struct WorkerCache {
+    pub worker: usize,
+    pub stats: TierStats,
+    pub host_bytes: usize,
+    pub host_templates: usize,
+}
+
+/// One template's cluster-wide status: registry entry + where it lives on
+/// each worker.
+#[derive(Debug, Clone)]
+pub struct TemplateStatus {
+    pub info: TemplateInfo,
+    /// `residency[w]` = worker w's tier residency for this template.
+    pub residency: Vec<Residency>,
+}
+
 /// A running cluster.
 pub struct Cluster {
     submitters: Vec<Submitter>,
     queues: Vec<Arc<WorkerQueue>>,
+    /// Per-worker cache tiers (index = worker id).
+    tiers: Vec<Arc<TieredStore>>,
     stops: Vec<Arc<AtomicBool>>,
     handles: Vec<std::thread::JoinHandle<Result<()>>>,
     collector: Option<std::thread::JoinHandle<()>>,
     book: Arc<Mutex<Vec<Vec<Outstanding>>>>,
     scheduler: Mutex<Box<dyn Scheduler>>,
     registry: Arc<RequestRegistry>,
+    templates: Arc<TemplateRegistry>,
+    /// Runtime for template registration traces (launch + online jobs).
+    reg_rt: Arc<Mutex<ModelRuntime>>,
+    /// Dedicated single-thread background lane for online registration
+    /// jobs — kept off the workers' pre/post pools so a multi-second
+    /// trace can never occupy a latency-critical pre/post thread (the
+    /// workers' own low-priority lanes carry only cheap prefetches).
+    reg_pool: ThreadPool,
+    cache_mode: CacheMode,
     responses: Arc<Mutex<Vec<Arc<EditResponse>>>>,
     retain_responses: Arc<AtomicBool>,
-    templates: HashSet<String>,
     pub model: ModelConfig,
     started: Instant,
 }
@@ -74,25 +119,94 @@ pub struct ClusterOpts {
     pub warmup: bool,
 }
 
+/// Drop a template from every worker tier (retirement purge).
+fn purge_tiers(tiers: &[Arc<TieredStore>], template_id: &str) {
+    for t in tiers {
+        t.remove(template_id);
+    }
+}
+
+/// Reuse a spill left on the shared disk tier by a previous launch (or
+/// `instgenie register`) instead of re-running the full-model trace —
+/// only when the stored activations provably belong to this
+/// (model-shape, template) pair: dims, trajectory seed, id, and (for
+/// K/V mode) the presence of K/V taps must all match. Spill files carry
+/// no model name, so shape + seed is the identity check.
+fn warm_start(
+    tier: &TieredStore,
+    template_id: &str,
+    cfg: &ModelConfig,
+    mode: CacheMode,
+) -> Option<Arc<TemplateActivations>> {
+    if tier.residency(template_id) != Residency::Disk {
+        return None;
+    }
+    let found = tier.get(template_id).ok().flatten()?;
+    let kv_ok = match mode {
+        CacheMode::CacheY => true,
+        CacheMode::CacheKV => found.entries().first().map(|e| e.kv.is_some()).unwrap_or(false),
+    };
+    let compatible = found.template_id == template_id
+        && found.steps == cfg.steps
+        && found.blocks == cfg.blocks
+        && found.tokens == cfg.tokens
+        && found.hidden == cfg.hidden
+        && found.seed == TemplateActivations::seed_for(template_id)
+        && kv_ok;
+    compatible.then_some(found)
+}
+
 impl Cluster {
     /// Register templates, spawn workers, start the collector.
     pub fn launch(opts: ClusterOpts, scheduler: Box<dyn Scheduler>) -> Result<Cluster> {
         anyhow::ensure!(opts.workers > 0, "need >= 1 worker");
-        let tiers = Arc::new(TieredStore::new(
-            opts.engine.host_cache_budget,
-            opts.engine.spill_dir.clone(),
-            0.0, // cluster benches exercise the host tier; disk pacing off
-        ));
+        // One cache tier per worker: host residency is a per-worker
+        // property the scheduler routes on. The disk tier is shared
+        // (paper §4.2: per-device host memory over common slower
+        // storage), so `instgenie register` pre-warms every worker and a
+        // template spilled by one worker is promotable by all — spill
+        // writes are atomic (tmp + rename), so concurrent evictions of
+        // the same template are safe.
+        let tiers: Vec<Arc<TieredStore>> = (0..opts.workers)
+            .map(|_| {
+                Arc::new(TieredStore::new(
+                    opts.engine.host_cache_budget,
+                    opts.engine.spill_dir.clone(),
+                    0.0, // cluster benches exercise the host tier; disk pacing off
+                ))
+            })
+            .collect();
 
-        // one registration pass populates the shared host tier
-        {
-            let reg_rt = ModelRuntime::create(&opts.artifact_dir, &opts.model)
-                .context("registration runtime")?;
-            for tpl in &opts.templates {
-                let (acts, _) = register_template(&reg_rt, tpl, opts.engine.cache_mode)?;
-                tiers.insert(acts)?;
+        let templates = TemplateRegistry::new(opts.model.as_str());
+
+        // Launch-time registration: one trace per *new* (model, template)
+        // pair, fanned into every worker tier. `begin_register` dedupes
+        // repeated ids within the list, and a compatible spill left by a
+        // previous launch (or `instgenie register`) warm-starts the pair
+        // without re-running the full-model pass.
+        let reg_rt = ModelRuntime::create(&opts.artifact_dir, &opts.model)
+            .context("registration runtime")?;
+        for tpl in &opts.templates {
+            let RegisterAdmission::Started { epoch } = templates.begin_register(tpl) else {
+                continue; // already registered (duplicate id in the list)
+            };
+            let acts = match warm_start(&tiers[0], tpl, &reg_rt.config, opts.engine.cache_mode)
+            {
+                Some(found) => found,
+                None => {
+                    // drop any stale/foreign/corrupt spill so it cannot
+                    // shadow the fresh trace on a later eviction
+                    tiers[0].remove(tpl);
+                    register_template(&reg_rt, tpl, opts.engine.cache_mode)?.0
+                }
+            };
+            let bytes = acts.size_bytes();
+            for tier in &tiers {
+                tier.insert(Arc::clone(&acts))?;
             }
+            templates.complete_register(tpl, epoch, bytes);
         }
+        let reg_rt = Arc::new(Mutex::new(reg_rt));
 
         let (tx, rx) = channel::<WorkerEvent>();
         let mut submitters = Vec::new();
@@ -110,10 +224,11 @@ impl Cluster {
                 w,
                 opts.engine.clone(),
                 rt,
-                Arc::clone(&tiers),
+                Arc::clone(&tiers[w]),
                 opts.lat_model.clone(),
                 tx.clone(),
-            );
+            )
+            .with_registry(Arc::clone(&templates));
             submitters.push(worker.submitter());
             queues.push(worker.queue());
             stops.push(worker.stop_flag());
@@ -129,6 +244,8 @@ impl Cluster {
         let collector = {
             let book = Arc::clone(&book);
             let registry = Arc::clone(&registry);
+            let templates = Arc::clone(&templates);
+            let tiers = tiers.clone();
             let responses = Arc::clone(&responses);
             let retain = Arc::clone(&retain_responses);
             std::thread::Builder::new()
@@ -147,6 +264,11 @@ impl Cluster {
                                     }
                                 }
                                 drop(b);
+                                // the edit no longer pins its template; a
+                                // drained retirement purges every tier
+                                if let Some(tpl) = templates.release_request(id) {
+                                    purge_tiers(&tiers, &tpl);
+                                }
                                 // one Arc per response, shared between the
                                 // registry (polling) and the replay log
                                 let result = result.map(Arc::new);
@@ -168,15 +290,19 @@ impl Cluster {
         Ok(Cluster {
             submitters,
             queues,
+            tiers,
             stops,
             handles,
             collector: Some(collector),
             book,
             scheduler: Mutex::new(scheduler),
             registry,
+            templates,
+            reg_rt,
+            reg_pool: ThreadPool::new("tpl-reg", 1),
+            cache_mode: opts.engine.cache_mode,
             responses,
             retain_responses,
-            templates: opts.templates.iter().cloned().collect(),
             model: model_cfg.expect("at least one worker"),
             started: Instant::now(),
         })
@@ -186,10 +312,110 @@ impl Cluster {
         self.submitters.len()
     }
 
-    /// Templates pre-registered at launch (the valid set for the HTTP
-    /// frontend; workers can still cold-register ids submitted directly).
+    /// Whether a submission against this template would be accepted:
+    /// ready, or queued behind an in-flight registration. (Workers can
+    /// still cold-register ids submitted directly via
+    /// [`Cluster::submit`].)
     pub fn has_template(&self, template_id: &str) -> bool {
-        self.templates.contains(template_id)
+        self.templates.is_submittable(template_id)
+    }
+
+    /// Typed admission check for frontends (`UnknownTemplate`,
+    /// `TemplateRetired`, or the registration failure).
+    pub fn check_template(&self, template_id: &str) -> Result<(), EditError> {
+        self.templates.check_submittable(template_id)
+    }
+
+    /// The cluster-wide template table.
+    pub fn template_registry(&self) -> &Arc<TemplateRegistry> {
+        &self.templates
+    }
+
+    /// Start registering a template online: the full-model trace runs as
+    /// a background job on the registration lane while the cluster keeps
+    /// serving; requests submitted meanwhile queue at the workers until
+    /// the template is ready. Idempotent for known templates.
+    pub fn register_template_async(&self, template_id: &str) -> RegisterAdmission {
+        let admission = self.templates.begin_register(template_id);
+        if let RegisterAdmission::Started { epoch } = admission {
+            let templates = Arc::clone(&self.templates);
+            let tiers = self.tiers.clone();
+            let reg_rt = Arc::clone(&self.reg_rt);
+            let mode = self.cache_mode;
+            let id = template_id.to_string();
+            self.reg_pool.submit_low(move || {
+                let traced = {
+                    let rt = reg_rt.lock().unwrap();
+                    register_template(&rt, &id, mode)
+                };
+                match traced {
+                    Ok((acts, _)) => {
+                        let bytes = acts.size_bytes();
+                        for tier in &tiers {
+                            let _ = tier.insert(Arc::clone(&acts));
+                        }
+                        if !templates.complete_register(&id, epoch, bytes) {
+                            // retired or re-registered while tracing:
+                            // un-publish what this stale job staged
+                            purge_tiers(&tiers, &id);
+                        }
+                    }
+                    Err(e) => templates.fail_register(&id, epoch, &format!("{e:#}")),
+                }
+            });
+        }
+        admission
+    }
+
+    /// Block until a template leaves `registering` (tests, sync tools).
+    pub fn await_template(&self, template_id: &str, timeout: Duration) -> Result<(), EditError> {
+        self.templates.wait_ready(template_id, timeout)
+    }
+
+    /// Retire a template: new submissions are rejected with
+    /// `TemplateRetired`; in-flight edits drain. Its bytes are freed on
+    /// every worker tier — now if idle, or when the last in-flight edit
+    /// releases it.
+    pub fn retire_template(&self, template_id: &str) -> RetireOutcome {
+        let outcome = self.templates.retire(template_id);
+        if outcome == RetireOutcome::Retired {
+            purge_tiers(&self.tiers, template_id);
+        }
+        outcome
+    }
+
+    /// One template's registry entry + per-worker residency.
+    pub fn template_status(&self, template_id: &str) -> Option<TemplateStatus> {
+        let info = self.templates.info(template_id)?;
+        Some(TemplateStatus {
+            residency: self
+                .tiers
+                .iter()
+                .map(|t| t.residency(template_id))
+                .collect(),
+            info,
+        })
+    }
+
+    /// Number of known templates (any state) — cheap, for stats.
+    pub fn template_count(&self) -> usize {
+        self.templates.len()
+    }
+
+    /// All templates, sorted by id.
+    pub fn templates_status(&self) -> Vec<TemplateStatus> {
+        self.templates
+            .list()
+            .into_iter()
+            .map(|info| TemplateStatus {
+                residency: self
+                    .tiers
+                    .iter()
+                    .map(|t| t.residency(&info.template_id))
+                    .collect(),
+                info,
+            })
+            .collect()
     }
 
     /// Route + submit one request; returns its completion handle.
@@ -199,10 +425,21 @@ impl Cluster {
             masked_tokens: req.mask.masked_count(),
             remaining_steps: self.model.steps,
         };
+        // pin the template for the request's lifetime (retirement drains
+        // on these references)
+        self.templates.acquire(req.id, &req.template_id);
+        let ctx = RouteCtx {
+            residency: self
+                .tiers
+                .iter()
+                .map(|t| t.residency(&req.template_id))
+                .collect(),
+            template_bytes: self.templates.bytes(&req.template_id).unwrap_or(0),
+        };
         let w = {
             let book = self.book.lock().unwrap();
             let mut sched = self.scheduler.lock().unwrap();
-            let w = sched.pick(&outstanding, &book);
+            let w = sched.pick(&outstanding, &book, &ctx);
             w.min(self.submitters.len() - 1)
         };
         let ticket = self.registry.register(req.id, w);
@@ -211,14 +448,12 @@ impl Cluster {
         ticket
     }
 
-    /// Like [`Cluster::submit`], but rejects templates that were not
-    /// registered at launch. Library-facing convenience over the same
-    /// [`Cluster::has_template`] predicate the HTTP frontend checks
-    /// before allocating an id.
+    /// Like [`Cluster::submit`], but with the frontend's typed template
+    /// admission check: unknown templates are rejected, retired ones get
+    /// `TemplateRetired`, and templates still registering are accepted
+    /// (the edit queues at the worker until the template is ready).
     pub fn submit_checked(&self, req: EditRequest) -> Result<EditTicket, EditError> {
-        if !self.has_template(&req.template_id) {
-            return Err(EditError::UnknownTemplate(req.template_id));
-        }
+        self.check_template(&req.template_id)?;
         Ok(self.submit(req))
     }
 
@@ -252,6 +487,10 @@ impl Cluster {
             b[w].swap_remove(pos);
         }
         drop(b);
+        // release the template reference the submission pinned
+        if let Some(tpl) = self.templates.release_request(id) {
+            purge_tiers(&self.tiers, &tpl);
+        }
         self.registry.fulfill(id, Err(EditError::Cancelled));
         CancelOutcome::Cancelled
     }
@@ -286,6 +525,21 @@ impl Cluster {
                 worker: w,
                 queued: q.pending(),
                 outstanding: book.get(w).map(|l| l.len()).unwrap_or(0),
+            })
+            .collect()
+    }
+
+    /// Per-worker cache-tier stats (host hits / promotions / misses /
+    /// evictions + resident bytes) for `GET /v1/stats`.
+    pub fn cache_stats(&self) -> Vec<WorkerCache> {
+        self.tiers
+            .iter()
+            .enumerate()
+            .map(|(w, t)| WorkerCache {
+                worker: w,
+                stats: t.stats(),
+                host_bytes: t.host_bytes(),
+                host_templates: t.host_templates(),
             })
             .collect()
     }

@@ -119,6 +119,10 @@ pub struct EngineConfig {
     pub teacache_threshold: f64,
     /// Threads in the pre/post-processing pool (disaggregated mode).
     pub prepost_threads: usize,
+    /// How long a request whose template is still registering may wait
+    /// parked at the worker before failing with `Timeout`
+    /// (submit-during-registration queues up to this long), in ms.
+    pub registration_wait_ms: u64,
     /// Extra CPU work per pre/post op, microseconds (models the paper's
     /// serialization/deserialization cost; §6.4 measures its interference).
     pub prepost_cpu_us: u64,
@@ -143,6 +147,7 @@ impl EngineConfig {
             naive_loading: false,
             teacache_threshold: 0.05,
             prepost_threads: 2,
+            registration_wait_ms: 30_000,
             prepost_cpu_us: 2_000,
         }
     }

@@ -128,6 +128,10 @@ pub struct Submitter {
     pool: Option<Arc<ThreadPool>>,
     hidden: usize,
     cpu_us: u64,
+    /// Called with the template id at enqueue time so the worker can
+    /// start promoting a spilled template before admission (§4.2: the
+    /// promotion hides under queuing time).
+    prefetch: Option<Arc<dyn Fn(&str) + Send + Sync>>,
 }
 
 impl Submitter {
@@ -139,10 +143,20 @@ impl Submitter {
         hidden: usize,
         cpu_us: u64,
     ) -> Submitter {
-        Submitter { queue, pool, hidden, cpu_us }
+        Submitter { queue, pool, hidden, cpu_us, prefetch: None }
+    }
+
+    /// Attach an enqueue-time template prefetch hook (worker tier
+    /// promotion on the low-priority pre/post lane).
+    pub fn with_prefetch(mut self, hook: Arc<dyn Fn(&str) + Send + Sync>) -> Submitter {
+        self.prefetch = Some(hook);
+        self
     }
 
     pub fn submit(&self, req: EditRequest) {
+        if let Some(hook) = &self.prefetch {
+            hook(&req.template_id);
+        }
         match &self.pool {
             Some(pool) => {
                 self.queue.note_preprocessing();
@@ -215,6 +229,20 @@ mod tests {
         assert!(q.remove(9));
         assert!(q.pop_ready().is_none());
         assert!(!q.remove(42), "unknown id");
+    }
+
+    #[test]
+    fn prefetch_hook_fires_at_enqueue_time() {
+        let q = WorkerQueue::new();
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let hook = {
+            let seen = Arc::clone(&seen);
+            Arc::new(move |tpl: &str| seen.lock().unwrap().push(tpl.to_string()))
+        };
+        let s = Submitter::new(Arc::clone(&q), None, 8, 0).with_prefetch(hook);
+        s.submit(req(5));
+        assert_eq!(*seen.lock().unwrap(), vec!["t".to_string()]);
+        assert_eq!(q.pop_raw().unwrap().id, 5);
     }
 
     #[test]

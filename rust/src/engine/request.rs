@@ -78,6 +78,10 @@ pub struct EditResponse {
 pub enum EditError {
     #[error("unknown template {0:?}")]
     UnknownTemplate(String),
+    /// The template was retired (`DELETE /v1/templates/{{id}}`); in-flight
+    /// edits drain, new ones are rejected until it is re-registered.
+    #[error("template {0:?} is retired")]
+    TemplateRetired(String),
     #[error("invalid mask: {0}")]
     InvalidMask(String),
     #[error("request cancelled")]
@@ -97,6 +101,7 @@ impl EditError {
     pub fn http_status(&self) -> u16 {
         match self {
             EditError::UnknownTemplate(_) => 404,
+            EditError::TemplateRetired(_) => 410,
             EditError::InvalidMask(_) => 400,
             EditError::Cancelled => 409,
             EditError::Timeout => 504,
@@ -109,6 +114,7 @@ impl EditError {
     pub fn kind(&self) -> &'static str {
         match self {
             EditError::UnknownTemplate(_) => "unknown_template",
+            EditError::TemplateRetired(_) => "template_retired",
             EditError::InvalidMask(_) => "invalid_mask",
             EditError::Cancelled => "cancelled",
             EditError::Timeout => "timeout",
@@ -309,6 +315,8 @@ mod tests {
     #[test]
     fn edit_error_http_mapping() {
         assert_eq!(EditError::UnknownTemplate("x".into()).http_status(), 404);
+        assert_eq!(EditError::TemplateRetired("x".into()).http_status(), 410);
+        assert_eq!(EditError::TemplateRetired("x".into()).kind(), "template_retired");
         assert_eq!(EditError::InvalidMask("m".into()).http_status(), 400);
         assert_eq!(EditError::Cancelled.http_status(), 409);
         assert_eq!(EditError::Timeout.http_status(), 504);

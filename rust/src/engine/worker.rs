@@ -25,7 +25,7 @@ use anyhow::{Context, Result};
 use crate::cache::loader::{CacheLoader, MemberGather, StagedBlock};
 use crate::cache::pipeline::{self, BlockCosts, PipelinePlan};
 use crate::cache::store::{register_template, TemplateActivations};
-use crate::cache::tier::TieredStore;
+use crate::cache::tier::{Residency, TieredStore};
 use crate::cache::LatencyModel;
 use crate::config::{BatchingPolicy, CacheMode, EngineConfig, SystemKind};
 use crate::engine::prepost::{postprocess, preprocess, PreparedRequest};
@@ -33,6 +33,7 @@ use crate::engine::queue::{Submitter, WorkerQueue};
 use crate::engine::request::{EditError, EditResponse, RequestTiming, WorkerEvent};
 use crate::engine::teacache::TeaCacheGate;
 use crate::model::Latent;
+use crate::templates::{TemplateRegistry, TemplateState};
 use crate::util::pool::ThreadPool;
 use crate::util::tensor::Tensor;
 
@@ -52,6 +53,25 @@ struct Member {
     /// TeaCache: replayed eps (full (L, H)) + gate.
     last_eps: Option<Vec<f32>>,
     gate: Option<TeaCacheGate>,
+}
+
+/// A popped request whose template is still registering cluster-wide: it
+/// waits here — off the queue, so other templates' requests flow past —
+/// until the registry publishes the template or the deadline passes
+/// (submit-during-registration queues until ready or times out).
+struct Parked {
+    prep: PreparedRequest,
+    deadline: Instant,
+}
+
+/// Admission decision for a popped request's template.
+enum TemplateGate {
+    /// Resident (or cold-registrable): admit now.
+    Ready,
+    /// Registration in flight: park the request.
+    Pending,
+    /// Typed terminal refusal (retired / failed registration).
+    Refused(EditError),
 }
 
 /// Live load/state snapshot for the cluster scheduler (§4.4).
@@ -87,6 +107,9 @@ pub struct Worker {
     events: Sender<WorkerEvent>,
     shared: Arc<WorkerShared>,
     stop: Arc<AtomicBool>,
+    /// Cluster-wide template table (None for standalone engines, which
+    /// keep the seed behaviour: cold-register on first use).
+    registry: Option<Arc<TemplateRegistry>>,
 }
 
 impl Worker {
@@ -126,19 +149,48 @@ impl Worker {
             events,
             shared: Arc::new(WorkerShared::default()),
             stop: Arc::new(AtomicBool::new(false)),
+            registry: None,
         }
+    }
+
+    /// Attach the cluster's template registry: admission then gates on
+    /// the cluster-wide lifecycle (park while registering, refuse
+    /// retired) instead of cold-registering unknown templates.
+    pub fn with_registry(mut self, registry: Arc<TemplateRegistry>) -> Worker {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// This worker's cache tier (per-worker in cluster mode).
+    pub fn tiers(&self) -> Arc<TieredStore> {
+        Arc::clone(&self.tiers)
     }
 
     /// Submission handle (disaggregation decided by the batching policy).
     pub fn submitter(&self) -> Submitter {
         let pool = matches!(self.cfg.batching, BatchingPolicy::ContinuousDisaggregated)
             .then(|| Arc::clone(&self.prepost));
-        Submitter::new(
+        let submitter = Submitter::new(
             Arc::clone(&self.queue),
             pool,
             self.rt.config.hidden,
             self.cfg.prepost_cpu_us,
-        )
+        );
+        // Enqueue-time promotion: when this worker's tier holds the
+        // template only on disk, start promoting it on the low-priority
+        // pre/post lane so the load hides under queuing time (§4.2).
+        let tiers = Arc::clone(&self.tiers);
+        let pool = Arc::clone(&self.prepost);
+        let prefetch: Arc<dyn Fn(&str) + Send + Sync> = Arc::new(move |template_id: &str| {
+            if tiers.residency(template_id) == Residency::Disk {
+                let tiers = Arc::clone(&tiers);
+                let template_id = template_id.to_string();
+                pool.submit_low(move || {
+                    let _ = tiers.get(&template_id);
+                });
+            }
+        });
+        submitter.with_prefetch(prefetch)
     }
 
     pub fn queue(&self) -> Arc<WorkerQueue> {
@@ -167,12 +219,22 @@ impl Worker {
     /// Run the engine loop on the current thread until stopped + drained.
     pub fn run(mut self) -> Result<()> {
         let mut members: Vec<Member> = Vec::new();
+        let mut parked: Vec<Parked> = Vec::new();
         loop {
-            self.admit(&mut members)?;
+            self.admit(&mut members, &mut parked)?;
             if members.is_empty() {
                 if self.stop.load(Ordering::Relaxed)
                     && self.queue.pending() == 0
                 {
+                    // parked requests will never see their registration
+                    // from a stopping cluster; resolve their tickets
+                    for p in parked.drain(..) {
+                        let _ = self.events.send(WorkerEvent::Finished {
+                            id: p.prep.request.id,
+                            worker: self.id,
+                            result: Err(EditError::WorkerShutdown),
+                        });
+                    }
                     break;
                 }
                 self.queue.wait_for_work(Duration::from_millis(1));
@@ -195,17 +257,30 @@ impl Worker {
 
     // -- admission -----------------------------------------------------------
 
-    fn admit(&mut self, members: &mut Vec<Member>) -> Result<()> {
+    fn admit(&mut self, members: &mut Vec<Member>, parked: &mut Vec<Parked>) -> Result<()> {
         let cap = self.cfg.max_batch.min(self.rt.max_batch_bucket());
+        // whether the batch was drained *before* parked admissions, so a
+        // resumed parked request doesn't make static batching skip the
+        // queue-fill below and run an underfilled batch
+        let drained_batch = members.is_empty();
+        self.service_parked(members, parked, cap);
         match self.cfg.batching {
             BatchingPolicy::Static => {
                 // join only when the running batch has fully drained
-                if !members.is_empty() {
+                if !drained_batch {
                     return Ok(());
                 }
                 while members.len() < cap {
-                    let Some(prep) = self.take_prepared(members) else { break };
-                    self.admit_member(prep, members);
+                    // don't pop requests we could only park when the
+                    // parked set is full — they stay queued (visible in
+                    // queue depths, still cancellable)
+                    let park_room = parked.len() < cap;
+                    let admit = |tpl: &str, _k: usize| {
+                        park_room
+                            || !matches!(self.template_gate(tpl), TemplateGate::Pending)
+                    };
+                    let Some(prep) = self.take_prepared_if(members, &admit) else { break };
+                    self.gate_or_admit(prep, members, parked);
                 }
             }
             BatchingPolicy::ContinuousInline | BatchingPolicy::ContinuousDisaggregated => {
@@ -217,24 +292,138 @@ impl Worker {
                 // shape-bucketed analogue of the paper's heterogeneous-
                 // mask batching (their kernels handle per-member token
                 // counts; XLA programs are shape-static).
-                while members.len() < cap {
+                loop {
+                    if members.len() >= cap {
+                        break;
+                    }
                     let batch_bucket = members
                         .iter()
                         .map(|m| m.cached_bucket)
                         .max()
                         .unwrap_or(usize::MAX);
                     let admit_any = members.len() <= 1;
-                    let fits = |k: usize| {
-                        admit_any
+                    let park_room = parked.len() < cap;
+                    let admit = |tpl: &str, k: usize| {
+                        let fits = admit_any
                             || !self.mask_aware()
-                            || self.rt.config.bucket_for(k) <= batch_bucket
+                            || self.rt.config.bucket_for(k) <= batch_bucket;
+                        // registering-template requests are only popped
+                        // while the (cap-bounded) parked set has room
+                        fits
+                            && (park_room
+                                || !matches!(self.template_gate(tpl), TemplateGate::Pending))
                     };
-                    let Some(prep) = self.take_prepared_if(members, &fits) else { break };
-                    self.admit_member(prep, members);
+                    let Some(prep) = self.take_prepared_if(members, &admit) else { break };
+                    self.gate_or_admit(prep, members, parked);
                 }
             }
         }
         Ok(())
+    }
+
+    /// Whether a request with `masked_count` tokens may join the running
+    /// batch without inflating its token bucket (the same rule the admit
+    /// loop applies to queued requests).
+    fn bucket_fits(&self, members: &[Member], masked_count: usize) -> bool {
+        if members.len() <= 1 || !self.mask_aware() {
+            return true;
+        }
+        let batch_bucket = members
+            .iter()
+            .map(|m| m.cached_bucket)
+            .max()
+            .unwrap_or(usize::MAX);
+        self.rt.config.bucket_for(masked_count) <= batch_bucket
+    }
+
+    /// Re-check parked requests: admit the ones whose template became
+    /// ready (bucket rules permitting), refuse the ones whose template
+    /// retired or failed, and time out the ones that waited past their
+    /// deadline (only while still pending — a ready request that merely
+    /// awaits a compatible batch bucket is never timed out here).
+    fn service_parked(&self, members: &mut Vec<Member>, parked: &mut Vec<Parked>, cap: usize) {
+        let join_ok = match self.cfg.batching {
+            // static batching only joins a drained batch
+            BatchingPolicy::Static => members.is_empty(),
+            _ => true,
+        };
+        let mut i = 0;
+        while i < parked.len() {
+            match self.template_gate(&parked[i].prep.request.template_id) {
+                TemplateGate::Ready
+                    if join_ok
+                        && members.len() < cap
+                        && self.bucket_fits(members, parked[i].prep.masked_count) =>
+                {
+                    let p = parked.swap_remove(i);
+                    self.admit_member(p.prep, members);
+                }
+                TemplateGate::Refused(err) => {
+                    let p = parked.swap_remove(i);
+                    let _ = self.events.send(WorkerEvent::Finished {
+                        id: p.prep.request.id,
+                        worker: self.id,
+                        result: Err(err),
+                    });
+                }
+                TemplateGate::Pending if Instant::now() >= parked[i].deadline => {
+                    let p = parked.swap_remove(i);
+                    let _ = self.events.send(WorkerEvent::Finished {
+                        id: p.prep.request.id,
+                        worker: self.id,
+                        result: Err(EditError::Timeout),
+                    });
+                }
+                _ => i += 1,
+            }
+        }
+    }
+
+    /// Where a popped request's template stands right now.
+    fn template_gate(&self, template_id: &str) -> TemplateGate {
+        if self.tiers.is_host_resident(template_id) {
+            return TemplateGate::Ready;
+        }
+        let Some(registry) = &self.registry else {
+            return TemplateGate::Ready; // standalone: cold-register path
+        };
+        match registry.state(template_id) {
+            // ready (tier promotes/cold-fills in make_member) or direct
+            // submission the registry adopted without a trace
+            Some(TemplateState::Ready) | None => TemplateGate::Ready,
+            Some(TemplateState::Registering) => TemplateGate::Pending,
+            Some(TemplateState::Retired) => {
+                TemplateGate::Refused(EditError::TemplateRetired(template_id.to_string()))
+            }
+            Some(TemplateState::Failed(reason)) => TemplateGate::Refused(EditError::Internal(
+                format!("template {template_id:?} failed registration: {reason}"),
+            )),
+        }
+    }
+
+    /// Admit a popped request, park it, or refuse it, per its template's
+    /// lifecycle state.
+    fn gate_or_admit(
+        &self,
+        prep: PreparedRequest,
+        members: &mut Vec<Member>,
+        parked: &mut Vec<Parked>,
+    ) {
+        match self.template_gate(&prep.request.template_id) {
+            TemplateGate::Ready => self.admit_member(prep, members),
+            TemplateGate::Pending => parked.push(Parked {
+                deadline: Instant::now()
+                    + Duration::from_millis(self.cfg.registration_wait_ms),
+                prep,
+            }),
+            TemplateGate::Refused(err) => {
+                let _ = self.events.send(WorkerEvent::Finished {
+                    id: prep.request.id,
+                    worker: self.id,
+                    result: Err(err),
+                });
+            }
+        }
     }
 
     /// Turn a prepared request into a batch member, reporting the
@@ -249,39 +438,41 @@ impl Worker {
                 members.push(m);
             }
             Err(e) => {
-                // registration/cache faults are server errors; template
-                // existence was the frontend's check, not ours
+                // typed lifecycle refusals pass through; other
+                // registration/cache faults are server errors (template
+                // existence was the frontend's check, not ours)
+                let result = match e.downcast::<EditError>() {
+                    Ok(typed) => Err(typed),
+                    Err(e) => Err(EditError::Internal(format!(
+                        "admitting {template:?}: {e:#}"
+                    ))),
+                };
                 let _ = self.events.send(WorkerEvent::Finished {
                     id,
                     worker: self.id,
-                    result: Err(EditError::Internal(format!(
-                        "admitting {template:?}: {e:#}"
-                    ))),
+                    result,
                 });
             }
         }
     }
 
-    /// Pull one prepared request, preprocessing inline when the policy
-    /// demands it (counting interruptions for current members — the §6.4
-    /// microbenchmark's metric).
-    fn take_prepared(&self, members: &mut [Member]) -> Option<PreparedRequest> {
-        self.take_prepared_if(members, &|_| true)
-    }
-
-    /// Like [`Self::take_prepared`], but only admits the queue front when
-    /// its masked-token count satisfies `fits`.
+    /// Pull one prepared request if the queue front satisfies `admit`
+    /// (called with its template id + masked-token count), preprocessing
+    /// inline when the policy demands it (counting interruptions for
+    /// current members — the §6.4 microbenchmark's metric).
     fn take_prepared_if(
         &self,
         members: &mut [Member],
-        fits: &dyn Fn(usize) -> bool,
+        admit: &dyn Fn(&str, usize) -> bool,
     ) -> Option<PreparedRequest> {
         match self.cfg.batching {
-            BatchingPolicy::ContinuousDisaggregated => {
-                self.queue.pop_ready_if(|p| fits(p.masked_count))
-            }
+            BatchingPolicy::ContinuousDisaggregated => self
+                .queue
+                .pop_ready_if(|p| admit(&p.request.template_id, p.masked_count)),
             _ => {
-                let req = self.queue.pop_raw_if(|r| fits(r.mask.masked_count()))?;
+                let req = self
+                    .queue
+                    .pop_raw_if(|r| admit(&r.template_id, r.mask.masked_count()))?;
                 if !members.is_empty() {
                     for m in members.iter_mut() {
                         m.interruptions += 1;
@@ -315,10 +506,35 @@ impl Worker {
         })
     }
 
-    /// Fetch (and on cold miss, register) a template's activations.
+    /// Fetch (and on cold miss, register) a template's activations. In
+    /// cluster mode a registration that is already in flight elsewhere is
+    /// awaited instead of duplicated on the engine thread.
     pub fn ensure_registered(&self, template_id: &str) -> Result<Arc<TemplateActivations>> {
         if let Some(acts) = self.tiers.get(template_id)? {
             return Ok(acts);
+        }
+        if let Some(registry) = &self.registry {
+            match registry.state(template_id) {
+                Some(TemplateState::Registering) => {
+                    registry
+                        .wait_ready(
+                            template_id,
+                            Duration::from_millis(self.cfg.registration_wait_ms),
+                        )
+                        .map_err(anyhow::Error::new)?;
+                    if let Some(acts) = self.tiers.get(template_id)? {
+                        return Ok(acts);
+                    }
+                }
+                // never resurrect a retired template's bytes via the
+                // cold-register fallback (admission raced a purge)
+                Some(TemplateState::Retired) => {
+                    return Err(anyhow::Error::new(EditError::TemplateRetired(
+                        template_id.to_string(),
+                    )))
+                }
+                _ => {}
+            }
         }
         let (acts, _) = register_template(&self.rt, template_id, self.cfg.cache_mode)
             .context("template registration")?;

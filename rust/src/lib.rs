@@ -14,11 +14,18 @@
 //! - [`engine`]: worker step loop, continuous batching + disaggregated
 //!   pre/post-processing (§4.3), baseline modes (Diffusers / FISEdit /
 //!   TeaCache).
-//! - [`scheduler`]: mask-aware load balancing (§4.4, Algo 2) + baselines.
+//! - [`scheduler`]: mask-aware load balancing (§4.4, Algo 2) with a
+//!   cache-load penalty, plus residency-first (`cache-aware`) and blind
+//!   baselines.
+//! - [`templates`]: the cluster-wide online template lifecycle —
+//!   `TemplateRegistry` owns the authoritative template set (registering
+//!   → ready → retired), in-flight reference counts, and registration
+//!   epochs; per-worker residency lives in each worker's tier.
 //! - [`cluster`]: multi-worker deployment glue and the handle-based
 //!   request lifecycle — `Cluster::submit` returns an `EditTicket`
 //!   resolved per-id by the collector (`cluster::lifecycle`), with typed
-//!   `EditError`s and queued-request cancellation.
+//!   `EditError`s, queued-request cancellation, and online template
+//!   registration/retirement over per-worker cache tiers.
 //! - [`workload`]: Fig.-3 mask-ratio distributions, Poisson traffic,
 //!   trace record/replay.
 //! - [`metrics`], [`quality`], [`server`]: observability, image-quality
@@ -38,6 +45,7 @@ pub mod quality;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;
+pub mod templates;
 pub mod util;
 pub mod workload;
 

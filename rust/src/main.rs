@@ -49,7 +49,8 @@ fn print_help() {
          commands:\n\
          \x20 serve          --model sdxlm --workers 2 --addr 127.0.0.1:8801 --system instgenie\n\
          \x20 run            --model sdxlm --workers 2 --rps 1.0 --requests 40 --system instgenie\n\
-         \x20                --scheduler mask-aware --dist production --templates 4\n\
+         \x20                --scheduler round-robin|request-lb|token-lb|cache-aware|mask-aware\n\
+         \x20                --dist production --templates 4\n\
          \x20 calibrate      --model fluxm [--reps 20]\n\
          \x20 workload-stats --dist production|public|viton\n\
          \x20 register       --model sdxlm --templates 4\n\
@@ -62,7 +63,11 @@ fn print_help() {
          \x20        curl -s localhost:8801/v1/edits/1000000\n\
          \x20 DELETE /v1/edits/{{id}}  cancel while queued -> cancelled\n\
          \x20        curl -s -X DELETE localhost:8801/v1/edits/1000000\n\
-         \x20 GET    /v1/stats       per-worker queue depths + completions\n\
+         \x20 POST   /v1/templates   register a template online (background trace)\n\
+         \x20        curl -s localhost:8801/v1/templates -d '{{\"template\":\"tpl-9\"}}'\n\
+         \x20 GET    /v1/templates[/{{id}}]  state + bytes + per-worker residency\n\
+         \x20 DELETE /v1/templates/{{id}}    retire (drain in-flight, free tiers)\n\
+         \x20 GET    /v1/stats       per-worker queue depths + cache tiers + completions\n\
          \x20 POST   /edit           synchronous submit+wait wrapper\n\
          \x20 GET    /healthz        liveness"
     );
@@ -86,6 +91,7 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     cfg.max_batch = args.usize("max-batch", cfg.max_batch);
     cfg.sim_bandwidth = args.f64("bandwidth", cfg.sim_bandwidth);
     cfg.prepost_cpu_us = args.u64("prepost-us", cfg.prepost_cpu_us);
+    cfg.registration_wait_ms = args.u64("registration-wait-ms", cfg.registration_wait_ms);
     cfg.force_all_cached = args.bool("force-all-cached");
     cfg.naive_loading = args.bool("naive-loading");
     Ok(cfg)

@@ -2,12 +2,19 @@
 //! baselines it is evaluated against (§6.5).
 //!
 //! The scheduler tracks, per worker, the *outstanding* requests (queued +
-//! running) it has dispatched; completions retire them. The mask-aware
-//! policy estimates each candidate worker's completion latency by pushing
-//! the hypothetical batch through the same regression models + pipeline
-//! DP the workers use (Algo 2 extends Algo 1), and routes to the minimum.
+//! running) it has dispatched; completions retire them. Every pick also
+//! sees a [`RouteCtx`]: the request's template residency on each
+//! candidate worker plus its cache footprint. The mask-aware policy
+//! estimates each candidate's completion latency by pushing the
+//! hypothetical batch through the same regression models + pipeline DP
+//! the workers use, **plus a cache-load penalty** when the candidate does
+//! not hold the template host-resident — completing the "computation +
+//! cache loading" cost model of Algorithm 2. The `cache-aware` policy is
+//! the residency-first baseline: route to a host-resident worker,
+//! tie-break on queue depth.
 
 use crate::cache::pipeline;
+use crate::cache::tier::Residency;
 use crate::cache::LatencyModel;
 use crate::config::{CacheMode, ModelConfig};
 
@@ -22,12 +29,32 @@ pub struct Outstanding {
 /// Per-worker outstanding sets (indexed by worker id).
 pub type Book = [Vec<Outstanding>];
 
+/// Per-request routing context: where the template lives on each
+/// candidate worker, and how many bytes a cache load would move.
+#[derive(Debug, Clone, Default)]
+pub struct RouteCtx {
+    /// `residency[w]` = worker w's residency for this request's template.
+    /// May be shorter than the book (treated as host-resident: no
+    /// penalty), so residency-blind callers can pass
+    /// [`RouteCtx::default`].
+    pub residency: Vec<Residency>,
+    /// The template's registered cache footprint in bytes (the numerator
+    /// of the cache-load penalty; 0 when unknown).
+    pub template_bytes: usize,
+}
+
+impl RouteCtx {
+    pub fn residency_for(&self, worker: usize) -> Residency {
+        self.residency.get(worker).copied().unwrap_or(Residency::Host)
+    }
+}
+
 /// A routing policy.
 pub trait Scheduler: Send {
     fn name(&self) -> &'static str;
 
-    /// Choose a worker for `req` given the current book.
-    fn pick(&mut self, req: &Outstanding, book: &Book) -> usize;
+    /// Choose a worker for `req` given the current book + cache context.
+    fn pick(&mut self, req: &Outstanding, book: &Book, ctx: &RouteCtx) -> usize;
 }
 
 /// Round-robin (the weakest baseline; also used by Diffusers deployments).
@@ -52,7 +79,7 @@ impl Scheduler for RoundRobin {
         "round-robin"
     }
 
-    fn pick(&mut self, _req: &Outstanding, book: &Book) -> usize {
+    fn pick(&mut self, _req: &Outstanding, book: &Book, _ctx: &RouteCtx) -> usize {
         let w = self.next % book.len();
         self.next = self.next.wrapping_add(1);
         w
@@ -68,7 +95,7 @@ impl Scheduler for LeastRequests {
         "request-lb"
     }
 
-    fn pick(&mut self, _req: &Outstanding, book: &Book) -> usize {
+    fn pick(&mut self, _req: &Outstanding, book: &Book, _ctx: &RouteCtx) -> usize {
         (0..book.len()).min_by_key(|&w| book[w].len()).unwrap_or(0)
     }
 }
@@ -82,7 +109,7 @@ impl Scheduler for LeastTokens {
         "token-lb"
     }
 
-    fn pick(&mut self, _req: &Outstanding, book: &Book) -> usize {
+    fn pick(&mut self, _req: &Outstanding, book: &Book, _ctx: &RouteCtx) -> usize {
         (0..book.len())
             .min_by_key(|&w| {
                 book[w]
@@ -94,9 +121,30 @@ impl Scheduler for LeastTokens {
     }
 }
 
+/// Cache-residency-first routing: prefer workers that hold the template
+/// hot in their host tier (then spilled-to-disk over absent), breaking
+/// ties by fewest outstanding requests. The pure cache-affinity half of
+/// Algorithm 2 — cheap, model-free, and already enough to beat
+/// residency-blind balancing when per-worker tiers diverge.
+pub struct CacheAware;
+
+impl Scheduler for CacheAware {
+    fn name(&self) -> &'static str {
+        "cache-aware"
+    }
+
+    fn pick(&mut self, _req: &Outstanding, book: &Book, ctx: &RouteCtx) -> usize {
+        (0..book.len())
+            .min_by_key(|&w| (ctx.residency_for(w), book[w].len()))
+            .unwrap_or(0)
+    }
+}
+
 /// Mask-aware scheduling (Algorithm 2): cost = estimated completion
-/// latency of the worker's backlog with the new request included, using
-/// the calibrated regression models and the pipeline DP.
+/// latency of the worker's backlog with the new request included (the
+/// calibrated regression models + pipeline DP), plus the cache-loading
+/// cost of bringing the template to the candidate worker when it is not
+/// host-resident there.
 pub struct MaskAware {
     cfg: ModelConfig,
     lat: LatencyModel,
@@ -139,6 +187,26 @@ impl MaskAware {
         }
         cost
     }
+
+    /// Cache-loading term of Algorithm 2 for one candidate worker:
+    /// nothing when host-resident, one tier promotion (load model over
+    /// the template's bytes) when spilled, and a full registration trace
+    /// (estimated as `steps` full-sequence step latencies) when absent.
+    pub fn cache_load_cost(&self, residency: Residency, template_bytes: usize) -> f64 {
+        match residency {
+            Residency::Host => 0.0,
+            Residency::Disk => self.lat.load_seconds(template_bytes as f64),
+            Residency::Absent => {
+                let full_step = pipeline::full_latency(&self.lat.step_costs(
+                    &self.cfg,
+                    self.cfg.tokens,
+                    1,
+                    self.mode,
+                ));
+                full_step * self.cfg.steps as f64
+            }
+        }
+    }
 }
 
 impl Scheduler for MaskAware {
@@ -146,13 +214,14 @@ impl Scheduler for MaskAware {
         "mask-aware"
     }
 
-    fn pick(&mut self, req: &Outstanding, book: &Book) -> usize {
+    fn pick(&mut self, req: &Outstanding, book: &Book, ctx: &RouteCtx) -> usize {
         let mut best = 0;
         let mut best_cost = f64::INFINITY;
         for (w, outstanding) in book.iter().enumerate() {
             let mut hypo = outstanding.clone();
             hypo.push(req.clone());
-            let cost = self.calc_cost(&hypo);
+            let cost = self.calc_cost(&hypo)
+                + self.cache_load_cost(ctx.residency_for(w), ctx.template_bytes);
             if cost < best_cost {
                 best_cost = cost;
                 best = w;
@@ -174,6 +243,7 @@ pub fn by_name(
         "round-robin" => Some(Box::new(RoundRobin::new())),
         "request-lb" => Some(Box::new(LeastRequests)),
         "token-lb" => Some(Box::new(LeastTokens)),
+        "cache-aware" => Some(Box::new(CacheAware)),
         "mask-aware" => Some(Box::new(MaskAware::new(
             cfg.clone(),
             lat.clone(),
@@ -183,6 +253,10 @@ pub fn by_name(
         _ => None,
     }
 }
+
+/// All routing policies, in bench/report order.
+pub const POLICY_NAMES: [&str; 5] =
+    ["round-robin", "request-lb", "token-lb", "cache-aware", "mask-aware"];
 
 #[cfg(test)]
 mod tests {
@@ -209,11 +283,15 @@ mod tests {
         Outstanding { id, masked_tokens: masked, remaining_steps: 8 }
     }
 
+    fn uniform() -> RouteCtx {
+        RouteCtx::default()
+    }
+
     #[test]
     fn round_robin_cycles() {
         let mut s = RoundRobin::new();
         let book = vec![vec![], vec![], vec![]];
-        let picks: Vec<usize> = (0..6).map(|i| s.pick(&o(i, 4), &book)).collect();
+        let picks: Vec<usize> = (0..6).map(|i| s.pick(&o(i, 4), &book, &uniform())).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
@@ -221,7 +299,7 @@ mod tests {
     fn least_requests_balances_counts() {
         let mut s = LeastRequests;
         let book = vec![vec![o(1, 4), o(2, 4)], vec![o(3, 4)], vec![]];
-        assert_eq!(s.pick(&o(9, 4), &book), 2);
+        assert_eq!(s.pick(&o(9, 4), &book, &uniform()), 2);
     }
 
     #[test]
@@ -229,7 +307,7 @@ mod tests {
         let mut s = LeastTokens;
         // worker 0 has 1 big request, worker 1 has 2 small ones
         let book = vec![vec![o(1, 32)], vec![o(2, 2), o(3, 2)]];
-        assert_eq!(s.pick(&o(9, 4), &book), 1);
+        assert_eq!(s.pick(&o(9, 4), &book, &uniform()), 1);
     }
 
     #[test]
@@ -239,9 +317,76 @@ mod tests {
         // the mask-aware policy must pick worker 0.
         let mut s = MaskAware::new(cfg(), LatencyModel::nominal(1e9, 1e8), CacheMode::CacheY, 8);
         let book = vec![vec![o(1, 2), o(2, 2)], vec![o(3, 64)]];
-        assert_eq!(s.pick(&o(9, 2), &book), 0);
+        assert_eq!(s.pick(&o(9, 2), &book, &uniform()), 0);
         let mut lr = LeastRequests;
-        assert_eq!(lr.pick(&o(9, 2), &book), 1);
+        assert_eq!(lr.pick(&o(9, 2), &book, &uniform()), 1);
+    }
+
+    #[test]
+    fn cache_aware_routes_to_hot_worker_where_request_lb_does_not() {
+        // acceptance scenario: worker 0's host tier is cold for the
+        // template, worker 1's is hot, load is otherwise equal — the
+        // cache-aware policy must route to the hot worker while the
+        // residency-blind request-lb baseline sticks with worker 0.
+        let book = vec![vec![], vec![]];
+        let ctx = RouteCtx {
+            residency: vec![Residency::Absent, Residency::Host],
+            template_bytes: 1 << 20,
+        };
+        let mut ca = CacheAware;
+        assert_eq!(ca.pick(&o(1, 4), &book, &ctx), 1);
+        let mut lr = LeastRequests;
+        assert_eq!(lr.pick(&o(1, 4), &book, &ctx), 0);
+    }
+
+    #[test]
+    fn cache_aware_prefers_disk_over_absent_and_breaks_ties_by_load() {
+        let mut ca = CacheAware;
+        let ctx = RouteCtx {
+            residency: vec![Residency::Absent, Residency::Disk],
+            template_bytes: 1024,
+        };
+        let book = vec![vec![], vec![]];
+        assert_eq!(ca.pick(&o(1, 4), &book, &ctx), 1, "disk beats absent");
+        // both hot: fall back to least-requests
+        let ctx = RouteCtx {
+            residency: vec![Residency::Host, Residency::Host],
+            template_bytes: 1024,
+        };
+        let book = vec![vec![o(1, 4)], vec![]];
+        assert_eq!(ca.pick(&o(2, 4), &book, &ctx), 1);
+    }
+
+    #[test]
+    fn mask_aware_charges_cache_load_penalty() {
+        let mut s = MaskAware::new(cfg(), LatencyModel::nominal(1e9, 1e8), CacheMode::CacheY, 8);
+        // equal backlogs; only residency differs -> prefer the hot tier
+        let book = vec![vec![o(1, 4)], vec![o(2, 4)]];
+        let ctx = RouteCtx {
+            residency: vec![Residency::Disk, Residency::Host],
+            template_bytes: 8 << 20,
+        };
+        assert_eq!(s.pick(&o(9, 4), &book, &ctx), 1);
+        // penalty ordering: host < disk < absent (registration trace)
+        let host = s.cache_load_cost(Residency::Host, 8 << 20);
+        let disk = s.cache_load_cost(Residency::Disk, 8 << 20);
+        let absent = s.cache_load_cost(Residency::Absent, 8 << 20);
+        assert_eq!(host, 0.0);
+        assert!(disk > 0.0);
+        assert!(absent > disk, "registration must cost more than promotion");
+    }
+
+    #[test]
+    fn mask_aware_penalty_trades_off_against_backlog() {
+        // a hot worker with a monstrous backlog still loses to a cold one
+        let mut s = MaskAware::new(cfg(), LatencyModel::nominal(1e9, 1e8), CacheMode::CacheY, 8);
+        let big: Vec<Outstanding> = (0..32).map(|i| o(i, 64)).collect();
+        let book = vec![big, vec![]];
+        let ctx = RouteCtx {
+            residency: vec![Residency::Host, Residency::Disk],
+            template_bytes: 1 << 10,
+        };
+        assert_eq!(s.pick(&o(99, 4), &book, &ctx), 1);
     }
 
     #[test]
@@ -269,7 +414,7 @@ mod tests {
     fn by_name_covers_all() {
         let c = cfg();
         let l = LatencyModel::nominal(1e9, 1e8);
-        for n in ["round-robin", "request-lb", "token-lb", "mask-aware"] {
+        for n in POLICY_NAMES {
             assert!(by_name(n, &c, &l, CacheMode::CacheY, 8).is_some(), "{n}");
         }
         assert!(by_name("nope", &c, &l, CacheMode::CacheY, 8).is_none());

@@ -17,26 +17,48 @@
 //!   (`200 "cancelled"`); on an already-finished request it evicts the
 //!   retained result instead (`200 "evicted"`, freeing serve-mode
 //!   memory); `409` while running, `404` for unknown ids.
-//! - `GET /v1/stats` — uptime, completions, and per-worker queue depths.
+//! - `GET /v1/stats` — uptime, completions, per-worker queue depths and
+//!   cache-tier stats (host hits / disk promotions / misses / evictions /
+//!   resident bytes).
 //! - `POST /edit` — synchronous compatibility wrapper: submit + wait on
 //!   the request's own ticket (no cross-request rendezvous), returning
 //!   timing + image stats.
 //! - `GET /stats`, `GET /healthz` — legacy counters / liveness.
 //!
+//! # Template lifecycle endpoints (online registration, §2.2 / §4.2)
+//!
+//! - `POST /v1/templates` — body `{"template": "tpl-9"}`: enqueue a
+//!   background registration (full-model trace on the cluster's
+//!   low-priority lane) and return `202 {"state": "registering"}`
+//!   immediately; the cluster keeps serving. Idempotent: an
+//!   already-ready template returns `200 {"state": "ready"}`.
+//! - `GET /v1/templates[/{id}]` — list or inspect templates: state
+//!   (registering / ready / failed / retired), cache bytes, in-flight
+//!   edits, and per-worker residency (host / disk / absent).
+//! - `DELETE /v1/templates/{id}` — retire: new edits are rejected with
+//!   `410`, in-flight ones drain, and the template's host-tier bytes are
+//!   freed on every worker (observable in `GET /v1/stats`). `200` when
+//!   purged at once, `202` while draining.
+//!
 //! Failures are typed ([`EditError`]) and mapped onto status codes:
-//! 404 unknown template, 400 invalid mask, 409 cancelled, 504 timeout,
-//! 503 worker shutdown, 500 internal engine fault. Bodies over 1 MiB are
-//! rejected with `413` instead of being silently truncated.
+//! 404 unknown template, 410 retired template, 400 invalid mask,
+//! 409 cancelled, 504 timeout, 503 worker shutdown, 500 internal engine
+//! fault. Bodies over 1 MiB are rejected with `413` instead of being
+//! silently truncated.
 //!
 //! ```text
 //! curl -s localhost:8801/v1/edits -d '{"template":"tpl-0","mask_ratio":0.2}'
 //!   -> {"id": 1000000, "status": "queued", "status_url": "/v1/edits/1000000", ...}
 //! curl -s localhost:8801/v1/edits/1000000
 //!   -> {"id": 1000000, "status": "done", "timing": {"queue": ..., "e2e": ...}, ...}
-//! curl -s -X DELETE localhost:8801/v1/edits/1000001
-//!   -> {"id": 1000001, "status": "cancelled"}
+//! curl -s localhost:8801/v1/templates -d '{"template":"tpl-9"}'
+//!   -> {"template": "tpl-9", "state": "registering", "status_url": "/v1/templates/tpl-9"}
+//! curl -s localhost:8801/v1/templates/tpl-9
+//!   -> {"template": "tpl-9", "state": "ready", "bytes": ..., "workers": [...]}
+//! curl -s -X DELETE localhost:8801/v1/templates/tpl-9
+//!   -> {"template": "tpl-9", "state": "retired"}
 //! curl -s localhost:8801/v1/stats
-//!   -> {"completed": 1, "workers": [{"worker": 0, "queued": 0, ...}], ...}
+//!   -> {"completed": 1, "workers": [{"worker": 0, "queued": 0, "cache": {...}}], ...}
 //! ```
 
 use std::io::{BufRead, BufReader, Read, Write};
@@ -47,8 +69,9 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::cluster::{CancelOutcome, Cluster, RequestState};
+use crate::cluster::{CancelOutcome, Cluster, RequestState, TemplateStatus};
 use crate::engine::request::{EditError, EditRequest, EditRequestBuilder, EditResponse};
+use crate::templates::{RegisterAdmission, RetireOutcome};
 use crate::util::json::Json;
 use crate::util::tensor::Tensor;
 
@@ -109,6 +132,12 @@ impl HttpServer {
                 Err(_) => (400, error_obj(&format!("bad request id {rest:?}"))),
             };
         }
+        if let Some(rest) = path.strip_prefix("/v1/templates/") {
+            if rest.is_empty() {
+                return (400, error_obj("empty template id"));
+            }
+            return self.template_by_id(method, rest);
+        }
         match (method, path) {
             ("GET", "/healthz") => (200, Json::obj(vec![("ok", Json::Bool(true))])),
             ("GET", "/stats") => (
@@ -122,6 +151,8 @@ impl HttpServer {
             ("GET", "/v1/stats") => self.stats_v1(),
             ("POST", "/edit") => self.edit_sync(body),
             ("POST", "/v1/edits") => self.edit_async(body),
+            ("POST", "/v1/templates") => self.template_register(body),
+            ("GET", "/v1/templates") => self.templates_list(),
             _ => (404, error_obj("not found")),
         }
     }
@@ -135,9 +166,12 @@ impl HttpServer {
         let template = j.at("template").as_str().unwrap_or("tpl-0").to_string();
         let ratio = j.at("mask_ratio").as_f64().unwrap_or(0.15);
         let seed = j.at("prompt_seed").as_f64().unwrap_or(0.0) as u64;
-        if !self.cluster.has_template(&template) {
-            return Err(edit_error_reply(&EditError::UnknownTemplate(template)));
-        }
+        // typed template admission: unknown -> 404, retired -> 410, failed
+        // registration -> 500; still-registering templates are accepted
+        // (the edit queues at the worker until the template is ready)
+        self.cluster
+            .check_template(&template)
+            .map_err(|e| edit_error_reply(&e))?;
         let hw = self.cluster.model.latent_hw;
         let mut req = EditRequestBuilder::new(0)
             .template(template)
@@ -244,17 +278,92 @@ impl HttpServer {
         }
     }
 
-    /// `GET /v1/stats`: per-worker queue depths + completion counters.
+    /// `POST /v1/templates`: enqueue a background registration.
+    fn template_register(&self, body: &str) -> (u16, Json) {
+        let j = match Json::parse(body) {
+            Ok(j) => j,
+            Err(e) => return (400, error_obj(&format!("invalid JSON body: {e}"))),
+        };
+        let Some(template) = j.at("template").as_str() else {
+            return (400, error_obj("missing \"template\" field"));
+        };
+        if template.is_empty() {
+            return (400, error_obj("empty template id"));
+        }
+        match self.cluster.register_template_async(template) {
+            RegisterAdmission::AlreadyReady => {
+                (200, template_reply(template, "ready", None))
+            }
+            RegisterAdmission::Started { .. } | RegisterAdmission::InProgress => {
+                (202, template_reply(template, "registering", None))
+            }
+        }
+    }
+
+    /// `GET /v1/templates`: every template's state + residency.
+    fn templates_list(&self) -> (u16, Json) {
+        let templates = self
+            .cluster
+            .templates_status()
+            .into_iter()
+            .map(|s| template_status_body(&s))
+            .collect();
+        (
+            200,
+            Json::obj(vec![
+                ("model", Json::str(self.cluster.model.name.clone())),
+                ("templates", Json::arr(templates)),
+            ]),
+        )
+    }
+
+    /// `GET`/`DELETE /v1/templates/{id}`.
+    fn template_by_id(&self, method: &str, template_id: &str) -> (u16, Json) {
+        match method {
+            "GET" => match self.cluster.template_status(template_id) {
+                Some(status) => (200, template_status_body(&status)),
+                None => (404, error_obj(&format!("no such template {template_id:?}"))),
+            },
+            "DELETE" => match self.cluster.retire_template(template_id) {
+                RetireOutcome::Retired => {
+                    (200, template_reply(template_id, "retired", None))
+                }
+                RetireOutcome::Draining { inflight } => {
+                    (202, template_reply(template_id, "retiring", Some(inflight)))
+                }
+                RetireOutcome::NotFound => {
+                    (404, error_obj(&format!("no such template {template_id:?}")))
+                }
+            },
+            _ => (405, error_obj("method not allowed")),
+        }
+    }
+
+    /// `GET /v1/stats`: per-worker queue depths + cache-tier stats +
+    /// completion counters.
     fn stats_v1(&self) -> (u16, Json) {
+        let caches = self.cluster.cache_stats();
         let depths = self
             .cluster
             .queue_depths()
             .into_iter()
-            .map(|d| {
+            .zip(caches)
+            .map(|(d, c)| {
                 Json::obj(vec![
                     ("worker", Json::num(d.worker as f64)),
                     ("queued", Json::num(d.queued as f64)),
                     ("outstanding", Json::num(d.outstanding as f64)),
+                    (
+                        "cache",
+                        Json::obj(vec![
+                            ("host_hits", Json::num(c.stats.host_hits as f64)),
+                            ("disk_promotions", Json::num(c.stats.disk_promotions as f64)),
+                            ("misses", Json::num(c.stats.misses as f64)),
+                            ("evictions", Json::num(c.stats.evictions as f64)),
+                            ("host_bytes", Json::num(c.host_bytes as f64)),
+                            ("host_templates", Json::num(c.host_templates as f64)),
+                        ]),
+                    ),
                 ])
             })
             .collect();
@@ -263,10 +372,53 @@ impl HttpServer {
             Json::obj(vec![
                 ("completed", Json::num(self.cluster.completed() as f64)),
                 ("uptime_secs", Json::num(self.cluster.elapsed())),
+                ("templates", Json::num(self.cluster.template_count() as f64)),
                 ("workers", Json::arr(depths)),
             ]),
         )
     }
+}
+
+/// Minimal template reply: id + state (+ draining count), with the
+/// polling URL.
+fn template_reply(template_id: &str, state: &str, inflight: Option<usize>) -> Json {
+    let mut pairs = vec![
+        ("template", Json::str(template_id)),
+        ("state", Json::str(state)),
+        (
+            "status_url",
+            Json::str(format!("/v1/templates/{template_id}")),
+        ),
+    ];
+    if let Some(n) = inflight {
+        pairs.push(("inflight", Json::num(n as f64)));
+    }
+    Json::obj(pairs)
+}
+
+/// Full template status body: registry entry + per-worker residency.
+fn template_status_body(status: &TemplateStatus) -> Json {
+    let info = &status.info;
+    let workers = status
+        .residency
+        .iter()
+        .enumerate()
+        .map(|(w, r)| {
+            Json::obj(vec![
+                ("worker", Json::num(w as f64)),
+                ("residency", Json::str(r.label())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("template", Json::str(info.template_id.clone())),
+        ("state", Json::str(info.state.label())),
+        ("bytes", Json::num(info.bytes as f64)),
+        ("inflight", Json::num(info.inflight as f64)),
+        ("epoch", Json::num(info.epoch as f64)),
+        ("age_secs", Json::num(info.age_secs)),
+        ("workers", Json::arr(workers)),
+    ])
 }
 
 fn status_pairs<'a>(
@@ -389,6 +541,7 @@ fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result<()>
         404 => "Not Found",
         405 => "Method Not Allowed",
         409 => "Conflict",
+        410 => "Gone",
         413 => "Payload Too Large",
         503 => "Service Unavailable",
         504 => "Gateway Timeout",

@@ -1,0 +1,506 @@
+//! Cluster-wide template lifecycle — the authoritative online template
+//! set (paper §2.2: templates arrive continuously and are reused up to
+//! 35 000×; §4.2: their activations live in a storage hierarchy).
+//!
+//! The [`TemplateRegistry`] owns which `(model, template)` pairs exist,
+//! what lifecycle state each is in, its cache footprint, and how many
+//! edits are in flight against it. Per-worker residency (hot-in-host /
+//! on-disk / absent) stays with each worker's
+//! [`crate::cache::tier::TieredStore`]; the cluster combines both views
+//! for routing and the `/v1/templates` endpoints.
+//!
+//! Lifecycle: `registering → ready ⇄ (spilled per worker) → retired`,
+//! with `failed` as the terminal state of a registration that errored.
+//! Registration is online — `POST /v1/templates` enqueues a full-model
+//! trace on a background low-priority lane while serving continues — and
+//! retirement drains: in-flight edits finish, new submissions are
+//! rejected with [`EditError::TemplateRetired`], and the last release
+//! triggers the purge of every worker tier.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::engine::request::EditError;
+
+/// Where a template is in its cluster-wide life.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TemplateState {
+    /// A registration job (full-model trace) is queued or running.
+    Registering,
+    /// Activations are registered; edits against it are servable.
+    Ready,
+    /// Registration failed; submissions are rejected until re-registered.
+    Failed(String),
+    /// Retired: draining in-flight edits, rejecting new ones.
+    Retired,
+}
+
+impl TemplateState {
+    /// Stable label for status endpoints.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TemplateState::Registering => "registering",
+            TemplateState::Ready => "ready",
+            TemplateState::Failed(_) => "failed",
+            TemplateState::Retired => "retired",
+        }
+    }
+}
+
+/// Snapshot of one template's registry entry.
+#[derive(Debug, Clone)]
+pub struct TemplateInfo {
+    pub template_id: String,
+    pub state: TemplateState,
+    /// Cache footprint when resident (0 while registering / cold-adopted).
+    pub bytes: usize,
+    /// Edits currently queued or running against this template.
+    pub inflight: usize,
+    /// Bumped on every (re-)registration; stale jobs check it.
+    pub epoch: u64,
+    /// Seconds since the last state transition.
+    pub age_secs: f64,
+}
+
+/// What [`TemplateRegistry::begin_register`] decided.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegisterAdmission {
+    /// A new registration was started; run the trace, then call
+    /// `complete_register` (or `fail_register`) with this epoch.
+    Started { epoch: u64 },
+    /// The `(model, template)` pair is already registered — skip the
+    /// trace (launch dedupe / idempotent POST).
+    AlreadyReady,
+    /// A registration for this template is already in flight.
+    InProgress,
+}
+
+/// What [`TemplateRegistry::retire`] decided.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetireOutcome {
+    /// No in-flight edits: the caller should purge worker tiers now.
+    Retired,
+    /// In-flight edits are draining; the purge happens on last release.
+    Draining { inflight: usize },
+    /// No such template.
+    NotFound,
+}
+
+struct Entry {
+    state: TemplateState,
+    bytes: usize,
+    inflight: usize,
+    epoch: u64,
+    since: Instant,
+}
+
+impl Entry {
+    fn transition(&mut self, state: TemplateState) {
+        self.state = state;
+        self.since = Instant::now();
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: HashMap<String, Entry>,
+    /// request id -> template id, for releasing in-flight references.
+    requests: HashMap<u64, String>,
+}
+
+/// The cluster-level template table. Shared by the cluster frontends
+/// (admission checks), the collector (in-flight release), the background
+/// registration lane, and every worker (wait-for-ready on tier misses).
+pub struct TemplateRegistry {
+    /// Model the templates were traced on; registry keys are effectively
+    /// `(model, template)` pairs.
+    model: String,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl TemplateRegistry {
+    pub fn new(model: impl Into<String>) -> Arc<TemplateRegistry> {
+        Arc::new(TemplateRegistry {
+            model: model.into(),
+            inner: Mutex::new(Inner::default()),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Admit (or dedupe) a registration. Absent, failed, and retired
+    /// templates start a fresh registration epoch; ready and in-progress
+    /// ones are skipped — the launch-path dedupe and the idempotency of
+    /// `POST /v1/templates` both fall out of this.
+    pub fn begin_register(&self, template_id: &str) -> RegisterAdmission {
+        let mut g = self.inner.lock().unwrap();
+        // fresh templates enter as a zero-epoch retired placeholder and
+        // are promoted by the shared re-registration path below
+        let e = g.entries.entry(template_id.to_string()).or_insert(Entry {
+            state: TemplateState::Retired,
+            bytes: 0,
+            inflight: 0,
+            epoch: 0,
+            since: Instant::now(),
+        });
+        match e.state {
+            TemplateState::Ready => RegisterAdmission::AlreadyReady,
+            TemplateState::Registering => RegisterAdmission::InProgress,
+            TemplateState::Failed(_) | TemplateState::Retired => {
+                e.epoch += 1;
+                e.transition(TemplateState::Registering);
+                RegisterAdmission::Started { epoch: e.epoch }
+            }
+        }
+    }
+
+    /// Registration finished: publish the template. Returns `false` when
+    /// the registration is stale (retired or re-registered meanwhile) —
+    /// the caller must then un-insert whatever it staged into the tiers.
+    pub fn complete_register(&self, template_id: &str, epoch: u64, bytes: usize) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let fresh = match g.entries.get_mut(template_id) {
+            Some(e) if e.epoch == epoch && e.state == TemplateState::Registering => {
+                e.bytes = bytes;
+                e.transition(TemplateState::Ready);
+                true
+            }
+            _ => false,
+        };
+        drop(g);
+        self.cv.notify_all();
+        fresh
+    }
+
+    /// Registration failed: park the entry in `Failed` so waiting
+    /// requests resolve with a typed error instead of timing out.
+    pub fn fail_register(&self, template_id: &str, epoch: u64, reason: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(e) = g.entries.get_mut(template_id) {
+            if e.epoch == epoch && e.state == TemplateState::Registering {
+                e.transition(TemplateState::Failed(reason.to_string()));
+            }
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Publish a template registered synchronously (cluster launch path).
+    pub fn mark_ready(&self, template_id: &str, bytes: usize) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.entries.entry(template_id.to_string()).or_insert(Entry {
+            state: TemplateState::Ready,
+            bytes: 0,
+            inflight: 0,
+            epoch: 1,
+            since: Instant::now(),
+        });
+        e.bytes = bytes;
+        e.transition(TemplateState::Ready);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Retire a template: new submissions are rejected immediately;
+    /// in-flight edits drain. When none are in flight the caller purges
+    /// worker tiers now; otherwise [`TemplateRegistry::release_request`]
+    /// reports the drain completion.
+    pub fn retire(&self, template_id: &str) -> RetireOutcome {
+        let mut g = self.inner.lock().unwrap();
+        let out = match g.entries.get_mut(template_id) {
+            None => RetireOutcome::NotFound,
+            Some(e) => {
+                e.transition(TemplateState::Retired);
+                if e.inflight == 0 {
+                    RetireOutcome::Retired
+                } else {
+                    RetireOutcome::Draining { inflight: e.inflight }
+                }
+            }
+        };
+        drop(g);
+        self.cv.notify_all();
+        out
+    }
+
+    /// Whether a submission against this template would be accepted
+    /// (ready, or queued behind an in-flight registration).
+    pub fn is_submittable(&self, template_id: &str) -> bool {
+        self.check_submittable(template_id).is_ok()
+    }
+
+    /// Typed admission check for the frontends.
+    pub fn check_submittable(&self, template_id: &str) -> Result<(), EditError> {
+        let g = self.inner.lock().unwrap();
+        match g.entries.get(template_id).map(|e| &e.state) {
+            Some(TemplateState::Ready) | Some(TemplateState::Registering) => Ok(()),
+            Some(TemplateState::Retired) => {
+                Err(EditError::TemplateRetired(template_id.to_string()))
+            }
+            Some(TemplateState::Failed(reason)) => Err(EditError::Internal(format!(
+                "template {template_id:?} failed registration: {reason}"
+            ))),
+            None => Err(EditError::UnknownTemplate(template_id.to_string())),
+        }
+    }
+
+    /// Take an in-flight reference for a routed request. Unknown
+    /// templates are adopted as cold `Ready` entries (direct submitters
+    /// bypass the HTTP admission check and cold-register on the worker).
+    pub fn acquire(&self, request_id: u64, template_id: &str) {
+        let mut g = self.inner.lock().unwrap();
+        let inner = &mut *g;
+        let e = inner.entries.entry(template_id.to_string()).or_insert(Entry {
+            state: TemplateState::Ready,
+            bytes: 0,
+            inflight: 0,
+            epoch: 1,
+            since: Instant::now(),
+        });
+        e.inflight += 1;
+        inner.requests.insert(request_id, template_id.to_string());
+    }
+
+    /// Drop the in-flight reference of a finished/cancelled request.
+    /// Returns `Some(template_id)` when this release drained a retired
+    /// template — the caller must purge it from every worker tier.
+    /// Idempotent per request id.
+    pub fn release_request(&self, request_id: u64) -> Option<String> {
+        let mut g = self.inner.lock().unwrap();
+        let template_id = g.requests.remove(&request_id)?;
+        let drained = match g.entries.get_mut(&template_id) {
+            Some(e) => {
+                e.inflight = e.inflight.saturating_sub(1);
+                e.inflight == 0 && e.state == TemplateState::Retired
+            }
+            None => false,
+        };
+        drop(g);
+        self.cv.notify_all();
+        drained.then_some(template_id)
+    }
+
+    /// Block until the template leaves `Registering` (submit-during-
+    /// registration queues here), with typed resolution: `Ok` when ready,
+    /// the matching [`EditError`] when retired / failed / unknown, and
+    /// [`EditError::Timeout`] when the deadline passes first.
+    pub fn wait_ready(&self, template_id: &str, timeout: Duration) -> Result<(), EditError> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            match g.entries.get(template_id).map(|e| &e.state) {
+                Some(TemplateState::Ready) => return Ok(()),
+                Some(TemplateState::Retired) => {
+                    return Err(EditError::TemplateRetired(template_id.to_string()))
+                }
+                Some(TemplateState::Failed(reason)) => {
+                    return Err(EditError::Internal(format!(
+                        "template {template_id:?} failed registration: {reason}"
+                    )))
+                }
+                Some(TemplateState::Registering) => {}
+                None => return Err(EditError::UnknownTemplate(template_id.to_string())),
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(EditError::Timeout);
+            }
+            let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Non-blocking state lookup (worker admission path).
+    pub fn state(&self, template_id: &str) -> Option<TemplateState> {
+        self.inner.lock().unwrap().entries.get(template_id).map(|e| e.state.clone())
+    }
+
+    /// Registered cache footprint (None for unknown templates).
+    pub fn bytes(&self, template_id: &str) -> Option<usize> {
+        self.inner.lock().unwrap().entries.get(template_id).map(|e| e.bytes)
+    }
+
+    pub fn info(&self, template_id: &str) -> Option<TemplateInfo> {
+        let g = self.inner.lock().unwrap();
+        g.entries.get(template_id).map(|e| TemplateInfo {
+            template_id: template_id.to_string(),
+            state: e.state.clone(),
+            bytes: e.bytes,
+            inflight: e.inflight,
+            epoch: e.epoch,
+            age_secs: e.since.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// All known templates, sorted by id (stable endpoint output).
+    pub fn list(&self) -> Vec<TemplateInfo> {
+        let g = self.inner.lock().unwrap();
+        let mut out: Vec<TemplateInfo> = g
+            .entries
+            .iter()
+            .map(|(id, e)| TemplateInfo {
+                template_id: id.clone(),
+                state: e.state.clone(),
+                bytes: e.bytes,
+                inflight: e.inflight,
+                epoch: e.epoch,
+                age_secs: e.since.elapsed().as_secs_f64(),
+            })
+            .collect();
+        out.sort_by(|a, b| a.template_id.cmp(&b.template_id));
+        out
+    }
+
+    /// Number of known templates (any state).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_lifecycle_and_dedupe() {
+        let reg = TemplateRegistry::new("m");
+        assert_eq!(reg.model(), "m");
+        let RegisterAdmission::Started { epoch } = reg.begin_register("t") else {
+            panic!("fresh template must start registration");
+        };
+        assert_eq!(epoch, 1);
+        assert_eq!(reg.state("t"), Some(TemplateState::Registering));
+        // duplicate (model, template) pairs never re-run the trace
+        assert_eq!(reg.begin_register("t"), RegisterAdmission::InProgress);
+        assert!(reg.complete_register("t", epoch, 128));
+        assert_eq!(reg.begin_register("t"), RegisterAdmission::AlreadyReady);
+        assert_eq!(reg.state("t"), Some(TemplateState::Ready));
+        assert_eq!(reg.bytes("t"), Some(128));
+        assert!(reg.is_submittable("t"));
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn failed_registration_is_typed_and_retryable() {
+        let reg = TemplateRegistry::new("m");
+        let RegisterAdmission::Started { epoch } = reg.begin_register("t") else {
+            panic!("started")
+        };
+        reg.fail_register("t", epoch, "boom");
+        assert!(matches!(
+            reg.check_submittable("t"),
+            Err(EditError::Internal(_))
+        ));
+        assert!(matches!(
+            reg.wait_ready("t", Duration::from_millis(5)),
+            Err(EditError::Internal(_))
+        ));
+        // a failed template can be re-registered at a fresh epoch
+        let RegisterAdmission::Started { epoch } = reg.begin_register("t") else {
+            panic!("retry")
+        };
+        assert_eq!(epoch, 2);
+        assert!(reg.complete_register("t", epoch, 64));
+        assert!(reg.is_submittable("t"));
+    }
+
+    #[test]
+    fn retire_drains_inflight_then_reports_purge() {
+        let reg = TemplateRegistry::new("m");
+        reg.mark_ready("t", 256);
+        reg.acquire(1, "t");
+        reg.acquire(2, "t");
+        assert_eq!(reg.retire("t"), RetireOutcome::Draining { inflight: 2 });
+        // retired templates reject new submissions with the typed error
+        assert!(matches!(
+            reg.check_submittable("t"),
+            Err(EditError::TemplateRetired(_))
+        ));
+        assert_eq!(reg.release_request(1), None, "still one in flight");
+        assert_eq!(reg.release_request(1), None, "release is idempotent");
+        assert_eq!(
+            reg.release_request(2).as_deref(),
+            Some("t"),
+            "last release reports the drained template for tier purge"
+        );
+        // already drained: retiring again purges immediately
+        assert_eq!(reg.retire("t"), RetireOutcome::Retired);
+        assert_eq!(reg.retire("ghost"), RetireOutcome::NotFound);
+    }
+
+    #[test]
+    fn reregister_after_retire_bumps_epoch_and_ignores_stale_jobs() {
+        let reg = TemplateRegistry::new("m");
+        let RegisterAdmission::Started { epoch: e1 } = reg.begin_register("t") else {
+            panic!()
+        };
+        // retire while the registration job is still running
+        assert_eq!(reg.retire("t"), RetireOutcome::Retired);
+        // the stale job must not publish into the retired entry
+        assert!(!reg.complete_register("t", e1, 99));
+        assert_eq!(reg.state("t"), Some(TemplateState::Retired));
+        // re-registration runs at a fresh epoch and wins
+        let RegisterAdmission::Started { epoch: e2 } = reg.begin_register("t") else {
+            panic!()
+        };
+        assert!(e2 > e1);
+        assert!(reg.complete_register("t", e2, 100));
+        assert_eq!(reg.bytes("t"), Some(100));
+        assert!(reg.is_submittable("t"));
+    }
+
+    #[test]
+    fn wait_ready_unblocks_on_completion() {
+        let reg = TemplateRegistry::new("m");
+        let RegisterAdmission::Started { epoch } = reg.begin_register("t") else {
+            panic!()
+        };
+        assert!(matches!(
+            reg.wait_ready("t", Duration::from_millis(20)),
+            Err(EditError::Timeout)
+        ));
+        let reg2 = Arc::clone(&reg);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            reg2.complete_register("t", epoch, 32);
+        });
+        assert!(reg.wait_ready("t", Duration::from_secs(5)).is_ok());
+        h.join().unwrap();
+        assert!(matches!(
+            reg.wait_ready("ghost", Duration::from_millis(1)),
+            Err(EditError::UnknownTemplate(_))
+        ));
+    }
+
+    #[test]
+    fn acquire_adopts_unknown_templates_for_direct_submitters() {
+        let reg = TemplateRegistry::new("m");
+        reg.acquire(7, "cold");
+        assert_eq!(reg.state("cold"), Some(TemplateState::Ready));
+        assert_eq!(reg.info("cold").unwrap().inflight, 1);
+        assert_eq!(reg.release_request(7), None);
+        assert_eq!(reg.info("cold").unwrap().inflight, 0);
+    }
+
+    #[test]
+    fn list_is_sorted_and_complete() {
+        let reg = TemplateRegistry::new("m");
+        reg.mark_ready("b", 1);
+        reg.mark_ready("a", 2);
+        reg.begin_register("c");
+        let infos = reg.list();
+        let ids: Vec<&str> = infos.iter().map(|i| i.template_id.as_str()).collect();
+        assert_eq!(ids, vec!["a", "b", "c"]);
+        assert_eq!(infos[2].state.label(), "registering");
+        assert!(!reg.is_empty());
+    }
+}

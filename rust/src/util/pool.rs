@@ -1,18 +1,36 @@
 //! Fixed-size worker thread pool (offline substitute for tokio's blocking
-//! pool). Used for the disaggregated pre/post-processing of §4.3: the
-//! denoising step-loop thread never runs CPU-bound image work itself; it
-//! submits jobs here and receives completions over channels.
+//! pool) with two priority lanes. Used for the disaggregated pre/post-
+//! processing of §4.3: the denoising step-loop thread never runs CPU-bound
+//! image work itself; it submits jobs here and receives completions over
+//! channels. The low-priority lane carries background cache work — online
+//! template registration and disk-tier prefetches — so it can never delay
+//! latency-critical pre/post jobs.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// A fixed pool of named worker threads.
+#[derive(Default)]
+struct Lanes {
+    normal: VecDeque<Job>,
+    low: VecDeque<Job>,
+    closed: bool,
+}
+
+struct Shared {
+    lanes: Mutex<Lanes>,
+    cv: Condvar,
+}
+
+/// A fixed pool of named worker threads with a normal and a low-priority
+/// lane. Workers drain the normal lane first; low-lane jobs run only when
+/// no normal job is waiting.
 pub struct ThreadPool {
-    tx: Option<Sender<Job>>,
+    shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     queued: Arc<AtomicUsize>,
 }
@@ -21,42 +39,68 @@ impl ThreadPool {
     /// Spawn `size` workers named `<name>-<i>`.
     pub fn new(name: &str, size: usize) -> ThreadPool {
         assert!(size > 0);
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared { lanes: Mutex::new(Lanes::default()), cv: Condvar::new() });
         let queued = Arc::new(AtomicUsize::new(0));
         let workers = (0..size)
             .map(|i| {
-                let rx = Arc::clone(&rx);
+                let shared = Arc::clone(&shared);
                 let queued = Arc::clone(&queued);
                 std::thread::Builder::new()
                     .name(format!("{name}-{i}"))
                     .spawn(move || loop {
                         let job = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
+                            let mut g = shared.lanes.lock().unwrap();
+                            loop {
+                                let lanes = &mut *g;
+                                if let Some(j) = lanes
+                                    .normal
+                                    .pop_front()
+                                    .or_else(|| lanes.low.pop_front())
+                                {
+                                    break Some(j);
+                                }
+                                if g.closed {
+                                    break None;
+                                }
+                                g = shared.cv.wait(g).unwrap();
+                            }
                         };
                         match job {
-                            Ok(job) => {
+                            Some(job) => {
                                 job();
                                 queued.fetch_sub(1, Ordering::Relaxed);
                             }
-                            Err(_) => break, // pool dropped
+                            None => break, // pool dropped + lanes drained
                         }
                     })
                     .expect("spawn pool worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, queued }
+        ThreadPool { shared, workers, queued }
     }
 
-    /// Submit a job; never blocks.
-    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+    fn push(&self, job: Job, low: bool) {
         self.queued.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .as_ref()
-            .expect("pool alive")
-            .send(Box::new(job))
-            .expect("pool workers alive");
+        let mut g = self.shared.lanes.lock().unwrap();
+        assert!(!g.closed, "pool alive");
+        if low {
+            g.low.push_back(job);
+        } else {
+            g.normal.push_back(job);
+        }
+        drop(g);
+        self.shared.cv.notify_one();
+    }
+
+    /// Submit a job on the normal lane; never blocks.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.push(Box::new(job), false);
+    }
+
+    /// Submit a background job on the low-priority lane: it runs only when
+    /// no normal-lane job is waiting (template registration, prefetches).
+    pub fn submit_low(&self, job: impl FnOnce() + Send + 'static) {
+        self.push(Box::new(job), true);
     }
 
     /// Jobs submitted but not yet finished (approximate; for backpressure).
@@ -67,7 +111,8 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        drop(self.tx.take()); // close the channel; workers drain then exit
+        self.shared.lanes.lock().unwrap().closed = true;
+        self.shared.cv.notify_all(); // workers drain both lanes, then exit
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -138,5 +183,40 @@ mod tests {
         a.wait();
         b.wait();
         assert!(t0.elapsed() < std::time::Duration::from_millis(95));
+    }
+
+    #[test]
+    fn low_lane_yields_to_normal_lane() {
+        // one worker, blocked by a gate job; while it is blocked, enqueue a
+        // low-lane job and then a normal-lane job — the normal one must run
+        // first even though it was submitted second.
+        let pool = ThreadPool::new("lanes", 1);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        {
+            let gate = Arc::clone(&gate);
+            pool.submit(move || {
+                let (lock, cv) = &*gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            });
+        }
+        let order = Arc::new(Mutex::new(Vec::new()));
+        {
+            let order = Arc::clone(&order);
+            pool.submit_low(move || order.lock().unwrap().push("low"));
+        }
+        {
+            let order = Arc::clone(&order);
+            pool.submit(move || order.lock().unwrap().push("normal"));
+        }
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        drop(pool); // join: all three jobs ran
+        assert_eq!(*order.lock().unwrap(), vec!["normal", "low"]);
     }
 }

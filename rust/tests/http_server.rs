@@ -231,6 +231,129 @@ fn v1_cancel_queued_request() {
 }
 
 #[test]
+fn v1_template_lifecycle_round_trip() {
+    let Some(server) = serve("127.0.0.1:18928", 2000, |_| {}) else { return };
+    let addr = "127.0.0.1:18928";
+
+    // malformed registration bodies are rejected before touching state
+    let (code, _) = server.route("POST", "/v1/templates", "{not json");
+    assert_eq!(code, 400);
+    let (code, _) = server.route("POST", "/v1/templates", r#"{"nope": 1}"#);
+    assert_eq!(code, 400);
+    let (code, _) = server.route("GET", "/v1/templates/absent", "");
+    assert_eq!(code, 404);
+    let (code, _) = server.route("DELETE", "/v1/templates/absent", "");
+    assert_eq!(code, 404);
+
+    // the launch set is listed as ready
+    let j = body_json(&get(addr, "/v1/templates"));
+    let listed = j.at("templates").as_arr().expect("templates array");
+    assert!(listed.len() >= 2, "launch templates listed");
+    assert!(listed.iter().all(|t| t.at("state").as_str() == Some("ready")));
+
+    // online registration: accepted immediately, traced in the background
+    let resp = post(addr, "/v1/templates", r#"{"template": "tpl-http"}"#);
+    assert!(resp.starts_with("HTTP/1.1 202"), "{resp}");
+    let j = body_json(&resp);
+    assert_eq!(j.at("state").as_str(), Some("registering"));
+    assert_eq!(j.at("status_url").as_str(), Some("/v1/templates/tpl-http"));
+
+    // poll until ready; then every worker must hold it host-resident
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let ready = loop {
+        let j = body_json(&get(addr, "/v1/templates/tpl-http"));
+        match j.at("state").as_str() {
+            Some("ready") => break j,
+            Some("registering") => {}
+            other => panic!("unexpected template state {other:?}"),
+        }
+        assert!(Instant::now() < deadline, "registration never completed");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    assert!(ready.at("bytes").as_usize().unwrap() > 0);
+    let workers = ready.at("workers").as_arr().expect("residency per worker");
+    assert!(!workers.is_empty());
+    assert!(workers.iter().all(|w| w.at("residency").as_str() == Some("host")));
+
+    // an edit against the online-registered template serves without restart
+    let resp = post(
+        addr,
+        "/v1/edits",
+        r#"{"template": "tpl-http", "mask_ratio": 0.15, "prompt_seed": 1}"#,
+    );
+    assert!(resp.starts_with("HTTP/1.1 202"), "{resp}");
+    let id = body_json(&resp).at("id").as_usize().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let j = body_json(&get(addr, &format!("/v1/edits/{id}")));
+        if j.at("status").as_str() == Some("done") {
+            assert_eq!(j.at("template").as_str(), Some("tpl-http"));
+            break;
+        }
+        assert!(Instant::now() < deadline, "edit never completed");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // registering an already-ready template is an idempotent 200
+    let resp = post(addr, "/v1/templates", r#"{"template": "tpl-http"}"#);
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert_eq!(body_json(&resp).at("state").as_str(), Some("ready"));
+
+    // tier stats are visible over HTTP, and the registered bytes are held
+    let j = body_json(&get(addr, "/v1/stats"));
+    let stats_workers = j.at("workers").as_arr().expect("workers");
+    let cache = stats_workers[0].at("cache");
+    for field in ["host_hits", "disk_promotions", "misses", "evictions"] {
+        assert!(cache.at(field).as_usize().is_some(), "missing cache.{field}");
+    }
+    let bytes_before: usize = stats_workers
+        .iter()
+        .map(|w| w.at("cache").at("host_bytes").as_usize().unwrap())
+        .sum();
+    assert!(bytes_before > 0);
+
+    // retirement: rejected edits, drained refs, freed bytes on every worker
+    let resp = delete(addr, "/v1/templates/tpl-http");
+    assert!(
+        resp.starts_with("HTTP/1.1 200") || resp.starts_with("HTTP/1.1 202"),
+        "{resp}"
+    );
+    let resp = post(
+        addr,
+        "/v1/edits",
+        r#"{"template": "tpl-http", "mask_ratio": 0.15, "prompt_seed": 2}"#,
+    );
+    assert!(resp.starts_with("HTTP/1.1 410"), "{resp}");
+    assert_eq!(
+        body_json(&resp).at("error_kind").as_str(),
+        Some("template_retired")
+    );
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let j = body_json(&get(addr, "/v1/templates/tpl-http"));
+        assert_eq!(j.at("state").as_str(), Some("retired"));
+        let workers = j.at("workers").as_arr().unwrap();
+        if workers.iter().all(|w| w.at("residency").as_str() == Some("absent")) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "retired tiers never purged");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let j = body_json(&get(addr, "/v1/stats"));
+    let bytes_after: usize = j
+        .at("workers")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|w| w.at("cache").at("host_bytes").as_usize().unwrap())
+        .sum();
+    assert!(
+        bytes_after < bytes_before,
+        "DELETE must free host-tier bytes ({bytes_before} -> {bytes_after})"
+    );
+}
+
+#[test]
 fn oversized_body_yields_413() {
     let Some(_server) = serve("127.0.0.1:18926", 900, |_| {}) else { return };
     // declare 2 MiB: the server must refuse instead of truncating the read

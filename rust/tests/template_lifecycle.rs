@@ -1,0 +1,215 @@
+//! Integration: the online template lifecycle (requires `make artifacts`;
+//! tests skip silently otherwise) — register-while-serving, the
+//! submit-during-registration park/timeout races, retire-while-edits-
+//! inflight draining, tier purges, and re-registration after delete.
+
+use std::time::{Duration, Instant};
+
+use instgenie::cache::tier::Residency;
+use instgenie::cache::LatencyModel;
+use instgenie::cluster::{Cluster, ClusterOpts};
+use instgenie::config::{EngineConfig, SystemKind};
+use instgenie::engine::request::{EditError, EditRequestBuilder};
+use instgenie::model::MaskSpec;
+use instgenie::runtime::Manifest;
+use instgenie::scheduler;
+use instgenie::templates::{RegisterAdmission, RetireOutcome, TemplateState};
+use instgenie::util::rng::Pcg;
+
+fn launch(workers: usize, tweak: impl FnOnce(&mut EngineConfig)) -> Option<Cluster> {
+    let manifest = Manifest::load("artifacts").ok()?;
+    let mcfg = manifest.model("sd21m").ok()?.config.clone();
+    let mut engine = EngineConfig::for_system(SystemKind::InstGenIE);
+    engine.prepost_cpu_us = 200; // keep tests quick
+    tweak(&mut engine);
+    let lat = LatencyModel::load_or_nominal("artifacts", "sd21m");
+    let sched = scheduler::by_name(
+        "cache-aware",
+        &mcfg,
+        &lat,
+        engine.cache_mode,
+        engine.max_batch,
+    )
+    .expect("scheduler");
+    Some(
+        Cluster::launch(
+            ClusterOpts {
+                workers,
+                engine,
+                model: "sd21m".into(),
+                artifact_dir: "artifacts".into(),
+                templates: vec!["tpl-0".into()],
+                lat_model: lat,
+                warmup: false,
+            },
+            sched,
+        )
+        .expect("launch"),
+    )
+}
+
+fn edit(cluster: &Cluster, id: u64, template: &str, rng: &mut Pcg) -> instgenie::engine::request::EditRequest {
+    let hw = cluster.model.latent_hw;
+    EditRequestBuilder::new(id)
+        .template(template)
+        .prompt_seed(id)
+        .mask(MaskSpec::synth(hw, 0.12, rng))
+        .build()
+        .expect("valid request")
+}
+
+#[test]
+fn register_online_while_serving_then_edit() {
+    let Some(cluster) = launch(2, |_| {}) else { return };
+    let mut rng = Pcg::new(3);
+
+    // duplicate launch registration is deduped (satellite: no re-trace)
+    assert_eq!(
+        cluster.register_template_async("tpl-0"),
+        RegisterAdmission::AlreadyReady
+    );
+
+    // a brand-new template registers in the background while serving
+    let adm = cluster.register_template_async("tpl-online");
+    assert!(matches!(adm, RegisterAdmission::Started { .. }));
+    // submissions during registration are accepted and queue at the worker
+    let during = cluster
+        .submit_checked(edit(&cluster, 1, "tpl-online", &mut rng))
+        .expect("registering templates accept submissions");
+    // registration publishes into *every* worker tier
+    cluster
+        .await_template("tpl-online", Duration::from_secs(120))
+        .expect("registration completes");
+    let status = cluster.template_status("tpl-online").expect("known");
+    assert_eq!(status.info.state, TemplateState::Ready);
+    assert!(status.info.bytes > 0);
+    assert_eq!(status.residency.len(), 2);
+    assert!(
+        status.residency.iter().all(|r| *r == Residency::Host),
+        "registration must fan into every worker tier: {:?}",
+        status.residency
+    );
+    // the queued-during-registration edit completes without restart
+    let resp = during.wait(Duration::from_secs(120)).expect("parked edit served");
+    assert_eq!(resp.template_id, "tpl-online");
+    // and a fresh post-registration edit also serves
+    let after = cluster
+        .submit_checked(edit(&cluster, 2, "tpl-online", &mut rng))
+        .expect("ready template");
+    assert_eq!(after.wait(Duration::from_secs(120)).expect("served").id, 2);
+    cluster.shutdown().expect("shutdown");
+}
+
+#[test]
+fn submit_during_stuck_registration_times_out() {
+    // begin a registration directly on the registry WITHOUT enqueueing a
+    // trace job: the template stays `registering` forever, so the parked
+    // request must resolve via the worker's registration-wait deadline.
+    let Some(cluster) = launch(1, |e| e.registration_wait_ms = 150) else { return };
+    let mut rng = Pcg::new(4);
+    assert!(matches!(
+        cluster.template_registry().begin_register("tpl-stuck"),
+        RegisterAdmission::Started { .. }
+    ));
+    let t = cluster
+        .submit_checked(edit(&cluster, 10, "tpl-stuck", &mut rng))
+        .expect("registering templates accept submissions");
+    let t0 = Instant::now();
+    let err = t.wait(Duration::from_secs(30)).expect_err("must time out");
+    assert_eq!(err, EditError::Timeout);
+    assert!(
+        t0.elapsed() >= Duration::from_millis(100),
+        "timed out before the registration wait elapsed"
+    );
+    // the cluster still serves other templates afterwards
+    let ok = cluster
+        .submit_checked(edit(&cluster, 11, "tpl-0", &mut rng))
+        .expect("known template");
+    assert_eq!(ok.wait(Duration::from_secs(120)).expect("served").id, 11);
+    cluster.shutdown().expect("shutdown");
+}
+
+#[test]
+fn retire_drains_inflight_edits_and_frees_every_tier() {
+    let Some(cluster) = launch(2, |_| {}) else { return };
+    let mut rng = Pcg::new(5);
+    let tickets: Vec<_> = (0..6u64)
+        .map(|i| {
+            cluster
+                .submit_checked(edit(&cluster, i, "tpl-0", &mut rng))
+                .expect("known template")
+        })
+        .collect();
+
+    // retire while those edits are in flight: either an immediate purge
+    // (all already finished) or a drain
+    let outcome = cluster.retire_template("tpl-0");
+    assert!(
+        matches!(outcome, RetireOutcome::Retired | RetireOutcome::Draining { .. }),
+        "{outcome:?}"
+    );
+    // new submissions are rejected with the typed error immediately
+    let refused = cluster.submit_checked(edit(&cluster, 99, "tpl-0", &mut rng));
+    assert!(matches!(refused, Err(EditError::TemplateRetired(_))));
+
+    // in-flight edits drain: each resolves to its own response, or to the
+    // typed retirement error if it was still queued at the worker
+    for t in &tickets {
+        match t.wait(Duration::from_secs(120)) {
+            Ok(resp) => assert_eq!(resp.id, t.id()),
+            Err(EditError::TemplateRetired(_)) => {}
+            Err(e) => panic!("unexpected drain outcome: {e}"),
+        }
+    }
+    // the drain purge races the last ticket resolution by a hair
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let status = cluster.template_status("tpl-0").expect("entry retained");
+        assert_eq!(status.info.state, TemplateState::Retired);
+        if status.residency.iter().all(|r| *r == Residency::Absent) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "tiers never purged: {status:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // host-tier bytes are freed on every worker
+    for cache in cluster.cache_stats() {
+        assert_eq!(
+            cache.host_bytes, 0,
+            "worker {} still holds retired bytes",
+            cache.worker
+        );
+        assert_eq!(cache.host_templates, 0);
+    }
+
+    // re-register after delete: a fresh epoch, served again end-to-end
+    assert!(matches!(
+        cluster.register_template_async("tpl-0"),
+        RegisterAdmission::Started { .. }
+    ));
+    cluster
+        .await_template("tpl-0", Duration::from_secs(120))
+        .expect("re-registration completes");
+    let revived = cluster
+        .submit_checked(edit(&cluster, 100, "tpl-0", &mut rng))
+        .expect("re-registered template");
+    assert_eq!(
+        revived.wait(Duration::from_secs(120)).expect("served").id,
+        100
+    );
+    let status = cluster.template_status("tpl-0").expect("known");
+    assert_eq!(status.info.state, TemplateState::Ready);
+    assert!(status.info.epoch >= 2, "re-registration must bump the epoch");
+    cluster.shutdown().expect("shutdown");
+}
+
+#[test]
+fn retire_unknown_template_reports_not_found() {
+    let Some(cluster) = launch(1, |_| {}) else { return };
+    assert_eq!(cluster.retire_template("ghost"), RetireOutcome::NotFound);
+    assert!(matches!(
+        cluster.submit_checked(edit(&cluster, 1, "ghost", &mut Pcg::new(1))),
+        Err(EditError::UnknownTemplate(_))
+    ));
+    cluster.shutdown().expect("shutdown");
+}
