@@ -38,4 +38,12 @@ else
   echo "ci.sh: artifacts/ absent; skipping cluster bench smoke"
 fi
 
+# QoS bench smoke: overloaded mixed-class trace, FIFO vs QoS — per-class
+# p50/p99 + shed counts, written to BENCH_qos.json.
+if [[ -d artifacts ]]; then
+  run cargo run --release --example qos_bench -- 60 120 2
+else
+  echo "ci.sh: artifacts/ absent; skipping qos bench smoke"
+fi
+
 echo "ci.sh: all checks passed"

@@ -1,0 +1,284 @@
+//! QoS bench smoke: replay one overloaded mixed-class Poisson trace
+//! through a small cluster twice — FIFO baseline vs the QoS subsystem
+//! (priority queues + aging, step-boundary preemption, qos-aware
+//! routing) — and write `BENCH_qos.json` with per-class throughput and
+//! p50/p99 latency, plus an admission-control demonstration (bounded
+//! queue: over-capacity submissions shed with 429/`Retry-After`).
+//! `ci.sh` runs this after the cluster bench so every PR leaves a
+//! comparable QoS perf record.
+//!
+//! Run: `cargo run --release --example qos_bench -- [requests] [rps] [workers]`
+
+use std::time::Duration;
+
+use instgenie::cache::LatencyModel;
+use instgenie::cluster::{Cluster, ClusterOpts, RequestState};
+use instgenie::config::{EngineConfig, SystemKind};
+use instgenie::engine::request::EditError;
+use instgenie::metrics::{Recorder, Report};
+use instgenie::qos::{Priority, QosConfig};
+use instgenie::runtime::Manifest;
+use instgenie::scheduler;
+use instgenie::util::json::Json;
+use instgenie::workload::{replay, ClassMix, MaskDist, TraceGen};
+
+const TEMPLATES: usize = 2;
+const CLASS_MIX: &str = "0.25,0.5,0.25";
+
+struct ModeOutcome {
+    report: Report,
+    admitted: usize,
+    shed: usize,
+    batch_admitted: usize,
+}
+
+fn run_mode(
+    name: &str,
+    qos: bool,
+    model: &str,
+    lat: &LatencyModel,
+    requests: usize,
+    rps: f64,
+    workers: usize,
+) -> anyhow::Result<ModeOutcome> {
+    let mut engine = EngineConfig::for_system(SystemKind::InstGenIE);
+    engine.prepost_cpu_us = 200;
+    engine.qos = if qos {
+        QosConfig { aging_ms: 500, ..QosConfig::standard() }
+    } else {
+        QosConfig::disabled()
+    };
+    let sched_name = if qos { "qos-aware" } else { "mask-aware" };
+    let manifest = Manifest::load("artifacts")?;
+    let mcfg = manifest.model(model)?.config.clone();
+    let sched = scheduler::by_name(sched_name, &mcfg, lat, engine.cache_mode, engine.max_batch)
+        .expect("scheduler");
+    let cluster = Cluster::launch(
+        ClusterOpts {
+            workers,
+            engine,
+            model: model.to_string(),
+            artifact_dir: "artifacts".into(),
+            templates: (0..TEMPLATES).map(|i| format!("tpl-{i}")).collect(),
+            lat_model: lat.clone(),
+            warmup: true,
+        },
+        sched,
+    )?;
+    let gen = TraceGen::new(rps, MaskDist::Production, TEMPLATES, 42)
+        .with_mix(ClassMix::parse(CLASS_MIX).expect("mix"));
+    let events = gen.generate(requests);
+    let batch_total = events.iter().filter(|e| e.priority == Priority::Batch).count();
+
+    let mut rec = Recorder::new();
+    let mut tickets = Vec::new();
+    let mut shed = 0usize;
+    let mut batch_shed = 0usize;
+    let t0 = std::time::Instant::now();
+    replay(&events, |ev| {
+        match cluster.submit_guarded(cluster.event_request(ev)) {
+            Ok(t) => tickets.push(t),
+            Err(e) => {
+                shed += 1;
+                if ev.priority == Priority::Batch {
+                    batch_shed += 1;
+                }
+                rec.record_failure(&e);
+            }
+        }
+    });
+    anyhow::ensure!(
+        cluster.await_completed(tickets.len(), Duration::from_secs(600)),
+        "{name}: serving timed out"
+    );
+    let makespan = t0.elapsed().as_secs_f64();
+    for t in &tickets {
+        match t.status().map(|s| s.state) {
+            Some(RequestState::Done(resp)) => rec.record(&resp),
+            Some(RequestState::Failed(e)) => rec.record_failure(&e),
+            _ => rec.record_failure(&EditError::Internal("ticket not terminal".into())),
+        }
+    }
+    cluster.shutdown()?;
+    let report = rec.report(makespan);
+    println!("-- {name}: {}", report.line());
+    for c in &report.by_class {
+        println!(
+            "   {:>11}: n={:<3} e2e p50={:.1}ms p99={:.1}ms",
+            c.class,
+            c.completed,
+            c.e2e.p50 * 1e3,
+            c.e2e.p99 * 1e3,
+        );
+    }
+    Ok(ModeOutcome {
+        report,
+        admitted: tickets.len(),
+        shed,
+        batch_admitted: batch_total - batch_shed,
+    })
+}
+
+/// Bounded-queue demonstration: with `max_pending` tiny, a burst sheds
+/// deterministically with `Overloaded` + a positive retry estimate.
+fn overload_guard(model: &str, lat: &LatencyModel) -> anyhow::Result<Json> {
+    let mut engine = EngineConfig::for_system(SystemKind::InstGenIE);
+    engine.prepost_cpu_us = 200;
+    engine.qos = QosConfig { max_pending: 2, ..QosConfig::standard() };
+    let manifest = Manifest::load("artifacts")?;
+    let mcfg = manifest.model(model)?.config.clone();
+    let sched = scheduler::by_name("qos-aware", &mcfg, lat, engine.cache_mode, engine.max_batch)
+        .expect("scheduler");
+    let cluster = Cluster::launch(
+        ClusterOpts {
+            workers: 1,
+            engine,
+            model: model.to_string(),
+            artifact_dir: "artifacts".into(),
+            templates: vec!["tpl-0".into()],
+            lat_model: lat.clone(),
+            warmup: false,
+        },
+        sched,
+    )?;
+    let gen = TraceGen::new(1e6, MaskDist::Production, 1, 7); // burst: no gaps
+    let events = gen.generate(10);
+    let mut admitted = 0usize;
+    let mut sheds = 0usize;
+    let mut min_retry_ms = u64::MAX;
+    let mut tickets = Vec::new();
+    for ev in &events {
+        match cluster.submit_guarded(cluster.event_request(ev)) {
+            Ok(t) => {
+                admitted += 1;
+                tickets.push(t);
+            }
+            Err(EditError::Overloaded { retry_after_ms }) => {
+                sheds += 1;
+                min_retry_ms = min_retry_ms.min(retry_after_ms);
+            }
+            Err(e) => anyhow::bail!("unexpected admission error: {e}"),
+        }
+    }
+    cluster.await_completed(admitted, Duration::from_secs(600));
+    cluster.shutdown()?;
+    println!(
+        "-- overload guard: {admitted}/{} admitted, {sheds} shed with 429 (min Retry-After {} ms)",
+        events.len(),
+        if sheds > 0 { min_retry_ms } else { 0 },
+    );
+    anyhow::ensure!(sheds > 0, "a 10-deep burst over max_pending=2 must shed");
+    Ok(Json::obj(vec![
+        ("submitted", Json::num(events.len() as f64)),
+        ("admitted", Json::num(admitted as f64)),
+        ("shed", Json::num(sheds as f64)),
+        ("min_retry_after_ms", Json::num(min_retry_ms as f64)),
+    ]))
+}
+
+fn mode_json(m: &ModeOutcome) -> Json {
+    let classes = m
+        .report
+        .by_class
+        .iter()
+        .map(|c| {
+            (
+                c.class,
+                Json::obj(vec![
+                    ("completed", Json::num(c.completed as f64)),
+                    ("p50_e2e", Json::num(c.e2e.p50)),
+                    ("p99_e2e", Json::num(c.e2e.p99)),
+                    ("mean_e2e", Json::num(c.e2e.mean)),
+                ]),
+            )
+        })
+        .collect();
+    let kinds = m
+        .report
+        .failed_by_kind
+        .iter()
+        .map(|(k, n)| (k.as_str(), Json::num(*n as f64)))
+        .collect();
+    Json::obj(vec![
+        ("throughput", Json::num(m.report.throughput)),
+        ("completed", Json::num(m.report.completed as f64)),
+        ("admitted", Json::num(m.admitted as f64)),
+        ("shed", Json::num(m.shed as f64)),
+        ("failed", Json::num(m.report.failed as f64)),
+        ("failed_by_kind", Json::obj(kinds)),
+        ("makespan", Json::num(m.report.makespan)),
+        ("classes", Json::obj(classes)),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // default arrival rate is far above a 2-worker cluster's service
+    // rate, so queues reliably build and the class policies separate
+    let requests: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(60);
+    let rps: f64 = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(120.0);
+    let workers: usize = args.get(2).and_then(|a| a.parse().ok()).unwrap_or(2);
+
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("[qos_bench] no artifacts; skipping (run `make artifacts`)");
+        return Ok(());
+    };
+    let model = if manifest.models.contains_key("sd21m") {
+        "sd21m".to_string()
+    } else {
+        match manifest.models.keys().next() {
+            Some(m) => m.clone(),
+            None => {
+                eprintln!("[qos_bench] empty manifest; skipping");
+                return Ok(());
+            }
+        }
+    };
+    let lat = LatencyModel::load_or_nominal("artifacts", &model);
+
+    println!(
+        "== qos bench smoke: model={model} workers={workers} rps={rps} requests={requests} \
+         mix={CLASS_MIX} =="
+    );
+    let fifo = run_mode("fifo", false, &model, &lat, requests, rps, workers)?;
+    let qos = run_mode("qos", true, &model, &lat, requests, rps, workers)?;
+
+    let irank = Priority::Interactive.rank();
+    let fifo_p99 = fifo.report.by_class[irank].e2e.p99;
+    let qos_p99 = qos.report.by_class[irank].e2e.p99;
+    let p99_ratio = if qos_p99 > 0.0 { fifo_p99 / qos_p99 } else { f64::INFINITY };
+    let goodput_ratio = if fifo.report.throughput > 0.0 {
+        qos.report.throughput / fifo.report.throughput
+    } else {
+        f64::INFINITY
+    };
+    let batch_done = qos.report.by_class[Priority::Batch.rank()].completed;
+    let starved = qos.batch_admitted.saturating_sub(batch_done);
+    println!(
+        "== interactive p99: fifo={:.1}ms qos={:.1}ms ({p99_ratio:.2}x) | goodput ratio \
+         qos/fifo={goodput_ratio:.3} | starved batch requests={starved} ==",
+        fifo_p99 * 1e3,
+        qos_p99 * 1e3,
+    );
+
+    let guard = overload_guard(&model, &lat)?;
+
+    let out = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("workers", Json::num(workers as f64)),
+        ("requests", Json::num(requests as f64)),
+        ("rps", Json::num(rps)),
+        ("class_mix", Json::str(CLASS_MIX)),
+        (
+            "modes",
+            Json::obj(vec![("fifo", mode_json(&fifo)), ("qos", mode_json(&qos))]),
+        ),
+        ("interactive_p99_ratio", Json::num(p99_ratio)),
+        ("goodput_ratio", Json::num(goodput_ratio)),
+        ("qos_batch_starved", Json::num(starved as f64)),
+        ("overload_guard", guard),
+    ]);
+    std::fs::write("BENCH_qos.json", out.to_string())?;
+    println!("[qos_bench] wrote BENCH_qos.json");
+    Ok(())
+}

@@ -8,6 +8,7 @@ mod common;
 use instgenie::cache::LatencyModel;
 use instgenie::config::CacheMode;
 use instgenie::model::{Latent, MaskSpec, PackBuffer, Permutation};
+use instgenie::qos::Priority;
 use instgenie::runtime::Manifest;
 use instgenie::scheduler::{MaskAware, Outstanding, RouteCtx, Scheduler};
 use instgenie::util::bench::{fmt_secs, time_it, Table};
@@ -32,11 +33,17 @@ fn main() {
                     id: i,
                     masked_tokens: 1 + rng.below(cfg.tokens),
                     remaining_steps: cfg.steps,
+                    priority: Priority::Standard,
                 })
                 .collect()
         })
         .collect();
-    let req = Outstanding { id: 99, masked_tokens: 32, remaining_steps: cfg.steps };
+    let req = Outstanding {
+        id: 99,
+        masked_tokens: 32,
+        remaining_steps: cfg.steps,
+        priority: Priority::Standard,
+    };
     let ctx = RouteCtx::default();
     let s = time_it(10, common::scaled(200), || {
         std::hint::black_box(sched.pick(&req, &book, &ctx));

@@ -15,6 +15,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::engine::request::{EditError, EditResponse};
+use crate::qos::Priority;
 
 /// Where a request is in its life.
 #[derive(Debug, Clone)]
@@ -55,6 +56,10 @@ pub struct RequestStatus {
     pub state: RequestState,
     /// Seconds since submission (age for status endpoints).
     pub age_secs: f64,
+    /// Request class, as submitted (echoed by status endpoints).
+    pub priority: Priority,
+    /// Deadline as submitted (ms after arrival), if any.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Result of a cancellation attempt.
@@ -62,7 +67,13 @@ pub struct RequestStatus {
 pub enum CancelOutcome {
     /// Removed from the worker queue; the ticket resolves to `Cancelled`.
     Cancelled,
-    /// The request already joined a batch or finished.
+    /// The worker holds the request outside its queue (mid-preprocess,
+    /// parked, or preempted): a cancel mark was posted and the engine
+    /// thread resolves it to `Cancelled` at its next step boundary.
+    /// Best-effort: a request that wins the race into the running batch
+    /// completes normally (poll the status for the terminal outcome).
+    Cancelling,
+    /// The request is running un-preempted or already finished.
     TooLate,
     /// No such request id.
     NotFound,
@@ -72,6 +83,8 @@ struct Entry {
     worker: usize,
     submitted: Instant,
     state: RequestState,
+    priority: Priority,
+    deadline_ms: Option<u64>,
 }
 
 #[derive(Default)]
@@ -101,11 +114,23 @@ impl RequestRegistry {
 
     /// Create the entry for a freshly routed request and hand back its
     /// ticket. Re-registering a live id is a caller bug.
-    pub fn register(self: &Arc<Self>, id: u64, worker: usize) -> EditTicket {
+    pub fn register(
+        self: &Arc<Self>,
+        id: u64,
+        worker: usize,
+        priority: Priority,
+        deadline_ms: Option<u64>,
+    ) -> EditTicket {
         let mut g = self.inner.lock().unwrap();
         let prev = g.entries.insert(
             id,
-            Entry { worker, submitted: Instant::now(), state: RequestState::Queued },
+            Entry {
+                worker,
+                submitted: Instant::now(),
+                state: RequestState::Queued,
+                priority,
+                deadline_ms,
+            },
         );
         if let Some(prev) = prev {
             if !prev.state.is_terminal() {
@@ -194,6 +219,8 @@ impl RequestRegistry {
             worker: e.worker,
             state: e.state.clone(),
             age_secs: e.submitted.elapsed().as_secs_f64(),
+            priority: e.priority,
+            deadline_ms: e.deadline_ms,
         })
     }
 
@@ -293,13 +320,14 @@ mod tests {
             latent: Tensor::zeros(&[2, 2]),
             timing: RequestTiming::default(),
             mask_ratio: 0.1,
+            priority: Priority::Standard,
         }
     }
 
     #[test]
     fn ticket_resolves_after_fulfill() {
         let reg = RequestRegistry::new();
-        let t = reg.register(1, 0);
+        let t = reg.register(1, 0, Priority::Standard, None);
         assert_eq!(t.status().unwrap().state.label(), "queued");
         reg.mark_running(1);
         assert_eq!(t.status().unwrap().state.label(), "running");
@@ -315,7 +343,7 @@ mod tests {
     #[test]
     fn ticket_wait_times_out() {
         let reg = RequestRegistry::new();
-        let t = reg.register(2, 0);
+        let t = reg.register(2, 0, Priority::Standard, None);
         let t0 = Instant::now();
         assert!(matches!(t.wait(Duration::from_millis(20)), Err(EditError::Timeout)));
         assert!(t0.elapsed() >= Duration::from_millis(20));
@@ -324,7 +352,7 @@ mod tests {
     #[test]
     fn ticket_unblocks_from_another_thread() {
         let reg = RequestRegistry::new();
-        let t = reg.register(3, 1);
+        let t = reg.register(3, 1, Priority::Standard, None);
         let reg2 = Arc::clone(&reg);
         let h = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(10));
@@ -339,7 +367,7 @@ mod tests {
     #[test]
     fn cancelled_state_labels() {
         let reg = RequestRegistry::new();
-        let t = reg.register(4, 0);
+        let t = reg.register(4, 0, Priority::Standard, None);
         assert_eq!(reg.worker_if_queued(4), Some(0));
         assert!(reg.fulfill(4, Err(EditError::Cancelled)));
         assert_eq!(reg.worker_if_queued(4), None);
@@ -350,8 +378,8 @@ mod tests {
     #[test]
     fn fail_all_pending_skips_terminal() {
         let reg = RequestRegistry::new();
-        let a = reg.register(5, 0);
-        let b = reg.register(6, 0);
+        let a = reg.register(5, 0, Priority::Standard, None);
+        let b = reg.register(6, 0, Priority::Standard, None);
         reg.fulfill(5, Ok(Arc::new(resp(5))));
         reg.fail_all_pending(EditError::WorkerShutdown);
         assert!(a.wait(Duration::from_millis(5)).is_ok());
@@ -362,7 +390,7 @@ mod tests {
     #[test]
     fn evict_terminal_frees_entries_but_never_live_ones() {
         let reg = RequestRegistry::new();
-        let t = reg.register(10, 0);
+        let t = reg.register(10, 0, Priority::Standard, None);
         assert!(!reg.evict_terminal(10), "queued entries must survive");
         reg.fulfill(10, Ok(Arc::new(resp(10))));
         assert!(reg.evict_terminal(10));
@@ -378,10 +406,23 @@ mod tests {
     }
 
     #[test]
+    fn status_echoes_qos_fields() {
+        let reg = RequestRegistry::new();
+        let t = reg.register(11, 2, Priority::Batch, Some(500));
+        let st = t.status().unwrap();
+        assert_eq!(st.priority, Priority::Batch);
+        assert_eq!(st.deadline_ms, Some(500));
+        let t = reg.register(12, 0, Priority::Interactive, None);
+        let st = t.status().unwrap();
+        assert_eq!(st.priority, Priority::Interactive);
+        assert_eq!(st.deadline_ms, None);
+    }
+
+    #[test]
     fn await_finished_counts_terminals() {
         let reg = RequestRegistry::new();
-        let _a = reg.register(7, 0);
-        let _b = reg.register(8, 0);
+        let _a = reg.register(7, 0, Priority::Standard, None);
+        let _b = reg.register(8, 0, Priority::Standard, None);
         assert!(!reg.await_finished(1, Duration::from_millis(10)));
         reg.fulfill(7, Err(EditError::Cancelled));
         let reg2 = Arc::clone(&reg);

@@ -23,6 +23,16 @@
 //! policies charge a cache-load penalty to workers whose host tier is
 //! cold for the request's template (Algorithm 2's "computation + cache
 //! loading" cost).
+//!
+//! QoS (`engine.qos`): requests carry a priority class and an optional
+//! deadline; [`Cluster::submit_guarded`] runs the
+//! [`AdmissionController`]'s feasibility gate before routing, shedding
+//! over-capacity work with `Overloaded` (HTTP 429 + `Retry-After`) and
+//! impossible deadlines with `DeadlineInfeasible` (422). Worker queues
+//! pop in aged priority order, full batches preempt their lowest-class
+//! member at a step boundary when an `Interactive` request waits, and
+//! [`Cluster::cancel`] reaches parked/preempted requests via cancel marks
+//! ([`CancelOutcome::Cancelling`]).
 
 pub mod lifecycle;
 
@@ -40,6 +50,7 @@ use crate::config::{CacheMode, EngineConfig, ModelConfig};
 use crate::engine::queue::{Submitter, WorkerQueue};
 use crate::engine::request::{EditError, EditRequest, EditResponse, WorkerEvent};
 use crate::engine::worker::Worker;
+use crate::qos::{Admission, AdmissionController, ClassDepth, CLASS_COUNT};
 use crate::runtime::ModelRuntime;
 use crate::scheduler::{Outstanding, RouteCtx, Scheduler};
 use crate::templates::{
@@ -58,6 +69,8 @@ pub struct WorkerDepth {
     pub queued: usize,
     /// Requests dispatched to the worker and not yet completed.
     pub outstanding: usize,
+    /// Per-class queued depth + oldest-wait age (QoS observability).
+    pub classes: [ClassDepth; CLASS_COUNT],
 }
 
 /// Per-worker cache-tier snapshot for stats endpoints: the §4.2 hierarchy
@@ -90,6 +103,12 @@ pub struct Cluster {
     collector: Option<std::thread::JoinHandle<()>>,
     book: Arc<Mutex<Vec<Vec<Outstanding>>>>,
     scheduler: Mutex<Box<dyn Scheduler>>,
+    /// QoS admission control (None when `engine.qos` is disabled).
+    admission: Option<AdmissionController>,
+    /// Serializes guarded submissions: the admission check and the book
+    /// push are not one atomic step, so without this two concurrent
+    /// frontends could both pass a nearly-full `max_pending` cap.
+    admission_gate: Mutex<()>,
     registry: Arc<RequestRegistry>,
     templates: Arc<TemplateRegistry>,
     /// Runtime for template registration traces (launch + online jobs).
@@ -246,6 +265,7 @@ impl Cluster {
             let registry = Arc::clone(&registry);
             let templates = Arc::clone(&templates);
             let tiers = tiers.clone();
+            let queues = queues.clone();
             let responses = Arc::clone(&responses);
             let retain = Arc::clone(&retain_responses);
             std::thread::Builder::new()
@@ -264,6 +284,11 @@ impl Cluster {
                                     }
                                 }
                                 drop(b);
+                                // drop any cancel mark / held flag that
+                                // raced this completion
+                                if let Some(q) = queues.get(worker) {
+                                    q.clear_cancel(id);
+                                }
                                 // the edit no longer pins its template; a
                                 // drained retirement purges every tier
                                 if let Some(tpl) = templates.release_request(id) {
@@ -287,6 +312,18 @@ impl Cluster {
                 .expect("spawn collector")
         };
 
+        let model = model_cfg.expect("at least one worker");
+        // QoS admission control: the same cost model the mask-aware
+        // scheduler uses, turned into an up-front feasibility gate
+        let admission = opts.engine.qos.enabled.then(|| {
+            AdmissionController::new(
+                model.clone(),
+                opts.lat_model.clone(),
+                opts.engine.cache_mode,
+                opts.engine.max_batch,
+                opts.engine.qos.clone(),
+            )
+        });
         Ok(Cluster {
             submitters,
             queues,
@@ -296,6 +333,8 @@ impl Cluster {
             collector: Some(collector),
             book,
             scheduler: Mutex::new(scheduler),
+            admission,
+            admission_gate: Mutex::new(()),
             registry,
             templates,
             reg_rt,
@@ -303,7 +342,7 @@ impl Cluster {
             cache_mode: opts.engine.cache_mode,
             responses,
             retain_responses,
-            model: model_cfg.expect("at least one worker"),
+            model,
             started: Instant::now(),
         })
     }
@@ -418,34 +457,95 @@ impl Cluster {
             .collect()
     }
 
-    /// Route + submit one request; returns its completion handle.
-    pub fn submit(&self, req: EditRequest) -> EditTicket {
-        let outstanding = Outstanding {
-            id: req.id,
-            masked_tokens: req.mask.masked_count(),
-            remaining_steps: self.model.steps,
-        };
-        // pin the template for the request's lifetime (retirement drains
-        // on these references)
-        self.templates.acquire(req.id, &req.template_id);
-        let ctx = RouteCtx {
+    /// Routing context for one template: per-worker residency + bytes.
+    fn route_ctx(&self, template_id: &str) -> RouteCtx {
+        RouteCtx {
             residency: self
                 .tiers
                 .iter()
-                .map(|t| t.residency(&req.template_id))
+                .map(|t| t.residency(template_id))
                 .collect(),
-            template_bytes: self.templates.bytes(&req.template_id).unwrap_or(0),
-        };
+            template_bytes: self.templates.bytes(template_id).unwrap_or(0),
+        }
+    }
+
+    fn outstanding_for(&self, req: &EditRequest) -> Outstanding {
+        Outstanding {
+            id: req.id,
+            masked_tokens: req.mask.masked_count(),
+            remaining_steps: self.model.steps,
+            priority: req.priority,
+        }
+    }
+
+    /// Route + submit one request; returns its completion handle.
+    pub fn submit(&self, req: EditRequest) -> EditTicket {
+        let outstanding = self.outstanding_for(&req);
+        let ctx = self.route_ctx(&req.template_id);
+        self.submit_routed(req, outstanding, ctx)
+    }
+
+    /// The routing + bookkeeping tail of a submission (outstanding entry
+    /// and routing context already built by the caller).
+    fn submit_routed(
+        &self,
+        req: EditRequest,
+        outstanding: Outstanding,
+        ctx: RouteCtx,
+    ) -> EditTicket {
+        // pin the template for the request's lifetime (retirement drains
+        // on these references)
+        self.templates.acquire(req.id, &req.template_id);
         let w = {
             let book = self.book.lock().unwrap();
             let mut sched = self.scheduler.lock().unwrap();
             let w = sched.pick(&outstanding, &book, &ctx);
             w.min(self.submitters.len() - 1)
         };
-        let ticket = self.registry.register(req.id, w);
+        let ticket = self
+            .registry
+            .register(req.id, w, req.priority, req.deadline_ms());
         self.book.lock().unwrap()[w].push(outstanding);
         self.submitters[w].submit(req);
         ticket
+    }
+
+    /// Admission core: estimate against the live book + routing context.
+    fn assess_admission(
+        &self,
+        req: &EditRequest,
+        outstanding: &Outstanding,
+        ctx: &RouteCtx,
+    ) -> Result<(), EditError> {
+        let Some(ctl) = &self.admission else {
+            return Ok(());
+        };
+        let remaining = req
+            .deadline
+            .map(|d| d.saturating_duration_since(Instant::now()));
+        let book = self.book.lock().unwrap();
+        match ctl.assess(outstanding, remaining, &book, ctx) {
+            Admission::Admit => Ok(()),
+            Admission::Overloaded { retry_after, .. } => Err(EditError::Overloaded {
+                retry_after_ms: (retry_after * 1e3).ceil() as u64,
+            }),
+            Admission::DeadlineInfeasible { estimate, deadline } => {
+                Err(EditError::DeadlineInfeasible(format!(
+                    "estimated completion {estimate:.3}s exceeds deadline {deadline:.3}s"
+                )))
+            }
+        }
+    }
+
+    /// QoS admission check (no-op when QoS is disabled): estimates the
+    /// request's completion latency on its best worker and rejects
+    /// over-capacity ([`EditError::Overloaded`], HTTP 429 + `Retry-After`)
+    /// or deadline-infeasible ([`EditError::DeadlineInfeasible`], 422)
+    /// submissions before they reach a queue.
+    pub fn check_admission(&self, req: &EditRequest) -> Result<(), EditError> {
+        let outstanding = self.outstanding_for(req);
+        let ctx = self.route_ctx(&req.template_id);
+        self.assess_admission(req, &outstanding, &ctx)
     }
 
     /// Like [`Cluster::submit`], but with the frontend's typed template
@@ -457,42 +557,96 @@ impl Cluster {
         Ok(self.submit(req))
     }
 
-    /// Convenience: realize and submit a trace event.
-    pub fn submit_event(&self, ev: &TraceEvent) -> EditTicket {
-        let mask = ev.mask(self.model.latent_hw);
-        let mut req = EditRequest::new(ev.id, ev.template.clone(), mask, ev.prompt_seed);
-        req.arrival = Instant::now();
-        self.submit(req)
+    /// The full guarded path the HTTP frontend uses: template check, then
+    /// QoS admission, then route + submit. Guarded submissions are
+    /// serialized so `max_pending` holds under concurrent frontends; the
+    /// outstanding entry and routing context are built once and shared by
+    /// the admission check and the routing step.
+    pub fn submit_guarded(&self, req: EditRequest) -> Result<EditTicket, EditError> {
+        self.check_template(&req.template_id)?;
+        let outstanding = self.outstanding_for(&req);
+        let ctx = self.route_ctx(&req.template_id);
+        let _gate = self.admission_gate.lock().unwrap();
+        self.assess_admission(&req, &outstanding, &ctx)?;
+        Ok(self.submit_routed(req, outstanding, ctx))
     }
 
-    /// Cancel a request that is still waiting in its worker queue. The
-    /// removal races fairly with admission: whoever takes the queue lock
-    /// first wins, so a cancelled request never also completes.
+    /// Realize a trace event into a request (class + deadline included).
+    pub fn event_request(&self, ev: &TraceEvent) -> EditRequest {
+        let mask = ev.mask(self.model.latent_hw);
+        let mut req = EditRequest::new(ev.id, ev.template.clone(), mask, ev.prompt_seed);
+        req.priority = ev.priority;
+        req.deadline = ev
+            .deadline_ms
+            .map(|ms| req.arrival + Duration::from_millis(ms));
+        req
+    }
+
+    /// Convenience: realize and submit a trace event.
+    pub fn submit_event(&self, ev: &TraceEvent) -> EditTicket {
+        self.submit(self.event_request(ev))
+    }
+
+    /// Cancel a request that has not finished. Still-queued requests are
+    /// removed synchronously (the removal races fairly with admission:
+    /// whoever takes the queue lock first wins, so a cancelled request
+    /// never also completes). Requests the worker holds outside its
+    /// lanes — mid-preprocess, parked on a registering template, or
+    /// preempted — get a cancel mark instead ([`CancelOutcome::
+    /// Cancelling`]): the engine thread resolves them to `Cancelled` at
+    /// its next step boundary, releasing their slot promptly.
     pub fn cancel(&self, id: u64) -> CancelOutcome {
-        let Some(w) = self.registry.worker_if_queued(id) else {
-            return if self.registry.status(id).is_some() {
-                CancelOutcome::TooLate
-            } else {
-                CancelOutcome::NotFound
-            };
+        let Some(st) = self.registry.status(id) else {
+            return CancelOutcome::NotFound;
         };
-        if !self.queues[w].remove(id) {
-            // popped for admission (or mid-preprocess) before we got there
-            return CancelOutcome::TooLate;
+        let w = st.worker.min(self.queues.len() - 1);
+        match st.state {
+            RequestState::Done(_) | RequestState::Failed(_) => CancelOutcome::TooLate,
+            RequestState::Queued => {
+                if !self.queues[w].remove(id) {
+                    // popped before we got there: mid-preprocess or parked
+                    // at the worker — mark it for the engine thread
+                    self.queues[w].request_cancel(id);
+                    // if it reached a terminal state in the meantime, the
+                    // collector's mark-cleanup may already have run: reap
+                    // our own mark so the cancels set cannot leak, and
+                    // report the honest outcome
+                    if let Some(st) = self.registry.status(id) {
+                        if st.state.is_terminal() {
+                            self.queues[w].clear_cancel(id);
+                            return CancelOutcome::TooLate;
+                        }
+                    }
+                    return CancelOutcome::Cancelling;
+                }
+                // retire the scheduler's outstanding entry ourselves — the
+                // worker will never emit a Finished event for this id (so
+                // also reap any mark a previous cancel attempt posted)
+                self.queues[w].clear_cancel(id);
+                let mut b = self.book.lock().unwrap();
+                if let Some(pos) = b[w].iter().position(|o| o.id == id) {
+                    b[w].swap_remove(pos);
+                }
+                drop(b);
+                // release the template reference the submission pinned
+                if let Some(tpl) = self.templates.release_request(id) {
+                    purge_tiers(&self.tiers, &tpl);
+                }
+                self.registry.fulfill(id, Err(EditError::Cancelled));
+                CancelOutcome::Cancelled
+            }
+            RequestState::Running => {
+                // preempted out of the batch: cancellable via mark. The
+                // held-check + mark are one atomic queue op, so a member
+                // resuming concurrently either sees the mark (and
+                // cancels) or was never marked (and we report TooLate).
+                if self.queues[w].cancel_if_held(id) {
+                    CancelOutcome::Cancelling
+                } else {
+                    CancelOutcome::TooLate
+                }
+            }
         }
-        // retire the scheduler's outstanding entry ourselves — the worker
-        // will never emit a Finished event for this id
-        let mut b = self.book.lock().unwrap();
-        if let Some(pos) = b[w].iter().position(|o| o.id == id) {
-            b[w].swap_remove(pos);
-        }
-        drop(b);
-        // release the template reference the submission pinned
-        if let Some(tpl) = self.templates.release_request(id) {
-            purge_tiers(&self.tiers, &tpl);
-        }
-        self.registry.fulfill(id, Err(EditError::Cancelled));
-        CancelOutcome::Cancelled
     }
 
     /// Lifecycle snapshot of one request (None for unknown ids).
@@ -515,9 +669,11 @@ impl Cluster {
         self.retain_responses.store(retain, Ordering::Relaxed);
     }
 
-    /// Per-worker queue depth + dispatched-but-unfinished counts.
+    /// Per-worker queue depth + dispatched-but-unfinished counts, broken
+    /// out per class.
     pub fn queue_depths(&self) -> Vec<WorkerDepth> {
         let book = self.book.lock().unwrap();
+        let now = Instant::now();
         self.queues
             .iter()
             .enumerate()
@@ -525,6 +681,7 @@ impl Cluster {
                 worker: w,
                 queued: q.pending(),
                 outstanding: book.get(w).map(|l| l.len()).unwrap_or(0),
+                classes: q.class_depths(now),
             })
             .collect()
     }

@@ -3,6 +3,8 @@
 
 use std::path::PathBuf;
 
+use crate::qos::QosConfig;
+
 /// Static description of a mini diffusion model (loaded from the manifest;
 /// the python side is the single source of truth).
 #[derive(Debug, Clone, PartialEq)]
@@ -126,6 +128,9 @@ pub struct EngineConfig {
     /// Extra CPU work per pre/post op, microseconds (models the paper's
     /// serialization/deserialization cost; §6.4 measures its interference).
     pub prepost_cpu_us: u64,
+    /// Quality-of-service: priority-ordered queues with aging,
+    /// step-boundary preemption, deadline expiry, and admission control.
+    pub qos: QosConfig,
 }
 
 impl EngineConfig {
@@ -149,6 +154,7 @@ impl EngineConfig {
             prepost_threads: 2,
             registration_wait_ms: 30_000,
             prepost_cpu_us: 2_000,
+            qos: QosConfig::standard(),
         }
     }
 

@@ -4,14 +4,40 @@
 //! (static / strawman-continuous policies), `ready` requests were
 //! preprocessed on the disaggregated pool (InstGenIE policy). The paper's
 //! disaggregation (§4.3) is exactly the difference between these lanes.
+//!
+//! With QoS enabled ([`QueuePolicy::qos`]) both lanes pop in priority
+//! order: strict class priority softened by an aging credit
+//! ([`crate::qos::effective_rank`]) so a `Batch` request that has waited
+//! long enough outranks fresh `Interactive` arrivals — strict priority
+//! with starvation-freedom. Within a class (and with QoS off) order stays
+//! FIFO. The queue also carries the cancel marks and the held-set
+//! (parked / preempted ids) that let `DELETE /v1/edits/{id}` reach
+//! requests the engine thread holds outside its lanes.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::engine::prepost::{preprocess, PreparedRequest};
-use crate::engine::request::EditRequest;
+use crate::engine::request::{EditError, EditRequest};
+use crate::qos::{effective_rank, ClassDepth, QosConfig, CLASS_COUNT};
 use crate::util::pool::ThreadPool;
+
+/// Queue ordering policy (derived from the engine's [`QosConfig`]).
+/// The default (`qos: false`) is pure FIFO lanes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QueuePolicy {
+    /// Priority-ordered pops + deadline expiry; off = pure FIFO lanes.
+    pub qos: bool,
+    /// Aging credit quantum, ms (see [`effective_rank`]).
+    pub aging_ms: u64,
+}
+
+impl QueuePolicy {
+    pub fn from_qos(cfg: &QosConfig) -> QueuePolicy {
+        QueuePolicy { qos: cfg.enabled, aging_ms: cfg.aging_ms }
+    }
+}
 
 #[derive(Default)]
 struct Inner {
@@ -19,17 +45,58 @@ struct Inner {
     ready: VecDeque<PreparedRequest>,
     preprocessing: usize,
     closed: bool,
+    /// Cancellation marks for requests the engine thread holds outside
+    /// the lanes (mid-preprocess, parked, preempted); consumed by the
+    /// worker at the next step boundary.
+    cancels: HashSet<u64>,
+    /// Ids the engine thread holds parked or preempted — cancellable via
+    /// a mark even though they are in no lane.
+    held: HashSet<u64>,
+}
+
+/// Index of the highest-priority entry (aging-adjusted class rank, then
+/// arrival). With QoS off this is the front — plain FIFO.
+fn best_index<T>(
+    items: &VecDeque<T>,
+    policy: QueuePolicy,
+    now: Instant,
+    key: impl Fn(&T) -> (usize, Instant),
+) -> Option<usize> {
+    if items.is_empty() {
+        return None;
+    }
+    if !policy.qos {
+        return Some(0);
+    }
+    let mut best = 0usize;
+    let mut best_key: Option<(i64, Instant)> = None;
+    for (i, item) in items.iter().enumerate() {
+        let (rank, arrival) = key(item);
+        let waited = now.saturating_duration_since(arrival);
+        let k = (effective_rank(rank, waited, policy.aging_ms), arrival);
+        if best_key.map(|b| k < b).unwrap_or(true) {
+            best_key = Some(k);
+            best = i;
+        }
+    }
+    Some(best)
 }
 
 /// Shared queue between submitters and the engine thread.
 pub struct WorkerQueue {
     inner: Mutex<Inner>,
     cv: Condvar,
+    policy: QueuePolicy,
 }
 
 impl WorkerQueue {
+    /// FIFO queue (baselines, tests).
     pub fn new() -> Arc<WorkerQueue> {
-        Arc::new(WorkerQueue { inner: Mutex::new(Inner::default()), cv: Condvar::new() })
+        WorkerQueue::with_policy(QueuePolicy::default())
+    }
+
+    pub fn with_policy(policy: QueuePolicy) -> Arc<WorkerQueue> {
+        Arc::new(WorkerQueue { inner: Mutex::new(Inner::default()), cv: Condvar::new(), policy })
     }
 
     pub fn push_raw(&self, req: EditRequest) {
@@ -50,32 +117,49 @@ impl WorkerQueue {
     }
 
     pub fn pop_raw(&self) -> Option<EditRequest> {
-        self.inner.lock().unwrap().raw.pop_front()
+        let mut g = self.inner.lock().unwrap();
+        let now = Instant::now();
+        let idx = best_index(&g.raw, self.policy, now, |r| (r.priority.rank(), r.arrival))?;
+        g.raw.remove(idx)
     }
 
     pub fn pop_ready(&self) -> Option<PreparedRequest> {
-        self.inner.lock().unwrap().ready.pop_front()
+        let mut g = self.inner.lock().unwrap();
+        let now = Instant::now();
+        let idx = best_index(&g.ready, self.policy, now, |p| {
+            (p.request.priority.rank(), p.request.arrival)
+        })?;
+        g.ready.remove(idx)
     }
 
-    /// Pop the front raw request only if it satisfies `pred` (bucket-aware
-    /// admission: FIFO, no reordering, hence no starvation).
+    /// Pop the best-ordered raw request only if it satisfies `pred`
+    /// (bucket-aware admission). The predicate is tested on the single
+    /// best candidate only — deferral never reorders past it, so the
+    /// FIFO front-check's no-starvation property carries over to the
+    /// priority ordering.
     pub fn pop_raw_if(&self, pred: impl Fn(&EditRequest) -> bool) -> Option<EditRequest> {
         let mut g = self.inner.lock().unwrap();
-        if g.raw.front().map(&pred).unwrap_or(false) {
-            g.raw.pop_front()
+        let now = Instant::now();
+        let idx = best_index(&g.raw, self.policy, now, |r| (r.priority.rank(), r.arrival))?;
+        if pred(&g.raw[idx]) {
+            g.raw.remove(idx)
         } else {
             None
         }
     }
 
-    /// Pop the front prepared request only if it satisfies `pred`.
+    /// Pop the best-ordered prepared request only if it satisfies `pred`.
     pub fn pop_ready_if(
         &self,
         pred: impl Fn(&PreparedRequest) -> bool,
     ) -> Option<PreparedRequest> {
         let mut g = self.inner.lock().unwrap();
-        if g.ready.front().map(&pred).unwrap_or(false) {
-            g.ready.pop_front()
+        let now = Instant::now();
+        let idx = best_index(&g.ready, self.policy, now, |p| {
+            (p.request.priority.rank(), p.request.arrival)
+        })?;
+        if pred(&g.ready[idx]) {
+            g.ready.remove(idx)
         } else {
             None
         }
@@ -83,7 +167,9 @@ impl WorkerQueue {
 
     /// Remove a queued request by id from either lane (cancellation).
     /// Returns `true` iff the request was still queued here; a request
-    /// mid-preprocess or already admitted to the batch is not removable.
+    /// mid-preprocess, parked, preempted, or already admitted to the
+    /// batch is not removable — use [`WorkerQueue::request_cancel`] for
+    /// the held cases.
     pub fn remove(&self, id: u64) -> bool {
         let mut g = self.inner.lock().unwrap();
         if let Some(pos) = g.raw.iter().position(|r| r.id == id) {
@@ -95,6 +181,143 @@ impl WorkerQueue {
             return true;
         }
         false
+    }
+
+    /// Mark a request for cancellation: the engine thread resolves it at
+    /// its next step boundary (covers mid-preprocess, parked, and
+    /// preempted requests that [`WorkerQueue::remove`] cannot reach).
+    pub fn request_cancel(&self, id: u64) {
+        self.inner.lock().unwrap().cancels.insert(id);
+        self.cv.notify_all();
+    }
+
+    /// Consume a cancel mark (engine thread, at admission / park / resume
+    /// boundaries). Returns whether the id was marked.
+    pub fn take_cancel(&self, id: u64) -> bool {
+        self.inner.lock().unwrap().cancels.remove(&id)
+    }
+
+    /// Drop a stale cancel mark (request already resolved another way).
+    pub fn clear_cancel(&self, id: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.cancels.remove(&id);
+        g.held.remove(&id);
+    }
+
+    /// Whether the engine thread holds this id parked or preempted.
+    pub fn is_held(&self, id: u64) -> bool {
+        self.inner.lock().unwrap().held.contains(&id)
+    }
+
+    pub fn set_held(&self, id: u64, held: bool) {
+        let mut g = self.inner.lock().unwrap();
+        if held {
+            g.held.insert(id);
+        } else {
+            g.held.remove(&id);
+        }
+    }
+
+    /// Atomically post a cancel mark iff the id is currently held
+    /// (parked / preempted). Pairs with [`WorkerQueue::release_held`] so
+    /// a cancel can never slip between "observed held" and "mark posted"
+    /// while the engine thread resumes the member.
+    pub fn cancel_if_held(&self, id: u64) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.held.contains(&id) {
+            g.cancels.insert(id);
+            self.cv.notify_all();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Atomically release a held id for resume/admission. Returns `false`
+    /// when a cancel mark was pending — the mark is consumed and the
+    /// caller must resolve the request as `Cancelled` instead.
+    pub fn release_held(&self, id: u64) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        g.held.remove(&id);
+        !g.cancels.remove(&id)
+    }
+
+    /// Sweep both lanes for defunct entries: cancel-marked requests
+    /// (always) and, with QoS enabled, requests whose deadline expired
+    /// while queued. Returns `(id, why)` per dropped entry so the engine
+    /// thread can report them without spending denoise steps.
+    pub fn drain_defunct(&self, now: Instant) -> Vec<(u64, EditError)> {
+        let mut g = self.inner.lock().unwrap();
+        let qos = self.policy.qos;
+        let Inner { raw, ready, cancels, .. } = &mut *g;
+        let mut out = Vec::new();
+        raw.retain(|r| {
+            if cancels.remove(&r.id) {
+                out.push((r.id, EditError::Cancelled));
+                return false;
+            }
+            if qos && matches!(r.deadline, Some(d) if now >= d) {
+                out.push((r.id, EditError::DeadlineExceeded));
+                return false;
+            }
+            true
+        });
+        ready.retain(|p| {
+            let r = &p.request;
+            if cancels.remove(&r.id) {
+                out.push((r.id, EditError::Cancelled));
+                return false;
+            }
+            if qos && matches!(r.deadline, Some(d) if now >= d) {
+                out.push((r.id, EditError::DeadlineExceeded));
+                return false;
+            }
+            true
+        });
+        out
+    }
+
+    /// Static class rank + masked-token count of the entry the next
+    /// `pop_raw`/`pop_raw_if` would take (the preemption check: evict
+    /// only when the next admission really is an `Interactive`, not e.g.
+    /// an aged-up `Batch` request that would steal the freed slot).
+    pub fn peek_best_raw(&self) -> Option<(usize, usize)> {
+        let g = self.inner.lock().unwrap();
+        let idx = best_index(&g.raw, self.policy, Instant::now(), |r| {
+            (r.priority.rank(), r.arrival)
+        })?;
+        let r = &g.raw[idx];
+        Some((r.priority.rank(), r.mask.masked_count()))
+    }
+
+    /// [`WorkerQueue::peek_best_raw`] for the prepared lane.
+    pub fn peek_best_ready(&self) -> Option<(usize, usize)> {
+        let g = self.inner.lock().unwrap();
+        let idx = best_index(&g.ready, self.policy, Instant::now(), |p| {
+            (p.request.priority.rank(), p.request.arrival)
+        })?;
+        let p = &g.ready[idx];
+        Some((p.request.priority.rank(), p.masked_count))
+    }
+
+    /// Per-class depth + oldest-wait snapshot over both lanes.
+    pub fn class_depths(&self, now: Instant) -> [ClassDepth; CLASS_COUNT] {
+        let g = self.inner.lock().unwrap();
+        let mut out = [ClassDepth::default(); CLASS_COUNT];
+        let mut note = |rank: usize, arrival: Instant| {
+            out[rank].queued += 1;
+            let wait = now.saturating_duration_since(arrival).as_secs_f64();
+            if wait > out[rank].oldest_wait_secs {
+                out[rank].oldest_wait_secs = wait;
+            }
+        };
+        for r in &g.raw {
+            note(r.priority.rank(), r.arrival);
+        }
+        for p in &g.ready {
+            note(p.request.priority.rank(), p.request.arrival);
+        }
+        out
     }
 
     /// Pending work (either lane + in-flight preprocessing).
@@ -177,9 +400,21 @@ impl Submitter {
 mod tests {
     use super::*;
     use crate::model::MaskSpec;
+    use crate::qos::Priority;
+    use crate::util::prop::prop_check;
 
     fn req(id: u64) -> EditRequest {
         EditRequest::new(id, "t", MaskSpec::new(vec![0, 1], 16), id)
+    }
+
+    fn req_class(id: u64, priority: Priority) -> EditRequest {
+        let mut r = req(id);
+        r.priority = priority;
+        r
+    }
+
+    fn qos_queue(aging_ms: u64) -> Arc<WorkerQueue> {
+        WorkerQueue::with_policy(QueuePolicy { qos: true, aging_ms })
     }
 
     #[test]
@@ -191,6 +426,153 @@ mod tests {
         assert_eq!(q.pop_raw().unwrap().id, 1);
         assert_eq!(q.pop_raw().unwrap().id, 2);
         assert!(q.pop_raw().is_none());
+    }
+
+    #[test]
+    fn qos_pop_orders_by_class_then_arrival() {
+        let q = qos_queue(60_000); // aging too slow to matter here
+        q.push_raw(req_class(1, Priority::Batch));
+        q.push_raw(req_class(2, Priority::Standard));
+        q.push_raw(req_class(3, Priority::Interactive));
+        q.push_raw(req_class(4, Priority::Interactive));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_raw().map(|r| r.id)).collect();
+        assert_eq!(order, vec![3, 4, 2, 1], "class order, FIFO within class");
+    }
+
+    #[test]
+    fn qos_pop_if_tests_only_the_best_candidate() {
+        let q = qos_queue(60_000);
+        q.push_raw(req_class(1, Priority::Interactive));
+        q.push_raw(req_class(2, Priority::Batch));
+        // predicate rejects the interactive front -> nothing pops (no
+        // skipping past the best candidate; prevents reorder-starvation)
+        assert!(q.pop_raw_if(|r| r.id != 1).is_none());
+        assert!(q.pop_raw_if(|r| r.id == 1).is_some());
+        assert_eq!(q.pop_raw_if(|_| true).unwrap().id, 2);
+    }
+
+    #[test]
+    fn aging_credit_prevents_batch_starvation() {
+        // property: under sustained interactive pressure (a fresh
+        // interactive request pushed before every pop), an already-queued
+        // batch request still pops within a bounded number of rounds.
+        prop_check("aging credit is starvation-free", 4, |rng| {
+            let aging_ms = 2 + rng.below(4) as u64; // 2..=5 ms
+            let q = qos_queue(aging_ms);
+            q.push_raw(req_class(9_999, Priority::Batch));
+            let deadline = Instant::now() + Duration::from_secs(5);
+            let mut fresh = 0u64;
+            loop {
+                if Instant::now() >= deadline {
+                    return Err(format!(
+                        "batch request starved (aging_ms={aging_ms}, {fresh} interactive pops)"
+                    ));
+                }
+                // sustained pressure: 1-2 fresh interactive arrivals per round
+                for _ in 0..1 + rng.below(2) {
+                    fresh += 1;
+                    q.push_raw(req_class(fresh, Priority::Interactive));
+                }
+                if q.pop_raw().expect("non-empty").id == 9_999 {
+                    return Ok(());
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+    }
+
+    #[test]
+    fn peek_best_reports_the_next_pop() {
+        let q = qos_queue(5);
+        q.push_raw(req_class(1, Priority::Batch));
+        // a fresh interactive outranks the young batch request
+        q.push_raw(req_class(2, Priority::Interactive));
+        assert_eq!(q.peek_best_raw().map(|(rank, _)| rank), Some(0));
+        assert_eq!(q.pop_raw().unwrap().id, 2);
+        // once the batch request has aged to rank 0, it is the next pop
+        // even with a fresh interactive behind it — and peek reports its
+        // *static* class, so preemption will not fire for it
+        std::thread::sleep(Duration::from_millis(12));
+        q.push_raw(req_class(3, Priority::Interactive));
+        assert_eq!(
+            q.peek_best_raw().map(|(rank, _)| rank),
+            Some(Priority::Batch.rank())
+        );
+        assert_eq!(q.pop_raw().unwrap().id, 1);
+        assert!(q.peek_best_ready().is_none());
+    }
+
+    #[test]
+    fn drain_defunct_expires_deadlines_only_under_qos() {
+        let q = qos_queue(1_000);
+        let mut r = req(1);
+        r.deadline = Some(Instant::now() - Duration::from_millis(1));
+        q.push_raw(r);
+        q.push_raw(req(2)); // no deadline: survives
+        let dropped = q.drain_defunct(Instant::now());
+        assert_eq!(dropped, vec![(1, EditError::DeadlineExceeded)]);
+        assert_eq!(q.pending(), 1);
+
+        // FIFO baseline ignores deadlines entirely
+        let fifo = WorkerQueue::new();
+        let mut r = req(3);
+        r.deadline = Some(Instant::now() - Duration::from_millis(1));
+        fifo.push_raw(r);
+        assert!(fifo.drain_defunct(Instant::now()).is_empty());
+        assert_eq!(fifo.pending(), 1);
+    }
+
+    #[test]
+    fn cancel_marks_sweep_lanes_and_track_held_ids() {
+        let q = qos_queue(1_000);
+        q.push_raw(req(1));
+        let prep = crate::engine::prepost::preprocess(req(2), 8, 0);
+        q.push_ready(prep);
+        q.request_cancel(1);
+        q.request_cancel(2);
+        q.request_cancel(77); // not queued: mark persists for the worker
+        let mut dropped = q.drain_defunct(Instant::now());
+        dropped.sort_by_key(|(id, _)| *id);
+        assert_eq!(
+            dropped,
+            vec![(1, EditError::Cancelled), (2, EditError::Cancelled)]
+        );
+        assert_eq!(q.pending(), 0);
+        // the sweep consumed the lane marks, the parked mark survives
+        assert!(!q.take_cancel(1));
+        assert!(q.take_cancel(77));
+        assert!(!q.take_cancel(77), "marks are consumed once");
+
+        // held-set bookkeeping (parked / preempted visibility)
+        assert!(!q.is_held(5));
+        q.set_held(5, true);
+        assert!(q.is_held(5));
+        q.set_held(5, false);
+        assert!(!q.is_held(5));
+        q.set_held(6, true);
+        q.request_cancel(6);
+        q.clear_cancel(6);
+        assert!(!q.take_cancel(6));
+        assert!(!q.is_held(6), "clear_cancel drops the held entry too");
+    }
+
+    #[test]
+    fn class_depths_report_per_class_waits() {
+        let q = qos_queue(1_000);
+        q.push_raw(req_class(1, Priority::Interactive));
+        q.push_raw(req_class(2, Priority::Batch));
+        q.push_raw(req_class(3, Priority::Batch));
+        let d = q.class_depths(Instant::now() + Duration::from_millis(10));
+        assert_eq!(d[Priority::Interactive.rank()].queued, 1);
+        assert_eq!(d[Priority::Standard.rank()].queued, 0);
+        assert_eq!(d[Priority::Batch.rank()].queued, 2);
+        assert!(d[Priority::Batch.rank()].oldest_wait_secs >= 0.01);
+        assert_eq!(q.peek_best_raw().map(|(rank, _)| rank), Some(0));
+        q.pop_raw();
+        assert_eq!(
+            q.peek_best_raw().map(|(rank, _)| rank),
+            Some(Priority::Batch.rank())
+        );
     }
 
     #[test]

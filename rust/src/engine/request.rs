@@ -6,9 +6,10 @@
 //! collector with either an [`EditResponse`] or a typed [`EditError`].
 //! Workers report progress to the collector as [`WorkerEvent`]s.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::model::MaskSpec;
+use crate::qos::Priority;
 use crate::util::rng::Pcg;
 use crate::util::tensor::Tensor;
 
@@ -28,6 +29,13 @@ pub struct EditRequest {
     pub prompt_seed: u64,
     /// Arrival time at the system boundary.
     pub arrival: Instant,
+    /// Request class: orders worker queues and drives preemption.
+    pub priority: Priority,
+    /// Optional completion deadline. Expires the request while it is
+    /// still queued ([`EditError::DeadlineExceeded`]) and gates admission
+    /// ([`EditError::DeadlineInfeasible`]); running members are never
+    /// killed by it.
+    pub deadline: Option<Instant>,
 }
 
 impl EditRequest {
@@ -38,7 +46,16 @@ impl EditRequest {
             mask,
             prompt_seed,
             arrival: Instant::now(),
+            priority: Priority::default(),
+            deadline: None,
         }
+    }
+
+    /// The deadline as milliseconds after arrival (as the client asked
+    /// for it; status endpoints echo this).
+    pub fn deadline_ms(&self) -> Option<u64> {
+        self.deadline
+            .map(|d| d.saturating_duration_since(self.arrival).as_millis() as u64)
     }
 }
 
@@ -69,6 +86,8 @@ pub struct EditResponse {
     pub latent: Tensor,
     pub timing: RequestTiming,
     pub mask_ratio: f64,
+    /// The request's class (per-class latency accounting).
+    pub priority: Priority,
 }
 
 /// Why a request did not produce an [`EditResponse`]. Threaded from the
@@ -88,6 +107,20 @@ pub enum EditError {
     Cancelled,
     #[error("timed out waiting for completion")]
     Timeout,
+    /// Admission control shed the request: the cluster is over capacity
+    /// for its class. Retry after the estimated drain time (the HTTP
+    /// frontend maps this onto `429` + `Retry-After`).
+    #[error("overloaded, retry after {retry_after_ms} ms")]
+    Overloaded { retry_after_ms: u64 },
+    /// The requested deadline cannot be met even on the best worker
+    /// (estimated completion exceeds it), so the request is refused
+    /// instead of admitted-to-fail.
+    #[error("deadline infeasible: {0}")]
+    DeadlineInfeasible(String),
+    /// The deadline expired while the request was still queued; it is
+    /// dropped without wasting denoise steps.
+    #[error("deadline exceeded while queued")]
+    DeadlineExceeded,
     #[error("worker shut down before completing the request")]
     WorkerShutdown,
     /// Engine-side fault (artifact IO, cache failure) — a server error,
@@ -105,6 +138,9 @@ impl EditError {
             EditError::InvalidMask(_) => 400,
             EditError::Cancelled => 409,
             EditError::Timeout => 504,
+            EditError::Overloaded { .. } => 429,
+            EditError::DeadlineInfeasible(_) => 422,
+            EditError::DeadlineExceeded => 504,
             EditError::WorkerShutdown => 503,
             EditError::Internal(_) => 500,
         }
@@ -118,6 +154,9 @@ impl EditError {
             EditError::InvalidMask(_) => "invalid_mask",
             EditError::Cancelled => "cancelled",
             EditError::Timeout => "timeout",
+            EditError::Overloaded { .. } => "overloaded",
+            EditError::DeadlineInfeasible(_) => "deadline_infeasible",
+            EditError::DeadlineExceeded => "deadline_exceeded",
             EditError::WorkerShutdown => "worker_shutdown",
             EditError::Internal(_) => "internal",
         }
@@ -160,6 +199,8 @@ pub struct EditRequestBuilder {
     mask: Option<MaskSpec>,
     prompt_seed: u64,
     expect_tokens: Option<usize>,
+    priority: Priority,
+    deadline_ms: Option<u64>,
 }
 
 impl EditRequestBuilder {
@@ -170,6 +211,8 @@ impl EditRequestBuilder {
             mask: None,
             prompt_seed: 0,
             expect_tokens: None,
+            priority: Priority::default(),
+            deadline_ms: None,
         }
     }
 
@@ -192,6 +235,19 @@ impl EditRequestBuilder {
     /// serving model's L); mismatches fail `build()` with `InvalidMask`.
     pub fn expect_tokens(mut self, tokens: usize) -> Self {
         self.expect_tokens = Some(tokens);
+        self
+    }
+
+    /// Request class (defaults to `Standard`).
+    pub fn priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Completion deadline, milliseconds after submission. Zero is
+    /// rejected at `build()` with `DeadlineInfeasible`.
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
         self
     }
 
@@ -228,7 +284,17 @@ impl EditRequestBuilder {
                 )));
             }
         }
-        Ok(EditRequest::new(self.id, self.template_id, mask, self.prompt_seed))
+        if self.deadline_ms == Some(0) {
+            return Err(EditError::DeadlineInfeasible(
+                "deadline_ms must be positive".into(),
+            ));
+        }
+        let mut req = EditRequest::new(self.id, self.template_id, mask, self.prompt_seed);
+        req.priority = self.priority;
+        req.deadline = self
+            .deadline_ms
+            .map(|ms| req.arrival + Duration::from_millis(ms));
+        Ok(req)
     }
 }
 
@@ -313,6 +379,39 @@ mod tests {
     }
 
     #[test]
+    fn builder_carries_priority_and_deadline() {
+        let r = EditRequestBuilder::new(3)
+            .template("t")
+            .mask(MaskSpec::new(vec![0], 16))
+            .priority(Priority::Interactive)
+            .deadline_ms(2_500)
+            .build()
+            .expect("valid");
+        assert_eq!(r.priority, Priority::Interactive);
+        assert_eq!(r.deadline_ms(), Some(2_500));
+        assert!(r.deadline.unwrap() > r.arrival);
+        // defaults: standard class, no deadline
+        let d = EditRequestBuilder::new(4)
+            .template("t")
+            .mask(MaskSpec::new(vec![0], 16))
+            .build()
+            .unwrap();
+        assert_eq!(d.priority, Priority::Standard);
+        assert_eq!(d.deadline_ms(), None);
+    }
+
+    #[test]
+    fn builder_rejects_zero_deadline() {
+        let err = EditRequestBuilder::new(5)
+            .template("t")
+            .mask(MaskSpec::new(vec![0], 16))
+            .deadline_ms(0)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, EditError::DeadlineInfeasible(_)));
+    }
+
+    #[test]
     fn edit_error_http_mapping() {
         assert_eq!(EditError::UnknownTemplate("x".into()).http_status(), 404);
         assert_eq!(EditError::TemplateRetired("x".into()).http_status(), 410);
@@ -320,6 +419,12 @@ mod tests {
         assert_eq!(EditError::InvalidMask("m".into()).http_status(), 400);
         assert_eq!(EditError::Cancelled.http_status(), 409);
         assert_eq!(EditError::Timeout.http_status(), 504);
+        assert_eq!(EditError::Overloaded { retry_after_ms: 1500 }.http_status(), 429);
+        assert_eq!(EditError::Overloaded { retry_after_ms: 1500 }.kind(), "overloaded");
+        assert_eq!(EditError::DeadlineInfeasible("x".into()).http_status(), 422);
+        assert_eq!(EditError::DeadlineInfeasible("x".into()).kind(), "deadline_infeasible");
+        assert_eq!(EditError::DeadlineExceeded.http_status(), 504);
+        assert_eq!(EditError::DeadlineExceeded.kind(), "deadline_exceeded");
         assert_eq!(EditError::WorkerShutdown.http_status(), 503);
         assert_eq!(EditError::Internal("io".into()).http_status(), 500);
         assert_eq!(EditError::Cancelled.kind(), "cancelled");

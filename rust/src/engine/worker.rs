@@ -29,10 +29,11 @@ use crate::cache::tier::{Residency, TieredStore};
 use crate::cache::LatencyModel;
 use crate::config::{BatchingPolicy, CacheMode, EngineConfig, SystemKind};
 use crate::engine::prepost::{postprocess, preprocess, PreparedRequest};
-use crate::engine::queue::{Submitter, WorkerQueue};
+use crate::engine::queue::{QueuePolicy, Submitter, WorkerQueue};
 use crate::engine::request::{EditError, EditResponse, RequestTiming, WorkerEvent};
 use crate::engine::teacache::TeaCacheGate;
 use crate::model::Latent;
+use crate::qos::{ClassDepth, Priority, CLASS_COUNT};
 use crate::templates::{TemplateRegistry, TemplateState};
 use crate::util::pool::ThreadPool;
 use crate::util::tensor::Tensor;
@@ -53,6 +54,15 @@ struct Member {
     /// TeaCache: replayed eps (full (L, H)) + gate.
     last_eps: Option<Vec<f32>>,
     gate: Option<TeaCacheGate>,
+    /// Times this member was preempted for an `Interactive` request (at
+    /// most once, so preemption cannot thrash a member forever).
+    preemptions: u32,
+}
+
+impl Member {
+    fn rank(&self) -> usize {
+        self.prep.request.priority.rank()
+    }
 }
 
 /// A popped request whose template is still registering cluster-wide: it
@@ -84,6 +94,8 @@ pub struct WorkerSnapshot {
     pub queued_masked_tokens: usize,
     /// Mask ratios of queued + running requests (scheduler cost model).
     pub mask_ratios: Vec<f64>,
+    /// Per-class queue depth + oldest-wait age (QoS observability).
+    pub class_depths: [ClassDepth; CLASS_COUNT],
 }
 
 /// Shared mutable state published by the engine thread.
@@ -137,6 +149,7 @@ impl Worker {
             &format!("prepost-{id}"),
             cfg.prepost_threads.max(1),
         ));
+        let queue = WorkerQueue::with_policy(QueuePolicy::from_qos(&cfg.qos));
         Worker {
             id,
             cfg,
@@ -144,7 +157,7 @@ impl Worker {
             tiers,
             loader,
             lat_model,
-            queue: WorkerQueue::new(),
+            queue,
             prepost,
             events,
             shared: Arc::new(WorkerShared::default()),
@@ -213,6 +226,7 @@ impl Worker {
             running: self.shared.running.load(Ordering::Relaxed),
             queued_masked_tokens: self.shared.running_masked.load(Ordering::Relaxed),
             mask_ratios: Vec::new(),
+            class_depths: self.queue.class_depths(Instant::now()),
         }
     }
 
@@ -220,20 +234,19 @@ impl Worker {
     pub fn run(mut self) -> Result<()> {
         let mut members: Vec<Member> = Vec::new();
         let mut parked: Vec<Parked> = Vec::new();
+        let mut preempted: Vec<Member> = Vec::new();
         loop {
-            self.admit(&mut members, &mut parked)?;
+            self.reap_defunct();
+            self.admit(&mut members, &mut parked, &mut preempted)?;
             if members.is_empty() {
                 if self.stop.load(Ordering::Relaxed)
                     && self.queue.pending() == 0
+                    && preempted.is_empty()
                 {
                     // parked requests will never see their registration
                     // from a stopping cluster; resolve their tickets
                     for p in parked.drain(..) {
-                        let _ = self.events.send(WorkerEvent::Finished {
-                            id: p.prep.request.id,
-                            worker: self.id,
-                            result: Err(EditError::WorkerShutdown),
-                        });
+                        self.resolve_unrun(p.prep.request.id, EditError::WorkerShutdown);
                     }
                     break;
                 }
@@ -247,6 +260,26 @@ impl Worker {
         Ok(())
     }
 
+    /// Sweep the queue for cancel-marked or deadline-expired entries and
+    /// resolve their tickets without spending denoise steps.
+    fn reap_defunct(&self) {
+        for (id, err) in self.queue.drain_defunct(Instant::now()) {
+            self.resolve_unrun(id, err);
+        }
+    }
+
+    /// Resolve a request this worker holds (parked, preempted, or just
+    /// popped) without running it: clear its held flag and report the
+    /// terminal error to the collector.
+    fn resolve_unrun(&self, id: u64, err: EditError) {
+        self.queue.set_held(id, false);
+        let _ = self.events.send(WorkerEvent::Finished {
+            id,
+            worker: self.id,
+            result: Err(err),
+        });
+    }
+
     /// Spawn the engine loop on its own thread.
     pub fn start(self) -> std::thread::JoinHandle<Result<()>> {
         std::thread::Builder::new()
@@ -257,13 +290,19 @@ impl Worker {
 
     // -- admission -----------------------------------------------------------
 
-    fn admit(&mut self, members: &mut Vec<Member>, parked: &mut Vec<Parked>) -> Result<()> {
+    fn admit(
+        &mut self,
+        members: &mut Vec<Member>,
+        parked: &mut Vec<Parked>,
+        preempted: &mut Vec<Member>,
+    ) -> Result<()> {
         let cap = self.cfg.max_batch.min(self.rt.max_batch_bucket());
         // whether the batch was drained *before* parked admissions, so a
         // resumed parked request doesn't make static batching skip the
         // queue-fill below and run an underfilled batch
         let drained_batch = members.is_empty();
         self.service_parked(members, parked, cap);
+        self.service_preempted(members, preempted, cap);
         match self.cfg.batching {
             BatchingPolicy::Static => {
                 // join only when the running batch has fully drained
@@ -284,16 +323,34 @@ impl Worker {
                 }
             }
             BatchingPolicy::ContinuousInline | BatchingPolicy::ContinuousDisaggregated => {
+                // QoS: when the batch is full and an Interactive request
+                // waits, park the lowest-class member at this step
+                // boundary so the fill loop below can admit the
+                // interactive one (the step-level analogue of the
+                // paper's one-step join).
+                self.preempt_for_interactive(members, preempted, cap);
                 // Step-level join (the paper's continuous batching, §4.3),
                 // bucket-aware: a joining request must not inflate the
                 // running batch's token bucket unless the batch is nearly
-                // empty (<= 1 member). FIFO on the front of the queue, so
-                // deferred large-mask requests cannot starve. This is the
-                // shape-bucketed analogue of the paper's heterogeneous-
-                // mask batching (their kernels handle per-member token
-                // counts; XLA programs are shape-static).
+                // empty (<= 1 member). Ordered on the best queue
+                // candidate only (priority order under QoS, FIFO
+                // otherwise), so deferred large-mask requests cannot
+                // starve. This is the shape-bucketed analogue of the
+                // paper's heterogeneous-mask batching (their kernels
+                // handle per-member token counts; XLA programs are
+                // shape-static).
                 loop {
                     if members.len() >= cap {
+                        break;
+                    }
+                    // a preempted member whose bucket no longer fits the
+                    // running batch blocks new admissions (the same
+                    // no-skip rule the queue front gets): the batch
+                    // drains, the member rejoins, then filling resumes
+                    if preempted
+                        .iter()
+                        .any(|m| !self.bucket_fits(members, m.prep.masked_count))
+                    {
                         break;
                     }
                     let batch_bucket = members
@@ -336,11 +393,12 @@ impl Worker {
         self.rt.config.bucket_for(masked_count) <= batch_bucket
     }
 
-    /// Re-check parked requests: admit the ones whose template became
-    /// ready (bucket rules permitting), refuse the ones whose template
-    /// retired or failed, and time out the ones that waited past their
-    /// deadline (only while still pending — a ready request that merely
-    /// awaits a compatible batch bucket is never timed out here).
+    /// Re-check parked requests: resolve cancel marks first, then admit
+    /// the ones whose template became ready (bucket rules permitting),
+    /// refuse the ones whose template retired or failed, and time out the
+    /// ones that waited past their deadline (only while still pending — a
+    /// ready request that merely awaits a compatible batch bucket is
+    /// never timed out here).
     fn service_parked(&self, members: &mut Vec<Member>, parked: &mut Vec<Parked>, cap: usize) {
         let join_ok = match self.cfg.batching {
             // static batching only joins a drained batch
@@ -349,6 +407,21 @@ impl Worker {
         };
         let mut i = 0;
         while i < parked.len() {
+            let id = parked[i].prep.request.id;
+            if self.queue.take_cancel(id) {
+                let _ = parked.swap_remove(i);
+                self.resolve_unrun(id, EditError::Cancelled);
+                continue;
+            }
+            // a deadline that lapsed while parked counts as expired-in-
+            // queue: drop it before it can burn denoise steps
+            let expired = self.cfg.qos.enabled
+                && matches!(parked[i].prep.request.deadline, Some(d) if Instant::now() >= d);
+            if expired {
+                let _ = parked.swap_remove(i);
+                self.resolve_unrun(id, EditError::DeadlineExceeded);
+                continue;
+            }
             match self.template_gate(&parked[i].prep.request.template_id) {
                 TemplateGate::Ready
                     if join_ok
@@ -356,27 +429,131 @@ impl Worker {
                         && self.bucket_fits(members, parked[i].prep.masked_count) =>
                 {
                     let p = parked.swap_remove(i);
-                    self.admit_member(p.prep, members);
+                    // atomic un-park: a cancel that raced in wins
+                    if self.queue.release_held(id) {
+                        self.admit_member(p.prep, members);
+                    } else {
+                        self.resolve_unrun(id, EditError::Cancelled);
+                    }
                 }
                 TemplateGate::Refused(err) => {
-                    let p = parked.swap_remove(i);
-                    let _ = self.events.send(WorkerEvent::Finished {
-                        id: p.prep.request.id,
-                        worker: self.id,
-                        result: Err(err),
-                    });
+                    let _ = parked.swap_remove(i);
+                    self.resolve_unrun(id, err);
                 }
                 TemplateGate::Pending if Instant::now() >= parked[i].deadline => {
-                    let p = parked.swap_remove(i);
-                    let _ = self.events.send(WorkerEvent::Finished {
-                        id: p.prep.request.id,
-                        worker: self.id,
-                        result: Err(EditError::Timeout),
-                    });
+                    let _ = parked.swap_remove(i);
+                    self.resolve_unrun(id, EditError::Timeout);
                 }
                 _ => i += 1,
             }
         }
+    }
+
+    /// Re-admit preempted members: cancel marks resolve first (the
+    /// satellite fix — `DELETE` reaches preempted members, which release
+    /// their slot promptly), then each member rejoins as soon as a slot
+    /// is free and its bucket fits. No `Started` event — the request
+    /// never left the `Running` state; its latent resumes exactly where
+    /// it parked.
+    fn service_preempted(
+        &self,
+        members: &mut Vec<Member>,
+        preempted: &mut Vec<Member>,
+        cap: usize,
+    ) {
+        let join_ok = match self.cfg.batching {
+            BatchingPolicy::Static => members.is_empty(),
+            _ => true,
+        };
+        let mut i = 0;
+        while i < preempted.len() {
+            let id = preempted[i].prep.request.id;
+            if self.queue.take_cancel(id) {
+                let _ = preempted.swap_remove(i);
+                self.resolve_unrun(id, EditError::Cancelled);
+                continue;
+            }
+            if join_ok
+                && members.len() < cap
+                && self.bucket_fits(members, preempted[i].prep.masked_count)
+            {
+                let m = preempted.swap_remove(i);
+                // atomic resume: a cancel that raced in wins instead of
+                // silently re-running a request the client cancelled
+                if self.queue.release_held(id) {
+                    members.push(m);
+                } else {
+                    self.resolve_unrun(id, EditError::Cancelled);
+                }
+                continue;
+            }
+            i += 1;
+        }
+    }
+
+    /// QoS preemption (tentpole part 2): with the batch full and an
+    /// `Interactive` request waiting, park the lowest-class member at
+    /// this step boundary — its latent and step counter move to the
+    /// preempted set and rejoin later, bit-identical to an uninterrupted
+    /// run. Each member is preempted at most once, and at most one member
+    /// per engine iteration, so preemption cannot thrash.
+    fn preempt_for_interactive(
+        &self,
+        members: &mut Vec<Member>,
+        preempted: &mut Vec<Member>,
+        cap: usize,
+    ) {
+        if !self.cfg.qos.enabled || members.len() < cap {
+            return;
+        }
+        // the *next pop* must be a genuinely Interactive request — if an
+        // aged-up lower class outranks it, that one gets the next natural
+        // slot and evicting a member for it would invert the intent
+        let peek = match self.cfg.batching {
+            BatchingPolicy::ContinuousDisaggregated => self.queue.peek_best_ready(),
+            _ => self.queue.peek_best_raw(),
+        };
+        let Some((rank, masked)) = peek else { return };
+        if rank != Priority::Interactive.rank() {
+            return;
+        }
+        let victim = members
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.rank() > Priority::Interactive.rank() && m.preemptions == 0)
+            // lowest class first; among those, the least-progressed
+            // member (most remaining steps), so a nearly-done member is
+            // not held up at the finish line
+            .max_by_key(|(_, m)| (m.rank(), std::cmp::Reverse(m.step)))
+            .map(|(i, _)| i);
+        let Some(i) = victim else { return };
+        // only evict when (a) the interactive request could actually take
+        // the freed slot under the bucket rule — otherwise the slot would
+        // sit idle for the rest of the batch's lifetime — and (b) the
+        // victim's own bucket still fits the remaining batch, so it is
+        // never parked behind a batch it can no longer rejoin
+        let remaining = members.len() - 1;
+        let fits = if remaining <= 1 || !self.mask_aware() {
+            true
+        } else {
+            let batch_bucket = members
+                .iter()
+                .enumerate()
+                .filter(|(j, _)| *j != i)
+                .map(|(_, m)| m.cached_bucket)
+                .max()
+                .unwrap_or(usize::MAX);
+            self.rt.config.bucket_for(masked) <= batch_bucket
+                && members[i].cached_bucket <= batch_bucket
+        };
+        if !fits {
+            return;
+        }
+        let mut m = members.swap_remove(i);
+        m.preemptions += 1;
+        m.interruptions += 1;
+        self.queue.set_held(m.prep.request.id, true);
+        preempted.push(m);
     }
 
     /// Where a popped request's template stands right now.
@@ -402,27 +579,35 @@ impl Worker {
     }
 
     /// Admit a popped request, park it, or refuse it, per its template's
-    /// lifecycle state.
+    /// lifecycle state. Cancel marks and expired deadlines resolve here
+    /// too — the last check before a request joins the batch.
     fn gate_or_admit(
         &self,
         prep: PreparedRequest,
         members: &mut Vec<Member>,
         parked: &mut Vec<Parked>,
     ) {
+        let id = prep.request.id;
+        if self.queue.take_cancel(id) {
+            self.resolve_unrun(id, EditError::Cancelled);
+            return;
+        }
+        let expired = matches!(prep.request.deadline, Some(d) if Instant::now() >= d);
+        if self.cfg.qos.enabled && expired {
+            self.resolve_unrun(id, EditError::DeadlineExceeded);
+            return;
+        }
         match self.template_gate(&prep.request.template_id) {
             TemplateGate::Ready => self.admit_member(prep, members),
-            TemplateGate::Pending => parked.push(Parked {
-                deadline: Instant::now()
-                    + Duration::from_millis(self.cfg.registration_wait_ms),
-                prep,
-            }),
-            TemplateGate::Refused(err) => {
-                let _ = self.events.send(WorkerEvent::Finished {
-                    id: prep.request.id,
-                    worker: self.id,
-                    result: Err(err),
+            TemplateGate::Pending => {
+                self.queue.set_held(id, true);
+                parked.push(Parked {
+                    deadline: Instant::now()
+                        + Duration::from_millis(self.cfg.registration_wait_ms),
+                    prep,
                 });
             }
+            TemplateGate::Refused(err) => self.resolve_unrun(id, err),
         }
     }
 
@@ -503,6 +688,7 @@ impl Worker {
             cached_bucket: bucket,
             last_eps: None,
             gate,
+            preemptions: 0,
         })
     }
 
@@ -837,6 +1023,7 @@ impl Worker {
         let id = m.prep.request.id;
         let template_id = m.prep.request.template_id.clone();
         let ratio = m.prep.request.mask.ratio();
+        let priority = m.prep.request.priority;
         let events = self.events.clone();
         let worker = self.id;
         let cpu_us = self.cfg.prepost_cpu_us;
@@ -854,6 +1041,7 @@ impl Worker {
                     latent,
                     timing,
                     mask_ratio: ratio,
+                    priority,
                 }),
             });
         };

@@ -15,8 +15,12 @@
 //!   pre/post-processing (§4.3), baseline modes (Diffusers / FISEdit /
 //!   TeaCache).
 //! - [`scheduler`]: mask-aware load balancing (§4.4, Algo 2) with a
-//!   cache-load penalty, plus residency-first (`cache-aware`) and blind
-//!   baselines.
+//!   cache-load penalty, plus residency-first (`cache-aware`), class-aware
+//!   (`qos-aware`) and blind baselines.
+//! - [`qos`]: quality of service — `Priority` classes with aging credit,
+//!   per-request deadlines, and the deadline-aware `AdmissionController`
+//!   that sheds over-capacity work with a retry estimate (429) instead of
+//!   growing queues unboundedly.
 //! - [`templates`]: the cluster-wide online template lifecycle —
 //!   `TemplateRegistry` owns the authoritative template set (registering
 //!   → ready → retired), in-flight reference counts, and registration
@@ -41,6 +45,7 @@ pub mod config;
 pub mod engine;
 pub mod metrics;
 pub mod model;
+pub mod qos;
 pub mod quality;
 pub mod runtime;
 pub mod scheduler;

@@ -21,7 +21,7 @@ use instgenie::scheduler;
 use instgenie::server::HttpServer;
 use instgenie::util::cli::Args;
 use instgenie::util::stats::Summary;
-use instgenie::workload::{replay, MaskDist, TraceGen};
+use instgenie::workload::{replay, ClassMix, MaskDist, TraceGen};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -49,16 +49,18 @@ fn print_help() {
          commands:\n\
          \x20 serve          --model sdxlm --workers 2 --addr 127.0.0.1:8801 --system instgenie\n\
          \x20 run            --model sdxlm --workers 2 --rps 1.0 --requests 40 --system instgenie\n\
-         \x20                --scheduler round-robin|request-lb|token-lb|cache-aware|mask-aware\n\
-         \x20                --dist production --templates 4\n\
+         \x20                --scheduler round-robin|request-lb|token-lb|cache-aware|mask-aware|qos-aware\n\
+         \x20                --dist production --templates 4 --class-mix 0.2,0.5,0.3\n\
+         \x20                [--no-qos] [--aging-ms 2000] [--max-pending 4096]\n\
          \x20 calibrate      --model fluxm [--reps 20]\n\
          \x20 workload-stats --dist production|public|viton\n\
          \x20 register       --model sdxlm --templates 4\n\
          \x20 info\n\
          \n\
          serve exposes the v1 request-lifecycle HTTP API:\n\
-         \x20 POST   /v1/edits       async submit -> 202 {{id, status_url}}\n\
-         \x20        curl -s localhost:8801/v1/edits -d '{{\"template\":\"tpl-0\",\"mask_ratio\":0.2,\"prompt_seed\":7}}'\n\
+         \x20 POST   /v1/edits       async submit -> 202 {{id, status_url}}; over capacity -> 429 + Retry-After\n\
+         \x20        curl -s localhost:8801/v1/edits -d '{{\"template\":\"tpl-0\",\"mask_ratio\":0.2,\"prompt_seed\":7,\n\
+         \x20                \"priority\":\"interactive\",\"deadline_ms\":2000}}'\n\
          \x20 GET    /v1/edits/{{id}}  poll: queued|running|done (+ timing, image stats)\n\
          \x20        curl -s localhost:8801/v1/edits/1000000\n\
          \x20 DELETE /v1/edits/{{id}}  cancel while queued -> cancelled\n\
@@ -94,6 +96,12 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     cfg.registration_wait_ms = args.u64("registration-wait-ms", cfg.registration_wait_ms);
     cfg.force_all_cached = args.bool("force-all-cached");
     cfg.naive_loading = args.bool("naive-loading");
+    // QoS: on by default; --no-qos reverts to the FIFO baseline
+    if args.bool("no-qos") {
+        cfg.qos.enabled = false;
+    }
+    cfg.qos.aging_ms = args.u64("aging-ms", cfg.qos.aging_ms);
+    cfg.qos.max_pending = args.usize("max-pending", cfg.qos.max_pending);
     Ok(cfg)
 }
 
@@ -138,12 +146,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let cluster = launch_cluster(args)?;
-    let gen = TraceGen::new(
+    let mut gen = TraceGen::new(
         args.f64("rps", 1.0),
         MaskDist::parse(&args.str("dist", "production")).context("bad --dist")?,
         args.usize("templates", 4),
         args.u64("seed", 42),
     );
+    if let Some(mix) = args.flags.get("class-mix") {
+        gen = gen.with_mix(ClassMix::parse(mix).context("bad --class-mix (i,s,b weights)")?);
+    }
     let events = gen.generate(args.usize("requests", 40));
     eprintln!(
         "[run] {} requests at {} rps over {} workers (system={}, scheduler={})",
@@ -154,13 +165,18 @@ fn cmd_run(args: &Args) -> Result<()> {
         args.str("scheduler", "mask-aware"),
     );
     let t0 = std::time::Instant::now();
+    let mut rec = Recorder::new();
     let mut tickets = Vec::with_capacity(events.len());
     replay(&events, |ev| {
-        tickets.push(cluster.submit_event(ev));
+        // the guarded path: QoS admission sheds over-capacity or
+        // deadline-infeasible requests up front (counted as failures)
+        match cluster.submit_guarded(cluster.event_request(ev)) {
+            Ok(t) => tickets.push(t),
+            Err(e) => rec.record_failure(&e),
+        }
     });
-    cluster.await_completed(events.len(), std::time::Duration::from_secs(600));
+    cluster.await_completed(tickets.len(), std::time::Duration::from_secs(600));
     let makespan = t0.elapsed().as_secs_f64();
-    let mut rec = Recorder::new();
     for t in &tickets {
         if let Some(st) = t.status() {
             if let RequestState::Failed(e) = st.state {

@@ -1,9 +1,22 @@
 //! Serving metrics: per-request latency decomposition, throughput, and
-//! report tables (the quantities of Fig. 4/12/14/16).
+//! report tables (the quantities of Fig. 4/12/14/16), broken out per
+//! QoS class, with failures split by [`EditError`] kind so overload
+//! behavior (sheds vs deadline expiries vs cancels) is observable.
+
+use std::collections::BTreeMap;
 
 use crate::engine::request::{EditError, EditResponse};
+use crate::qos::{Priority, CLASS_COUNT};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
+
+/// Per-class slice of a report.
+#[derive(Debug, Clone, Default)]
+pub struct ClassReport {
+    pub class: &'static str,
+    pub completed: usize,
+    pub e2e: Summary,
+}
 
 /// Aggregated serving metrics over a run.
 #[derive(Debug, Clone, Default)]
@@ -17,9 +30,14 @@ pub struct Report {
     pub mean_interruptions: f64,
     pub mean_steps_computed: f64,
     pub makespan: f64,
-    /// Requests that ended without a response (cancelled / failed /
-    /// shutdown).
+    /// Requests that ended without a response (cancelled / shed /
+    /// expired / failed / shutdown).
     pub failed: usize,
+    /// `failed`, broken out by [`EditError::kind`] (sorted by kind).
+    pub failed_by_kind: Vec<(String, usize)>,
+    /// Per-class completion counts + end-to-end latency summaries,
+    /// indexed by [`Priority::rank`].
+    pub by_class: Vec<ClassReport>,
 }
 
 /// Collects responses and derives the report.
@@ -30,6 +48,7 @@ pub struct Recorder {
     e2e: Vec<f64>,
     interruptions: Vec<f64>,
     steps: Vec<f64>,
+    class_e2e: [Vec<f64>; CLASS_COUNT],
     failures: Vec<&'static str>,
 }
 
@@ -44,6 +63,7 @@ impl Recorder {
         self.e2e.push(resp.timing.e2e);
         self.interruptions.push(resp.timing.interruptions as f64);
         self.steps.push(resp.timing.steps_computed as f64);
+        self.class_e2e[resp.priority.rank()].push(resp.timing.e2e);
     }
 
     /// Account a request that terminated without a response.
@@ -59,8 +79,17 @@ impl Recorder {
         self.e2e.is_empty()
     }
 
+    /// Completions recorded for one class so far.
+    pub fn class_completed(&self, priority: Priority) -> usize {
+        self.class_e2e[priority.rank()].len()
+    }
+
     /// Build the report; `makespan` = wall-clock of the serving window.
     pub fn report(&self, makespan: f64) -> Report {
+        let mut kinds: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for k in &self.failures {
+            *kinds.entry(*k).or_insert(0) += 1;
+        }
         Report {
             queue: Summary::of(&self.queue),
             inference: Summary::of(&self.inference),
@@ -71,6 +100,15 @@ impl Recorder {
             mean_steps_computed: mean_or0(&self.steps),
             makespan,
             failed: self.failures.len(),
+            failed_by_kind: kinds.into_iter().map(|(k, n)| (k.to_string(), n)).collect(),
+            by_class: Priority::ALL
+                .iter()
+                .map(|p| ClassReport {
+                    class: p.label(),
+                    completed: self.class_e2e[p.rank()].len(),
+                    e2e: Summary::of(&self.class_e2e[p.rank()]),
+                })
+                .collect(),
         }
     }
 }
@@ -96,7 +134,16 @@ impl Report {
             self.queue.mean,
             self.inference.mean,
             self.mean_interruptions,
-        ) + &if self.failed > 0 { format!(" failed={}", self.failed) } else { String::new() }
+        ) + &if self.failed > 0 {
+            let kinds: Vec<String> = self
+                .failed_by_kind
+                .iter()
+                .map(|(k, n)| format!("{k}={n}"))
+                .collect();
+            format!(" failed={} ({})", self.failed, kinds.join(" "))
+        } else {
+            String::new()
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -108,16 +155,36 @@ impl Report {
                 ("p99", Json::num(x.p99)),
             ])
         };
+        let classes = self
+            .by_class
+            .iter()
+            .map(|c| {
+                (
+                    c.class,
+                    Json::obj(vec![
+                        ("completed", Json::num(c.completed as f64)),
+                        ("e2e", s(&c.e2e)),
+                    ]),
+                )
+            })
+            .collect();
+        let kinds = self
+            .failed_by_kind
+            .iter()
+            .map(|(k, n)| (k.as_str(), Json::num(*n as f64)))
+            .collect();
         Json::obj(vec![
             ("completed", Json::num(self.completed as f64)),
             ("throughput", Json::num(self.throughput)),
             ("queue", s(&self.queue)),
             ("inference", s(&self.inference)),
             ("e2e", s(&self.e2e)),
+            ("classes", Json::obj(classes)),
             ("mean_interruptions", Json::num(self.mean_interruptions)),
             ("mean_steps_computed", Json::num(self.mean_steps_computed)),
             ("makespan", Json::num(self.makespan)),
             ("failed", Json::num(self.failed as f64)),
+            ("failed_by_kind", Json::obj(kinds)),
         ])
     }
 }
@@ -128,7 +195,7 @@ mod tests {
     use crate::engine::request::RequestTiming;
     use crate::util::tensor::Tensor;
 
-    fn resp(queue: f64, inf: f64) -> EditResponse {
+    fn resp(queue: f64, inf: f64, priority: Priority) -> EditResponse {
         EditResponse {
             id: 0,
             template_id: "t".into(),
@@ -142,14 +209,15 @@ mod tests {
                 steps_computed: 8,
             },
             mask_ratio: 0.1,
+            priority,
         }
     }
 
     #[test]
     fn report_aggregates() {
         let mut r = Recorder::new();
-        r.record(&resp(0.1, 0.5));
-        r.record(&resp(0.3, 0.5));
+        r.record(&resp(0.1, 0.5, Priority::Standard));
+        r.record(&resp(0.3, 0.5, Priority::Standard));
         r.record_failure(&EditError::Cancelled);
         let rep = r.report(2.0);
         assert_eq!(rep.completed, 2);
@@ -165,9 +233,50 @@ mod tests {
     }
 
     #[test]
+    fn report_breaks_out_classes_and_failure_kinds() {
+        let mut r = Recorder::new();
+        r.record(&resp(0.0, 0.2, Priority::Interactive));
+        r.record(&resp(0.0, 0.4, Priority::Interactive));
+        r.record(&resp(0.5, 0.5, Priority::Batch));
+        r.record_failure(&EditError::Overloaded { retry_after_ms: 100 });
+        r.record_failure(&EditError::Overloaded { retry_after_ms: 200 });
+        r.record_failure(&EditError::DeadlineExceeded);
+        r.record_failure(&EditError::Cancelled);
+        assert_eq!(r.class_completed(Priority::Interactive), 2);
+        assert_eq!(r.class_completed(Priority::Standard), 0);
+        let rep = r.report(1.0);
+        assert_eq!(rep.by_class.len(), 3);
+        assert_eq!(rep.by_class[Priority::Interactive.rank()].completed, 2);
+        assert_eq!(rep.by_class[Priority::Batch.rank()].completed, 1);
+        assert!(
+            (rep.by_class[Priority::Interactive.rank()].e2e.mean - 0.3).abs() < 1e-12,
+            "per-class e2e means are independent"
+        );
+        // failure kinds are counted and sorted by kind
+        assert_eq!(
+            rep.failed_by_kind,
+            vec![
+                ("cancelled".to_string(), 1),
+                ("deadline_exceeded".to_string(), 1),
+                ("overloaded".to_string(), 2),
+            ]
+        );
+        assert!(rep.line().contains("overloaded=2"), "{}", rep.line());
+        // json carries both breakdowns
+        let j = rep.to_json();
+        assert_eq!(
+            j.at("classes").at("interactive").at("completed").as_usize(),
+            Some(2)
+        );
+        assert_eq!(j.at("failed_by_kind").at("overloaded").as_usize(), Some(2));
+    }
+
+    #[test]
     fn empty_recorder_safe() {
         let rep = Recorder::new().report(1.0);
         assert_eq!(rep.completed, 0);
         assert_eq!(rep.throughput, 0.0);
+        assert_eq!(rep.by_class.len(), 3);
+        assert!(rep.failed_by_kind.is_empty());
     }
 }

@@ -1,0 +1,321 @@
+//! Quality-of-service: priority classes, deadline-aware admission control,
+//! and overload shedding on top of step-level continuous batching.
+//!
+//! The paper gives the serving stack two mechanisms this module turns into
+//! policy: batch membership changes at one-denoise-step granularity
+//! (§4.3), and Algorithm 2's cost model predicts a request's completion
+//! latency from its mask ratio and cache residency (§4.4). A [`Priority`]
+//! orders requests inside every worker queue (strict priority with an
+//! aging credit so `Batch` always eventually runs), deadlines bound how
+//! long a request may wait before it is shed instead of burning denoise
+//! steps, and the [`AdmissionController`] rejects work up front — with a
+//! `Retry-After` estimate — once the backlog makes the request's deadline
+//! (or its class's wait bound) infeasible. Under the bursty, heavy-tailed
+//! traffic of §2.2 this keeps interactive edits fast while overload
+//! degrades into bounded shedding rather than unbounded queues.
+
+use std::time::Duration;
+
+use crate::cache::LatencyModel;
+use crate::config::{CacheMode, ModelConfig};
+use crate::scheduler::{Book, MaskAware, Outstanding, RouteCtx};
+
+/// Number of request classes (array index = [`Priority::rank`]).
+pub const CLASS_COUNT: usize = 3;
+
+/// Request class: who is waiting for the edit.
+///
+/// Ordering is urgency: `Interactive < Standard < Batch`, so
+/// `min_by_key(priority)` picks the most urgent request.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// A user is watching the edit render (the paper's motivating
+    /// workload): lowest latency, may preempt lower classes.
+    Interactive,
+    /// Ordinary API traffic.
+    #[default]
+    Standard,
+    /// Bulk/offline jobs: throughput only, runs on leftover capacity.
+    Batch,
+}
+
+impl Priority {
+    /// All classes, most urgent first (stable report order).
+    pub const ALL: [Priority; CLASS_COUNT] =
+        [Priority::Interactive, Priority::Standard, Priority::Batch];
+
+    /// 0 = most urgent. Indexes per-class arrays.
+    pub fn rank(self) -> usize {
+        self as usize
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s.to_ascii_lowercase().as_str() {
+            "interactive" => Some(Priority::Interactive),
+            "standard" => Some(Priority::Standard),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// Effective class rank after `waited` in queue: one level of aging credit
+/// per `aging_ms`, so a starved `Batch` request eventually outranks fresh
+/// `Interactive` arrivals (strict priority would starve it forever).
+/// `aging_ms == 0` disables aging (rank is the static class).
+pub fn effective_rank(rank: usize, waited: Duration, aging_ms: u64) -> i64 {
+    if aging_ms == 0 {
+        return rank as i64;
+    }
+    rank as i64 - (waited.as_millis() as u64 / aging_ms) as i64
+}
+
+/// Per-class queue depth snapshot (stats endpoints + scheduler).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ClassDepth {
+    pub queued: usize,
+    /// Age of the oldest queued request of this class, seconds.
+    pub oldest_wait_secs: f64,
+}
+
+/// QoS knobs carried in the engine config.
+#[derive(Debug, Clone)]
+pub struct QosConfig {
+    /// Master switch: priority-ordered queues, preemption, deadline
+    /// expiry, and admission control. Off = the FIFO baseline.
+    pub enabled: bool,
+    /// Aging credit quantum for [`effective_rank`] (anti-starvation).
+    pub aging_ms: u64,
+    /// Admission: hard cap on outstanding (queued + running) requests
+    /// cluster-wide; beyond it submissions are shed with `Overloaded`.
+    pub max_pending: usize,
+    /// Admission: per-class bound on the *estimated* completion latency
+    /// (seconds, indexed by [`Priority::rank`]); `INFINITY` disables the
+    /// bound for that class.
+    pub class_wait_bounds: [f64; CLASS_COUNT],
+}
+
+impl QosConfig {
+    /// QoS on, with permissive limits: priorities, aging and preemption
+    /// are active, but nothing is shed until the pending cap is hit.
+    pub fn standard() -> QosConfig {
+        QosConfig {
+            enabled: true,
+            aging_ms: 2_000,
+            max_pending: 4_096,
+            class_wait_bounds: [f64::INFINITY; CLASS_COUNT],
+        }
+    }
+
+    /// The FIFO baseline: no reordering, no preemption, no shedding.
+    pub fn disabled() -> QosConfig {
+        QosConfig { enabled: false, ..QosConfig::standard() }
+    }
+}
+
+/// Admission verdict for one request against the current cluster state.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Admission {
+    Admit,
+    /// Over capacity (pending cap or class wait bound): shed now, retry
+    /// after the backlog is estimated to have drained enough.
+    Overloaded { retry_after: f64, estimate: f64 },
+    /// Even the best worker cannot finish before the request's deadline.
+    DeadlineInfeasible { estimate: f64, deadline: f64 },
+}
+
+/// Deadline-aware admission control (tentpole part 3): reuses the
+/// scheduler's Algorithm-2 cost model — calibrated latency regressions +
+/// the pipeline DP + the live queue snapshot — to estimate the request's
+/// completion latency on its best worker, then sheds infeasible or
+/// over-capacity work up front instead of letting queues grow unboundedly.
+pub struct AdmissionController {
+    cost: MaskAware,
+    limits: QosConfig,
+}
+
+impl AdmissionController {
+    pub fn new(
+        cfg: ModelConfig,
+        lat: LatencyModel,
+        mode: CacheMode,
+        max_batch: usize,
+        limits: QosConfig,
+    ) -> AdmissionController {
+        AdmissionController { cost: MaskAware::new(cfg, lat, mode, max_batch), limits }
+    }
+
+    /// Estimated completion latency (seconds) of `req` on its best
+    /// candidate worker: Algorithm 2's backlog cost with the request
+    /// appended, plus the cache-load penalty where its template is cold —
+    /// the same [`MaskAware::best_completion`] the routing policies use,
+    /// so admission and routing can never diverge.
+    pub fn estimate(&self, req: &Outstanding, book: &Book, ctx: &RouteCtx) -> f64 {
+        self.cost.best_completion(req, book, ctx).1
+    }
+
+    /// Assess one submission. `deadline` is the time remaining until the
+    /// request's deadline (None = no deadline).
+    pub fn assess(
+        &self,
+        req: &Outstanding,
+        deadline: Option<Duration>,
+        book: &Book,
+        ctx: &RouteCtx,
+    ) -> Admission {
+        let estimate = self.estimate(req, book, ctx);
+        if let Some(d) = deadline {
+            let d = d.as_secs_f64();
+            if estimate > d {
+                return Admission::DeadlineInfeasible { estimate, deadline: d };
+            }
+        }
+        let pending: usize = book.iter().map(|lane| lane.len()).sum();
+        if pending >= self.limits.max_pending {
+            return Admission::Overloaded { retry_after: estimate.max(1e-3), estimate };
+        }
+        let bound = self.limits.class_wait_bounds[req.priority.rank()];
+        if estimate > bound {
+            return Admission::Overloaded { retry_after: (estimate - bound).max(1e-3), estimate };
+        }
+        Admission::Admit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            latent_hw: 8,
+            tokens: 64,
+            hidden: 64,
+            heads: 4,
+            blocks: 4,
+            steps: 8,
+            token_buckets: vec![4, 8, 16, 32],
+            paper_analogue: String::new(),
+        }
+    }
+
+    fn ctl(limits: QosConfig) -> AdmissionController {
+        let lat = LatencyModel::nominal(1e9, 1e8);
+        AdmissionController::new(cfg(), lat, CacheMode::CacheY, 8, limits)
+    }
+
+    fn o(id: u64, masked: usize, priority: Priority) -> Outstanding {
+        Outstanding { id, masked_tokens: masked, remaining_steps: 8, priority }
+    }
+
+    #[test]
+    fn priority_order_and_labels() {
+        assert!(Priority::Interactive < Priority::Standard);
+        assert!(Priority::Standard < Priority::Batch);
+        assert_eq!(Priority::Interactive.rank(), 0);
+        assert_eq!(Priority::Batch.rank(), 2);
+        for p in Priority::ALL {
+            assert_eq!(Priority::parse(p.label()), Some(p));
+        }
+        assert_eq!(Priority::parse("Interactive"), Some(Priority::Interactive));
+        assert_eq!(Priority::parse("nope"), None);
+        assert_eq!(Priority::default(), Priority::Standard);
+    }
+
+    #[test]
+    fn aging_credit_promotes_waiters() {
+        // fresh batch request sits two levels below interactive
+        assert_eq!(effective_rank(2, Duration::ZERO, 1000), 2);
+        // after one quantum it matches standard, after two interactive
+        assert_eq!(effective_rank(2, Duration::from_millis(1000), 1000), 1);
+        assert_eq!(effective_rank(2, Duration::from_millis(2500), 1000), 0);
+        // and keeps climbing, so it eventually beats any fresh arrival
+        assert!(effective_rank(2, Duration::from_millis(9000), 1000) < 0);
+        // aging disabled -> static rank
+        assert_eq!(effective_rank(2, Duration::from_secs(60), 0), 2);
+    }
+
+    #[test]
+    fn admits_when_under_limits() {
+        let c = ctl(QosConfig::standard());
+        let book = vec![vec![], vec![]];
+        let verdict = c.assess(
+            &o(1, 8, Priority::Standard),
+            None,
+            &book,
+            &RouteCtx::default(),
+        );
+        assert_eq!(verdict, Admission::Admit);
+    }
+
+    #[test]
+    fn pending_cap_sheds_with_retry_after() {
+        let mut limits = QosConfig::standard();
+        limits.max_pending = 2;
+        let c = ctl(limits);
+        let book = vec![vec![o(1, 8, Priority::Standard)], vec![o(2, 8, Priority::Standard)]];
+        match c.assess(&o(3, 8, Priority::Standard), None, &book, &RouteCtx::default()) {
+            Admission::Overloaded { retry_after, estimate } => {
+                assert!(retry_after > 0.0);
+                assert!(estimate > 0.0);
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn class_wait_bound_sheds_only_the_bounded_class() {
+        let mut limits = QosConfig::standard();
+        // interactive must finish in ~0 seconds: always infeasible here
+        limits.class_wait_bounds[Priority::Interactive.rank()] = 1e-9;
+        let c = ctl(limits);
+        let book = vec![vec![o(1, 32, Priority::Standard)]];
+        let ctx = RouteCtx::default();
+        assert!(matches!(
+            c.assess(&o(2, 8, Priority::Interactive), None, &book, &ctx),
+            Admission::Overloaded { .. }
+        ));
+        // the unbounded class still gets in
+        assert_eq!(c.assess(&o(3, 8, Priority::Batch), None, &book, &ctx), Admission::Admit);
+    }
+
+    #[test]
+    fn infeasible_deadline_is_rejected_up_front() {
+        let c = ctl(QosConfig::standard());
+        let book = vec![vec![o(1, 64, Priority::Standard); 8]];
+        let tight = Some(Duration::from_nanos(1));
+        match c.assess(&o(2, 8, Priority::Interactive), tight, &book, &RouteCtx::default()) {
+            Admission::DeadlineInfeasible { estimate, deadline } => {
+                assert!(estimate > deadline);
+            }
+            other => panic!("expected DeadlineInfeasible, got {other:?}"),
+        }
+        // a generous deadline admits
+        let loose = Some(Duration::from_secs(3600));
+        assert_eq!(
+            c.assess(&o(3, 8, Priority::Interactive), loose, &book, &RouteCtx::default()),
+            Admission::Admit
+        );
+    }
+
+    #[test]
+    fn estimate_prefers_the_lighter_worker() {
+        let c = ctl(QosConfig::standard());
+        let heavy = vec![o(1, 64, Priority::Standard); 8];
+        let two_workers = vec![heavy.clone(), vec![]];
+        let one_worker = vec![heavy];
+        let req = o(9, 8, Priority::Standard);
+        let solo = c.estimate(&req, &two_workers, &RouteCtx::default());
+        let stuck = c.estimate(&req, &one_worker, &RouteCtx::default());
+        assert!(solo < stuck, "an empty worker must lower the best estimate");
+    }
+}

@@ -17,6 +17,7 @@ use crate::cache::pipeline;
 use crate::cache::tier::Residency;
 use crate::cache::LatencyModel;
 use crate::config::{CacheMode, ModelConfig};
+use crate::qos::Priority;
 
 /// One dispatched-but-unfinished request, as the scheduler sees it.
 #[derive(Debug, Clone)]
@@ -24,6 +25,8 @@ pub struct Outstanding {
     pub id: u64,
     pub masked_tokens: usize,
     pub remaining_steps: usize,
+    /// Request class (class-aware policies route on it).
+    pub priority: Priority,
 }
 
 /// Per-worker outstanding sets (indexed by worker id).
@@ -188,6 +191,26 @@ impl MaskAware {
         cost
     }
 
+    /// Best candidate for `req`: the worker minimizing backlog cost +
+    /// cache-load penalty, with that cost. One shared implementation for
+    /// routing ([`Scheduler::pick`]) and the QoS admission estimate, so
+    /// the two can never diverge.
+    pub fn best_completion(&self, req: &Outstanding, book: &Book, ctx: &RouteCtx) -> (usize, f64) {
+        let mut best = 0;
+        let mut best_cost = f64::INFINITY;
+        for (w, outstanding) in book.iter().enumerate() {
+            let mut hypo = outstanding.clone();
+            hypo.push(req.clone());
+            let cost = self.calc_cost(&hypo)
+                + self.cache_load_cost(ctx.residency_for(w), ctx.template_bytes);
+            if cost < best_cost {
+                best_cost = cost;
+                best = w;
+            }
+        }
+        (best, best_cost)
+    }
+
     /// Cache-loading term of Algorithm 2 for one candidate worker:
     /// nothing when host-resident, one tier promotion (load model over
     /// the template's bytes) when spilled, and a full registration trace
@@ -215,15 +238,47 @@ impl Scheduler for MaskAware {
     }
 
     fn pick(&mut self, req: &Outstanding, book: &Book, ctx: &RouteCtx) -> usize {
+        self.best_completion(req, book, ctx).0
+    }
+}
+
+/// Class-aware routing (QoS tentpole part 4): latency-sensitive classes
+/// route like [`MaskAware`] — to the worker with the best estimated
+/// completion time, cache penalty included — while `Batch` requests go to
+/// the *cheapest* worker: first avoid cache loads (don't spend copy
+/// bandwidth on bulk work), then the least marginal backlog cost. Bulk
+/// traffic thus soaks up leftover capacity instead of competing with
+/// interactive edits for the fastest replicas.
+pub struct QosAware {
+    inner: MaskAware,
+}
+
+impl QosAware {
+    pub fn new(cfg: ModelConfig, lat: LatencyModel, mode: CacheMode, max_batch: usize) -> QosAware {
+        QosAware { inner: MaskAware::new(cfg, lat, mode, max_batch) }
+    }
+}
+
+impl Scheduler for QosAware {
+    fn name(&self) -> &'static str {
+        "qos-aware"
+    }
+
+    fn pick(&mut self, req: &Outstanding, book: &Book, ctx: &RouteCtx) -> usize {
+        if req.priority != Priority::Batch {
+            return self.inner.pick(req, book, ctx);
+        }
         let mut best = 0;
-        let mut best_cost = f64::INFINITY;
+        let mut best_key = (f64::INFINITY, f64::INFINITY);
         for (w, outstanding) in book.iter().enumerate() {
+            let penalty = self
+                .inner
+                .cache_load_cost(ctx.residency_for(w), ctx.template_bytes);
             let mut hypo = outstanding.clone();
             hypo.push(req.clone());
-            let cost = self.calc_cost(&hypo)
-                + self.cache_load_cost(ctx.residency_for(w), ctx.template_bytes);
-            if cost < best_cost {
-                best_cost = cost;
+            let key = (penalty, self.inner.calc_cost(&hypo));
+            if key < best_key {
+                best_key = key;
                 best = w;
             }
         }
@@ -250,13 +305,25 @@ pub fn by_name(
             mode,
             max_batch,
         ))),
+        "qos-aware" => Some(Box::new(QosAware::new(
+            cfg.clone(),
+            lat.clone(),
+            mode,
+            max_batch,
+        ))),
         _ => None,
     }
 }
 
 /// All routing policies, in bench/report order.
-pub const POLICY_NAMES: [&str; 5] =
-    ["round-robin", "request-lb", "token-lb", "cache-aware", "mask-aware"];
+pub const POLICY_NAMES: [&str; 6] = [
+    "round-robin",
+    "request-lb",
+    "token-lb",
+    "cache-aware",
+    "mask-aware",
+    "qos-aware",
+];
 
 #[cfg(test)]
 mod tests {
@@ -280,7 +347,16 @@ mod tests {
     }
 
     fn o(id: u64, masked: usize) -> Outstanding {
-        Outstanding { id, masked_tokens: masked, remaining_steps: 8 }
+        Outstanding {
+            id,
+            masked_tokens: masked,
+            remaining_steps: 8,
+            priority: Priority::Standard,
+        }
+    }
+
+    fn o_class(id: u64, masked: usize, priority: Priority) -> Outstanding {
+        Outstanding { priority, ..o(id, masked) }
     }
 
     fn uniform() -> RouteCtx {
@@ -408,6 +484,42 @@ mod tests {
     fn empty_backlog_costs_zero() {
         let s = MaskAware::new(cfg(), LatencyModel::nominal(1e9, 1e8), CacheMode::CacheY, 8);
         assert_eq!(s.calc_cost(&[]), 0.0);
+    }
+
+    #[test]
+    fn qos_aware_routes_interactive_to_best_completion() {
+        // same scenario as mask_aware_sees_through_request_counts: for a
+        // latency-sensitive class, qos-aware must behave like mask-aware
+        let mut s = QosAware::new(cfg(), LatencyModel::nominal(1e9, 1e8), CacheMode::CacheY, 8);
+        let book = vec![vec![o(1, 2), o(2, 2)], vec![o(3, 64)]];
+        assert_eq!(s.pick(&o_class(9, 2, Priority::Interactive), &book, &uniform()), 0);
+        assert_eq!(s.pick(&o_class(9, 2, Priority::Standard), &book, &uniform()), 0);
+    }
+
+    #[test]
+    fn qos_aware_routes_batch_to_cheapest_worker() {
+        let mut s = QosAware::new(cfg(), LatencyModel::nominal(1e9, 1e8), CacheMode::CacheY, 8);
+        // worker 0 holds the template hot but has a deep backlog; worker 1
+        // is idle but cold (would pay a full registration trace)
+        let busy: Vec<Outstanding> = (0..16).map(|i| o(i, 64)).collect();
+        let book = vec![busy, vec![]];
+        let ctx = RouteCtx {
+            residency: vec![Residency::Host, Residency::Absent],
+            template_bytes: 8 << 20,
+        };
+        // batch avoids the cache load: it has no latency target, so the
+        // cheapest (no-penalty) worker wins despite the backlog
+        assert_eq!(s.pick(&o_class(9, 4, Priority::Batch), &book, &ctx), 0);
+        // interactive pays for latency instead: the idle worker's
+        // registration cost is smaller than the monster backlog
+        assert_eq!(s.pick(&o_class(9, 4, Priority::Interactive), &book, &ctx), 1);
+        // with equal (absent) residency everywhere, batch falls back to
+        // the least marginal backlog cost
+        let ctx = RouteCtx {
+            residency: vec![Residency::Absent, Residency::Absent],
+            template_bytes: 8 << 20,
+        };
+        assert_eq!(s.pick(&o_class(9, 4, Priority::Batch), &book, &ctx), 1);
     }
 
     #[test]

@@ -4,22 +4,34 @@
 //! # API v1 — handle-based request lifecycle
 //!
 //! - `POST /v1/edits` — async submit. Body
-//!   `{"template": "tpl-0", "mask_ratio": 0.15, "prompt_seed": 7}`;
-//!   validates via [`EditRequestBuilder`], routes through the cluster
-//!   scheduler, and returns `202 {"id", "status": "queued",
-//!   "status_url", "worker"}` immediately.
+//!   `{"template": "tpl-0", "mask_ratio": 0.15, "prompt_seed": 7,
+//!   "priority": "interactive" | "standard" | "batch",
+//!   "deadline_ms": 2000}` (priority defaults to `standard`, deadline is
+//!   optional); validates via [`EditRequestBuilder`], passes the QoS
+//!   admission gate (over capacity → `429` with a `Retry-After` header
+//!   and `retry_after_ms` body field; infeasible deadline → `422`),
+//!   routes through the cluster scheduler, and returns `202 {"id",
+//!   "status": "queued", "status_url", "worker"}` immediately.
 //! - `GET /v1/edits/{id}` — poll one request:
 //!   `{"status": "queued" | "running" | "done" | "cancelled" | "failed"}`
+//!   with the submitted `priority` (+ `deadline_ms` when set) echoed,
 //!   plus, once done, the full per-request `timing` decomposition
 //!   (queue / inference / e2e / interruptions / steps_computed) and
-//!   decoded-image stats.
+//!   decoded-image stats. A deadline that expires while queued resolves
+//!   the request to `failed` with `error_kind: "deadline_exceeded"`.
 //! - `DELETE /v1/edits/{id}` — cancel while still queued
-//!   (`200 "cancelled"`); on an already-finished request it evicts the
+//!   (`200 "cancelled"`); requests the worker holds outside its queue
+//!   (mid-preprocess, parked on a registering template, or preempted)
+//!   get a best-effort cancel mark the engine resolves at its next step
+//!   boundary (`202 "cancelling"` — poll for the terminal state; a
+//!   request that wins the race into the running batch completes
+//!   normally); on an already-finished request it evicts the
 //!   retained result instead (`200 "evicted"`, freeing serve-mode
-//!   memory); `409` while running, `404` for unknown ids.
-//! - `GET /v1/stats` — uptime, completions, per-worker queue depths and
-//!   cache-tier stats (host hits / disk promotions / misses / evictions /
-//!   resident bytes).
+//!   memory); `409` while running un-preempted, `404` for unknown ids.
+//! - `GET /v1/stats` — uptime, completions, per-worker queue depths
+//!   (broken out per class with oldest-wait ages) and cache-tier stats
+//!   (host hits / disk promotions / misses / evictions / resident
+//!   bytes).
 //! - `POST /edit` — synchronous compatibility wrapper: submit + wait on
 //!   the request's own ticket (no cross-request rendezvous), returning
 //!   timing + image stats.
@@ -71,6 +83,7 @@ use anyhow::{Context, Result};
 
 use crate::cluster::{CancelOutcome, Cluster, RequestState, TemplateStatus};
 use crate::engine::request::{EditError, EditRequest, EditRequestBuilder, EditResponse};
+use crate::qos::Priority;
 use crate::templates::{RegisterAdmission, RetireOutcome};
 use crate::util::json::Json;
 use crate::util::tensor::Tensor;
@@ -121,7 +134,13 @@ impl HttpServer {
             ),
             ReadOutcome::Request { method, path, body } => self.route(&method, &path, &body),
         };
-        write_response(&mut stream, status, &reply.to_string())
+        // 429 bodies carry the admission estimate; surface it as the
+        // standard Retry-After header too (whole seconds, min 1)
+        let retry_after = reply
+            .at("retry_after_ms")
+            .as_f64()
+            .map(|ms| ((ms / 1e3).ceil() as u64).max(1));
+        write_response(&mut stream, status, &reply.to_string(), retry_after)
     }
 
     /// Route a request (separated from IO for unit testing).
@@ -158,24 +177,39 @@ impl HttpServer {
     }
 
     /// Parse + validate a submit body into an `EditRequest`. The id is
-    /// allocated only after validation, so rejected submissions never
-    /// burn ids.
+    /// allocated only after local validation, so malformed submissions
+    /// never burn ids (template/admission rejects in `submit_guarded`
+    /// happen after allocation — the counter is monotonic, gaps are fine).
     fn build_request(&self, body: &str) -> Result<EditRequest, (u16, Json)> {
         let j = Json::parse(body)
             .map_err(|e| (400, error_obj(&format!("invalid JSON body: {e}"))))?;
         let template = j.at("template").as_str().unwrap_or("tpl-0").to_string();
         let ratio = j.at("mask_ratio").as_f64().unwrap_or(0.15);
         let seed = j.at("prompt_seed").as_f64().unwrap_or(0.0) as u64;
-        // typed template admission: unknown -> 404, retired -> 410, failed
-        // registration -> 500; still-registering templates are accepted
-        // (the edit queues at the worker until the template is ready)
-        self.cluster
-            .check_template(&template)
-            .map_err(|e| edit_error_reply(&e))?;
+        let priority = match j.at("priority").as_str() {
+            None => Priority::default(),
+            Some(s) => Priority::parse(s).ok_or_else(|| {
+                (
+                    400,
+                    error_obj(&format!(
+                        "unknown priority {s:?} (interactive | standard | batch)"
+                    )),
+                )
+            })?,
+        };
+        let deadline_ms = j.at("deadline_ms").as_f64().map(|ms| ms.max(0.0) as u64);
+        // template admission (unknown -> 404, retired -> 410, failed
+        // registration -> 500; still-registering accepted) happens in
+        // `submit_guarded`, together with the QoS admission gate
         let hw = self.cluster.model.latent_hw;
-        let mut req = EditRequestBuilder::new(0)
+        let mut builder = EditRequestBuilder::new(0)
             .template(template)
             .prompt_seed(seed)
+            .priority(priority);
+        if let Some(ms) = deadline_ms {
+            builder = builder.deadline_ms(ms);
+        }
+        let mut req = builder
             .synth_mask(hw, ratio)
             .and_then(|b| b.expect_tokens(hw * hw).build())
             .map_err(|e| edit_error_reply(&e))?;
@@ -189,16 +223,25 @@ impl HttpServer {
             Ok(r) => r,
             Err(reply) => return reply,
         };
-        let ticket = self.cluster.submit(req);
+        let ticket = match self.cluster.submit_guarded(req) {
+            Ok(t) => t,
+            Err(e) => return edit_error_reply(&e),
+        };
         let outcome = ticket.wait(SYNC_EDIT_TIMEOUT);
         // same meaning as the polling endpoint's field: wall time since
         // submission (read before the entry is dropped)
-        let age = ticket.status().map(|s| s.age_secs).unwrap_or(0.0);
+        let (age, deadline_ms) = ticket
+            .status()
+            .map(|s| (s.age_secs, s.deadline_ms))
+            .unwrap_or((0.0, None));
         // the result is consumed right here — release the registry entry
         // (no-op on a Timeout, whose entry is still live)
         self.cluster.evict(ticket.id());
         match outcome {
-            Ok(resp) => (200, done_body(ticket.id(), ticket.worker(), age, &resp)),
+            Ok(resp) => (
+                200,
+                done_body(ticket.id(), ticket.worker(), age, deadline_ms, &resp),
+            ),
             Err(e) => edit_error_reply(&e),
         }
     }
@@ -209,7 +252,10 @@ impl HttpServer {
             Ok(r) => r,
             Err(reply) => return reply,
         };
-        let ticket = self.cluster.submit(req);
+        let ticket = match self.cluster.submit_guarded(req) {
+            Ok(t) => t,
+            Err(e) => return edit_error_reply(&e),
+        };
         (
             202,
             Json::obj(vec![
@@ -229,23 +275,24 @@ impl HttpServer {
                 Some(st) => {
                     let reply = match &st.state {
                         RequestState::Done(resp) => {
-                            done_body(id, st.worker, st.age_secs, resp)
+                            done_body(id, st.worker, st.age_secs, st.deadline_ms, resp)
                         }
                         RequestState::Failed(err) => {
                             let mut pairs =
                                 status_pairs(id, st.state.label(), st.worker, st.age_secs);
+                            push_qos_pairs(&mut pairs, st.priority, st.deadline_ms);
                             if *err != EditError::Cancelled {
                                 pairs.push(("error", Json::str(err.to_string())));
                                 pairs.push(("error_kind", Json::str(err.kind())));
                             }
                             Json::obj(pairs)
                         }
-                        _ => Json::obj(status_pairs(
-                            id,
-                            st.state.label(),
-                            st.worker,
-                            st.age_secs,
-                        )),
+                        _ => {
+                            let mut pairs =
+                                status_pairs(id, st.state.label(), st.worker, st.age_secs);
+                            push_qos_pairs(&mut pairs, st.priority, st.deadline_ms);
+                            Json::obj(pairs)
+                        }
                     };
                     (200, reply)
                 }
@@ -256,6 +303,16 @@ impl HttpServer {
                     Json::obj(vec![
                         ("id", Json::num(id as f64)),
                         ("status", Json::str("cancelled")),
+                    ]),
+                ),
+                // the worker holds it parked/preempted/mid-preprocess: a
+                // cancel mark resolves it at the next step boundary
+                CancelOutcome::Cancelling => (
+                    202,
+                    Json::obj(vec![
+                        ("id", Json::num(id as f64)),
+                        ("status", Json::str("cancelling")),
+                        ("status_url", Json::str(format!("/v1/edits/{id}"))),
                     ]),
                 ),
                 // terminal entries are evicted instead (result already
@@ -339,8 +396,8 @@ impl HttpServer {
         }
     }
 
-    /// `GET /v1/stats`: per-worker queue depths + cache-tier stats +
-    /// completion counters.
+    /// `GET /v1/stats`: per-worker queue depths (per class) + cache-tier
+    /// stats + completion counters.
     fn stats_v1(&self) -> (u16, Json) {
         let caches = self.cluster.cache_stats();
         let depths = self
@@ -349,10 +406,24 @@ impl HttpServer {
             .into_iter()
             .zip(caches)
             .map(|(d, c)| {
+                let classes = Priority::ALL
+                    .iter()
+                    .map(|p| {
+                        let cd = d.classes[p.rank()];
+                        (
+                            p.label(),
+                            Json::obj(vec![
+                                ("queued", Json::num(cd.queued as f64)),
+                                ("oldest_wait_secs", Json::num(cd.oldest_wait_secs)),
+                            ]),
+                        )
+                    })
+                    .collect();
                 Json::obj(vec![
                     ("worker", Json::num(d.worker as f64)),
                     ("queued", Json::num(d.queued as f64)),
                     ("outstanding", Json::num(d.outstanding as f64)),
+                    ("classes", Json::obj(classes)),
                     (
                         "cache",
                         Json::obj(vec![
@@ -435,10 +506,25 @@ fn status_pairs<'a>(
     ]
 }
 
+/// Echo the submitted QoS fields on status bodies.
+fn push_qos_pairs(pairs: &mut Vec<(&str, Json)>, priority: Priority, deadline_ms: Option<u64>) {
+    pairs.push(("priority", Json::str(priority.label())));
+    if let Some(ms) = deadline_ms {
+        pairs.push(("deadline_ms", Json::num(ms as f64)));
+    }
+}
+
 /// Completed-request body: status + timing decomposition + image stats.
-fn done_body(id: u64, worker: usize, age_secs: f64, resp: &EditResponse) -> Json {
+fn done_body(
+    id: u64,
+    worker: usize,
+    age_secs: f64,
+    deadline_ms: Option<u64>,
+    resp: &EditResponse,
+) -> Json {
     let t = &resp.timing;
     let mut pairs = status_pairs(id, "done", worker, age_secs);
+    push_qos_pairs(&mut pairs, resp.priority, deadline_ms);
     pairs.push(("template", Json::str(resp.template_id.clone())));
     pairs.push(("mask_ratio", Json::num(resp.mask_ratio)));
     pairs.push((
@@ -480,15 +566,18 @@ fn error_obj(msg: &str) -> Json {
     Json::obj(vec![("error", Json::str(msg))])
 }
 
-/// Map a typed [`EditError`] to its HTTP reply.
+/// Map a typed [`EditError`] to its HTTP reply. Overload sheds carry the
+/// admission estimate so clients (and the `Retry-After` header) know when
+/// to come back.
 fn edit_error_reply(e: &EditError) -> (u16, Json) {
-    (
-        e.http_status(),
-        Json::obj(vec![
-            ("error", Json::str(e.to_string())),
-            ("error_kind", Json::str(e.kind())),
-        ]),
-    )
+    let mut pairs = vec![
+        ("error", Json::str(e.to_string())),
+        ("error_kind", Json::str(e.kind())),
+    ];
+    if let EditError::Overloaded { retry_after_ms } = e {
+        pairs.push(("retry_after_ms", Json::num(*retry_after_ms as f64)));
+    }
+    (e.http_status(), Json::obj(pairs))
 }
 
 enum ReadOutcome {
@@ -533,7 +622,12 @@ fn read_request(stream: &mut TcpStream) -> Result<ReadOutcome> {
     })
 }
 
-fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &str,
+    retry_after_secs: Option<u64>,
+) -> Result<()> {
     let reason = match status {
         200 => "OK",
         202 => "Accepted",
@@ -543,13 +637,18 @@ fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result<()>
         409 => "Conflict",
         410 => "Gone",
         413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
         503 => "Service Unavailable",
         504 => "Gateway Timeout",
         _ => "Internal Server Error",
     };
+    let retry = retry_after_secs
+        .map(|s| format!("Retry-After: {s}\r\n"))
+        .unwrap_or_default();
     write!(
         stream,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{retry}Connection: close\r\n\r\n{body}",
         body.len()
     )?;
     stream.flush()?;

@@ -5,12 +5,20 @@
 //! mean 0.35; all strongly right-skewed). Arrivals are Poisson (§6.1).
 //! Template selection is heavily skewed (the production trace reuses 970
 //! templates ~35 000 times each), modelled with a Zipf-like draw.
+//! Mixed-priority traffic comes from [`ClassMix`] (`--class-mix
+//! 0.2,0.5,0.3`): class draws use their own RNG stream, so changing the
+//! mix never changes arrivals, masks, or prompt seeds.
 
 use std::time::Duration;
 
 use crate::model::MaskSpec;
+use crate::qos::{Priority, CLASS_COUNT};
 use crate::util::json::Json;
 use crate::util::rng::Pcg;
+
+/// RNG stream tag for class draws: priorities come from their own stream
+/// so changing the mix never perturbs arrivals, masks, or seeds.
+const CLASS_STREAM: u64 = 0x636c_6173; // "clas"
 
 /// Mask-ratio distribution family (paper Fig. 3).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -73,6 +81,53 @@ impl MaskDist {
     }
 }
 
+/// Request-class mix: weights over (interactive, standard, batch),
+/// e.g. `--class-mix 0.2,0.5,0.3`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassMix {
+    pub weights: [f64; CLASS_COUNT],
+}
+
+impl ClassMix {
+    /// Everything `Standard` (the pre-QoS behaviour).
+    pub fn all_standard() -> ClassMix {
+        ClassMix { weights: [0.0, 1.0, 0.0] }
+    }
+
+    /// Parse `"0.2,0.5,0.3"` (interactive, standard, batch). Weights are
+    /// relative (they need not sum to 1); negatives and all-zero reject.
+    pub fn parse(s: &str) -> Option<ClassMix> {
+        let parts: Vec<f64> = s
+            .split(',')
+            .map(|p| p.trim().parse::<f64>().ok())
+            .collect::<Option<Vec<f64>>>()?;
+        if parts.len() != CLASS_COUNT {
+            return None;
+        }
+        let weights = [parts[0], parts[1], parts[2]];
+        if weights.iter().any(|w| !w.is_finite() || *w < 0.0) {
+            return None;
+        }
+        if weights.iter().sum::<f64>() <= 0.0 {
+            return None;
+        }
+        Some(ClassMix { weights })
+    }
+
+    /// Draw a class proportional to the weights.
+    pub fn sample(&self, rng: &mut Pcg) -> Priority {
+        let total: f64 = self.weights.iter().sum();
+        let mut x = rng.f64() * total;
+        for p in Priority::ALL {
+            x -= self.weights[p.rank()];
+            if x < 0.0 {
+                return p;
+            }
+        }
+        Priority::Batch
+    }
+}
+
 /// One generated request event.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceEvent {
@@ -82,6 +137,10 @@ pub struct TraceEvent {
     pub template: String,
     pub mask_ratio: f64,
     pub prompt_seed: u64,
+    /// Request class (QoS; `Standard` for legacy traces).
+    pub priority: Priority,
+    /// Optional completion deadline, ms after submission.
+    pub deadline_ms: Option<u64>,
 }
 
 impl TraceEvent {
@@ -99,17 +158,43 @@ pub struct TraceGen {
     pub dist: MaskDist,
     pub templates: usize,
     pub seed: u64,
+    /// Request-class mix (all-`Standard` by default).
+    pub mix: ClassMix,
+    /// Per-class deadline defaults, ms (None = no deadline), indexed by
+    /// [`Priority::rank`].
+    pub deadlines_ms: [Option<u64>; CLASS_COUNT],
 }
 
 impl TraceGen {
     pub fn new(rps: f64, dist: MaskDist, templates: usize, seed: u64) -> TraceGen {
         assert!(rps > 0.0 && templates > 0);
-        TraceGen { rps, dist, templates, seed }
+        TraceGen {
+            rps,
+            dist,
+            templates,
+            seed,
+            mix: ClassMix::all_standard(),
+            deadlines_ms: [None; CLASS_COUNT],
+        }
+    }
+
+    /// Mixed-priority traffic (satellite: `--class-mix 0.2,0.5,0.3`).
+    pub fn with_mix(mut self, mix: ClassMix) -> TraceGen {
+        self.mix = mix;
+        self
+    }
+
+    /// Attach per-class deadlines to generated events.
+    pub fn with_deadlines(mut self, deadlines_ms: [Option<u64>; CLASS_COUNT]) -> TraceGen {
+        self.deadlines_ms = deadlines_ms;
+        self
     }
 
     /// Generate `count` events with Poisson inter-arrivals.
     pub fn generate(&self, count: usize) -> Vec<TraceEvent> {
         let mut rng = Pcg::new(self.seed);
+        // separate stream: the mix never perturbs arrivals/masks/seeds
+        let mut crng = Pcg::with_stream(self.seed, CLASS_STREAM);
         let mut t = 0.0;
         (0..count)
             .map(|i| {
@@ -117,12 +202,15 @@ impl TraceGen {
                 // Zipf-ish template popularity: template 0 is hottest
                 let z = rng.f64();
                 let tpl = ((self.templates as f64) * z * z) as usize % self.templates;
+                let priority = self.mix.sample(&mut crng);
                 TraceEvent {
                     id: i as u64,
                     at: t,
                     template: format!("tpl-{tpl}"),
                     mask_ratio: self.dist.sample(&mut rng),
                     prompt_seed: rng.next_u64() >> 12, // 52 bits: JSON f64-exact
+                    priority,
+                    deadline_ms: self.deadlines_ms[priority.rank()],
                 }
             })
             .collect()
@@ -152,14 +240,18 @@ pub fn replay<F: FnMut(&TraceEvent)>(events: &[TraceEvent], mut submit: F) {
 pub fn to_jsonl(events: &[TraceEvent]) -> String {
     let mut out = String::new();
     for e in events {
-        let j = Json::obj(vec![
+        let mut pairs = vec![
             ("id", Json::num(e.id as f64)),
             ("at", Json::num(e.at)),
             ("template", Json::str(e.template.clone())),
             ("mask_ratio", Json::num(e.mask_ratio)),
             ("prompt_seed", Json::num(e.prompt_seed as f64)),
-        ]);
-        out.push_str(&j.to_string());
+            ("priority", Json::str(e.priority.label())),
+        ];
+        if let Some(ms) = e.deadline_ms {
+            pairs.push(("deadline_ms", Json::num(ms as f64)));
+        }
+        out.push_str(&Json::obj(pairs).to_string());
         out.push('\n');
     }
     out
@@ -176,6 +268,13 @@ pub fn from_jsonl(text: &str) -> anyhow::Result<Vec<TraceEvent>> {
                 template: j.at("template").as_str().unwrap_or("tpl-0").to_string(),
                 mask_ratio: j.at("mask_ratio").as_f64().unwrap_or(0.1),
                 prompt_seed: j.at("prompt_seed").as_f64().unwrap_or(0.0) as u64,
+                // legacy traces (no class field) default to Standard
+                priority: j
+                    .at("priority")
+                    .as_str()
+                    .and_then(Priority::parse)
+                    .unwrap_or_default(),
+                deadline_ms: j.at("deadline_ms").as_f64().map(|ms| ms as u64),
             })
         })
         .collect()
@@ -246,11 +345,66 @@ mod tests {
 
     #[test]
     fn jsonl_round_trip() {
-        let g = TraceGen::new(2.0, MaskDist::PublicTrace, 4, 5);
+        let g = TraceGen::new(2.0, MaskDist::PublicTrace, 4, 5)
+            .with_mix(ClassMix::parse("0.2,0.5,0.3").unwrap())
+            .with_deadlines([Some(1_500), None, None]);
         let ev = g.generate(50);
         let text = to_jsonl(&ev);
         let back = from_jsonl(&text).unwrap();
         assert_eq!(ev, back);
+        // legacy lines without a class field default to Standard
+        let legacy = r#"{"id":1,"at":0.5,"template":"tpl-0","mask_ratio":0.2,"prompt_seed":9}"#;
+        let back = from_jsonl(legacy).unwrap();
+        assert_eq!(back[0].priority, Priority::Standard);
+        assert_eq!(back[0].deadline_ms, None);
+    }
+
+    #[test]
+    fn class_mix_parses_and_samples_proportionally() {
+        assert_eq!(ClassMix::parse("nope"), None);
+        assert_eq!(ClassMix::parse("0.2,0.5"), None);
+        assert_eq!(ClassMix::parse("-0.1,0.5,0.6"), None);
+        assert_eq!(ClassMix::parse("0,0,0"), None);
+        assert_eq!(ClassMix::parse("nan,1,1"), None, "NaN weights must reject");
+        assert_eq!(ClassMix::parse("inf,1,1"), None);
+        let mix = ClassMix::parse("0.2,0.5,0.3").unwrap();
+        let mut rng = Pcg::new(11);
+        let mut counts = [0usize; CLASS_COUNT];
+        let n = 20_000;
+        for _ in 0..n {
+            counts[mix.sample(&mut rng).rank()] += 1;
+        }
+        for (p, want) in Priority::ALL.iter().zip([0.2, 0.5, 0.3]) {
+            let got = counts[p.rank()] as f64 / n as f64;
+            assert!((got - want).abs() < 0.02, "{p:?}: got {got}, want {want}");
+        }
+        // degenerate mix: everything is standard
+        let std_only = ClassMix::all_standard();
+        for _ in 0..100 {
+            assert_eq!(std_only.sample(&mut rng), Priority::Standard);
+        }
+    }
+
+    #[test]
+    fn class_mix_does_not_perturb_arrivals_or_masks() {
+        let base = TraceGen::new(2.0, MaskDist::Production, 4, 7).generate(200);
+        let mixed = TraceGen::new(2.0, MaskDist::Production, 4, 7)
+            .with_mix(ClassMix::parse("1,1,1").unwrap())
+            .generate(200);
+        for (a, b) in base.iter().zip(&mixed) {
+            assert_eq!(a.at, b.at, "arrivals must be identical across mixes");
+            assert_eq!(a.mask_ratio, b.mask_ratio);
+            assert_eq!(a.prompt_seed, b.prompt_seed);
+            assert_eq!(a.template, b.template);
+        }
+        // and the mixed trace actually contains several classes
+        let interactive = mixed.iter().filter(|e| e.priority == Priority::Interactive);
+        assert!(interactive.count() > 0);
+        // class draws are seed-deterministic too
+        let again = TraceGen::new(2.0, MaskDist::Production, 4, 7)
+            .with_mix(ClassMix::parse("1,1,1").unwrap())
+            .generate(200);
+        assert_eq!(mixed, again);
     }
 
     #[test]
@@ -261,6 +415,8 @@ mod tests {
             template: "tpl-0".into(),
             mask_ratio: 0.2,
             prompt_seed: 99,
+            priority: Priority::Standard,
+            deadline_ms: None,
         };
         assert_eq!(e.mask(8), e.mask(8));
         let got = e.mask(8).ratio();

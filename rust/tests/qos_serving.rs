@@ -1,0 +1,366 @@
+//! Integration: the QoS subsystem end to end (requires `make artifacts`;
+//! tests skip silently otherwise) — step-boundary preemption resuming
+//! bit-identically, deadline expiry while queued, 429/`Retry-After`
+//! admission shedding, 422 infeasible deadlines, priority/deadline echo
+//! over HTTP, and cancellation reaching parked/preempted requests.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use instgenie::cache::LatencyModel;
+use instgenie::cluster::{CancelOutcome, Cluster, ClusterOpts, RequestState};
+use instgenie::config::{EngineConfig, SystemKind};
+use instgenie::engine::request::{EditError, EditRequest, EditRequestBuilder};
+use instgenie::qos::Priority;
+use instgenie::runtime::Manifest;
+use instgenie::scheduler;
+use instgenie::server::HttpServer;
+use instgenie::templates::RegisterAdmission;
+use instgenie::util::json::Json;
+
+/// Launch a 1-worker QoS cluster with slow denoise steps (forced cache
+/// loads over a tiny simulated bandwidth), so preemption/expiry windows
+/// are wide and deterministic.
+fn launch_slow(tweak: impl FnOnce(&mut EngineConfig)) -> Option<Cluster> {
+    let manifest = Manifest::load("artifacts").ok()?;
+    let mcfg = manifest.model("sd21m").ok()?.config.clone();
+    let mut engine = EngineConfig::for_system(SystemKind::InstGenIE);
+    engine.prepost_cpu_us = 100;
+    engine.max_batch = 1;
+    // every block loads its cached rows over a 2 MiB/s copy stream:
+    // ~tens of ms per denoise step, so a request is in flight for
+    // hundreds of ms — a wide, reliable step-boundary window
+    engine.force_all_cached = true;
+    engine.sim_bandwidth = 2.0 * 1024.0 * 1024.0;
+    tweak(&mut engine);
+    let lat = LatencyModel::load_or_nominal("artifacts", "sd21m");
+    let sched =
+        scheduler::by_name("qos-aware", &mcfg, &lat, engine.cache_mode, engine.max_batch)
+            .expect("scheduler");
+    Some(
+        Cluster::launch(
+            ClusterOpts {
+                workers: 1,
+                engine,
+                model: "sd21m".into(),
+                artifact_dir: "artifacts".into(),
+                templates: vec!["tpl-0".into()],
+                lat_model: lat,
+                warmup: false,
+            },
+            sched,
+        )
+        .expect("launch"),
+    )
+}
+
+fn edit(
+    cluster: &Cluster,
+    id: u64,
+    seed: u64,
+    ratio: f64,
+    priority: Priority,
+) -> EditRequest {
+    let hw = cluster.model.latent_hw;
+    EditRequestBuilder::new(id)
+        .template("tpl-0")
+        .prompt_seed(seed)
+        .priority(priority)
+        .synth_mask(hw, ratio)
+        .expect("ratio")
+        .build()
+        .expect("valid request")
+}
+
+/// Block until the request is in the running batch.
+fn await_running(cluster: &Cluster, id: u64) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        match cluster.status(id).map(|s| s.state) {
+            Some(RequestState::Running) => return,
+            Some(RequestState::Queued) => {}
+            other => panic!("request {id} left the queue unexpectedly: {other:?}"),
+        }
+        assert!(Instant::now() < deadline, "request {id} never started");
+        std::thread::sleep(Duration::from_micros(200));
+    }
+}
+
+#[test]
+fn preempted_member_resumes_bit_identical_to_solo_run() {
+    // solo reference: the same batch-class request, never preempted
+    let Some(cluster) = launch_slow(|_| {}) else { return };
+    let solo = cluster
+        .submit_checked(edit(&cluster, 1, 77, 0.4, Priority::Batch))
+        .expect("submit");
+    let solo_resp = solo.wait(Duration::from_secs(120)).expect("solo run");
+    cluster.shutdown().expect("shutdown");
+
+    // preempted run: identical request, preempted by an interactive edit
+    let Some(cluster) = launch_slow(|_| {}) else { return };
+    let batch = cluster
+        .submit_checked(edit(&cluster, 2, 77, 0.4, Priority::Batch))
+        .expect("submit");
+    await_running(&cluster, batch.id());
+    let inter = cluster
+        .submit_checked(edit(&cluster, 3, 5, 0.2, Priority::Interactive))
+        .expect("submit");
+    let inter_resp = inter.wait(Duration::from_secs(120)).expect("interactive");
+    let batch_resp = batch.wait(Duration::from_secs(120)).expect("batch");
+    cluster.shutdown().expect("shutdown");
+
+    // the interactive request preempted the running batch member at a
+    // step boundary (batch=1: there is no other way for it to start)
+    assert!(
+        batch_resp.timing.interruptions >= 1,
+        "batch member was never preempted"
+    );
+    assert!(
+        inter_resp.timing.e2e < batch_resp.timing.e2e,
+        "interactive ({:.3}s) must finish before the preempted batch ({:.3}s)",
+        inter_resp.timing.e2e,
+        batch_resp.timing.e2e
+    );
+    // park + resume is numerically invisible: bit-identical output
+    assert_eq!(solo_resp.latent.data(), batch_resp.latent.data());
+    assert_eq!(solo_resp.image.data(), batch_resp.image.data());
+    assert_eq!(solo_resp.timing.steps_computed, batch_resp.timing.steps_computed);
+}
+
+#[test]
+fn deadline_expires_while_queued_without_wasting_steps() {
+    let Some(cluster) = launch_slow(|_| {}) else { return };
+    // blocker occupies the single batch slot for hundreds of ms
+    let blocker = cluster
+        .submit_checked(edit(&cluster, 10, 3, 0.4, Priority::Standard))
+        .expect("submit");
+    await_running(&cluster, blocker.id());
+    // the victim's 30 ms deadline expires while it waits in the queue
+    let mut victim_req = edit(&cluster, 11, 4, 0.2, Priority::Standard);
+    victim_req.deadline = Some(victim_req.arrival + Duration::from_millis(30));
+    let victim = cluster.submit_checked(victim_req).expect("submit");
+    let err = victim.wait(Duration::from_secs(60)).expect_err("must expire");
+    assert_eq!(err, EditError::DeadlineExceeded);
+    assert_eq!(victim.status().unwrap().state.label(), "failed");
+    // the expiry spent no denoise steps: the blocker still completes
+    let resp = blocker.wait(Duration::from_secs(120)).expect("blocker");
+    assert_eq!(resp.id, 10);
+    cluster.shutdown().expect("shutdown");
+}
+
+#[test]
+fn cancel_reaches_parked_requests() {
+    let Some(cluster) = launch_slow(|_| {}) else { return };
+    // a registration that never completes: submissions park at the worker
+    assert!(matches!(
+        cluster.template_registry().begin_register("tpl-parked"),
+        RegisterAdmission::Started { .. }
+    ));
+    let hw = cluster.model.latent_hw;
+    let req = EditRequestBuilder::new(20)
+        .template("tpl-parked")
+        .prompt_seed(9)
+        .priority(Priority::Standard)
+        .synth_mask(hw, 0.2)
+        .unwrap()
+        .build()
+        .unwrap();
+    let ticket = cluster.submit_checked(req).expect("registering accepts");
+    // wait until the worker pops it off the queue into the parked set
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while cluster.queue_depths()[0].queued > 0 {
+        assert!(Instant::now() < deadline, "request never left the queue");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // DELETE on a parked request: cancel mark, resolved at the next
+    // engine-loop boundary (Cancelled if we raced the pop instead)
+    let outcome = cluster.cancel(ticket.id());
+    assert!(
+        matches!(outcome, CancelOutcome::Cancelling | CancelOutcome::Cancelled),
+        "parked requests must be cancellable, got {outcome:?}"
+    );
+    let err = ticket.wait(Duration::from_secs(10)).expect_err("cancelled");
+    assert_eq!(err, EditError::Cancelled);
+    assert_eq!(ticket.status().unwrap().state.label(), "cancelled");
+    cluster.shutdown().expect("shutdown");
+}
+
+#[test]
+fn cancel_reaches_preempted_members() {
+    let Some(cluster) = launch_slow(|_| {}) else { return };
+    let batch = cluster
+        .submit_checked(edit(&cluster, 30, 8, 0.4, Priority::Batch))
+        .expect("submit");
+    await_running(&cluster, batch.id());
+    let inter = cluster
+        .submit_checked(edit(&cluster, 31, 6, 0.2, Priority::Interactive))
+        .expect("submit");
+    // once the interactive request preempts the batch member, the batch
+    // id becomes held — and cancellable — while still nominally running
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let outcome = loop {
+        match cluster.cancel(batch.id()) {
+            CancelOutcome::TooLate => {
+                assert!(
+                    !batch
+                        .status()
+                        .map(|s| s.state.is_terminal())
+                        .unwrap_or(true),
+                    "batch finished before it could be preempted"
+                );
+                assert!(Instant::now() < deadline, "preemption never happened");
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            other => break other,
+        }
+    };
+    assert_eq!(outcome, CancelOutcome::Cancelling);
+    let err = batch.wait(Duration::from_secs(10)).expect_err("cancelled");
+    assert_eq!(err, EditError::Cancelled);
+    // the preempted slot was released: the interactive edit completes
+    let resp = inter.wait(Duration::from_secs(120)).expect("interactive");
+    assert_eq!(resp.id, 31);
+    cluster.shutdown().expect("shutdown");
+}
+
+// -- HTTP-level admission + echo ---------------------------------------------
+
+fn http(addr: &str, req: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(req.as_bytes()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn post(addr: &str, path: &str, body: &str) -> String {
+    http(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn body_json(resp: &str) -> Json {
+    Json::parse(resp.split("\r\n\r\n").nth(1).expect("body")).expect("json body")
+}
+
+fn serve(addr: &str, first_id: u64, tweak: impl FnOnce(&mut EngineConfig)) -> Option<Arc<HttpServer>> {
+    let manifest = Manifest::load("artifacts").ok()?;
+    let mcfg = manifest.model("sd21m").unwrap().config.clone();
+    let mut engine = EngineConfig::for_system(SystemKind::InstGenIE);
+    engine.prepost_cpu_us = 100;
+    tweak(&mut engine);
+    let lat = LatencyModel::load_or_nominal("artifacts", "sd21m");
+    let sched =
+        scheduler::by_name("qos-aware", &mcfg, &lat, engine.cache_mode, engine.max_batch)
+            .unwrap();
+    let cluster = Arc::new(
+        Cluster::launch(
+            ClusterOpts {
+                workers: 1,
+                engine,
+                model: "sd21m".into(),
+                artifact_dir: "artifacts".into(),
+                templates: vec!["tpl-0".into()],
+                lat_model: lat,
+                warmup: false,
+            },
+            sched,
+        )
+        .unwrap(),
+    );
+    let server = Arc::new(HttpServer::new(cluster, first_id));
+    {
+        let server = Arc::clone(&server);
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            let _ = server.serve(&addr);
+        });
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    Some(server)
+}
+
+#[test]
+fn overloaded_submissions_get_429_with_retry_after() {
+    // max_pending = 0: every submission is over capacity by definition
+    let Some(server) = serve("127.0.0.1:18931", 100, |e| e.qos.max_pending = 0) else {
+        return;
+    };
+    // route-level: typed error body with the retry estimate
+    let (code, body) = server.route("POST", "/v1/edits", r#"{"template": "tpl-0"}"#);
+    assert_eq!(code, 429, "{body}");
+    assert_eq!(body.at("error_kind").as_str(), Some("overloaded"));
+    assert!(body.at("retry_after_ms").as_f64().unwrap() > 0.0);
+    // socket-level: the standard Retry-After header is set
+    let resp = post("127.0.0.1:18931", "/v1/edits", r#"{"template": "tpl-0"}"#);
+    assert!(resp.starts_with("HTTP/1.1 429"), "{resp}");
+    assert!(resp.contains("\r\nRetry-After: "), "{resp}");
+    // the sync wrapper sheds identically
+    let resp = post("127.0.0.1:18931", "/edit", r#"{"template": "tpl-0"}"#);
+    assert!(resp.starts_with("HTTP/1.1 429"), "{resp}");
+}
+
+#[test]
+fn infeasible_deadlines_get_422_and_qos_fields_echo() {
+    let Some(server) = serve("127.0.0.1:18932", 200, |_| {}) else { return };
+    // a 1 ms deadline is infeasible against any real step estimate
+    let (code, body) = server.route(
+        "POST",
+        "/v1/edits",
+        r#"{"template": "tpl-0", "deadline_ms": 1}"#,
+    );
+    assert_eq!(code, 422, "{body}");
+    assert_eq!(body.at("error_kind").as_str(), Some("deadline_infeasible"));
+    // a zero deadline is rejected by the builder with the same kind
+    let (code, body) = server.route(
+        "POST",
+        "/v1/edits",
+        r#"{"template": "tpl-0", "deadline_ms": 0}"#,
+    );
+    assert_eq!(code, 422, "{body}");
+    // unknown classes are a 400
+    let (code, _) = server.route(
+        "POST",
+        "/v1/edits",
+        r#"{"template": "tpl-0", "priority": "vip"}"#,
+    );
+    assert_eq!(code, 400);
+    // a feasible submission echoes its class + deadline on every poll
+    let (code, body) = server.route(
+        "POST",
+        "/v1/edits",
+        r#"{"template": "tpl-0", "priority": "batch", "deadline_ms": 60000}"#,
+    );
+    assert_eq!(code, 202, "{body}");
+    let id = body.at("id").as_usize().expect("id");
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (code, st) = server.route("GET", &format!("/v1/edits/{id}"), "");
+        assert_eq!(code, 200);
+        assert_eq!(st.at("priority").as_str(), Some("batch"));
+        assert_eq!(st.at("deadline_ms").as_usize(), Some(60000));
+        if st.at("status").as_str() == Some("done") {
+            break;
+        }
+        assert!(Instant::now() < deadline, "edit never completed");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // per-class depths are visible in /v1/stats
+    let (code, stats) = server.route("GET", "/v1/stats", "");
+    assert_eq!(code, 200);
+    let workers = stats.at("workers").as_arr().expect("workers");
+    let classes = workers[0].at("classes");
+    for p in Priority::ALL {
+        assert!(
+            classes.at(p.label()).at("queued").as_usize().is_some(),
+            "missing class depth for {p:?}"
+        );
+    }
+}
