@@ -46,4 +46,13 @@ else
   echo "ci.sh: artifacts/ absent; skipping qos bench smoke"
 fi
 
+# Coordinator-overhead smoke: per-step transfer counts + per-step
+# overhead (measured minus pipeline-ideal), host reference vs the
+# device-resident step loop, written to BENCH_overhead.json.
+if [[ -d artifacts ]]; then
+  run cargo run --release --example overhead_bench -- 8 0.3
+else
+  echo "ci.sh: artifacts/ absent; skipping overhead bench smoke"
+fi
+
 echo "ci.sh: all checks passed"

@@ -1,0 +1,99 @@
+//! Coordinator-overhead bench: per-step transfer counts and per-step
+//! coordinator overhead (measured step latency minus the pipeline's
+//! ideal latency) for the device-resident step loop vs the
+//! host-round-trip reference. Writes `BENCH_overhead.json` so every PR
+//! leaves a comparable record of the hot-path trajectory (§6.6 budgets
+//! ~1 ms/step for everything around the kernels).
+//!
+//! The measurement itself lives in
+//! `instgenie::util::bench::measure_step_overhead` (shared with the
+//! §6.6 microbench rows).
+//!
+//! Run: `cargo run --release --example overhead_bench -- [requests] [mask_ratio]`
+
+use instgenie::runtime::Manifest;
+use instgenie::util::bench::{measure_step_overhead, StepOverhead};
+use instgenie::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(8);
+    let ratio: f64 = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(0.3);
+
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("[overhead_bench] no artifacts; skipping (run `make artifacts`)");
+        return Ok(());
+    };
+    let model = if manifest.models.contains_key("sd21m") {
+        "sd21m".to_string()
+    } else {
+        match manifest.models.keys().next() {
+            Some(m) => m.clone(),
+            None => {
+                eprintln!("[overhead_bench] empty manifest; skipping");
+                return Ok(());
+            }
+        }
+    };
+    let blocks = manifest.model(&model)?.config.blocks;
+
+    // host first: it is the pre-PR baseline the JSON records as "before"
+    let Some(host) = measure_step_overhead(&model, false, requests, ratio)? else {
+        eprintln!("[overhead_bench] artifacts vanished; skipping");
+        return Ok(());
+    };
+    let device = measure_step_overhead(&model, true, requests, ratio)?
+        .expect("artifacts vanished mid-run");
+
+    println!(
+        "== coordinator overhead: model={model} requests={requests} ratio={ratio} \
+         bucket n={} ideal={:.3}ms planned={:.3}ms ==",
+        host.bucket_n,
+        host.ideal * 1e3,
+        host.planned * 1e3
+    );
+    for (name, s) in [("host", &host), ("device", &device)] {
+        println!(
+            "{name:>7}: step={:.3}ms overhead={:.3}ms transfers/step={:.1} \
+             h2d={:.1}KiB/step d2h={:.1}KiB/step",
+            s.step_latency * 1e3,
+            s.overhead * 1e3,
+            s.transfers_per_step,
+            s.h2d_bytes_per_step / 1024.0,
+            s.d2h_bytes_per_step / 1024.0,
+        );
+    }
+    println!(
+        "[overhead_bench] transfers/step {:.1} -> {:.1} ({blocks} blocks), \
+         overhead {:.3}ms -> {:.3}ms",
+        host.transfers_per_step,
+        device.transfers_per_step,
+        host.overhead * 1e3,
+        device.overhead * 1e3,
+    );
+
+    let row = |s: &StepOverhead| {
+        Json::obj(vec![
+            ("step_latency", Json::num(s.step_latency)),
+            ("coordinator_overhead", Json::num(s.overhead)),
+            ("transfers_per_step", Json::num(s.transfers_per_step)),
+            ("h2d_bytes_per_step", Json::num(s.h2d_bytes_per_step)),
+            ("d2h_bytes_per_step", Json::num(s.d2h_bytes_per_step)),
+            ("steps", Json::num(s.steps as f64)),
+        ])
+    };
+    let out = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("requests", Json::num(requests as f64)),
+        ("mask_ratio", Json::num(ratio)),
+        ("bucket_n", Json::num(host.bucket_n as f64)),
+        ("blocks", Json::num(blocks as f64)),
+        ("ideal_step_latency", Json::num(host.ideal)),
+        ("planned_step_latency", Json::num(host.planned)),
+        ("host", row(&host)),
+        ("device", row(&device)),
+    ]);
+    std::fs::write("BENCH_overhead.json", out.to_string())?;
+    println!("[overhead_bench] wrote BENCH_overhead.json");
+    Ok(())
+}

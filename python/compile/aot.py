@@ -7,8 +7,14 @@ Interchange format is HLO **text**, not ``lowered.compile().serialize()``:
 jax >= 0.5 emits HloModuleProto with 64-bit instruction ids, which the xla
 crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
 parser reassigns ids and round-trips cleanly (/opt/xla-example/README.md).
-Lowered with ``return_tuple=True`` — the rust side unwraps the 1-tuple
-(or 3-tuple for registration blocks).
+
+Root convention (manifest ``root`` per artifact): single-output block
+programs (``block_y`` / ``block_kv``) are lowered with
+``return_tuple=False`` so the root is the bare ``(B, n, H)`` array —
+the rust coordinator chains that output buffer device-to-device into
+the next block without a host round trip. The 3-output registration
+block keeps ``return_tuple=True`` (root ``"tuple"``); the rust side
+unwraps its tuple literal on readback.
 
 Outputs (under --out-dir, default ../artifacts):
 
@@ -31,14 +37,18 @@ from .configs import BATCH_BUCKETS, IMAGE_CHANNELS, MODELS, ModelConfig
 from .weights import BLOCK_WEIGHT_ORDER, block_weight_shapes, export_weights
 from . import model as model_lib
 
-MANIFEST_VERSION = 3
+MANIFEST_VERSION = 4
+
+# Manifest ``root`` value per artifact kind: single-output blocks are
+# array-rooted (device-chainable), the registration block stays tupled.
+ARTIFACT_ROOTS = {"block_y": "array", "block_kv": "array", "block_reg": "tuple"}
 
 
-def to_hlo_text(lowered) -> str:
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
     """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
-        str(mlir_mod), use_tuple_args=False, return_tuple=True
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
     )
     return comp.as_hlo_text()
 
@@ -104,12 +114,20 @@ def build(out_dir: str, models=None, verbose: bool = True) -> dict:
         t0 = time.time()
         artifacts = []
         for art_name, kind, n, batch, lowered in _lower_grid(cfg):
-            text = to_hlo_text(lowered)
+            root = ARTIFACT_ROOTS[kind]
+            text = to_hlo_text(lowered, return_tuple=(root == "tuple"))
             fname = art_name + ".hlo.txt"
             with open(os.path.join(out_dir, fname), "w") as f:
                 f.write(text)
             artifacts.append(
-                {"name": art_name, "file": fname, "kind": kind, "n": n, "batch": batch}
+                {
+                    "name": art_name,
+                    "file": fname,
+                    "kind": kind,
+                    "n": n,
+                    "batch": batch,
+                    "root": root,
+                }
             )
         data, entries = export_weights(cfg)
         wname = f"weights_{name}.bin"

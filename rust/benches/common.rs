@@ -92,3 +92,14 @@ pub fn systems() -> Vec<(&'static str, EngineConfig)> {
         ("teacache", EngineConfig::for_system(SystemKind::TeaCache)),
     ]
 }
+
+/// Per-step coordinator overhead of a solo request stream (measured
+/// step latency minus `pipeline::ideal_latency`); thin wrapper over the
+/// shared [`instgenie::util::bench::measure_step_overhead`] recipe so
+/// the microbench row and `BENCH_overhead.json` cannot drift apart.
+/// `None` when artifacts are absent.
+pub fn solo_step_overhead(device: bool) -> Option<f64> {
+    instgenie::util::bench::measure_step_overhead("sd21m", device, scaled(4).min(16), 0.3)
+        .expect("overhead measurement")
+        .map(|s| s.overhead)
+}

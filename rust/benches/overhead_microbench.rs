@@ -90,6 +90,31 @@ fn main() {
     });
     table.rowf(&[&"pipeline DP (Algo 1)", &fmt_secs(s.mean), &"negligible"]);
 
+    // 5. memoized plan lookup — the per-step cost after the plan cache
+    // (the DP now runs once per (n, b, mode) shape, not every step)
+    let mut plans = instgenie::cache::pipeline::PlanCache::new();
+    let _ = plans.plan_for(n, 8, 0, || costs.clone());
+    let s = time_it(10, common::scaled(2000), || {
+        std::hint::black_box(plans.plan_for(n, 8, 0, || costs.clone()));
+    });
+    table.rowf(&[&"plan cache hit (Algo 1 memoized)", &fmt_secs(s.mean), &"negligible"]);
+
+    // 6./7. per-step coordinator overhead: measured solo step latency
+    // minus the pipeline's ideal latency — host-round-trip reference vs
+    // the device-resident chain (the BENCH_overhead.json trajectory; see
+    // examples/overhead_bench.rs for the full record).
+    for (label, device) in [
+        ("step overhead (host reference)", false),
+        ("step overhead (device loop)", true),
+    ] {
+        match common::solo_step_overhead(device) {
+            Some(overhead) => {
+                table.rowf(&[&label, &fmt_secs(overhead), &"~1 ms/step budget"])
+            }
+            None => table.rowf(&[&label, &"skipped (no artifacts)", &"~1 ms/step budget"]),
+        }
+    }
+
     table.print();
     table.save_csv("overhead_microbench").ok();
 }

@@ -9,6 +9,12 @@
 //! completion channel when it reaches a cached block whose activations
 //! have not landed — that wait is exactly the pipeline bubble the DP of
 //! Algorithm 1 squeezes out.
+//!
+//! Cache-KV jobs stage K/V directly in the packed `(slots, L - n, H)`
+//! layout the kernel consumes (padding slots replicate the last member),
+//! so the worker uploads the staged buffers as-is instead of re-packing
+//! them on the engine thread. Pacing charges only the *real* members'
+//! bytes — padding replication is layout, not load.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -32,16 +38,22 @@ pub struct MemberGather {
 /// Staged activations of one block for the whole batch.
 pub struct StagedBlock {
     pub block: usize,
-    /// Per member: gathered Y rows `(|ids|, H)`.
+    /// Per member: gathered Y rows `(|ids|, H)` (replenish at
+    /// cached→full transitions, Fig. 5).
     pub y: Vec<Vec<f32>>,
-    /// Per member: gathered K/V rows (cache-KV mode only).
-    pub kv: Option<Vec<(Vec<f32>, Vec<f32>)>>,
+    /// Cache-KV mode: K and V in the packed `(slots, L - n, H)` device
+    /// layout, upload-ready (padding slots replicate the last member).
+    pub kv_packed: Option<(Vec<f32>, Vec<f32>)>,
+    /// Bytes genuinely loaded (pacing input; excludes padding slots).
+    pub bytes: usize,
 }
 
 struct Job {
     block: usize,
     members: Vec<MemberGather>,
     mode: CacheMode,
+    /// Batch-bucket slot count of the packed K/V layout (>= members).
+    slots: usize,
     done: Sender<StagedBlock>,
 }
 
@@ -62,8 +74,8 @@ impl CacheLoader {
             .spawn(move || {
                 while let Ok(job) = rx.recv() {
                     let t0 = Instant::now();
-                    let staged = gather(job.block, &job.members, job.mode);
-                    pace(staged_bytes(&staged), bandwidth, t0);
+                    let staged = gather(job.block, &job.members, job.mode, job.slots);
+                    pace(staged.bytes, bandwidth, t0);
                     let _ = job.done.send(staged);
                 }
             })
@@ -77,18 +89,20 @@ impl CacheLoader {
 
     /// Submit a gather job; completion arrives on the returned receiver.
     /// Jobs are processed FIFO — submission order *is* the load-stream
-    /// order assumed by the pipeline DP.
+    /// order assumed by the pipeline DP. `slots` sets the packed K/V
+    /// layout's batch-bucket size (ignored in cache-Y mode).
     pub fn submit(
         &self,
         block: usize,
         members: Vec<MemberGather>,
         mode: CacheMode,
+        slots: usize,
     ) -> Receiver<StagedBlock> {
         let (done_tx, done_rx) = channel();
         self.tx
             .as_ref()
             .expect("loader alive")
-            .send(Job { block, members, mode, done: done_tx })
+            .send(Job { block, members, mode, slots, done: done_tx })
             .expect("loader thread alive");
         done_rx
     }
@@ -100,10 +114,11 @@ impl CacheLoader {
         block: usize,
         members: Vec<MemberGather>,
         mode: CacheMode,
+        slots: usize,
     ) -> StagedBlock {
         let t0 = Instant::now();
-        let staged = gather(block, &members, mode);
-        pace(staged_bytes(&staged), self.bandwidth, t0);
+        let staged = gather(block, &members, mode, slots);
+        pace(staged.bytes, self.bandwidth, t0);
         staged
     }
 }
@@ -117,44 +132,51 @@ impl Drop for CacheLoader {
     }
 }
 
-fn gather(block: usize, members: &[MemberGather], mode: CacheMode) -> StagedBlock {
+fn gather(block: usize, members: &[MemberGather], mode: CacheMode, slots: usize) -> StagedBlock {
     let mut y = Vec::with_capacity(members.len());
-    let mut kv = matches!(mode, CacheMode::CacheKV).then(Vec::new);
+    let mut bytes = 0usize;
     for m in members {
         let entry = m.store.entry(m.step, block);
         let h = m.store.hidden;
         let mut rows = vec![0f32; m.ids.len() * h];
         gather_rows(&entry.y, h, &m.ids, &mut rows);
+        bytes += rows.len() * 4;
         y.push(rows);
-        if let Some(kvs) = kv.as_mut() {
-            let (ks, vs) = entry
+    }
+    let kv_packed = (matches!(mode, CacheMode::CacheKV) && !members.is_empty()).then(|| {
+        let slots = slots.max(members.len());
+        let h = members[0].store.hidden;
+        let rows = members[0].ids.len();
+        let mut k = vec![0f32; slots * rows * h];
+        let mut v = vec![0f32; slots * rows * h];
+        for (s, m) in members.iter().enumerate() {
+            debug_assert_eq!(m.ids.len(), rows, "uniform bucket per job");
+            let (ks, vs) = m
+                .store
+                .entry(m.step, block)
                 .kv
                 .as_ref()
                 .expect("cache-KV mode requires K/V-registered templates");
-            let mut kr = vec![0f32; m.ids.len() * h];
-            let mut vr = vec![0f32; m.ids.len() * h];
-            gather_rows(ks, h, &m.ids, &mut kr);
-            gather_rows(vs, h, &m.ids, &mut vr);
-            kvs.push((kr, vr));
+            gather_rows(ks, h, &m.ids, &mut k[s * rows * h..(s + 1) * rows * h]);
+            gather_rows(vs, h, &m.ids, &mut v[s * rows * h..(s + 1) * rows * h]);
+            bytes += 2 * rows * h * 4;
         }
-    }
-    StagedBlock { block, y, kv }
+        // padding slots replicate the last member: one contiguous memcpy
+        // each (layout only — neither gathered again nor paced as load)
+        let last = (members.len() - 1) * rows * h;
+        for s in members.len()..slots {
+            k.copy_within(last..last + rows * h, s * rows * h);
+            v.copy_within(last..last + rows * h, s * rows * h);
+        }
+        (k, v)
+    });
+    StagedBlock { block, y, kv_packed, bytes }
 }
 
 fn gather_rows(src: &[f32], h: usize, ids: &[usize], out: &mut [f32]) {
     for (i, &id) in ids.iter().enumerate() {
         out[i * h..(i + 1) * h].copy_from_slice(&src[id * h..(id + 1) * h]);
     }
-}
-
-fn staged_bytes(s: &StagedBlock) -> usize {
-    let y: usize = s.y.iter().map(|v| v.len() * 4).sum();
-    let kv: usize = s
-        .kv
-        .as_ref()
-        .map(|kvs| kvs.iter().map(|(k, v)| (k.len() + v.len()) * 4).sum())
-        .unwrap_or(0);
-    y + kv
 }
 
 fn pace(bytes: usize, bandwidth: f64, t0: Instant) {
@@ -203,30 +225,38 @@ mod tests {
     fn gathers_requested_rows_in_order() {
         let loader = CacheLoader::spawn(0.0);
         let m = MemberGather { store: store(false), step: 1, ids: Arc::new(vec![3, 1]) };
-        let rx = loader.submit(0, vec![m], CacheMode::CacheY);
+        let rx = loader.submit(0, vec![m], CacheMode::CacheY, 1);
         let staged = rx.recv().unwrap();
         assert_eq!(staged.block, 0);
         // entry(1, 0) has base 2*10; row 3 = [26, 27], row 1 = [22, 23]
         assert_eq!(staged.y[0], vec![26.0, 27.0, 22.0, 23.0]);
-        assert!(staged.kv.is_none());
+        assert!(staged.kv_packed.is_none());
+        assert_eq!(staged.bytes, 4 * 4);
     }
 
     #[test]
-    fn kv_mode_stages_kv() {
+    fn kv_mode_stages_packed_kv_with_padding() {
         let loader = CacheLoader::spawn(0.0);
         let m = MemberGather { store: store(true), step: 0, ids: Arc::new(vec![0]) };
-        let staged = loader.submit(1, vec![m], CacheMode::CacheKV).recv().unwrap();
-        let kv = staged.kv.unwrap();
-        assert_eq!(kv[0].0, vec![100.0, 100.0]);
-        assert_eq!(kv[0].1, vec![1000.0, 1000.0]);
+        // 1 member, 2 slots: the padding slot replicates the member
+        let staged = loader
+            .submit(1, vec![m], CacheMode::CacheKV, 2)
+            .recv()
+            .unwrap();
+        let (k, v) = staged.kv_packed.unwrap();
+        assert_eq!(k, vec![100.0, 100.0, 100.0, 100.0]);
+        assert_eq!(v, vec![1000.0, 1000.0, 1000.0, 1000.0]);
+        // bytes: y (1 row x 2 floats) + real-member k/v (2 x 2 floats);
+        // the padding slot is layout, not load
+        assert_eq!(staged.bytes, (2 + 2 + 2) * 4);
     }
 
     #[test]
     fn fifo_order_preserved() {
         let loader = CacheLoader::spawn(0.0);
         let mk = |step| MemberGather { store: store(false), step, ids: Arc::new(vec![0]) };
-        let rx0 = loader.submit(0, vec![mk(0)], CacheMode::CacheY);
-        let rx1 = loader.submit(1, vec![mk(0)], CacheMode::CacheY);
+        let rx0 = loader.submit(0, vec![mk(0)], CacheMode::CacheY, 1);
+        let rx1 = loader.submit(1, vec![mk(0)], CacheMode::CacheY, 1);
         // both complete; block tags intact
         assert_eq!(rx0.recv().unwrap().block, 0);
         assert_eq!(rx1.recv().unwrap().block, 1);
@@ -239,8 +269,20 @@ mod tests {
         let loader = CacheLoader::spawn(32.0 / 0.04);
         let mk = || MemberGather { store: store(false), step: 0, ids: Arc::new(vec![0, 2]) };
         let t0 = Instant::now();
-        let rx = loader.submit(0, vec![mk(), mk()], CacheMode::CacheY);
+        let rx = loader.submit(0, vec![mk(), mk()], CacheMode::CacheY, 2);
         rx.recv().unwrap();
         assert!(t0.elapsed().as_millis() >= 35, "pacing skipped");
+    }
+
+    #[test]
+    fn padding_slots_do_not_slow_the_copy_stream() {
+        // same real payload, 4x the slots: pacing must not change
+        let m = || MemberGather { store: store(true), step: 0, ids: Arc::new(vec![0, 2]) };
+        let loader = CacheLoader::spawn(0.0);
+        let tight = loader.gather_sync(0, vec![m()], CacheMode::CacheKV, 1);
+        let padded = loader.gather_sync(0, vec![m()], CacheMode::CacheKV, 4);
+        assert_eq!(tight.bytes, padded.bytes);
+        let (k, _) = padded.kv_packed.unwrap();
+        assert_eq!(k.len(), 4 * 2 * 2, "4 slots x 2 rows x hidden 2");
     }
 }

@@ -49,7 +49,7 @@ use crate::cache::LatencyModel;
 use crate::config::{CacheMode, EngineConfig, ModelConfig};
 use crate::engine::queue::{Submitter, WorkerQueue};
 use crate::engine::request::{EditError, EditRequest, EditResponse, WorkerEvent};
-use crate::engine::worker::Worker;
+use crate::engine::worker::{Worker, WorkerShared, WorkerSnapshot};
 use crate::qos::{Admission, AdmissionController, ClassDepth, CLASS_COUNT};
 use crate::runtime::ModelRuntime;
 use crate::scheduler::{Outstanding, RouteCtx, Scheduler};
@@ -96,6 +96,9 @@ pub struct TemplateStatus {
 pub struct Cluster {
     submitters: Vec<Submitter>,
     queues: Vec<Arc<WorkerQueue>>,
+    /// Engine-published per-worker state (running composition, step and
+    /// transfer counters) — the live feed behind `worker_snapshots`.
+    shareds: Vec<Arc<WorkerShared>>,
     /// Per-worker cache tiers (index = worker id).
     tiers: Vec<Arc<TieredStore>>,
     stops: Vec<Arc<AtomicBool>>,
@@ -230,6 +233,7 @@ impl Cluster {
         let (tx, rx) = channel::<WorkerEvent>();
         let mut submitters = Vec::new();
         let mut queues = Vec::new();
+        let mut shareds = Vec::new();
         let mut stops = Vec::new();
         let mut handles = Vec::new();
         let mut model_cfg = None;
@@ -250,6 +254,7 @@ impl Cluster {
             .with_registry(Arc::clone(&templates));
             submitters.push(worker.submitter());
             queues.push(worker.queue());
+            shareds.push(worker.shared());
             stops.push(worker.stop_flag());
             handles.push(worker.start());
         }
@@ -327,6 +332,7 @@ impl Cluster {
         Ok(Cluster {
             submitters,
             queues,
+            shareds,
             tiers,
             stops,
             handles,
@@ -667,6 +673,19 @@ impl Cluster {
     /// bounded by live requests + unevicted registry entries only.
     pub fn set_retain_responses(&self, retain: bool) {
         self.retain_responses.store(retain, Ordering::Relaxed);
+    }
+
+    /// Live per-worker snapshots (§4.4): the running batch's *actual*
+    /// mask composition plus queued ratios, step counts, and step-loop
+    /// transfer totals — assembled from the engine-published shared state
+    /// rather than the pre-start `Worker::snapshot` handle.
+    pub fn worker_snapshots(&self) -> Vec<WorkerSnapshot> {
+        self.queues
+            .iter()
+            .zip(&self.shareds)
+            .enumerate()
+            .map(|(w, (q, s))| WorkerSnapshot::collect(w, q, s))
+            .collect()
     }
 
     /// Per-worker queue depth + dispatched-but-unfinished counts, broken

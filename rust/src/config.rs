@@ -112,6 +112,13 @@ pub struct EngineConfig {
     pub host_cache_budget: usize,
     /// Directory for disk-tier spill files.
     pub spill_dir: PathBuf,
+    /// Device-resident step loop (default): block outputs chain
+    /// device-to-device inside a contiguous same-mode run, with one
+    /// upload per run start and one download per run end. `false` runs
+    /// the host-round-trip reference loop (2 transfers per block) — the
+    /// golden tests hold the two bit-identical, and the overhead bench
+    /// uses it as the before/after baseline.
+    pub device_resident: bool,
     /// Disable the bubble-free DP and always use the cache for every block
     /// (the strawman pipeline of Fig. 9-Middle) — for ablations.
     pub force_all_cached: bool,
@@ -148,6 +155,7 @@ impl EngineConfig {
             sim_bandwidth: 384.0 * 1024.0 * 1024.0,
             host_cache_budget: 512 << 20,
             spill_dir: PathBuf::from("artifacts/cache_spill"),
+            device_resident: true,
             force_all_cached: false,
             naive_loading: false,
             teacache_threshold: 0.05,

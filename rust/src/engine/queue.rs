@@ -320,6 +320,18 @@ impl WorkerQueue {
         out
     }
 
+    /// Mask ratios of every queued request (both lanes) — the scheduler's
+    /// Algo-2 cost model reads the queue's actual composition from these
+    /// (plus the running batch's, via `WorkerShared`).
+    pub fn queued_mask_ratios(&self) -> Vec<f64> {
+        let g = self.inner.lock().unwrap();
+        g.raw
+            .iter()
+            .map(|r| r.mask.ratio())
+            .chain(g.ready.iter().map(|p| p.request.mask.ratio()))
+            .collect()
+    }
+
     /// Pending work (either lane + in-flight preprocessing).
     pub fn pending(&self) -> usize {
         let g = self.inner.lock().unwrap();
@@ -611,6 +623,18 @@ mod tests {
         assert!(q.remove(9));
         assert!(q.pop_ready().is_none());
         assert!(!q.remove(42), "unknown id");
+    }
+
+    #[test]
+    fn queued_mask_ratios_cover_both_lanes() {
+        let q = WorkerQueue::new();
+        q.push_raw(req(1)); // 2/16 masked
+        let mut r = req(2);
+        r.mask = MaskSpec::new(vec![0, 1, 2, 3], 16); // 4/16 masked
+        q.push_ready(crate::engine::prepost::preprocess(r, 8, 0));
+        let mut ratios = q.queued_mask_ratios();
+        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(ratios, vec![2.0 / 16.0, 4.0 / 16.0]);
     }
 
     #[test]

@@ -15,15 +15,15 @@
 //! - `TeaCache`    full-image recompute with timestep-gated step skipping,
 //!                 static batching.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::cache::loader::{CacheLoader, MemberGather, StagedBlock};
-use crate::cache::pipeline::{self, BlockCosts, PipelinePlan};
+use crate::cache::pipeline::{PipelinePlan, PlanCache};
 use crate::cache::store::{register_template, TemplateActivations};
 use crate::cache::tier::{Residency, TieredStore};
 use crate::cache::LatencyModel;
@@ -32,8 +32,9 @@ use crate::engine::prepost::{postprocess, preprocess, PreparedRequest};
 use crate::engine::queue::{QueuePolicy, Submitter, WorkerQueue};
 use crate::engine::request::{EditError, EditResponse, RequestTiming, WorkerEvent};
 use crate::engine::teacache::TeaCacheGate;
-use crate::model::Latent;
+use crate::model::{Latent, Schedule};
 use crate::qos::{ClassDepth, Priority, CLASS_COUNT};
+use crate::runtime::{ArtifactKind, ModelRuntime, TransferTotals};
 use crate::templates::{TemplateRegistry, TemplateState};
 use crate::util::pool::ThreadPool;
 use crate::util::tensor::Tensor;
@@ -62,6 +63,64 @@ struct Member {
 impl Member {
     fn rank(&self) -> usize {
         self.prep.request.priority.rank()
+    }
+}
+
+/// Step-scoped scratch arena: every host buffer the hot loop touches,
+/// allocated once and reused across steps. `grows` counts capacity
+/// growths — once the engine has seen a shape, repeating it must not
+/// grow anything (property-tested), so the steady-state step loop is
+/// allocation-free on the coordinator side.
+#[derive(Default)]
+struct StepScratch {
+    /// (bb, n, H) packed compute rows.
+    packed: Vec<f32>,
+    /// (bb, L, H) full-sequence batch input.
+    full: Vec<f32>,
+    /// Final block-chain output readback.
+    out: Vec<f32>,
+    /// Per-member full (L, H) hidden buffers.
+    hidden: Vec<Vec<f32>>,
+    /// TeaCache per-member compute gates.
+    compute: Vec<bool>,
+    /// Capacity-growth counter (see struct docs).
+    grows: usize,
+}
+
+impl StepScratch {
+    /// Resize a scratch buffer, counting capacity growth. Contents are
+    /// unspecified afterwards — every user overwrites its slice fully.
+    fn resize_tracked(v: &mut Vec<f32>, len: usize, grows: &mut usize) {
+        if v.capacity() < len {
+            *grows += 1;
+        }
+        v.resize(len, 0.0);
+    }
+
+    /// Pack each batch slot's bucket-`n` compute rows from the member
+    /// hiddens into `packed` (padding slots replicate the last member).
+    /// The single packing routine shared by the device chain and its
+    /// host reference, so the two provably pack identically.
+    fn pack_compute_rows(&mut self, members: &[Member], n: usize, h: usize, bb: usize) {
+        let b = members.len();
+        let StepScratch { packed, hidden, grows, .. } = self;
+        StepScratch::resize_tracked(packed, bb * n * h, grows);
+        for i in 0..bb {
+            let mi = i.min(b - 1);
+            let ids = members[mi].prep.perm.compute_ids(n);
+            gather_rows(&hidden[mi], h, ids, &mut packed[i * n * h..(i + 1) * n * h]);
+        }
+    }
+
+    /// Pack the full (L, H) member hiddens into `full` with the same
+    /// last-member padding rule.
+    fn pack_full_rows(&mut self, b: usize, l: usize, h: usize, bb: usize) {
+        let StepScratch { full, hidden, grows, .. } = self;
+        StepScratch::resize_tracked(full, bb * l * h, grows);
+        for i in 0..bb {
+            let mi = i.min(b - 1);
+            full[i * l * h..(i + 1) * l * h].copy_from_slice(&hidden[mi]);
+        }
     }
 }
 
@@ -96,6 +155,34 @@ pub struct WorkerSnapshot {
     pub mask_ratios: Vec<f64>,
     /// Per-class queue depth + oldest-wait age (QoS observability).
     pub class_depths: [ClassDepth; CLASS_COUNT],
+    /// Denoise steps this worker has executed so far.
+    pub steps_executed: usize,
+    /// Cumulative step-loop host<->device activation traffic.
+    pub transfers: TransferTotals,
+}
+
+impl WorkerSnapshot {
+    /// Assemble a snapshot from the live handles (queue + engine-published
+    /// shared state) — the cluster uses this after workers have started,
+    /// when the `Worker` itself is owned by its thread.
+    pub fn collect(
+        worker_id: usize,
+        queue: &WorkerQueue,
+        shared: &WorkerShared,
+    ) -> WorkerSnapshot {
+        let mut mask_ratios = queue.queued_mask_ratios();
+        mask_ratios.extend(shared.running_mask_ratios());
+        WorkerSnapshot {
+            worker_id,
+            queued: queue.pending(),
+            running: shared.running.load(Ordering::Relaxed),
+            queued_masked_tokens: shared.running_masked.load(Ordering::Relaxed),
+            mask_ratios,
+            class_depths: queue.class_depths(Instant::now()),
+            steps_executed: shared.steps_executed(),
+            transfers: shared.transfers(),
+        }
+    }
 }
 
 /// Shared mutable state published by the engine thread.
@@ -104,13 +191,40 @@ pub struct WorkerShared {
     running: AtomicUsize,
     running_masked: AtomicUsize,
     steps_executed: AtomicUsize,
+    /// Mask ratios of the running batch (Algo-2 cost model input).
+    running_ratios: Mutex<Vec<f64>>,
+    /// Step-loop transfer totals mirrored from the worker's runtime
+    /// (the runtime itself is confined to the engine thread).
+    h2d_ops: AtomicU64,
+    d2h_ops: AtomicU64,
+    h2d_bytes: AtomicU64,
+    d2h_bytes: AtomicU64,
+}
+
+impl WorkerShared {
+    pub fn steps_executed(&self) -> usize {
+        self.steps_executed.load(Ordering::Relaxed)
+    }
+
+    pub fn running_mask_ratios(&self) -> Vec<f64> {
+        self.running_ratios.lock().unwrap().clone()
+    }
+
+    pub fn transfers(&self) -> TransferTotals {
+        TransferTotals {
+            h2d_ops: self.h2d_ops.load(Ordering::Relaxed),
+            d2h_ops: self.d2h_ops.load(Ordering::Relaxed),
+            h2d_bytes: self.h2d_bytes.load(Ordering::Relaxed),
+            d2h_bytes: self.d2h_bytes.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// The worker engine. Construct, then call [`Worker::start`].
 pub struct Worker {
     pub id: usize,
     cfg: EngineConfig,
-    rt: crate::runtime::ModelRuntime,
+    rt: ModelRuntime,
     tiers: Arc<TieredStore>,
     loader: CacheLoader,
     lat_model: LatencyModel,
@@ -122,13 +236,21 @@ pub struct Worker {
     /// Cluster-wide template table (None for standalone engines, which
     /// keep the seed behaviour: cold-register on first use).
     registry: Option<Arc<TemplateRegistry>>,
+    /// Step-scoped scratch arena (reused across steps; see ROADMAP
+    /// "Hot path" for the allocation invariant).
+    scratch: StepScratch,
+    /// Memoized Algorithm-1 plans per (bucket, batch, mode).
+    plans: PlanCache,
+    /// The all-cached plan of the `force_all_cached` / `naive_loading`
+    /// ablations (built once).
+    forced_plan: Option<Arc<PipelinePlan>>,
 }
 
 impl Worker {
     pub fn new(
         id: usize,
         cfg: EngineConfig,
-        rt: crate::runtime::ModelRuntime,
+        rt: ModelRuntime,
         tiers: Arc<TieredStore>,
         lat_model: LatencyModel,
         events: Sender<WorkerEvent>,
@@ -163,6 +285,9 @@ impl Worker {
             shared: Arc::new(WorkerShared::default()),
             stop: Arc::new(AtomicBool::new(false)),
             registry: None,
+            scratch: StepScratch::default(),
+            plans: PlanCache::new(),
+            forced_plan: None,
         }
     }
 
@@ -218,16 +343,10 @@ impl Worker {
         Arc::clone(&self.stop)
     }
 
-    /// Snapshot for the scheduler (running + queued composition).
+    /// Snapshot for the scheduler (running + queued composition, with
+    /// the *real* mask ratios of both — the Algo-2 cost model input).
     pub fn snapshot(&self) -> WorkerSnapshot {
-        WorkerSnapshot {
-            worker_id: self.id,
-            queued: self.queue.pending(),
-            running: self.shared.running.load(Ordering::Relaxed),
-            queued_masked_tokens: self.shared.running_masked.load(Ordering::Relaxed),
-            mask_ratios: Vec::new(),
-            class_depths: self.queue.class_depths(Instant::now()),
-        }
+        WorkerSnapshot::collect(self.id, &self.queue, &self.shared)
     }
 
     /// Run the engine loop on the current thread until stopped + drained.
@@ -754,12 +873,15 @@ impl Worker {
     }
 
     /// Build a member's denoiser input h = x + temb(t) (+ conditioning on
-    /// the genuinely masked rows).
-    fn build_hidden(&self, m: &Member) -> Vec<f32> {
-        let cfg = &self.rt.config;
-        let h = cfg.hidden;
-        let temb = self.rt.weights().temb_row(m.step);
-        let mut out = m.latent.data().to_vec();
+    /// the genuinely masked rows) into a reused scratch buffer.
+    fn build_hidden_into(rt: &ModelRuntime, m: &Member, out: &mut Vec<f32>, grows: &mut usize) {
+        let h = rt.config.hidden;
+        if out.capacity() < m.latent.data().len() {
+            *grows += 1;
+        }
+        out.clear();
+        out.extend_from_slice(m.latent.data());
+        let temb = rt.weights().temb_row(m.step);
         for (i, v) in out.iter_mut().enumerate() {
             *v += temb[i % h];
         }
@@ -769,7 +891,72 @@ impl Worker {
                 *v += c;
             }
         }
-        out
+    }
+
+    /// Build every member's denoiser input into the scratch hidden
+    /// buffers (one reused full (L, H) buffer per member).
+    fn ensure_hidden(&mut self, members: &[Member]) {
+        if self.scratch.hidden.len() < members.len() {
+            self.scratch.grows += 1;
+            self.scratch.hidden.resize_with(members.len(), Vec::new);
+        }
+        for (i, m) in members.iter().enumerate() {
+            // split borrow: hidden[i] and grows are disjoint scratch fields
+            let StepScratch { hidden, grows, .. } = &mut self.scratch;
+            Self::build_hidden_into(&self.rt, m, &mut hidden[i], grows);
+        }
+    }
+
+    /// Advance one member's latent from a full (L, H) eps view: masked
+    /// rows follow the computed eps, unmasked rows are pinned to the
+    /// template trajectory (standard diffusion inpainting: regenerate
+    /// only the mask). The shared tail of `step_full` and `step_masked`;
+    /// eps rows are gathered in place — no staging buffers, no id clones.
+    #[allow(clippy::too_many_arguments)]
+    fn advance_latent(
+        sched: &Schedule,
+        h: usize,
+        prep: &PreparedRequest,
+        acts: &TemplateActivations,
+        step: &mut usize,
+        latent: &mut Latent,
+        eps_src: &[f32],
+    ) {
+        let masked = prep.perm.compute_ids(prep.masked_count);
+        sched.update_rows_gathered(*step, latent.data_mut(), h, masked, eps_src);
+        let unmasked = prep.perm.cached_ids(prep.masked_count);
+        sched.update_rows_gathered(*step, latent.data_mut(), h, unmasked, acts.eps(*step));
+        *step += 1;
+    }
+
+    /// Run blocks `[first, end)` as one full-sequence device-resident
+    /// chain over the pre-packed `scratch.full` input, leaving the final
+    /// output in `scratch.out`. `device: false` is the host-round-trip
+    /// reference (one upload + one download per block).
+    fn run_full_chain(
+        rt: &ModelRuntime,
+        scratch: &mut StepScratch,
+        first: usize,
+        end: usize,
+        bb: usize,
+        device: bool,
+    ) -> Result<()> {
+        let (l, h) = (rt.config.tokens, rt.config.hidden);
+        let len = bb * l * h;
+        if device {
+            let mut x_buf = rt.upload_activations(&scratch.full[..len], &[bb, l, h])?;
+            for blk in first..end {
+                x_buf = rt.run_block_y_dev(blk, l, bb, &x_buf)?;
+            }
+            rt.fetch_block_output(ArtifactKind::BlockY, l, bb, &x_buf, &mut scratch.out)?;
+        } else {
+            let mut cur = scratch.full[..len].to_vec();
+            for blk in first..end {
+                cur = rt.run_block_y(blk, l, bb, &cur)?;
+            }
+            scratch.out = cur;
+        }
+        Ok(())
     }
 
     /// Full-sequence step (Diffusers / TeaCache / mask saturating bucket).
@@ -781,69 +968,61 @@ impl Worker {
 
         // TeaCache: gate each member; if everyone skips, replay without
         // touching the device.
-        let mut compute_mask: Vec<bool> = vec![true; b];
+        self.scratch.compute.clear();
+        self.scratch.compute.resize(b, true);
         if self.cfg.system == SystemKind::TeaCache {
             for (i, m) in members.iter_mut().enumerate() {
-                let temb = self.rt.weights().temb_row(m.step).to_vec();
+                let temb = self.rt.weights().temb_row(m.step);
                 let gate = m.gate.as_mut().expect("teacache gate");
-                compute_mask[i] = !(gate.should_skip(&temb) && m.last_eps.is_some());
+                self.scratch.compute[i] = !(gate.should_skip(temb) && m.last_eps.is_some());
             }
         }
 
-        let any_compute = compute_mask.iter().any(|&c| c);
-        let mut eps_rows: Vec<Vec<f32>> = Vec::with_capacity(b);
+        let any_compute = self.scratch.compute.iter().any(|&c| c);
         if any_compute {
-            // pack (bb, L, H); padding slots replicate member 0
-            let mut x = vec![0f32; bb * l * h];
-            for i in 0..bb {
-                let m = &members[i.min(b - 1)];
-                let src = self.build_hidden(m);
-                x[i * l * h..(i + 1) * l * h].copy_from_slice(&src);
-            }
-            let mut cur = x;
-            for blk in 0..cfg.blocks {
-                cur = self.rt.run_block_y(blk, l, bb, &cur)?;
-            }
-            for (i, m) in members.iter().enumerate() {
-                let _ = m;
-                eps_rows.push(cur[i * l * h..(i + 1) * l * h].to_vec());
-            }
+            // build each member's hidden, then pack (bb, L, H) with
+            // last-member padding
+            self.ensure_hidden(members);
+            self.scratch.pack_full_rows(b, l, h, bb);
+            let device = self.cfg.device_resident
+                && self.rt.device_chain_supported(ArtifactKind::BlockY, l, bb);
+            Self::run_full_chain(&self.rt, &mut self.scratch, 0, cfg.blocks, bb, device)?;
         }
 
         // per-member latent update
         for (i, m) in members.iter_mut().enumerate() {
-            let eps: Vec<f32> = if compute_mask[i] {
-                let e = eps_rows[i].clone();
-                m.last_eps = Some(e.clone());
-                m.steps_computed += 1;
-                e
+            let Member { prep, acts, latent, step, last_eps, steps_computed, gate, .. } = m;
+            let eps_src: &[f32] = if self.scratch.compute[i] {
+                *steps_computed += 1;
+                let row = &self.scratch.out[i * l * h..(i + 1) * l * h];
+                if gate.is_some() {
+                    // TeaCache keeps the eps for replay (reusing the
+                    // member's buffer — no per-step allocation)
+                    match last_eps {
+                        Some(buf) => buf.copy_from_slice(row),
+                        None => *last_eps = Some(row.to_vec()),
+                    }
+                    last_eps.as_deref().expect("just stored")
+                } else {
+                    row
+                }
             } else {
-                m.last_eps.clone().expect("replayed eps")
+                last_eps.as_deref().expect("replayed eps")
             };
-            let sched = self.rt.schedule();
-            // masked rows follow the computed eps...
-            let masked: Vec<usize> =
-                m.prep.perm.compute_ids(m.prep.masked_count).to_vec();
-            let mut eps_masked = vec![0f32; masked.len() * h];
-            for (r, &id) in masked.iter().enumerate() {
-                eps_masked[r * h..(r + 1) * h].copy_from_slice(&eps[id * h..(id + 1) * h]);
-            }
-            sched.update_rows(m.step, m.latent.data_mut(), h, &masked, &eps_masked);
-            // ...unmasked rows are pinned to the template trajectory
-            // (standard diffusion inpainting: regenerate only the mask).
-            let unmasked: Vec<usize> = m.prep.perm.cached_ids(m.prep.masked_count).to_vec();
-            let teps = m.acts.eps(m.step);
-            let mut eps_unm = vec![0f32; unmasked.len() * h];
-            for (r, &id) in unmasked.iter().enumerate() {
-                eps_unm[r * h..(r + 1) * h].copy_from_slice(&teps[id * h..(id + 1) * h]);
-            }
-            sched.update_rows(m.step, m.latent.data_mut(), h, &unmasked, &eps_unm);
-            m.step += 1;
+            Self::advance_latent(self.rt.schedule(), h, prep, acts, step, latent, eps_src);
         }
         Ok(())
     }
 
     /// Mask-aware step at token bucket `n` with the Algo-1 pipeline.
+    ///
+    /// Device-resident hot path: activations are uploaded once per
+    /// contiguous same-mode block run and downloaded once at the run's
+    /// end — between consecutive cached blocks, `scatter(compute_ids,
+    /// out)` followed by `gather(compute_ids)` is the identity, so block
+    /// i+1's packed input *is* block i's output buffer. The full-hidden
+    /// scatter (computed rows + staged-Y replenish, Fig. 5) happens only
+    /// at cached->full transitions and for the step-end latent update.
     fn step_masked(&mut self, members: &mut [Member], n: usize) -> Result<()> {
         let cfg = self.rt.config.clone();
         let (l, h) = (cfg.tokens, cfg.hidden);
@@ -851,12 +1030,23 @@ impl Worker {
         let bb = self.rt.batch_bucket_for(b);
         let mode = self.cfg.cache_mode;
 
-        // -- plan (Algo 1) ---------------------------------------------------
-        let costs: Vec<BlockCosts> = self.lat_model.step_costs(&cfg, n, b, mode);
-        let plan: PipelinePlan = if self.cfg.force_all_cached || self.cfg.naive_loading {
-            PipelinePlan { use_cache: vec![true; cfg.blocks], latency: 0.0 }
+        // -- plan (Algo 1, memoized per (n, b, mode)) -------------------------
+        let plan: Arc<PipelinePlan> = if self.cfg.force_all_cached || self.cfg.naive_loading {
+            if self.forced_plan.as_ref().map(|p| p.use_cache.len()) != Some(cfg.blocks) {
+                self.forced_plan = Some(Arc::new(PipelinePlan {
+                    use_cache: vec![true; cfg.blocks],
+                    latency: 0.0,
+                }));
+            }
+            Arc::clone(self.forced_plan.as_ref().expect("just built"))
         } else {
-            pipeline::plan(&costs)
+            let lat = &self.lat_model;
+            let mode_tag = match mode {
+                CacheMode::CacheY => 0u8,
+                CacheMode::CacheKV => 1u8,
+            };
+            self.plans
+                .plan_for(n, b, mode_tag, || lat.step_costs(&cfg, n, b, mode))
         };
 
         // cached-row id sets at this bucket (may exceed a member's own
@@ -892,98 +1082,162 @@ impl Worker {
             for blk in 0..cfg.blocks {
                 if plan.use_cache[blk] {
                     let g = gathers(&|i| steps[i]);
-                    staged_now[blk] = Some(self.loader.gather_sync(blk, g, mode));
+                    staged_now[blk] = Some(self.loader.gather_sync(blk, g, mode, bb));
                 }
             }
         } else {
             for blk in 0..cfg.blocks {
                 if plan.use_cache[blk] {
                     let g = gathers(&|i| steps[i]);
-                    staged_rx[blk] = Some(self.loader.submit(blk, g, mode));
+                    staged_rx[blk] = Some(self.loader.submit(blk, g, mode, bb));
                 }
             }
         }
 
-        // -- hidden state: one full (L, H) buffer per member -----------------
-        let mut hidden: Vec<Vec<f32>> = members.iter().map(|m| self.build_hidden(m)).collect();
+        // -- hidden state: one full (L, H) buffer per member (reused) ---------
+        self.ensure_hidden(members);
 
-        // reusable packed buffers (hot loop: no per-block allocation)
-        let mut packed = vec![0f32; bb * n * h];
-        let mut full = Vec::new();
-        let mut kc = Vec::new();
-        let mut vc = Vec::new();
+        // wait for the copy stream (a bubble iff the DP mispredicts)
+        let mut wait_staged = |blk: usize| -> StagedBlock {
+            match staged_now[blk].take() {
+                Some(s) => s,
+                None => staged_rx[blk]
+                    .take()
+                    .expect("staged rx")
+                    .recv()
+                    .expect("loader alive"),
+            }
+        };
 
-        for blk in 0..cfg.blocks {
-            if plan.use_cache[blk] {
-                // wait for the copy stream (a bubble iff the DP mispredicts)
-                let staged = match staged_now[blk].take() {
-                    Some(s) => s,
-                    None => staged_rx[blk]
-                        .take()
-                        .expect("staged rx")
-                        .recv()
-                        .expect("loader alive"),
-                };
-                // pack compute rows
-                for i in 0..bb {
-                    let mi = i.min(b - 1);
-                    let ids = members[mi].prep.perm.compute_ids(n);
-                    gather_rows(&hidden[mi], h, ids, &mut packed[i * n * h..(i + 1) * n * h]);
-                }
-                let out = match mode {
-                    CacheMode::CacheY => self.rt.run_block_y(blk, n, bb, &packed)?,
-                    CacheMode::CacheKV => {
-                        let kvs = staged.kv.as_ref().expect("kv staged");
-                        let rows = l - n;
-                        kc.resize(bb * rows * h, 0.0);
-                        vc.resize(bb * rows * h, 0.0);
-                        for i in 0..bb {
-                            let (k, v) = &kvs[i.min(b - 1)];
-                            kc[i * rows * h..(i + 1) * rows * h].copy_from_slice(k);
-                            vc[i * rows * h..(i + 1) * rows * h].copy_from_slice(v);
-                        }
-                        self.rt.run_block_kv(blk, n, bb, &packed, &kc, &vc)?
+        let kind = match mode {
+            CacheMode::CacheY => ArtifactKind::BlockY,
+            CacheMode::CacheKV => ArtifactKind::BlockKV,
+        };
+        let device = self.cfg.device_resident
+            && self.rt.device_chain_supported(kind, n, bb)
+            && self.rt.device_chain_supported(ArtifactKind::BlockY, l, bb);
+
+        // -- block runs: contiguous same-mode chains --------------------------
+        let mut blk = 0;
+        while blk < cfg.blocks {
+            let cached = plan.use_cache[blk];
+            let mut end = blk + 1;
+            while end < cfg.blocks && plan.use_cache[end] == cached {
+                end += 1;
+            }
+            if cached {
+                if device {
+                    // pack compute rows once for the whole run
+                    self.scratch.pack_compute_rows(members, n, h, bb);
+                    let mut x_buf = self
+                        .rt
+                        .upload_activations(&self.scratch.packed[..bb * n * h], &[bb, n, h])?;
+                    let mut last_y: Option<Vec<Vec<f32>>> = None;
+                    for k in blk..end {
+                        let staged = wait_staged(k);
+                        x_buf = match mode {
+                            CacheMode::CacheY => self.rt.run_block_y_dev(k, n, bb, &x_buf)?,
+                            CacheMode::CacheKV => {
+                                let (kc, vc) = staged.kv_packed.as_ref().expect("kv staged");
+                                let kb = self.rt.upload_activations(kc, &[bb, l - n, h])?;
+                                let vb = self.rt.upload_activations(vc, &[bb, l - n, h])?;
+                                self.rt.run_block_kv_dev(k, n, bb, &x_buf, &kb, &vb)?
+                            }
+                        };
+                        last_y = Some(staged.y);
                     }
-                };
-                // scatter computed rows + replenish cached rows (Fig. 5)
-                for (i, m) in members.iter().enumerate() {
-                    let ids = m.prep.perm.compute_ids(n);
-                    scatter_rows(&mut hidden[i], h, ids, &out[i * n * h..(i + 1) * n * h]);
-                    scatter_rows(&mut hidden[i], h, &cached_ids[i], &staged.y[i]);
+                    self.rt
+                        .fetch_block_output(kind, n, bb, &x_buf, &mut self.scratch.out)?;
+                    // scatter computed rows back (the latent update and any
+                    // following full run read them from the hidden buffer)
+                    for i in 0..b {
+                        let ids = members[i].prep.perm.compute_ids(n);
+                        scatter_rows(
+                            &mut self.scratch.hidden[i],
+                            h,
+                            ids,
+                            &self.scratch.out[i * n * h..(i + 1) * n * h],
+                        );
+                    }
+                    // replenish cached rows (Fig. 5) only at a cached->full
+                    // transition: nothing else reads them this step
+                    if end < cfg.blocks {
+                        let y = last_y.expect("cached run is non-empty");
+                        for i in 0..b {
+                            scatter_rows(&mut self.scratch.hidden[i], h, &cached_ids[i], &y[i]);
+                        }
+                    }
+                } else {
+                    // host-round-trip reference: per-block upload/download
+                    // with the full scatter/gather of the seed loop
+                    for k in blk..end {
+                        let staged = wait_staged(k);
+                        self.scratch.pack_compute_rows(members, n, h, bb);
+                        let out = match mode {
+                            CacheMode::CacheY => {
+                                self.rt.run_block_y(k, n, bb, &self.scratch.packed[..bb * n * h])?
+                            }
+                            CacheMode::CacheKV => {
+                                let (kc, vc) = staged.kv_packed.as_ref().expect("kv staged");
+                                self.rt.run_block_kv(
+                                    k,
+                                    n,
+                                    bb,
+                                    &self.scratch.packed[..bb * n * h],
+                                    kc,
+                                    vc,
+                                )?
+                            }
+                        };
+                        // scatter computed rows + replenish cached rows
+                        for (i, m) in members.iter().enumerate() {
+                            let ids = m.prep.perm.compute_ids(n);
+                            let src = &out[i * n * h..(i + 1) * n * h];
+                            scatter_rows(&mut self.scratch.hidden[i], h, ids, src);
+                            scatter_rows(
+                                &mut self.scratch.hidden[i],
+                                h,
+                                &cached_ids[i],
+                                &staged.y[i],
+                            );
+                        }
+                    }
                 }
             } else {
-                // full block: all L tokens, no load
-                full.resize(bb * l * h, 0.0);
-                for i in 0..bb {
-                    let mi = i.min(b - 1);
-                    full[i * l * h..(i + 1) * l * h].copy_from_slice(&hidden[mi]);
-                }
-                let out = self.rt.run_block_y(blk, l, bb, &full)?;
-                for (i, hbuf) in hidden.iter_mut().enumerate() {
-                    hbuf.copy_from_slice(&out[i * l * h..(i + 1) * l * h]);
+                // full run: all L tokens, no loads
+                if device {
+                    self.scratch.pack_full_rows(b, l, h, bb);
+                    Self::run_full_chain(&self.rt, &mut self.scratch, blk, end, bb, true)?;
+                    for i in 0..b {
+                        let StepScratch { hidden, out, .. } = &mut self.scratch;
+                        hidden[i].copy_from_slice(&out[i * l * h..(i + 1) * l * h]);
+                    }
+                } else {
+                    for k in blk..end {
+                        self.scratch.pack_full_rows(b, l, h, bb);
+                        let out = self.rt.run_block_y(k, l, bb, &self.scratch.full[..bb * l * h])?;
+                        for (i, hbuf) in self.scratch.hidden[..b].iter_mut().enumerate() {
+                            hbuf.copy_from_slice(&out[i * l * h..(i + 1) * l * h]);
+                        }
+                    }
                 }
             }
+            blk = end;
         }
 
         // -- latent update ----------------------------------------------------
         for (i, m) in members.iter_mut().enumerate() {
-            let sched = self.rt.schedule();
-            let masked: Vec<usize> = m.prep.perm.compute_ids(m.prep.masked_count).to_vec();
-            let mut eps_masked = vec![0f32; masked.len() * h];
-            for (r, &id) in masked.iter().enumerate() {
-                eps_masked[r * h..(r + 1) * h]
-                    .copy_from_slice(&hidden[i][id * h..(id + 1) * h]);
-            }
-            sched.update_rows(m.step, m.latent.data_mut(), h, &masked, &eps_masked);
-            let unmasked: Vec<usize> = m.prep.perm.cached_ids(m.prep.masked_count).to_vec();
-            let teps = m.acts.eps(m.step);
-            let mut eps_unm = vec![0f32; unmasked.len() * h];
-            for (r, &id) in unmasked.iter().enumerate() {
-                eps_unm[r * h..(r + 1) * h].copy_from_slice(&teps[id * h..(id + 1) * h]);
-            }
-            sched.update_rows(m.step, m.latent.data_mut(), h, &unmasked, &eps_unm);
-            m.step += 1;
-            m.steps_computed += 1;
+            let Member { prep, acts, latent, step, steps_computed, .. } = m;
+            *steps_computed += 1;
+            Self::advance_latent(
+                self.rt.schedule(),
+                h,
+                prep,
+                acts,
+                step,
+                latent,
+                &self.scratch.hidden[i],
+            );
         }
         Ok(())
     }
@@ -1062,6 +1316,16 @@ impl Worker {
         self.shared.running.store(members.len(), Ordering::Relaxed);
         let masked: usize = members.iter().map(|m| m.prep.masked_count).sum();
         self.shared.running_masked.store(masked, Ordering::Relaxed);
+        {
+            let mut ratios = self.shared.running_ratios.lock().unwrap();
+            ratios.clear();
+            ratios.extend(members.iter().map(|m| m.prep.request.mask.ratio()));
+        }
+        let t = self.rt.transfer_totals();
+        self.shared.h2d_ops.store(t.h2d_ops, Ordering::Relaxed);
+        self.shared.d2h_ops.store(t.d2h_ops, Ordering::Relaxed);
+        self.shared.h2d_bytes.store(t.h2d_bytes, Ordering::Relaxed);
+        self.shared.d2h_bytes.store(t.d2h_bytes, Ordering::Relaxed);
     }
 }
 
@@ -1074,5 +1338,102 @@ fn gather_rows(src: &[f32], h: usize, ids: &[usize], out: &mut [f32]) {
 fn scatter_rows(dst: &mut [f32], h: usize, ids: &[usize], src: &[f32]) {
     for (i, &id) in ids.iter().enumerate() {
         dst[id * h..(id + 1) * h].copy_from_slice(&src[i * h..(i + 1) * h]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Pcg;
+
+    /// Simulate the per-step scratch traffic of one engine shape.
+    fn simulate_step(s: &mut StepScratch, b: usize, bb: usize, n: usize, l: usize, h: usize) {
+        StepScratch::resize_tracked(&mut s.packed, bb * n * h, &mut s.grows);
+        StepScratch::resize_tracked(&mut s.full, bb * l * h, &mut s.grows);
+        if s.hidden.len() < b {
+            s.grows += 1;
+            s.hidden.resize_with(b, Vec::new);
+        }
+        for i in 0..b {
+            let StepScratch { hidden, grows, .. } = s;
+            if hidden[i].capacity() < l * h {
+                *grows += 1;
+            }
+            hidden[i].clear();
+            hidden[i].resize(l * h, 0.0);
+        }
+        s.compute.clear();
+        s.compute.resize(b, true);
+    }
+
+    #[test]
+    fn scratch_arena_stops_growing_once_warm() {
+        // property: replaying any step-shape sequence a second time must
+        // not grow the arena — the hot loop is allocation-free once warm.
+        prop_check("scratch arena no per-step growth", 50, |rng: &mut Pcg| {
+            let mut s = StepScratch::default();
+            let (l, h) = (16 + rng.below(16), 4 + rng.below(8));
+            let shapes: Vec<(usize, usize, usize)> = (0..4 + rng.below(4))
+                .map(|_| {
+                    let b = 1 + rng.below(8);
+                    let bb = b.next_power_of_two();
+                    let n = 1 + rng.below(l);
+                    (b, bb, n)
+                })
+                .collect();
+            for &(b, bb, n) in &shapes {
+                simulate_step(&mut s, b, bb, n, l, h);
+            }
+            let warm = s.grows;
+            for _ in 0..3 {
+                for &(b, bb, n) in &shapes {
+                    simulate_step(&mut s, b, bb, n, l, h);
+                }
+            }
+            prop_assert!(
+                s.grows == warm,
+                "arena grew after warmup: {} -> {} (shapes {:?})",
+                warm,
+                s.grows,
+                shapes
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn snapshot_collects_real_mask_ratios() {
+        use crate::engine::request::EditRequest;
+        use crate::model::MaskSpec;
+
+        let q = WorkerQueue::new();
+        q.push_raw(EditRequest::new(1, "t", MaskSpec::new(vec![0, 1], 16), 1));
+        let shared = WorkerShared::default();
+        shared.running.store(1, Ordering::Relaxed);
+        *shared.running_ratios.lock().unwrap() = vec![0.5];
+        let snap = WorkerSnapshot::collect(3, &q, &shared);
+        assert_eq!(snap.worker_id, 3);
+        assert_eq!(snap.queued, 1);
+        assert_eq!(snap.running, 1);
+        let mut ratios = snap.mask_ratios;
+        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(ratios, vec![2.0 / 16.0, 0.5], "queued + running ratios");
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_is_identity() {
+        // the device-chain identity the step loop exploits: scatter(ids,
+        // out) then gather(ids) returns out unchanged
+        let h = 4;
+        let l = 8;
+        let ids = [5usize, 1, 6];
+        let mut hidden: Vec<f32> = (0..l * h).map(|i| i as f32).collect();
+        let out: Vec<f32> = (0..ids.len() * h).map(|i| -(i as f32)).collect();
+        scatter_rows(&mut hidden, h, &ids, &out);
+        let mut back = vec![0f32; ids.len() * h];
+        gather_rows(&hidden, h, &ids, &mut back);
+        assert_eq!(back, out);
     }
 }

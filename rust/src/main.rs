@@ -51,7 +51,7 @@ fn print_help() {
          \x20 run            --model sdxlm --workers 2 --rps 1.0 --requests 40 --system instgenie\n\
          \x20                --scheduler round-robin|request-lb|token-lb|cache-aware|mask-aware|qos-aware\n\
          \x20                --dist production --templates 4 --class-mix 0.2,0.5,0.3\n\
-         \x20                [--no-qos] [--aging-ms 2000] [--max-pending 4096]\n\
+         \x20                [--no-qos] [--aging-ms 2000] [--max-pending 4096] [--host-step-loop]\n\
          \x20 calibrate      --model fluxm [--reps 20]\n\
          \x20 workload-stats --dist production|public|viton\n\
          \x20 register       --model sdxlm --templates 4\n\
@@ -96,6 +96,9 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     cfg.registration_wait_ms = args.u64("registration-wait-ms", cfg.registration_wait_ms);
     cfg.force_all_cached = args.bool("force-all-cached");
     cfg.naive_loading = args.bool("naive-loading");
+    // device-resident step loop is the default; --host-step-loop runs the
+    // per-block host-round-trip reference (golden baseline / debugging)
+    cfg.device_resident = !args.bool("host-step-loop");
     // QoS: on by default; --no-qos reverts to the FIFO baseline
     if args.bool("no-qos") {
         cfg.qos.enabled = false;

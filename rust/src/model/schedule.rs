@@ -53,6 +53,28 @@ impl Schedule {
             }
         }
     }
+
+    /// [`Schedule::update_rows`] with eps rows gathered in place: the eps
+    /// row for token `id` is read at `eps_full[id * hidden ..]` instead
+    /// of from a pre-gathered staging buffer. The step loop's latent
+    /// update uses this to skip the per-member eps gather allocation.
+    pub fn update_rows_gathered(
+        &self,
+        step: usize,
+        latent: &mut [f32],
+        hidden: usize,
+        ids: &[usize],
+        eps_full: &[f32],
+    ) {
+        let d = self.delta(step);
+        for &id in ids {
+            let x = &mut latent[id * hidden..(id + 1) * hidden];
+            let e = &eps_full[id * hidden..(id + 1) * hidden];
+            for (xv, ev) in x.iter_mut().zip(e) {
+                *xv -= d * ev;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -88,5 +110,24 @@ mod tests {
     #[should_panic(expected = "decrease")]
     fn rejects_non_monotone() {
         Schedule::new(vec![1.0, 1.2, 0.0]);
+    }
+
+    #[test]
+    fn gathered_update_matches_staged_update() {
+        let s = sched();
+        let h = 2;
+        let l = 4;
+        let eps_full: Vec<f32> = (0..l * h).map(|i| i as f32 * 0.25).collect();
+        let ids = [3usize, 1];
+        // reference: gather eps rows into a staging buffer first
+        let mut staged = vec![0f32; ids.len() * h];
+        for (r, &id) in ids.iter().enumerate() {
+            staged[r * h..(r + 1) * h].copy_from_slice(&eps_full[id * h..(id + 1) * h]);
+        }
+        let mut a = vec![1.0f32; l * h];
+        let mut b = a.clone();
+        s.update_rows(1, &mut a, h, &ids, &staged);
+        s.update_rows_gathered(1, &mut b, h, &ids, &eps_full);
+        assert_eq!(a, b);
     }
 }

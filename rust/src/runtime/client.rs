@@ -9,15 +9,26 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
+/// One executable cache slot. The per-key mutex serializes compilation
+/// of that artifact: a second caller that races the first blocks on the
+/// slot (not the whole cache) and receives the already-compiled
+/// executable instead of compiling again. A failed compile leaves the
+/// slot empty so the next caller retries. (Today a `Client` is
+/// thread-confined — see the Send/Sync NOTE below — so the race is
+/// structural future-proofing: runtimes sharing one `Arc<Client>` must
+/// stay compile-once even if a later refactor lets them run
+/// concurrently.)
+type Slot = Arc<Mutex<Option<Arc<PjRtLoadedExecutable>>>>;
+
 /// Shared PJRT CPU client with an executable cache.
 pub struct Client {
     client: PjRtClient,
-    cache: Mutex<HashMap<String, std::sync::Arc<PjRtLoadedExecutable>>>,
+    cache: Mutex<HashMap<String, Slot>>,
 }
 
 // NOTE: no Send/Sync impls here on purpose. The xla crate's PjRtClient
@@ -36,14 +47,21 @@ impl Client {
         self.client.platform_name()
     }
 
-    /// Load + compile an HLO text file, caching by `key`.
-    pub fn load_hlo(
-        &self,
-        key: &str,
-        path: &Path,
-    ) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(key) {
-            return Ok(std::sync::Arc::clone(exe));
+    /// Load + compile an HLO text file, caching by `key`. Compile-once:
+    /// concurrent callers of the same key serialize on a per-key slot
+    /// (the old check-then-insert let both compile and one win the
+    /// insert), and distinct keys still compile independently.
+    pub fn load_hlo(&self, key: &str, path: &Path) -> Result<Arc<PjRtLoadedExecutable>> {
+        let slot: Slot = Arc::clone(
+            self.cache
+                .lock()
+                .unwrap()
+                .entry(key.to_string())
+                .or_default(),
+        );
+        let mut guard = slot.lock().unwrap();
+        if let Some(exe) = guard.as_ref() {
+            return Ok(Arc::clone(exe));
         }
         let proto = HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 artifact path")?,
@@ -54,17 +72,20 @@ impl Client {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {key}"))?;
-        let exe = std::sync::Arc::new(exe);
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(key.to_string(), std::sync::Arc::clone(&exe));
+        let exe = Arc::new(exe);
+        *guard = Some(Arc::clone(&exe));
         Ok(exe)
     }
 
-    /// Number of compiled executables currently cached.
+    /// Number of compiled executables currently cached (slots created by
+    /// a failed compile stay empty and are not counted).
     pub fn compiled_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| s.lock().unwrap().is_some())
+            .count()
     }
 
     /// Upload a host f32 buffer to the device (for persistent weights).
@@ -105,4 +126,22 @@ pub fn tuple_to_vecs(buf: &PjRtBuffer) -> Result<Vec<Vec<f32>>> {
         .into_iter()
         .map(|p| p.to_vec::<f32>().context("tuple elem to f32 vec"))
         .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failed_compile_leaves_slot_retryable() {
+        // A bad artifact path must error out without poisoning the
+        // per-key slot or counting as a cached executable.
+        let Ok(client) = Client::cpu() else { return };
+        let bad = Path::new("/nonexistent/artifact.hlo.txt");
+        assert!(client.load_hlo("k", bad).is_err());
+        assert_eq!(client.compiled_count(), 0);
+        // retry goes through the same slot (no deadlock, still an error)
+        assert!(client.load_hlo("k", bad).is_err());
+        assert_eq!(client.compiled_count(), 0);
+    }
 }

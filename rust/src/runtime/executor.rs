@@ -2,25 +2,109 @@
 //! AOT-compiled XLA programs.
 //!
 //! One `ModelRuntime` per (worker, model): it owns the PJRT client handle,
-//! the device-resident weights, and the schedule/embedding tables, and
-//! exposes typed `run_block_*` calls operating on host f32 slices. Data
-//! (activations) travel host->device per call — they change every step —
-//! while weights stay resident (see weights.rs).
+//! the device-resident weights, and the schedule/embedding tables. Two
+//! call families:
+//!
+//! - `run_block_*` — host-slice in, host-vec out. One upload + one
+//!   download per call; the reference path and the registration trace.
+//! - `run_block_*_dev` — `PjRtBuffer` in, `PjRtBuffer` out. Block i+1
+//!   consumes block i's output buffer directly (array-root artifacts,
+//!   manifest v4), so a contiguous run of blocks costs one upload and one
+//!   download total. The worker's device-resident step loop lives on
+//!   these.
+//!
+//! Program lookups go through a pre-resolved table indexed by
+//! (kind, token count, batch bucket) — filled at `warmup` (or first use),
+//! so the hot loop does no mutex/hash/string work. Host<->device
+//! activation traffic is counted per runtime (`transfer_totals`), which
+//! is how the overhead bench proves the "<= 2 transfers per contiguous
+//! same-mode run" invariant.
 
+use std::cell::{Cell, RefCell};
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 use xla::PjRtBuffer;
 
 use super::client::{buffer_to_vec, literal_f32, tuple_to_vecs, Client};
-use super::manifest::{ArtifactKind, Manifest, ModelManifest};
+use super::manifest::{ArtifactKind, ArtifactRoot, Manifest, ModelManifest};
 use super::weights::{DeviceWeights, HostWeights};
 use crate::config::ModelConfig;
 use crate::model::Schedule;
 
 /// Executable handle + metadata for one grid entry.
+#[derive(Clone)]
 struct Program {
     exe: Arc<xla::PjRtLoadedExecutable>,
+    root: ArtifactRoot,
+}
+
+/// Pre-resolved program table: `(kind, n, batch) -> Program` by direct
+/// index, no locks or hashing. Slots fill at `warmup` or on first lazy
+/// use; shapes outside the grid fall back to the manifest lookup.
+struct ProgramTable {
+    token_counts: Vec<usize>,
+    batch_buckets: Vec<usize>,
+    slots: Vec<Option<Program>>,
+}
+
+impl ProgramTable {
+    fn new(config: &ModelConfig, batch_buckets: &[usize]) -> ProgramTable {
+        let token_counts = config.all_token_counts();
+        let slots = vec![None; 3 * token_counts.len() * batch_buckets.len()];
+        ProgramTable { token_counts, batch_buckets: batch_buckets.to_vec(), slots }
+    }
+
+    fn index(&self, kind: ArtifactKind, n: usize, batch: usize) -> Option<usize> {
+        let k = match kind {
+            ArtifactKind::BlockY => 0,
+            ArtifactKind::BlockKV => 1,
+            ArtifactKind::BlockReg => 2,
+        };
+        let t = self.token_counts.iter().position(|&c| c == n)?;
+        let b = self.batch_buckets.iter().position(|&c| c == batch)?;
+        Some((k * self.token_counts.len() + t) * self.batch_buckets.len() + b)
+    }
+}
+
+/// Cumulative host<->device activation traffic of one runtime. Weights
+/// (uploaded once at load) are excluded: this counts exactly the per-step
+/// coordinator traffic the device-resident loop minimizes.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransferTotals {
+    pub h2d_ops: u64,
+    pub d2h_ops: u64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+}
+
+#[derive(Default)]
+struct TransferCounters {
+    h2d_ops: Cell<u64>,
+    d2h_ops: Cell<u64>,
+    h2d_bytes: Cell<u64>,
+    d2h_bytes: Cell<u64>,
+}
+
+impl TransferCounters {
+    fn count_h2d(&self, floats: usize) {
+        self.h2d_ops.set(self.h2d_ops.get() + 1);
+        self.h2d_bytes.set(self.h2d_bytes.get() + 4 * floats as u64);
+    }
+
+    fn count_d2h(&self, floats: usize) {
+        self.d2h_ops.set(self.d2h_ops.get() + 1);
+        self.d2h_bytes.set(self.d2h_bytes.get() + 4 * floats as u64);
+    }
+
+    fn totals(&self) -> TransferTotals {
+        TransferTotals {
+            h2d_ops: self.h2d_ops.get(),
+            d2h_ops: self.d2h_ops.get(),
+            h2d_bytes: self.h2d_bytes.get(),
+            d2h_bytes: self.d2h_bytes.get(),
+        }
+    }
 }
 
 /// Per-model runtime: compiled programs + weights + schedule.
@@ -32,6 +116,8 @@ pub struct ModelRuntime {
     host_weights: HostWeights,
     device_weights: DeviceWeights,
     schedule: Schedule,
+    table: RefCell<ProgramTable>,
+    transfers: TransferCounters,
 }
 
 // SAFETY: ModelRuntime transitively holds `Rc`-based PJRT handles, so it
@@ -40,7 +126,9 @@ pub struct ModelRuntime {
 // exclusively there. The engine upholds this: each Worker constructs its
 // own Client + ModelRuntime pair via `ModelRuntime::create`, moves them
 // into the worker thread, and never shares them. Loader / pre-post
-// threads operate on plain host data only.
+// threads operate on plain host data only. (The RefCell program table
+// and Cell transfer counters are single-thread state under the same
+// invariant; the runtime is deliberately !Sync.)
 unsafe impl Send for ModelRuntime {}
 
 impl ModelRuntime {
@@ -59,6 +147,7 @@ impl ModelRuntime {
         let host_weights = HostWeights::load(&man)?;
         let device_weights = DeviceWeights::upload(&client, &host_weights)?;
         let schedule = Schedule::new(host_weights.sigmas.clone());
+        let table = RefCell::new(ProgramTable::new(&config, &manifest.batch_buckets));
         Ok(ModelRuntime {
             client,
             manifest: man,
@@ -67,6 +156,8 @@ impl ModelRuntime {
             host_weights,
             device_weights,
             schedule,
+            table,
+            transfers: TransferCounters::default(),
         })
     }
 
@@ -97,14 +188,33 @@ impl ModelRuntime {
         &self.client
     }
 
+    /// Host<->device activation traffic so far (see [`TransferTotals`]).
+    pub fn transfer_totals(&self) -> TransferTotals {
+        self.transfers.totals()
+    }
+
+    /// Resolve (and memoize) the program for one grid entry. Table hits
+    /// cost two `Vec` position scans over <= ~10 entries — no mutex, no
+    /// string hashing.
     fn program(&self, kind: ArtifactKind, n: usize, batch: usize) -> Result<Program> {
+        let idx = self.table.borrow().index(kind, n, batch);
+        if let Some(i) = idx {
+            if let Some(p) = self.table.borrow().slots[i].clone() {
+                return Ok(p);
+            }
+        }
         let art = self.manifest.artifact(kind, n, batch)?;
         let exe = self.client.load_hlo(&art.name, &art.file)?;
-        Ok(Program { exe })
+        let prog = Program { exe, root: art.root };
+        if let Some(i) = idx {
+            self.table.borrow_mut().slots[i] = Some(prog.clone());
+        }
+        Ok(prog)
     }
 
     /// Eagerly compile the programs a serving run will need (avoids
-    /// first-request compile latency in latency-sensitive benches).
+    /// first-request compile latency in latency-sensitive benches) and
+    /// fill the pre-resolved table the hot loop indexes into.
     pub fn warmup(&self, batches: &[usize]) -> Result<()> {
         for &b in batches {
             for n in self.config.all_token_counts() {
@@ -118,10 +228,60 @@ impl ModelRuntime {
         Ok(())
     }
 
+    /// Whether `(kind, n, batch)` programs chain device-to-device: their
+    /// root is the bare activation array (manifest v4). Tuple-root grids
+    /// (pre-v4 artifacts) make the step loop fall back to host stepping;
+    /// resolution errors also answer `false` — the host path will surface
+    /// the same error with context.
+    pub fn device_chain_supported(&self, kind: ArtifactKind, n: usize, batch: usize) -> bool {
+        self.program(kind, n, batch)
+            .map(|p| p.root == ArtifactRoot::Array)
+            .unwrap_or(false)
+    }
+
+    /// Upload a packed activation tensor (counted step-loop traffic).
+    pub fn upload_activations(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.transfers.count_h2d(data.len());
+        self.client.upload(data, dims)
+    }
+
+    /// Root-aware readback of a block output into `out` (counted).
+    fn read_block_output(&self, prog: &Program, buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        let v = match prog.root {
+            ArtifactRoot::Array => buffer_to_vec(buf)?,
+            ArtifactRoot::Tuple => {
+                let mut parts = tuple_to_vecs(buf)?;
+                anyhow::ensure!(parts.len() == 1, "block returns 1-tuple");
+                parts.pop().unwrap()
+            }
+        };
+        self.transfers.count_d2h(v.len());
+        Ok(v)
+    }
+
+    /// Download the final buffer of a device-resident block chain
+    /// (counted). The readback `Vec` is allocated inside the xla crate's
+    /// literal conversion and *moved* into `out` — the scratch slot
+    /// bounds live allocations to one per run, it cannot elide this one
+    /// (see ROADMAP "Hot path").
+    pub fn fetch_block_output(
+        &self,
+        kind: ArtifactKind,
+        n: usize,
+        batch: usize,
+        buf: &PjRtBuffer,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let prog = self.program(kind, n, batch)?;
+        *out = self.read_block_output(&prog, buf)?;
+        Ok(())
+    }
+
     /// Execute one cache-Y (or full, n == L) block.
     ///
     /// `x` is the packed `(batch, n, H)` compute-set input; returns the
-    /// block output in the same layout.
+    /// block output in the same layout. Host round trip per call — the
+    /// reference path; the step loop uses [`ModelRuntime::run_block_y_dev`].
     pub fn run_block_y(
         &self,
         block_idx: usize,
@@ -132,11 +292,27 @@ impl ModelRuntime {
         let h = self.config.hidden;
         anyhow::ensure!(x.len() == batch * n * h, "run_block_y input shape");
         let prog = self.program(ArtifactKind::BlockY, n, batch)?;
-        let x_buf = self.client.upload(x, &[batch, n, h])?;
-        let out = self.execute_with_weights(&prog, vec![x_buf], block_idx)?;
-        let mut parts = tuple_to_vecs(&out)?;
-        anyhow::ensure!(parts.len() == 1, "block_y returns 1-tuple");
-        Ok(parts.pop().unwrap())
+        let x_buf = self.upload_activations(x, &[batch, n, h])?;
+        let out = self.execute_with_weights(&prog, &[&x_buf], block_idx)?;
+        self.read_block_output(&prog, &out)
+    }
+
+    /// Device-resident cache-Y (or full) block: consumes the previous
+    /// block's output buffer, returns this block's — no host copy.
+    /// Requires an array-root artifact (`device_chain_supported`).
+    pub fn run_block_y_dev(
+        &self,
+        block_idx: usize,
+        n: usize,
+        batch: usize,
+        x: &PjRtBuffer,
+    ) -> Result<PjRtBuffer> {
+        let prog = self.program(ArtifactKind::BlockY, n, batch)?;
+        anyhow::ensure!(
+            prog.root == ArtifactRoot::Array,
+            "run_block_y_dev requires array-root artifacts (manifest v4)"
+        );
+        self.execute_with_weights(&prog, &[x], block_idx)
     }
 
     /// Execute one cache-KV block: masked Q attends over computed K/V ++
@@ -158,13 +334,32 @@ impl ModelRuntime {
             "run_block_kv cache shape"
         );
         let prog = self.program(ArtifactKind::BlockKV, n, batch)?;
-        let x_buf = self.client.upload(x, &[batch, n, h])?;
-        let k_buf = self.client.upload(k_cache, &[batch, l - n, h])?;
-        let v_buf = self.client.upload(v_cache, &[batch, l - n, h])?;
-        let out = self.execute_with_weights(&prog, vec![x_buf, k_buf, v_buf], block_idx)?;
-        let mut parts = tuple_to_vecs(&out)?;
-        anyhow::ensure!(parts.len() == 1, "block_kv returns 1-tuple");
-        Ok(parts.pop().unwrap())
+        let x_buf = self.upload_activations(x, &[batch, n, h])?;
+        let k_buf = self.upload_activations(k_cache, &[batch, l - n, h])?;
+        let v_buf = self.upload_activations(v_cache, &[batch, l - n, h])?;
+        let out = self.execute_with_weights(&prog, &[&x_buf, &k_buf, &v_buf], block_idx)?;
+        self.read_block_output(&prog, &out)
+    }
+
+    /// Device-resident cache-KV block: `x` chains from the previous
+    /// block; the staged K/V buffers are uploaded by the caller (the one
+    /// per-cached-block transfer the loop still pays — see ROADMAP "Hot
+    /// path" open items).
+    pub fn run_block_kv_dev(
+        &self,
+        block_idx: usize,
+        n: usize,
+        batch: usize,
+        x: &PjRtBuffer,
+        k_cache: &PjRtBuffer,
+        v_cache: &PjRtBuffer,
+    ) -> Result<PjRtBuffer> {
+        let prog = self.program(ArtifactKind::BlockKV, n, batch)?;
+        anyhow::ensure!(
+            prog.root == ArtifactRoot::Array,
+            "run_block_kv_dev requires array-root artifacts (manifest v4)"
+        );
+        self.execute_with_weights(&prog, &[x, k_cache, v_cache], block_idx)
     }
 
     /// Execute one registration block (batch 1, full sequence):
@@ -174,8 +369,9 @@ impl ModelRuntime {
         let l = self.config.tokens;
         anyhow::ensure!(x.len() == l * h, "run_block_reg input shape");
         let prog = self.program(ArtifactKind::BlockReg, l, 1)?;
-        let x_buf = self.client.upload(x, &[1, l, h])?;
-        let out = self.execute_with_weights(&prog, vec![x_buf], block_idx)?;
+        // registration is a one-off trace, not step traffic: uncounted
+        let x_buf = self.upload(x, &[1, l, h])?;
+        let out = self.execute_with_weights(&prog, &[&x_buf], block_idx)?;
         let mut parts = tuple_to_vecs(&out)?;
         anyhow::ensure!(parts.len() == 3, "block_reg returns (y, k, v)");
         let v = parts.pop().unwrap();
@@ -187,12 +383,12 @@ impl ModelRuntime {
     fn execute_with_weights(
         &self,
         prog: &Program,
-        data_args: Vec<PjRtBuffer>,
+        data_args: &[&PjRtBuffer],
         block_idx: usize,
     ) -> Result<PjRtBuffer> {
         let wbufs = &self.device_weights.blocks[block_idx];
         let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(data_args.len() + wbufs.len());
-        args.extend(data_args.iter());
+        args.extend(data_args.iter().copied());
         args.extend(wbufs.iter());
         let mut results = prog
             .exe
@@ -203,17 +399,17 @@ impl ModelRuntime {
             .and_then(|mut r| if r.is_empty() { None } else { Some(r.remove(0)) })
             .context("empty execution result")?;
         // results is Vec<Vec<buffer>>: [replica][output]; tuple packing
-        // means a single output buffer.
+        // (or an array root) means a single output buffer.
         let _ = &mut replica;
         Ok(replica)
     }
 
-    /// Upload helper for tests/benches.
+    /// Upload helper for tests/benches (uncounted: not step traffic).
     pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
         self.client.upload(data, dims)
     }
 
-    /// Fetch helper for tests/benches.
+    /// Fetch helper for tests/benches (uncounted: not step traffic).
     pub fn fetch(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
         buffer_to_vec(buf)
     }

@@ -32,6 +32,29 @@ impl ArtifactKind {
     }
 }
 
+/// Shape of a compiled program's result (manifest v4 `root` field).
+///
+/// `Array` programs return the bare activation tensor, so their output
+/// buffer feeds the next block's execute directly — the device-resident
+/// step loop requires it. `Tuple` programs (manifest <= v3 grids and the
+/// 3-output registration block) wrap results in a tuple literal that must
+/// round-trip through the host to unwrap; the step loop falls back to
+/// host stepping for them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactRoot {
+    Tuple,
+    Array,
+}
+
+impl ArtifactRoot {
+    fn parse(s: Option<&str>) -> ArtifactRoot {
+        match s {
+            Some("array") => ArtifactRoot::Array,
+            _ => ArtifactRoot::Tuple,
+        }
+    }
+}
+
 /// One compiled HLO program in the grid.
 #[derive(Debug, Clone)]
 pub struct ArtifactEntry {
@@ -40,6 +63,7 @@ pub struct ArtifactEntry {
     pub kind: ArtifactKind,
     pub n: usize,
     pub batch: usize,
+    pub root: ArtifactRoot,
 }
 
 /// A named tensor inside the weights file.
@@ -130,6 +154,7 @@ impl Manifest {
                         kind: ArtifactKind::parse(a.at("kind").as_str().context("a.kind")?)?,
                         n: a.at("n").as_usize().context("a.n")?,
                         batch: a.at("batch").as_usize().context("a.batch")?,
+                        root: ArtifactRoot::parse(a.at("root").as_str()),
                     })
                 })
                 .collect::<Result<Vec<_>>>()?;
@@ -212,7 +237,10 @@ mod tests {
             "paper_analogue": "test", "weights_file": "w.bin",
             "weights": [{"name": "block0.wq", "shape": [8, 8], "offset": 0, "len": 64}],
             "artifacts": [{"name": "a", "file": "a.hlo.txt",
-                           "kind": "block_y", "n": 4, "batch": 2}]
+                           "kind": "block_y", "n": 4, "batch": 2},
+                          {"name": "b", "file": "b.hlo.txt",
+                           "kind": "block_y", "n": 8, "batch": 2,
+                           "root": "array"}]
           }}}"#;
         std::fs::write(dir.join("manifest.json"), text).unwrap();
         let man = Manifest::load(&dir).unwrap();
@@ -221,6 +249,16 @@ mod tests {
         let m = man.model("tiny").unwrap();
         assert_eq!(m.config.tokens, 16);
         assert!(m.artifact(ArtifactKind::BlockY, 4, 2).is_ok());
+        // v3 manifests carry no `root`: default to the tuple convention;
+        // v4 entries declare array roots explicitly
+        assert_eq!(
+            m.artifact(ArtifactKind::BlockY, 4, 2).unwrap().root,
+            ArtifactRoot::Tuple
+        );
+        assert_eq!(
+            m.artifact(ArtifactKind::BlockY, 8, 2).unwrap().root,
+            ArtifactRoot::Array
+        );
         assert!(m.artifact(ArtifactKind::BlockKV, 4, 2).is_err());
         assert_eq!(m.weight("block0.wq").unwrap().len, 64);
         std::fs::remove_dir_all(&dir).ok();

@@ -7,5 +7,5 @@ pub mod manifest;
 pub mod weights;
 
 pub use client::Client;
-pub use executor::ModelRuntime;
-pub use manifest::{ArtifactKind, Manifest, ModelManifest};
+pub use executor::{ModelRuntime, TransferTotals};
+pub use manifest::{ArtifactKind, ArtifactRoot, Manifest, ModelManifest};

@@ -86,6 +86,125 @@ impl Table {
     }
 }
 
+/// One measured step-loop overhead sample (shared by the §6.6 microbench
+/// row and `examples/overhead_bench.rs`, so the two cannot drift apart).
+#[derive(Debug, Clone, Copy)]
+pub struct StepOverhead {
+    /// Mean measured step latency (batch inference time / steps).
+    pub step_latency: f64,
+    /// `step_latency - pipeline::ideal_latency(costs)`.
+    pub overhead: f64,
+    pub transfers_per_step: f64,
+    pub h2d_bytes_per_step: f64,
+    pub d2h_bytes_per_step: f64,
+    pub steps: usize,
+    /// Token bucket of the solo requests.
+    pub bucket_n: usize,
+    /// Ideal (free-load) per-step latency from the worker's own costs.
+    pub ideal: f64,
+    /// Algorithm-1 predicted per-step latency.
+    pub planned: f64,
+}
+
+/// Measure per-step coordinator overhead on a solo request stream: a
+/// 1-worker static-batching InstGenIE cluster serves `requests` equal
+/// edits sequentially (every step at b = 1, fixed bucket), then the
+/// measured step latency is compared against `pipeline::ideal_latency`
+/// on the same costs the worker's DP sees (copy-stream slope =
+/// 1/bandwidth, engine cache mode). `device` toggles the
+/// device-resident loop vs the host-round-trip reference. `Ok(None)`
+/// when artifacts are not built.
+pub fn measure_step_overhead(
+    model: &str,
+    device: bool,
+    requests: usize,
+    ratio: f64,
+) -> anyhow::Result<Option<StepOverhead>> {
+    use crate::cache::{pipeline, LatencyModel};
+    use crate::cluster::{Cluster, ClusterOpts};
+    use crate::config::{BatchingPolicy, EngineConfig, SystemKind};
+    use crate::engine::request::EditRequestBuilder;
+    use crate::util::stats::LinearFit;
+    use std::time::Duration;
+
+    let Ok(manifest) = crate::runtime::Manifest::load("artifacts") else {
+        return Ok(None);
+    };
+    let Ok(mcfg) = manifest.model(model).map(|m| m.config.clone()) else {
+        return Ok(None);
+    };
+    let lat = LatencyModel::load_or_nominal("artifacts", model);
+    let mut engine = EngineConfig::for_system(SystemKind::InstGenIE);
+    engine.batching = BatchingPolicy::Static;
+    engine.device_resident = device;
+    engine.prepost_cpu_us = 100;
+    let mode = engine.cache_mode;
+    let bandwidth = engine.sim_bandwidth;
+    let sched = crate::scheduler::by_name(
+        "round-robin",
+        &mcfg,
+        &lat,
+        engine.cache_mode,
+        engine.max_batch,
+    )
+    .expect("scheduler");
+    let cluster = Cluster::launch(
+        ClusterOpts {
+            workers: 1,
+            engine,
+            model: model.into(),
+            artifact_dir: "artifacts".into(),
+            templates: vec!["tpl-oh".into()],
+            lat_model: lat.clone(),
+            warmup: true,
+        },
+        sched,
+    )?;
+
+    let mut inference = 0.0;
+    let mut n = 0;
+    for i in 0..requests.max(1) {
+        let req = EditRequestBuilder::new(1 + i as u64)
+            .template("tpl-oh")
+            .prompt_seed(7) // same mask for every request -> fixed bucket
+            .synth_mask(mcfg.latent_hw, ratio)
+            .map_err(anyhow::Error::new)?
+            .build()
+            .map_err(anyhow::Error::new)?;
+        n = mcfg.bucket_for(req.mask.masked_count());
+        let resp = cluster
+            .submit_checked(req)
+            .map_err(anyhow::Error::new)?
+            .wait(Duration::from_secs(600))
+            .map_err(anyhow::Error::new)?;
+        inference += resp.timing.inference;
+    }
+    // the final publish lands just after the last ticket resolves
+    std::thread::sleep(Duration::from_millis(200));
+    let snap = cluster.worker_snapshots().remove(0);
+    cluster.shutdown()?;
+
+    let steps = snap.steps_executed.max(1);
+    let mut worker_lat = lat;
+    worker_lat.load = LinearFit { slope: 1.0 / bandwidth, intercept: 0.0, r2: 1.0 };
+    let costs = worker_lat.step_costs(&mcfg, n, 1, mode);
+    let ideal = pipeline::ideal_latency(&costs);
+    let planned = pipeline::plan(&costs).latency;
+    let step_latency = inference / steps as f64;
+    Ok(Some(StepOverhead {
+        step_latency,
+        overhead: step_latency - ideal,
+        transfers_per_step: (snap.transfers.h2d_ops + snap.transfers.d2h_ops) as f64
+            / steps as f64,
+        h2d_bytes_per_step: snap.transfers.h2d_bytes as f64 / steps as f64,
+        d2h_bytes_per_step: snap.transfers.d2h_bytes as f64 / steps as f64,
+        steps,
+        bucket_n: n,
+        ideal,
+        planned,
+    }))
+}
+
 /// Format seconds adaptively (ns/µs/ms/s).
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-6 {

@@ -7,7 +7,7 @@
 use std::sync::Arc;
 
 use instgenie::model::{Latent, MaskSpec, Permutation};
-use instgenie::runtime::{Client, Manifest, ModelRuntime};
+use instgenie::runtime::{ArtifactKind, Client, Manifest, ModelRuntime};
 
 fn runtime(model: &str) -> Option<ModelRuntime> {
     let manifest = Manifest::load("artifacts").ok()?;
@@ -102,6 +102,86 @@ fn warmup_compiles_grid() {
     let Some(rt) = runtime("sd21m") else { return };
     rt.warmup(&[1, 2]).expect("warmup");
     assert!(rt.client().compiled_count() >= 2 * (5 + 4) + 1);
+}
+
+#[test]
+fn device_chain_matches_host_roundtrip_bitwise() {
+    // The device-resident invariant at the runtime layer: chaining block
+    // output buffers device-to-device equals the per-block host round
+    // trip bit-for-bit (gather/scatter identity, same programs).
+    let Some(rt) = runtime("sd21m") else { return };
+    let cfg = rt.config.clone();
+    let n = cfg.token_buckets[1];
+    if !rt.device_chain_supported(ArtifactKind::BlockY, n, 1) {
+        return; // pre-v4 tuple-root artifacts: chain unavailable
+    }
+    let x = Latent::noise(n, cfg.hidden, 3, 1.0);
+    let mut host = x.data().to_vec();
+    for blk in 0..cfg.blocks {
+        host = rt.run_block_y(blk, n, 1, &host).expect("host block");
+    }
+    let mut buf = rt.upload(x.data(), &[1, n, cfg.hidden]).expect("upload");
+    for blk in 0..cfg.blocks {
+        buf = rt.run_block_y_dev(blk, n, 1, &buf).expect("dev block");
+    }
+    let mut dev = Vec::new();
+    rt.fetch_block_output(ArtifactKind::BlockY, n, 1, &buf, &mut dev)
+        .expect("fetch");
+    assert_eq!(host.len(), dev.len());
+    for (i, (a, b)) in host.iter().zip(&dev).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "row {i} diverged");
+    }
+}
+
+#[test]
+fn transfer_counters_count_step_traffic_only() {
+    let Some(rt) = runtime("sd21m") else { return };
+    let cfg = rt.config.clone();
+    let n = cfg.token_buckets[0];
+    let h = cfg.hidden;
+    let x = Latent::noise(n, h, 9, 1.0);
+    let t0 = rt.transfer_totals();
+    assert_eq!(t0.h2d_ops, 0, "weights/test uploads are uncounted");
+
+    // host call: one upload + one download
+    rt.run_block_y(0, n, 1, x.data()).expect("host block");
+    let t1 = rt.transfer_totals();
+    assert_eq!((t1.h2d_ops - t0.h2d_ops, t1.d2h_ops - t0.d2h_ops), (1, 1));
+    assert_eq!(t1.h2d_bytes - t0.h2d_bytes, (n * h * 4) as u64);
+
+    if !rt.device_chain_supported(ArtifactKind::BlockY, n, 1) {
+        return;
+    }
+    // device chain over every block: one upload + one download total
+    let mut buf = rt
+        .upload_activations(x.data(), &[1, n, h])
+        .expect("upload");
+    for blk in 0..cfg.blocks {
+        buf = rt.run_block_y_dev(blk, n, 1, &buf).expect("dev block");
+    }
+    let mut out = Vec::new();
+    rt.fetch_block_output(ArtifactKind::BlockY, n, 1, &buf, &mut out)
+        .expect("fetch");
+    let t2 = rt.transfer_totals();
+    assert_eq!(
+        (t2.h2d_ops - t1.h2d_ops, t2.d2h_ops - t1.d2h_ops),
+        (1, 1),
+        "a {}-block chain still costs exactly 2 transfers",
+        cfg.blocks
+    );
+}
+
+#[test]
+fn load_hlo_compiles_once_per_key() {
+    let Ok(manifest) = Manifest::load("artifacts") else { return };
+    let man = manifest.model("sd21m").expect("model");
+    let art = &man.artifacts[0];
+    let client = Client::cpu().expect("client");
+    let a = client.load_hlo(&art.name, &art.file).expect("compile");
+    let before = client.compiled_count();
+    let b = client.load_hlo(&art.name, &art.file).expect("cached");
+    assert!(Arc::ptr_eq(&a, &b), "second load must reuse the executable");
+    assert_eq!(client.compiled_count(), before);
 }
 
 #[test]
