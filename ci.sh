@@ -46,6 +46,20 @@ else
   echo "ci.sh: artifacts/ absent; skipping qos bench smoke"
 fi
 
+# Distributed-plane smoke: router + 2 workers over the loopback RPC data
+# plane vs the in-process baseline on the same Zipf trace, written to
+# BENCH_dist.json. Uses real separate worker processes when the serving
+# binary is built; falls back to in-thread worker nodes otherwise.
+if [[ -d artifacts ]]; then
+  if [[ -x target/release/instgenie ]]; then
+    run cargo run --release --example dist_bench -- 24 8 2 --procs target/release/instgenie
+  else
+    run cargo run --release --example dist_bench -- 24 8 2
+  fi
+else
+  echo "ci.sh: artifacts/ absent; skipping dist bench smoke"
+fi
+
 # Coordinator-overhead smoke: per-step transfer counts + per-step
 # overhead (measured minus pipeline-ideal), host reference vs the
 # device-resident step loop, written to BENCH_overhead.json.

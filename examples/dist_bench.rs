@@ -1,0 +1,282 @@
+//! Distributed-plane bench smoke: replay one Zipf-popular Poisson trace
+//! through (a) the in-process cluster baseline and (b) a router + N
+//! worker nodes over the loopback RPC data plane, then write
+//! `BENCH_dist.json` (throughput + p50/p99 for both planes, so the RPC
+//! overhead is a recorded number, not a guess). Also generates a
+//! million-template Zipf trace to show the popularity law scales without
+//! perturbing arrivals.
+//!
+//! Run: `cargo run --release --example dist_bench -- [requests] [rps] [workers]`
+//!
+//! Flags:
+//!   --procs <path-to-instgenie-binary>
+//!       spawn the workers as real separate processes (`serve --role
+//!       worker`) instead of in-process threads
+//!   --zipf <s>
+//!       Zipf exponent for template popularity (default 1.1)
+
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use instgenie::cache::LatencyModel;
+use instgenie::cluster::{Cluster, ClusterOpts};
+use instgenie::config::{EngineConfig, SystemKind};
+use instgenie::dist::{DistConfig, Router, WorkerNode};
+use instgenie::metrics::{Recorder, Report};
+use instgenie::runtime::Manifest;
+use instgenie::scheduler;
+use instgenie::util::json::Json;
+use instgenie::workload::{replay, MaskDist, TraceGen};
+
+const TEMPLATES: usize = 2;
+const SCHED: &str = "round-robin";
+
+fn engine() -> EngineConfig {
+    let mut e = EngineConfig::for_system(SystemKind::InstGenIE);
+    e.prepost_cpu_us = 200;
+    e
+}
+
+fn report_row(rep: &Report) -> Json {
+    Json::obj(vec![
+        ("throughput", Json::num(rep.throughput)),
+        ("p50_e2e", Json::num(rep.e2e.p50)),
+        ("p95_e2e", Json::num(rep.e2e.p95)),
+        ("p99_e2e", Json::num(rep.e2e.p99)),
+        ("mean_e2e", Json::num(rep.e2e.mean)),
+        ("mean_queue", Json::num(rep.queue.mean)),
+        ("completed", Json::num(rep.completed as f64)),
+        ("failed", Json::num(rep.failed as f64)),
+        ("makespan", Json::num(rep.makespan)),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let mut pos: Vec<String> = Vec::new();
+    let mut procs: Option<String> = None;
+    let mut zipf_s = 1.1f64;
+    let mut i = 0;
+    while i < raw.len() {
+        match raw[i].as_str() {
+            "--procs" => {
+                procs = raw.get(i + 1).cloned();
+                i += 2;
+            }
+            "--zipf" => {
+                if let Some(v) = raw.get(i + 1).and_then(|v| v.parse().ok()) {
+                    zipf_s = v;
+                }
+                i += 2;
+            }
+            _ => {
+                pos.push(raw[i].clone());
+                i += 1;
+            }
+        }
+    }
+    let requests: usize = pos.first().and_then(|a| a.parse().ok()).unwrap_or(24);
+    let rps: f64 = pos.get(1).and_then(|a| a.parse().ok()).unwrap_or(8.0);
+    let workers: usize = pos.get(2).and_then(|a| a.parse().ok()).unwrap_or(2).max(1);
+
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("[dist_bench] no artifacts; skipping (run `make artifacts`)");
+        return Ok(());
+    };
+    let model = if manifest.models.contains_key("sd21m") {
+        "sd21m".to_string()
+    } else {
+        match manifest.models.keys().next() {
+            Some(m) => m.clone(),
+            None => {
+                eprintln!("[dist_bench] empty manifest; skipping");
+                return Ok(());
+            }
+        }
+    };
+    let mcfg = manifest.model(&model)?.config.clone();
+    let lat = LatencyModel::load_or_nominal("artifacts", &model);
+    let opts = |workers: usize| ClusterOpts {
+        workers,
+        engine: engine(),
+        model: model.clone(),
+        artifact_dir: "artifacts".into(),
+        templates: (0..TEMPLATES).map(|i| format!("tpl-{i}")).collect(),
+        lat_model: lat.clone(),
+        warmup: true,
+    };
+
+    println!(
+        "== dist bench smoke: model={model} workers={workers} rps={rps} requests={requests} zipf={zipf_s} =="
+    );
+    let events = TraceGen::new(rps, MaskDist::Production, TEMPLATES, 42)
+        .with_zipf(zipf_s)
+        .generate(requests);
+
+    // Million-template scale: same seed and popularity law over 10^6
+    // templates. One uniform draw per event maps through the closed-form
+    // Zipf inverse CDF, so generation is O(requests) and the arrival
+    // times / masks / prompt seeds are invariant in the template count.
+    let huge = TraceGen::new(rps, MaskDist::Production, 1_000_000, 42)
+        .with_zipf(zipf_s)
+        .generate(requests);
+    for (a, b) in events.iter().zip(&huge) {
+        anyhow::ensure!(
+            a.at == b.at && a.mask_ratio == b.mask_ratio && a.prompt_seed == b.prompt_seed,
+            "template count must not perturb arrivals or masks"
+        );
+    }
+    let head = huge
+        .iter()
+        .filter(|e| {
+            e.template
+                .strip_prefix("tpl-")
+                .and_then(|s| s.parse::<usize>().ok())
+                .is_some_and(|k| k < 1_000)
+        })
+        .count() as f64
+        / huge.len().max(1) as f64;
+    println!(
+        "million-template zipf({zipf_s}): top-1000 templates receive {:.0}% of traffic",
+        head * 100.0
+    );
+
+    // -- Phase A: in-process cluster baseline ---------------------------
+    let e = engine();
+    let sched = scheduler::by_name(SCHED, &mcfg, &lat, e.cache_mode, e.max_batch).expect("sched");
+    let baseline = Cluster::launch(opts(workers), sched)?;
+    let t0 = Instant::now();
+    replay(&events, |ev| {
+        baseline.submit_event(ev);
+    });
+    anyhow::ensure!(
+        baseline.await_completed(events.len(), Duration::from_secs(600)),
+        "baseline serving timed out"
+    );
+    let makespan = t0.elapsed().as_secs_f64();
+    let responses = baseline.shutdown()?;
+    let mut rec = Recorder::new();
+    for r in &responses {
+        rec.record(r);
+    }
+    let base_rep = rec.report(makespan);
+    println!(
+        "   in-process: tput={:.2} req/s  e2e p50={:.1}ms p99={:.1}ms",
+        base_rep.throughput,
+        base_rep.e2e.p50 * 1e3,
+        base_rep.e2e.p99 * 1e3,
+    );
+
+    // -- Phase B: router + N workers over the RPC plane -----------------
+    let cfg = DistConfig::fast();
+    let e = engine();
+    let sched = scheduler::by_name(SCHED, &mcfg, &lat, e.cache_mode, e.max_batch).expect("sched");
+    let router = Router::new(mcfg.clone(), sched, None, cfg.clone());
+    let addr = router.start("127.0.0.1:0")?;
+
+    let mut nodes: Vec<Arc<WorkerNode>> = Vec::new();
+    let mut children: Vec<Child> = Vec::new();
+    let mode = if let Some(bin) = &procs {
+        for i in 0..workers {
+            let child = Command::new(bin)
+                .args([
+                    "serve",
+                    "--role",
+                    "worker",
+                    "--router",
+                    &addr.to_string(),
+                    "--rpc-addr",
+                    "127.0.0.1:0",
+                    "--name",
+                    &format!("proc-{i}"),
+                    "--model",
+                    &model,
+                    "--artifacts",
+                    "artifacts",
+                    "--templates",
+                    &TEMPLATES.to_string(),
+                    "--prepost-us",
+                    "200",
+                    "--warmup",
+                    "--heartbeat-ms",
+                    &cfg.heartbeat_ms.to_string(),
+                ])
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()?;
+            children.push(child);
+        }
+        "processes"
+    } else {
+        for i in 0..workers {
+            let node = Arc::new(WorkerNode::launch(format!("w{i}"), opts(1))?);
+            node.start("127.0.0.1:0")?;
+            node.announce_to(&addr.to_string(), &cfg);
+            nodes.push(node);
+        }
+        "threads"
+    };
+
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while router.ready_count() < workers {
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "{mode}: workers never became ready at the router"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    let t0 = Instant::now();
+    let mut tickets = Vec::new();
+    let mut rec = Recorder::new();
+    replay(&events, |ev| match router.submit_event(ev) {
+        Ok(t) => tickets.push(t),
+        Err(e) => rec.record_failure(&e),
+    });
+    for t in &tickets {
+        match t.wait(Duration::from_secs(600)) {
+            Ok(resp) => rec.record(&resp),
+            Err(e) => rec.record_failure(&e),
+        }
+    }
+    let makespan = t0.elapsed().as_secs_f64();
+    let dist_rep = rec.report(makespan);
+    println!(
+        "   dist ({mode}): tput={:.2} req/s  e2e p50={:.1}ms p99={:.1}ms",
+        dist_rep.throughput,
+        dist_rep.e2e.p50 * 1e3,
+        dist_rep.e2e.p99 * 1e3,
+    );
+
+    router.shutdown();
+    for n in &nodes {
+        n.stop();
+    }
+    for mut c in children {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+    anyhow::ensure!(
+        dist_rep.completed == events.len(),
+        "dist plane completed {}/{} requests",
+        dist_rep.completed,
+        events.len()
+    );
+
+    let out = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("workers", Json::num(workers as f64)),
+        ("requests", Json::num(requests as f64)),
+        ("rps", Json::num(rps)),
+        ("templates", Json::num(TEMPLATES as f64)),
+        ("zipf_s", Json::num(zipf_s)),
+        ("mode", Json::str(mode)),
+        ("million_template_head_share", Json::num(head)),
+        ("baseline", report_row(&base_rep)),
+        ("dist", report_row(&dist_rep)),
+    ]);
+    std::fs::write("BENCH_dist.json", out.to_string())?;
+    println!("[dist_bench] wrote BENCH_dist.json");
+    Ok(())
+}

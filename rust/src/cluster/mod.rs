@@ -472,6 +472,7 @@ impl Cluster {
                 .map(|t| t.residency(template_id))
                 .collect(),
             template_bytes: self.templates.bytes(template_id).unwrap_or(0),
+            available: Vec::new(),
         }
     }
 
@@ -736,6 +737,17 @@ impl Cluster {
     /// Seconds since launch (makespan for reports).
     pub fn elapsed(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
+    }
+
+    /// Ask every worker thread to stop after its current batch, without
+    /// consuming the cluster. Used by the dist plane's `WorkerNode`,
+    /// which holds the cluster in an `Arc` and needs to initiate
+    /// shutdown from a `&self` RPC handler; the owning thread still calls
+    /// [`Cluster::shutdown`] afterwards to join and drain.
+    pub fn request_stop(&self) {
+        for s in &self.stops {
+            s.store(true, Ordering::Relaxed);
+        }
     }
 
     /// Stop workers, drain, and return all successful responses. Tickets

@@ -1,0 +1,290 @@
+//! Router-side membership/epoch protocol.
+//!
+//! Workers announce themselves (`POST /rpc/announce`) with their RPC
+//! address and resident templates, then heartbeat (`POST /rpc/heartbeat`)
+//! with a [`WorkerSnapshot`]. The router runs [`Membership::expire`] on a
+//! cadence: a member silent past `suspect_after` is marked [`Suspect`]
+//! (no new work routes to it); past `dead_after` it transitions to
+//! [`Dead`], which is the failover trigger — the router re-submits the
+//! member's queued requests to residency-compatible peers and resolves
+//! its in-flight tickets with [`EditError::WorkerLost`]. A heartbeat from
+//! a `Suspect` member revives it to [`Ready`]; a `Dead` member must
+//! re-announce, which bumps its epoch so stale state is never confused
+//! with the new incarnation. Live drain ([`Membership::begin_drain`])
+//! parallels the template lifecycle's draining semantics: the member
+//! finishes what it holds but receives no new work.
+//!
+//! Slots are stable: a member keeps its index across re-announces, so the
+//! router's book lanes and scheduler worker ids stay aligned.
+//!
+//! [`Suspect`]: MemberState::Suspect
+//! [`Dead`]: MemberState::Dead
+//! [`Ready`]: MemberState::Ready
+//! [`EditError::WorkerLost`]: crate::engine::request::EditError::WorkerLost
+
+use std::time::{Duration, Instant};
+
+use crate::engine::worker::WorkerSnapshot;
+
+/// Lifecycle of one cluster member, as the router sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemberState {
+    /// Announced, no heartbeat yet.
+    Joining,
+    /// Heartbeating; eligible for new work.
+    Ready,
+    /// Live drain: finishes held work, receives none.
+    Draining,
+    /// Missed heartbeats past `suspect_after`; unavailable but not yet
+    /// failed over (a late heartbeat revives it).
+    Suspect,
+    /// Missed heartbeats past `dead_after`; its work has been failed
+    /// over. Re-announcing (epoch bump) is the only way back.
+    Dead,
+}
+
+impl MemberState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            MemberState::Joining => "joining",
+            MemberState::Ready => "ready",
+            MemberState::Draining => "draining",
+            MemberState::Suspect => "suspect",
+            MemberState::Dead => "dead",
+        }
+    }
+}
+
+/// One worker process, from the router's point of view.
+#[derive(Debug, Clone)]
+pub struct Member {
+    pub name: String,
+    pub rpc_addr: String,
+    pub state: MemberState,
+    /// Bumped on every (re-)announce; distinguishes incarnations.
+    pub epoch: u64,
+    pub last_heartbeat: Instant,
+    /// Last heartbeat's load snapshot (None until the first heartbeat,
+    /// and stale the moment the member stops heartbeating — which is why
+    /// availability, not the snapshot, gates routing).
+    pub snapshot: Option<WorkerSnapshot>,
+    /// Templates the member reports as locally serveable.
+    pub templates: Vec<String>,
+}
+
+/// Membership table. Pure state machine — no IO, no threads — so the
+/// expiry logic is unit-testable with injected clocks; the router owns
+/// the cadence and the failover side effects.
+pub struct Membership {
+    suspect_after: Duration,
+    dead_after: Duration,
+    members: Vec<Member>,
+}
+
+impl Membership {
+    pub fn new(suspect_after: Duration, dead_after: Duration) -> Membership {
+        assert!(dead_after >= suspect_after);
+        Membership { suspect_after, dead_after, members: Vec::new() }
+    }
+
+    pub fn members(&self) -> &[Member] {
+        &self.members
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn get(&self, slot: usize) -> Option<&Member> {
+        self.members.get(slot)
+    }
+
+    pub fn slot_of(&self, name: &str) -> Option<usize> {
+        self.members.iter().position(|m| m.name == name)
+    }
+
+    /// Register (or re-register) a member. Re-announcing keeps the slot
+    /// and bumps the epoch — the path back from `Dead`, and how a
+    /// restarted worker replaces its previous incarnation.
+    pub fn announce(
+        &mut self,
+        name: &str,
+        rpc_addr: &str,
+        templates: Vec<String>,
+        now: Instant,
+    ) -> (usize, u64) {
+        if let Some(slot) = self.slot_of(name) {
+            let m = &mut self.members[slot];
+            m.rpc_addr = rpc_addr.to_string();
+            m.templates = templates;
+            m.state = MemberState::Joining;
+            m.epoch += 1;
+            m.last_heartbeat = now;
+            m.snapshot = None;
+            (slot, m.epoch)
+        } else {
+            self.members.push(Member {
+                name: name.to_string(),
+                rpc_addr: rpc_addr.to_string(),
+                state: MemberState::Joining,
+                epoch: 1,
+                last_heartbeat: now,
+                snapshot: None,
+                templates,
+            });
+            (self.members.len() - 1, 1)
+        }
+    }
+
+    /// Record a heartbeat. `Joining`/`Suspect` members become `Ready`;
+    /// `Draining` stays draining (the drain outlives load reports).
+    /// Returns `false` for unknown or `Dead` members — the caller should
+    /// tell the worker to re-announce.
+    pub fn heartbeat(&mut self, name: &str, snapshot: Option<WorkerSnapshot>, now: Instant) -> bool {
+        let Some(slot) = self.slot_of(name) else { return false };
+        let m = &mut self.members[slot];
+        match m.state {
+            MemberState::Dead => return false,
+            MemberState::Joining | MemberState::Suspect => m.state = MemberState::Ready,
+            MemberState::Ready | MemberState::Draining => {}
+        }
+        m.last_heartbeat = now;
+        if snapshot.is_some() {
+            m.snapshot = snapshot;
+        }
+        true
+    }
+
+    /// Start a live drain. Returns false for unknown/dead members.
+    pub fn begin_drain(&mut self, name: &str) -> bool {
+        let Some(slot) = self.slot_of(name) else { return false };
+        let m = &mut self.members[slot];
+        if m.state == MemberState::Dead {
+            return false;
+        }
+        m.state = MemberState::Draining;
+        true
+    }
+
+    /// Advance the failure detector to `now`. Returns the slots that
+    /// transitioned to `Dead` on this call — the router fails those over
+    /// exactly once.
+    pub fn expire(&mut self, now: Instant) -> Vec<usize> {
+        let mut newly_dead = Vec::new();
+        for (slot, m) in self.members.iter_mut().enumerate() {
+            let age = now.saturating_duration_since(m.last_heartbeat);
+            match m.state {
+                MemberState::Ready | MemberState::Joining | MemberState::Draining => {
+                    if age >= self.dead_after {
+                        m.state = MemberState::Dead;
+                        newly_dead.push(slot);
+                    } else if age >= self.suspect_after {
+                        m.state = MemberState::Suspect;
+                    }
+                }
+                MemberState::Suspect => {
+                    if age >= self.dead_after {
+                        m.state = MemberState::Dead;
+                        newly_dead.push(slot);
+                    }
+                }
+                MemberState::Dead => {}
+            }
+        }
+        newly_dead
+    }
+
+    /// `available[slot]` for [`crate::scheduler::RouteCtx`]: only `Ready`
+    /// members take new work. This is what makes a dead (or merely
+    /// silent) remote worker read as *infinite cost* to the mask-aware
+    /// and qos-aware policies instead of as its last-published load.
+    pub fn available(&self) -> Vec<bool> {
+        self.members
+            .iter()
+            .map(|m| m.state == MemberState::Ready)
+            .collect()
+    }
+
+    /// Slots currently eligible for failover targets.
+    pub fn ready_slots(&self) -> Vec<usize> {
+        self.members
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.state == MemberState::Ready)
+            .map(|(s, _)| s)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> Membership {
+        Membership::new(Duration::from_millis(300), Duration::from_millis(600))
+    }
+
+    #[test]
+    fn announce_heartbeat_lifecycle() {
+        let t0 = Instant::now();
+        let mut ms = table();
+        let (slot, epoch) = ms.announce("w0", "127.0.0.1:9001", vec!["tpl-0".into()], t0);
+        assert_eq!((slot, epoch), (0, 1));
+        assert_eq!(ms.get(0).unwrap().state, MemberState::Joining);
+        assert!(!ms.available()[0], "joining members take no work yet");
+        assert!(ms.heartbeat("w0", None, t0));
+        assert_eq!(ms.get(0).unwrap().state, MemberState::Ready);
+        assert!(ms.available()[0]);
+        assert!(!ms.heartbeat("ghost", None, t0), "unknown members must re-announce");
+    }
+
+    #[test]
+    fn missed_heartbeats_suspect_then_dead_then_epoch_bump() {
+        let t0 = Instant::now();
+        let mut ms = table();
+        ms.announce("w0", "a", vec![], t0);
+        ms.heartbeat("w0", None, t0);
+        assert!(ms.expire(t0 + Duration::from_millis(100)).is_empty());
+        assert_eq!(ms.get(0).unwrap().state, MemberState::Ready);
+        // past suspect_after: suspect, not yet failed over
+        assert!(ms.expire(t0 + Duration::from_millis(400)).is_empty());
+        assert_eq!(ms.get(0).unwrap().state, MemberState::Suspect);
+        assert!(!ms.available()[0]);
+        // a late heartbeat revives it
+        assert!(ms.heartbeat("w0", None, t0 + Duration::from_millis(450)));
+        assert_eq!(ms.get(0).unwrap().state, MemberState::Ready);
+        // silence all the way to dead_after: exactly one dead transition
+        let dead = ms.expire(t0 + Duration::from_millis(1100));
+        assert_eq!(dead, vec![0]);
+        assert!(ms.expire(t0 + Duration::from_millis(1200)).is_empty(), "dead fires once");
+        // heartbeats from the dead are refused; re-announce revives with
+        // a bumped epoch on the same slot
+        assert!(!ms.heartbeat("w0", None, t0 + Duration::from_millis(1200)));
+        let (slot, epoch) = ms.announce("w0", "a", vec![], t0 + Duration::from_millis(1300));
+        assert_eq!((slot, epoch), (0, 2));
+        assert_eq!(ms.get(0).unwrap().state, MemberState::Joining);
+    }
+
+    #[test]
+    fn draining_members_take_no_new_work_but_stay_alive() {
+        let t0 = Instant::now();
+        let mut ms = table();
+        ms.announce("w0", "a", vec![], t0);
+        ms.announce("w1", "b", vec![], t0);
+        ms.heartbeat("w0", None, t0);
+        ms.heartbeat("w1", None, t0);
+        assert!(ms.begin_drain("w1"));
+        assert_eq!(ms.available(), vec![true, false]);
+        assert_eq!(ms.ready_slots(), vec![0]);
+        // heartbeats keep it draining (not revived to ready)
+        assert!(ms.heartbeat("w1", None, t0 + Duration::from_millis(100)));
+        assert_eq!(ms.get(1).unwrap().state, MemberState::Draining);
+        // but a drained member that stops heartbeating still dies
+        let dead = ms.expire(t0 + Duration::from_millis(800));
+        assert!(dead.contains(&1));
+    }
+}

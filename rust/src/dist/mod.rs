@@ -1,0 +1,86 @@
+//! Distributed serving plane: process-separated workers over an RPC data
+//! plane, with membership, live drain, and failover.
+//!
+//! The in-process [`Cluster`](crate::cluster::Cluster) multiplexes worker
+//! *threads* inside one address space. This module splits the same
+//! serving stack across *processes*:
+//!
+//! * [`Router`] — the front process. Owns the public `/v1/*` API, the
+//!   scheduler/QoS admission (unchanged from the in-process plane), the
+//!   request registry, and the [`Membership`] table with its failure
+//!   detector and failover logic.
+//! * [`WorkerNode`] — a worker process. Wraps a single-worker cluster
+//!   (engine, caches, template lifecycle all unchanged) behind `/rpc/*`
+//!   endpoints, announces itself to the router, and heartbeats its load
+//!   snapshot.
+//! * The wire layer — [`proto`] (typed JSON encodings: [`SubmitWire`],
+//!   [`PollState`], snapshots, typed errors) over [`rpc`] (a keep-alive
+//!   HTTP/1.1 client, [`RpcClient`]). Everything rides the existing
+//!   pure-Rust HTTP server and JSON codec; no new dependencies, and the
+//!   shortest-roundtrip float encoding makes remote results **bit
+//!   identical** to in-process ones.
+//!
+//! The deterministic engine is what makes failover cheap: a still-queued
+//! request lost with its worker is simply re-submitted to a
+//! residency-compatible peer and recomputes the identical result; only
+//! work that was already *running* on the lost member resolves to the
+//! typed [`WorkerLost`](crate::engine::request::EditError::WorkerLost)
+//! error. No ticket ever hangs.
+
+pub mod membership;
+pub mod node;
+pub mod proto;
+pub mod remote;
+pub mod router;
+pub mod rpc;
+
+pub use membership::{Member, MemberState, Membership};
+pub use node::WorkerNode;
+pub use proto::{Announce, PollState, SubmitWire};
+pub use remote::{RemoteWorker, SubmitOutcome};
+pub use router::Router;
+pub use rpc::{RpcClient, RpcError};
+
+/// Timing knobs of the distributed plane. The defaults suit a LAN
+/// deployment; tests shrink them to keep the failure-injection paths
+/// fast.
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    /// Worker → router heartbeat cadence.
+    pub heartbeat_ms: u64,
+    /// Heartbeat silence after which a member is suspect (unavailable to
+    /// the scheduler, not yet failed over).
+    pub suspect_after_ms: u64,
+    /// Heartbeat silence after which a member is declared dead and its
+    /// requests fail over. Must be ≥ `suspect_after_ms`.
+    pub dead_after_ms: u64,
+    /// Router supervisor cadence (failure detection + result pump).
+    pub poll_ms: u64,
+    /// Per-call RPC read/write timeout.
+    pub rpc_timeout_ms: u64,
+}
+
+impl Default for DistConfig {
+    fn default() -> DistConfig {
+        DistConfig {
+            heartbeat_ms: 500,
+            suspect_after_ms: 2_000,
+            dead_after_ms: 5_000,
+            poll_ms: 100,
+            rpc_timeout_ms: 10_000,
+        }
+    }
+}
+
+impl DistConfig {
+    /// Aggressive timings for tests: sub-second failure detection.
+    pub fn fast() -> DistConfig {
+        DistConfig {
+            heartbeat_ms: 100,
+            suspect_after_ms: 400,
+            dead_after_ms: 800,
+            poll_ms: 50,
+            rpc_timeout_ms: 2_000,
+        }
+    }
+}

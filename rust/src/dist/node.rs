@@ -1,0 +1,349 @@
+//! [`WorkerNode`]: one worker process of the distributed plane.
+//!
+//! A node wraps a **single-worker** [`Cluster`] — reusing the whole
+//! engine/registry/template/cache stack unchanged — behind the `/rpc/*`
+//! endpoints, served through the hardened
+//! [`serve_connection`] loop (same slowloris limits as the public API
+//! port). It announces itself to the router and heartbeats its
+//! [`WorkerSnapshot`](crate::engine::worker::WorkerSnapshot) on the
+//! configured cadence.
+//!
+//! Endpoints:
+//!
+//! | method & path                    | meaning                                  |
+//! |----------------------------------|------------------------------------------|
+//! | `POST /rpc/submit`               | queue one [`SubmitWire`] edit            |
+//! | `GET /rpc/poll/{id}`             | request state (+ full result when done)  |
+//! | `DELETE /rpc/cancel/{id}`        | cancel queued / evict terminal           |
+//! | `DELETE /rpc/evict/{id}`         | drop a terminal result                   |
+//! | `GET /rpc/snapshot`              | live load snapshot                       |
+//! | `POST /rpc/template/register`    | background template registration         |
+//! | `DELETE /rpc/template/purge/{id}`| retire + free the template               |
+//! | `POST /rpc/drain`                | finish held work, accept no more         |
+//! | `GET /rpc/health`                | liveness + accepting flag                |
+//!
+//! Draining reuses the same semantics as template retirement: held work
+//! drains to completion, new submissions get a typed 503 reject.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::{CancelOutcome, Cluster, ClusterOpts, RequestState};
+use crate::scheduler::RoundRobin;
+use crate::server::{edit_error_reply, error_obj, serve_connection};
+use crate::templates::{RegisterAdmission, RetireOutcome};
+use crate::util::json::Json;
+
+use super::proto::{self, Announce, PollState, SubmitWire};
+use super::rpc::RpcClient;
+use super::DistConfig;
+
+pub struct WorkerNode {
+    name: String,
+    cluster: Arc<Cluster>,
+    /// New submissions accepted? Cleared by `/rpc/drain` and `stop`.
+    accepting: AtomicBool,
+    /// Process-wide stop: ends the accept and heartbeat loops.
+    stopping: AtomicBool,
+    /// Bound RPC address (set by [`WorkerNode::start`]).
+    addr: Mutex<Option<SocketAddr>>,
+}
+
+impl WorkerNode {
+    /// Launch the node's engine. The cluster is forced to a single
+    /// worker: process separation is the dist plane's job, and the
+    /// router's book has exactly one lane per node.
+    pub fn launch(name: impl Into<String>, mut opts: ClusterOpts) -> Result<WorkerNode> {
+        opts.workers = 1;
+        let cluster = Cluster::launch(opts, Box::new(RoundRobin::new()))?;
+        // long-lived serving: results live in the registry until the
+        // router consumes + evicts them
+        cluster.set_retain_responses(false);
+        Ok(WorkerNode {
+            name: name.into(),
+            cluster: Arc::new(cluster),
+            accepting: AtomicBool::new(true),
+            stopping: AtomicBool::new(false),
+            addr: Mutex::new(None),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    pub fn is_accepting(&self) -> bool {
+        self.accepting.load(Ordering::SeqCst)
+    }
+
+    /// The bound RPC address (None before [`WorkerNode::start`]).
+    pub fn rpc_addr(&self) -> Option<SocketAddr> {
+        *self.addr.lock().unwrap()
+    }
+
+    /// Bind the RPC listener (use port 0 for an OS-assigned port) and
+    /// serve it on a background thread. Returns the bound address.
+    pub fn start(self: &Arc<Self>, bind_addr: &str) -> Result<SocketAddr> {
+        let listener =
+            TcpListener::bind(bind_addr).with_context(|| format!("bind rpc {bind_addr}"))?;
+        let addr = listener.local_addr()?;
+        *self.addr.lock().unwrap() = Some(addr);
+        let this = Arc::clone(self);
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if this.stopping.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let node = Arc::clone(&this);
+                std::thread::spawn(move || {
+                    let _ = serve_connection(stream, |m, p, b| node.route(m, p, b));
+                });
+            }
+        });
+        Ok(addr)
+    }
+
+    /// Announce to the router and heartbeat until stopped. Re-announces
+    /// whenever the router refuses a heartbeat (it declared us dead, or
+    /// restarted and lost the membership table).
+    pub fn announce_to(self: &Arc<Self>, router_addr: &str, cfg: &DistConfig) {
+        let this = Arc::clone(self);
+        let router = router_addr.to_string();
+        let cadence = Duration::from_millis(cfg.heartbeat_ms.max(1));
+        let timeout = Duration::from_millis(cfg.rpc_timeout_ms.max(1));
+        std::thread::spawn(move || {
+            let mut client = RpcClient::new(router, timeout);
+            let mut announced = false;
+            while !this.stopping.load(Ordering::SeqCst) {
+                if !announced {
+                    let body = this.announce_body();
+                    announced =
+                        matches!(client.call("POST", "/rpc/announce", Some(&body)), Ok((200, _)));
+                }
+                if announced {
+                    let snap = this.cluster.worker_snapshots().into_iter().next();
+                    let mut pairs = vec![("name", Json::str(this.name.clone()))];
+                    if let Some(s) = snap {
+                        pairs.push(("snapshot", proto::snapshot_to_json(&s)));
+                    }
+                    match client.call("POST", "/rpc/heartbeat", Some(&Json::obj(pairs))) {
+                        Ok((200, _)) => {}
+                        Ok(_) => announced = false, // router wants a re-announce
+                        Err(_) => {}                // router unreachable: keep trying
+                    }
+                }
+                std::thread::sleep(cadence);
+            }
+        });
+    }
+
+    fn announce_body(&self) -> Json {
+        let templates = self
+            .cluster
+            .templates_status()
+            .into_iter()
+            .map(|s| s.info.template_id)
+            .filter(|id| self.cluster.has_template(id))
+            .collect();
+        Announce {
+            name: self.name.clone(),
+            rpc_addr: self
+                .rpc_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_default(),
+            templates,
+        }
+        .to_json()
+    }
+
+    /// Stop serving: refuse new work, stop the engine after its current
+    /// batch, and unblock the accept loop. Idempotent. The node's engine
+    /// threads wind down on their own; RPC peers see connection failures
+    /// and the router's failure detector takes it from there.
+    pub fn stop(&self) {
+        self.accepting.store(false, Ordering::SeqCst);
+        if self.stopping.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.cluster.request_stop();
+        // dial ourselves so the blocking accept() wakes up and exits
+        if let Some(addr) = self.rpc_addr() {
+            let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(200));
+        }
+    }
+
+    /// Route one RPC request (separated from IO for unit testing).
+    pub fn route(&self, method: &str, path: &str, body: &str) -> (u16, Json) {
+        if let Some(rest) = path.strip_prefix("/rpc/poll/") {
+            return match rest.parse::<u64>() {
+                Ok(id) if method == "GET" => (200, proto::poll_state_to_json(&self.poll(id))),
+                Ok(_) => (405, error_obj("method not allowed")),
+                Err(_) => (400, error_obj(&format!("bad request id {rest:?}"))),
+            };
+        }
+        if let Some(rest) = path.strip_prefix("/rpc/cancel/") {
+            return match rest.parse::<u64>() {
+                Ok(id) if method == "DELETE" => self.cancel(id),
+                Ok(_) => (405, error_obj("method not allowed")),
+                Err(_) => (400, error_obj(&format!("bad request id {rest:?}"))),
+            };
+        }
+        if let Some(rest) = path.strip_prefix("/rpc/evict/") {
+            return match rest.parse::<u64>() {
+                Ok(id) if method == "DELETE" => (
+                    200,
+                    Json::obj(vec![("evicted", Json::Bool(self.cluster.evict(id)))]),
+                ),
+                Ok(_) => (405, error_obj("method not allowed")),
+                Err(_) => (400, error_obj(&format!("bad request id {rest:?}"))),
+            };
+        }
+        if let Some(rest) = path.strip_prefix("/rpc/template/purge/") {
+            if method != "DELETE" {
+                return (405, error_obj("method not allowed"));
+            }
+            return self.purge_template(rest);
+        }
+        match (method, path) {
+            ("GET", "/rpc/health") | ("GET", "/healthz") => (
+                200,
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("name", Json::str(self.name.clone())),
+                    ("accepting", Json::Bool(self.is_accepting())),
+                    ("completed", Json::num(self.cluster.completed() as f64)),
+                ]),
+            ),
+            ("POST", "/rpc/submit") => self.submit(body),
+            ("GET", "/rpc/snapshot") => match self.cluster.worker_snapshots().into_iter().next() {
+                Some(s) => (200, proto::snapshot_to_json(&s)),
+                None => (500, error_obj("no worker snapshot")),
+            },
+            ("POST", "/rpc/template/register") => self.register_template(body),
+            ("POST", "/rpc/drain") => {
+                self.accepting.store(false, Ordering::SeqCst);
+                (
+                    200,
+                    Json::obj(vec![
+                        ("name", Json::str(self.name.clone())),
+                        ("draining", Json::Bool(true)),
+                    ]),
+                )
+            }
+            _ => (404, error_obj("not found")),
+        }
+    }
+
+    fn submit(&self, body: &str) -> (u16, Json) {
+        if !self.is_accepting() {
+            return (
+                503,
+                Json::obj(vec![
+                    ("error", Json::str("worker is draining")),
+                    ("error_kind", Json::str("draining")),
+                ]),
+            );
+        }
+        let parsed = match Json::parse(body) {
+            Ok(j) => j,
+            Err(e) => return (400, error_obj(&format!("invalid JSON body: {e}"))),
+        };
+        let Some(wire) = SubmitWire::parse(&parsed) else {
+            return (400, error_obj("malformed submit wire"));
+        };
+        match self.cluster.submit_checked(wire.into_request()) {
+            Ok(ticket) => (
+                202,
+                Json::obj(vec![
+                    ("id", Json::num(ticket.id() as f64)),
+                    ("status", Json::str("queued")),
+                ]),
+            ),
+            Err(e) => edit_error_reply(&e),
+        }
+    }
+
+    fn poll(&self, id: u64) -> PollState {
+        match self.cluster.status(id) {
+            None => PollState::Unknown,
+            Some(st) => match st.state {
+                RequestState::Queued => PollState::Queued,
+                RequestState::Running => PollState::Running,
+                RequestState::Done(resp) => PollState::Done(Box::new((*resp).clone())),
+                RequestState::Failed(e) => PollState::Failed(e),
+            },
+        }
+    }
+
+    fn cancel(&self, id: u64) -> (u16, Json) {
+        let reply = |status: u16, label: &str| {
+            (
+                status,
+                Json::obj(vec![
+                    ("id", Json::num(id as f64)),
+                    ("status", Json::str(label)),
+                ]),
+            )
+        };
+        match self.cluster.cancel(id) {
+            CancelOutcome::Cancelled => reply(200, "cancelled"),
+            CancelOutcome::Cancelling => reply(202, "cancelling"),
+            CancelOutcome::TooLate if self.cluster.evict(id) => reply(200, "evicted"),
+            CancelOutcome::TooLate => (409, error_obj("too late to cancel: request is running")),
+            CancelOutcome::NotFound => (404, error_obj(&format!("no such request {id}"))),
+        }
+    }
+
+    fn register_template(&self, body: &str) -> (u16, Json) {
+        let parsed = match Json::parse(body) {
+            Ok(j) => j,
+            Err(e) => return (400, error_obj(&format!("invalid JSON body: {e}"))),
+        };
+        let Some(template) = parsed.at("template").as_str() else {
+            return (400, error_obj("missing \"template\" field"));
+        };
+        let reply = |status: u16, state: &str| {
+            (
+                status,
+                Json::obj(vec![
+                    ("template", Json::str(template)),
+                    ("state", Json::str(state)),
+                ]),
+            )
+        };
+        match self.cluster.register_template_async(template) {
+            RegisterAdmission::AlreadyReady => reply(200, "ready"),
+            RegisterAdmission::Started { .. } | RegisterAdmission::InProgress => {
+                reply(202, "registering")
+            }
+        }
+    }
+
+    fn purge_template(&self, template_id: &str) -> (u16, Json) {
+        let reply = |status: u16, state: &str| {
+            (
+                status,
+                Json::obj(vec![
+                    ("template", Json::str(template_id)),
+                    ("state", Json::str(state)),
+                ]),
+            )
+        };
+        match self.cluster.retire_template(template_id) {
+            RetireOutcome::Retired => reply(200, "retired"),
+            RetireOutcome::Draining { .. } => reply(202, "retiring"),
+            RetireOutcome::NotFound => {
+                (404, error_obj(&format!("no such template {template_id:?}")))
+            }
+        }
+    }
+}

@@ -1,0 +1,459 @@
+//! Wire protocol for the dist data plane: typed request/response structs
+//! serialized over the repo's own JSON ([`crate::util::json`]).
+//!
+//! Bit-identity across the wire is load-bearing: `Json` prints `f64`s with
+//! shortest-roundtrip formatting, so an `f32` widened to `f64`, printed,
+//! parsed, and narrowed back is *exactly* the original bits. Submissions
+//! carry the explicit masked token ids (not the mask ratio), and poll
+//! replies carry the full latent/image tensors, so a remote cluster's
+//! results compare equal (`max_abs_diff == 0`) to the in-process one.
+//!
+//! Errors cross the wire as their stable [`EditError::kind`] tag plus the
+//! display message; [`decode_error`] maps the tag back to the typed
+//! variant, so the router's tickets resolve with the same `EditError` the
+//! worker produced.
+
+use std::time::{Duration, Instant};
+
+use crate::engine::request::{EditError, EditRequest, EditResponse, RequestTiming};
+use crate::engine::worker::WorkerSnapshot;
+use crate::model::MaskSpec;
+use crate::qos::{ClassDepth, Priority, CLASS_COUNT};
+use crate::runtime::TransferTotals;
+use crate::util::json::Json;
+use crate::util::tensor::Tensor;
+
+/// One edit submission on the wire (`POST /rpc/submit`). Carries the
+/// explicit masked ids so the worker reconstructs the *identical*
+/// [`MaskSpec`] — no re-sampling, no drift.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitWire {
+    pub id: u64,
+    pub template: String,
+    pub masked: Vec<usize>,
+    pub tokens: usize,
+    pub prompt_seed: u64,
+    pub priority: Priority,
+    pub deadline_ms: Option<u64>,
+}
+
+impl SubmitWire {
+    pub fn from_request(req: &EditRequest) -> SubmitWire {
+        SubmitWire {
+            id: req.id,
+            template: req.template_id.clone(),
+            masked: req.mask.masked_ids().to_vec(),
+            tokens: req.mask.tokens(),
+            prompt_seed: req.prompt_seed,
+            priority: req.priority,
+            deadline_ms: req.deadline_ms(),
+        }
+    }
+
+    /// Rebuild the request on the worker side. The deadline restarts from
+    /// the worker's arrival instant (queue time on the router side is not
+    /// double-counted against it).
+    pub fn into_request(&self) -> EditRequest {
+        let mask = MaskSpec::new(self.masked.clone(), self.tokens);
+        let mut req = EditRequest::new(self.id, self.template.clone(), mask, self.prompt_seed);
+        req.priority = self.priority;
+        req.deadline = self
+            .deadline_ms
+            .map(|ms| req.arrival + Duration::from_millis(ms));
+        req
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("id", Json::num(self.id as f64)),
+            ("template", Json::str(self.template.clone())),
+            (
+                "masked",
+                Json::arr(self.masked.iter().map(|&m| Json::num(m as f64)).collect()),
+            ),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("prompt_seed", Json::num(self.prompt_seed as f64)),
+            ("priority", Json::str(self.priority.label())),
+        ];
+        if let Some(ms) = self.deadline_ms {
+            pairs.push(("deadline_ms", Json::num(ms as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn parse(j: &Json) -> Option<SubmitWire> {
+        let tokens = j.at("tokens").as_usize()?;
+        let masked = j.at("masked").usize_list();
+        if masked.is_empty() || masked.iter().any(|&m| m >= tokens) {
+            return None;
+        }
+        Some(SubmitWire {
+            id: j.at("id").as_f64()? as u64,
+            template: j.at("template").as_str()?.to_string(),
+            masked,
+            tokens,
+            prompt_seed: j.at("prompt_seed").as_f64()? as u64,
+            priority: j
+                .at("priority")
+                .as_str()
+                .and_then(Priority::parse)
+                .unwrap_or_default(),
+            deadline_ms: j.at("deadline_ms").as_f64().map(|ms| ms as u64),
+        })
+    }
+}
+
+/// Exact tensor round-trip: `{"shape": [...], "data": [...]}` with
+/// shortest-roundtrip floats.
+pub fn tensor_to_json(t: &Tensor) -> Json {
+    Json::obj(vec![
+        (
+            "shape",
+            Json::arr(t.shape().iter().map(|&d| Json::num(d as f64)).collect()),
+        ),
+        (
+            "data",
+            Json::arr(t.data().iter().map(|&v| Json::num(v as f64)).collect()),
+        ),
+    ])
+}
+
+pub fn tensor_from_json(j: &Json) -> Option<Tensor> {
+    let shape = j.at("shape").usize_list();
+    let data: Vec<f32> = j
+        .at("data")
+        .as_arr()?
+        .iter()
+        .map(|v| v.as_f64().map(|x| x as f32))
+        .collect::<Option<Vec<f32>>>()?;
+    Tensor::from_vec(&shape, data).ok()
+}
+
+/// Encode a typed failure for the wire: stable tag + message (+ the
+/// overload retry hint).
+pub fn encode_error(e: &EditError) -> Json {
+    let mut pairs = vec![
+        ("error", Json::str(e.to_string())),
+        ("error_kind", Json::str(e.kind())),
+    ];
+    if let EditError::Overloaded { retry_after_ms } = e {
+        pairs.push(("retry_after_ms", Json::num(*retry_after_ms as f64)));
+    }
+    Json::obj(pairs)
+}
+
+/// Decode a wire failure back into the typed variant (unknown tags fall
+/// back to `Internal` so a newer peer can't wedge an older router).
+pub fn decode_error(j: &Json) -> EditError {
+    let msg = j.at("error").as_str().unwrap_or("remote error").to_string();
+    match j.at("error_kind").as_str().unwrap_or("internal") {
+        "unknown_template" => EditError::UnknownTemplate(msg),
+        "template_retired" => EditError::TemplateRetired(msg),
+        "invalid_mask" => EditError::InvalidMask(msg),
+        "cancelled" => EditError::Cancelled,
+        "timeout" => EditError::Timeout,
+        "overloaded" => EditError::Overloaded {
+            retry_after_ms: j.at("retry_after_ms").as_f64().unwrap_or(1000.0) as u64,
+        },
+        "deadline_infeasible" => EditError::DeadlineInfeasible(msg),
+        "deadline_exceeded" => EditError::DeadlineExceeded,
+        "worker_shutdown" => EditError::WorkerShutdown,
+        "worker_lost" => EditError::WorkerLost,
+        _ => EditError::Internal(msg),
+    }
+}
+
+/// A polled request's remote state (`GET /rpc/poll/{id}`).
+#[derive(Debug, Clone)]
+pub enum PollState {
+    Queued,
+    Running,
+    Done(Box<EditResponse>),
+    Failed(EditError),
+    /// The worker has no entry for the id (restarted, or already
+    /// evicted) — the router treats it like a lost request.
+    Unknown,
+}
+
+/// Encode one response payload (timing + full tensors).
+pub fn response_to_json(resp: &EditResponse) -> Json {
+    let t = &resp.timing;
+    Json::obj(vec![
+        ("id", Json::num(resp.id as f64)),
+        ("template", Json::str(resp.template_id.clone())),
+        ("mask_ratio", Json::num(resp.mask_ratio)),
+        ("priority", Json::str(resp.priority.label())),
+        (
+            "timing",
+            Json::obj(vec![
+                ("queue", Json::num(t.queue)),
+                ("inference", Json::num(t.inference)),
+                ("e2e", Json::num(t.e2e)),
+                ("interruptions", Json::num(t.interruptions as f64)),
+                ("steps_computed", Json::num(t.steps_computed as f64)),
+            ]),
+        ),
+        ("latent", tensor_to_json(&resp.latent)),
+        ("image", tensor_to_json(&resp.image)),
+    ])
+}
+
+pub fn response_from_json(j: &Json) -> Option<EditResponse> {
+    let t = j.at("timing");
+    Some(EditResponse {
+        id: j.at("id").as_f64()? as u64,
+        template_id: j.at("template").as_str()?.to_string(),
+        image: tensor_from_json(j.at("image"))?,
+        latent: tensor_from_json(j.at("latent"))?,
+        timing: RequestTiming {
+            queue: t.at("queue").as_f64().unwrap_or(0.0),
+            inference: t.at("inference").as_f64().unwrap_or(0.0),
+            e2e: t.at("e2e").as_f64().unwrap_or(0.0),
+            interruptions: t.at("interruptions").as_f64().unwrap_or(0.0) as u32,
+            steps_computed: t.at("steps_computed").as_f64().unwrap_or(0.0) as u32,
+        },
+        mask_ratio: j.at("mask_ratio").as_f64().unwrap_or(0.0),
+        priority: j
+            .at("priority")
+            .as_str()
+            .and_then(Priority::parse)
+            .unwrap_or_default(),
+    })
+}
+
+/// Encode a poll reply from the worker's local registry state.
+pub fn poll_state_to_json(state: &PollState) -> Json {
+    match state {
+        PollState::Queued => Json::obj(vec![("status", Json::str("queued"))]),
+        PollState::Running => Json::obj(vec![("status", Json::str("running"))]),
+        PollState::Done(resp) => Json::obj(vec![
+            ("status", Json::str("done")),
+            ("response", response_to_json(resp)),
+        ]),
+        PollState::Failed(e) => Json::obj(vec![
+            ("status", Json::str("failed")),
+            ("failure", encode_error(e)),
+        ]),
+        PollState::Unknown => Json::obj(vec![("status", Json::str("unknown"))]),
+    }
+}
+
+pub fn poll_state_from_json(j: &Json) -> PollState {
+    match j.at("status").as_str().unwrap_or("unknown") {
+        "queued" => PollState::Queued,
+        "running" => PollState::Running,
+        "done" => match response_from_json(j.at("response")) {
+            Some(resp) => PollState::Done(Box::new(resp)),
+            None => PollState::Failed(EditError::Internal(
+                "undecodable response payload".into(),
+            )),
+        },
+        "failed" => PollState::Failed(decode_error(j.at("failure"))),
+        _ => PollState::Unknown,
+    }
+}
+
+/// [`WorkerSnapshot`] on the wire (heartbeat payload / `GET /rpc/snapshot`).
+pub fn snapshot_to_json(s: &WorkerSnapshot) -> Json {
+    let classes = s
+        .class_depths
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("queued", Json::num(c.queued as f64)),
+                ("oldest_wait_secs", Json::num(c.oldest_wait_secs)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("worker_id", Json::num(s.worker_id as f64)),
+        ("queued", Json::num(s.queued as f64)),
+        ("running", Json::num(s.running as f64)),
+        ("queued_masked_tokens", Json::num(s.queued_masked_tokens as f64)),
+        (
+            "mask_ratios",
+            Json::arr(s.mask_ratios.iter().map(|&r| Json::num(r)).collect()),
+        ),
+        ("class_depths", Json::arr(classes)),
+        ("steps_executed", Json::num(s.steps_executed as f64)),
+        (
+            "transfers",
+            Json::obj(vec![
+                ("h2d_ops", Json::num(s.transfers.h2d_ops as f64)),
+                ("d2h_ops", Json::num(s.transfers.d2h_ops as f64)),
+                ("h2d_bytes", Json::num(s.transfers.h2d_bytes as f64)),
+                ("d2h_bytes", Json::num(s.transfers.d2h_bytes as f64)),
+            ]),
+        ),
+    ])
+}
+
+pub fn snapshot_from_json(j: &Json) -> Option<WorkerSnapshot> {
+    let mut class_depths = [ClassDepth::default(); CLASS_COUNT];
+    if let Some(arr) = j.at("class_depths").as_arr() {
+        for (slot, c) in class_depths.iter_mut().zip(arr) {
+            slot.queued = c.at("queued").as_usize().unwrap_or(0);
+            slot.oldest_wait_secs = c.at("oldest_wait_secs").as_f64().unwrap_or(0.0);
+        }
+    }
+    let t = j.at("transfers");
+    Some(WorkerSnapshot {
+        worker_id: j.at("worker_id").as_usize()?,
+        queued: j.at("queued").as_usize().unwrap_or(0),
+        running: j.at("running").as_usize().unwrap_or(0),
+        queued_masked_tokens: j.at("queued_masked_tokens").as_usize().unwrap_or(0),
+        mask_ratios: j
+            .at("mask_ratios")
+            .as_arr()
+            .map(|v| v.iter().filter_map(Json::as_f64).collect())
+            .unwrap_or_default(),
+        class_depths,
+        steps_executed: j.at("steps_executed").as_usize().unwrap_or(0),
+        transfers: TransferTotals {
+            h2d_ops: t.at("h2d_ops").as_f64().unwrap_or(0.0) as u64,
+            d2h_ops: t.at("d2h_ops").as_f64().unwrap_or(0.0) as u64,
+            h2d_bytes: t.at("h2d_bytes").as_f64().unwrap_or(0.0) as u64,
+            d2h_bytes: t.at("d2h_bytes").as_f64().unwrap_or(0.0) as u64,
+        },
+    })
+}
+
+/// Worker → router announce body (`POST /rpc/announce`).
+#[derive(Debug, Clone)]
+pub struct Announce {
+    pub name: String,
+    pub rpc_addr: String,
+    /// Templates the worker can serve right now (router-side residency).
+    pub templates: Vec<String>,
+}
+
+impl Announce {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("rpc_addr", Json::str(self.rpc_addr.clone())),
+            (
+                "templates",
+                Json::arr(self.templates.iter().map(Json::str).collect()),
+            ),
+        ])
+    }
+
+    pub fn parse(j: &Json) -> Option<Announce> {
+        Some(Announce {
+            name: j.at("name").as_str()?.to_string(),
+            rpc_addr: j.at("rpc_addr").as_str()?.to_string(),
+            templates: j
+                .at("templates")
+                .as_arr()
+                .map(|v| v.iter().filter_map(|t| t.as_str().map(String::from)).collect())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// Milliseconds elapsed on an `Instant`, for heartbeat-age reporting.
+pub fn age_ms(at: Instant) -> u64 {
+    at.elapsed().as_millis() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn submit_wire_round_trips() {
+        let mut rng = Pcg::new(5);
+        let mask = MaskSpec::synth(8, 0.2, &mut rng);
+        let mut req = EditRequest::new(42, "tpl-3", mask, 99);
+        req.priority = Priority::Interactive;
+        let wire = SubmitWire::from_request(&req);
+        let text = wire.to_json().to_string();
+        let back = SubmitWire::parse(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(wire, back);
+        let rebuilt = back.into_request();
+        assert_eq!(rebuilt.mask, req.mask, "mask must be identical, not re-sampled");
+        assert_eq!(rebuilt.prompt_seed, 99);
+        assert_eq!(rebuilt.priority, Priority::Interactive);
+        // malformed: masked id out of range
+        let bad = Json::parse(
+            r#"{"id":1,"template":"t","masked":[64],"tokens":64,"prompt_seed":1}"#,
+        )
+        .unwrap();
+        assert!(SubmitWire::parse(&bad).is_none());
+    }
+
+    #[test]
+    fn tensor_round_trip_is_bit_exact() {
+        let data: Vec<f32> = (0..64)
+            .map(|i| (i as f32 * 0.37).sin() * 1e-3 + f32::EPSILON * i as f32)
+            .collect();
+        let t = Tensor::from_vec(&[8, 8], data).unwrap();
+        let text = tensor_to_json(&t).to_string();
+        let back = tensor_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(t, back, "f32 -> JSON -> f32 must round-trip exactly");
+        assert_eq!(t.max_abs_diff(&back), 0.0);
+    }
+
+    #[test]
+    fn errors_round_trip_typed() {
+        for e in [
+            EditError::UnknownTemplate("tpl-9".into()),
+            EditError::Cancelled,
+            EditError::Overloaded { retry_after_ms: 750 },
+            EditError::WorkerShutdown,
+            EditError::WorkerLost,
+        ] {
+            let text = encode_error(&e).to_string();
+            let back = decode_error(&Json::parse(&text).unwrap());
+            assert_eq!(back.kind(), e.kind(), "{e:?}");
+            if let EditError::Overloaded { retry_after_ms } = back {
+                assert_eq!(retry_after_ms, 750);
+            }
+        }
+    }
+
+    #[test]
+    fn poll_and_snapshot_round_trip() {
+        let resp = EditResponse {
+            id: 7,
+            template_id: "tpl-1".into(),
+            image: Tensor::from_vec(&[2, 2], vec![0.1, -0.2, 0.3, 0.4]).unwrap(),
+            latent: Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.5]).unwrap(),
+            timing: RequestTiming { queue: 0.1, inference: 0.2, e2e: 0.3, interruptions: 1, steps_computed: 8 },
+            mask_ratio: 0.25,
+            priority: Priority::Batch,
+        };
+        let text = poll_state_to_json(&PollState::Done(Box::new(resp.clone()))).to_string();
+        match poll_state_from_json(&Json::parse(&text).unwrap()) {
+            PollState::Done(back) => {
+                assert_eq!(back.latent, resp.latent);
+                assert_eq!(back.image, resp.image);
+                assert_eq!(back.priority, Priority::Batch);
+                assert_eq!(back.timing.steps_computed, 8);
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+        let snap = WorkerSnapshot {
+            worker_id: 0,
+            queued: 3,
+            running: 2,
+            queued_masked_tokens: 77,
+            mask_ratios: vec![0.1, 0.4],
+            class_depths: [
+                ClassDepth { queued: 1, oldest_wait_secs: 0.5 },
+                ClassDepth::default(),
+                ClassDepth { queued: 2, oldest_wait_secs: 1.5 },
+            ],
+            steps_executed: 123,
+            transfers: TransferTotals { h2d_ops: 4, d2h_ops: 5, h2d_bytes: 6, d2h_bytes: 7 },
+        };
+        let text = snapshot_to_json(&snap).to_string();
+        let back = snapshot_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.queued, 3);
+        assert_eq!(back.class_depths[2].queued, 2);
+        assert_eq!(back.transfers, snap.transfers);
+        assert_eq!(back.mask_ratios, snap.mask_ratios);
+    }
+}

@@ -1,0 +1,109 @@
+//! [`RemoteWorker`]: the router's handle to one worker process, speaking
+//! the `/rpc/*` wire protocol over a keep-alive [`RpcClient`]. It mirrors
+//! the surface the in-process worker exposes to the cluster — submit,
+//! poll, cancel, template register/purge, snapshot, drain — so the
+//! router's scheduler/admission/registry plumbing is backend-agnostic.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::engine::request::EditError;
+use crate::engine::worker::WorkerSnapshot;
+use crate::util::json::Json;
+
+use super::proto::{self, PollState, SubmitWire};
+use super::rpc::{RpcClient, RpcError};
+
+/// How a remote submit landed.
+#[derive(Debug)]
+pub enum SubmitOutcome {
+    /// The worker queued the request.
+    Accepted,
+    /// Typed worker-side reject (template unknown/retired, draining,
+    /// overload) — the router may route elsewhere or surface the error.
+    Rejected(EditError),
+    /// Transport failure: the worker is unreachable.
+    Unreachable(RpcError),
+}
+
+pub struct RemoteWorker {
+    name: String,
+    addr: String,
+    client: Mutex<RpcClient>,
+}
+
+impl RemoteWorker {
+    pub fn new(name: impl Into<String>, addr: impl Into<String>, timeout: Duration) -> RemoteWorker {
+        let addr = addr.into();
+        RemoteWorker {
+            name: name.into(),
+            client: Mutex::new(RpcClient::new(addr.clone(), timeout)),
+            addr,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn call(&self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json), RpcError> {
+        self.client.lock().unwrap().call(method, path, body)
+    }
+
+    /// Submit one edit.
+    pub fn submit(&self, wire: &SubmitWire) -> SubmitOutcome {
+        match self.call("POST", "/rpc/submit", Some(&wire.to_json())) {
+            Ok((status, _)) if (200..300).contains(&status) => SubmitOutcome::Accepted,
+            Ok((_, body)) => SubmitOutcome::Rejected(proto::decode_error(&body)),
+            Err(e) => SubmitOutcome::Unreachable(e),
+        }
+    }
+
+    /// Poll one request's remote state.
+    pub fn poll(&self, id: u64) -> Result<PollState, RpcError> {
+        let (_, body) = self.call("GET", &format!("/rpc/poll/{id}"), None)?;
+        Ok(proto::poll_state_from_json(&body))
+    }
+
+    /// Cancel (or evict, if already terminal) one request.
+    pub fn cancel(&self, id: u64) -> Result<(u16, Json), RpcError> {
+        self.call("DELETE", &format!("/rpc/cancel/{id}"), None)
+    }
+
+    /// Drop a terminal request's retained result on the worker.
+    pub fn evict(&self, id: u64) -> Result<(u16, Json), RpcError> {
+        self.call("DELETE", &format!("/rpc/evict/{id}"), None)
+    }
+
+    /// The worker's live load snapshot.
+    pub fn snapshot(&self) -> Result<WorkerSnapshot, RpcError> {
+        let (_, body) = self.call("GET", "/rpc/snapshot", None)?;
+        proto::snapshot_from_json(&body)
+            .ok_or_else(|| RpcError::Proto("bad snapshot body".into()))
+    }
+
+    /// Kick off a background template registration on the worker.
+    pub fn register_template(&self, template_id: &str) -> Result<(u16, Json), RpcError> {
+        let body = Json::obj(vec![("template", Json::str(template_id))]);
+        self.call("POST", "/rpc/template/register", Some(&body))
+    }
+
+    /// Retire/purge a template on the worker.
+    pub fn purge_template(&self, template_id: &str) -> Result<(u16, Json), RpcError> {
+        self.call("DELETE", &format!("/rpc/template/purge/{template_id}"), None)
+    }
+
+    /// Ask the worker to drain: finish held work, accept no more.
+    pub fn drain(&self) -> Result<(u16, Json), RpcError> {
+        self.call("POST", "/rpc/drain", None)
+    }
+
+    /// Liveness probe.
+    pub fn health(&self) -> bool {
+        matches!(self.call("GET", "/rpc/health", None), Ok((200, _)))
+    }
+}

@@ -1,0 +1,903 @@
+//! [`Router`]: the distributed plane's front process.
+//!
+//! The router owns the public `/v1/*` API, the membership table, the
+//! request registry, and the routing book; worker processes own the
+//! engines. The same [`Scheduler`] policies and optional
+//! [`AdmissionController`] that drive the in-process [`Cluster`] drive
+//! the router unchanged — the book's lanes are membership slots instead
+//! of thread indices, and availability (ready members only) is what makes
+//! a dead or draining remote read as *infinite cost* rather than as its
+//! stale snapshot.
+//!
+//! ## Failover invariants
+//!
+//! Every accepted submission resolves — completed, failed over, or a
+//! typed [`EditError::WorkerLost`]; **no ticket ever hangs**:
+//!
+//! * a ticket is registered only after some worker accepted the wire, so
+//!   there is no window where a ticket exists but no worker holds it;
+//! * the supervisor polls every booked request each cycle; `Done`/`Failed`
+//!   resolve the ticket and evict the remote copy;
+//! * when the failure detector declares a member dead, its still-queued
+//!   requests are re-submitted to residency-compatible ready peers
+//!   (deterministic engine ⇒ identical result), and requests it was
+//!   already running resolve to `WorkerLost`;
+//! * a worker that forgets an id (restart, epoch bump) triggers the same
+//!   per-request failover path;
+//! * router shutdown fails all remaining tickets with `WorkerShutdown`.
+//!
+//! [`Cluster`]: crate::cluster::Cluster
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::cache::tier::Residency;
+use crate::cluster::{EditTicket, RequestRegistry, RequestState};
+use crate::config::ModelConfig;
+use crate::engine::request::{EditError, EditRequest, EditRequestBuilder};
+use crate::qos::{Admission, AdmissionController, Priority};
+use crate::scheduler::{Outstanding, RouteCtx, Scheduler};
+use crate::server::{
+    done_body, edit_error_reply, error_obj, push_qos_pairs, serve_connection, status_pairs,
+};
+use crate::util::json::Json;
+use crate::workload::TraceEvent;
+
+use super::membership::{MemberState, Membership};
+use super::proto::{self, Announce, PollState, SubmitWire};
+use super::remote::{RemoteWorker, SubmitOutcome};
+use super::DistConfig;
+
+/// First id handed to HTTP submissions (same convention as
+/// [`crate::server::HttpServer`]).
+const FIRST_HTTP_ID: u64 = 1_000_000;
+
+pub struct Router {
+    cfg: DistConfig,
+    model: ModelConfig,
+    membership: Mutex<Membership>,
+    /// Slot-aligned RPC handles (same index space as membership slots and
+    /// book lanes). A re-announce replaces the slot's handle in place.
+    workers: Mutex<Vec<Arc<RemoteWorker>>>,
+    /// Outstanding sets per member slot — the scheduler's world view.
+    book: Mutex<Vec<Vec<Outstanding>>>,
+    scheduler: Mutex<Box<dyn Scheduler>>,
+    admission: Option<AdmissionController>,
+    /// Serializes guarded submissions so `max_pending` holds under
+    /// concurrent frontends (same role as the cluster's gate).
+    admission_gate: Mutex<()>,
+    registry: Arc<RequestRegistry>,
+    /// Wire payloads of non-terminal requests, kept for failover
+    /// re-submission. Removed when the request resolves.
+    pending: Mutex<HashMap<u64, SubmitWire>>,
+    next_id: AtomicU64,
+    stopping: AtomicBool,
+    addr: Mutex<Option<SocketAddr>>,
+    started: Instant,
+}
+
+impl Router {
+    pub fn new(
+        model: ModelConfig,
+        scheduler: Box<dyn Scheduler>,
+        admission: Option<AdmissionController>,
+        cfg: DistConfig,
+    ) -> Arc<Router> {
+        Arc::new(Router {
+            membership: Mutex::new(Membership::new(
+                Duration::from_millis(cfg.suspect_after_ms.max(1)),
+                Duration::from_millis(cfg.dead_after_ms.max(1)),
+            )),
+            workers: Mutex::new(Vec::new()),
+            book: Mutex::new(Vec::new()),
+            scheduler: Mutex::new(scheduler),
+            admission,
+            admission_gate: Mutex::new(()),
+            registry: RequestRegistry::new(),
+            pending: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(FIRST_HTTP_ID),
+            stopping: AtomicBool::new(false),
+            addr: Mutex::new(None),
+            started: Instant::now(),
+            model,
+            cfg,
+        })
+    }
+
+    pub fn registry(&self) -> &Arc<RequestRegistry> {
+        &self.registry
+    }
+
+    /// Requests that reached a terminal state (success, failure, cancel).
+    pub fn completed(&self) -> usize {
+        self.registry.finished()
+    }
+
+    pub fn await_finished(&self, n: usize, timeout: Duration) -> bool {
+        self.registry.await_finished(n, timeout)
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Members currently in the `Ready` state.
+    pub fn ready_count(&self) -> usize {
+        self.membership
+            .lock()
+            .unwrap()
+            .available()
+            .iter()
+            .filter(|&&a| a)
+            .count()
+    }
+
+    pub fn bound_addr(&self) -> Option<SocketAddr> {
+        *self.addr.lock().unwrap()
+    }
+
+    /// Bind the listener (serves both the public `/v1/*` API and the
+    /// worker-facing `/rpc/*` control endpoints) and spawn the accept
+    /// loop + supervisor. Returns the bound address.
+    pub fn start(self: &Arc<Self>, bind_addr: &str) -> Result<SocketAddr> {
+        let listener =
+            TcpListener::bind(bind_addr).with_context(|| format!("bind router {bind_addr}"))?;
+        let addr = listener.local_addr()?;
+        *self.addr.lock().unwrap() = Some(addr);
+        let this = Arc::clone(self);
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if this.stopping.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let router = Arc::clone(&this);
+                std::thread::spawn(move || {
+                    let _ = serve_connection(stream, |m, p, b| router.route(m, p, b));
+                });
+            }
+        });
+        let this = Arc::clone(self);
+        std::thread::spawn(move || this.supervise());
+        Ok(addr)
+    }
+
+    /// Stop serving and resolve every live ticket with `WorkerShutdown`.
+    pub fn shutdown(&self) {
+        if self.stopping.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.registry.fail_all_pending(EditError::WorkerShutdown);
+        if let Some(addr) = self.bound_addr() {
+            let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(200));
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // supervisor: failure detection, result pump, failover
+    // ------------------------------------------------------------------
+
+    fn supervise(self: Arc<Self>) {
+        let cadence = Duration::from_millis(self.cfg.poll_ms.max(1));
+        while !self.stopping.load(Ordering::SeqCst) {
+            let newly_dead: Vec<(usize, String)> = {
+                let mut ms = self.membership.lock().unwrap();
+                ms.expire(Instant::now())
+                    .into_iter()
+                    .map(|slot| {
+                        let name = ms.get(slot).map(|m| m.name.clone()).unwrap_or_default();
+                        (slot, name)
+                    })
+                    .collect()
+            };
+            for (slot, name) in newly_dead {
+                eprintln!("[router] member {name:?} (slot {slot}) declared dead; failing over");
+            }
+            // sweep every dead slot that still holds work — covers both
+            // fresh deaths and submissions that raced the declaration
+            for slot in self.dead_slots_with_work() {
+                self.fail_over_slot(slot);
+            }
+            self.pump();
+            std::thread::sleep(cadence);
+        }
+    }
+
+    fn dead_slots_with_work(&self) -> Vec<usize> {
+        let ms = self.membership.lock().unwrap();
+        let book = self.book.lock().unwrap();
+        ms.members()
+            .iter()
+            .enumerate()
+            .filter(|(slot, m)| {
+                m.state == MemberState::Dead
+                    && book.get(*slot).map(|lane| !lane.is_empty()).unwrap_or(false)
+            })
+            .map(|(slot, _)| slot)
+            .collect()
+    }
+
+    /// Poll every booked request on every live member and sync the
+    /// registry. Transport errors are ignored here — the failure detector
+    /// owns the liveness verdict.
+    fn pump(&self) {
+        let live: Vec<(usize, Arc<RemoteWorker>)> = {
+            let ms = self.membership.lock().unwrap();
+            let ws = self.workers.lock().unwrap();
+            ms.members()
+                .iter()
+                .enumerate()
+                .filter(|(_, m)| m.state != MemberState::Dead)
+                .filter_map(|(slot, _)| ws.get(slot).cloned().map(|w| (slot, w)))
+                .collect()
+        };
+        for (slot, remote) in live {
+            let ids: Vec<u64> = {
+                let book = self.book.lock().unwrap();
+                book.get(slot)
+                    .map(|lane| lane.iter().map(|o| o.id).collect())
+                    .unwrap_or_default()
+            };
+            for id in ids {
+                match remote.poll(id) {
+                    Err(_) => break, // unreachable: expiry decides its fate
+                    Ok(PollState::Queued) => {}
+                    Ok(PollState::Running) => self.registry.mark_running(id),
+                    Ok(PollState::Done(resp)) => {
+                        self.registry.fulfill(id, Ok(Arc::new(*resp)));
+                        let _ = remote.evict(id);
+                        self.clear_entry(slot, id);
+                    }
+                    Ok(PollState::Failed(e)) => {
+                        self.registry.fulfill(id, Err(e));
+                        let _ = remote.evict(id);
+                        self.clear_entry(slot, id);
+                    }
+                    Ok(PollState::Unknown) => {
+                        // the worker forgot the id (restart/epoch bump):
+                        // same recovery as a dead member, per request
+                        self.clear_entry(slot, id);
+                        self.fail_over_request(id);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drain a dead member's lane and recover each request.
+    fn fail_over_slot(&self, slot: usize) {
+        let drained: Vec<Outstanding> = {
+            let mut book = self.book.lock().unwrap();
+            match book.get_mut(slot) {
+                Some(lane) => std::mem::take(lane),
+                None => Vec::new(),
+            }
+        };
+        for o in drained {
+            self.fail_over_request(o.id);
+        }
+    }
+
+    /// Recover one request whose worker is gone: still-queued work is
+    /// re-placed on a ready peer (the engine is deterministic, so the
+    /// re-run yields the identical result); work the lost member was
+    /// already running resolves to [`EditError::WorkerLost`].
+    fn fail_over_request(&self, id: u64) {
+        let wire = self.pending.lock().unwrap().remove(&id);
+        match self.registry.status(id).map(|s| s.state) {
+            None => {}                    // evicted: nothing to recover
+            Some(s) if s.is_terminal() => {}
+            Some(RequestState::Running) => {
+                self.registry.fulfill(id, Err(EditError::WorkerLost));
+            }
+            Some(_) => {
+                let Some(wire) = wire else {
+                    self.registry.fulfill(id, Err(EditError::WorkerLost));
+                    return;
+                };
+                let outstanding = self.outstanding_from_wire(&wire);
+                match self.try_place(&wire, &outstanding) {
+                    Ok(slot) => {
+                        eprintln!("[router] request {id} failed over to slot {slot}");
+                        self.track(slot, outstanding, wire);
+                    }
+                    Err(_) => {
+                        self.registry.fulfill(id, Err(EditError::WorkerLost));
+                    }
+                }
+            }
+        }
+    }
+
+    fn clear_entry(&self, slot: usize, id: u64) {
+        let mut book = self.book.lock().unwrap();
+        if let Some(lane) = book.get_mut(slot) {
+            if let Some(pos) = lane.iter().position(|o| o.id == id) {
+                lane.swap_remove(pos);
+            }
+        }
+        drop(book);
+        self.pending.lock().unwrap().remove(&id);
+    }
+
+    // ------------------------------------------------------------------
+    // submission path
+    // ------------------------------------------------------------------
+
+    fn outstanding_for(&self, req: &EditRequest) -> Outstanding {
+        Outstanding {
+            id: req.id,
+            masked_tokens: req.mask.masked_count(),
+            remaining_steps: self.model.steps,
+            priority: req.priority,
+        }
+    }
+
+    fn outstanding_from_wire(&self, wire: &SubmitWire) -> Outstanding {
+        Outstanding {
+            id: wire.id,
+            masked_tokens: wire.masked.len(),
+            remaining_steps: self.model.steps,
+            priority: wire.priority,
+        }
+    }
+
+    /// Routing context from the membership table: residency is derived
+    /// from each member's announced template set (bytes unknown at the
+    /// router: 0), availability from its state.
+    fn route_ctx_locked(&self, ms: &Membership, template: &str) -> RouteCtx {
+        RouteCtx {
+            residency: ms
+                .members()
+                .iter()
+                .map(|m| {
+                    if m.templates.iter().any(|t| t == template) {
+                        Residency::Host
+                    } else {
+                        Residency::Absent
+                    }
+                })
+                .collect(),
+            template_bytes: 0,
+            available: ms.available(),
+        }
+    }
+
+    /// Pick an available member for `outstanding` (scheduler preference,
+    /// minus `banned` slots) and return its RPC handle.
+    fn pick(
+        &self,
+        outstanding: &Outstanding,
+        template: &str,
+        banned: &[usize],
+    ) -> Option<(usize, Arc<RemoteWorker>)> {
+        let mut ctx = {
+            let ms = self.membership.lock().unwrap();
+            self.route_ctx_locked(&ms, template)
+        };
+        for &b in banned {
+            if b < ctx.available.len() {
+                ctx.available[b] = false;
+            }
+        }
+        if !ctx.available.iter().any(|&a| a) {
+            return None;
+        }
+        let slot = {
+            let book = self.book.lock().unwrap();
+            if book.is_empty() {
+                return None;
+            }
+            let mut sched = self.scheduler.lock().unwrap();
+            let w = sched.pick(outstanding, &book, &ctx);
+            w.min(book.len() - 1)
+        };
+        if !ctx.is_available(slot) {
+            return None;
+        }
+        let remote = self.workers.lock().unwrap().get(slot).cloned()?;
+        Some((slot, remote))
+    }
+
+    /// Place `wire` on some available member over RPC. Members that
+    /// reject or are unreachable are skipped; if nobody accepts, the last
+    /// typed reject (or `WorkerShutdown` when no member was available) is
+    /// returned. Bookkeeping is the caller's job — see [`Router::track`].
+    fn try_place(&self, wire: &SubmitWire, outstanding: &Outstanding) -> Result<usize, EditError> {
+        let mut reject: Option<EditError> = None;
+        let mut banned: Vec<usize> = Vec::new();
+        while let Some((slot, remote)) = self.pick(outstanding, &wire.template, &banned) {
+            match remote.submit(wire) {
+                SubmitOutcome::Accepted => return Ok(slot),
+                SubmitOutcome::Rejected(e) => {
+                    reject = Some(e);
+                    banned.push(slot);
+                }
+                SubmitOutcome::Unreachable(_) => banned.push(slot),
+            }
+        }
+        Err(reject.unwrap_or(EditError::WorkerShutdown))
+    }
+
+    /// Record an accepted placement in the book + pending map. Ordered
+    /// after ticket registration so every booked id is registered — the
+    /// pump relies on that.
+    fn track(&self, slot: usize, outstanding: Outstanding, wire: SubmitWire) {
+        let mut book = self.book.lock().unwrap();
+        if let Some(lane) = book.get_mut(slot) {
+            lane.push(outstanding);
+        }
+        drop(book);
+        self.pending.lock().unwrap().insert(wire.id, wire);
+    }
+
+    /// Route + submit one request. The ticket is created only after a
+    /// worker accepted the submission, so a returned ticket always has an
+    /// owner and will resolve (completion, failover, or `WorkerLost`).
+    pub fn submit(&self, req: EditRequest) -> Result<EditTicket, EditError> {
+        if self.stopping.load(Ordering::SeqCst) {
+            return Err(EditError::WorkerShutdown);
+        }
+        let wire = SubmitWire::from_request(&req);
+        let outstanding = self.outstanding_for(&req);
+        let slot = self.try_place(&wire, &outstanding)?;
+        let ticket = self
+            .registry
+            .register(req.id, slot, req.priority, req.deadline_ms());
+        self.track(slot, outstanding, wire);
+        Ok(ticket)
+    }
+
+    fn assess_admission(&self, req: &EditRequest, outstanding: &Outstanding) -> Result<(), EditError> {
+        let Some(ctl) = &self.admission else {
+            return Ok(());
+        };
+        let ctx = {
+            let ms = self.membership.lock().unwrap();
+            self.route_ctx_locked(&ms, &req.template_id)
+        };
+        let remaining = req
+            .deadline
+            .map(|d| d.saturating_duration_since(Instant::now()));
+        let book = self.book.lock().unwrap();
+        match ctl.assess(outstanding, remaining, &book, &ctx) {
+            Admission::Admit => Ok(()),
+            Admission::Overloaded { retry_after, .. } => Err(EditError::Overloaded {
+                retry_after_ms: (retry_after * 1e3).ceil() as u64,
+            }),
+            Admission::DeadlineInfeasible { estimate, deadline } => {
+                Err(EditError::DeadlineInfeasible(format!(
+                    "estimated completion {estimate:.3}s exceeds deadline {deadline:.3}s"
+                )))
+            }
+        }
+    }
+
+    /// The guarded path the HTTP frontend uses: QoS admission (when
+    /// enabled), then route + submit. Template admission happens at the
+    /// workers — an unknown template comes back as their typed reject.
+    pub fn submit_guarded(&self, req: EditRequest) -> Result<EditTicket, EditError> {
+        let outstanding = self.outstanding_for(&req);
+        let _gate = self.admission_gate.lock().unwrap();
+        self.assess_admission(&req, &outstanding)?;
+        self.submit(req)
+    }
+
+    /// Realize a trace event into a request (same semantics as
+    /// [`crate::cluster::Cluster::event_request`]).
+    pub fn event_request(&self, ev: &TraceEvent) -> EditRequest {
+        let mask = ev.mask(self.model.latent_hw);
+        let mut req = EditRequest::new(ev.id, ev.template.clone(), mask, ev.prompt_seed);
+        req.priority = ev.priority;
+        req.deadline = ev
+            .deadline_ms
+            .map(|ms| req.arrival + Duration::from_millis(ms));
+        req
+    }
+
+    /// Convenience: realize and submit a trace event.
+    pub fn submit_event(&self, ev: &TraceEvent) -> Result<EditTicket, EditError> {
+        self.submit(self.event_request(ev))
+    }
+
+    // ------------------------------------------------------------------
+    // HTTP surface
+    // ------------------------------------------------------------------
+
+    /// Route one request (separated from IO for unit testing).
+    pub fn route(&self, method: &str, path: &str, body: &str) -> (u16, Json) {
+        if let Some(rest) = path.strip_prefix("/v1/edits/") {
+            return match rest.parse::<u64>() {
+                Ok(id) => self.edit_by_id(method, id),
+                Err(_) => (400, error_obj(&format!("bad request id {rest:?}"))),
+            };
+        }
+        if let Some(rest) = path.strip_prefix("/v1/drain/") {
+            if rest.is_empty() {
+                return (400, error_obj("empty member name"));
+            }
+            if method != "POST" {
+                return (405, error_obj("method not allowed"));
+            }
+            return self.drain(rest);
+        }
+        if let Some(rest) = path.strip_prefix("/v1/templates/") {
+            if rest.is_empty() {
+                return (400, error_obj("empty template id"));
+            }
+            if method != "DELETE" {
+                return (405, error_obj("method not allowed"));
+            }
+            return self.template_purge(rest);
+        }
+        match (method, path) {
+            ("POST", "/rpc/announce") => self.announce(body),
+            ("POST", "/rpc/heartbeat") => self.heartbeat(body),
+            ("GET", "/healthz") => (200, Json::obj(vec![("ok", Json::Bool(true))])),
+            ("GET", "/v1/cluster") => self.cluster_body(),
+            ("GET", "/stats") | ("GET", "/v1/stats") => self.stats_body(),
+            ("POST", "/v1/edits") => self.edit_async(body),
+            ("POST", "/v1/templates") => self.template_register(body),
+            _ => (404, error_obj("not found")),
+        }
+    }
+
+    fn announce(&self, body: &str) -> (u16, Json) {
+        let parsed = match Json::parse(body) {
+            Ok(j) => j,
+            Err(e) => return (400, error_obj(&format!("invalid JSON body: {e}"))),
+        };
+        let Some(a) = Announce::parse(&parsed) else {
+            return (400, error_obj("malformed announce"));
+        };
+        if a.rpc_addr.is_empty() {
+            return (400, error_obj("announce without rpc_addr"));
+        }
+        let timeout = Duration::from_millis(self.cfg.rpc_timeout_ms.max(1));
+        let (slot, epoch) = self.membership.lock().unwrap().announce(
+            &a.name,
+            &a.rpc_addr,
+            a.templates.clone(),
+            Instant::now(),
+        );
+        {
+            let mut ws = self.workers.lock().unwrap();
+            let remote = Arc::new(RemoteWorker::new(a.name.clone(), a.rpc_addr.clone(), timeout));
+            if slot < ws.len() {
+                ws[slot] = remote;
+            } else {
+                ws.push(remote);
+            }
+        }
+        {
+            let mut book = self.book.lock().unwrap();
+            while book.len() <= slot {
+                book.push(Vec::new());
+            }
+        }
+        eprintln!(
+            "[router] member {:?} announced at {} (slot {slot}, epoch {epoch})",
+            a.name, a.rpc_addr
+        );
+        (
+            200,
+            Json::obj(vec![
+                ("slot", Json::num(slot as f64)),
+                ("epoch", Json::num(epoch as f64)),
+            ]),
+        )
+    }
+
+    fn heartbeat(&self, body: &str) -> (u16, Json) {
+        let parsed = match Json::parse(body) {
+            Ok(j) => j,
+            Err(e) => return (400, error_obj(&format!("invalid JSON body: {e}"))),
+        };
+        let Some(name) = parsed.at("name").as_str() else {
+            return (400, error_obj("missing \"name\" field"));
+        };
+        let snapshot = parsed.get("snapshot").and_then(proto::snapshot_from_json);
+        if self
+            .membership
+            .lock()
+            .unwrap()
+            .heartbeat(name, snapshot, Instant::now())
+        {
+            (200, Json::obj(vec![("ok", Json::Bool(true))]))
+        } else {
+            (410, error_obj("unknown or dead member: re-announce"))
+        }
+    }
+
+    /// `GET /v1/cluster`: the membership table + aggregate load.
+    fn cluster_body(&self) -> (u16, Json) {
+        let ms = self.membership.lock().unwrap();
+        let mut queued = 0usize;
+        let mut running = 0usize;
+        let members: Vec<Json> = ms
+            .members()
+            .iter()
+            .enumerate()
+            .map(|(slot, m)| {
+                let mut pairs = vec![
+                    ("name", Json::str(m.name.clone())),
+                    ("slot", Json::num(slot as f64)),
+                    ("state", Json::str(m.state.label())),
+                    ("epoch", Json::num(m.epoch as f64)),
+                    ("rpc_addr", Json::str(m.rpc_addr.clone())),
+                    (
+                        "heartbeat_age_ms",
+                        Json::num(proto::age_ms(m.last_heartbeat) as f64),
+                    ),
+                    ("templates", Json::num(m.templates.len() as f64)),
+                ];
+                if let Some(s) = &m.snapshot {
+                    queued += s.queued;
+                    running += s.running;
+                    pairs.push(("queued", Json::num(s.queued as f64)));
+                    pairs.push(("running", Json::num(s.running as f64)));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        let ready = ms.available().iter().filter(|&&a| a).count();
+        drop(ms);
+        (
+            200,
+            Json::obj(vec![
+                ("members", Json::arr(members)),
+                ("ready", Json::num(ready as f64)),
+                ("queued", Json::num(queued as f64)),
+                ("running", Json::num(running as f64)),
+                (
+                    "inflight",
+                    Json::num(self.pending.lock().unwrap().len() as f64),
+                ),
+                ("completed", Json::num(self.completed() as f64)),
+            ]),
+        )
+    }
+
+    fn stats_body(&self) -> (u16, Json) {
+        (
+            200,
+            Json::obj(vec![
+                ("completed", Json::num(self.completed() as f64)),
+                ("uptime_secs", Json::num(self.elapsed())),
+                (
+                    "members",
+                    Json::num(self.membership.lock().unwrap().len() as f64),
+                ),
+                ("ready", Json::num(self.ready_count() as f64)),
+                (
+                    "inflight",
+                    Json::num(self.pending.lock().unwrap().len() as f64),
+                ),
+            ]),
+        )
+    }
+
+    /// Parse + validate a submit body (same schema as the in-process
+    /// frontend's `POST /v1/edits`).
+    fn build_request(&self, body: &str) -> Result<EditRequest, (u16, Json)> {
+        let j = Json::parse(body)
+            .map_err(|e| (400, error_obj(&format!("invalid JSON body: {e}"))))?;
+        let template = j.at("template").as_str().unwrap_or("tpl-0").to_string();
+        let ratio = j.at("mask_ratio").as_f64().unwrap_or(0.15);
+        let seed = j.at("prompt_seed").as_f64().unwrap_or(0.0) as u64;
+        let priority = match j.at("priority").as_str() {
+            None => Priority::default(),
+            Some(s) => Priority::parse(s).ok_or_else(|| {
+                (
+                    400,
+                    error_obj(&format!(
+                        "unknown priority {s:?} (interactive | standard | batch)"
+                    )),
+                )
+            })?,
+        };
+        let deadline_ms = j.at("deadline_ms").as_f64().map(|ms| ms.max(0.0) as u64);
+        let hw = self.model.latent_hw;
+        let mut builder = EditRequestBuilder::new(0)
+            .template(template)
+            .prompt_seed(seed)
+            .priority(priority);
+        if let Some(ms) = deadline_ms {
+            builder = builder.deadline_ms(ms);
+        }
+        let mut req = builder
+            .synth_mask(hw, ratio)
+            .and_then(|b| b.expect_tokens(hw * hw).build())
+            .map_err(|e| edit_error_reply(&e))?;
+        req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        Ok(req)
+    }
+
+    fn edit_async(&self, body: &str) -> (u16, Json) {
+        let req = match self.build_request(body) {
+            Ok(r) => r,
+            Err(reply) => return reply,
+        };
+        match self.submit_guarded(req) {
+            Ok(t) => (
+                202,
+                Json::obj(vec![
+                    ("id", Json::num(t.id() as f64)),
+                    ("status", Json::str("queued")),
+                    ("status_url", Json::str(format!("/v1/edits/{}", t.id()))),
+                ]),
+            ),
+            Err(e) => edit_error_reply(&e),
+        }
+    }
+
+    /// The slot currently holding `id` (follows failovers, unlike the
+    /// registry's original worker field).
+    fn slot_of_request(&self, id: u64) -> Option<usize> {
+        let book = self.book.lock().unwrap();
+        book.iter().position(|lane| lane.iter().any(|o| o.id == id))
+    }
+
+    fn edit_by_id(&self, method: &str, id: u64) -> (u16, Json) {
+        match method {
+            "GET" => match self.registry.status(id) {
+                None => (404, error_obj(&format!("no such request {id}"))),
+                Some(st) => {
+                    let reply = match &st.state {
+                        RequestState::Done(resp) => {
+                            done_body(id, st.worker, st.age_secs, st.deadline_ms, resp)
+                        }
+                        RequestState::Failed(err) => {
+                            let mut pairs =
+                                status_pairs(id, st.state.label(), st.worker, st.age_secs);
+                            push_qos_pairs(&mut pairs, st.priority, st.deadline_ms);
+                            if *err != EditError::Cancelled {
+                                pairs.push(("error", Json::str(err.to_string())));
+                                pairs.push(("error_kind", Json::str(err.kind())));
+                            }
+                            Json::obj(pairs)
+                        }
+                        _ => {
+                            let mut pairs =
+                                status_pairs(id, st.state.label(), st.worker, st.age_secs);
+                            push_qos_pairs(&mut pairs, st.priority, st.deadline_ms);
+                            Json::obj(pairs)
+                        }
+                    };
+                    (200, reply)
+                }
+            },
+            "DELETE" => self.cancel(id),
+            _ => (405, error_obj("method not allowed")),
+        }
+    }
+
+    fn cancel(&self, id: u64) -> (u16, Json) {
+        let Some(st) = self.registry.status(id) else {
+            return (404, error_obj(&format!("no such request {id}")));
+        };
+        if st.state.is_terminal() {
+            // result already delivered: evict the retained entry
+            return if self.registry.evict_terminal(id) {
+                (
+                    200,
+                    Json::obj(vec![
+                        ("id", Json::num(id as f64)),
+                        ("status", Json::str("evicted")),
+                    ]),
+                )
+            } else {
+                (404, error_obj(&format!("no such request {id}")))
+            };
+        }
+        let slot = self.slot_of_request(id).unwrap_or(st.worker);
+        let Some(remote) = self.workers.lock().unwrap().get(slot).cloned() else {
+            return (404, error_obj(&format!("no member holds request {id}")));
+        };
+        match remote.cancel(id) {
+            Err(_) => (
+                502,
+                error_obj("member unreachable; the failure detector will resolve the request"),
+            ),
+            Ok((status, reply)) => match reply.at("status").as_str() {
+                // the worker dropped it (cancelled while queued, or its
+                // terminal copy was evicted): resolve our ticket now
+                Some("cancelled") | Some("evicted") => {
+                    self.registry.fulfill(id, Err(EditError::Cancelled));
+                    self.clear_entry(slot, id);
+                    (
+                        200,
+                        Json::obj(vec![
+                            ("id", Json::num(id as f64)),
+                            ("status", Json::str("cancelled")),
+                        ]),
+                    )
+                }
+                // "cancelling" (or a refusal): the pump picks up the
+                // worker's verdict on a later cycle
+                _ => (status, reply),
+            },
+        }
+    }
+
+    /// `POST /v1/drain/{name}`: live drain — the member finishes what it
+    /// holds, receives no new work, and keeps heartbeating.
+    fn drain(&self, name: &str) -> (u16, Json) {
+        let slot = {
+            let mut ms = self.membership.lock().unwrap();
+            if !ms.begin_drain(name) {
+                return (404, error_obj(&format!("no such member {name:?}")));
+            }
+            ms.slot_of(name)
+        };
+        let remote = slot.and_then(|s| self.workers.lock().unwrap().get(s).cloned());
+        let acked = remote.map(|r| r.drain().is_ok()).unwrap_or(false);
+        (
+            200,
+            Json::obj(vec![
+                ("name", Json::str(name)),
+                ("state", Json::str("draining")),
+                ("worker_acked", Json::Bool(acked)),
+            ]),
+        )
+    }
+
+    fn live_remotes(&self) -> Vec<Arc<RemoteWorker>> {
+        let ms = self.membership.lock().unwrap();
+        let ws = self.workers.lock().unwrap();
+        ms.members()
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.state != MemberState::Dead)
+            .filter_map(|(slot, _)| ws.get(slot).cloned())
+            .collect()
+    }
+
+    /// `POST /v1/templates`: fan a registration out to every live member.
+    fn template_register(&self, body: &str) -> (u16, Json) {
+        let parsed = match Json::parse(body) {
+            Ok(j) => j,
+            Err(e) => return (400, error_obj(&format!("invalid JSON body: {e}"))),
+        };
+        let Some(template) = parsed.at("template").as_str() else {
+            return (400, error_obj("missing \"template\" field"));
+        };
+        let mut reached = 0usize;
+        for remote in self.live_remotes() {
+            if remote.register_template(template).is_ok() {
+                reached += 1;
+            }
+        }
+        (
+            202,
+            Json::obj(vec![
+                ("template", Json::str(template)),
+                ("state", Json::str("registering")),
+                ("members", Json::num(reached as f64)),
+            ]),
+        )
+    }
+
+    /// `DELETE /v1/templates/{id}`: fan a purge out to every live member.
+    fn template_purge(&self, template_id: &str) -> (u16, Json) {
+        let mut reached = 0usize;
+        for remote in self.live_remotes() {
+            if remote.purge_template(template_id).is_ok() {
+                reached += 1;
+            }
+        }
+        (
+            200,
+            Json::obj(vec![
+                ("template", Json::str(template_id)),
+                ("state", Json::str("retiring")),
+                ("members", Json::num(reached as f64)),
+            ]),
+        )
+    }
+}

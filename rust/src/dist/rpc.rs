@@ -1,0 +1,230 @@
+//! Keep-alive HTTP/1.1 JSON client for the dist data plane.
+//!
+//! One [`RpcClient`] owns one TCP connection to one peer. Requests are
+//! sent with `Connection: keep-alive` so the server's
+//! [`crate::server::serve_connection`] loop reuses the socket; if the
+//! connection was dropped (peer restarted, idle timeout), the client
+//! reconnects once and retries the call before reporting an IO error.
+//! Read/write timeouts bound every call, so a hung peer turns into a
+//! typed [`RpcError::Io`] instead of a stuck thread — the router's
+//! membership layer decides what that means.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Largest accepted RPC response body (tensor payloads are bounded by the
+/// model's latent size; 64 MiB is far above any real reply).
+pub const MAX_RESPONSE_BYTES: usize = 64 << 20;
+
+/// Why an RPC call failed at the transport/protocol layer. HTTP-level
+/// failures (4xx/5xx) are *not* errors here — they come back as the
+/// status + body for the caller to interpret.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RpcError {
+    /// Connect/read/write failure, after one reconnect attempt.
+    Io(String),
+    /// The peer spoke something that isn't the expected HTTP/JSON.
+    Proto(String),
+}
+
+impl std::fmt::Display for RpcError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RpcError::Io(m) => write!(f, "rpc io error: {m}"),
+            RpcError::Proto(m) => write!(f, "rpc protocol error: {m}"),
+        }
+    }
+}
+
+/// A single keep-alive connection to one RPC peer.
+pub struct RpcClient {
+    addr: String,
+    timeout: Duration,
+    conn: Option<BufReader<TcpStream>>,
+}
+
+impl RpcClient {
+    pub fn new(addr: impl Into<String>, timeout: Duration) -> RpcClient {
+        RpcClient { addr: addr.into(), timeout, conn: None }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn connect(&mut self) -> std::io::Result<()> {
+        let stream = TcpStream::connect(&self.addr)?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+        stream.set_nodelay(true)?;
+        self.conn = Some(BufReader::new(stream));
+        Ok(())
+    }
+
+    /// One request/response exchange on the current connection.
+    fn exchange(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> std::io::Result<Result<(u16, Json), RpcError>> {
+        if self.conn.is_none() {
+            self.connect()?;
+        }
+        let reader = self.conn.as_mut().expect("connected");
+        {
+            let stream = reader.get_mut();
+            write!(
+                stream,
+                "{method} {path} HTTP/1.1\r\nHost: {}\r\nConnection: keep-alive\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+                self.addr,
+                body.len()
+            )?;
+            stream.flush()?;
+        }
+        // status line
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "peer closed before status line",
+            ));
+        }
+        let status: u16 = match line.split_whitespace().nth(1).and_then(|s| s.parse().ok()) {
+            Some(s) => s,
+            None => return Ok(Err(RpcError::Proto(format!("bad status line {line:?}")))),
+        };
+        // headers
+        let mut content_length = 0usize;
+        let mut server_closes = false;
+        loop {
+            let mut h = String::new();
+            if reader.read_line(&mut h)? == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "peer closed mid-headers",
+                ));
+            }
+            let h = h.trim();
+            if h.is_empty() {
+                break;
+            }
+            let lower = h.to_ascii_lowercase();
+            if let Some(v) = lower.strip_prefix("content-length:") {
+                content_length = v.trim().parse().unwrap_or(usize::MAX);
+            } else if let Some(v) = lower.strip_prefix("connection:") {
+                server_closes = v.trim() == "close";
+            }
+        }
+        if content_length > MAX_RESPONSE_BYTES {
+            self.conn = None;
+            return Ok(Err(RpcError::Proto(format!(
+                "response of {content_length} bytes exceeds the {MAX_RESPONSE_BYTES}-byte cap"
+            ))));
+        }
+        let mut raw = vec![0u8; content_length];
+        reader.read_exact(&mut raw)?;
+        if server_closes {
+            self.conn = None; // e.g. a 431/413 refusal: don't reuse
+        }
+        let text = String::from_utf8_lossy(&raw);
+        match Json::parse(&text) {
+            Ok(j) => Ok(Ok((status, j))),
+            Err(e) => Ok(Err(RpcError::Proto(format!("bad JSON body: {e}")))),
+        }
+    }
+
+    /// Issue one call. Reconnects and retries once on a transport error
+    /// (a keep-alive socket the peer already closed looks exactly like
+    /// that), then surfaces [`RpcError::Io`].
+    pub fn call(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+    ) -> Result<(u16, Json), RpcError> {
+        let body = body.map(|j| j.to_string()).unwrap_or_default();
+        let had_conn = self.conn.is_some();
+        match self.exchange(method, path, &body) {
+            Ok(result) => result,
+            Err(first) => {
+                self.conn = None;
+                if !had_conn {
+                    // a fresh connect already failed: the peer is down
+                    return Err(RpcError::Io(first.to_string()));
+                }
+                match self.exchange(method, path, &body) {
+                    Ok(result) => result,
+                    Err(e) => {
+                        self.conn = None;
+                        Err(RpcError::Io(e.to_string()))
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::serve_connection;
+    use std::net::TcpListener;
+
+    /// Spin a tiny echo server on an OS-assigned port; returns its addr.
+    fn echo_server() -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { break };
+                std::thread::spawn(move || {
+                    let _ = serve_connection(stream, |method, path, body| {
+                        let echoed = Json::parse(body).unwrap_or(Json::Null);
+                        (
+                            200,
+                            Json::obj(vec![
+                                ("method", Json::str(method)),
+                                ("path", Json::str(path)),
+                                ("body", echoed),
+                            ]),
+                        )
+                    });
+                });
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn keep_alive_calls_reuse_the_connection() {
+        let addr = echo_server();
+        let mut client = RpcClient::new(addr, Duration::from_secs(5));
+        for i in 0..5 {
+            let body = Json::obj(vec![("i", Json::num(i as f64))]);
+            let (status, reply) = client.call("POST", "/echo", Some(&body)).unwrap();
+            assert_eq!(status, 200);
+            assert_eq!(reply.at("path").as_str(), Some("/echo"));
+            assert_eq!(reply.at("body").at("i").as_usize(), Some(i));
+        }
+        // the connection survived all five calls
+        assert!(client.conn.is_some(), "keep-alive connection must be reused");
+    }
+
+    #[test]
+    fn down_peer_reports_io_error() {
+        // bind-and-drop: the port is (almost certainly) refused after drop
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let mut client = RpcClient::new(addr, Duration::from_millis(500));
+        match client.call("GET", "/rpc/health", None) {
+            Err(RpcError::Io(_)) => {}
+            other => panic!("expected Io error, got {other:?}"),
+        }
+    }
+}

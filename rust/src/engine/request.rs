@@ -123,6 +123,12 @@ pub enum EditError {
     DeadlineExceeded,
     #[error("worker shut down before completing the request")]
     WorkerShutdown,
+    /// The worker holding the request left the cluster (crashed, was
+    /// killed, or missed enough heartbeats to be declared dead) and the
+    /// request could not be failed over to a peer. Distinct from
+    /// `WorkerShutdown`: the cluster is still up, one member is gone.
+    #[error("worker lost while holding the request")]
+    WorkerLost,
     /// Engine-side fault (artifact IO, cache failure) — a server error,
     /// not a client one.
     #[error("internal error: {0}")]
@@ -142,6 +148,7 @@ impl EditError {
             EditError::DeadlineInfeasible(_) => 422,
             EditError::DeadlineExceeded => 504,
             EditError::WorkerShutdown => 503,
+            EditError::WorkerLost => 503,
             EditError::Internal(_) => 500,
         }
     }
@@ -158,6 +165,7 @@ impl EditError {
             EditError::DeadlineInfeasible(_) => "deadline_infeasible",
             EditError::DeadlineExceeded => "deadline_exceeded",
             EditError::WorkerShutdown => "worker_shutdown",
+            EditError::WorkerLost => "worker_lost",
             EditError::Internal(_) => "internal",
         }
     }
@@ -426,6 +434,8 @@ mod tests {
         assert_eq!(EditError::DeadlineExceeded.http_status(), 504);
         assert_eq!(EditError::DeadlineExceeded.kind(), "deadline_exceeded");
         assert_eq!(EditError::WorkerShutdown.http_status(), 503);
+        assert_eq!(EditError::WorkerLost.http_status(), 503);
+        assert_eq!(EditError::WorkerLost.kind(), "worker_lost");
         assert_eq!(EditError::Internal("io".into()).http_status(), 500);
         assert_eq!(EditError::Cancelled.kind(), "cancelled");
         assert_eq!(EditError::Timeout.kind(), "timeout");

@@ -30,8 +30,13 @@
 //!   resolved per-id by the collector (`cluster::lifecycle`), with typed
 //!   `EditError`s, queued-request cancellation, and online template
 //!   registration/retirement over per-worker cache tiers.
-//! - [`workload`]: Fig.-3 mask-ratio distributions, Poisson traffic,
-//!   trace record/replay.
+//! - [`dist`]: the distributed serving plane — a router process and N
+//!   worker processes over a keep-alive HTTP/JSON RPC data plane, with
+//!   membership/epochs, heartbeat failure detection, live drain, and
+//!   queued-work failover (`WorkerLost` for in-flight casualties).
+//! - [`workload`]: Fig.-3 mask-ratio distributions, Zipf/quadratic
+//!   template popularity, diurnal / burst-storm arrival shaping, Poisson
+//!   traffic, trace record/replay.
 //! - [`metrics`], [`quality`], [`server`]: observability, image-quality
 //!   metrics (Table 2), and the HTTP frontend (async `/v1/edits` submit /
 //!   poll / cancel endpoints plus a synchronous `/edit` wrapper).
@@ -42,6 +47,7 @@
 pub mod cache;
 pub mod cluster;
 pub mod config;
+pub mod dist;
 pub mod engine;
 pub mod metrics;
 pub mod model;

@@ -15,13 +15,15 @@ use anyhow::{bail, Context, Result};
 use instgenie::cache::latency_model::{calibrate, LatencyModel};
 use instgenie::cluster::{Cluster, ClusterOpts, RequestState};
 use instgenie::config::{BatchingPolicy, CacheMode, EngineConfig, SystemKind};
+use instgenie::dist::{DistConfig, Router, WorkerNode};
 use instgenie::metrics::Recorder;
+use instgenie::qos::AdmissionController;
 use instgenie::runtime::{Manifest, ModelRuntime};
 use instgenie::scheduler;
 use instgenie::server::HttpServer;
 use instgenie::util::cli::Args;
 use instgenie::util::stats::Summary;
-use instgenie::workload::{replay, ClassMix, MaskDist, TraceGen};
+use instgenie::workload::{replay, ArrivalShape, ClassMix, MaskDist, Popularity, TraceGen};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -48,9 +50,14 @@ fn print_help() {
         "instgenie — mask-aware image-editing serving (paper reproduction)\n\
          commands:\n\
          \x20 serve          --model sdxlm --workers 2 --addr 127.0.0.1:8801 --system instgenie\n\
+         \x20                [--role cluster|router|worker]   distributed plane:\n\
+         \x20                  router: --addr 127.0.0.1:8801 [--heartbeat-ms 500 --suspect-after-ms 2000\n\
+         \x20                          --dead-after-ms 5000 --poll-ms 100 --rpc-timeout-ms 10000]\n\
+         \x20                  worker: --rpc-addr 127.0.0.1:0 --router 127.0.0.1:8801 --name worker-a\n\
          \x20 run            --model sdxlm --workers 2 --rps 1.0 --requests 40 --system instgenie\n\
          \x20                --scheduler round-robin|request-lb|token-lb|cache-aware|mask-aware|qos-aware\n\
          \x20                --dist production --templates 4 --class-mix 0.2,0.5,0.3\n\
+         \x20                [--popularity quadratic|zipf:<s>] [--shape steady|diurnal:<p>:<d>|bursts:<p>:<w>:<a>]\n\
          \x20                [--no-qos] [--aging-ms 2000] [--max-pending 4096] [--host-step-loop]\n\
          \x20 calibrate      --model fluxm [--reps 20]\n\
          \x20 workload-stats --dist production|public|viton\n\
@@ -71,7 +78,14 @@ fn print_help() {
          \x20 DELETE /v1/templates/{{id}}    retire (drain in-flight, free tiers)\n\
          \x20 GET    /v1/stats       per-worker queue depths + cache tiers + completions\n\
          \x20 POST   /edit           synchronous submit+wait wrapper\n\
-         \x20 GET    /healthz        liveness"
+         \x20 GET    /healthz        liveness\n\
+         \n\
+         a --role router additionally exposes the membership plane:\n\
+         \x20 GET    /v1/cluster     member list (joining|ready|draining|suspect|dead), epoch,\n\
+         \x20                        heartbeat age, per-member + aggregate queue depths\n\
+         \x20 POST   /v1/drain/{{name}}  live-drain a member (finishes held work, takes no more)\n\
+         \x20 POST   /rpc/announce   (worker->router) join/rejoin with rpc_addr + templates\n\
+         \x20 POST   /rpc/heartbeat  (worker->router) liveness + load snapshot"
     );
 }
 
@@ -140,11 +154,100 @@ fn launch_cluster(args: &Args) -> Result<Cluster> {
     )
 }
 
+fn dist_config(args: &Args) -> DistConfig {
+    let d = DistConfig::default();
+    DistConfig {
+        heartbeat_ms: args.u64("heartbeat-ms", d.heartbeat_ms),
+        suspect_after_ms: args.u64("suspect-after-ms", d.suspect_after_ms),
+        dead_after_ms: args.u64("dead-after-ms", d.dead_after_ms),
+        poll_ms: args.u64("poll-ms", d.poll_ms),
+        rpc_timeout_ms: args.u64("rpc-timeout-ms", d.rpc_timeout_ms),
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
-    let cluster = Arc::new(launch_cluster(args)?);
-    let addr = args.str("addr", "127.0.0.1:8801");
-    let server = Arc::new(HttpServer::new(cluster, 1_000_000));
-    server.serve(&addr)
+    match args.str("role", "cluster").as_str() {
+        "cluster" => {
+            let cluster = Arc::new(launch_cluster(args)?);
+            let addr = args.str("addr", "127.0.0.1:8801");
+            let server = Arc::new(HttpServer::new(cluster, 1_000_000));
+            server.serve(&addr)
+        }
+        "router" => cmd_serve_router(args),
+        "worker" => cmd_serve_worker(args),
+        other => bail!("bad --role {other:?} (cluster|router|worker)"),
+    }
+}
+
+/// `serve --role router`: the distributed plane's front process. Serves
+/// the public `/v1/*` API plus the worker-facing `/rpc/*` control
+/// endpoints; workers join via `--router <this addr>`.
+fn cmd_serve_router(args: &Args) -> Result<()> {
+    let model = args.str("model", "sdxlm");
+    let artifact_dir = args.str("artifacts", "artifacts");
+    let engine = engine_config(args)?;
+    let lat = LatencyModel::load_or_nominal(&artifact_dir, &model);
+    let manifest = Manifest::load(&artifact_dir)?;
+    let mcfg = manifest.model(&model)?.config.clone();
+    let sched = scheduler::by_name(
+        &args.str("scheduler", "mask-aware"),
+        &mcfg,
+        &lat,
+        engine.cache_mode,
+        engine.max_batch,
+    )
+    .context("bad --scheduler")?;
+    let admission = engine.qos.enabled.then(|| {
+        AdmissionController::new(
+            mcfg.clone(),
+            lat.clone(),
+            engine.cache_mode,
+            engine.max_batch,
+            engine.qos.clone(),
+        )
+    });
+    let router = Router::new(mcfg, sched, admission, dist_config(args));
+    let addr = router.start(&args.str("addr", "127.0.0.1:8801"))?;
+    eprintln!("[router] listening on {addr} (public api + worker rpc)");
+    loop {
+        std::thread::park();
+    }
+}
+
+/// `serve --role worker`: one worker process of the distributed plane.
+/// Wraps a single-worker engine behind `/rpc/*` and (when `--router` is
+/// given) announces + heartbeats to the router.
+fn cmd_serve_worker(args: &Args) -> Result<()> {
+    let model = args.str("model", "sdxlm");
+    let artifact_dir = args.str("artifacts", "artifacts");
+    let engine = engine_config(args)?;
+    let templates: Vec<String> = (0..args.usize("templates", 4))
+        .map(|i| format!("tpl-{i}"))
+        .collect();
+    let lat = LatencyModel::load_or_nominal(&artifact_dir, &model);
+    let name = args.str("name", &format!("worker-{}", std::process::id()));
+    let node = Arc::new(WorkerNode::launch(
+        name,
+        ClusterOpts {
+            workers: 1,
+            engine,
+            model,
+            artifact_dir,
+            templates,
+            lat_model: lat,
+            warmup: args.bool("warmup"),
+        },
+    )?);
+    let addr = node.start(&args.str("rpc-addr", "127.0.0.1:0"))?;
+    eprintln!("[worker] {} serving rpc on {addr}", node.name());
+    if let Some(router) = args.flags.get("router") {
+        node.announce_to(router, &dist_config(args));
+    } else {
+        eprintln!("[worker] no --router given: standalone rpc mode");
+    }
+    loop {
+        std::thread::park();
+    }
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -157,6 +260,17 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
     if let Some(mix) = args.flags.get("class-mix") {
         gen = gen.with_mix(ClassMix::parse(mix).context("bad --class-mix (i,s,b weights)")?);
+    }
+    if let Some(p) = args.flags.get("popularity") {
+        gen = gen.with_popularity(
+            Popularity::parse(p).context("bad --popularity (quadratic|zipf:<s>)")?,
+        );
+    }
+    if let Some(s) = args.flags.get("shape") {
+        gen = gen.with_shape(
+            ArrivalShape::parse(s)
+                .context("bad --shape (steady|diurnal:<period>:<depth>|bursts:<period>:<width>:<amplitude>)")?,
+        );
     }
     let events = gen.generate(args.usize("requests", 40));
     eprintln!(

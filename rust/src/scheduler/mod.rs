@@ -44,11 +44,23 @@ pub struct RouteCtx {
     /// The template's registered cache footprint in bytes (the numerator
     /// of the cache-load penalty; 0 when unknown).
     pub template_bytes: usize,
+    /// `available[w]` = worker w may take new work. Empty means every
+    /// worker is available (the in-process cluster's case). The dist
+    /// router marks draining / suspect / dead members — and members whose
+    /// snapshots have gone stale — unavailable, so a dead remote worker
+    /// reads as *infinite cost* to every policy instead of as its
+    /// last-published load.
+    pub available: Vec<bool>,
 }
 
 impl RouteCtx {
     pub fn residency_for(&self, worker: usize) -> Residency {
         self.residency.get(worker).copied().unwrap_or(Residency::Host)
+    }
+
+    /// Whether worker `w` may be routed to (missing entries = available).
+    pub fn is_available(&self, worker: usize) -> bool {
+        self.available.get(worker).copied().unwrap_or(true)
     }
 }
 
@@ -82,10 +94,18 @@ impl Scheduler for RoundRobin {
         "round-robin"
     }
 
-    fn pick(&mut self, _req: &Outstanding, book: &Book, _ctx: &RouteCtx) -> usize {
-        let w = self.next % book.len();
-        self.next = self.next.wrapping_add(1);
-        w
+    fn pick(&mut self, _req: &Outstanding, book: &Book, ctx: &RouteCtx) -> usize {
+        let n = book.len();
+        for _ in 0..n {
+            let w = self.next % n;
+            self.next = self.next.wrapping_add(1);
+            if ctx.is_available(w) {
+                return w;
+            }
+        }
+        // every worker unavailable: degenerate pick (callers gate on
+        // having at least one ready member before routing)
+        self.next % n
     }
 }
 
@@ -98,8 +118,11 @@ impl Scheduler for LeastRequests {
         "request-lb"
     }
 
-    fn pick(&mut self, _req: &Outstanding, book: &Book, _ctx: &RouteCtx) -> usize {
-        (0..book.len()).min_by_key(|&w| book[w].len()).unwrap_or(0)
+    fn pick(&mut self, _req: &Outstanding, book: &Book, ctx: &RouteCtx) -> usize {
+        (0..book.len())
+            .filter(|&w| ctx.is_available(w))
+            .min_by_key(|&w| book[w].len())
+            .unwrap_or(0)
     }
 }
 
@@ -112,8 +135,9 @@ impl Scheduler for LeastTokens {
         "token-lb"
     }
 
-    fn pick(&mut self, _req: &Outstanding, book: &Book, _ctx: &RouteCtx) -> usize {
+    fn pick(&mut self, _req: &Outstanding, book: &Book, ctx: &RouteCtx) -> usize {
         (0..book.len())
+            .filter(|&w| ctx.is_available(w))
             .min_by_key(|&w| {
                 book[w]
                     .iter()
@@ -138,6 +162,7 @@ impl Scheduler for CacheAware {
 
     fn pick(&mut self, _req: &Outstanding, book: &Book, ctx: &RouteCtx) -> usize {
         (0..book.len())
+            .filter(|&w| ctx.is_available(w))
             .min_by_key(|&w| (ctx.residency_for(w), book[w].len()))
             .unwrap_or(0)
     }
@@ -199,6 +224,9 @@ impl MaskAware {
         let mut best = 0;
         let mut best_cost = f64::INFINITY;
         for (w, outstanding) in book.iter().enumerate() {
+            if !ctx.is_available(w) {
+                continue; // dead/draining member: infinite cost
+            }
             let mut hypo = outstanding.clone();
             hypo.push(req.clone());
             let cost = self.calc_cost(&hypo)
@@ -271,6 +299,9 @@ impl Scheduler for QosAware {
         let mut best = 0;
         let mut best_key = (f64::INFINITY, f64::INFINITY);
         for (w, outstanding) in book.iter().enumerate() {
+            if !ctx.is_available(w) {
+                continue;
+            }
             let penalty = self
                 .inner
                 .cache_load_cost(ctx.residency_for(w), ctx.template_bytes);
@@ -408,6 +439,7 @@ mod tests {
         let ctx = RouteCtx {
             residency: vec![Residency::Absent, Residency::Host],
             template_bytes: 1 << 20,
+            ..RouteCtx::default()
         };
         let mut ca = CacheAware;
         assert_eq!(ca.pick(&o(1, 4), &book, &ctx), 1);
@@ -421,6 +453,7 @@ mod tests {
         let ctx = RouteCtx {
             residency: vec![Residency::Absent, Residency::Disk],
             template_bytes: 1024,
+            ..RouteCtx::default()
         };
         let book = vec![vec![], vec![]];
         assert_eq!(ca.pick(&o(1, 4), &book, &ctx), 1, "disk beats absent");
@@ -428,6 +461,7 @@ mod tests {
         let ctx = RouteCtx {
             residency: vec![Residency::Host, Residency::Host],
             template_bytes: 1024,
+            ..RouteCtx::default()
         };
         let book = vec![vec![o(1, 4)], vec![]];
         assert_eq!(ca.pick(&o(2, 4), &book, &ctx), 1);
@@ -441,6 +475,7 @@ mod tests {
         let ctx = RouteCtx {
             residency: vec![Residency::Disk, Residency::Host],
             template_bytes: 8 << 20,
+            ..RouteCtx::default()
         };
         assert_eq!(s.pick(&o(9, 4), &book, &ctx), 1);
         // penalty ordering: host < disk < absent (registration trace)
@@ -461,6 +496,7 @@ mod tests {
         let ctx = RouteCtx {
             residency: vec![Residency::Host, Residency::Disk],
             template_bytes: 1 << 10,
+            ..RouteCtx::default()
         };
         assert_eq!(s.pick(&o(99, 4), &book, &ctx), 1);
     }
@@ -506,6 +542,7 @@ mod tests {
         let ctx = RouteCtx {
             residency: vec![Residency::Host, Residency::Absent],
             template_bytes: 8 << 20,
+            ..RouteCtx::default()
         };
         // batch avoids the cache load: it has no latency target, so the
         // cheapest (no-penalty) worker wins despite the backlog
@@ -518,6 +555,7 @@ mod tests {
         let ctx = RouteCtx {
             residency: vec![Residency::Absent, Residency::Absent],
             template_bytes: 8 << 20,
+            ..RouteCtx::default()
         };
         assert_eq!(s.pick(&o_class(9, 4, Priority::Batch), &book, &ctx), 1);
     }
@@ -530,5 +568,43 @@ mod tests {
             assert!(by_name(n, &c, &l, CacheMode::CacheY, 8).is_some(), "{n}");
         }
         assert!(by_name("nope", &c, &l, CacheMode::CacheY, 8).is_none());
+    }
+
+    #[test]
+    fn empty_availability_means_everyone_available() {
+        let ctx = uniform();
+        assert!(ctx.is_available(0));
+        assert!(ctx.is_available(17));
+    }
+
+    #[test]
+    fn all_policies_skip_unavailable_workers() {
+        let c = cfg();
+        let l = LatencyModel::nominal(1e9, 1e8);
+        // worker 0 is idle but unavailable (dead / draining); worker 1 is
+        // loaded but alive — every policy must route to worker 1
+        let book = vec![vec![], vec![o(1, 16), o(2, 16)]];
+        let ctx = RouteCtx {
+            residency: vec![Residency::Host, Residency::Absent],
+            template_bytes: 8 << 20,
+            available: vec![false, true],
+        };
+        for n in POLICY_NAMES {
+            let mut s = by_name(n, &c, &l, CacheMode::CacheY, 8).unwrap();
+            assert_eq!(s.pick(&o(9, 4), &book, &ctx), 1, "policy {n}");
+        }
+        // batch class goes through the qos-aware penalty path; make sure
+        // that branch skips the dead worker too
+        let mut q = QosAware::new(cfg(), l.clone(), CacheMode::CacheY, 8);
+        assert_eq!(q.pick(&o_class(9, 4, Priority::Batch), &book, &ctx), 1);
+    }
+
+    #[test]
+    fn round_robin_cycles_over_available_subset() {
+        let mut rr = RoundRobin::default();
+        let book = vec![vec![], vec![], vec![]];
+        let ctx = RouteCtx { available: vec![true, false, true], ..RouteCtx::default() };
+        let picks: Vec<usize> = (0..4).map(|_| rr.pick(&o(1, 4), &book, &ctx)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
     }
 }

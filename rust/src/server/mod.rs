@@ -56,7 +56,11 @@
 //! 404 unknown template, 410 retired template, 400 invalid mask,
 //! 409 cancelled, 504 timeout, 503 worker shutdown, 500 internal engine
 //! fault. Bodies over 1 MiB are rejected with `413` instead of being
-//! silently truncated.
+//! silently truncated; header sections over [`MAX_HEADER_BYTES`] /
+//! [`MAX_HEADER_LINES`] get `431` (slowloris guard), and every connection
+//! carries read + write timeouts. The same [`serve_connection`] loop
+//! backs the dist RPC listeners ([`crate::dist`]), so the public API port
+//! and the data-plane ports share one set of limits.
 //!
 //! ```text
 //! curl -s localhost:8801/v1/edits -d '{"template":"tpl-0","mask_ratio":0.2}'
@@ -91,6 +95,22 @@ use crate::util::tensor::Tensor;
 /// Largest accepted request body; larger uploads get `413`.
 pub const MAX_BODY_BYTES: usize = 1 << 20;
 
+/// Largest accepted header section (request line + all headers); beyond
+/// this the connection gets `431` and is closed — together with
+/// [`READ_TIMEOUT`] this is the slowloris guard on every listener (public
+/// API and dist RPC ports alike).
+pub const MAX_HEADER_BYTES: usize = 16 << 10;
+
+/// Most header lines accepted per request (same guard).
+pub const MAX_HEADER_LINES: usize = 64;
+
+/// Per-connection socket read timeout.
+pub const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Per-connection socket write timeout (a stalled reader cannot pin a
+/// handler thread forever).
+pub const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
 /// How long the synchronous `POST /edit` wrapper waits on its ticket.
 const SYNC_EDIT_TIMEOUT: Duration = Duration::from_secs(120);
 
@@ -123,24 +143,8 @@ impl HttpServer {
         Ok(())
     }
 
-    fn handle(&self, mut stream: TcpStream) -> Result<()> {
-        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
-        let (status, reply) = match read_request(&mut stream)? {
-            ReadOutcome::TooLarge { declared } => (
-                413,
-                error_obj(&format!(
-                    "body of {declared} bytes exceeds the {MAX_BODY_BYTES}-byte limit"
-                )),
-            ),
-            ReadOutcome::Request { method, path, body } => self.route(&method, &path, &body),
-        };
-        // 429 bodies carry the admission estimate; surface it as the
-        // standard Retry-After header too (whole seconds, min 1)
-        let retry_after = reply
-            .at("retry_after_ms")
-            .as_f64()
-            .map(|ms| ((ms / 1e3).ceil() as u64).max(1));
-        write_response(&mut stream, status, &reply.to_string(), retry_after)
+    fn handle(&self, stream: TcpStream) -> Result<()> {
+        serve_connection(stream, |method, path, body| self.route(method, path, body))
     }
 
     /// Route a request (separated from IO for unit testing).
@@ -492,7 +496,8 @@ fn template_status_body(status: &TemplateStatus) -> Json {
     ])
 }
 
-fn status_pairs<'a>(
+/// Common status-body prefix: id / status / worker / age.
+pub fn status_pairs<'a>(
     id: u64,
     label: &'static str,
     worker: usize,
@@ -507,7 +512,7 @@ fn status_pairs<'a>(
 }
 
 /// Echo the submitted QoS fields on status bodies.
-fn push_qos_pairs(pairs: &mut Vec<(&str, Json)>, priority: Priority, deadline_ms: Option<u64>) {
+pub fn push_qos_pairs(pairs: &mut Vec<(&str, Json)>, priority: Priority, deadline_ms: Option<u64>) {
     pairs.push(("priority", Json::str(priority.label())));
     if let Some(ms) = deadline_ms {
         pairs.push(("deadline_ms", Json::num(ms as f64)));
@@ -515,7 +520,7 @@ fn push_qos_pairs(pairs: &mut Vec<(&str, Json)>, priority: Priority, deadline_ms
 }
 
 /// Completed-request body: status + timing decomposition + image stats.
-fn done_body(
+pub fn done_body(
     id: u64,
     worker: usize,
     age_secs: f64,
@@ -562,14 +567,15 @@ fn image_stats(image: &Tensor) -> Json {
     ])
 }
 
-fn error_obj(msg: &str) -> Json {
+/// `{"error": msg}` body (shared by all listeners).
+pub fn error_obj(msg: &str) -> Json {
     Json::obj(vec![("error", Json::str(msg))])
 }
 
 /// Map a typed [`EditError`] to its HTTP reply. Overload sheds carry the
 /// admission estimate so clients (and the `Retry-After` header) know when
 /// to come back.
-fn edit_error_reply(e: &EditError) -> (u16, Json) {
+pub fn edit_error_reply(e: &EditError) -> (u16, Json) {
     let mut pairs = vec![
         ("error", Json::str(e.to_string())),
         ("error_kind", Json::str(e.kind())),
@@ -580,37 +586,74 @@ fn edit_error_reply(e: &EditError) -> (u16, Json) {
     (e.http_status(), Json::obj(pairs))
 }
 
-enum ReadOutcome {
-    Request { method: String, path: String, body: String },
+/// One parsed inbound request (or why parsing refused it).
+pub enum ReadOutcome {
+    Request {
+        method: String,
+        path: String,
+        body: String,
+        /// The client asked to reuse the connection (`Connection:
+        /// keep-alive`). Closing stays the default so EOF-delimited
+        /// clients (curl, the integration tests) keep working; the dist
+        /// RPC client opts in for its long-lived data-plane links.
+        keep_alive: bool,
+    },
     /// Declared Content-Length exceeded [`MAX_BODY_BYTES`] (or did not
     /// parse, which gets the same refusal); the body was not read.
     TooLarge { declared: usize },
+    /// The header section blew [`MAX_HEADER_BYTES`]/[`MAX_HEADER_LINES`],
+    /// or the peer vanished mid-headers (slowloris guard).
+    BadHeaders,
+    /// Clean EOF before a request line (keep-alive peer hung up).
+    Closed,
 }
 
-fn read_request(stream: &mut TcpStream) -> Result<ReadOutcome> {
-    let mut reader = BufReader::new(stream);
+/// Read one HTTP/1.1 request off a (possibly reused) connection, with
+/// bounded header and body sizes. Shared by the public API frontend and
+/// the dist RPC listeners so every port gets the same guards.
+pub fn read_request(reader: &mut BufReader<TcpStream>) -> Result<ReadOutcome> {
+    let mut limited = reader.by_ref().take((MAX_HEADER_BYTES + 1) as u64);
     let mut line = String::new();
-    reader.read_line(&mut line)?;
+    if limited.read_line(&mut line)? == 0 {
+        return Ok(ReadOutcome::Closed);
+    }
+    if !line.ends_with('\n') {
+        return Ok(ReadOutcome::BadHeaders);
+    }
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("/").to_string();
     let mut content_length = 0usize;
+    let mut keep_alive = false;
+    let mut lines = 0usize;
     loop {
         let mut h = String::new();
-        reader.read_line(&mut h)?;
+        let n = limited.read_line(&mut h)?;
+        // EOF mid-headers, or the header-byte cap truncated the line
+        if n == 0 || !h.ends_with('\n') {
+            return Ok(ReadOutcome::BadHeaders);
+        }
+        lines += 1;
+        if lines > MAX_HEADER_LINES {
+            return Ok(ReadOutcome::BadHeaders);
+        }
         let h = h.trim();
         if h.is_empty() {
             break;
         }
-        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+        let lower = h.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:") {
             // an unparseable length (e.g. a value overflowing usize) must
             // not fall back to "no body" and sneak past the size guard
             content_length = v.trim().parse().unwrap_or(usize::MAX);
+        } else if let Some(v) = lower.strip_prefix("connection:") {
+            keep_alive = v.trim() == "keep-alive";
         }
     }
     if content_length > MAX_BODY_BYTES {
         return Ok(ReadOutcome::TooLarge { declared: content_length });
     }
+    drop(limited); // the body has its own (already-enforced) bound
     let mut body = vec![0u8; content_length];
     if content_length > 0 {
         reader.read_exact(&mut body)?;
@@ -619,14 +662,17 @@ fn read_request(stream: &mut TcpStream) -> Result<ReadOutcome> {
         method,
         path,
         body: String::from_utf8_lossy(&body).into_owned(),
+        keep_alive,
     })
 }
 
-fn write_response(
+/// Write one HTTP/1.1 response. Shared by every listener in the process.
+pub fn write_response(
     stream: &mut TcpStream,
     status: u16,
     body: &str,
     retry_after_secs: Option<u64>,
+    keep_alive: bool,
 ) -> Result<()> {
     let reason = match status {
         200 => "OK",
@@ -639,6 +685,7 @@ fn write_response(
         413 => "Payload Too Large",
         422 => "Unprocessable Entity",
         429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
         503 => "Service Unavailable",
         504 => "Gateway Timeout",
         _ => "Internal Server Error",
@@ -646,11 +693,58 @@ fn write_response(
     let retry = retry_after_secs
         .map(|s| format!("Retry-After: {s}\r\n"))
         .unwrap_or_default();
+    let conn = if keep_alive { "keep-alive" } else { "close" };
     write!(
         stream,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{retry}Connection: close\r\n\r\n{body}",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{retry}Connection: {conn}\r\n\r\n{body}",
         body.len()
     )?;
     stream.flush()?;
     Ok(())
+}
+
+/// Serve one accepted connection until it closes: read requests under the
+/// slowloris limits, route them, reply, and honor keep-alive. Both the
+/// public API port and the dist RPC ports run their connections through
+/// here, so the hardening applies uniformly.
+pub fn serve_connection<F>(stream: TcpStream, mut route: F) -> Result<()>
+where
+    F: FnMut(&str, &str, &str) -> (u16, Json),
+{
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let (status, reply, keep) = match read_request(&mut reader)? {
+            ReadOutcome::Closed => return Ok(()),
+            ReadOutcome::BadHeaders => (
+                431,
+                error_obj(&format!(
+                    "header section exceeds {MAX_HEADER_BYTES} bytes / {MAX_HEADER_LINES} lines"
+                )),
+                false,
+            ),
+            ReadOutcome::TooLarge { declared } => (
+                413,
+                error_obj(&format!(
+                    "body of {declared} bytes exceeds the {MAX_BODY_BYTES}-byte limit"
+                )),
+                false,
+            ),
+            ReadOutcome::Request { method, path, body, keep_alive } => {
+                let (status, reply) = route(&method, &path, &body);
+                (status, reply, keep_alive)
+            }
+        };
+        // 429 bodies carry the admission estimate; surface it as the
+        // standard Retry-After header too (whole seconds, min 1)
+        let retry_after = reply
+            .at("retry_after_ms")
+            .as_f64()
+            .map(|ms| ((ms / 1e3).ceil() as u64).max(1));
+        write_response(reader.get_mut(), status, &reply.to_string(), retry_after, keep)?;
+        if !keep {
+            return Ok(());
+        }
+    }
 }

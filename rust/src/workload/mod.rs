@@ -8,6 +8,16 @@
 //! Mixed-priority traffic comes from [`ClassMix`] (`--class-mix
 //! 0.2,0.5,0.3`): class draws use their own RNG stream, so changing the
 //! mix never changes arrivals, masks, or prompt seeds.
+//!
+//! For the distributed plane's million-template workloads, template
+//! popularity is parameterized ([`Popularity`]): the legacy quadratic
+//! draw (default, byte-identical to older traces) or a true Zipf(`s`)
+//! inverse-CDF over up to 10⁶ templates. Arrival *shapes*
+//! ([`ArrivalShape`]) warp the homogeneous Poisson arrivals through the
+//! inverse cumulative rate Λ⁻¹ (time-rescaling), so diurnal and
+//! burst-storm traffic consume exactly the same RNG draws as a steady
+//! trace — changing the shape, the popularity law, or the template count
+//! never perturbs masks, prompt seeds, or each event's Λ-coordinate.
 
 use std::time::Duration;
 
@@ -78,6 +88,142 @@ impl MaskDist {
             }
         };
         r.clamp(1e-3, 1.0)
+    }
+}
+
+/// Template-popularity law: maps one uniform draw `z` in [0, 1) to a
+/// template index, so swapping the law (or the template count) consumes
+/// the same number of RNG draws and never perturbs the rest of the trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Popularity {
+    /// Legacy quadratic skew (`(n·z²) mod n`) — the default; byte-
+    /// identical to traces generated before popularity was parameterized.
+    Quadratic,
+    /// Zipf with exponent `s` (template 0 hottest), via the closed-form
+    /// inverse CDF of the continuous Zipf approximation — O(1) per draw,
+    /// no per-template tables, so it scales to 10⁶ templates.
+    Zipf { s: f64 },
+}
+
+impl Popularity {
+    /// Parse `"quadratic"` or `"zipf:<s>"` (e.g. `zipf:1.1`).
+    pub fn parse(text: &str) -> Option<Popularity> {
+        if text == "quadratic" {
+            return Some(Popularity::Quadratic);
+        }
+        let s = text.strip_prefix("zipf:")?.parse::<f64>().ok()?;
+        if !s.is_finite() || s < 0.0 {
+            return None;
+        }
+        Some(Popularity::Zipf { s })
+    }
+
+    /// Template index for a uniform draw `z` in [0, 1) over `n` templates.
+    pub fn index(&self, z: f64, n: usize) -> usize {
+        match *self {
+            Popularity::Quadratic => ((n as f64) * z * z) as usize % n,
+            Popularity::Zipf { s } => {
+                // invert F(k) = (k^(1-s) - 1) / (n^(1-s) - 1); s → 1
+                // degenerates to F(k) = ln k / ln n, i.e. k = n^z
+                let nf = n as f64;
+                let k = if (s - 1.0).abs() < 1e-9 {
+                    nf.powf(z)
+                } else {
+                    let a = 1.0 - s;
+                    ((nf.powf(a) - 1.0) * z + 1.0).powf(1.0 / a)
+                };
+                (k.floor() as usize).clamp(1, n) - 1
+            }
+        }
+    }
+}
+
+/// Arrival-rate shape: a cumulative intensity Λ the homogeneous Poisson
+/// arrivals are warped through (time-rescaling). The homogeneous trace's
+/// event at time `t` carries Λ-coordinate `rps·t`; the shaped arrival is
+/// `Λ⁻¹(rps·t)`. [`ArrivalShape::Steady`] is the exact identity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalShape {
+    /// Constant rate (legacy behaviour).
+    Steady,
+    /// Sinusoidal rate `rps·(1 + depth·sin(2πt/period))`; `depth` in
+    /// [0, 1) keeps the rate positive (Λ strictly increasing).
+    Diurnal { period_secs: f64, depth: f64 },
+    /// Periodic storms: rate `rps·(1 + amplitude)` during the first
+    /// `width` fraction of each period, `rps` otherwise.
+    Bursts { period_secs: f64, width: f64, amplitude: f64 },
+}
+
+impl ArrivalShape {
+    /// Parse `"steady"`, `"diurnal:<period>:<depth>"`, or
+    /// `"bursts:<period>:<width>:<amplitude>"`.
+    pub fn parse(text: &str) -> Option<ArrivalShape> {
+        if text == "steady" {
+            return Some(ArrivalShape::Steady);
+        }
+        let parts: Vec<&str> = text.split(':').collect();
+        let nums: Option<Vec<f64>> =
+            parts[1..].iter().map(|p| p.parse::<f64>().ok()).collect();
+        match (parts[0], nums?.as_slice()) {
+            ("diurnal", [period, depth])
+                if *period > 0.0 && (0.0..1.0).contains(depth) =>
+            {
+                Some(ArrivalShape::Diurnal { period_secs: *period, depth: *depth })
+            }
+            ("bursts", [period, width, amplitude])
+                if *period > 0.0 && (0.0..=1.0).contains(width) && *amplitude >= 0.0 =>
+            {
+                Some(ArrivalShape::Bursts {
+                    period_secs: *period,
+                    width: *width,
+                    amplitude: *amplitude,
+                })
+            }
+            _ => None,
+        }
+    }
+
+    /// Cumulative expected arrivals Λ(t) at base rate `rps`.
+    pub fn cumulative(&self, rps: f64, t: f64) -> f64 {
+        match *self {
+            ArrivalShape::Steady => rps * t,
+            ArrivalShape::Diurnal { period_secs, depth } => {
+                // ∫₀ᵗ rps·(1 + depth·sin(2πu/P)) du
+                let omega = std::f64::consts::TAU / period_secs;
+                rps * (t + depth / omega * (1.0 - (omega * t).cos()))
+            }
+            ArrivalShape::Bursts { period_secs, width, amplitude } => {
+                let burst_len = width * period_secs;
+                let whole = (t / period_secs).floor();
+                let frac = t - whole * period_secs;
+                let in_burst = whole * burst_len + frac.min(burst_len);
+                rps * (t + amplitude * in_burst)
+            }
+        }
+    }
+
+    /// Map a homogeneous arrival time `t` (rate `rps`) to the shaped
+    /// timeline: solves Λ(x) = rps·t by bisection. Since every shape has
+    /// rate ≥ rps·(something) with Λ(x) ≥ rps·x for the shapes above
+    /// (the extra terms are non-negative), the solution lies in [0, t].
+    pub fn warp(&self, rps: f64, t: f64) -> f64 {
+        if matches!(self, ArrivalShape::Steady) || t <= 0.0 {
+            return t; // exact identity: legacy traces stay byte-identical
+        }
+        let target = rps * t;
+        let (mut lo, mut hi) = (0.0_f64, t);
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if mid <= lo || mid >= hi {
+                break; // interval exhausted at f64 precision
+            }
+            if self.cumulative(rps, mid) < target {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
     }
 }
 
@@ -163,6 +309,10 @@ pub struct TraceGen {
     /// Per-class deadline defaults, ms (None = no deadline), indexed by
     /// [`Priority::rank`].
     pub deadlines_ms: [Option<u64>; CLASS_COUNT],
+    /// Template-popularity law (legacy quadratic skew by default).
+    pub popularity: Popularity,
+    /// Arrival-rate shape (steady by default).
+    pub shape: ArrivalShape,
 }
 
 impl TraceGen {
@@ -175,7 +325,25 @@ impl TraceGen {
             seed,
             mix: ClassMix::all_standard(),
             deadlines_ms: [None; CLASS_COUNT],
+            popularity: Popularity::Quadratic,
+            shape: ArrivalShape::Steady,
         }
+    }
+
+    /// Zipf(`s`) template popularity (tentpole: million-template sweeps).
+    pub fn with_zipf(self, s: f64) -> TraceGen {
+        self.with_popularity(Popularity::Zipf { s })
+    }
+
+    pub fn with_popularity(mut self, popularity: Popularity) -> TraceGen {
+        self.popularity = popularity;
+        self
+    }
+
+    /// Warp arrivals through a non-constant rate shape.
+    pub fn with_shape(mut self, shape: ArrivalShape) -> TraceGen {
+        self.shape = shape;
+        self
     }
 
     /// Mixed-priority traffic (satellite: `--class-mix 0.2,0.5,0.3`).
@@ -199,13 +367,14 @@ impl TraceGen {
         (0..count)
             .map(|i| {
                 t += rng.exponential(self.rps);
-                // Zipf-ish template popularity: template 0 is hottest
+                // skewed template popularity: template 0 is hottest; one
+                // uniform draw regardless of law or template count
                 let z = rng.f64();
-                let tpl = ((self.templates as f64) * z * z) as usize % self.templates;
+                let tpl = self.popularity.index(z, self.templates);
                 let priority = self.mix.sample(&mut crng);
                 TraceEvent {
                     id: i as u64,
-                    at: t,
+                    at: self.shape.warp(self.rps, t),
                     template: format!("tpl-{tpl}"),
                     mask_ratio: self.dist.sample(&mut rng),
                     prompt_seed: rng.next_u64() >> 12, // 52 bits: JSON f64-exact
@@ -405,6 +574,122 @@ mod tests {
             .with_mix(ClassMix::parse("1,1,1").unwrap())
             .generate(200);
         assert_eq!(mixed, again);
+    }
+
+    #[test]
+    fn popularity_parses() {
+        assert_eq!(Popularity::parse("quadratic"), Some(Popularity::Quadratic));
+        assert_eq!(Popularity::parse("zipf:1.1"), Some(Popularity::Zipf { s: 1.1 }));
+        assert_eq!(Popularity::parse("zipf:-1"), None);
+        assert_eq!(Popularity::parse("zipf:nan"), None);
+        assert_eq!(Popularity::parse("zip"), None);
+        assert_eq!(ArrivalShape::parse("steady"), Some(ArrivalShape::Steady));
+        assert_eq!(
+            ArrivalShape::parse("diurnal:60:0.8"),
+            Some(ArrivalShape::Diurnal { period_secs: 60.0, depth: 0.8 })
+        );
+        assert_eq!(ArrivalShape::parse("diurnal:60:1.5"), None, "depth must be < 1");
+        assert_eq!(
+            ArrivalShape::parse("bursts:10:0.1:9"),
+            Some(ArrivalShape::Bursts { period_secs: 10.0, width: 0.1, amplitude: 9.0 })
+        );
+        assert_eq!(ArrivalShape::parse("bursts:10:2:9"), None, "width must be <= 1");
+        assert_eq!(ArrivalShape::parse("diurnal"), None);
+    }
+
+    #[test]
+    fn legacy_default_popularity_is_byte_identical() {
+        // the parameterized draw with default knobs must reproduce the
+        // pre-parameterization trace exactly
+        let g = TraceGen::new(2.0, MaskDist::Production, 10, 42);
+        assert_eq!(g.popularity, Popularity::Quadratic);
+        assert_eq!(g.shape, ArrivalShape::Steady);
+        let mut rng = Pcg::new(7);
+        for _ in 0..10_000 {
+            let z = rng.f64();
+            let legacy = (10.0 * z * z) as usize % 10;
+            assert_eq!(Popularity::Quadratic.index(z, 10), legacy);
+        }
+        assert_eq!(ArrivalShape::Steady.warp(3.0, 1.25), 1.25, "steady warp is exact");
+    }
+
+    #[test]
+    fn zipf_skew_matches_exponent() {
+        // empirical CDF at the decile must match the closed-form Zipf CDF
+        // F(k) = (k^(1-s) - 1) / (n^(1-s) - 1) for the exponent used
+        let n = 1_000usize;
+        for s in [0.8, 1.3] {
+            let ev = TraceGen::new(5.0, MaskDist::Fixed(0.1), n, 9)
+                .with_zipf(s)
+                .generate(50_000);
+            let m = n / 10;
+            let got = ev
+                .iter()
+                .filter(|e| e.template[4..].parse::<usize>().unwrap() < m)
+                .count() as f64
+                / ev.len() as f64;
+            let a = 1.0 - s;
+            let want = ((m as f64).powf(a) - 1.0) / ((n as f64).powf(a) - 1.0);
+            assert!((got - want).abs() < 0.02, "s={s}: got {got}, want {want}");
+        }
+        // larger s concentrates more mass on the head
+        let head_share = |s: f64| {
+            let ev = TraceGen::new(5.0, MaskDist::Fixed(0.1), n, 9).with_zipf(s).generate(20_000);
+            ev.iter()
+                .filter(|e| e.template[4..].parse::<usize>().unwrap() < 10)
+                .count()
+        };
+        assert!(head_share(1.4) > head_share(0.8));
+    }
+
+    #[test]
+    fn arrivals_unperturbed_by_template_count_or_popularity() {
+        // satellite property: scaling templates 100 → 10⁶ (or swapping
+        // the popularity law) must leave arrivals, masks, and prompt
+        // seeds untouched — the draw count per event is invariant
+        let small = TraceGen::new(2.0, MaskDist::Production, 100, 11).with_zipf(1.1).generate(500);
+        let huge = TraceGen::new(2.0, MaskDist::Production, 1_000_000, 11)
+            .with_zipf(1.1)
+            .generate(500);
+        let legacy = TraceGen::new(2.0, MaskDist::Production, 100, 11).generate(500);
+        for ((a, b), c) in small.iter().zip(&huge).zip(&legacy) {
+            assert_eq!(a.at, b.at);
+            assert_eq!(a.at, c.at, "popularity law must not perturb arrivals");
+            assert_eq!(a.mask_ratio, b.mask_ratio);
+            assert_eq!(a.mask_ratio, c.mask_ratio);
+            assert_eq!(a.prompt_seed, b.prompt_seed);
+            assert_eq!(a.prompt_seed, c.prompt_seed);
+        }
+        // and the huge trace actually uses deep-tail templates
+        assert!(huge
+            .iter()
+            .any(|e| e.template[4..].parse::<usize>().unwrap() >= 100));
+    }
+
+    #[test]
+    fn diurnal_warp_preserves_order_and_mean_rate() {
+        let shape = ArrivalShape::Diurnal { period_secs: 60.0, depth: 0.8 };
+        let ev = TraceGen::new(4.0, MaskDist::Fixed(0.1), 4, 13).with_shape(shape).generate(8_000);
+        assert!(ev.windows(2).all(|w| w[0].at < w[1].at), "warp must preserve order");
+        let rate = ev.len() as f64 / ev.last().unwrap().at;
+        assert!((rate - 4.0).abs() < 0.4, "long-run mean rate ~rps, got {rate}");
+        // arrivals pile up near the sine peak (phase ≈ P/4) vs the trough
+        let phase = |t: f64| (t / 60.0).fract();
+        let peak = ev.iter().filter(|e| (0.15..0.35).contains(&phase(e.at))).count();
+        let trough = ev.iter().filter(|e| (0.65..0.85).contains(&phase(e.at))).count();
+        assert!(peak as f64 > 1.5 * trough as f64, "peak {peak} vs trough {trough}");
+    }
+
+    #[test]
+    fn burst_storms_concentrate_arrivals() {
+        let shape = ArrivalShape::Bursts { period_secs: 10.0, width: 0.1, amplitude: 9.0 };
+        let ev = TraceGen::new(2.0, MaskDist::Fixed(0.1), 4, 17).with_shape(shape).generate(4_000);
+        assert!(ev.windows(2).all(|w| w[0].at < w[1].at));
+        // storms carry rate 10·rps over 10% of each period → expected
+        // in-burst share = 1.0/1.9 ≈ 0.53 (vs 0.10 for steady traffic)
+        let in_burst =
+            ev.iter().filter(|e| (e.at / 10.0).fract() < 0.1).count() as f64 / ev.len() as f64;
+        assert!(in_burst > 0.35, "in-burst share {in_burst}");
     }
 
     #[test]

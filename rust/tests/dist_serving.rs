@@ -1,0 +1,301 @@
+//! Integration: the distributed serving plane — router + worker nodes
+//! over real loopback TCP.
+//!
+//! The engine-backed tests require `make artifacts` and skip silently
+//! otherwise (same idiom as `cluster_serving.rs`); the membership
+//! protocol test is engine-free and always runs. Worker nodes run as
+//! in-process threads here — the RPC path is identical to separate
+//! processes (real sockets, real wire encoding); true multi-process mode
+//! is exercised by `examples/dist_bench.rs --procs` and ci.sh.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use instgenie::cache::LatencyModel;
+use instgenie::cluster::{Cluster, ClusterOpts};
+use instgenie::config::{EngineConfig, ModelConfig, SystemKind};
+use instgenie::dist::{DistConfig, Router, RpcClient, SubmitWire, WorkerNode};
+use instgenie::engine::request::{EditError, EditRequestBuilder};
+use instgenie::runtime::Manifest;
+use instgenie::scheduler;
+use instgenie::util::json::Json;
+use instgenie::workload::{MaskDist, TraceGen};
+
+const MODEL: &str = "sd21m";
+
+fn engine() -> EngineConfig {
+    let mut e = EngineConfig::for_system(SystemKind::InstGenIE);
+    e.prepost_cpu_us = 200; // keep tests quick
+    e
+}
+
+/// Launch options for one worker node (None without artifacts).
+fn node_opts() -> Option<ClusterOpts> {
+    Manifest::load("artifacts").ok()?;
+    Some(ClusterOpts {
+        workers: 1,
+        engine: engine(),
+        model: MODEL.into(),
+        artifact_dir: "artifacts".into(),
+        templates: vec!["tpl-0".into(), "tpl-1".into()],
+        lat_model: LatencyModel::load_or_nominal("artifacts", MODEL),
+        warmup: false,
+    })
+}
+
+fn make_router(mcfg: ModelConfig, sched_name: &str, cfg: &DistConfig) -> Arc<Router> {
+    let lat = LatencyModel::load_or_nominal("artifacts", MODEL);
+    let e = engine();
+    let sched =
+        scheduler::by_name(sched_name, &mcfg, &lat, e.cache_mode, e.max_batch).expect("scheduler");
+    Router::new(mcfg, sched, None, cfg.clone())
+}
+
+/// Router + N worker nodes over loopback TCP, ready to serve.
+fn dist_plane(workers: usize, sched_name: &str) -> Option<(Arc<Router>, Vec<Arc<WorkerNode>>)> {
+    let manifest = Manifest::load("artifacts").ok()?;
+    let mcfg = manifest.model(MODEL).ok()?.config.clone();
+    let cfg = DistConfig::fast();
+    let router = make_router(mcfg, sched_name, &cfg);
+    let addr = router.start("127.0.0.1:0").expect("router start");
+    let mut nodes = Vec::new();
+    for i in 0..workers {
+        let node = Arc::new(WorkerNode::launch(format!("w{i}"), node_opts()?).expect("node"));
+        node.start("127.0.0.1:0").expect("node start");
+        node.announce_to(&addr.to_string(), &cfg);
+        nodes.push(node);
+    }
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while router.ready_count() < workers {
+        assert!(
+            Instant::now() < deadline,
+            "workers never became ready at the router"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    Some((router, nodes))
+}
+
+#[test]
+fn remote_results_are_bit_identical_to_in_process() {
+    let Some((router, nodes)) = dist_plane(2, "round-robin") else { return };
+    let Some(opts) = node_opts() else { return };
+    let lat = LatencyModel::load_or_nominal("artifacts", MODEL);
+    let mcfg = Manifest::load("artifacts")
+        .unwrap()
+        .model(MODEL)
+        .unwrap()
+        .config
+        .clone();
+    let e = engine();
+    let sched =
+        scheduler::by_name("round-robin", &mcfg, &lat, e.cache_mode, e.max_batch).unwrap();
+    let baseline = Cluster::launch(ClusterOpts { workers: 2, ..opts }, sched).expect("baseline");
+
+    // a Zipf-popular trace over both planes, identical events
+    let gen = TraceGen::new(50.0, MaskDist::Production, 2, 7).with_zipf(1.1);
+    let events = gen.generate(8);
+    let local: Vec<_> = events.iter().map(|ev| baseline.submit_event(ev)).collect();
+    let remote: Vec<_> = events
+        .iter()
+        .map(|ev| router.submit_event(ev).expect("router accepts"))
+        .collect();
+    for (l, r) in local.iter().zip(&remote) {
+        let a = l.wait(Duration::from_secs(120)).expect("local completion");
+        let b = r.wait(Duration::from_secs(120)).expect("remote completion");
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.latent.data(),
+            b.latent.data(),
+            "latents must be bit-identical across the RPC plane"
+        );
+        assert_eq!(
+            a.image.data(),
+            b.image.data(),
+            "images must be bit-identical across the RPC plane"
+        );
+        assert_eq!(a.mask_ratio, b.mask_ratio);
+    }
+    router.shutdown();
+    for n in &nodes {
+        n.stop();
+    }
+    baseline.shutdown().expect("baseline shutdown");
+}
+
+#[test]
+fn killing_a_worker_mid_trace_loses_no_tickets() {
+    let Some((router, nodes)) = dist_plane(2, "round-robin") else { return };
+    let gen = TraceGen::new(100.0, MaskDist::Production, 2, 11).with_zipf(1.0);
+    let events = gen.generate(16);
+    let tickets: Vec<_> = events
+        .iter()
+        .map(|ev| router.submit_event(ev).expect("router accepts"))
+        .collect();
+    // kill one worker with the trace in flight: heartbeats stop, the
+    // failure detector declares it dead, queued work fails over
+    nodes[0].stop();
+
+    let mut done = 0usize;
+    let mut lost = 0usize;
+    for t in &tickets {
+        match t.wait(Duration::from_secs(120)) {
+            Ok(resp) => {
+                assert_eq!(resp.id, t.id(), "failover must preserve identity");
+                done += 1;
+            }
+            Err(EditError::WorkerLost) => lost += 1,
+            Err(e) => panic!("ticket {} resolved to unexpected error {e:?}", t.id()),
+        }
+    }
+    assert_eq!(done + lost, tickets.len(), "every ticket must resolve");
+    assert!(done > 0, "the surviving worker must complete work");
+
+    // the membership table converges on the death
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (_, body) = router.route("GET", "/v1/cluster", "");
+        let w0_dead = body
+            .at("members")
+            .as_arr()
+            .map(|ms| {
+                ms.iter().any(|m| {
+                    m.at("name").as_str() == Some("w0")
+                        && m.at("state").as_str() == Some("dead")
+                })
+            })
+            .unwrap_or(false);
+        if w0_dead {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "failure detector never declared w0 dead"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    router.shutdown();
+    nodes[1].stop();
+}
+
+#[test]
+fn drained_worker_rejects_new_work_and_router_routes_around_it() {
+    let Some((router, nodes)) = dist_plane(2, "round-robin") else { return };
+    let (status, reply) = router.route("POST", "/v1/drain/w0", "");
+    assert_eq!(status, 200);
+    assert_eq!(reply.at("state").as_str(), Some("draining"));
+    // the drain RPC reaches the worker synchronously
+    assert!(!nodes[0].is_accepting(), "drained node must stop accepting");
+    assert!(nodes[1].is_accepting());
+
+    // direct submissions at the drained worker get a typed 503
+    let hw = nodes[0].cluster().model.latent_hw;
+    let req = EditRequestBuilder::new(900)
+        .template("tpl-0")
+        .prompt_seed(1)
+        .synth_mask(hw, 0.2)
+        .expect("mask")
+        .build()
+        .expect("request");
+    let wire = SubmitWire::from_request(&req);
+    let (st, body) = nodes[0].route("POST", "/rpc/submit", &wire.to_json().to_string());
+    assert_eq!(st, 503);
+    assert_eq!(body.at("error_kind").as_str(), Some("draining"));
+
+    // the router keeps serving: everything lands on the live member
+    let gen = TraceGen::new(100.0, MaskDist::Production, 2, 3).with_zipf(1.2);
+    let events = gen.generate(6);
+    let tickets: Vec<_> = events
+        .iter()
+        .map(|ev| router.submit_event(ev).expect("router accepts"))
+        .collect();
+    for t in &tickets {
+        t.wait(Duration::from_secs(120))
+            .expect("completion despite a draining member");
+    }
+    assert_eq!(
+        nodes[1].cluster().completed(),
+        events.len(),
+        "all work must land on the live member"
+    );
+    assert_eq!(nodes[0].cluster().completed(), 0);
+
+    // membership reports the drain, and heartbeats keep it draining
+    let (_, body) = router.route("GET", "/v1/cluster", "");
+    let states: Vec<String> = body
+        .at("members")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|m| m.at("state").as_str().unwrap_or("?").to_string())
+        .collect();
+    assert!(states.contains(&"draining".to_string()));
+    router.shutdown();
+    for n in &nodes {
+        n.stop();
+    }
+}
+
+/// Engine-free: the announce/heartbeat/expire protocol over real HTTP.
+/// Runs everywhere (no artifacts needed).
+#[test]
+fn membership_http_protocol_round_trips() {
+    let mcfg = ModelConfig {
+        name: "t".into(),
+        latent_hw: 8,
+        tokens: 64,
+        hidden: 64,
+        heads: 4,
+        blocks: 4,
+        steps: 8,
+        token_buckets: vec![4, 8, 16, 32],
+        paper_analogue: String::new(),
+    };
+    let lat = LatencyModel::nominal(1e9, 1e8);
+    let e = engine();
+    let sched =
+        scheduler::by_name("round-robin", &mcfg, &lat, e.cache_mode, e.max_batch).unwrap();
+    let router = Router::new(mcfg, sched, None, DistConfig::fast());
+    let addr = router.start("127.0.0.1:0").expect("router start");
+    let mut client = RpcClient::new(addr.to_string(), Duration::from_secs(5));
+
+    let announce = Json::obj(vec![
+        ("name", Json::str("phantom")),
+        ("rpc_addr", Json::str("127.0.0.1:1")),
+        ("templates", Json::arr(vec![Json::str("tpl-0")])),
+    ]);
+    let (st, body) = client.call("POST", "/rpc/announce", Some(&announce)).unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(body.at("slot").as_usize(), Some(0));
+    assert_eq!(body.at("epoch").as_usize(), Some(1));
+
+    let hb = Json::obj(vec![("name", Json::str("phantom"))]);
+    let (st, _) = client.call("POST", "/rpc/heartbeat", Some(&hb)).unwrap();
+    assert_eq!(st, 200);
+    let (st, body) = client.call("GET", "/v1/cluster", None).unwrap();
+    assert_eq!(st, 200);
+    let members = body.at("members").as_arr().unwrap();
+    assert_eq!(members.len(), 1);
+    assert_eq!(members[0].at("state").as_str(), Some("ready"));
+    assert_eq!(body.at("ready").as_usize(), Some(1));
+
+    // silence: suspect, then dead (DistConfig::fast is sub-second)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (_, body) = client.call("GET", "/v1/cluster", None).unwrap();
+        if body.at("members").as_arr().unwrap()[0].at("state").as_str() == Some("dead") {
+            break;
+        }
+        assert!(Instant::now() < deadline, "failure detector never fired");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    // heartbeats from the dead are refused — the worker must re-announce,
+    // which bumps the epoch on the same slot
+    let (st, _) = client.call("POST", "/rpc/heartbeat", Some(&hb)).unwrap();
+    assert_eq!(st, 410, "dead members must re-announce");
+    let (st, body) = client.call("POST", "/rpc/announce", Some(&announce)).unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(body.at("slot").as_usize(), Some(0), "slots are stable");
+    assert_eq!(body.at("epoch").as_usize(), Some(2), "epoch bumps on rejoin");
+    router.shutdown();
+}
