@@ -62,7 +62,10 @@ fi
 
 # Coordinator-overhead smoke: per-step transfer counts + per-step
 # overhead (measured minus pipeline-ideal), host reference vs the
-# device-resident step loop, written to BENCH_overhead.json.
+# device-resident step loop, plus the device KV tier's warm/cold upload
+# split (hit rate, per-step KV bytes). The bench panics — failing this
+# gate — if a warm template still uploads K/V in steady state, written
+# to BENCH_overhead.json.
 if [[ -d artifacts ]]; then
   run cargo run --release --example overhead_bench -- 8 0.3
 else

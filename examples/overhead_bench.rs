@@ -1,9 +1,12 @@
 //! Coordinator-overhead bench: per-step transfer counts and per-step
 //! coordinator overhead (measured step latency minus the pipeline's
 //! ideal latency) for the device-resident step loop vs the
-//! host-round-trip reference. Writes `BENCH_overhead.json` so every PR
-//! leaves a comparable record of the hot-path trajectory (§6.6 budgets
-//! ~1 ms/step for everything around the kernels).
+//! host-round-trip reference, plus the device KV tier's warm/cold
+//! upload split (hit rate, per-step KV bytes, and a regression guard:
+//! a warm template must perform zero steady-state KV uploads). Writes
+//! `BENCH_overhead.json` so every PR leaves a comparable record of the
+//! hot-path trajectory (§6.6 budgets ~1 ms/step for everything around
+//! the kernels).
 //!
 //! The measurement itself lives in
 //! `instgenie::util::bench::measure_step_overhead` (shared with the
@@ -12,7 +15,7 @@
 //! Run: `cargo run --release --example overhead_bench -- [requests] [mask_ratio]`
 
 use instgenie::runtime::Manifest;
-use instgenie::util::bench::{measure_step_overhead, StepOverhead};
+use instgenie::util::bench::{measure_kv_tier_overhead, measure_step_overhead, StepOverhead};
 use instgenie::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
@@ -72,6 +75,34 @@ fn main() -> anyhow::Result<()> {
         device.overhead * 1e3,
     );
 
+    // Device KV tier warm/cold split: request 1 populates the tier,
+    // requests 2.. replay the identical mask warm. Regression guard:
+    // once the tier engaged at all (misses on the cold pass), the warm
+    // steady state must perform zero KV uploads — a panic here fails ci.
+    let kv = measure_kv_tier_overhead(&model, requests.max(3), ratio)?
+        .expect("artifacts vanished mid-run");
+    println!(
+        "kv tier: cold={:.1}KiB/step warm={:.1}KiB/step hits={} misses={} \
+         hit_rate={:.2}",
+        kv.cold_kv_bytes_per_step / 1024.0,
+        kv.warm_kv_bytes_per_step / 1024.0,
+        kv.dev_hits,
+        kv.dev_misses,
+        kv.hit_rate,
+    );
+    if kv.dev_misses > 0 {
+        assert_eq!(
+            kv.warm_kv_bytes_per_step, 0.0,
+            "regression: warm template still uploads K/V \
+             ({:.1} B/step over {} warm steps)",
+            kv.warm_kv_bytes_per_step, kv.warm_steps
+        );
+        assert_eq!(
+            kv.warm_misses, 0,
+            "regression: warm template misses the device KV tier"
+        );
+    }
+
     let row = |s: &StepOverhead| {
         Json::obj(vec![
             ("step_latency", Json::num(s.step_latency)),
@@ -92,6 +123,16 @@ fn main() -> anyhow::Result<()> {
         ("planned_step_latency", Json::num(host.planned)),
         ("host", row(&host)),
         ("device", row(&device)),
+        (
+            "kv_tier",
+            Json::obj(vec![
+                ("cold_kv_bytes_per_step", Json::num(kv.cold_kv_bytes_per_step)),
+                ("warm_kv_bytes_per_step", Json::num(kv.warm_kv_bytes_per_step)),
+                ("dev_hits", Json::num(kv.dev_hits as f64)),
+                ("dev_misses", Json::num(kv.dev_misses as f64)),
+                ("hit_rate", Json::num(kv.hit_rate)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_overhead.json", out.to_string())?;
     println!("[overhead_bench] wrote BENCH_overhead.json");

@@ -91,11 +91,12 @@ fn main() {
     table.rowf(&[&"pipeline DP (Algo 1)", &fmt_secs(s.mean), &"negligible"]);
 
     // 5. memoized plan lookup — the per-step cost after the plan cache
-    // (the DP now runs once per (n, b, mode) shape, not every step)
+    // (the DP now runs once per (n, b, mode, warm-mask) shape, not every
+    // step)
     let mut plans = instgenie::cache::pipeline::PlanCache::new();
-    let _ = plans.plan_for(n, 8, 0, || costs.clone());
+    let _ = plans.plan_for(n, 8, 0, 0, || costs.clone());
     let s = time_it(10, common::scaled(2000), || {
-        std::hint::black_box(plans.plan_for(n, 8, 0, || costs.clone()));
+        std::hint::black_box(plans.plan_for(n, 8, 0, 0, || costs.clone()));
     });
     table.rowf(&[&"plan cache hit (Algo 1 memoized)", &fmt_secs(s.mean), &"negligible"]);
 

@@ -1,0 +1,408 @@
+//! Device-resident KV working set — the HBM tier above the host/disk
+//! `TieredStore`.
+//!
+//! Templates are reused up to 35 000× (paper §2.2), yet until this tier
+//! existed every cache-KV step re-uploaded each cached block's packed
+//! K/V host→device. The tier pins upload-once device buffers under a
+//! byte budget so a *warm* template's cached blocks run with **zero**
+//! per-step KV transfers; the budget is enforced by LRU eviction that
+//! never touches a buffer the current batch is using (pinned), and
+//! template retirement purges the tier the same way it purges host and
+//! disk.
+//!
+//! The tier is generic over the payload so the eviction/budget/pinning
+//! logic is property-testable without compiled artifacts; the engine
+//! instantiates it with the `(K, V)` `PjRtBuffer` pair. `PjRtBuffer`s
+//! are engine-thread-confined (see the SAFETY note on `ModelRuntime`),
+//! so the tier lives inside the `Worker` and is only touched from the
+//! engine thread — cross-thread retirement reaches it through a purge
+//! list drained at step boundaries (`engine/worker.rs`).
+//!
+//! Keys are exact, not hashed: template ids and gather-id sets are
+//! interned to small integers on first use, so two requests share an
+//! entry only when their template, step, block, batch bucket, *and*
+//! cached-row id set are all identical — a tier hit is bit-identical to
+//! the upload it replaces by construction.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Key of one cached block's device-resident K/V.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KvKey {
+    /// Interned template id (`intern_template`).
+    pub template: u32,
+    /// Interned cached-row id set (`intern_ids`) — the exact rows the
+    /// packed buffer was gathered from.
+    pub ids: u32,
+    pub step: u32,
+    pub block: u32,
+    /// Batch-bucket slot count of the packed `(bucket, L - n, H)` layout.
+    pub bucket: u32,
+}
+
+struct Entry<P> {
+    payload: Rc<P>,
+    bytes: usize,
+    pins: u32,
+    last_used: u64,
+}
+
+/// Counters surfaced through `TransferTotals` and the overhead bench.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvTierStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    pub rejected: u64,
+    pub purged: u64,
+    pub bytes: u64,
+    pub entries: u64,
+}
+
+/// HBM-budgeted LRU over upload-once device buffers.
+pub struct KvDeviceTier<P> {
+    budget: usize,
+    bytes: usize,
+    clock: u64,
+    entries: HashMap<KvKey, Entry<P>>,
+    templates: HashMap<String, u32>,
+    id_sets: HashMap<Vec<usize>, u32>,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+    rejected: u64,
+    purged: u64,
+}
+
+impl<P> KvDeviceTier<P> {
+    /// `budget` bytes of HBM; 0 disables the tier (every probe misses,
+    /// every insert is refused).
+    pub fn new(budget: usize) -> KvDeviceTier<P> {
+        KvDeviceTier {
+            budget,
+            bytes: 0,
+            clock: 0,
+            entries: HashMap::new(),
+            templates: HashMap::new(),
+            id_sets: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+            rejected: 0,
+            purged: 0,
+        }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Intern a template id. Stable for the tier's lifetime (retirement
+    /// purges the template's entries but keeps the intern slot, so a
+    /// re-registered template reuses it — entries were purged, not
+    /// poisoned).
+    pub fn intern_template(&mut self, template_id: &str) -> u32 {
+        let next = self.templates.len() as u32;
+        *self.templates.entry(template_id.to_string()).or_insert(next)
+    }
+
+    /// Intern a cached-row id set by content.
+    pub fn intern_ids(&mut self, ids: &[usize]) -> u32 {
+        if let Some(&id) = self.id_sets.get(ids) {
+            return id;
+        }
+        let next = self.id_sets.len() as u32;
+        self.id_sets.insert(ids.to_vec(), next);
+        next
+    }
+
+    /// Residency probe without touching LRU order or hit/miss counters
+    /// (used to build the DP's warm mask before the step commits to a
+    /// plan).
+    pub fn contains(&self, key: &KvKey) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    /// Look up a resident buffer, refreshing its LRU position. Counts a
+    /// hit or miss — call once per block per step, on the serving path.
+    pub fn get(&mut self, key: &KvKey) -> Option<Rc<P>> {
+        self.clock += 1;
+        match self.entries.get_mut(key) {
+            Some(e) => {
+                e.last_used = self.clock;
+                self.hits += 1;
+                Some(Rc::clone(&e.payload))
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert an upload-once buffer, evicting unpinned LRU entries until
+    /// it fits. Returns the shared payload and whether it was actually
+    /// retained: when the budget cannot be met (entry larger than the
+    /// budget, or everything else is pinned) the payload is handed back
+    /// un-cached — the caller uses it for this step and it dies with the
+    /// last `Rc`. The tier therefore *never* exceeds its byte budget.
+    pub fn insert(&mut self, key: KvKey, payload: P, bytes: usize) -> (Rc<P>, bool) {
+        let payload = Rc::new(payload);
+        if let Some(prev) = self.entries.get(&key) {
+            // racing re-insert of a resident key (e.g. re-upload after a
+            // probe raced an eviction): keep the resident entry.
+            return (Rc::clone(&prev.payload), true);
+        }
+        if bytes > self.budget || !self.make_room(bytes) {
+            self.rejected += 1;
+            return (payload, false);
+        }
+        self.clock += 1;
+        self.bytes += bytes;
+        self.insertions += 1;
+        self.entries.insert(
+            key,
+            Entry {
+                payload: Rc::clone(&payload),
+                bytes,
+                pins: 0,
+                last_used: self.clock,
+            },
+        );
+        (payload, true)
+    }
+
+    /// Evict unpinned LRU entries until `incoming` more bytes fit.
+    /// Returns false if that is impossible without evicting a pinned
+    /// (in-use) entry.
+    fn make_room(&mut self, incoming: usize) -> bool {
+        while self.bytes + incoming > self.budget {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(_, e)| e.pins == 0)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    let e = self.entries.remove(&k).expect("victim resident");
+                    self.bytes -= e.bytes;
+                    self.evictions += 1;
+                }
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Pin a resident entry for the duration of its use by the current
+    /// batch — pinned entries are unevictable. No-op if absent.
+    pub fn pin(&mut self, key: &KvKey) {
+        if let Some(e) = self.entries.get_mut(key) {
+            e.pins += 1;
+        }
+    }
+
+    /// Release a pin. No-op if absent (the entry may have been purged by
+    /// template retirement between pin and unpin — purge skips pinned
+    /// entries, so this only happens after an explicit unpin).
+    pub fn unpin(&mut self, key: &KvKey) {
+        if let Some(e) = self.entries.get_mut(key) {
+            e.pins = e.pins.saturating_sub(1);
+        }
+    }
+
+    /// Drop every entry of a retired template (pinned entries are kept —
+    /// retirement drains in-flight work first, so by the time the purge
+    /// runs nothing should be pinned; if something is, it dies on its
+    /// final unpin + next eviction instead of under the batch's feet).
+    pub fn purge_template(&mut self, template_id: &str) {
+        let Some(&tid) = self.templates.get(template_id) else {
+            return;
+        };
+        let doomed: Vec<KvKey> = self
+            .entries
+            .iter()
+            .filter(|(k, e)| k.template == tid && e.pins == 0)
+            .map(|(k, _)| *k)
+            .collect();
+        for k in doomed {
+            let e = self.entries.remove(&k).expect("doomed resident");
+            self.bytes -= e.bytes;
+            self.purged += 1;
+        }
+    }
+
+    pub fn stats(&self) -> KvTierStats {
+        KvTierStats {
+            hits: self.hits,
+            misses: self.misses,
+            insertions: self.insertions,
+            evictions: self.evictions,
+            rejected: self.rejected,
+            purged: self.purged,
+            bytes: self.bytes as u64,
+            entries: self.entries.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Pcg;
+
+    fn key(t: u32, step: u32, block: u32) -> KvKey {
+        KvKey { template: t, ids: 0, step, block, bucket: 1 }
+    }
+
+    #[test]
+    fn hit_after_insert_miss_when_cold() {
+        let mut tier: KvDeviceTier<u32> = KvDeviceTier::new(100);
+        let k = key(0, 0, 0);
+        assert!(tier.get(&k).is_none());
+        let (p, stored) = tier.insert(k, 7, 10);
+        assert!(stored);
+        assert_eq!(*p, 7);
+        assert_eq!(*tier.get(&k).unwrap(), 7);
+        let s = tier.stats();
+        assert_eq!((s.hits, s.misses, s.bytes, s.entries), (1, 1, 10, 1));
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget_and_recency() {
+        let mut tier: KvDeviceTier<u32> = KvDeviceTier::new(30);
+        let (a, b, c) = (key(0, 0, 0), key(0, 0, 1), key(0, 0, 2));
+        tier.insert(a, 1, 10);
+        tier.insert(b, 2, 10);
+        tier.insert(c, 3, 10);
+        // touch a so b is LRU, then insert a fourth entry
+        tier.get(&a);
+        tier.insert(key(0, 0, 3), 4, 10);
+        assert!(tier.contains(&a), "recently used survives");
+        assert!(!tier.contains(&b), "LRU evicted");
+        assert!(tier.contains(&c));
+        assert_eq!(tier.bytes(), 30);
+    }
+
+    #[test]
+    fn pinned_entries_are_unevictable_and_oversized_inserts_refused() {
+        let mut tier: KvDeviceTier<u32> = KvDeviceTier::new(20);
+        let a = key(0, 0, 0);
+        tier.insert(a, 1, 20);
+        tier.pin(&a);
+        // no unpinned victim: the insert is refused, not over-budget
+        let (p, stored) = tier.insert(key(0, 0, 1), 2, 10);
+        assert!(!stored, "cannot evict the pinned entry");
+        assert_eq!(*p, 2, "payload still handed back for one-shot use");
+        assert!(tier.contains(&a));
+        assert_eq!(tier.bytes(), 20);
+        tier.unpin(&a);
+        let (_, stored) = tier.insert(key(0, 0, 1), 2, 10);
+        assert!(stored, "unpinned entry evictable again");
+        // larger than the whole budget: always refused
+        let (_, stored) = tier.insert(key(0, 0, 9), 9, 21);
+        assert!(!stored);
+    }
+
+    #[test]
+    fn purge_template_drops_only_that_template() {
+        let mut tier: KvDeviceTier<u32> = KvDeviceTier::new(100);
+        let ta = tier.intern_template("tpl-a");
+        let tb = tier.intern_template("tpl-b");
+        assert_eq!(tier.intern_template("tpl-a"), ta, "interning is stable");
+        tier.insert(key(ta, 0, 0), 1, 10);
+        tier.insert(key(ta, 1, 0), 2, 10);
+        tier.insert(key(tb, 0, 0), 3, 10);
+        tier.purge_template("tpl-a");
+        assert!(!tier.contains(&key(ta, 0, 0)));
+        assert!(!tier.contains(&key(ta, 1, 0)));
+        assert!(tier.contains(&key(tb, 0, 0)));
+        assert_eq!(tier.bytes(), 10);
+        assert_eq!(tier.stats().purged, 2);
+        tier.purge_template("never-seen"); // no-op
+    }
+
+    #[test]
+    fn id_set_interning_is_content_exact() {
+        let mut tier: KvDeviceTier<u32> = KvDeviceTier::new(100);
+        let a = tier.intern_ids(&[1, 2, 3]);
+        let b = tier.intern_ids(&[1, 2, 3]);
+        let c = tier.intern_ids(&[1, 2, 4]);
+        assert_eq!(a, b);
+        assert_ne!(a, c, "different row sets must never share an entry");
+    }
+
+    #[test]
+    fn zero_budget_disables_the_tier() {
+        let mut tier: KvDeviceTier<u32> = KvDeviceTier::new(0);
+        let (_, stored) = tier.insert(key(0, 0, 0), 1, 1);
+        assert!(!stored);
+        assert!(tier.get(&key(0, 0, 0)).is_none());
+        assert_eq!(tier.bytes(), 0);
+    }
+
+    #[test]
+    fn property_budget_and_pins_hold_under_random_ops() {
+        // The acceptance invariants: bytes <= budget at every point, and
+        // a pinned (in-use) entry is never evicted or purged.
+        prop_check("kv tier budget + pin invariants", 120, |rng: &mut Pcg| {
+            let budget = 16 + rng.below(64);
+            let mut tier: KvDeviceTier<u64> = KvDeviceTier::new(budget);
+            let mut pinned: Vec<KvKey> = Vec::new();
+            for op in 0..200 {
+                let k = key(rng.below(3) as u32, rng.below(4) as u32, rng.below(6) as u32);
+                match rng.below(10) {
+                    0..=4 => {
+                        let bytes = 1 + rng.below(24);
+                        let (_, _stored) = tier.insert(k, op as u64, bytes);
+                    }
+                    5..=6 => {
+                        let _ = tier.get(&k);
+                    }
+                    7 => {
+                        if tier.contains(&k) && pinned.len() < 4 {
+                            tier.pin(&k);
+                            pinned.push(k);
+                        }
+                    }
+                    8 => {
+                        if let Some(k) = pinned.pop() {
+                            tier.unpin(&k);
+                        }
+                    }
+                    _ => {
+                        let t = rng.below(3) as u32;
+                        // purge by interned name round-trip
+                        let name = format!("t{t}");
+                        let tid = tier.intern_template(&name);
+                        if tid == t {
+                            tier.purge_template(&name);
+                        }
+                    }
+                }
+                prop_assert!(
+                    tier.bytes() <= budget,
+                    "bytes {} exceeded budget {budget} after op {op}",
+                    tier.bytes()
+                );
+                for p in &pinned {
+                    prop_assert!(tier.contains(p), "pinned entry vanished after op {op}");
+                }
+            }
+            let s = tier.stats();
+            prop_assert!(s.bytes <= budget as u64, "stats bytes exceeded budget");
+            Ok(())
+        });
+    }
+}

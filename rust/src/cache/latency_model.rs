@@ -54,13 +54,45 @@ pub fn block_cache_bytes(cfg: &ModelConfig, n: usize, mode: CacheMode) -> f64 {
     }
 }
 
+/// Bytes the host copy stream (loader) actually gathers + paces per
+/// block for bucket `n` (per batch member). Cache-Y stages the Y rows;
+/// cold cache-KV additionally stages packed K and V; a device-KV-tier
+/// hit (`kv_warm`) skips the K/V gather entirely, leaving only Y.
+pub fn block_stage_bytes(cfg: &ModelConfig, n: usize, mode: CacheMode, kv_warm: bool) -> f64 {
+    let rows = (cfg.tokens - n) as f64;
+    let base = rows * cfg.hidden as f64 * 4.0;
+    match mode {
+        CacheMode::CacheY => base,
+        CacheMode::CacheKV if kv_warm => base,
+        CacheMode::CacheKV => 3.0 * base,
+    }
+}
+
+/// Bytes crossing host→device on the second copy stream per block for
+/// bucket `n` (per batch member): the packed K and V. Zero in cache-Y
+/// mode (rows are consumed host-side) and zero on a device-tier hit.
+pub fn block_upload_bytes(cfg: &ModelConfig, n: usize, mode: CacheMode, kv_warm: bool) -> f64 {
+    match mode {
+        CacheMode::CacheY => 0.0,
+        CacheMode::CacheKV if kv_warm => 0.0,
+        CacheMode::CacheKV => 2.0 * (cfg.tokens - n) as f64 * cfg.hidden as f64 * 4.0,
+    }
+}
+
+/// Nominal H2D bandwidth for the upload fit when no calibration exists:
+/// a pinned-memory PCIe-class copy, far faster than the simulated
+/// DRAM→HBM gather stream.
+pub const NOMINAL_UPLOAD_BYTES_PER_SEC: f64 = 16.0 * 1024.0 * 1024.0 * 1024.0;
+
 /// Calibrated latency model for one (model, worker) pair.
 #[derive(Debug, Clone)]
 pub struct LatencyModel {
     /// seconds = comp.slope * FLOPs + comp.intercept
     pub comp: LinearFit,
-    /// seconds = load.slope * bytes + load.intercept
+    /// seconds = load.slope * bytes + load.intercept (host gather stream)
     pub load: LinearFit,
+    /// seconds = upload.slope * bytes + upload.intercept (H2D copy stream)
+    pub upload: LinearFit,
 }
 
 impl LatencyModel {
@@ -72,7 +104,11 @@ impl LatencyModel {
         use crate::util::stats::linear_fit_nonneg;
         let (cx, cy): (Vec<f64>, Vec<f64>) = comp_samples.iter().copied().unzip();
         let (lx, ly): (Vec<f64>, Vec<f64>) = load_samples.iter().copied().unzip();
-        LatencyModel { comp: linear_fit_nonneg(&cx, &cy), load: linear_fit_nonneg(&lx, &ly) }
+        LatencyModel {
+            comp: linear_fit_nonneg(&cx, &cy),
+            load: linear_fit_nonneg(&lx, &ly),
+            upload: nominal_upload_fit(),
+        }
     }
 
     /// Synthetic model from nominal throughput numbers (tests / sims):
@@ -81,6 +117,7 @@ impl LatencyModel {
         LatencyModel {
             comp: LinearFit { slope: 1.0 / flops_per_sec, intercept: 0.0, r2: 1.0 },
             load: LinearFit { slope: 1.0 / bytes_per_sec, intercept: 0.0, r2: 1.0 },
+            upload: nominal_upload_fit(),
         }
     }
 
@@ -92,26 +129,37 @@ impl LatencyModel {
         self.load.predict(bytes).max(0.0)
     }
 
+    pub fn upload_seconds(&self, bytes: f64) -> f64 {
+        self.upload.predict(bytes).max(0.0)
+    }
+
     /// Per-block DP costs for a batch whose members use bucket `n`.
     ///
-    /// `batch_members` scales both compute FLOPs and cache bytes — each
-    /// member loads its own activation rows (heterogeneous templates).
+    /// `batch_members` scales compute FLOPs and both copy streams —
+    /// each member loads its own activation rows (heterogeneous
+    /// templates). `kv_warm` marks the block resident in the device KV
+    /// tier: the K/V gather is skipped and the H2D upload collapses to
+    /// zero.
     pub fn block_costs(
         &self,
         cfg: &ModelConfig,
         n: usize,
         batch_members: usize,
         mode: CacheMode,
+        kv_warm: bool,
     ) -> BlockCosts {
         let b = batch_members.max(1) as f64;
         BlockCosts {
             c_cached: self.comp_seconds(b * block_flops_cached(cfg, n, mode)),
             c_full: self.comp_seconds(b * block_flops_full(cfg)),
-            load: self.load_seconds(b * block_cache_bytes(cfg, n, mode)),
+            load: self.load_seconds(b * block_stage_bytes(cfg, n, mode, kv_warm)),
+            upload: self.upload_seconds(b * block_upload_bytes(cfg, n, mode, kv_warm)),
         }
     }
 
-    /// Step costs for the whole model (uniform blocks).
+    /// Step costs for the whole model (uniform blocks), device KV tier
+    /// cold — what the scheduler's Algorithm-2 estimator assumes for a
+    /// worker it has no warmth information about.
     pub fn step_costs(
         &self,
         cfg: &ModelConfig,
@@ -119,8 +167,30 @@ impl LatencyModel {
         batch_members: usize,
         mode: CacheMode,
     ) -> Vec<BlockCosts> {
-        vec![self.block_costs(cfg, n, batch_members, mode); cfg.blocks]
+        self.step_costs_with(cfg, n, batch_members, mode, 0)
     }
+
+    /// Step costs with per-block device-KV-tier warmth (`warm_mask` bit
+    /// i set — block i's staged K/V is already device-resident).
+    pub fn step_costs_with(
+        &self,
+        cfg: &ModelConfig,
+        n: usize,
+        batch_members: usize,
+        mode: CacheMode,
+        warm_mask: u64,
+    ) -> Vec<BlockCosts> {
+        (0..cfg.blocks)
+            .map(|i| {
+                let warm = i < 64 && warm_mask & (1u64 << i) != 0;
+                self.block_costs(cfg, n, batch_members, mode, warm)
+            })
+            .collect()
+    }
+}
+
+fn nominal_upload_fit() -> LinearFit {
+    LinearFit { slope: 1.0 / NOMINAL_UPLOAD_BYTES_PER_SEC, intercept: 0.0, r2: 1.0 }
 }
 
 impl LatencyModel {
@@ -135,7 +205,11 @@ impl LatencyModel {
                 ("r2", Json::num(f.r2)),
             ])
         };
-        Json::obj(vec![("comp", fit(&self.comp)), ("load", fit(&self.load))])
+        Json::obj(vec![
+            ("comp", fit(&self.comp)),
+            ("load", fit(&self.load)),
+            ("upload", fit(&self.upload)),
+        ])
     }
 
     pub fn from_json(j: &crate::util::json::Json) -> Option<LatencyModel> {
@@ -146,7 +220,12 @@ impl LatencyModel {
                 r2: j.at("r2").as_f64().unwrap_or(0.0),
             })
         };
-        Some(LatencyModel { comp: fit(j.at("comp"))?, load: fit(j.at("load"))? })
+        Some(LatencyModel {
+            comp: fit(j.at("comp"))?,
+            load: fit(j.at("load"))?,
+            // older persisted models predate the upload stage
+            upload: fit(j.at("upload")).unwrap_or_else(nominal_upload_fit),
+        })
     }
 
     /// Load a calibrated model from `<dir>/latency_model_<model>.json`,
@@ -277,9 +356,55 @@ mod tests {
     fn block_costs_scale_with_batch() {
         let c = cfg();
         let m = LatencyModel::nominal(1e9, 1e8);
-        let b1 = m.block_costs(&c, 16, 1, CacheMode::CacheY);
-        let b4 = m.block_costs(&c, 16, 4, CacheMode::CacheY);
+        let b1 = m.block_costs(&c, 16, 1, CacheMode::CacheY, false);
+        let b4 = m.block_costs(&c, 16, 4, CacheMode::CacheY, false);
         assert!((b4.c_cached - 4.0 * b1.c_cached).abs() < 1e-12);
         assert!((b4.load - 4.0 * b1.load).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warm_kv_collapses_upload_and_kv_stage_bytes() {
+        let c = cfg();
+        let m = LatencyModel::nominal(1e9, 1e8);
+        let cold = m.block_costs(&c, 16, 1, CacheMode::CacheKV, false);
+        let warm = m.block_costs(&c, 16, 1, CacheMode::CacheKV, true);
+        assert!(cold.upload > 0.0, "cold KV pays the H2D stage");
+        assert_eq!(warm.upload, 0.0, "device-tier hit uploads nothing");
+        assert!(warm.load < cold.load, "tier hit skips the K/V gather");
+        // warm stage bytes = Y only, same as cache-Y
+        assert_eq!(
+            block_stage_bytes(&c, 16, CacheMode::CacheKV, true),
+            block_stage_bytes(&c, 16, CacheMode::CacheY, false)
+        );
+        // cache-Y never uploads
+        assert_eq!(block_upload_bytes(&c, 16, CacheMode::CacheY, false), 0.0);
+    }
+
+    #[test]
+    fn step_costs_with_applies_warm_mask_per_block() {
+        let c = cfg();
+        let m = LatencyModel::nominal(1e9, 1e8);
+        let costs = m.step_costs_with(&c, 16, 1, CacheMode::CacheKV, 0b0101);
+        assert_eq!(costs.len(), c.blocks);
+        assert_eq!(costs[0].upload, 0.0);
+        assert!(costs[1].upload > 0.0);
+        assert_eq!(costs[2].upload, 0.0);
+        assert!(costs[3].upload > 0.0);
+    }
+
+    #[test]
+    fn json_round_trip_keeps_upload_fit() {
+        let m = LatencyModel::nominal(1e9, 1e8);
+        let j = m.to_json();
+        let back = LatencyModel::from_json(&j).unwrap();
+        assert!((back.upload.slope - m.upload.slope).abs() < 1e-18);
+        // pre-upload-stage persisted models fall back to the nominal fit
+        let legacy = crate::util::json::Json::parse(
+            "{\"comp\":{\"slope\":1e-9,\"intercept\":0,\"r2\":1},\
+             \"load\":{\"slope\":1e-8,\"intercept\":0,\"r2\":1}}",
+        )
+        .unwrap();
+        let back = LatencyModel::from_json(&legacy).unwrap();
+        assert!((back.upload.slope - 1.0 / NOMINAL_UPLOAD_BYTES_PER_SEC).abs() < 1e-18);
     }
 }

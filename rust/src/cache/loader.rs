@@ -14,7 +14,11 @@
 //! layout the kernel consumes (padding slots replicate the last member),
 //! so the worker uploads the staged buffers as-is instead of re-packing
 //! them on the engine thread. Pacing charges only the *real* members'
-//! bytes — padding replication is layout, not load.
+//! bytes — padding replication is layout, not load. A job whose K/V is
+//! already resident in the device KV tier is submitted with `skip_kv`:
+//! only the Y rows are gathered and paced, so the copy stream is never
+//! billed for a load that never happens (keeping Algorithm-2 estimates
+//! honest).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -54,6 +58,9 @@ struct Job {
     mode: CacheMode,
     /// Batch-bucket slot count of the packed K/V layout (>= members).
     slots: usize,
+    /// Cache-KV only: the block's K/V is device-resident — gather (and
+    /// pace) only the Y rows.
+    skip_kv: bool,
     done: Sender<StagedBlock>,
 }
 
@@ -74,7 +81,8 @@ impl CacheLoader {
             .spawn(move || {
                 while let Ok(job) = rx.recv() {
                     let t0 = Instant::now();
-                    let staged = gather(job.block, &job.members, job.mode, job.slots);
+                    let staged =
+                        gather(job.block, &job.members, job.mode, job.slots, job.skip_kv);
                     pace(staged.bytes, bandwidth, t0);
                     let _ = job.done.send(staged);
                 }
@@ -90,19 +98,22 @@ impl CacheLoader {
     /// Submit a gather job; completion arrives on the returned receiver.
     /// Jobs are processed FIFO — submission order *is* the load-stream
     /// order assumed by the pipeline DP. `slots` sets the packed K/V
-    /// layout's batch-bucket size (ignored in cache-Y mode).
+    /// layout's batch-bucket size (ignored in cache-Y mode). Pass
+    /// `skip_kv` when the block's K/V is already device-resident: the
+    /// job then gathers (and is paced for) only the Y rows.
     pub fn submit(
         &self,
         block: usize,
         members: Vec<MemberGather>,
         mode: CacheMode,
         slots: usize,
+        skip_kv: bool,
     ) -> Receiver<StagedBlock> {
         let (done_tx, done_rx) = channel();
         self.tx
             .as_ref()
             .expect("loader alive")
-            .send(Job { block, members, mode, slots, done: done_tx })
+            .send(Job { block, members, mode, slots, skip_kv, done: done_tx })
             .expect("loader thread alive");
         done_rx
     }
@@ -117,7 +128,7 @@ impl CacheLoader {
         slots: usize,
     ) -> StagedBlock {
         let t0 = Instant::now();
-        let staged = gather(block, &members, mode, slots);
+        let staged = gather(block, &members, mode, slots, false);
         pace(staged.bytes, self.bandwidth, t0);
         staged
     }
@@ -132,7 +143,13 @@ impl Drop for CacheLoader {
     }
 }
 
-fn gather(block: usize, members: &[MemberGather], mode: CacheMode, slots: usize) -> StagedBlock {
+fn gather(
+    block: usize,
+    members: &[MemberGather],
+    mode: CacheMode,
+    slots: usize,
+    skip_kv: bool,
+) -> StagedBlock {
     let mut y = Vec::with_capacity(members.len());
     let mut bytes = 0usize;
     for m in members {
@@ -143,7 +160,8 @@ fn gather(block: usize, members: &[MemberGather], mode: CacheMode, slots: usize)
         bytes += rows.len() * 4;
         y.push(rows);
     }
-    let kv_packed = (matches!(mode, CacheMode::CacheKV) && !members.is_empty()).then(|| {
+    let want_kv = matches!(mode, CacheMode::CacheKV) && !skip_kv && !members.is_empty();
+    let kv_packed = want_kv.then(|| {
         let slots = slots.max(members.len());
         let h = members[0].store.hidden;
         let rows = members[0].ids.len();
@@ -225,7 +243,7 @@ mod tests {
     fn gathers_requested_rows_in_order() {
         let loader = CacheLoader::spawn(0.0);
         let m = MemberGather { store: store(false), step: 1, ids: Arc::new(vec![3, 1]) };
-        let rx = loader.submit(0, vec![m], CacheMode::CacheY, 1);
+        let rx = loader.submit(0, vec![m], CacheMode::CacheY, 1, false);
         let staged = rx.recv().unwrap();
         assert_eq!(staged.block, 0);
         // entry(1, 0) has base 2*10; row 3 = [26, 27], row 1 = [22, 23]
@@ -240,7 +258,7 @@ mod tests {
         let m = MemberGather { store: store(true), step: 0, ids: Arc::new(vec![0]) };
         // 1 member, 2 slots: the padding slot replicates the member
         let staged = loader
-            .submit(1, vec![m], CacheMode::CacheKV, 2)
+            .submit(1, vec![m], CacheMode::CacheKV, 2, false)
             .recv()
             .unwrap();
         let (k, v) = staged.kv_packed.unwrap();
@@ -252,11 +270,26 @@ mod tests {
     }
 
     #[test]
+    fn device_served_kv_job_skips_kv_staging_and_pacing_bytes() {
+        let loader = CacheLoader::spawn(0.0);
+        let m = || MemberGather { store: store(true), step: 0, ids: Arc::new(vec![0]) };
+        let cold = loader.submit(1, vec![m()], CacheMode::CacheKV, 2, false).recv().unwrap();
+        let warm = loader.submit(1, vec![m()], CacheMode::CacheKV, 2, true).recv().unwrap();
+        assert!(cold.kv_packed.is_some());
+        assert!(warm.kv_packed.is_none(), "device-served job stages no K/V");
+        assert_eq!(warm.y, cold.y, "Y rows still gathered for the replenish path");
+        // the pacer is billed only for the Y rows — not for a K/V load
+        // that the device tier made unnecessary
+        assert_eq!(warm.bytes, 2 * 4, "y bytes only: 1 row x hidden 2 x 4B");
+        assert_eq!(cold.bytes, warm.bytes + 2 * 2 * 4, "cold adds k+v bytes");
+    }
+
+    #[test]
     fn fifo_order_preserved() {
         let loader = CacheLoader::spawn(0.0);
         let mk = |step| MemberGather { store: store(false), step, ids: Arc::new(vec![0]) };
-        let rx0 = loader.submit(0, vec![mk(0)], CacheMode::CacheY, 1);
-        let rx1 = loader.submit(1, vec![mk(0)], CacheMode::CacheY, 1);
+        let rx0 = loader.submit(0, vec![mk(0)], CacheMode::CacheY, 1, false);
+        let rx1 = loader.submit(1, vec![mk(0)], CacheMode::CacheY, 1, false);
         // both complete; block tags intact
         assert_eq!(rx0.recv().unwrap().block, 0);
         assert_eq!(rx1.recv().unwrap().block, 1);
@@ -269,7 +302,7 @@ mod tests {
         let loader = CacheLoader::spawn(32.0 / 0.04);
         let mk = || MemberGather { store: store(false), step: 0, ids: Arc::new(vec![0, 2]) };
         let t0 = Instant::now();
-        let rx = loader.submit(0, vec![mk(), mk()], CacheMode::CacheY, 2);
+        let rx = loader.submit(0, vec![mk(), mk()], CacheMode::CacheY, 2, false);
         rx.recv().unwrap();
         assert!(t0.elapsed().as_millis() >= 35, "pacing skipped");
     }

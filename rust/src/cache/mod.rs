@@ -1,13 +1,16 @@
 //! Activation caching (paper §3.1/§4.2): template activation store,
-//! tiered host/disk storage, the simulated copy stream, the bubble-free
-//! pipeline DP (Algo 1) and the latency regression models (§4.4).
+//! tiered host/disk storage, the device-resident KV working set, the
+//! simulated copy streams, the bubble-free pipeline DP (Algo 1) and the
+//! latency regression models (§4.4).
 
+pub mod device;
 pub mod latency_model;
 pub mod loader;
 pub mod pipeline;
 pub mod store;
 pub mod tier;
 
+pub use device::{KvDeviceTier, KvKey, KvTierStats};
 pub use latency_model::LatencyModel;
 pub use loader::{CacheLoader, MemberGather, StagedBlock};
 pub use pipeline::{plan, BlockCosts, PipelinePlan};

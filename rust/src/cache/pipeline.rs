@@ -2,20 +2,33 @@
 //!
 //! Per denoise step, the worker must decide for each transformer block
 //! whether to run it *cached* (compute only the bucket's n tokens, but
-//! wait for that block's activations to arrive from host memory) or
-//! *full* (compute all L tokens, no load). The load stream is sequential
-//! (one copy engine), so a cached block's load can only start once the
-//! previous cached block's load finished.
+//! wait for that block's activations to arrive) or *full* (compute all
+//! L tokens, no load). Cached activations traverse up to three
+//! sequential stages, each its own stream:
 //!
-//! Timing semantics (Fig. 9):
-//!   load_end(i)  = max over previous cached blocks' load_end + load(i)
-//!   comp_start(i)= max(comp_end(i-1), load_end(i) if cached else 0)
-//!   comp_end(i)  = comp_start(i) + (c_cached(i) | c_full(i))
+//!   1. host gather   — the loader thread gathers/stages the rows
+//!                      (the "copy stream" of the original two-stage DP);
+//!   2. H2D upload    — the staged K/V crosses host→device on the second
+//!                      copy stream (zero when the block is already
+//!                      resident in the device KV tier, and zero in
+//!                      cache-Y mode where rows are consumed host-side);
+//!   3. compute       — the block program runs.
 //!
-//! The paper solves this with an O(N) DP; we implement an exact DP over
-//! the Pareto frontier of (comp_end, load_end) states — the frontier
-//! stays tiny (<= N in the worst case, usually 2-3 states), so the cost
-//! is negligible versus a denoise step, matching the paper's observation.
+//! Each stream is sequential (one copy engine each), so a cached block's
+//! gather can only start after the previous cached block's gather, its
+//! upload after both its own gather and the previous upload, and its
+//! compute after both its upload and the previous block's compute:
+//!
+//!   load_end(i)   = load_end(prev cached)   + load(i)
+//!   upload_end(i) = max(upload_end(prev cached), load_end(i)) + upload(i)
+//!   comp_start(i) = max(comp_end(i-1), upload_end(i) if cached else 0)
+//!   comp_end(i)   = comp_start(i) + (c_cached(i) | c_full(i))
+//!
+//! The paper solves the two-stage version with an O(N) DP; we implement
+//! an exact DP over the Pareto frontier of (comp_end, load_end,
+//! upload_end) states — the frontier stays tiny (usually 2-4 states), so
+//! the cost is negligible versus a denoise step, matching the paper's
+//! observation.
 
 /// Per-block latency inputs for the DP.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -24,8 +37,13 @@ pub struct BlockCosts {
     pub c_cached: f64,
     /// Compute latency without cache (all L tokens).
     pub c_full: f64,
-    /// Latency of loading this block's cached activations to HBM.
+    /// Latency of gathering/staging this block's cached activations on
+    /// the host copy stream.
     pub load: f64,
+    /// Latency of the host→device upload of this block's staged K/V on
+    /// the second copy stream. Zero in cache-Y mode (rows are consumed
+    /// host-side) and zero on a device-KV-tier hit (already resident).
+    pub upload: f64,
 }
 
 /// The plan for one denoise step.
@@ -41,27 +59,32 @@ pub struct PipelinePlan {
 struct State {
     comp_end: f64,
     load_end: f64,
+    upload_end: f64,
     decisions: u64, // bitmask, block i -> bit i (N <= 64 blocks)
 }
 
 /// Algorithm 1: choose per-block cache usage minimizing step latency.
 pub fn plan(costs: &[BlockCosts]) -> PipelinePlan {
     assert!(costs.len() <= 64, "bitmask supports <= 64 blocks");
-    let mut frontier = vec![State { comp_end: 0.0, load_end: 0.0, decisions: 0 }];
+    let mut frontier =
+        vec![State { comp_end: 0.0, load_end: 0.0, upload_end: 0.0, decisions: 0 }];
     for (i, c) in costs.iter().enumerate() {
         let mut next: Vec<State> = Vec::with_capacity(frontier.len() * 2);
         for s in &frontier {
-            // decision: full recompute (no load)
+            // decision: full recompute (no load, no upload)
             next.push(State {
                 comp_end: s.comp_end + c.c_full,
                 load_end: s.load_end,
+                upload_end: s.upload_end,
                 decisions: s.decisions,
             });
-            // decision: cached (sequential load stream)
+            // decision: cached (sequential gather then upload streams)
             let load_end = s.load_end + c.load;
+            let upload_end = s.upload_end.max(load_end) + c.upload;
             next.push(State {
-                comp_end: load_end.max(s.comp_end) + c.c_cached,
+                comp_end: upload_end.max(s.comp_end) + c.c_cached,
                 load_end,
+                upload_end,
                 decisions: s.decisions | (1 << i),
             });
         }
@@ -77,17 +100,27 @@ pub fn plan(costs: &[BlockCosts]) -> PipelinePlan {
     }
 }
 
+fn dominates(a: &State, b: &State) -> bool {
+    a.comp_end <= b.comp_end + 1e-15
+        && a.load_end <= b.load_end + 1e-15
+        && a.upload_end <= b.upload_end + 1e-15
+}
+
 fn pareto_prune(mut states: Vec<State>) -> Vec<State> {
-    // sort by comp_end, then keep states with strictly decreasing load_end
+    // Sort by comp_end so earlier states can only dominate later ones,
+    // then keep each state unless an already-kept state dominates it in
+    // all three stage clocks. The frontier stays tiny, so the quadratic
+    // scan is cheaper than anything fancier.
     states.sort_by(|a, b| {
         a.comp_end
             .partial_cmp(&b.comp_end)
             .unwrap()
             .then(a.load_end.partial_cmp(&b.load_end).unwrap())
+            .then(a.upload_end.partial_cmp(&b.upload_end).unwrap())
     });
     let mut kept: Vec<State> = Vec::with_capacity(states.len());
     for s in states {
-        if kept.last().map(|k| s.load_end < k.load_end - 1e-15).unwrap_or(true) {
+        if !kept.iter().any(|k| dominates(k, &s)) {
             kept.push(s);
         }
     }
@@ -95,13 +128,17 @@ fn pareto_prune(mut states: Vec<State>) -> Vec<State> {
 }
 
 /// Memoized Algorithm-1 plans. `BlockCosts` are a pure function of
-/// (token bucket, batch size, cache mode) for a fixed latency model, so
-/// the DP result is reusable across every step of every batch with that
-/// shape — the seed re-ran the DP each step of each batch. Plans are
-/// `Arc`-shared so a cache hit is two hash probes and a refcount bump.
+/// (token bucket, batch size, cache mode, device-tier warmth) for a
+/// fixed latency model, so the DP result is reusable across every step
+/// of every batch with that shape — the seed re-ran the DP each step of
+/// each batch. `warm_mask` carries per-block device-KV-tier residency
+/// (bit i set — block i's upload collapses to 0), so plans adapt to
+/// warmth without recomputing for the two common cases (fully cold,
+/// fully warm). Plans are `Arc`-shared so a cache hit is two hash
+/// probes and a refcount bump.
 #[derive(Default)]
 pub struct PlanCache {
-    entries: std::collections::HashMap<(usize, usize, u8), std::sync::Arc<PipelinePlan>>,
+    entries: std::collections::HashMap<(usize, usize, u8, u64), std::sync::Arc<PipelinePlan>>,
     hits: u64,
     misses: u64,
 }
@@ -111,22 +148,23 @@ impl PlanCache {
         PlanCache::default()
     }
 
-    /// Plan for `(n, b, mode_tag)`, computing block costs + DP only on
-    /// the first request for that shape.
+    /// Plan for `(n, b, mode_tag, warm_mask)`, computing block costs +
+    /// DP only on the first request for that shape.
     pub fn plan_for(
         &mut self,
         n: usize,
         b: usize,
         mode_tag: u8,
+        warm_mask: u64,
         costs: impl FnOnce() -> Vec<BlockCosts>,
     ) -> std::sync::Arc<PipelinePlan> {
-        if let Some(p) = self.entries.get(&(n, b, mode_tag)) {
+        if let Some(p) = self.entries.get(&(n, b, mode_tag, warm_mask)) {
             self.hits += 1;
             return std::sync::Arc::clone(p);
         }
         self.misses += 1;
         let p = std::sync::Arc::new(plan(&costs()));
-        self.entries.insert((n, b, mode_tag), std::sync::Arc::clone(&p));
+        self.entries.insert((n, b, mode_tag, warm_mask), std::sync::Arc::clone(&p));
         p
     }
 
@@ -136,21 +174,23 @@ impl PlanCache {
     }
 }
 
-/// Fig. 9-Top: naive loading — load everything, then compute (no overlap).
+/// Fig. 9-Top: naive loading — stage, upload, then compute (no overlap).
 pub fn naive_latency(costs: &[BlockCosts]) -> f64 {
-    let load: f64 = costs.iter().map(|c| c.load).sum();
+    let load: f64 = costs.iter().map(|c| c.load + c.upload).sum();
     let comp: f64 = costs.iter().map(|c| c.c_cached).sum();
     load + comp
 }
 
-/// Fig. 9-Middle: strawman pipeline — every block cached, loads overlapped
-/// but bubbles remain when load(i) > compute budget.
+/// Fig. 9-Middle: strawman pipeline — every block cached, stages
+/// overlapped but bubbles remain when the load streams outrun compute.
 pub fn strawman_latency(costs: &[BlockCosts]) -> f64 {
     let mut comp_end = 0.0f64;
     let mut load_end = 0.0f64;
+    let mut upload_end = 0.0f64;
     for c in costs {
         load_end += c.load;
-        comp_end = load_end.max(comp_end) + c.c_cached;
+        upload_end = upload_end.max(load_end) + c.upload;
+        comp_end = upload_end.max(comp_end) + c.c_cached;
     }
     comp_end
 }
@@ -175,10 +215,12 @@ pub fn plan_bruteforce(costs: &[BlockCosts]) -> PipelinePlan {
     for mask in 0..(1u64 << n) {
         let mut comp_end = 0.0;
         let mut load_end = 0.0;
+        let mut upload_end = 0.0f64;
         for (i, c) in costs.iter().enumerate() {
             if mask & (1 << i) != 0 {
                 load_end += c.load;
-                comp_end = load_end.max(comp_end) + c.c_cached;
+                upload_end = upload_end.max(load_end) + c.upload;
+                comp_end = upload_end.max(comp_end) + c.c_cached;
             } else {
                 comp_end += c.c_full;
             }
@@ -202,7 +244,11 @@ mod tests {
     use crate::util::rng::Pcg;
 
     fn uniform(n: usize, c_cached: f64, c_full: f64, load: f64) -> Vec<BlockCosts> {
-        vec![BlockCosts { c_cached, c_full, load }; n]
+        vec![BlockCosts { c_cached, c_full, load, upload: 0.0 }; n]
+    }
+
+    fn uniform_up(n: usize, c_cached: f64, c_full: f64, load: f64, upload: f64) -> Vec<BlockCosts> {
+        vec![BlockCosts { c_cached, c_full, load, upload }; n]
     }
 
     #[test]
@@ -237,12 +283,28 @@ mod tests {
 
     #[test]
     fn ordering_naive_ge_strawman_ge_dp_ge_ideal() {
-        let costs = uniform(10, 4.0, 11.0, 6.0);
+        let costs = uniform_up(10, 4.0, 11.0, 4.0, 2.0);
         let n = naive_latency(&costs);
         let s = strawman_latency(&costs);
         let d = plan(&costs).latency;
         let i = ideal_latency(&costs);
         assert!(n >= s && s >= d && d >= i, "{n} {s} {d} {i}");
+    }
+
+    #[test]
+    fn upload_stage_shifts_plan_toward_full() {
+        // With a cold device tier the upload stream is the bottleneck;
+        // when it collapses to 0 (warm tier) the same blocks flip back
+        // to cached — the DP must see the difference.
+        let cold = uniform_up(8, 5.0, 11.0, 3.0, 7.0);
+        let warm = uniform_up(8, 5.0, 11.0, 3.0, 0.0);
+        let pc = plan(&cold);
+        let pw = plan(&warm);
+        assert!(pw.latency <= pc.latency, "warm {} vs cold {}", pw.latency, pc.latency);
+        assert!(pw.use_cache.iter().all(|&u| u), "warm tier: everything cached");
+        let cached_cold = pc.use_cache.iter().filter(|&&u| u).count();
+        let cached_warm = pw.use_cache.iter().filter(|&&u| u).count();
+        assert!(cached_warm >= cached_cold, "warmth never reduces caching");
     }
 
     #[test]
@@ -254,6 +316,7 @@ mod tests {
                     c_cached: rng.range_f64(0.5, 5.0),
                     c_full: rng.range_f64(1.0, 20.0),
                     load: rng.range_f64(0.0, 15.0),
+                    upload: rng.range_f64(0.0, 8.0),
                 })
                 .collect();
             let dp = plan(&costs);
@@ -280,15 +343,18 @@ mod tests {
                     c_cached: rng.range_f64(0.1, 5.0),
                     c_full: rng.range_f64(0.1, 20.0),
                     load: rng.range_f64(0.0, 10.0),
+                    upload: rng.range_f64(0.0, 6.0),
                 })
                 .collect();
             let p = plan(&costs);
             let mut comp_end = 0.0;
             let mut load_end = 0.0;
+            let mut upload_end = 0.0f64;
             for (i, c) in costs.iter().enumerate() {
                 if p.use_cache[i] {
                     load_end += c.load;
-                    comp_end = load_end.max(comp_end) + c.c_cached;
+                    upload_end = upload_end.max(load_end) + c.upload;
+                    comp_end = upload_end.max(comp_end) + c.c_cached;
                 } else {
                     comp_end += c.c_full;
                 }
@@ -311,15 +377,16 @@ mod tests {
             computed.set(computed.get() + 1);
             costs.clone()
         };
-        let a = cache.plan_for(16, 2, 0, mk);
-        let b = cache.plan_for(16, 2, 0, mk);
+        let a = cache.plan_for(16, 2, 0, 0, mk);
+        let b = cache.plan_for(16, 2, 0, 0, mk);
         assert!(std::sync::Arc::ptr_eq(&a, &b), "hit returns the same plan");
         assert_eq!(computed.get(), 1, "costs computed once per shape");
         assert_eq!(cache.stats(), (1, 1));
-        // distinct shape (different b / mode tag) recomputes
-        let _ = cache.plan_for(16, 3, 0, mk);
-        let _ = cache.plan_for(16, 2, 1, mk);
-        assert_eq!(computed.get(), 3);
+        // distinct shape (different b / mode tag / warmth) recomputes
+        let _ = cache.plan_for(16, 3, 0, 0, mk);
+        let _ = cache.plan_for(16, 2, 1, 0, mk);
+        let _ = cache.plan_for(16, 2, 1, 0b111111, mk);
+        assert_eq!(computed.get(), 4);
         assert_eq!(*a, plan(&costs), "cached plan is the DP plan");
     }
 

@@ -141,10 +141,15 @@ pub struct ClusterOpts {
     pub warmup: bool,
 }
 
-/// Drop a template from every worker tier (retirement purge).
-fn purge_tiers(tiers: &[Arc<TieredStore>], template_id: &str) {
+/// Drop a template from every worker tier (retirement purge): host/disk
+/// immediately, and the engine-thread-confined device KV tier via a
+/// purge request each engine drains at its next loop boundary.
+fn purge_tiers(tiers: &[Arc<TieredStore>], shareds: &[Arc<WorkerShared>], template_id: &str) {
     for t in tiers {
         t.remove(template_id);
+    }
+    for s in shareds {
+        s.request_kv_purge(template_id);
     }
 }
 
@@ -270,6 +275,7 @@ impl Cluster {
             let registry = Arc::clone(&registry);
             let templates = Arc::clone(&templates);
             let tiers = tiers.clone();
+            let shareds = shareds.clone();
             let queues = queues.clone();
             let responses = Arc::clone(&responses);
             let retain = Arc::clone(&retain_responses);
@@ -297,7 +303,7 @@ impl Cluster {
                                 // the edit no longer pins its template; a
                                 // drained retirement purges every tier
                                 if let Some(tpl) = templates.release_request(id) {
-                                    purge_tiers(&tiers, &tpl);
+                                    purge_tiers(&tiers, &shareds, &tpl);
                                 }
                                 // one Arc per response, shared between the
                                 // registry (polling) and the replay log
@@ -385,6 +391,7 @@ impl Cluster {
         if let RegisterAdmission::Started { epoch } = admission {
             let templates = Arc::clone(&self.templates);
             let tiers = self.tiers.clone();
+            let shareds = self.shareds.clone();
             let reg_rt = Arc::clone(&self.reg_rt);
             let mode = self.cache_mode;
             let id = template_id.to_string();
@@ -402,7 +409,7 @@ impl Cluster {
                         if !templates.complete_register(&id, epoch, bytes) {
                             // retired or re-registered while tracing:
                             // un-publish what this stale job staged
-                            purge_tiers(&tiers, &id);
+                            purge_tiers(&tiers, &shareds, &id);
                         }
                     }
                     Err(e) => templates.fail_register(&id, epoch, &format!("{e:#}")),
@@ -424,7 +431,7 @@ impl Cluster {
     pub fn retire_template(&self, template_id: &str) -> RetireOutcome {
         let outcome = self.templates.retire(template_id);
         if outcome == RetireOutcome::Retired {
-            purge_tiers(&self.tiers, template_id);
+            purge_tiers(&self.tiers, &self.shareds, template_id);
         }
         outcome
     }
@@ -637,7 +644,7 @@ impl Cluster {
                 drop(b);
                 // release the template reference the submission pinned
                 if let Some(tpl) = self.templates.release_request(id) {
-                    purge_tiers(&self.tiers, &tpl);
+                    purge_tiers(&self.tiers, &self.shareds, &tpl);
                 }
                 self.registry.fulfill(id, Err(EditError::Cancelled));
                 CancelOutcome::Cancelled

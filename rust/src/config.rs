@@ -119,6 +119,13 @@ pub struct EngineConfig {
     /// golden tests hold the two bit-identical, and the overhead bench
     /// uses it as the before/after baseline.
     pub device_resident: bool,
+    /// HBM budget (bytes) of the device-resident KV working set — the
+    /// upload-once LRU over staged K/V buffers that lets a warm
+    /// template's cache-KV blocks run with zero per-step host→device
+    /// transfers. `0` disables the tier (`--no-kv-device-tier`): every
+    /// cached block re-uploads its staged K/V each step, the pre-tier
+    /// behavior.
+    pub kv_device_budget_bytes: usize,
     /// Disable the bubble-free DP and always use the cache for every block
     /// (the strawman pipeline of Fig. 9-Middle) — for ablations.
     pub force_all_cached: bool,
@@ -156,6 +163,7 @@ impl EngineConfig {
             host_cache_budget: 512 << 20,
             spill_dir: PathBuf::from("artifacts/cache_spill"),
             device_resident: true,
+            kv_device_budget_bytes: 256 << 20,
             force_all_cached: false,
             naive_loading: false,
             teacache_threshold: 0.05,

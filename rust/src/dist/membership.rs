@@ -142,9 +142,18 @@ impl Membership {
 
     /// Record a heartbeat. `Joining`/`Suspect` members become `Ready`;
     /// `Draining` stays draining (the drain outlives load reports).
-    /// Returns `false` for unknown or `Dead` members — the caller should
-    /// tell the worker to re-announce.
-    pub fn heartbeat(&mut self, name: &str, snapshot: Option<WorkerSnapshot>, now: Instant) -> bool {
+    /// A heartbeat carrying a template set refreshes the member's
+    /// residency in place — routing then follows live registrations and
+    /// retirements instead of the announce-time snapshot. Returns `false`
+    /// for unknown or `Dead` members — the caller should tell the worker
+    /// to re-announce.
+    pub fn heartbeat(
+        &mut self,
+        name: &str,
+        snapshot: Option<WorkerSnapshot>,
+        templates: Option<Vec<String>>,
+        now: Instant,
+    ) -> bool {
         let Some(slot) = self.slot_of(name) else { return false };
         let m = &mut self.members[slot];
         match m.state {
@@ -155,6 +164,9 @@ impl Membership {
         m.last_heartbeat = now;
         if snapshot.is_some() {
             m.snapshot = snapshot;
+        }
+        if let Some(t) = templates {
+            m.templates = t;
         }
         true
     }
@@ -236,10 +248,10 @@ mod tests {
         assert_eq!((slot, epoch), (0, 1));
         assert_eq!(ms.get(0).unwrap().state, MemberState::Joining);
         assert!(!ms.available()[0], "joining members take no work yet");
-        assert!(ms.heartbeat("w0", None, t0));
+        assert!(ms.heartbeat("w0", None, None, t0));
         assert_eq!(ms.get(0).unwrap().state, MemberState::Ready);
         assert!(ms.available()[0]);
-        assert!(!ms.heartbeat("ghost", None, t0), "unknown members must re-announce");
+        assert!(!ms.heartbeat("ghost", None, None, t0), "unknown members must re-announce");
     }
 
     #[test]
@@ -247,7 +259,7 @@ mod tests {
         let t0 = Instant::now();
         let mut ms = table();
         ms.announce("w0", "a", vec![], t0);
-        ms.heartbeat("w0", None, t0);
+        ms.heartbeat("w0", None, None, t0);
         assert!(ms.expire(t0 + Duration::from_millis(100)).is_empty());
         assert_eq!(ms.get(0).unwrap().state, MemberState::Ready);
         // past suspect_after: suspect, not yet failed over
@@ -255,7 +267,7 @@ mod tests {
         assert_eq!(ms.get(0).unwrap().state, MemberState::Suspect);
         assert!(!ms.available()[0]);
         // a late heartbeat revives it
-        assert!(ms.heartbeat("w0", None, t0 + Duration::from_millis(450)));
+        assert!(ms.heartbeat("w0", None, None, t0 + Duration::from_millis(450)));
         assert_eq!(ms.get(0).unwrap().state, MemberState::Ready);
         // silence all the way to dead_after: exactly one dead transition
         let dead = ms.expire(t0 + Duration::from_millis(1100));
@@ -263,10 +275,27 @@ mod tests {
         assert!(ms.expire(t0 + Duration::from_millis(1200)).is_empty(), "dead fires once");
         // heartbeats from the dead are refused; re-announce revives with
         // a bumped epoch on the same slot
-        assert!(!ms.heartbeat("w0", None, t0 + Duration::from_millis(1200)));
+        assert!(!ms.heartbeat("w0", None, None, t0 + Duration::from_millis(1200)));
         let (slot, epoch) = ms.announce("w0", "a", vec![], t0 + Duration::from_millis(1300));
         assert_eq!((slot, epoch), (0, 2));
         assert_eq!(ms.get(0).unwrap().state, MemberState::Joining);
+    }
+
+    #[test]
+    fn heartbeats_refresh_template_residency() {
+        let t0 = Instant::now();
+        let mut ms = table();
+        ms.announce("w0", "a", vec!["tpl-0".into()], t0);
+        // legacy beat without a template set: announce-time residency kept
+        assert!(ms.heartbeat("w0", None, None, t0));
+        assert_eq!(ms.get(0).unwrap().templates, vec!["tpl-0".to_string()]);
+        // a beat carrying templates replaces the set (tpl-0 retired,
+        // tpl-1 registered since the announce)
+        assert!(ms.heartbeat("w0", None, Some(vec!["tpl-1".into()]), t0));
+        assert_eq!(ms.get(0).unwrap().templates, vec!["tpl-1".to_string()]);
+        // an explicitly empty set is honoured too (everything retired)
+        assert!(ms.heartbeat("w0", None, Some(Vec::new()), t0));
+        assert!(ms.get(0).unwrap().templates.is_empty());
     }
 
     #[test]
@@ -275,13 +304,13 @@ mod tests {
         let mut ms = table();
         ms.announce("w0", "a", vec![], t0);
         ms.announce("w1", "b", vec![], t0);
-        ms.heartbeat("w0", None, t0);
-        ms.heartbeat("w1", None, t0);
+        ms.heartbeat("w0", None, None, t0);
+        ms.heartbeat("w1", None, None, t0);
         assert!(ms.begin_drain("w1"));
         assert_eq!(ms.available(), vec![true, false]);
         assert_eq!(ms.ready_slots(), vec![0]);
         // heartbeats keep it draining (not revived to ready)
-        assert!(ms.heartbeat("w1", None, t0 + Duration::from_millis(100)));
+        assert!(ms.heartbeat("w1", None, None, t0 + Duration::from_millis(100)));
         assert_eq!(ms.get(1).unwrap().state, MemberState::Draining);
         // but a drained member that stops heartbeating still dies
         let dead = ms.expire(t0 + Duration::from_millis(800));

@@ -135,6 +135,13 @@ impl WorkerNode {
                     if let Some(s) = snap {
                         pairs.push(("snapshot", proto::snapshot_to_json(&s)));
                     }
+                    // live residency: templates registered or retired
+                    // since the announce reach the router's RouteCtx on
+                    // the next beat
+                    pairs.push((
+                        "templates",
+                        Json::arr(this.serveable_templates().iter().map(Json::str).collect()),
+                    ));
                     match client.call("POST", "/rpc/heartbeat", Some(&Json::obj(pairs))) {
                         Ok((200, _)) => {}
                         Ok(_) => announced = false, // router wants a re-announce
@@ -146,14 +153,19 @@ impl WorkerNode {
         });
     }
 
-    fn announce_body(&self) -> Json {
-        let templates = self
-            .cluster
+    /// Templates this node can serve right now (announce + heartbeat
+    /// residency payloads).
+    fn serveable_templates(&self) -> Vec<String> {
+        self.cluster
             .templates_status()
             .into_iter()
             .map(|s| s.info.template_id)
             .filter(|id| self.cluster.has_template(id))
-            .collect();
+            .collect()
+    }
+
+    fn announce_body(&self) -> Json {
+        let templates = self.serveable_templates();
         Announce {
             name: self.name.clone(),
             rpc_addr: self

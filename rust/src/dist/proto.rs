@@ -283,6 +283,10 @@ pub fn snapshot_to_json(s: &WorkerSnapshot) -> Json {
                 ("d2h_ops", Json::num(s.transfers.d2h_ops as f64)),
                 ("h2d_bytes", Json::num(s.transfers.h2d_bytes as f64)),
                 ("d2h_bytes", Json::num(s.transfers.d2h_bytes as f64)),
+                ("kv_h2d_bytes", Json::num(s.transfers.kv_h2d_bytes as f64)),
+                ("kv_dev_hits", Json::num(s.transfers.kv_dev_hits as f64)),
+                ("kv_dev_misses", Json::num(s.transfers.kv_dev_misses as f64)),
+                ("kv_prefetch_overlap_us", Json::num(s.transfers.kv_prefetch_overlap_us as f64)),
             ]),
         ),
     ])
@@ -314,6 +318,11 @@ pub fn snapshot_from_json(j: &Json) -> Option<WorkerSnapshot> {
             d2h_ops: t.at("d2h_ops").as_f64().unwrap_or(0.0) as u64,
             h2d_bytes: t.at("h2d_bytes").as_f64().unwrap_or(0.0) as u64,
             d2h_bytes: t.at("d2h_bytes").as_f64().unwrap_or(0.0) as u64,
+            kv_h2d_bytes: t.at("kv_h2d_bytes").as_f64().unwrap_or(0.0) as u64,
+            kv_dev_hits: t.at("kv_dev_hits").as_f64().unwrap_or(0.0) as u64,
+            kv_dev_misses: t.at("kv_dev_misses").as_f64().unwrap_or(0.0) as u64,
+            kv_prefetch_overlap_us: t.at("kv_prefetch_overlap_us").as_f64().unwrap_or(0.0)
+                as u64,
         },
     })
 }
@@ -447,7 +456,16 @@ mod tests {
                 ClassDepth { queued: 2, oldest_wait_secs: 1.5 },
             ],
             steps_executed: 123,
-            transfers: TransferTotals { h2d_ops: 4, d2h_ops: 5, h2d_bytes: 6, d2h_bytes: 7 },
+            transfers: TransferTotals {
+                h2d_ops: 4,
+                d2h_ops: 5,
+                h2d_bytes: 6,
+                d2h_bytes: 7,
+                kv_h2d_bytes: 8,
+                kv_dev_hits: 9,
+                kv_dev_misses: 10,
+                kv_prefetch_overlap_us: 11,
+            },
         };
         let text = snapshot_to_json(&snap).to_string();
         let back = snapshot_from_json(&Json::parse(&text).unwrap()).unwrap();

@@ -348,8 +348,10 @@ impl Router {
     }
 
     /// Routing context from the membership table: residency is derived
-    /// from each member's announced template set (bytes unknown at the
-    /// router: 0), availability from its state.
+    /// from each member's live template set — announced, then refreshed
+    /// by every heartbeat that carries one, so registrations and
+    /// retirements steer routing within a beat (bytes unknown at the
+    /// router: 0). Availability comes from the member's state.
     fn route_ctx_locked(&self, ms: &Membership, template: &str) -> RouteCtx {
         RouteCtx {
             residency: ms
@@ -602,11 +604,20 @@ impl Router {
             return (400, error_obj("missing \"name\" field"));
         };
         let snapshot = parsed.get("snapshot").and_then(proto::snapshot_from_json);
+        // live residency refresh (absent field = legacy beat: keep the
+        // announce-time template set)
+        let templates = parsed.get("templates").and_then(|t| {
+            t.as_arr().map(|v| {
+                v.iter()
+                    .filter_map(|t| t.as_str().map(String::from))
+                    .collect::<Vec<String>>()
+            })
+        });
         if self
             .membership
             .lock()
             .unwrap()
-            .heartbeat(name, snapshot, Instant::now())
+            .heartbeat(name, snapshot, templates, Instant::now())
         {
             (200, Json::obj(vec![("ok", Json::Bool(true))]))
         } else {

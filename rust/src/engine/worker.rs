@@ -15,13 +15,16 @@
 //! - `TeaCache`    full-image recompute with timestep-gated step skipping,
 //!                 static batching.
 
+use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
+use xla::PjRtBuffer;
 
+use crate::cache::device::{KvDeviceTier, KvKey};
 use crate::cache::loader::{CacheLoader, MemberGather, StagedBlock};
 use crate::cache::pipeline::{PipelinePlan, PlanCache};
 use crate::cache::store::{register_template, TemplateActivations};
@@ -199,6 +202,14 @@ pub struct WorkerShared {
     d2h_ops: AtomicU64,
     h2d_bytes: AtomicU64,
     d2h_bytes: AtomicU64,
+    kv_h2d_bytes: AtomicU64,
+    kv_dev_hits: AtomicU64,
+    kv_dev_misses: AtomicU64,
+    kv_prefetch_overlap_us: AtomicU64,
+    /// Template ids whose device-KV entries must be dropped — pushed by
+    /// cluster retirement (any thread), drained by the engine thread at
+    /// loop boundaries (the tier itself is engine-thread-confined).
+    kv_purges: Mutex<Vec<String>>,
 }
 
 impl WorkerShared {
@@ -210,15 +221,45 @@ impl WorkerShared {
         self.running_ratios.lock().unwrap().clone()
     }
 
+    /// Ask the engine thread to drop a retired template's device-KV
+    /// entries at its next loop boundary (the device tier mirrors the
+    /// host/disk tiers' retirement purge, but cannot be touched from
+    /// this thread).
+    pub fn request_kv_purge(&self, template_id: &str) {
+        self.kv_purges.lock().unwrap().push(template_id.to_string());
+    }
+
+    fn drain_kv_purges(&self) -> Vec<String> {
+        std::mem::take(&mut *self.kv_purges.lock().unwrap())
+    }
+
     pub fn transfers(&self) -> TransferTotals {
         TransferTotals {
             h2d_ops: self.h2d_ops.load(Ordering::Relaxed),
             d2h_ops: self.d2h_ops.load(Ordering::Relaxed),
             h2d_bytes: self.h2d_bytes.load(Ordering::Relaxed),
             d2h_bytes: self.d2h_bytes.load(Ordering::Relaxed),
+            kv_h2d_bytes: self.kv_h2d_bytes.load(Ordering::Relaxed),
+            kv_dev_hits: self.kv_dev_hits.load(Ordering::Relaxed),
+            kv_dev_misses: self.kv_dev_misses.load(Ordering::Relaxed),
+            kv_prefetch_overlap_us: self.kv_prefetch_overlap_us.load(Ordering::Relaxed),
         }
     }
 }
+
+/// The `(K, V)` device-buffer pair one cached block's tier entry pins.
+type KvPair = (PjRtBuffer, PjRtBuffer);
+
+/// Engine-thread-confined device KV tier.
+///
+/// SAFETY: `PjRtBuffer` handles are `Rc`-based and not `Sync`, exactly
+/// like the ones inside `ModelRuntime`. The tier is moved to the engine
+/// thread together with the `Worker` that owns it (it is empty at move
+/// time) and is never touched from any other thread afterwards —
+/// cross-thread retirement goes through `WorkerShared::request_kv_purge`
+/// and is applied by the engine thread itself.
+struct EngineKvTier(KvDeviceTier<KvPair>);
+unsafe impl Send for EngineKvTier {}
 
 /// The worker engine. Construct, then call [`Worker::start`].
 pub struct Worker {
@@ -239,8 +280,12 @@ pub struct Worker {
     /// Step-scoped scratch arena (reused across steps; see ROADMAP
     /// "Hot path" for the allocation invariant).
     scratch: StepScratch,
-    /// Memoized Algorithm-1 plans per (bucket, batch, mode).
+    /// Memoized Algorithm-1 plans per (bucket, batch, mode, warm mask).
     plans: PlanCache,
+    /// Device-resident KV working set: HBM-budgeted LRU over upload-once
+    /// staged-K/V buffers (see `cache::device`). A warm template's
+    /// cache-KV blocks run with zero per-step host→device KV transfers.
+    kv_tier: EngineKvTier,
     /// The all-cached plan of the `force_all_cached` / `naive_loading`
     /// ablations (built once).
     forced_plan: Option<Arc<PipelinePlan>>,
@@ -272,6 +317,7 @@ impl Worker {
             cfg.prepost_threads.max(1),
         ));
         let queue = WorkerQueue::with_policy(QueuePolicy::from_qos(&cfg.qos));
+        let kv_tier = EngineKvTier(KvDeviceTier::new(cfg.kv_device_budget_bytes));
         Worker {
             id,
             cfg,
@@ -287,6 +333,7 @@ impl Worker {
             registry: None,
             scratch: StepScratch::default(),
             plans: PlanCache::new(),
+            kv_tier,
             forced_plan: None,
         }
     }
@@ -356,6 +403,7 @@ impl Worker {
         let mut preempted: Vec<Member> = Vec::new();
         loop {
             self.reap_defunct();
+            self.purge_kv_tier();
             self.admit(&mut members, &mut parked, &mut preempted)?;
             if members.is_empty() {
                 if self.stop.load(Ordering::Relaxed)
@@ -377,6 +425,15 @@ impl Worker {
             self.publish(&members);
         }
         Ok(())
+    }
+
+    /// Apply cross-thread retirement to the device KV tier: drop every
+    /// purge-requested template's entries (the engine thread is between
+    /// steps here, so nothing is pinned by a running batch).
+    fn purge_kv_tier(&mut self) {
+        for t in self.shared.drain_kv_purges() {
+            self.kv_tier.0.purge_template(&t);
+        }
     }
 
     /// Sweep the queue for cancel-marked or deadline-expired entries and
@@ -1029,8 +1086,81 @@ impl Worker {
         let b = members.len();
         let bb = self.rt.batch_bucket_for(b);
         let mode = self.cfg.cache_mode;
+        let kind = match mode {
+            CacheMode::CacheY => ArtifactKind::BlockY,
+            CacheMode::CacheKV => ArtifactKind::BlockKV,
+        };
+        let device = self.cfg.device_resident
+            && self.rt.device_chain_supported(kind, n, bb)
+            && self.rt.device_chain_supported(ArtifactKind::BlockY, l, bb);
 
-        // -- plan (Algo 1, memoized per (n, b, mode)) -------------------------
+        // cached-row id sets at this bucket (may exceed a member's own
+        // bucket; the permutation prefix property makes this safe)
+        let cached_ids: Vec<Arc<Vec<usize>>> = members
+            .iter()
+            .map(|m| {
+                if m.cached_bucket == n {
+                    Arc::clone(&m.cached_ids)
+                } else {
+                    Arc::new(m.prep.perm.cached_ids(n).to_vec())
+                }
+            })
+            .collect();
+
+        // -- device KV tier: residency probe ----------------------------------
+        // Solo batches only: the packed K/V layout interleaves members,
+        // so a multi-member buffer is batch-composition-specific and
+        // never reusable across steps.
+        let kv_tier_usable = device
+            && mode == CacheMode::CacheKV
+            && b == 1
+            && self.kv_tier.0.budget() > 0;
+        let kv_keys: Option<Vec<KvKey>> = if kv_tier_usable {
+            let tier = &mut self.kv_tier.0;
+            let template = tier.intern_template(&members[0].prep.request.template_id);
+            let ids = tier.intern_ids(&cached_ids[0]);
+            let step = members[0].step as u32;
+            Some(
+                (0..cfg.blocks)
+                    .map(|blk| KvKey {
+                        template,
+                        ids,
+                        step,
+                        block: blk as u32,
+                        bucket: bb as u32,
+                    })
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        // Per-block warmth (bit i = block i is device-resident): feeds the
+        // DP (a warm block's upload cost collapses to 0) and the loader
+        // (`skip_kv`). Blocks past 64 conservatively count as cold.
+        let warm_mask: u64 = kv_keys.as_ref().map_or(0, |keys| {
+            keys.iter()
+                .take(64)
+                .enumerate()
+                .filter(|(_, key)| self.kv_tier.0.contains(key))
+                .fold(0, |m, (i, _)| m | (1u64 << i))
+        });
+        let is_warm = |blk: usize| blk < 64 && (warm_mask >> blk) & 1 == 1;
+        // Pin warm entries for the whole step: once a block's load is
+        // submitted with `skip_kv`, a later cold block's insert must not
+        // evict the entry that promised to serve it. Unpinned after the
+        // latent update (an engine error aborts the worker, so pins
+        // cannot leak into a later step).
+        let mut step_pins: Vec<KvKey> = Vec::new();
+        if let Some(keys) = &kv_keys {
+            for (i, key) in keys.iter().enumerate().take(64) {
+                if is_warm(i) {
+                    self.kv_tier.0.pin(key);
+                    step_pins.push(*key);
+                }
+            }
+        }
+
+        // -- plan (Algo 1, memoized per (n, b, mode, warm mask)) --------------
         let plan: Arc<PipelinePlan> = if self.cfg.force_all_cached || self.cfg.naive_loading {
             if self.forced_plan.as_ref().map(|p| p.use_cache.len()) != Some(cfg.blocks) {
                 self.forced_plan = Some(Arc::new(PipelinePlan {
@@ -1045,22 +1175,10 @@ impl Worker {
                 CacheMode::CacheY => 0u8,
                 CacheMode::CacheKV => 1u8,
             };
-            self.plans
-                .plan_for(n, b, mode_tag, || lat.step_costs(&cfg, n, b, mode))
-        };
-
-        // cached-row id sets at this bucket (may exceed a member's own
-        // bucket; the permutation prefix property makes this safe)
-        let cached_ids: Vec<Arc<Vec<usize>>> = members
-            .iter()
-            .map(|m| {
-                if m.cached_bucket == n {
-                    Arc::clone(&m.cached_ids)
-                } else {
-                    Arc::new(m.prep.perm.cached_ids(n).to_vec())
-                }
+            self.plans.plan_for(n, b, mode_tag, warm_mask, || {
+                lat.step_costs_with(&cfg, n, b, mode, warm_mask)
             })
-            .collect();
+        };
 
         // -- submit loads (pipeline order) ------------------------------------
         let mut staged_rx: Vec<Option<Receiver<StagedBlock>>> = (0..cfg.blocks).map(|_| None).collect();
@@ -1089,33 +1207,15 @@ impl Worker {
             for blk in 0..cfg.blocks {
                 if plan.use_cache[blk] {
                     let g = gathers(&|i| steps[i]);
-                    staged_rx[blk] = Some(self.loader.submit(blk, g, mode, bb));
+                    // device-resident K/V: gather (and pace) only the Y rows
+                    let skip_kv = kv_keys.is_some() && is_warm(blk);
+                    staged_rx[blk] = Some(self.loader.submit(blk, g, mode, bb, skip_kv));
                 }
             }
         }
 
         // -- hidden state: one full (L, H) buffer per member (reused) ---------
         self.ensure_hidden(members);
-
-        // wait for the copy stream (a bubble iff the DP mispredicts)
-        let mut wait_staged = |blk: usize| -> StagedBlock {
-            match staged_now[blk].take() {
-                Some(s) => s,
-                None => staged_rx[blk]
-                    .take()
-                    .expect("staged rx")
-                    .recv()
-                    .expect("loader alive"),
-            }
-        };
-
-        let kind = match mode {
-            CacheMode::CacheY => ArtifactKind::BlockY,
-            CacheMode::CacheKV => ArtifactKind::BlockKV,
-        };
-        let device = self.cfg.device_resident
-            && self.rt.device_chain_supported(kind, n, bb)
-            && self.rt.device_chain_supported(ArtifactKind::BlockY, l, bb);
 
         // -- block runs: contiguous same-mode chains --------------------------
         let mut blk = 0;
@@ -1133,15 +1233,50 @@ impl Worker {
                         .rt
                         .upload_activations(&self.scratch.packed[..bb * n * h], &[bb, n, h])?;
                     let mut last_y: Option<Vec<Vec<f32>>> = None;
+                    // block k+1's K/V, acquired by the second copy stream
+                    // while block k computes (tier hit: pinned resident
+                    // buffer; miss: uploaded here, hidden under compute)
+                    let mut prefetched: Option<(usize, Rc<KvPair>)> = None;
                     for k in blk..end {
-                        let staged = wait_staged(k);
+                        let mut staged = take_staged(&mut staged_now, &mut staged_rx, k);
                         x_buf = match mode {
                             CacheMode::CacheY => self.rt.run_block_y_dev(k, n, bb, &x_buf)?,
                             CacheMode::CacheKV => {
-                                let (kc, vc) = staged.kv_packed.as_ref().expect("kv staged");
-                                let kb = self.rt.upload_activations(kc, &[bb, l - n, h])?;
-                                let vb = self.rt.upload_activations(vc, &[bb, l - n, h])?;
-                                self.rt.run_block_kv_dev(k, n, bb, &x_buf, &kb, &vb)?
+                                let kv = match prefetched.take() {
+                                    Some((pk, kv)) if pk == k => kv,
+                                    _ => Self::acquire_kv(
+                                        &self.rt,
+                                        &mut self.kv_tier.0,
+                                        &kv_keys,
+                                        k,
+                                        &mut staged,
+                                        &[bb, l - n, h],
+                                        &mut step_pins,
+                                    )?,
+                                };
+                                // second copy stream: resolve block k+1's
+                                // K/V now so its upload (if any) overlaps
+                                // this block's compute
+                                if k + 1 < end {
+                                    if let Some(mut s) =
+                                        try_staged(&mut staged_now, &mut staged_rx, k + 1)
+                                    {
+                                        let t0 = Instant::now();
+                                        let next = Self::acquire_kv(
+                                            &self.rt,
+                                            &mut self.kv_tier.0,
+                                            &kv_keys,
+                                            k + 1,
+                                            &mut s,
+                                            &[bb, l - n, h],
+                                            &mut step_pins,
+                                        )?;
+                                        self.rt.note_kv_prefetch_overlap(t0.elapsed());
+                                        prefetched = Some((k + 1, next));
+                                        staged_now[k + 1] = Some(s);
+                                    }
+                                }
+                                self.rt.run_block_kv_dev(k, n, bb, &x_buf, &kv.0, &kv.1)?
                             }
                         };
                         last_y = Some(staged.y);
@@ -1171,7 +1306,7 @@ impl Worker {
                     // host-round-trip reference: per-block upload/download
                     // with the full scatter/gather of the seed loop
                     for k in blk..end {
-                        let staged = wait_staged(k);
+                        let staged = take_staged(&mut staged_now, &mut staged_rx, k);
                         self.scratch.pack_compute_rows(members, n, h, bb);
                         let out = match mode {
                             CacheMode::CacheY => {
@@ -1225,6 +1360,11 @@ impl Worker {
             blk = end;
         }
 
+        // release this step's tier pins (entries stay resident, evictable)
+        for key in &step_pins {
+            self.kv_tier.0.unpin(key);
+        }
+
         // -- latent update ----------------------------------------------------
         for (i, m) in members.iter_mut().enumerate() {
             let Member { prep, acts, latent, step, steps_computed, .. } = m;
@@ -1240,6 +1380,45 @@ impl Worker {
             );
         }
         Ok(())
+    }
+
+    /// Serve one cached block's K/V for the device loop: from the device
+    /// tier when resident (a hit — **no upload at all**), else upload the
+    /// staged pair once and offer it to the tier. Entries inserted here
+    /// are pinned (recorded in `step_pins`) so a later block's insert
+    /// cannot evict them before the step's pins are released.
+    fn acquire_kv(
+        rt: &ModelRuntime,
+        tier: &mut KvDeviceTier<KvPair>,
+        keys: &Option<Vec<KvKey>>,
+        blk: usize,
+        staged: &mut StagedBlock,
+        dims: &[usize],
+        step_pins: &mut Vec<KvKey>,
+    ) -> Result<Rc<KvPair>> {
+        let key = keys.as_ref().map(|ks| ks[blk]);
+        if let Some(key) = &key {
+            if let Some(kv) = tier.get(key) {
+                rt.note_kv_dev_hit();
+                return Ok(kv);
+            }
+        }
+        rt.note_kv_dev_miss();
+        let (kc, vc) = staged.kv_packed.take().expect("kv staged for non-resident block");
+        let bytes = (kc.len() + vc.len()) * 4;
+        let (kb, vb) = rt.upload_kv_pair(&kc, &vc, dims)?;
+        match key {
+            Some(key) => {
+                let (kv, stored) = tier.insert(key, (kb, vb), bytes);
+                if stored {
+                    tier.pin(&key);
+                    step_pins.push(key);
+                }
+                Ok(kv)
+            }
+            // multi-member batch (or tier disabled): one-shot buffers
+            None => Ok(Rc::new((kb, vb))),
+        }
     }
 
     // -- completion -----------------------------------------------------------
@@ -1326,7 +1505,43 @@ impl Worker {
         self.shared.d2h_ops.store(t.d2h_ops, Ordering::Relaxed);
         self.shared.h2d_bytes.store(t.h2d_bytes, Ordering::Relaxed);
         self.shared.d2h_bytes.store(t.d2h_bytes, Ordering::Relaxed);
+        self.shared.kv_h2d_bytes.store(t.kv_h2d_bytes, Ordering::Relaxed);
+        self.shared.kv_dev_hits.store(t.kv_dev_hits, Ordering::Relaxed);
+        self.shared.kv_dev_misses.store(t.kv_dev_misses, Ordering::Relaxed);
+        self.shared
+            .kv_prefetch_overlap_us
+            .store(t.kv_prefetch_overlap_us, Ordering::Relaxed);
     }
+}
+
+/// Wait for the copy stream to deliver block `blk` (a bubble iff the DP
+/// mispredicts).
+fn take_staged(
+    now: &mut [Option<StagedBlock>],
+    rx: &mut [Option<Receiver<StagedBlock>>],
+    blk: usize,
+) -> StagedBlock {
+    match now[blk].take() {
+        Some(s) => s,
+        None => rx[blk].take().expect("staged rx").recv().expect("loader alive"),
+    }
+}
+
+/// Non-blocking probe used by the prefetch stream: block `blk`'s staged
+/// data if the copy stream has already delivered it.
+fn try_staged(
+    now: &mut [Option<StagedBlock>],
+    rx: &mut [Option<Receiver<StagedBlock>>],
+    blk: usize,
+) -> Option<StagedBlock> {
+    if now[blk].is_some() {
+        return now[blk].take();
+    }
+    let ready = rx[blk].as_ref().and_then(|r| r.try_recv().ok());
+    if ready.is_some() {
+        rx[blk] = None;
+    }
+    ready
 }
 
 fn gather_rows(src: &[f32], h: usize, ids: &[usize], out: &mut [f32]) {

@@ -59,6 +59,7 @@ fn print_help() {
          \x20                --dist production --templates 4 --class-mix 0.2,0.5,0.3\n\
          \x20                [--popularity quadratic|zipf:<s>] [--shape steady|diurnal:<p>:<d>|bursts:<p>:<w>:<a>]\n\
          \x20                [--no-qos] [--aging-ms 2000] [--max-pending 4096] [--host-step-loop]\n\
+         \x20                [--no-kv-device-tier] [--kv-device-budget <bytes>]\n\
          \x20 calibrate      --model fluxm [--reps 20]\n\
          \x20 workload-stats --dist production|public|viton\n\
          \x20 register       --model sdxlm --templates 4\n\
@@ -113,6 +114,13 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     // device-resident step loop is the default; --host-step-loop runs the
     // per-block host-round-trip reference (golden baseline / debugging)
     cfg.device_resident = !args.bool("host-step-loop");
+    // device KV working set: on by default with an HBM budget;
+    // --no-kv-device-tier re-uploads staged K/V every step (the pre-tier
+    // behavior, for ablations and the overhead bench baseline)
+    cfg.kv_device_budget_bytes = args.usize("kv-device-budget", cfg.kv_device_budget_bytes);
+    if args.bool("no-kv-device-tier") {
+        cfg.kv_device_budget_bytes = 0;
+    }
     // QoS: on by default; --no-qos reverts to the FIFO baseline
     if args.bool("no-qos") {
         cfg.qos.enabled = false;

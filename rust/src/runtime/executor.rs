@@ -69,13 +69,26 @@ impl ProgramTable {
 
 /// Cumulative host<->device activation traffic of one runtime. Weights
 /// (uploaded once at load) are excluded: this counts exactly the per-step
-/// coordinator traffic the device-resident loop minimizes.
+/// coordinator traffic the device-resident loop minimizes. The `kv_*`
+/// fields break out the device KV tier: staged-K/V upload bytes (a
+/// subset of `h2d_bytes`), tier hits/misses, and how much upload time
+/// the second copy stream hid under compute (`kv_prefetch_overlap_us`,
+/// integer micros so the struct stays `Eq`).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TransferTotals {
     pub h2d_ops: u64,
     pub d2h_ops: u64,
     pub h2d_bytes: u64,
     pub d2h_bytes: u64,
+    /// Staged-K/V bytes uploaded host→device (0 in warm steady state).
+    pub kv_h2d_bytes: u64,
+    /// Cache-KV blocks served from the device KV tier (no upload).
+    pub kv_dev_hits: u64,
+    /// Cache-KV blocks whose K/V had to be uploaded this step.
+    pub kv_dev_misses: u64,
+    /// Upload time hidden by prefetching block i+1's K/V while block i
+    /// computes (microseconds).
+    pub kv_prefetch_overlap_us: u64,
 }
 
 #[derive(Default)]
@@ -84,6 +97,10 @@ struct TransferCounters {
     d2h_ops: Cell<u64>,
     h2d_bytes: Cell<u64>,
     d2h_bytes: Cell<u64>,
+    kv_h2d_bytes: Cell<u64>,
+    kv_dev_hits: Cell<u64>,
+    kv_dev_misses: Cell<u64>,
+    kv_prefetch_overlap_us: Cell<u64>,
 }
 
 impl TransferCounters {
@@ -97,12 +114,20 @@ impl TransferCounters {
         self.d2h_bytes.set(self.d2h_bytes.get() + 4 * floats as u64);
     }
 
+    fn count_kv_h2d(&self, floats: usize) {
+        self.kv_h2d_bytes.set(self.kv_h2d_bytes.get() + 4 * floats as u64);
+    }
+
     fn totals(&self) -> TransferTotals {
         TransferTotals {
             h2d_ops: self.h2d_ops.get(),
             d2h_ops: self.d2h_ops.get(),
             h2d_bytes: self.h2d_bytes.get(),
             d2h_bytes: self.d2h_bytes.get(),
+            kv_h2d_bytes: self.kv_h2d_bytes.get(),
+            kv_dev_hits: self.kv_dev_hits.get(),
+            kv_dev_misses: self.kv_dev_misses.get(),
+            kv_prefetch_overlap_us: self.kv_prefetch_overlap_us.get(),
         }
     }
 }
@@ -245,6 +270,38 @@ impl ModelRuntime {
         self.client.upload(data, dims)
     }
 
+    /// Upload one block's staged K/V pair (counted both as ordinary H2D
+    /// traffic and under the KV-specific byte counter — a warm device
+    /// KV tier drives `kv_h2d_bytes` to zero in steady state).
+    pub fn upload_kv_pair(
+        &self,
+        k: &[f32],
+        v: &[f32],
+        dims: &[usize],
+    ) -> Result<(PjRtBuffer, PjRtBuffer)> {
+        self.transfers.count_kv_h2d(k.len() + v.len());
+        let kb = self.upload_activations(k, dims)?;
+        let vb = self.upload_activations(v, dims)?;
+        Ok((kb, vb))
+    }
+
+    /// Record a device-KV-tier hit (block served with no upload).
+    pub fn note_kv_dev_hit(&self) {
+        self.transfers.kv_dev_hits.set(self.transfers.kv_dev_hits.get() + 1);
+    }
+
+    /// Record a device-KV-tier miss (staged K/V had to be uploaded).
+    pub fn note_kv_dev_miss(&self) {
+        self.transfers.kv_dev_misses.set(self.transfers.kv_dev_misses.get() + 1);
+    }
+
+    /// Credit upload time hidden under the previous block's compute by
+    /// the second copy stream.
+    pub fn note_kv_prefetch_overlap(&self, d: std::time::Duration) {
+        let c = &self.transfers.kv_prefetch_overlap_us;
+        c.set(c.get() + d.as_micros() as u64);
+    }
+
     /// Root-aware readback of a block output into `out` (counted).
     fn read_block_output(&self, prog: &Program, buf: &PjRtBuffer) -> Result<Vec<f32>> {
         let v = match prog.root {
@@ -342,9 +399,9 @@ impl ModelRuntime {
     }
 
     /// Device-resident cache-KV block: `x` chains from the previous
-    /// block; the staged K/V buffers are uploaded by the caller (the one
-    /// per-cached-block transfer the loop still pays — see ROADMAP "Hot
-    /// path" open items).
+    /// block; `k_cache`/`v_cache` are pre-resident device buffers —
+    /// either pinned in the device KV tier (warm: no upload at all) or
+    /// uploaded once by the engine's prefetch stream on a miss.
     pub fn run_block_kv_dev(
         &self,
         block_idx: usize,

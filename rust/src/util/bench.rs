@@ -205,6 +205,131 @@ pub fn measure_step_overhead(
     }))
 }
 
+/// Device-KV-tier warm/cold transfer split measured on a repeated solo
+/// request (same prompt seed -> same mask -> same tier keys): request 1
+/// is the cold pass that populates the tier, requests 2.. replay it
+/// warm. Shared by `examples/overhead_bench.rs` and its CI regression
+/// guard.
+#[derive(Debug, Clone, Copy)]
+pub struct KvTierOverhead {
+    /// Staged-K/V bytes uploaded per step during the cold pass.
+    pub cold_kv_bytes_per_step: f64,
+    /// Staged-K/V bytes uploaded per step once the template is warm
+    /// (the tentpole invariant: 0 in steady state).
+    pub warm_kv_bytes_per_step: f64,
+    pub cold_steps: usize,
+    pub warm_steps: usize,
+    /// Device-tier hits/misses over the whole run.
+    pub dev_hits: u64,
+    pub dev_misses: u64,
+    /// Misses during the warm passes alone (0 when the budget holds the
+    /// whole trace).
+    pub warm_misses: u64,
+    /// hits / (hits + misses) over the whole run; 0 when the tier never
+    /// engaged (no chainable artifacts, tier disabled).
+    pub hit_rate: f64,
+}
+
+/// Measure the device KV tier's warm/cold split: a 1-worker static
+/// InstGenIE cluster in `CacheKV` mode with the device-resident loop
+/// serves `requests` *identical* solo edits sequentially, and the
+/// KV transfer counters are snapshotted after the first (cold) request
+/// and after the rest (warm). `Ok(None)` when artifacts are not built.
+pub fn measure_kv_tier_overhead(
+    model: &str,
+    requests: usize,
+    ratio: f64,
+) -> anyhow::Result<Option<KvTierOverhead>> {
+    use crate::cache::LatencyModel;
+    use crate::cluster::{Cluster, ClusterOpts};
+    use crate::config::{BatchingPolicy, CacheMode, EngineConfig, SystemKind};
+    use crate::engine::request::EditRequestBuilder;
+    use std::time::Duration;
+
+    let Ok(manifest) = crate::runtime::Manifest::load("artifacts") else {
+        return Ok(None);
+    };
+    let Ok(mcfg) = manifest.model(model).map(|m| m.config.clone()) else {
+        return Ok(None);
+    };
+    let lat = LatencyModel::load_or_nominal("artifacts", model);
+    let mut engine = EngineConfig::for_system(SystemKind::InstGenIE);
+    engine.batching = BatchingPolicy::Static;
+    engine.cache_mode = CacheMode::CacheKV;
+    engine.device_resident = true;
+    engine.prepost_cpu_us = 100;
+    let sched = crate::scheduler::by_name(
+        "round-robin",
+        &mcfg,
+        &lat,
+        engine.cache_mode,
+        engine.max_batch,
+    )
+    .expect("scheduler");
+    let cluster = Cluster::launch(
+        ClusterOpts {
+            workers: 1,
+            engine,
+            model: model.into(),
+            artifact_dir: "artifacts".into(),
+            templates: vec!["tpl-kv".into()],
+            lat_model: lat,
+            warmup: true,
+        },
+        sched,
+    )?;
+
+    let run_one = |id: u64| -> anyhow::Result<()> {
+        let req = EditRequestBuilder::new(id)
+            .template("tpl-kv")
+            .prompt_seed(7) // identical mask -> identical tier keys
+            .synth_mask(mcfg.latent_hw, ratio)
+            .map_err(anyhow::Error::new)?
+            .build()
+            .map_err(anyhow::Error::new)?;
+        cluster
+            .submit_checked(req)
+            .map_err(anyhow::Error::new)?
+            .wait(Duration::from_secs(600))
+            .map_err(anyhow::Error::new)?;
+        // the publish lands just after the final step resolves the ticket
+        std::thread::sleep(Duration::from_millis(200));
+        Ok(())
+    };
+    let snap = |c: &Cluster| {
+        let s = &c.worker_snapshots()[0];
+        (s.transfers, s.steps_executed)
+    };
+
+    let (t0, s0) = snap(&cluster);
+    run_one(1)?;
+    let (t1, s1) = snap(&cluster);
+    for i in 1..requests.max(2) {
+        run_one(1 + i as u64)?;
+    }
+    let (t2, s2) = snap(&cluster);
+    cluster.shutdown()?;
+
+    let cold_steps = (s1 - s0).max(1);
+    let warm_steps = (s2 - s1).max(1);
+    let hits = t2.kv_dev_hits - t0.kv_dev_hits;
+    let misses = t2.kv_dev_misses - t0.kv_dev_misses;
+    Ok(Some(KvTierOverhead {
+        cold_kv_bytes_per_step: (t1.kv_h2d_bytes - t0.kv_h2d_bytes) as f64 / cold_steps as f64,
+        warm_kv_bytes_per_step: (t2.kv_h2d_bytes - t1.kv_h2d_bytes) as f64 / warm_steps as f64,
+        cold_steps,
+        warm_steps,
+        dev_hits: hits,
+        dev_misses: misses,
+        warm_misses: t2.kv_dev_misses - t1.kv_dev_misses,
+        hit_rate: if hits + misses > 0 {
+            hits as f64 / (hits + misses) as f64
+        } else {
+            0.0
+        },
+    }))
+}
+
 /// Format seconds adaptively (ns/µs/ms/s).
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-6 {
