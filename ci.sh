@@ -60,6 +60,18 @@ else
   echo "ci.sh: artifacts/ absent; skipping dist bench smoke"
 fi
 
+# Session-plane smoke: multi-round interactive sessions over the
+# session-affinity scheduler — rounds/sec, warm-vs-cold round split,
+# affinity hit rate, written to BENCH_sessions.json. The bench fails —
+# failing this gate — if a warm steady-state round (identical mask as
+# the previous round) performs any KV upload bytes, or if a follow-up
+# round leaves its session owner while all workers are healthy.
+if [[ -d artifacts ]]; then
+  run cargo run --release --example session_bench -- 6 4 2
+else
+  echo "ci.sh: artifacts/ absent; skipping session bench smoke"
+fi
+
 # Coordinator-overhead smoke: per-step transfer counts + per-step
 # overhead (measured minus pipeline-ideal), host reference vs the
 # device-resident step loop, plus the device KV tier's warm/cold upload

@@ -1,0 +1,285 @@
+//! Session serving bench smoke: replay multi-round interactive editing
+//! sessions through the session plane on a `session-affinity` cluster
+//! and write `BENCH_sessions.json` — rounds/sec, per-round p50/p99, the
+//! warm-vs-cold round split, and the affinity hit rate (fraction of
+//! follow-up rounds landing on the session owner's worker). A second
+//! phase is the regression gate: a zero-drift session on a 1-worker
+//! `CacheKV` cluster must perform **zero KV upload bytes** on its warm
+//! steady-state rounds (the delta-mask reuse invariant) — the bench
+//! fails otherwise. `ci.sh` runs this after the qos bench so every PR
+//! leaves a comparable session-plane perf record.
+//!
+//! Run: `cargo run --release --example session_bench -- [sessions] [rounds] [workers]`
+
+use std::time::Duration;
+
+use instgenie::cache::LatencyModel;
+use instgenie::cluster::{Cluster, ClusterOpts};
+use instgenie::config::{CacheMode, EngineConfig, SystemKind};
+use instgenie::qos::Priority;
+use instgenie::runtime::Manifest;
+use instgenie::scheduler;
+use instgenie::util::json::Json;
+use instgenie::util::stats::Summary;
+use instgenie::workload::{MaskDist, SessionGen, TraceEvent};
+
+const TEMPLATES: usize = 2;
+const MASK_DRIFT: f64 = 0.25;
+
+fn launch(
+    model: &str,
+    lat: &LatencyModel,
+    workers: usize,
+    templates: Vec<String>,
+    sched_name: &str,
+) -> anyhow::Result<Cluster> {
+    let mut engine = EngineConfig::for_system(SystemKind::InstGenIE);
+    engine.prepost_cpu_us = 200;
+    engine.cache_mode = CacheMode::CacheKV;
+    let manifest = Manifest::load("artifacts")?;
+    let mcfg = manifest.model(model)?.config.clone();
+    let sched = scheduler::by_name(sched_name, &mcfg, lat, engine.cache_mode, engine.max_batch)
+        .expect("scheduler");
+    Cluster::launch(
+        ClusterOpts {
+            workers,
+            engine,
+            model: model.to_string(),
+            artifact_dir: "artifacts".into(),
+            templates,
+            lat_model: lat.clone(),
+            warmup: true,
+        },
+        sched,
+    )
+}
+
+fn summary_json(xs: &[f64]) -> Json {
+    if xs.is_empty() {
+        return Json::obj(vec![("count", Json::num(0.0))]);
+    }
+    let s = Summary::of(xs);
+    Json::obj(vec![
+        ("count", Json::num(xs.len() as f64)),
+        ("mean", Json::num(s.mean)),
+        ("p50", Json::num(s.p50)),
+        ("p99", Json::num(s.p99)),
+    ])
+}
+
+struct SessionOutcome {
+    rounds_total: usize,
+    completed: usize,
+    makespan: f64,
+    all: Vec<f64>,
+    warm: Vec<f64>,
+    cold: Vec<f64>,
+    affinity_opportunities: usize,
+    affinity_hits: usize,
+}
+
+/// Phase 1: drifting sessions over a `session-affinity` cluster.
+fn run_sessions(
+    model: &str,
+    lat: &LatencyModel,
+    sessions: usize,
+    rounds: usize,
+    workers: usize,
+) -> anyhow::Result<SessionOutcome> {
+    let gen = SessionGen::new(sessions, rounds, MASK_DRIFT, MaskDist::Production, TEMPLATES, 42);
+    let scripts = gen.generate();
+    let cluster = launch(model, lat, workers, gen.template_ids(), "session-affinity")?;
+
+    let mut out = SessionOutcome {
+        rounds_total: 0,
+        completed: 0,
+        makespan: 0.0,
+        all: Vec::new(),
+        warm: Vec::new(),
+        cold: Vec::new(),
+        affinity_opportunities: 0,
+        affinity_hits: 0,
+    };
+    let mut next_id = 1u64;
+    let t0 = std::time::Instant::now();
+    for script in &scripts {
+        let sid = cluster.open_session(&script.template).map_err(anyhow::Error::new)?;
+        let mut prev_worker: Option<usize> = None;
+        for round in &script.rounds {
+            out.rounds_total += 1;
+            let ev = TraceEvent {
+                id: next_id,
+                at: 0.0,
+                template: script.template.clone(),
+                mask_ratio: round.mask_ratio,
+                prompt_seed: round.prompt_seed,
+                priority: Priority::Interactive,
+                deadline_ms: None,
+            };
+            next_id += 1;
+            let (ticket, plan) = cluster
+                .submit_session_round(sid, cluster.event_request(&ev))
+                .map_err(anyhow::Error::new)?;
+            if let Some(w) = prev_worker {
+                out.affinity_opportunities += 1;
+                if ticket.worker() == w {
+                    out.affinity_hits += 1;
+                }
+            }
+            prev_worker = Some(ticket.worker());
+            let resp = ticket.wait(Duration::from_secs(600)).map_err(anyhow::Error::new)?;
+            out.completed += 1;
+            out.all.push(resp.timing.e2e);
+            if plan.warm {
+                out.warm.push(resp.timing.e2e);
+            } else {
+                out.cold.push(resp.timing.e2e);
+            }
+        }
+        cluster.close_session(sid, Duration::from_secs(30)).map_err(anyhow::Error::new)?;
+    }
+    out.makespan = t0.elapsed().as_secs_f64();
+    cluster.shutdown()?;
+
+    // in-process workers never die or drain here, so sticky routing must
+    // hold every follow-up round on its session owner
+    anyhow::ensure!(
+        out.affinity_hits == out.affinity_opportunities,
+        "affinity miss: {}/{} follow-up rounds left the session owner",
+        out.affinity_opportunities - out.affinity_hits,
+        out.affinity_opportunities,
+    );
+    Ok(out)
+}
+
+/// Phase 2 — the regression gate: a zero-drift session re-submits the
+/// identical mask every round, so every round after the first is warm
+/// and must move **zero** KV bytes host->device.
+fn steady_state_guard(model: &str, lat: &LatencyModel, rounds: usize) -> anyhow::Result<Json> {
+    let cluster = launch(model, lat, 1, vec!["tpl-0".into()], "session-affinity")?;
+    let sid = cluster.open_session("tpl-0").map_err(anyhow::Error::new)?;
+    let run_round = |id: u64| -> anyhow::Result<bool> {
+        let ev = TraceEvent {
+            id,
+            at: 0.0,
+            template: "tpl-0".into(),
+            mask_ratio: 0.3,
+            prompt_seed: 7, // identical mask every round -> warm steady state
+            priority: Priority::Interactive,
+            deadline_ms: None,
+        };
+        let (ticket, plan) = cluster
+            .submit_session_round(sid, cluster.event_request(&ev))
+            .map_err(anyhow::Error::new)?;
+        ticket.wait(Duration::from_secs(600)).map_err(anyhow::Error::new)?;
+        // the transfer-counter publish lands just after the final step
+        // resolves the ticket
+        std::thread::sleep(Duration::from_millis(200));
+        Ok(plan.warm)
+    };
+
+    let kv = |c: &Cluster| c.worker_snapshots()[0].transfers.kv_h2d_bytes;
+    let rounds = rounds.max(2);
+    let base = kv(&cluster);
+    let first_warm = run_round(1)?;
+    anyhow::ensure!(!first_warm, "round 1 has no prior mask and must be cold");
+    let after_cold = kv(&cluster);
+    for i in 2..=rounds as u64 {
+        let warm = run_round(i)?;
+        anyhow::ensure!(warm, "round {i} repeats round 1's mask and must be warm");
+    }
+    let after_warm = kv(&cluster);
+    cluster.close_session(sid, Duration::from_secs(30)).map_err(anyhow::Error::new)?;
+    cluster.shutdown()?;
+
+    let warm_delta = after_warm - after_cold;
+    println!(
+        "-- steady-state guard: cold round uploaded {} KV bytes, {} warm rounds uploaded {}",
+        after_cold - base,
+        rounds - 1,
+        warm_delta,
+    );
+    anyhow::ensure!(
+        warm_delta == 0,
+        "warm steady-state rounds must perform zero KV uploads, saw {warm_delta} bytes"
+    );
+    Ok(Json::obj(vec![
+        ("rounds", Json::num(rounds as f64)),
+        ("cold_kv_h2d_bytes", Json::num((after_cold - base) as f64)),
+        ("warm_kv_h2d_bytes", Json::num(warm_delta as f64)),
+    ]))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sessions: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(6);
+    let rounds: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(4);
+    let workers: usize = args.get(2).and_then(|a| a.parse().ok()).unwrap_or(2);
+
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("[session_bench] no artifacts; skipping (run `make artifacts`)");
+        return Ok(());
+    };
+    let model = if manifest.models.contains_key("sd21m") {
+        "sd21m".to_string()
+    } else {
+        match manifest.models.keys().next() {
+            Some(m) => m.clone(),
+            None => {
+                eprintln!("[session_bench] empty manifest; skipping");
+                return Ok(());
+            }
+        }
+    };
+    let lat = LatencyModel::load_or_nominal("artifacts", &model);
+
+    println!(
+        "== session bench smoke: model={model} sessions={sessions} rounds={rounds} \
+         workers={workers} drift={MASK_DRIFT} =="
+    );
+    let out = run_sessions(&model, &lat, sessions, rounds, workers)?;
+    let rounds_per_sec = out.completed as f64 / out.makespan.max(1e-9);
+    println!(
+        "-- {} rounds ({} warm / {} cold) in {:.2}s = {rounds_per_sec:.2} rounds/s, \
+         affinity {}/{}",
+        out.completed,
+        out.warm.len(),
+        out.cold.len(),
+        out.makespan,
+        out.affinity_hits,
+        out.affinity_opportunities,
+    );
+    let guard = steady_state_guard(&model, &lat, rounds)?;
+
+    let hit_rate = if out.affinity_opportunities > 0 {
+        out.affinity_hits as f64 / out.affinity_opportunities as f64
+    } else {
+        1.0
+    };
+    let json = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("workers", Json::num(workers as f64)),
+        ("sessions", Json::num(sessions as f64)),
+        ("rounds_per_session", Json::num(rounds as f64)),
+        ("mask_drift", Json::num(MASK_DRIFT)),
+        ("rounds_total", Json::num(out.rounds_total as f64)),
+        ("completed", Json::num(out.completed as f64)),
+        ("makespan", Json::num(out.makespan)),
+        ("rounds_per_sec", Json::num(rounds_per_sec)),
+        ("e2e", summary_json(&out.all)),
+        ("warm", summary_json(&out.warm)),
+        ("cold", summary_json(&out.cold)),
+        (
+            "affinity",
+            Json::obj(vec![
+                ("opportunities", Json::num(out.affinity_opportunities as f64)),
+                ("hits", Json::num(out.affinity_hits as f64)),
+                ("hit_rate", Json::num(hit_rate)),
+            ]),
+        ),
+        ("steady_state_guard", guard),
+    ]);
+    std::fs::write("BENCH_sessions.json", json.to_string())?;
+    println!("[session_bench] wrote BENCH_sessions.json");
+    Ok(())
+}

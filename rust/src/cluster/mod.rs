@@ -33,6 +33,16 @@
 //! member at a step boundary when an `Interactive` request waits, and
 //! [`Cluster::cancel`] reaches parked/preempted requests via cancel marks
 //! ([`CancelOutcome::Cancelling`]).
+//!
+//! Sessions (`session`): [`Cluster::open_session`] pins a template under
+//! a synthetic request id for a user iterating on one edit;
+//! [`Cluster::submit_session_round`] stamps the round with the session id
+//! and its sticky-affinity owner ([`RouteCtx::session_owner`]), so the
+//! `session-affinity` policy keeps warm rounds on the worker whose tiers
+//! already hold the round's KV keys. The collector feeds round
+//! completions back into the [`SessionRegistry`];
+//! [`Cluster::close_session`] and the idle sweep drain in-flight rounds
+//! and release the pin (purging tiers when that drains a retirement).
 
 pub mod lifecycle;
 
@@ -53,6 +63,7 @@ use crate::engine::worker::{Worker, WorkerShared, WorkerSnapshot};
 use crate::qos::{Admission, AdmissionController, ClassDepth, CLASS_COUNT};
 use crate::runtime::ModelRuntime;
 use crate::scheduler::{Outstanding, RouteCtx, Scheduler};
+use crate::session::{pin_id, RoundPlan, SessionError, SessionRegistry, SessionStatus};
 use crate::templates::{
     RegisterAdmission, RetireOutcome, TemplateInfo, TemplateRegistry,
 };
@@ -92,6 +103,16 @@ pub struct TemplateStatus {
     pub residency: Vec<Residency>,
 }
 
+/// Why a session round was refused: either the session itself (unknown /
+/// closed / expired) or the usual edit admission path (template, QoS).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum RoundError {
+    #[error(transparent)]
+    Session(#[from] SessionError),
+    #[error(transparent)]
+    Edit(#[from] EditError),
+}
+
 /// A running cluster.
 pub struct Cluster {
     submitters: Vec<Submitter>,
@@ -114,6 +135,8 @@ pub struct Cluster {
     admission_gate: Mutex<()>,
     registry: Arc<RequestRegistry>,
     templates: Arc<TemplateRegistry>,
+    /// Interactive session lifecycle (sticky affinity, delta-mask reuse).
+    sessions: Arc<SessionRegistry>,
     /// Runtime for template registration traces (launch + online jobs).
     reg_rt: Arc<Mutex<ModelRuntime>>,
     /// Dedicated single-thread background lane for online registration
@@ -268,12 +291,14 @@ impl Cluster {
         let book: Arc<Mutex<Vec<Vec<Outstanding>>>> =
             Arc::new(Mutex::new(vec![Vec::new(); opts.workers]));
         let registry = RequestRegistry::new();
+        let sessions = Arc::new(SessionRegistry::default());
         let responses: Arc<Mutex<Vec<Arc<EditResponse>>>> = Arc::new(Mutex::new(Vec::new()));
         let retain_responses = Arc::new(AtomicBool::new(true));
         let collector = {
             let book = Arc::clone(&book);
             let registry = Arc::clone(&registry);
             let templates = Arc::clone(&templates);
+            let sessions = Arc::clone(&sessions);
             let tiers = tiers.clone();
             let shareds = shareds.clone();
             let queues = queues.clone();
@@ -308,6 +333,13 @@ impl Cluster {
                                 // one Arc per response, shared between the
                                 // registry (polling) and the replay log
                                 let result = result.map(Arc::new);
+                                // session rounds settle their record before
+                                // the ticket resolves (no-op otherwise)
+                                sessions.complete_round(
+                                    id,
+                                    result.is_ok(),
+                                    result.as_ref().ok().map(|r| r.timing.e2e),
+                                );
                                 let resp = result.as_ref().ok().map(Arc::clone);
                                 if registry.fulfill(id, result)
                                     && retain.load(Ordering::Relaxed)
@@ -349,6 +381,7 @@ impl Cluster {
             admission_gate: Mutex::new(()),
             registry,
             templates,
+            sessions,
             reg_rt,
             reg_pool: ThreadPool::new("tpl-reg", 1),
             cache_mode: opts.engine.cache_mode,
@@ -480,6 +513,7 @@ impl Cluster {
                 .collect(),
             template_bytes: self.templates.bytes(template_id).unwrap_or(0),
             available: Vec::new(),
+            session_owner: None,
         }
     }
 
@@ -585,6 +619,104 @@ impl Cluster {
         Ok(self.submit_routed(req, outstanding, ctx))
     }
 
+    /// The session lifecycle table (status endpoints, dist overlay).
+    pub fn sessions(&self) -> &Arc<SessionRegistry> {
+        &self.sessions
+    }
+
+    /// One worker's engine-published shared state (SSE progress streams
+    /// read per-round event buffers from here).
+    pub fn worker_shared(&self, worker: usize) -> Option<Arc<WorkerShared>> {
+        self.shareds.get(worker).cloned()
+    }
+
+    /// Open an interactive session pinned to `template_id`: the session
+    /// holds one in-flight template reference under [`pin_id`] until it
+    /// closes or idle-expires, so retirement drains behind it.
+    pub fn open_session(&self, template_id: &str) -> Result<u64, EditError> {
+        self.check_template(template_id)?;
+        let sid = self.sessions.open(template_id);
+        self.templates.acquire(pin_id(sid), template_id);
+        Ok(sid)
+    }
+
+    /// Submit one round of session `sid`. The round inherits the
+    /// session's pinned template and is stamped with the session id (so
+    /// the engine publishes progress events for it); routing sees the
+    /// session's owner through [`RouteCtx::session_owner`] and the round
+    /// is recorded against the session once placed. Admission failures
+    /// roll the round back ([`SessionRegistry::abort_round`]).
+    pub fn submit_session_round(
+        &self,
+        sid: u64,
+        mut req: EditRequest,
+    ) -> Result<(EditTicket, RoundPlan), RoundError> {
+        let status = self
+            .sessions
+            .status(sid)
+            .ok_or(SessionError::Unknown(sid))?;
+        req.template_id = status.template;
+        req.session = Some(sid);
+        self.check_template(&req.template_id).map_err(RoundError::Edit)?;
+        let plan = self.sessions.begin_round(sid, req.id, &req.mask)?;
+        let outstanding = self.outstanding_for(&req);
+        let mut ctx = self.route_ctx(&req.template_id);
+        ctx.session_owner = plan.owner;
+        let _gate = self.admission_gate.lock().unwrap();
+        if let Err(e) = self.assess_admission(&req, &outstanding, &ctx) {
+            self.sessions.abort_round(req.id);
+            return Err(e.into());
+        }
+        let rid = req.id;
+        let ticket = self.submit_routed(req, outstanding, ctx);
+        self.sessions.assign_owner(sid, rid, ticket.worker());
+        Ok((ticket, plan))
+    }
+
+    /// Status view of one session (None for unknown ids).
+    pub fn session_status(&self, sid: u64) -> Option<SessionStatus> {
+        self.sessions.status(sid)
+    }
+
+    /// Close a session: further rounds are refused immediately, in-flight
+    /// rounds drain (bounded by `drain_timeout`), then the template pin is
+    /// released — purging tiers when that drains a retirement.
+    pub fn close_session(
+        &self,
+        sid: u64,
+        drain_timeout: Duration,
+    ) -> Result<SessionStatus, SessionError> {
+        let (_template, inflight) = self.sessions.close(sid)?;
+        if inflight > 0 {
+            let deadline = Instant::now() + drain_timeout;
+            while self.sessions.inflight(sid).unwrap_or(0) > 0 && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        if let Some(t) = self.templates.release_request(pin_id(sid)) {
+            purge_tiers(&self.tiers, &self.shareds, &t);
+        }
+        Ok(self.sessions.status(sid).expect("closed session has status"))
+    }
+
+    /// Sweep idle sessions and release their template pins. Returns how
+    /// many sessions expired.
+    pub fn expire_idle_sessions(&self) -> usize {
+        self.expire_idle_sessions_at(Instant::now())
+    }
+
+    /// Idle sweep against an explicit clock (tests simulate elapsed idle
+    /// time by passing a future instant).
+    pub fn expire_idle_sessions_at(&self, now: Instant) -> usize {
+        let expired = self.sessions.expire_idle(now);
+        for (sid, _template) in &expired {
+            if let Some(t) = self.templates.release_request(pin_id(*sid)) {
+                purge_tiers(&self.tiers, &self.shareds, &t);
+            }
+        }
+        expired.len()
+    }
+
     /// Realize a trace event into a request (class + deadline included).
     pub fn event_request(&self, ev: &TraceEvent) -> EditRequest {
         let mask = ev.mask(self.model.latent_hw);
@@ -688,11 +820,20 @@ impl Cluster {
     /// transfer totals — assembled from the engine-published shared state
     /// rather than the pre-start `Worker::snapshot` handle.
     pub fn worker_snapshots(&self) -> Vec<WorkerSnapshot> {
+        // workers are session-blind: the per-worker session counts are
+        // overlaid here from the registry's ownership table
+        let load = self.sessions.worker_load(self.queues.len());
         self.queues
             .iter()
             .zip(&self.shareds)
             .enumerate()
-            .map(|(w, (q, s))| WorkerSnapshot::collect(w, q, s))
+            .map(|(w, (q, s))| {
+                let mut snap = WorkerSnapshot::collect(w, q, s);
+                let (open, rounds) = load.get(w).copied().unwrap_or((0, 0));
+                snap.sessions_open = open;
+                snap.session_rounds = rounds;
+                snap
+            })
             .collect()
     }
 

@@ -35,6 +35,9 @@ pub struct SubmitWire {
     pub prompt_seed: u64,
     pub priority: Priority,
     pub deadline_ms: Option<u64>,
+    /// Session the request is a round of (absent for plain edits; older
+    /// peers ignore the field, so the wire stays parse-tolerant).
+    pub session: Option<u64>,
 }
 
 impl SubmitWire {
@@ -47,6 +50,7 @@ impl SubmitWire {
             prompt_seed: req.prompt_seed,
             priority: req.priority,
             deadline_ms: req.deadline_ms(),
+            session: req.session,
         }
     }
 
@@ -60,6 +64,7 @@ impl SubmitWire {
         req.deadline = self
             .deadline_ms
             .map(|ms| req.arrival + Duration::from_millis(ms));
+        req.session = self.session;
         req
     }
 
@@ -77,6 +82,9 @@ impl SubmitWire {
         ];
         if let Some(ms) = self.deadline_ms {
             pairs.push(("deadline_ms", Json::num(ms as f64)));
+        }
+        if let Some(sid) = self.session {
+            pairs.push(("session", Json::num(sid as f64)));
         }
         Json::obj(pairs)
     }
@@ -99,6 +107,7 @@ impl SubmitWire {
                 .and_then(Priority::parse)
                 .unwrap_or_default(),
             deadline_ms: j.at("deadline_ms").as_f64().map(|ms| ms as u64),
+            session: j.at("session").as_f64().map(|s| s as u64),
         })
     }
 }
@@ -276,6 +285,8 @@ pub fn snapshot_to_json(s: &WorkerSnapshot) -> Json {
         ),
         ("class_depths", Json::arr(classes)),
         ("steps_executed", Json::num(s.steps_executed as f64)),
+        ("sessions_open", Json::num(s.sessions_open as f64)),
+        ("session_rounds", Json::num(s.session_rounds as f64)),
         (
             "transfers",
             Json::obj(vec![
@@ -313,6 +324,9 @@ pub fn snapshot_from_json(j: &Json) -> Option<WorkerSnapshot> {
             .unwrap_or_default(),
         class_depths,
         steps_executed: j.at("steps_executed").as_usize().unwrap_or(0),
+        // absent on older peers: default to 0 (parse-tolerant both ways)
+        sessions_open: j.at("sessions_open").as_usize().unwrap_or(0),
+        session_rounds: j.at("session_rounds").as_usize().unwrap_or(0),
         transfers: TransferTotals {
             h2d_ops: t.at("h2d_ops").as_f64().unwrap_or(0.0) as u64,
             d2h_ops: t.at("d2h_ops").as_f64().unwrap_or(0.0) as u64,
@@ -377,6 +391,7 @@ mod tests {
         let mask = MaskSpec::synth(8, 0.2, &mut rng);
         let mut req = EditRequest::new(42, "tpl-3", mask, 99);
         req.priority = Priority::Interactive;
+        req.session = Some(6);
         let wire = SubmitWire::from_request(&req);
         let text = wire.to_json().to_string();
         let back = SubmitWire::parse(&Json::parse(&text).unwrap()).unwrap();
@@ -385,6 +400,15 @@ mod tests {
         assert_eq!(rebuilt.mask, req.mask, "mask must be identical, not re-sampled");
         assert_eq!(rebuilt.prompt_seed, 99);
         assert_eq!(rebuilt.priority, Priority::Interactive);
+        assert_eq!(rebuilt.session, Some(6));
+        // sessionless submissions omit the field entirely
+        let plain = SubmitWire::from_request(&EditRequest::new(
+            1,
+            "t",
+            MaskSpec::new(vec![0], 64),
+            0,
+        ));
+        assert!(!plain.to_json().to_string().contains("session"));
         // malformed: masked id out of range
         let bad = Json::parse(
             r#"{"id":1,"template":"t","masked":[64],"tokens":64,"prompt_seed":1}"#,
@@ -456,6 +480,8 @@ mod tests {
                 ClassDepth { queued: 2, oldest_wait_secs: 1.5 },
             ],
             steps_executed: 123,
+            sessions_open: 2,
+            session_rounds: 1,
             transfers: TransferTotals {
                 h2d_ops: 4,
                 d2h_ops: 5,
@@ -473,5 +499,10 @@ mod tests {
         assert_eq!(back.class_depths[2].queued, 2);
         assert_eq!(back.transfers, snap.transfers);
         assert_eq!(back.mask_ratios, snap.mask_ratios);
+        assert_eq!((back.sessions_open, back.session_rounds), (2, 1));
+        // a snapshot from an older peer (no session fields) still parses
+        let legacy = Json::parse(r#"{"worker_id":0,"queued":1}"#).unwrap();
+        let back = snapshot_from_json(&legacy).unwrap();
+        assert_eq!((back.sessions_open, back.session_rounds), (0, 0));
     }
 }

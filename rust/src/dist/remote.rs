@@ -50,6 +50,12 @@ impl RemoteWorker {
         &self.addr
     }
 
+    /// Transport-level retries burned by this handle's RPC client
+    /// (surfaced as `rpc_retries` on `GET /v1/cluster`).
+    pub fn rpc_retries(&self) -> u64 {
+        self.client.lock().unwrap().retries()
+    }
+
     fn call(&self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json), RpcError> {
         self.client.lock().unwrap().call(method, path, body)
     }

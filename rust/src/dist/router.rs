@@ -26,6 +26,19 @@
 //!   per-request failover path;
 //! * router shutdown fails all remaining tickets with `WorkerShutdown`.
 //!
+//! ## Sessions
+//!
+//! The router hosts the same `/v1/sessions` lifecycle API as the
+//! in-process frontend, backed by its own [`SessionRegistry`]: rounds
+//! carry their session id on the wire, the scheduler sees the owner slot
+//! through [`RouteCtx::session_owner`], and a member death orphans its
+//! sessions so the next round re-homes (epoch bump) on whatever slot the
+//! fallback policy picks — failover re-submission re-homes in-flight
+//! rounds the same way. Template pinning stays per-round at the workers
+//! (the router has no template registry), and SSE progress streams are
+//! *not* proxied — they are served by the worker-local frontend that owns
+//! the engine's event buffers.
+//!
 //! [`Cluster`]: crate::cluster::Cluster
 
 use std::collections::HashMap;
@@ -43,8 +56,10 @@ use crate::engine::request::{EditError, EditRequest, EditRequestBuilder};
 use crate::qos::{Admission, AdmissionController, Priority};
 use crate::scheduler::{Outstanding, RouteCtx, Scheduler};
 use crate::server::{
-    done_body, edit_error_reply, error_obj, push_qos_pairs, serve_connection, status_pairs,
+    done_body, edit_error_reply, error_obj, push_qos_pairs, serve_connection,
+    session_error_reply, session_status_body, status_pairs,
 };
+use crate::session::{SessionError, SessionRegistry};
 use crate::util::json::Json;
 use crate::workload::TraceEvent;
 
@@ -75,6 +90,9 @@ pub struct Router {
     /// Wire payloads of non-terminal requests, kept for failover
     /// re-submission. Removed when the request resolves.
     pending: Mutex<HashMap<u64, SubmitWire>>,
+    /// Interactive sessions fronted by this router (sticky affinity over
+    /// membership slots; failover orphans → re-home).
+    sessions: SessionRegistry,
     next_id: AtomicU64,
     stopping: AtomicBool,
     addr: Mutex<Option<SocketAddr>>,
@@ -100,6 +118,7 @@ impl Router {
             admission_gate: Mutex::new(()),
             registry: RequestRegistry::new(),
             pending: Mutex::new(HashMap::new()),
+            sessions: SessionRegistry::default(),
             next_id: AtomicU64::new(FIRST_HTTP_ID),
             stopping: AtomicBool::new(false),
             addr: Mutex::new(None),
@@ -197,6 +216,9 @@ impl Router {
             };
             for (slot, name) in newly_dead {
                 eprintln!("[router] member {name:?} (slot {slot}) declared dead; failing over");
+                // sessions homed there lose their owner: the next round
+                // re-homes (epoch bump) wherever the fallback routes it
+                self.sessions.orphan_worker(slot);
             }
             // sweep every dead slot that still holds work — covers both
             // fresh deaths and submissions that raced the declaration
@@ -249,11 +271,13 @@ impl Router {
                     Ok(PollState::Queued) => {}
                     Ok(PollState::Running) => self.registry.mark_running(id),
                     Ok(PollState::Done(resp)) => {
+                        self.sessions.complete_round(id, true, Some(resp.timing.e2e));
                         self.registry.fulfill(id, Ok(Arc::new(*resp)));
                         let _ = remote.evict(id);
                         self.clear_entry(slot, id);
                     }
                     Ok(PollState::Failed(e)) => {
+                        self.sessions.complete_round(id, false, None);
                         self.registry.fulfill(id, Err(e));
                         let _ = remote.evict(id);
                         self.clear_entry(slot, id);
@@ -271,6 +295,8 @@ impl Router {
 
     /// Drain a dead member's lane and recover each request.
     fn fail_over_slot(&self, slot: usize) {
+        // idempotent: covers submissions that raced the death declaration
+        self.sessions.orphan_worker(slot);
         let drained: Vec<Outstanding> = {
             let mut book = self.book.lock().unwrap();
             match book.get_mut(slot) {
@@ -293,20 +319,28 @@ impl Router {
             None => {}                    // evicted: nothing to recover
             Some(s) if s.is_terminal() => {}
             Some(RequestState::Running) => {
+                self.sessions.complete_round(id, false, None);
                 self.registry.fulfill(id, Err(EditError::WorkerLost));
             }
             Some(_) => {
                 let Some(wire) = wire else {
+                    self.sessions.complete_round(id, false, None);
                     self.registry.fulfill(id, Err(EditError::WorkerLost));
                     return;
                 };
                 let outstanding = self.outstanding_from_wire(&wire);
+                let session = wire.session;
                 match self.try_place(&wire, &outstanding) {
                     Ok(slot) => {
                         eprintln!("[router] request {id} failed over to slot {slot}");
                         self.track(slot, outstanding, wire);
+                        // re-home the session on the failover target
+                        if let Some(sid) = session {
+                            self.sessions.assign_owner(sid, id, slot);
+                        }
                     }
                     Err(_) => {
+                        self.sessions.complete_round(id, false, None);
                         self.registry.fulfill(id, Err(EditError::WorkerLost));
                     }
                 }
@@ -367,21 +401,25 @@ impl Router {
                 .collect(),
             template_bytes: 0,
             available: ms.available(),
+            session_owner: None,
         }
     }
 
     /// Pick an available member for `outstanding` (scheduler preference,
-    /// minus `banned` slots) and return its RPC handle.
+    /// minus `banned` slots) and return its RPC handle. `owner` is the
+    /// sticky-affinity hint for session rounds.
     fn pick(
         &self,
         outstanding: &Outstanding,
         template: &str,
+        owner: Option<usize>,
         banned: &[usize],
     ) -> Option<(usize, Arc<RemoteWorker>)> {
         let mut ctx = {
             let ms = self.membership.lock().unwrap();
             self.route_ctx_locked(&ms, template)
         };
+        ctx.session_owner = owner;
         for &b in banned {
             if b < ctx.available.len() {
                 ctx.available[b] = false;
@@ -413,7 +451,10 @@ impl Router {
     fn try_place(&self, wire: &SubmitWire, outstanding: &Outstanding) -> Result<usize, EditError> {
         let mut reject: Option<EditError> = None;
         let mut banned: Vec<usize> = Vec::new();
-        while let Some((slot, remote)) = self.pick(outstanding, &wire.template, &banned) {
+        // session rounds prefer their owner slot (sticky affinity); a
+        // dead/draining/banned owner falls back to the policy's pick
+        let owner = wire.session.and_then(|sid| self.sessions.owner_of(sid));
+        while let Some((slot, remote)) = self.pick(outstanding, &wire.template, owner, &banned) {
             match remote.submit(wire) {
                 SubmitOutcome::Accepted => return Ok(slot),
                 SubmitOutcome::Rejected(e) => {
@@ -452,6 +493,9 @@ impl Router {
             .registry
             .register(req.id, slot, req.priority, req.deadline_ms());
         self.track(slot, outstanding, wire);
+        if let Some(sid) = req.session {
+            self.sessions.assign_owner(sid, req.id, slot);
+        }
         Ok(ticket)
     }
 
@@ -518,6 +562,11 @@ impl Router {
                 Ok(id) => self.edit_by_id(method, id),
                 Err(_) => (400, error_obj(&format!("bad request id {rest:?}"))),
             };
+        }
+        if let Some(rest) = path.strip_prefix("/v1/sessions") {
+            if rest.is_empty() || rest.starts_with('/') {
+                return self.sessions_route(method, rest, body);
+            }
         }
         if let Some(rest) = path.strip_prefix("/v1/drain/") {
             if rest.is_empty() {
@@ -625,9 +674,13 @@ impl Router {
         }
     }
 
-    /// `GET /v1/cluster`: the membership table + aggregate load.
+    /// `GET /v1/cluster`: the membership table + aggregate load. Session
+    /// ownership is overlaid per slot from the router's registry (the
+    /// heartbeat snapshots are session-blind), and `rpc_retries` counts
+    /// transport blips absorbed by the bounded RPC retry across members.
     fn cluster_body(&self) -> (u16, Json) {
         let ms = self.membership.lock().unwrap();
+        let session_load = self.sessions.worker_load(ms.len());
         let mut queued = 0usize;
         let mut running = 0usize;
         let members: Vec<Json> = ms
@@ -647,6 +700,9 @@ impl Router {
                     ),
                     ("templates", Json::num(m.templates.len() as f64)),
                 ];
+                let (s_open, s_rounds) = session_load.get(slot).copied().unwrap_or((0, 0));
+                pairs.push(("sessions_open", Json::num(s_open as f64)));
+                pairs.push(("session_rounds", Json::num(s_rounds as f64)));
                 if let Some(s) = &m.snapshot {
                     queued += s.queued;
                     running += s.running;
@@ -658,6 +714,13 @@ impl Router {
             .collect();
         let ready = ms.available().iter().filter(|&&a| a).count();
         drop(ms);
+        let rpc_retries: u64 = self
+            .workers
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|w| w.rpc_retries())
+            .sum();
         (
             200,
             Json::obj(vec![
@@ -670,6 +733,8 @@ impl Router {
                     Json::num(self.pending.lock().unwrap().len() as f64),
                 ),
                 ("completed", Json::num(self.completed() as f64)),
+                ("sessions_open", Json::num(self.sessions.open_count() as f64)),
+                ("rpc_retries", Json::num(rpc_retries as f64)),
             ]),
         )
     }
@@ -689,20 +754,26 @@ impl Router {
                     "inflight",
                     Json::num(self.pending.lock().unwrap().len() as f64),
                 ),
+                ("sessions_open", Json::num(self.sessions.open_count() as f64)),
             ]),
         )
     }
 
     /// Parse + validate a submit body (same schema as the in-process
-    /// frontend's `POST /v1/edits`).
-    fn build_request(&self, body: &str) -> Result<EditRequest, (u16, Json)> {
+    /// frontend's `POST /v1/edits`). `default_priority` applies when the
+    /// body names none — session rounds default to interactive.
+    fn build_request(
+        &self,
+        body: &str,
+        default_priority: Priority,
+    ) -> Result<EditRequest, (u16, Json)> {
         let j = Json::parse(body)
             .map_err(|e| (400, error_obj(&format!("invalid JSON body: {e}"))))?;
         let template = j.at("template").as_str().unwrap_or("tpl-0").to_string();
         let ratio = j.at("mask_ratio").as_f64().unwrap_or(0.15);
         let seed = j.at("prompt_seed").as_f64().unwrap_or(0.0) as u64;
         let priority = match j.at("priority").as_str() {
-            None => Priority::default(),
+            None => default_priority,
             Some(s) => Priority::parse(s).ok_or_else(|| {
                 (
                     400,
@@ -730,7 +801,7 @@ impl Router {
     }
 
     fn edit_async(&self, body: &str) -> (u16, Json) {
-        let req = match self.build_request(body) {
+        let req = match self.build_request(body, Priority::default()) {
             Ok(r) => r,
             Err(reply) => return reply,
         };
@@ -744,6 +815,123 @@ impl Router {
                 ]),
             ),
             Err(e) => edit_error_reply(&e),
+        }
+    }
+
+    /// `/v1/sessions*` dispatch (`rest` is `""` or starts with `/`).
+    /// Same surface as the in-process frontend, minus SSE (not proxied).
+    fn sessions_route(&self, method: &str, rest: &str, body: &str) -> (u16, Json) {
+        if rest.is_empty() {
+            return match method {
+                "POST" => self.session_open(body),
+                _ => (405, error_obj("method not allowed")),
+            };
+        }
+        let rest = &rest[1..]; // strip the leading '/'
+        let (sid_str, tail) = match rest.find('/') {
+            Some(i) => (&rest[..i], &rest[i..]),
+            None => (rest, ""),
+        };
+        let Ok(sid) = sid_str.parse::<u64>() else {
+            return (400, error_obj(&format!("bad session id {sid_str:?}")));
+        };
+        match (method, tail) {
+            ("GET", "") => match self.sessions.status(sid) {
+                Some(st) => (200, session_status_body(&st)),
+                None => (404, error_obj(&format!("no such session {sid}"))),
+            },
+            ("DELETE", "") => self.session_close(sid),
+            ("POST", "/rounds") => self.session_round(sid, body),
+            ("GET", t) if t.starts_with("/rounds/") && t.ends_with("/events") => (
+                501,
+                error_obj(
+                    "progress streams are served by the worker-local frontend; \
+                     the router does not proxy SSE",
+                ),
+            ),
+            _ => (404, error_obj("not found")),
+        }
+    }
+
+    /// `POST /v1/sessions`: open a session. The router keeps no template
+    /// registry — template admission (and residency) is the workers' job,
+    /// surfaced as a typed reject when the first round lands.
+    fn session_open(&self, body: &str) -> (u16, Json) {
+        let j = match Json::parse(body) {
+            Ok(j) => j,
+            Err(e) => return (400, error_obj(&format!("invalid JSON body: {e}"))),
+        };
+        let template = j.at("template").as_str().unwrap_or("tpl-0").to_string();
+        let sid = self.sessions.open(&template);
+        (
+            201,
+            Json::obj(vec![
+                ("session", Json::num(sid as f64)),
+                ("template", Json::str(template)),
+                ("state", Json::str("open")),
+                ("status_url", Json::str(format!("/v1/sessions/{sid}"))),
+            ]),
+        )
+    }
+
+    /// `POST /v1/sessions/{id}/rounds`: admit one round against the
+    /// session (delta-mask verdict, affinity hint), then place it through
+    /// the guarded submit path. Priority defaults to `interactive`.
+    fn session_round(&self, sid: u64, body: &str) -> (u16, Json) {
+        let mut req = match self.build_request(body, Priority::Interactive) {
+            Ok(r) => r,
+            Err(reply) => return reply,
+        };
+        let Some(st) = self.sessions.status(sid) else {
+            return session_error_reply(&SessionError::Unknown(sid));
+        };
+        req.template_id = st.template;
+        req.session = Some(sid);
+        let plan = match self.sessions.begin_round(sid, req.id, &req.mask) {
+            Ok(p) => p,
+            Err(e) => return session_error_reply(&e),
+        };
+        let rid = req.id;
+        let outstanding = self.outstanding_for(&req);
+        let _gate = self.admission_gate.lock().unwrap();
+        if let Err(e) = self.assess_admission(&req, &outstanding) {
+            self.sessions.abort_round(rid);
+            return edit_error_reply(&e);
+        }
+        match self.submit(req) {
+            Ok(ticket) => (
+                202,
+                Json::obj(vec![
+                    ("id", Json::num(rid as f64)),
+                    ("session", Json::num(sid as f64)),
+                    ("round", Json::num(plan.round as f64)),
+                    ("warm", Json::Bool(plan.warm)),
+                    ("worker", Json::num(ticket.worker() as f64)),
+                    ("status_url", Json::str(format!("/v1/edits/{rid}"))),
+                ]),
+            ),
+            Err(e) => {
+                self.sessions.abort_round(rid);
+                edit_error_reply(&e)
+            }
+        }
+    }
+
+    /// `DELETE /v1/sessions/{id}`: refuse further rounds immediately.
+    /// In-flight rounds resolve through the pump — the router holds no
+    /// template pin, so there is nothing to release synchronously.
+    fn session_close(&self, sid: u64) -> (u16, Json) {
+        match self.sessions.close(sid) {
+            Err(e) => session_error_reply(&e),
+            Ok((template, inflight)) => (
+                200,
+                Json::obj(vec![
+                    ("session", Json::num(sid as f64)),
+                    ("template", Json::str(template)),
+                    ("state", Json::str("closed")),
+                    ("inflight", Json::num(inflight as f64)),
+                ]),
+            ),
         }
     }
 
@@ -819,6 +1007,7 @@ impl Router {
                 // the worker dropped it (cancelled while queued, or its
                 // terminal copy was evicted): resolve our ticket now
                 Some("cancelled") | Some("evicted") => {
+                    self.sessions.complete_round(id, false, None);
                     self.registry.fulfill(id, Err(EditError::Cancelled));
                     self.clear_entry(slot, id);
                     (

@@ -2,12 +2,15 @@
 //!
 //! One [`RpcClient`] owns one TCP connection to one peer. Requests are
 //! sent with `Connection: keep-alive` so the server's
-//! [`crate::server::serve_connection`] loop reuses the socket; if the
-//! connection was dropped (peer restarted, idle timeout), the client
-//! reconnects once and retries the call before reporting an IO error.
-//! Read/write timeouts bound every call, so a hung peer turns into a
-//! typed [`RpcError::Io`] instead of a stuck thread — the router's
-//! membership layer decides what that means.
+//! [`crate::server::serve_connection`] loop reuses the socket; on a
+//! transient transport error (dropped keep-alive socket, refused or timed
+//! out connect/read) the client takes **one bounded retry** after a
+//! jittered backoff before reporting an IO error — so a blip doesn't
+//! immediately escalate toward `suspect` in the router's membership
+//! layer, while a genuinely dead peer still fails fast. Retries are
+//! counted ([`RpcClient::retries`]) and surfaced as `rpc_retries` on
+//! `GET /v1/cluster`. Read/write timeouts bound every call, so a hung
+//! peer turns into a typed [`RpcError::Io`] instead of a stuck thread.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
@@ -19,12 +22,18 @@ use crate::util::json::Json;
 /// model's latent size; 64 MiB is far above any real reply).
 pub const MAX_RESPONSE_BYTES: usize = 64 << 20;
 
+/// Base backoff before the bounded transport retry.
+const RETRY_BACKOFF_BASE: Duration = Duration::from_millis(10);
+
+/// Jitter span added on top of the base (exclusive upper bound, ms).
+const RETRY_BACKOFF_JITTER_MS: u64 = 25;
+
 /// Why an RPC call failed at the transport/protocol layer. HTTP-level
 /// failures (4xx/5xx) are *not* errors here — they come back as the
 /// status + body for the caller to interpret.
 #[derive(Debug, Clone, PartialEq)]
 pub enum RpcError {
-    /// Connect/read/write failure, after one reconnect attempt.
+    /// Connect/read/write failure, after the bounded retry.
     Io(String),
     /// The peer spoke something that isn't the expected HTTP/JSON.
     Proto(String),
@@ -44,15 +53,36 @@ pub struct RpcClient {
     addr: String,
     timeout: Duration,
     conn: Option<BufReader<TcpStream>>,
+    /// Transport-level retries taken so far (router stats: `rpc_retries`).
+    retries: u64,
 }
 
 impl RpcClient {
     pub fn new(addr: impl Into<String>, timeout: Duration) -> RpcClient {
-        RpcClient { addr: addr.into(), timeout, conn: None }
+        RpcClient { addr: addr.into(), timeout, conn: None, retries: 0 }
     }
 
     pub fn addr(&self) -> &str {
         &self.addr
+    }
+
+    /// How many calls needed the bounded transport retry.
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// Jittered backoff before the retry: deterministic per (peer,
+    /// ordinal) — an FNV hash of the address mixed with the retry count —
+    /// so a fleet of clients reconnecting to the same restarted peer
+    /// doesn't do so in lockstep, without pulling in an RNG.
+    fn retry_backoff(&self) -> Duration {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.addr.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+        h ^= self.retries;
+        h = h.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        RETRY_BACKOFF_BASE + Duration::from_millis(h % RETRY_BACKOFF_JITTER_MS)
     }
 
     fn connect(&mut self) -> std::io::Result<()> {
@@ -137,9 +167,10 @@ impl RpcClient {
         }
     }
 
-    /// Issue one call. Reconnects and retries once on a transport error
-    /// (a keep-alive socket the peer already closed looks exactly like
-    /// that), then surfaces [`RpcError::Io`].
+    /// Issue one call. On a transport error (a keep-alive socket the peer
+    /// already closed looks exactly like a blip) the client takes one
+    /// bounded retry after a jittered backoff, then surfaces
+    /// [`RpcError::Io`] for the membership layer to escalate.
     pub fn call(
         &mut self,
         method: &str,
@@ -147,20 +178,17 @@ impl RpcClient {
         body: Option<&Json>,
     ) -> Result<(u16, Json), RpcError> {
         let body = body.map(|j| j.to_string()).unwrap_or_default();
-        let had_conn = self.conn.is_some();
         match self.exchange(method, path, &body) {
             Ok(result) => result,
             Err(first) => {
                 self.conn = None;
-                if !had_conn {
-                    // a fresh connect already failed: the peer is down
-                    return Err(RpcError::Io(first.to_string()));
-                }
+                self.retries += 1;
+                std::thread::sleep(self.retry_backoff());
                 match self.exchange(method, path, &body) {
                     Ok(result) => result,
                     Err(e) => {
                         self.conn = None;
-                        Err(RpcError::Io(e.to_string()))
+                        Err(RpcError::Io(format!("{first}; retry: {e}")))
                     }
                 }
             }
@@ -210,8 +238,9 @@ mod tests {
             assert_eq!(reply.at("path").as_str(), Some("/echo"));
             assert_eq!(reply.at("body").at("i").as_usize(), Some(i));
         }
-        // the connection survived all five calls
+        // the connection survived all five calls, no retries burned
         assert!(client.conn.is_some(), "keep-alive connection must be reused");
+        assert_eq!(client.retries(), 0);
     }
 
     #[test]
@@ -226,5 +255,23 @@ mod tests {
             Err(RpcError::Io(_)) => {}
             other => panic!("expected Io error, got {other:?}"),
         }
+        // the failure burned exactly the one bounded retry
+        assert_eq!(client.retries(), 1);
+    }
+
+    #[test]
+    fn retry_backoff_is_jittered_and_bounded() {
+        let mut seen = std::collections::HashSet::new();
+        for port in 1000..1032 {
+            let c = RpcClient::new(format!("127.0.0.1:{port}"), Duration::from_secs(1));
+            let d = c.retry_backoff();
+            assert!(d >= RETRY_BACKOFF_BASE);
+            assert!(
+                d < RETRY_BACKOFF_BASE + Duration::from_millis(RETRY_BACKOFF_JITTER_MS)
+            );
+            seen.insert(d);
+        }
+        // different peers de-synchronize (the jitter actually varies)
+        assert!(seen.len() > 1, "backoff must not be constant across peers");
     }
 }

@@ -36,6 +36,11 @@ pub struct EditRequest {
     /// ([`EditError::DeadlineInfeasible`]); running members are never
     /// killed by it.
     pub deadline: Option<Instant>,
+    /// The interactive editing session this request is a round of, if
+    /// any. Session rounds route with sticky affinity (the owner's tiers
+    /// are warm) and publish step-progress events; plain requests carry
+    /// `None` and behave exactly as before.
+    pub session: Option<u64>,
 }
 
 impl EditRequest {
@@ -48,6 +53,7 @@ impl EditRequest {
             arrival: Instant::now(),
             priority: Priority::default(),
             deadline: None,
+            session: None,
         }
     }
 
@@ -209,6 +215,7 @@ pub struct EditRequestBuilder {
     expect_tokens: Option<usize>,
     priority: Priority,
     deadline_ms: Option<u64>,
+    session: Option<u64>,
 }
 
 impl EditRequestBuilder {
@@ -221,6 +228,7 @@ impl EditRequestBuilder {
             expect_tokens: None,
             priority: Priority::default(),
             deadline_ms: None,
+            session: None,
         }
     }
 
@@ -256,6 +264,13 @@ impl EditRequestBuilder {
     /// rejected at `build()` with `DeadlineInfeasible`.
     pub fn deadline_ms(mut self, ms: u64) -> Self {
         self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Stamp the request as a round of session `id` (sticky routing +
+    /// progress events).
+    pub fn session(mut self, id: u64) -> Self {
+        self.session = Some(id);
         self
     }
 
@@ -302,6 +317,7 @@ impl EditRequestBuilder {
         req.deadline = self
             .deadline_ms
             .map(|ms| req.arrival + Duration::from_millis(ms));
+        req.session = self.session;
         Ok(req)
     }
 }
@@ -406,6 +422,23 @@ mod tests {
             .unwrap();
         assert_eq!(d.priority, Priority::Standard);
         assert_eq!(d.deadline_ms(), None);
+    }
+
+    #[test]
+    fn builder_carries_session() {
+        let r = EditRequestBuilder::new(8)
+            .template("t")
+            .mask(MaskSpec::new(vec![0], 16))
+            .session(42)
+            .build()
+            .expect("valid");
+        assert_eq!(r.session, Some(42));
+        let d = EditRequestBuilder::new(9)
+            .template("t")
+            .mask(MaskSpec::new(vec![0], 16))
+            .build()
+            .unwrap();
+        assert_eq!(d.session, None);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! - `TeaCache`    full-image recompute with timestep-gated step skipping,
 //!                 static batching.
 
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
@@ -26,7 +27,7 @@ use xla::PjRtBuffer;
 
 use crate::cache::device::{KvDeviceTier, KvKey};
 use crate::cache::loader::{CacheLoader, MemberGather, StagedBlock};
-use crate::cache::pipeline::{PipelinePlan, PlanCache};
+use crate::cache::pipeline::{self, PipelinePlan, PlanCache};
 use crate::cache::store::{register_template, TemplateActivations};
 use crate::cache::tier::{Residency, TieredStore};
 use crate::cache::LatencyModel;
@@ -162,6 +163,11 @@ pub struct WorkerSnapshot {
     pub steps_executed: usize,
     /// Cumulative step-loop host<->device activation traffic.
     pub transfers: TransferTotals,
+    /// Interactive editing sessions homed on this worker (overlaid by the
+    /// session plane — workers themselves are session-blind).
+    pub sessions_open: usize,
+    /// Session rounds currently in flight (queued or running) here.
+    pub session_rounds: usize,
 }
 
 impl WorkerSnapshot {
@@ -184,8 +190,53 @@ impl WorkerSnapshot {
             class_depths: queue.class_depths(Instant::now()),
             steps_executed: shared.steps_executed(),
             transfers: shared.transfers(),
+            sessions_open: 0,
+            session_rounds: 0,
         }
     }
+}
+
+/// One step-boundary progress report of a session round, streamed to SSE
+/// clients. `seq` is a per-round monotone cursor so a reconnecting (or
+/// slow) consumer can resume without duplicates after drop-oldest
+/// backpressure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgressEvent {
+    pub seq: u64,
+    /// Denoise steps completed so far (monotone within a round).
+    pub step: u32,
+    pub steps_total: u32,
+    /// Estimated remaining latency in ms: the Algo-2 per-step cost
+    /// (calibrated regressions + pipeline DP) times the remaining steps.
+    pub est_remaining_ms: u64,
+    /// Preview stats of the round's current latent (cheap client-side
+    /// progress visualization without shipping the tensor).
+    pub latent_mean: f32,
+    pub latent_rms: f32,
+    /// Terminal marker: the round left the engine; no further events.
+    pub done: bool,
+}
+
+/// Most buffered events per round; older ones are dropped first, so a
+/// slow SSE consumer loses history but never blocks the engine.
+const PROGRESS_EVENT_CAP: usize = 64;
+/// Terminal round buffers retained for late/reconnecting readers; beyond
+/// this, the oldest finished round's buffer is dropped (no leak when no
+/// client ever attaches).
+const PROGRESS_DONE_KEEP: usize = 32;
+
+#[derive(Default)]
+struct RoundProgress {
+    next_seq: u64,
+    events: VecDeque<ProgressEvent>,
+    done: bool,
+}
+
+#[derive(Default)]
+struct ProgressBook {
+    rounds: HashMap<u64, RoundProgress>,
+    /// Terminal rounds in completion order (bounded retention).
+    done_order: VecDeque<u64>,
 }
 
 /// Shared mutable state published by the engine thread.
@@ -210,6 +261,9 @@ pub struct WorkerShared {
     /// cluster retirement (any thread), drained by the engine thread at
     /// loop boundaries (the tier itself is engine-thread-confined).
     kv_purges: Mutex<Vec<String>>,
+    /// Per-round bounded progress-event buffers: pushed by the engine
+    /// thread at step boundaries, drained by SSE handler threads.
+    progress: Mutex<ProgressBook>,
 }
 
 impl WorkerShared {
@@ -231,6 +285,98 @@ impl WorkerShared {
 
     fn drain_kv_purges(&self) -> Vec<String> {
         std::mem::take(&mut *self.kv_purges.lock().unwrap())
+    }
+
+    /// Append a step-progress event for session round (request) `id`.
+    /// When the bounded per-round buffer is full the *oldest* event is
+    /// dropped — a slow or absent SSE consumer can never block or grow
+    /// the engine step loop.
+    #[allow(clippy::too_many_arguments)]
+    pub fn push_progress(
+        &self,
+        id: u64,
+        step: u32,
+        steps_total: u32,
+        est_remaining_ms: u64,
+        latent_mean: f32,
+        latent_rms: f32,
+    ) {
+        let mut book = self.progress.lock().unwrap();
+        let r = book.rounds.entry(id).or_default();
+        if r.done {
+            return;
+        }
+        let seq = r.next_seq;
+        r.next_seq += 1;
+        if r.events.len() >= PROGRESS_EVENT_CAP {
+            r.events.pop_front();
+        }
+        r.events.push_back(ProgressEvent {
+            seq,
+            step,
+            steps_total,
+            est_remaining_ms,
+            latent_mean,
+            latent_rms,
+            done: false,
+        });
+    }
+
+    /// Publish the terminal completion event for round `id` and bound the
+    /// retained terminal buffers (oldest finished rounds are dropped so
+    /// unwatched rounds cannot leak memory).
+    pub fn finish_progress(&self, id: u64) {
+        let mut book = self.progress.lock().unwrap();
+        let r = book.rounds.entry(id).or_default();
+        if !r.done {
+            let seq = r.next_seq;
+            r.next_seq += 1;
+            let (step, steps_total) =
+                r.events.back().map(|e| (e.step, e.steps_total)).unwrap_or((0, 0));
+            if r.events.len() >= PROGRESS_EVENT_CAP {
+                r.events.pop_front();
+            }
+            r.events.push_back(ProgressEvent {
+                seq,
+                step,
+                steps_total,
+                est_remaining_ms: 0,
+                latent_mean: 0.0,
+                latent_rms: 0.0,
+                done: true,
+            });
+            r.done = true;
+            book.done_order.push_back(id);
+            while book.done_order.len() > PROGRESS_DONE_KEEP {
+                match book.done_order.pop_front() {
+                    Some(old) => book.rounds.remove(&old),
+                    None => break,
+                };
+            }
+        }
+    }
+
+    /// Buffered events of round `id` with `seq >= from_seq`, plus whether
+    /// the round is terminal. `None` when the round holds no buffer
+    /// (never produced events, or already dropped).
+    pub fn progress_since(&self, id: u64, from_seq: u64) -> Option<(Vec<ProgressEvent>, bool)> {
+        let book = self.progress.lock().unwrap();
+        let r = book.rounds.get(&id)?;
+        let events = r.events.iter().filter(|e| e.seq >= from_seq).cloned().collect();
+        Some((events, r.done))
+    }
+
+    /// Drop round `id`'s buffer eagerly (stream finished or the client
+    /// disconnected) instead of waiting for bounded-retention eviction.
+    pub fn drop_progress(&self, id: u64) {
+        let mut book = self.progress.lock().unwrap();
+        book.rounds.remove(&id);
+        book.done_order.retain(|&x| x != id);
+    }
+
+    /// Rounds currently holding a progress buffer (leak assertions).
+    pub fn progress_rounds(&self) -> usize {
+        self.progress.lock().unwrap().rounds.len()
     }
 
     pub fn transfers(&self) -> TransferTotals {
@@ -1454,6 +1600,11 @@ impl Worker {
         };
         let arrival = m.prep.request.arrival;
         let id = m.prep.request.id;
+        // terminal SSE event at the denoise boundary (postprocess still
+        // runs, but no further step progress will ever be published)
+        if m.prep.request.session.is_some() {
+            self.shared.finish_progress(id);
+        }
         let template_id = m.prep.request.template_id.clone();
         let ratio = m.prep.request.mask.ratio();
         let priority = m.prep.request.priority;
@@ -1511,6 +1662,33 @@ impl Worker {
         self.shared
             .kv_prefetch_overlap_us
             .store(t.kv_prefetch_overlap_us, Ordering::Relaxed);
+        // session rounds: one progress event per member per step boundary,
+        // with the Algo-2 per-step cost as the remaining-time estimator
+        for m in members.iter().filter(|m| m.prep.request.session.is_some()) {
+            let cfg = &self.rt.config;
+            let total = cfg.steps;
+            let remaining = total.saturating_sub(m.step);
+            let n = m.cached_bucket.min(cfg.tokens);
+            let costs = self.lat_model.step_costs(cfg, n, members.len(), self.cfg.cache_mode);
+            let per_step = if n >= cfg.tokens || !self.mask_aware() {
+                pipeline::full_latency(&costs)
+            } else {
+                pipeline::plan(&costs).latency
+            };
+            let est_ms = (per_step * remaining as f64 * 1e3).ceil() as u64;
+            let data = m.latent.data();
+            let len = data.len().max(1) as f32;
+            let mean = data.iter().sum::<f32>() / len;
+            let rms = (data.iter().map(|v| v * v).sum::<f32>() / len).sqrt();
+            self.shared.push_progress(
+                m.prep.request.id,
+                m.step as u32,
+                total as u32,
+                est_ms,
+                mean,
+                rms,
+            );
+        }
     }
 }
 
@@ -1635,6 +1813,53 @@ mod tests {
         let mut ratios = snap.mask_ratios;
         ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(ratios, vec![2.0 / 16.0, 0.5], "queued + running ratios");
+    }
+
+    #[test]
+    fn progress_buffer_drops_oldest_never_grows_unbounded() {
+        let shared = WorkerShared::default();
+        // a slow consumer: push far more events than the cap
+        for step in 0..(PROGRESS_EVENT_CAP as u32 * 3) {
+            shared.push_progress(7, step, 100, 10, 0.0, 0.0);
+        }
+        let (events, done) = shared.progress_since(7, 0).expect("buffer exists");
+        assert!(!done);
+        assert_eq!(events.len(), PROGRESS_EVENT_CAP, "bounded buffer");
+        // oldest dropped: the retained window is the most recent events,
+        // still strictly ordered by seq
+        assert_eq!(events.first().unwrap().step, PROGRESS_EVENT_CAP as u32 * 2);
+        for w in events.windows(2) {
+            assert!(w[1].seq > w[0].seq && w[1].step > w[0].step);
+        }
+        // cursor-based resume skips what was already seen
+        let cursor = events[events.len() - 2].seq + 1;
+        let (tail, _) = shared.progress_since(7, cursor).unwrap();
+        assert_eq!(tail.len(), 1);
+    }
+
+    #[test]
+    fn progress_terminal_event_and_bounded_done_retention() {
+        let shared = WorkerShared::default();
+        shared.push_progress(1, 0, 8, 80, 0.0, 0.0);
+        shared.finish_progress(1);
+        let (events, done) = shared.progress_since(1, 0).unwrap();
+        assert!(done);
+        assert!(events.last().unwrap().done, "terminal event present");
+        // events after done are ignored
+        shared.push_progress(1, 5, 8, 30, 0.0, 0.0);
+        let (events2, _) = shared.progress_since(1, 0).unwrap();
+        assert_eq!(events2.len(), events.len());
+        // unwatched finished rounds are evicted beyond the retention cap
+        for id in 10..(10 + PROGRESS_DONE_KEEP as u64 + 5) {
+            shared.push_progress(id, 0, 8, 80, 0.0, 0.0);
+            shared.finish_progress(id);
+        }
+        assert!(shared.progress_rounds() <= PROGRESS_DONE_KEEP + 1);
+        assert!(shared.progress_since(1, 0).is_none(), "oldest done round evicted");
+        // explicit drop releases immediately
+        let before = shared.progress_rounds();
+        shared.drop_progress(10 + PROGRESS_DONE_KEEP as u64 + 4);
+        assert_eq!(shared.progress_rounds(), before - 1);
     }
 
     #[test]

@@ -34,6 +34,10 @@
 //!   worker processes over a keep-alive HTTP/JSON RPC data plane, with
 //!   membership/epochs, heartbeat failure detection, live drain, and
 //!   queued-work failover (`WorkerLost` for in-flight casualties).
+//! - [`session`]: the interactive session serving plane — session
+//!   lifecycle + template pinning, sticky-affinity ownership with
+//!   failover re-homing, delta-mask round reuse, and SSE progress
+//!   streaming from per-round engine event buffers.
 //! - [`workload`]: Fig.-3 mask-ratio distributions, Zipf/quadratic
 //!   template popularity, diurnal / burst-storm arrival shaping, Poisson
 //!   traffic, trace record/replay.
@@ -56,6 +60,7 @@ pub mod quality;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;
+pub mod session;
 pub mod templates;
 pub mod util;
 pub mod workload;

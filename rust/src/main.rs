@@ -17,13 +17,15 @@ use instgenie::cluster::{Cluster, ClusterOpts, RequestState};
 use instgenie::config::{BatchingPolicy, CacheMode, EngineConfig, SystemKind};
 use instgenie::dist::{DistConfig, Router, WorkerNode};
 use instgenie::metrics::Recorder;
-use instgenie::qos::AdmissionController;
+use instgenie::qos::{AdmissionController, Priority};
 use instgenie::runtime::{Manifest, ModelRuntime};
 use instgenie::scheduler;
 use instgenie::server::HttpServer;
 use instgenie::util::cli::Args;
 use instgenie::util::stats::Summary;
-use instgenie::workload::{replay, ArrivalShape, ClassMix, MaskDist, Popularity, TraceGen};
+use instgenie::workload::{
+    replay, ArrivalShape, ClassMix, MaskDist, Popularity, SessionGen, TraceEvent, TraceGen,
+};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -55,11 +57,13 @@ fn print_help() {
          \x20                          --dead-after-ms 5000 --poll-ms 100 --rpc-timeout-ms 10000]\n\
          \x20                  worker: --rpc-addr 127.0.0.1:0 --router 127.0.0.1:8801 --name worker-a\n\
          \x20 run            --model sdxlm --workers 2 --rps 1.0 --requests 40 --system instgenie\n\
-         \x20                --scheduler round-robin|request-lb|token-lb|cache-aware|mask-aware|qos-aware\n\
+         \x20                --scheduler round-robin|request-lb|token-lb|cache-aware|mask-aware|qos-aware|session-affinity\n\
          \x20                --dist production --templates 4 --class-mix 0.2,0.5,0.3\n\
          \x20                [--popularity quadratic|zipf:<s>] [--shape steady|diurnal:<p>:<d>|bursts:<p>:<w>:<a>]\n\
          \x20                [--no-qos] [--aging-ms 2000] [--max-pending 4096] [--host-step-loop]\n\
          \x20                [--no-kv-device-tier] [--kv-device-budget <bytes>]\n\
+         \x20                [--sessions 8 --rounds-per-session 4 --mask-drift 0.2]  multi-round\n\
+         \x20                  interactive sessions instead of one-shot edits (delta-mask reuse)\n\
          \x20 calibrate      --model fluxm [--reps 20]\n\
          \x20 workload-stats --dist production|public|viton\n\
          \x20 register       --model sdxlm --templates 4\n\
@@ -77,6 +81,13 @@ fn print_help() {
          \x20        curl -s localhost:8801/v1/templates -d '{{\"template\":\"tpl-9\"}}'\n\
          \x20 GET    /v1/templates[/{{id}}]  state + bytes + per-worker residency\n\
          \x20 DELETE /v1/templates/{{id}}    retire (drain in-flight, free tiers)\n\
+         \x20 POST   /v1/sessions    open an interactive session (pins its template)\n\
+         \x20        curl -s localhost:8801/v1/sessions -d '{{\"template\":\"tpl-0\"}}'\n\
+         \x20 POST   /v1/sessions/{{id}}/rounds   submit the next round (interactive QoS by default;\n\
+         \x20                                   unchanged mask -> warm: plan/gather/KV reused)\n\
+         \x20 GET    /v1/sessions/{{id}}          state, owner, epoch, per-round records\n\
+         \x20 GET    /v1/sessions/{{id}}/rounds/{{n}}/events   SSE step-progress stream\n\
+         \x20 DELETE /v1/sessions/{{id}}          close (drains in-flight, releases the template pin)\n\
          \x20 GET    /v1/stats       per-worker queue depths + cache tiers + completions\n\
          \x20 POST   /edit           synchronous submit+wait wrapper\n\
          \x20 GET    /healthz        liveness\n\
@@ -259,6 +270,9 @@ fn cmd_serve_worker(args: &Args) -> Result<()> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    if args.flags.contains_key("sessions") {
+        return cmd_run_sessions(args);
+    }
     let cluster = launch_cluster(args)?;
     let mut gen = TraceGen::new(
         args.f64("rps", 1.0),
@@ -316,6 +330,111 @@ fn cmd_run(args: &Args) -> Result<()> {
     let report = rec.report(makespan);
     println!("{}", report.line());
     println!("{}", report.to_json());
+    Ok(())
+}
+
+/// `run --sessions`: replay multi-round interactive editing sessions
+/// through the session plane instead of independent one-shot edits.
+/// Each script opens a session (pinning its template), submits K rounds
+/// through `submit_session_round` (warm rounds reuse the previous
+/// round's plan/gather/KV when the mask didn't drift), then closes.
+fn cmd_run_sessions(args: &Args) -> Result<()> {
+    let cluster = launch_cluster(args)?;
+    let mut gen = SessionGen::new(
+        args.usize("sessions", 8),
+        args.usize("rounds-per-session", 4),
+        args.f64("mask-drift", 0.2),
+        MaskDist::parse(&args.str("dist", "production")).context("bad --dist")?,
+        args.usize("templates", 4),
+        args.u64("seed", 42),
+    );
+    if let Some(p) = args.flags.get("popularity") {
+        gen = gen.with_popularity(
+            Popularity::parse(p).context("bad --popularity (quadratic|zipf:<s>)")?,
+        );
+    }
+    let scripts = gen.generate();
+    let total_rounds: usize = scripts.iter().map(|s| s.rounds.len()).sum();
+    eprintln!(
+        "[run] {} sessions x {} rounds (drift={}) over {} workers (scheduler={})",
+        scripts.len(),
+        args.usize("rounds-per-session", 4),
+        args.f64("mask-drift", 0.2),
+        cluster.workers(),
+        args.str("scheduler", "mask-aware"),
+    );
+    let t0 = std::time::Instant::now();
+    let mut next_id = 1u64;
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    let mut warm_lat = Vec::new();
+    let mut cold_lat = Vec::new();
+    for script in &scripts {
+        let sid = match cluster.open_session(&script.template) {
+            Ok(sid) => sid,
+            Err(e) => {
+                eprintln!("[run] open_session({}) failed: {e}", script.template);
+                failed += script.rounds.len();
+                continue;
+            }
+        };
+        for round in &script.rounds {
+            let ev = TraceEvent {
+                id: next_id,
+                at: 0.0,
+                template: script.template.clone(),
+                mask_ratio: round.mask_ratio,
+                prompt_seed: round.prompt_seed,
+                priority: Priority::Interactive,
+                deadline_ms: None,
+            };
+            next_id += 1;
+            match cluster.submit_session_round(sid, cluster.event_request(&ev)) {
+                Ok((ticket, plan)) => {
+                    match ticket.wait(std::time::Duration::from_secs(600)) {
+                        Ok(resp) => {
+                            ok += 1;
+                            if plan.warm {
+                                warm_lat.push(resp.timing.e2e);
+                            } else {
+                                cold_lat.push(resp.timing.e2e);
+                            }
+                        }
+                        Err(_) => failed += 1,
+                    }
+                }
+                Err(e) => {
+                    eprintln!("[run] session {sid} round {} rejected: {e}", round.round);
+                    failed += 1;
+                }
+            }
+        }
+        if let Err(e) = cluster.close_session(sid, std::time::Duration::from_secs(10)) {
+            eprintln!("[run] close_session({sid}) failed: {e}");
+        }
+    }
+    let makespan = t0.elapsed().as_secs_f64();
+    cluster.shutdown()?;
+    let mean = |xs: &[f64]| {
+        if xs.is_empty() {
+            f64::NAN
+        } else {
+            xs.iter().sum::<f64>() / xs.len() as f64
+        }
+    };
+    println!(
+        "sessions={} rounds={} ok={} failed={} warm={} cold={} rounds_per_sec={:.2} \
+         warm_mean_s={:.4} cold_mean_s={:.4}",
+        scripts.len(),
+        total_rounds,
+        ok,
+        failed,
+        warm_lat.len(),
+        cold_lat.len(),
+        ok as f64 / makespan.max(1e-9),
+        mean(&warm_lat),
+        mean(&cold_lat),
+    );
     Ok(())
 }
 

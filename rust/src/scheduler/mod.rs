@@ -51,6 +51,12 @@ pub struct RouteCtx {
     /// reads as *infinite cost* to every policy instead of as its
     /// last-published load.
     pub available: Vec<bool>,
+    /// The worker that owns the request's session, when the request
+    /// belongs to one: its host tier and device KV tier are warm for the
+    /// session's template, so the session-affinity policy pins rounds
+    /// there. `None` for sessionless requests (every policy ignores it
+    /// except [`SessionAffinity`]).
+    pub session_owner: Option<usize>,
 }
 
 impl RouteCtx {
@@ -317,6 +323,45 @@ impl Scheduler for QosAware {
     }
 }
 
+/// Session-sticky routing (session tentpole): a round of an interactive
+/// editing session goes to the worker that served the session's previous
+/// rounds — its host tier holds the template hot and its device KV tier
+/// still holds the masked-region K/V under the very keys the round will
+/// look up, so a sticky pick turns every steady-state round into pure
+/// device-tier hits (zero KV upload bytes). When the owner is draining,
+/// suspect, or dead — or the request has no session — fall back to the
+/// full mask-aware cost model, which re-homes the session on whatever
+/// worker wins Algorithm 2.
+pub struct SessionAffinity {
+    fallback: MaskAware,
+}
+
+impl SessionAffinity {
+    pub fn new(
+        cfg: ModelConfig,
+        lat: LatencyModel,
+        mode: CacheMode,
+        max_batch: usize,
+    ) -> SessionAffinity {
+        SessionAffinity { fallback: MaskAware::new(cfg, lat, mode, max_batch) }
+    }
+}
+
+impl Scheduler for SessionAffinity {
+    fn name(&self) -> &'static str {
+        "session-affinity"
+    }
+
+    fn pick(&mut self, req: &Outstanding, book: &Book, ctx: &RouteCtx) -> usize {
+        if let Some(owner) = ctx.session_owner {
+            if owner < book.len() && ctx.is_available(owner) {
+                return owner;
+            }
+        }
+        self.fallback.pick(req, book, ctx)
+    }
+}
+
 /// Construct a scheduler by name (CLI / bench plumbing).
 pub fn by_name(
     name: &str,
@@ -342,18 +387,25 @@ pub fn by_name(
             mode,
             max_batch,
         ))),
+        "session-affinity" => Some(Box::new(SessionAffinity::new(
+            cfg.clone(),
+            lat.clone(),
+            mode,
+            max_batch,
+        ))),
         _ => None,
     }
 }
 
 /// All routing policies, in bench/report order.
-pub const POLICY_NAMES: [&str; 6] = [
+pub const POLICY_NAMES: [&str; 7] = [
     "round-robin",
     "request-lb",
     "token-lb",
     "cache-aware",
     "mask-aware",
     "qos-aware",
+    "session-affinity",
 ];
 
 #[cfg(test)]
@@ -588,15 +640,36 @@ mod tests {
             residency: vec![Residency::Host, Residency::Absent],
             template_bytes: 8 << 20,
             available: vec![false, true],
+            ..RouteCtx::default()
         };
         for n in POLICY_NAMES {
             let mut s = by_name(n, &c, &l, CacheMode::CacheY, 8).unwrap();
             assert_eq!(s.pick(&o(9, 4), &book, &ctx), 1, "policy {n}");
         }
+        // a session pinned to the dead worker must fall back, not stick
+        let mut sa = SessionAffinity::new(cfg(), l.clone(), CacheMode::CacheY, 8);
+        let pinned_dead = RouteCtx { session_owner: Some(0), ..ctx.clone() };
+        assert_eq!(sa.pick(&o(9, 4), &book, &pinned_dead), 1);
         // batch class goes through the qos-aware penalty path; make sure
         // that branch skips the dead worker too
         let mut q = QosAware::new(cfg(), l.clone(), CacheMode::CacheY, 8);
         assert_eq!(q.pick(&o_class(9, 4, Priority::Batch), &book, &ctx), 1);
+    }
+
+    #[test]
+    fn session_affinity_sticks_to_owner_and_falls_back() {
+        let l = LatencyModel::nominal(1e9, 1e8);
+        let mut s = SessionAffinity::new(cfg(), l, CacheMode::CacheY, 8);
+        // owner is busier than its peer, but the session sticks anyway:
+        // warm device KV beats a shorter queue
+        let book = vec![vec![o(1, 16), o(2, 16)], vec![]];
+        let owned = RouteCtx { session_owner: Some(0), ..RouteCtx::default() };
+        assert_eq!(s.pick(&o(9, 4), &book, &owned), 0);
+        // no session -> behaves exactly like mask-aware (best completion)
+        assert_eq!(s.pick(&o(9, 4), &book, &RouteCtx::default()), 1);
+        // stale owner index beyond the book -> fallback, not a panic
+        let beyond = RouteCtx { session_owner: Some(7), ..RouteCtx::default() };
+        assert_eq!(s.pick(&o(9, 4), &book, &beyond), 1);
     }
 
     #[test]

@@ -37,6 +37,25 @@
 //!   timing + image stats.
 //! - `GET /stats`, `GET /healthz` — legacy counters / liveness.
 //!
+//! # Session endpoints (interactive editing, [`crate::session`])
+//!
+//! - `POST /v1/sessions` — body `{"template": "tpl-0"}`: open a session
+//!   pinned to that template, `201 {"session", "state": "open"}`.
+//! - `POST /v1/sessions/{id}/rounds` — submit one round (same body as
+//!   `/v1/edits` minus `template`; priority defaults to `interactive`).
+//!   Returns `202` with the round index, the delta-mask `warm` verdict,
+//!   the owning worker, and the round's `events_url`.
+//! - `GET /v1/sessions/{id}` — session status: state / epoch / owner,
+//!   every round's record, and the warm-vs-cold mean latency split.
+//! - `DELETE /v1/sessions/{id}` — close: refuses further rounds, drains
+//!   in-flight ones, releases the template pin.
+//! - `GET /v1/sessions/{id}/rounds/{n}/events` — **SSE** progress
+//!   stream (`text/event-stream`): one `step` event per denoise-step
+//!   boundary (`seq`, `step`, `est_remaining_ms`, latent stats) and a
+//!   terminal `done` event. Served on a dedicated connection; the
+//!   per-round buffer is dropped when the stream ends (completion or
+//!   client disconnect alike).
+//!
 //! # Template lifecycle endpoints (online registration, §2.2 / §4.2)
 //!
 //! - `POST /v1/templates` — body `{"template": "tpl-9"}`: enqueue a
@@ -81,13 +100,15 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::cluster::{CancelOutcome, Cluster, RequestState, TemplateStatus};
+use crate::cluster::{CancelOutcome, Cluster, RequestState, RoundError, TemplateStatus};
 use crate::engine::request::{EditError, EditRequest, EditRequestBuilder, EditResponse};
+use crate::engine::worker::ProgressEvent;
 use crate::qos::Priority;
+use crate::session::{SessionError, SessionStatus};
 use crate::templates::{RegisterAdmission, RetireOutcome};
 use crate::util::json::Json;
 use crate::util::tensor::Tensor;
@@ -113,6 +134,18 @@ pub const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// How long the synchronous `POST /edit` wrapper waits on its ticket.
 const SYNC_EDIT_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// How long `DELETE /v1/sessions/{id}` waits for in-flight rounds to
+/// drain before releasing the template pin.
+const SESSION_DRAIN_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// SSE poll cadence: how often an idle event stream re-checks the
+/// per-round buffer (the engine publishes at step boundaries).
+const SSE_POLL: Duration = Duration::from_millis(2);
+
+/// Upper bound on one SSE stream's lifetime (belt-and-braces: streams
+/// normally end at the round's terminal event).
+const SSE_MAX_DURATION: Duration = Duration::from_secs(120);
 
 /// Serve a cluster over HTTP until the process is killed.
 pub struct HttpServer {
@@ -143,8 +176,49 @@ impl HttpServer {
         Ok(())
     }
 
+    /// Serve one connection. Mirrors [`serve_connection`] but intercepts
+    /// the SSE endpoint, which takes over the socket for the stream's
+    /// lifetime instead of writing one JSON reply.
     fn handle(&self, stream: TcpStream) -> Result<()> {
-        serve_connection(stream, |method, path, body| self.route(method, path, body))
+        stream.set_read_timeout(Some(READ_TIMEOUT))?;
+        stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+        let mut reader = BufReader::new(stream);
+        loop {
+            let (status, reply, keep) = match read_request(&mut reader)? {
+                ReadOutcome::Closed => return Ok(()),
+                ReadOutcome::BadHeaders => (
+                    431,
+                    error_obj(&format!(
+                        "header section exceeds {MAX_HEADER_BYTES} bytes / {MAX_HEADER_LINES} lines"
+                    )),
+                    false,
+                ),
+                ReadOutcome::TooLarge { declared } => (
+                    413,
+                    error_obj(&format!(
+                        "body of {declared} bytes exceeds the {MAX_BODY_BYTES}-byte limit"
+                    )),
+                    false,
+                ),
+                ReadOutcome::Request { method, path, body, keep_alive } => {
+                    if method == "GET" {
+                        if let Some((sid, round)) = parse_events_path(&path) {
+                            return self.stream_round_events(reader.get_mut(), sid, round);
+                        }
+                    }
+                    let (status, reply) = self.route(&method, &path, &body);
+                    (status, reply, keep_alive)
+                }
+            };
+            let retry_after = reply
+                .at("retry_after_ms")
+                .as_f64()
+                .map(|ms| ((ms / 1e3).ceil() as u64).max(1));
+            write_response(reader.get_mut(), status, &reply.to_string(), retry_after, keep)?;
+            if !keep {
+                return Ok(());
+            }
+        }
     }
 
     /// Route a request (separated from IO for unit testing).
@@ -160,6 +234,11 @@ impl HttpServer {
                 return (400, error_obj("empty template id"));
             }
             return self.template_by_id(method, rest);
+        }
+        if let Some(rest) = path.strip_prefix("/v1/sessions") {
+            if rest.is_empty() || rest.starts_with('/') {
+                return self.sessions_route(method, rest, body);
+            }
         }
         match (method, path) {
             ("GET", "/healthz") => (200, Json::obj(vec![("ok", Json::Bool(true))])),
@@ -184,14 +263,18 @@ impl HttpServer {
     /// allocated only after local validation, so malformed submissions
     /// never burn ids (template/admission rejects in `submit_guarded`
     /// happen after allocation — the counter is monotonic, gaps are fine).
-    fn build_request(&self, body: &str) -> Result<EditRequest, (u16, Json)> {
+    fn build_request(
+        &self,
+        body: &str,
+        default_priority: Priority,
+    ) -> Result<EditRequest, (u16, Json)> {
         let j = Json::parse(body)
             .map_err(|e| (400, error_obj(&format!("invalid JSON body: {e}"))))?;
         let template = j.at("template").as_str().unwrap_or("tpl-0").to_string();
         let ratio = j.at("mask_ratio").as_f64().unwrap_or(0.15);
         let seed = j.at("prompt_seed").as_f64().unwrap_or(0.0) as u64;
         let priority = match j.at("priority").as_str() {
-            None => Priority::default(),
+            None => default_priority,
             Some(s) => Priority::parse(s).ok_or_else(|| {
                 (
                     400,
@@ -223,7 +306,7 @@ impl HttpServer {
 
     /// `POST /edit`: submit + wait on this request's *own* ticket.
     fn edit_sync(&self, body: &str) -> (u16, Json) {
-        let req = match self.build_request(body) {
+        let req = match self.build_request(body, Priority::default()) {
             Ok(r) => r,
             Err(reply) => return reply,
         };
@@ -252,7 +335,7 @@ impl HttpServer {
 
     /// `POST /v1/edits`: async submit, returns the polling handle.
     fn edit_async(&self, body: &str) -> (u16, Json) {
-        let req = match self.build_request(body) {
+        let req = match self.build_request(body, Priority::default()) {
             Ok(r) => r,
             Err(reply) => return reply,
         };
@@ -400,16 +483,176 @@ impl HttpServer {
         }
     }
 
+    /// Dispatch `/v1/sessions[...]` (`rest` is `""` or starts with `/`).
+    fn sessions_route(&self, method: &str, rest: &str, body: &str) -> (u16, Json) {
+        if rest.is_empty() {
+            return match method {
+                "POST" => self.session_open(body),
+                _ => (405, error_obj("method not allowed")),
+            };
+        }
+        let rest = &rest[1..]; // strip the leading '/'
+        let (sid_str, tail) = match rest.find('/') {
+            Some(i) => (&rest[..i], &rest[i..]),
+            None => (rest, ""),
+        };
+        let Ok(sid) = sid_str.parse::<u64>() else {
+            return (400, error_obj(&format!("bad session id {sid_str:?}")));
+        };
+        match (method, tail) {
+            ("GET", "") => match self.cluster.session_status(sid) {
+                Some(st) => (200, session_status_body(&st)),
+                None => (404, error_obj(&format!("no such session {sid}"))),
+            },
+            ("DELETE", "") => match self.cluster.close_session(sid, SESSION_DRAIN_TIMEOUT) {
+                Ok(st) => (200, session_status_body(&st)),
+                Err(e) => session_error_reply(&e),
+            },
+            ("POST", "/rounds") => self.session_round(sid, body),
+            // the SSE endpoint is intercepted in `handle` (it takes over
+            // the socket); reaching it through plain routing is an error
+            ("GET", t) if t.starts_with("/rounds/") && t.ends_with("/events") => (
+                400,
+                error_obj("event streams are served over a dedicated SSE connection"),
+            ),
+            _ => (404, error_obj("not found")),
+        }
+    }
+
+    /// `POST /v1/sessions`: open a session pinned to one template.
+    fn session_open(&self, body: &str) -> (u16, Json) {
+        let j = match Json::parse(body) {
+            Ok(j) => j,
+            Err(e) => return (400, error_obj(&format!("invalid JSON body: {e}"))),
+        };
+        let template = j.at("template").as_str().unwrap_or("tpl-0").to_string();
+        match self.cluster.open_session(&template) {
+            Ok(sid) => (
+                201,
+                Json::obj(vec![
+                    ("session", Json::num(sid as f64)),
+                    ("template", Json::str(template)),
+                    ("state", Json::str("open")),
+                    ("status_url", Json::str(format!("/v1/sessions/{sid}"))),
+                ]),
+            ),
+            Err(e) => edit_error_reply(&e),
+        }
+    }
+
+    /// `POST /v1/sessions/{id}/rounds`: submit one round. Same body as
+    /// `/v1/edits` minus `template` (the session's pin wins); priority
+    /// defaults to `interactive`.
+    fn session_round(&self, sid: u64, body: &str) -> (u16, Json) {
+        let req = match self.build_request(body, Priority::Interactive) {
+            Ok(r) => r,
+            Err(reply) => return reply,
+        };
+        match self.cluster.submit_session_round(sid, req) {
+            Ok((ticket, plan)) => (
+                202,
+                Json::obj(vec![
+                    ("id", Json::num(ticket.id() as f64)),
+                    ("session", Json::num(sid as f64)),
+                    ("round", Json::num(plan.round as f64)),
+                    ("warm", Json::Bool(plan.warm)),
+                    ("worker", Json::num(ticket.worker() as f64)),
+                    ("status_url", Json::str(format!("/v1/edits/{}", ticket.id()))),
+                    (
+                        "events_url",
+                        Json::str(format!("/v1/sessions/{sid}/rounds/{}/events", plan.round)),
+                    ),
+                ]),
+            ),
+            Err(RoundError::Edit(e)) => edit_error_reply(&e),
+            Err(RoundError::Session(e)) => session_error_reply(&e),
+        }
+    }
+
+    /// `GET /v1/sessions/{id}/rounds/{n}/events`: stream step-boundary
+    /// progress as SSE until the round's terminal event, the client
+    /// disconnects, or [`SSE_MAX_DURATION`] elapses. The per-round buffer
+    /// is dropped on every exit path, so ended streams never leak.
+    fn stream_round_events(&self, stream: &mut TcpStream, sid: u64, round: u64) -> Result<()> {
+        let rec = self
+            .cluster
+            .session_status(sid)
+            .and_then(|st| st.rounds.iter().find(|r| r.round == round).cloned());
+        let Some(rec) = rec else {
+            let body = error_obj(&format!("no such round {round} in session {sid}"));
+            return write_response(stream, 404, &body.to_string(), None, false);
+        };
+        let Some(shared) = rec.worker.and_then(|w| self.cluster.worker_shared(w)) else {
+            let body = error_obj("round has no assigned worker yet");
+            return write_response(stream, 409, &body.to_string(), None, false);
+        };
+        let id = rec.request_id;
+        write!(
+            stream,
+            "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n"
+        )?;
+        stream.flush()?;
+        let deadline = Instant::now() + SSE_MAX_DURATION;
+        let mut cursor = 0u64;
+        'stream: loop {
+            match shared.progress_since(id, cursor) {
+                Some((events, done)) => {
+                    for ev in &events {
+                        cursor = ev.seq + 1;
+                        let kind = if ev.done { "done" } else { "step" };
+                        let wrote = write!(stream, "event: {kind}\ndata: {}\n\n", progress_body(ev))
+                            .and_then(|()| stream.flush());
+                        if wrote.is_err() {
+                            break 'stream; // client disconnected
+                        }
+                    }
+                    if done {
+                        break 'stream;
+                    }
+                }
+                None => {
+                    // no buffer yet (round still queued) — or none ever:
+                    // failed/cancelled rounds never publish, so a terminal
+                    // request without a buffer ends the stream with a
+                    // synthetic done event
+                    let terminal = self
+                        .cluster
+                        .status(id)
+                        .map(|s| s.state.is_terminal())
+                        .unwrap_or(true);
+                    if terminal {
+                        let body = Json::obj(vec![
+                            ("id", Json::num(id as f64)),
+                            ("done", Json::Bool(true)),
+                        ]);
+                        let _ = write!(stream, "event: done\ndata: {body}\n\n")
+                            .and_then(|()| stream.flush());
+                        break 'stream;
+                    }
+                }
+            }
+            if Instant::now() >= deadline {
+                break 'stream;
+            }
+            std::thread::sleep(SSE_POLL);
+        }
+        shared.drop_progress(id);
+        Ok(())
+    }
+
     /// `GET /v1/stats`: per-worker queue depths (per class) + cache-tier
     /// stats + completion counters.
     fn stats_v1(&self) -> (u16, Json) {
         let caches = self.cluster.cache_stats();
+        let session_load = self.cluster.sessions().worker_load(self.cluster.workers());
         let depths = self
             .cluster
             .queue_depths()
             .into_iter()
             .zip(caches)
             .map(|(d, c)| {
+                let (open, active_rounds) =
+                    session_load.get(d.worker).copied().unwrap_or((0, 0));
                 let classes = Priority::ALL
                     .iter()
                     .map(|p| {
@@ -428,6 +671,13 @@ impl HttpServer {
                     ("queued", Json::num(d.queued as f64)),
                     ("outstanding", Json::num(d.outstanding as f64)),
                     ("classes", Json::obj(classes)),
+                    (
+                        "sessions",
+                        Json::obj(vec![
+                            ("open", Json::num(open as f64)),
+                            ("active_rounds", Json::num(active_rounds as f64)),
+                        ]),
+                    ),
                     (
                         "cache",
                         Json::obj(vec![
@@ -448,10 +698,100 @@ impl HttpServer {
                 ("completed", Json::num(self.cluster.completed() as f64)),
                 ("uptime_secs", Json::num(self.cluster.elapsed())),
                 ("templates", Json::num(self.cluster.template_count() as f64)),
+                (
+                    "sessions_open",
+                    Json::num(self.cluster.sessions().open_count() as f64),
+                ),
                 ("workers", Json::arr(depths)),
             ]),
         )
     }
+}
+
+/// Parse `/v1/sessions/{sid}/rounds/{n}/events` into `(sid, n)`.
+fn parse_events_path(path: &str) -> Option<(u64, u64)> {
+    let rest = path.strip_prefix("/v1/sessions/")?;
+    let (sid, rest) = rest.split_once('/')?;
+    let rest = rest.strip_prefix("rounds/")?;
+    let (round, tail) = rest.split_once('/')?;
+    if tail != "events" {
+        return None;
+    }
+    Some((sid.parse().ok()?, round.parse().ok()?))
+}
+
+/// One SSE `data:` payload: the progress event as JSON.
+fn progress_body(ev: &ProgressEvent) -> Json {
+    Json::obj(vec![
+        ("seq", Json::num(ev.seq as f64)),
+        ("step", Json::num(ev.step as f64)),
+        ("steps_total", Json::num(ev.steps_total as f64)),
+        ("est_remaining_ms", Json::num(ev.est_remaining_ms as f64)),
+        ("latent_mean", Json::num(ev.latent_mean as f64)),
+        ("latent_rms", Json::num(ev.latent_rms as f64)),
+        ("done", Json::Bool(ev.done)),
+    ])
+}
+
+/// Map a typed [`SessionError`] to its HTTP reply (404 unknown session,
+/// 410 closed/expired).
+pub fn session_error_reply(e: &SessionError) -> (u16, Json) {
+    (
+        e.http_status(),
+        Json::obj(vec![
+            ("error", Json::str(e.to_string())),
+            ("error_kind", Json::str(e.kind())),
+        ]),
+    )
+}
+
+/// Full session status body: lifecycle + per-round records + the
+/// warm-vs-cold latency split.
+pub fn session_status_body(st: &SessionStatus) -> Json {
+    let rounds = st
+        .rounds
+        .iter()
+        .map(|r| {
+            let mut pairs = vec![
+                ("round", Json::num(r.round as f64)),
+                ("id", Json::num(r.request_id as f64)),
+                ("warm", Json::Bool(r.warm)),
+                (
+                    "status",
+                    Json::str(match r.ok {
+                        Some(true) => "done",
+                        Some(false) => "failed",
+                        None => "inflight",
+                    }),
+                ),
+            ];
+            if let Some(w) = r.worker {
+                pairs.push(("worker", Json::num(w as f64)));
+            }
+            if let Some(l) = r.latency {
+                pairs.push(("latency_secs", Json::num(l)));
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    let mut pairs = vec![
+        ("session", Json::num(st.id as f64)),
+        ("template", Json::str(st.template.clone())),
+        ("state", Json::str(st.state.label())),
+        ("epoch", Json::num(st.epoch as f64)),
+        ("inflight", Json::num(st.inflight as f64)),
+        ("rounds", Json::arr(rounds)),
+    ];
+    if let Some(w) = st.owner {
+        pairs.push(("owner", Json::num(w as f64)));
+    }
+    if let Some(c) = st.cold_mean {
+        pairs.push(("cold_mean_secs", Json::num(c)));
+    }
+    if let Some(w) = st.warm_mean {
+        pairs.push(("warm_mean_secs", Json::num(w)));
+    }
+    Json::obj(pairs)
 }
 
 /// Minimal template reply: id + state (+ draining count), with the

@@ -1,0 +1,117 @@
+//! Round-over-round mask diffing (delta-mask round reuse).
+//!
+//! An interactive editing session refines the same masked region over
+//! many rounds; between rounds the mask either stays put or drifts by a
+//! few tokens. The reuse invariant the session plane maintains: when two
+//! consecutive rounds share the *canonical id-set* (sorted, deduplicated
+//! masked token ids over the same latent grid), everything keyed by that
+//! id-set is reusable verbatim — the masked-first permutation and its
+//! gather indices, the memoized Algorithm-1 plan (same bucket, same warm
+//! mask), and, critically, the device KV tier keys (`KvKey.ids` is the
+//! interned canonical id-set). Routed to the same worker, such a round
+//! runs entirely on device-tier hits: **zero KV upload bytes**. A drifted
+//! mask changes the id-set, so the round re-keys and pays cold uploads
+//! once; [`diff`] reports exactly how much drifted for observability.
+
+use crate::model::MaskSpec;
+
+/// The id-set difference between consecutive rounds' masks.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct MaskDelta {
+    /// Token ids masked in the new round but not the previous one.
+    pub added: Vec<usize>,
+    /// Token ids masked in the previous round but not the new one.
+    pub removed: Vec<usize>,
+}
+
+impl MaskDelta {
+    /// No drift: the canonical id-sets are identical.
+    pub fn is_empty(&self) -> bool {
+        self.added.is_empty() && self.removed.is_empty()
+    }
+
+    /// Total ids that changed between the rounds.
+    pub fn churn(&self) -> usize {
+        self.added.len() + self.removed.len()
+    }
+}
+
+/// Whether two masks share the canonical id-set (the delta-mask reuse
+/// predicate: same latent grid, same sorted masked ids).
+pub fn same_ids(a: &MaskSpec, b: &MaskSpec) -> bool {
+    a.tokens() == b.tokens() && a.masked_ids() == b.masked_ids()
+}
+
+/// Diff two masks' canonical id-sets (linear merge walk over the sorted
+/// ids `MaskSpec` maintains).
+pub fn diff(prev: &MaskSpec, next: &MaskSpec) -> MaskDelta {
+    let (p, n) = (prev.masked_ids(), next.masked_ids());
+    let mut delta = MaskDelta::default();
+    let (mut i, mut j) = (0, 0);
+    while i < p.len() && j < n.len() {
+        match p[i].cmp(&n[j]) {
+            std::cmp::Ordering::Equal => {
+                i += 1;
+                j += 1;
+            }
+            std::cmp::Ordering::Less => {
+                delta.removed.push(p[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                delta.added.push(n[j]);
+                j += 1;
+            }
+        }
+    }
+    delta.removed.extend_from_slice(&p[i..]);
+    delta.added.extend_from_slice(&n[j..]);
+    delta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(ids: Vec<usize>) -> MaskSpec {
+        MaskSpec::new(ids, 64)
+    }
+
+    #[test]
+    fn identical_masks_have_empty_delta() {
+        let a = m(vec![3, 1, 7]);
+        let b = m(vec![7, 3, 1]); // canonicalization makes order irrelevant
+        assert!(same_ids(&a, &b));
+        let d = diff(&a, &b);
+        assert!(d.is_empty());
+        assert_eq!(d.churn(), 0);
+    }
+
+    #[test]
+    fn drifted_mask_reports_added_and_removed() {
+        let a = m(vec![1, 3, 7]);
+        let b = m(vec![3, 7, 9, 12]);
+        assert!(!same_ids(&a, &b));
+        let d = diff(&a, &b);
+        assert_eq!(d.removed, vec![1]);
+        assert_eq!(d.added, vec![9, 12]);
+        assert_eq!(d.churn(), 3);
+    }
+
+    #[test]
+    fn different_grids_never_match() {
+        let a = MaskSpec::new(vec![1, 2], 64);
+        let b = MaskSpec::new(vec![1, 2], 256);
+        assert!(!same_ids(&a, &b));
+    }
+
+    #[test]
+    fn diff_handles_disjoint_and_prefix_sets() {
+        let d = diff(&m(vec![0, 1]), &m(vec![10, 11]));
+        assert_eq!(d.removed, vec![0, 1]);
+        assert_eq!(d.added, vec![10, 11]);
+        let d = diff(&m(vec![5, 6, 7]), &m(vec![5, 6]));
+        assert_eq!(d.removed, vec![7]);
+        assert!(d.added.is_empty());
+    }
+}

@@ -1,0 +1,531 @@
+//! The session serving plane: interactive editing sessions layered over
+//! the request/template/QoS control plane.
+//!
+//! A *session* pins one template for a user iterating on one edit: rounds
+//! arrive one at a time, each an [`crate::engine::request::EditRequest`]
+//! stamped with the session id. The [`SessionRegistry`] owns session
+//! lifecycle (open → active → idle-expired/closed), the per-session
+//! round counter and epoch, the owning worker (sticky affinity — see
+//! [`crate::scheduler::SessionAffinity`]), and the previous round's mask
+//! for delta-mask reuse ([`delta`]). Three properties the plane
+//! maintains:
+//!
+//! 1. **Affinity**: rounds route to the session's owner while it is
+//!    alive; failover re-homes the session (epoch bump) on whatever
+//!    worker wins the mask-aware fallback.
+//! 2. **Template pinning**: an open session holds one in-flight
+//!    reference on its template under a synthetic request id
+//!    ([`pin_id`]), so retirement drains behind live sessions and
+//!    close/expiry releases (and tier-purges) deterministically.
+//! 3. **Delta-mask reuse**: a round whose mask shares the canonical
+//!    id-set with its predecessor is *warm* — same gather indices, same
+//!    memoized plan, same device-KV keys, zero KV upload bytes on the
+//!    owner.
+
+pub mod delta;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::model::MaskSpec;
+
+/// Synthetic request-id namespace for per-session template pins: the
+/// high bit is set, so pins can never collide with real request ids
+/// (frontends allocate those from small counters).
+pub const SESSION_PIN_BASE: u64 = 1 << 63;
+
+/// The synthetic request id under which session `id` pins its template
+/// in the [`crate::templates::TemplateRegistry`].
+pub fn pin_id(session: u64) -> u64 {
+    SESSION_PIN_BASE | session
+}
+
+/// Default idle expiry: a session with no round activity for this long
+/// releases its template pin and refuses further rounds.
+pub const DEFAULT_IDLE_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Where a session is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionState {
+    /// Accepting rounds.
+    Open,
+    /// Explicitly closed by the client (`DELETE /v1/sessions/{id}`).
+    Closed,
+    /// Idle-expired by the registry sweep.
+    Expired,
+}
+
+impl SessionState {
+    pub fn label(self) -> &'static str {
+        match self {
+            SessionState::Open => "open",
+            SessionState::Closed => "closed",
+            SessionState::Expired => "expired",
+        }
+    }
+}
+
+/// Why a session operation was refused (mapped onto HTTP by frontends).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum SessionError {
+    #[error("unknown session {0}")]
+    Unknown(u64),
+    /// The session is closed or expired: no further rounds.
+    #[error("session {id} is {state}")]
+    NotOpen { id: u64, state: &'static str },
+}
+
+impl SessionError {
+    pub fn http_status(&self) -> u16 {
+        match self {
+            SessionError::Unknown(_) => 404,
+            SessionError::NotOpen { .. } => 410,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SessionError::Unknown(_) => "unknown_session",
+            SessionError::NotOpen { .. } => "session_not_open",
+        }
+    }
+}
+
+/// One submitted round of a session.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    /// 1-based round index within the session.
+    pub round: u64,
+    /// The request id the round was submitted under.
+    pub request_id: u64,
+    /// Delta-mask verdict: the mask's canonical id-set matched the
+    /// previous round's, so cached state (plans, gather indices, device
+    /// KV keys) is reused verbatim.
+    pub warm: bool,
+    /// Worker the round was routed to.
+    pub worker: Option<usize>,
+    /// End-to-end latency in seconds, once terminal.
+    pub latency: Option<f64>,
+    /// Whether the round completed successfully, once terminal.
+    pub ok: Option<bool>,
+}
+
+/// Routing decision inputs for a freshly admitted round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoundPlan {
+    /// 1-based round index.
+    pub round: u64,
+    /// Delta-mask verdict vs the previous round.
+    pub warm: bool,
+    /// Current session owner (sticky-affinity hint; `None` on round 1 or
+    /// after the owner died without a successor yet).
+    pub owner: Option<usize>,
+}
+
+/// Point-in-time view of one session (status endpoints).
+#[derive(Debug, Clone)]
+pub struct SessionStatus {
+    pub id: u64,
+    pub template: String,
+    pub state: SessionState,
+    /// Bumped every time the session re-homes onto a different worker.
+    pub epoch: u64,
+    pub owner: Option<usize>,
+    pub rounds: Vec<RoundRecord>,
+    /// Rounds submitted but not yet terminal.
+    pub inflight: usize,
+    /// Mean e2e latency (seconds) over completed cold (mask-changed)
+    /// rounds — round 1 is always cold.
+    pub cold_mean: Option<f64>,
+    /// Mean e2e latency (seconds) over completed warm (mask-unchanged)
+    /// rounds.
+    pub warm_mean: Option<f64>,
+}
+
+struct SessionInner {
+    template: String,
+    state: SessionState,
+    epoch: u64,
+    owner: Option<usize>,
+    rounds: Vec<RoundRecord>,
+    last_mask: Option<MaskSpec>,
+    last_touch: Instant,
+    inflight: usize,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    sessions: HashMap<u64, SessionInner>,
+    /// In-flight round request id -> session id.
+    by_request: HashMap<u64, u64>,
+}
+
+/// Owns every session's lifecycle. Thread-safe; shared between frontends,
+/// the routing path, and the completion collector.
+pub struct SessionRegistry {
+    inner: Mutex<RegistryInner>,
+    next_id: AtomicU64,
+    idle_timeout: Duration,
+}
+
+impl SessionRegistry {
+    pub fn new(idle_timeout: Duration) -> SessionRegistry {
+        SessionRegistry {
+            inner: Mutex::new(RegistryInner::default()),
+            next_id: AtomicU64::new(1),
+            idle_timeout,
+        }
+    }
+
+    /// Open a session pinned to `template`; returns its id. The caller is
+    /// responsible for taking the template pin (`templates.acquire` under
+    /// [`pin_id`]) — the registry only tracks lifecycle.
+    pub fn open(&self, template: &str) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        inner.sessions.insert(
+            id,
+            SessionInner {
+                template: template.to_string(),
+                state: SessionState::Open,
+                epoch: 0,
+                owner: None,
+                rounds: Vec::new(),
+                last_mask: None,
+                last_touch: Instant::now(),
+                inflight: 0,
+            },
+        );
+        id
+    }
+
+    /// Admit one round: checks the session is open, computes the
+    /// delta-mask verdict against the previous round, advances the round
+    /// counter, and records the round as in-flight under `request_id`.
+    pub fn begin_round(
+        &self,
+        id: u64,
+        request_id: u64,
+        mask: &MaskSpec,
+    ) -> Result<RoundPlan, SessionError> {
+        let mut inner = self.inner.lock().unwrap();
+        let s = inner.sessions.get_mut(&id).ok_or(SessionError::Unknown(id))?;
+        if s.state != SessionState::Open {
+            return Err(SessionError::NotOpen { id, state: s.state.label() });
+        }
+        let warm = s.last_mask.as_ref().is_some_and(|prev| delta::same_ids(prev, mask));
+        s.last_mask = Some(mask.clone());
+        s.last_touch = Instant::now();
+        s.inflight += 1;
+        let round = s.rounds.len() as u64 + 1;
+        s.rounds.push(RoundRecord {
+            round,
+            request_id,
+            warm,
+            worker: None,
+            latency: None,
+            ok: None,
+        });
+        let owner = s.owner;
+        inner.by_request.insert(request_id, id);
+        Ok(RoundPlan { round, warm, owner })
+    }
+
+    /// Record where a round landed; a changed worker re-homes the session
+    /// (epoch bump). Called after routing picked the worker.
+    pub fn assign_owner(&self, id: u64, request_id: u64, worker: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(s) = inner.sessions.get_mut(&id) {
+            if s.owner != Some(worker) {
+                s.owner = Some(worker);
+                s.epoch += 1;
+            }
+            if let Some(r) = s.rounds.iter_mut().rev().find(|r| r.request_id == request_id) {
+                r.worker = Some(worker);
+            }
+        }
+    }
+
+    /// Roll back a round that failed to submit after `begin_round` (e.g.
+    /// admission shed it): the round record is removed so it never counts
+    /// against the session, and the mask verdict of the *next* round is
+    /// unaffected (the stored mask stays — reuse is a property of the
+    /// tiers, which the failed round never touched).
+    pub fn abort_round(&self, request_id: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(id) = inner.by_request.remove(&request_id) else { return };
+        if let Some(s) = inner.sessions.get_mut(&id) {
+            s.inflight = s.inflight.saturating_sub(1);
+            if let Some(pos) = s.rounds.iter().rposition(|r| r.request_id == request_id) {
+                s.rounds.remove(pos);
+            }
+        }
+    }
+
+    /// Mark the round submitted under `request_id` terminal. No-op for
+    /// requests that are not session rounds.
+    pub fn complete_round(&self, request_id: u64, ok: bool, latency_secs: Option<f64>) {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(id) = inner.by_request.remove(&request_id) else { return };
+        if let Some(s) = inner.sessions.get_mut(&id) {
+            s.inflight = s.inflight.saturating_sub(1);
+            s.last_touch = Instant::now();
+            if let Some(r) = s.rounds.iter_mut().rev().find(|r| r.request_id == request_id) {
+                r.ok = Some(ok);
+                r.latency = latency_secs;
+            }
+        }
+    }
+
+    /// The session a round request belongs to, while the round is in
+    /// flight.
+    pub fn session_of_request(&self, request_id: u64) -> Option<u64> {
+        self.inner.lock().unwrap().by_request.get(&request_id).copied()
+    }
+
+    /// Current owner (sticky-affinity hint) of session `id`.
+    pub fn owner_of(&self, id: u64) -> Option<usize> {
+        self.inner.lock().unwrap().sessions.get(&id).and_then(|s| s.owner)
+    }
+
+    /// Drop the owner of every session homed on `worker` (it died or was
+    /// drained): their next round re-homes via the mask-aware fallback.
+    /// Returns how many sessions were orphaned.
+    pub fn orphan_worker(&self, worker: usize) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let mut n = 0;
+        for s in inner.sessions.values_mut() {
+            if s.owner == Some(worker) {
+                s.owner = None;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// In-flight round count of session `id`.
+    pub fn inflight(&self, id: u64) -> Option<usize> {
+        self.inner.lock().unwrap().sessions.get(&id).map(|s| s.inflight)
+    }
+
+    /// Close session `id`: refuses further rounds immediately. Returns
+    /// the pinned template (for the caller to release once in-flight
+    /// rounds drain) and the in-flight count at close time.
+    pub fn close(&self, id: u64) -> Result<(String, usize), SessionError> {
+        let mut inner = self.inner.lock().unwrap();
+        let s = inner.sessions.get_mut(&id).ok_or(SessionError::Unknown(id))?;
+        if s.state != SessionState::Open {
+            return Err(SessionError::NotOpen { id, state: s.state.label() });
+        }
+        s.state = SessionState::Closed;
+        Ok((s.template.clone(), s.inflight))
+    }
+
+    /// Sweep idle sessions: every open session with no in-flight round
+    /// and no activity for the idle timeout expires. Returns the expired
+    /// `(session, template)` pairs so the caller can release their pins.
+    pub fn expire_idle(&self, now: Instant) -> Vec<(u64, String)> {
+        let mut inner = self.inner.lock().unwrap();
+        let timeout = self.idle_timeout;
+        let mut expired = Vec::new();
+        for (&id, s) in inner.sessions.iter_mut() {
+            if s.state == SessionState::Open
+                && s.inflight == 0
+                && now.duration_since(s.last_touch) >= timeout
+            {
+                s.state = SessionState::Expired;
+                expired.push((id, s.template.clone()));
+            }
+        }
+        expired
+    }
+
+    /// Status view of session `id`.
+    pub fn status(&self, id: u64) -> Option<SessionStatus> {
+        let inner = self.inner.lock().unwrap();
+        let s = inner.sessions.get(&id)?;
+        let mean = |warm: bool| {
+            let lats: Vec<f64> = s
+                .rounds
+                .iter()
+                .filter(|r| r.warm == warm)
+                .filter_map(|r| r.latency)
+                .collect();
+            (!lats.is_empty()).then(|| lats.iter().sum::<f64>() / lats.len() as f64)
+        };
+        Some(SessionStatus {
+            id,
+            template: s.template.clone(),
+            state: s.state,
+            epoch: s.epoch,
+            owner: s.owner,
+            rounds: s.rounds.clone(),
+            inflight: s.inflight,
+            cold_mean: mean(false),
+            warm_mean: mean(true),
+        })
+    }
+
+    /// Count of open sessions (stats endpoints).
+    pub fn open_count(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.sessions.values().filter(|s| s.state == SessionState::Open).count()
+    }
+
+    /// Per-worker `(open sessions, in-flight rounds)` over `n` workers —
+    /// the session-skew overlay for `WorkerSnapshot`.
+    pub fn worker_load(&self, n: usize) -> Vec<(usize, usize)> {
+        let inner = self.inner.lock().unwrap();
+        let mut load = vec![(0usize, 0usize); n];
+        for s in inner.sessions.values() {
+            if s.state != SessionState::Open {
+                continue;
+            }
+            if let Some(w) = s.owner {
+                if let Some(slot) = load.get_mut(w) {
+                    slot.0 += 1;
+                    slot.1 += s.inflight;
+                }
+            }
+        }
+        load
+    }
+}
+
+impl Default for SessionRegistry {
+    fn default() -> Self {
+        SessionRegistry::new(DEFAULT_IDLE_TIMEOUT)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mask(ids: Vec<usize>) -> MaskSpec {
+        MaskSpec::new(ids, 64)
+    }
+
+    #[test]
+    fn lifecycle_open_rounds_close() {
+        let reg = SessionRegistry::new(Duration::from_secs(600));
+        let id = reg.open("tpl-0");
+        assert_eq!(reg.status(id).unwrap().state, SessionState::Open);
+        // round 1 is cold, same-mask round 2 is warm
+        let p1 = reg.begin_round(id, 100, &mask(vec![1, 2, 3])).unwrap();
+        assert_eq!(p1.round, 1);
+        assert!(!p1.warm);
+        assert_eq!(p1.owner, None);
+        reg.assign_owner(id, 100, 1);
+        assert_eq!(reg.owner_of(id), Some(1));
+        reg.complete_round(100, true, Some(0.25));
+        let p2 = reg.begin_round(id, 101, &mask(vec![3, 2, 1])).unwrap();
+        assert!(p2.warm);
+        assert_eq!(p2.owner, Some(1));
+        reg.assign_owner(id, 101, 1);
+        reg.complete_round(101, true, Some(0.05));
+        // drifted mask -> cold again
+        let p3 = reg.begin_round(id, 102, &mask(vec![1, 2, 3, 4])).unwrap();
+        assert!(!p3.warm);
+        reg.complete_round(102, true, Some(0.2));
+        let st = reg.status(id).unwrap();
+        assert_eq!(st.rounds.len(), 3);
+        assert_eq!(st.inflight, 0);
+        assert_eq!(st.warm_mean, Some(0.05));
+        assert!((st.cold_mean.unwrap() - 0.225).abs() < 1e-12);
+        // close refuses further rounds
+        let (tpl, inflight) = reg.close(id).unwrap();
+        assert_eq!(tpl, "tpl-0");
+        assert_eq!(inflight, 0);
+        assert!(matches!(
+            reg.begin_round(id, 103, &mask(vec![1])),
+            Err(SessionError::NotOpen { .. })
+        ));
+        assert!(matches!(reg.close(id), Err(SessionError::NotOpen { .. })));
+        assert!(matches!(reg.begin_round(999, 104, &mask(vec![1])), Err(SessionError::Unknown(_))));
+    }
+
+    #[test]
+    fn epoch_bumps_only_on_rehome() {
+        let reg = SessionRegistry::default();
+        let id = reg.open("t");
+        reg.begin_round(id, 1, &mask(vec![1])).unwrap();
+        reg.assign_owner(id, 1, 2);
+        assert_eq!(reg.status(id).unwrap().epoch, 1);
+        reg.complete_round(1, true, None);
+        reg.begin_round(id, 2, &mask(vec![1])).unwrap();
+        reg.assign_owner(id, 2, 2); // same owner: no bump
+        assert_eq!(reg.status(id).unwrap().epoch, 1);
+        reg.orphan_worker(2);
+        assert_eq!(reg.owner_of(id), None);
+        reg.complete_round(2, true, None);
+        reg.begin_round(id, 3, &mask(vec![1])).unwrap();
+        reg.assign_owner(id, 3, 0); // re-homed
+        let st = reg.status(id).unwrap();
+        assert_eq!(st.epoch, 2);
+        assert_eq!(st.rounds.last().unwrap().worker, Some(0));
+    }
+
+    #[test]
+    fn idle_expiry_only_hits_quiet_sessions() {
+        let reg = SessionRegistry::new(Duration::from_millis(0));
+        let quiet = reg.open("a");
+        let busy = reg.open("b");
+        reg.begin_round(busy, 7, &mask(vec![1])).unwrap();
+        let expired = reg.expire_idle(Instant::now());
+        assert_eq!(expired, vec![(quiet, "a".to_string())]);
+        assert_eq!(reg.status(quiet).unwrap().state, SessionState::Expired);
+        assert_eq!(reg.status(busy).unwrap().state, SessionState::Open);
+        // an expired session is not expired twice
+        assert!(reg.expire_idle(Instant::now()).is_empty());
+        // completing the round makes the busy one expirable
+        reg.complete_round(7, true, None);
+        let expired = reg.expire_idle(Instant::now());
+        assert_eq!(expired, vec![(busy, "b".to_string())]);
+    }
+
+    #[test]
+    fn abort_round_rolls_back() {
+        let reg = SessionRegistry::default();
+        let id = reg.open("t");
+        reg.begin_round(id, 5, &mask(vec![1])).unwrap();
+        assert_eq!(reg.inflight(id), Some(1));
+        assert_eq!(reg.session_of_request(5), Some(id));
+        reg.abort_round(5);
+        assert_eq!(reg.inflight(id), Some(0));
+        assert_eq!(reg.session_of_request(5), None);
+        assert!(reg.status(id).unwrap().rounds.is_empty());
+    }
+
+    #[test]
+    fn worker_load_counts_open_sessions_and_inflight_rounds() {
+        let reg = SessionRegistry::default();
+        let a = reg.open("t");
+        let b = reg.open("t");
+        let c = reg.open("t");
+        reg.begin_round(a, 1, &mask(vec![1])).unwrap();
+        reg.assign_owner(a, 1, 0);
+        reg.begin_round(b, 2, &mask(vec![1])).unwrap();
+        reg.assign_owner(b, 2, 0);
+        reg.complete_round(2, true, None);
+        reg.begin_round(c, 3, &mask(vec![1])).unwrap();
+        reg.assign_owner(c, 3, 1);
+        reg.close(c).unwrap();
+        assert_eq!(reg.worker_load(2), vec![(2, 1), (0, 0)]);
+        assert_eq!(reg.open_count(), 2);
+        // stale owner index past the worker count is ignored, not a panic
+        let d = reg.open("t");
+        reg.begin_round(d, 4, &mask(vec![1])).unwrap();
+        reg.assign_owner(d, 4, 9);
+        let _ = reg.worker_load(2);
+    }
+
+    #[test]
+    fn pin_ids_never_collide_with_request_ids() {
+        assert!(pin_id(1) >= SESSION_PIN_BASE);
+        assert_ne!(pin_id(1), pin_id(2));
+        assert_eq!(pin_id(7) & !SESSION_PIN_BASE, 7);
+    }
+}

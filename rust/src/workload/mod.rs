@@ -30,6 +30,15 @@ use crate::util::rng::Pcg;
 /// so changing the mix never perturbs arrivals, masks, or seeds.
 const CLASS_STREAM: u64 = 0x636c_6173; // "clas"
 
+/// RNG stream tag for session-trace base draws (templates, first-round
+/// masks).
+const SESSION_STREAM: u64 = 0x7365_7373; // "sess"
+
+/// RNG stream tag for session mask-drift draws: the drift coin and every
+/// drifted mask come from their own stream, so changing `--mask-drift`
+/// never perturbs which template a session pins or its first-round mask.
+const DRIFT_STREAM: u64 = 0x6472_6966; // "drif"
+
 /// Mask-ratio distribution family (paper Fig. 3).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum MaskDist {
@@ -391,6 +400,118 @@ impl TraceGen {
     }
 }
 
+// -- interactive-session workload ---------------------------------------------
+
+/// One round of a scripted editing session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionRound {
+    /// 1-based round index.
+    pub round: u64,
+    pub mask_ratio: f64,
+    pub prompt_seed: u64,
+    /// Whether the mask drifted from the previous round's (round 1 never
+    /// drifts — there is nothing to reuse yet). An undrifted round keeps
+    /// the previous `(mask_ratio, prompt_seed)` verbatim, so its
+    /// synthesized mask is bit-identical and the session plane classifies
+    /// it *warm*.
+    pub drifted: bool,
+}
+
+/// One scripted editing session: a pinned template plus an ordered round
+/// sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionScript {
+    /// Generator-local session index (frontends allocate the real ids).
+    pub session: u64,
+    pub template: String,
+    pub rounds: Vec<SessionRound>,
+}
+
+/// Interactive-session workload generator (`--sessions N
+/// --rounds-per-session K --mask-drift p`): each session pins one
+/// popularity-drawn template and iterates K rounds; each round after the
+/// first redraws its mask with probability `p` and otherwise repeats the
+/// previous mask exactly (the steady-state the delta-mask reuse path is
+/// built for).
+#[derive(Debug, Clone)]
+pub struct SessionGen {
+    pub sessions: usize,
+    pub rounds_per_session: usize,
+    /// Per-round probability in [0, 1] that the mask drifts.
+    pub mask_drift: f64,
+    pub dist: MaskDist,
+    pub templates: usize,
+    pub seed: u64,
+    /// Template-popularity law (legacy quadratic skew by default).
+    pub popularity: Popularity,
+}
+
+impl SessionGen {
+    pub fn new(
+        sessions: usize,
+        rounds_per_session: usize,
+        mask_drift: f64,
+        dist: MaskDist,
+        templates: usize,
+        seed: u64,
+    ) -> SessionGen {
+        assert!(sessions > 0 && rounds_per_session > 0 && templates > 0);
+        assert!((0.0..=1.0).contains(&mask_drift));
+        SessionGen {
+            sessions,
+            rounds_per_session,
+            mask_drift,
+            dist,
+            templates,
+            seed,
+            popularity: Popularity::Quadratic,
+        }
+    }
+
+    pub fn with_popularity(mut self, popularity: Popularity) -> SessionGen {
+        self.popularity = popularity;
+        self
+    }
+
+    /// Generate the session scripts. Base draws (template, first-round
+    /// mask) and drift draws (coin + redrawn masks) use separate RNG
+    /// streams, so sweeping `mask_drift` leaves the pinned templates and
+    /// first rounds untouched.
+    pub fn generate(&self) -> Vec<SessionScript> {
+        let mut rng = Pcg::with_stream(self.seed, SESSION_STREAM);
+        let mut drng = Pcg::with_stream(self.seed, DRIFT_STREAM);
+        (0..self.sessions)
+            .map(|s| {
+                let z = rng.f64();
+                let tpl = self.popularity.index(z, self.templates);
+                let mut ratio = self.dist.sample(&mut rng);
+                let mut seed = rng.next_u64() >> 12; // 52 bits: JSON f64-exact
+                let rounds = (0..self.rounds_per_session)
+                    .map(|r| {
+                        let drifted = r > 0 && drng.f64() < self.mask_drift;
+                        if drifted {
+                            ratio = self.dist.sample(&mut drng);
+                            seed = drng.next_u64() >> 12;
+                        }
+                        SessionRound {
+                            round: r as u64 + 1,
+                            mask_ratio: ratio,
+                            prompt_seed: seed,
+                            drifted,
+                        }
+                    })
+                    .collect();
+                SessionScript { session: s as u64, template: format!("tpl-{tpl}"), rounds }
+            })
+            .collect()
+    }
+
+    /// Distinct template ids used by this generator.
+    pub fn template_ids(&self) -> Vec<String> {
+        (0..self.templates).map(|i| format!("tpl-{i}")).collect()
+    }
+}
+
 /// Replay helper: sleep until each event is due, then hand it off.
 pub fn replay<F: FnMut(&TraceEvent)>(events: &[TraceEvent], mut submit: F) {
     let start = std::time::Instant::now();
@@ -690,6 +811,61 @@ mod tests {
         let in_burst =
             ev.iter().filter(|e| (e.at / 10.0).fract() < 0.1).count() as f64 / ev.len() as f64;
         assert!(in_burst > 0.35, "in-burst share {in_burst}");
+    }
+
+    #[test]
+    fn session_gen_drift_controls_round_reuse() {
+        // drift 0: every round repeats round 1's mask exactly
+        let frozen = SessionGen::new(4, 5, 0.0, MaskDist::Production, 8, 21).generate();
+        assert_eq!(frozen.len(), 4);
+        for s in &frozen {
+            assert_eq!(s.rounds.len(), 5);
+            assert_eq!(s.rounds[0].round, 1);
+            assert!(!s.rounds[0].drifted, "round 1 never drifts");
+            for r in &s.rounds[1..] {
+                assert!(!r.drifted);
+                assert_eq!(r.mask_ratio, s.rounds[0].mask_ratio);
+                assert_eq!(r.prompt_seed, s.rounds[0].prompt_seed);
+            }
+        }
+        // drift 1: every round after the first redraws
+        let churn = SessionGen::new(4, 5, 1.0, MaskDist::Production, 8, 21).generate();
+        for s in &churn {
+            for w in s.rounds.windows(2) {
+                assert!(w[1].drifted);
+                assert_ne!(w[0].prompt_seed, w[1].prompt_seed);
+            }
+        }
+        // deterministic per seed
+        let again = SessionGen::new(4, 5, 1.0, MaskDist::Production, 8, 21).generate();
+        assert_eq!(churn, again);
+    }
+
+    #[test]
+    fn session_drift_stream_is_isolated() {
+        // sweeping --mask-drift must not perturb pinned templates or
+        // first-round masks (they come from the base stream)
+        let a = SessionGen::new(6, 4, 0.0, MaskDist::Production, 16, 33).generate();
+        let b = SessionGen::new(6, 4, 0.7, MaskDist::Production, 16, 33).generate();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.template, y.template, "drift must not re-pin templates");
+            assert_eq!(x.rounds[0], y.rounds[0], "round 1 is drift-invariant");
+        }
+        // and the drifted variant actually drifted somewhere
+        assert!(b.iter().any(|s| s.rounds.iter().any(|r| r.drifted)));
+        // an undrifted round realizes a bit-identical mask (the warm
+        // invariant the session plane's delta check relies on)
+        let s = &a[0];
+        let ev = |r: &SessionRound| TraceEvent {
+            id: 0,
+            at: 0.0,
+            template: s.template.clone(),
+            mask_ratio: r.mask_ratio,
+            prompt_seed: r.prompt_seed,
+            priority: Priority::Interactive,
+            deadline_ms: None,
+        };
+        assert_eq!(ev(&s.rounds[0]).mask(8), ev(&s.rounds[1]).mask(8));
     }
 
     #[test]
