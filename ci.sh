@@ -24,6 +24,12 @@ run() {
 
 run cargo build --release
 run cargo test -q
+# Chaos suite: seeded fault scenarios (disk corruption, loader drops, KV
+# upload failures, RPC drop/delay/truncation, step-boundary crashes).
+# Seeds are compiled into the tests, so every run sweeps the exact same
+# fault schedule. Asserts no hung tickets, no lost or duplicated
+# requests, and bit-identical latents vs the fault-free run.
+run cargo test -q --test chaos
 run cargo fmt --check
 if [[ "${1:-}" != "--no-clippy" ]]; then
   run cargo clippy --all-targets -- -D warnings
@@ -82,6 +88,17 @@ if [[ -d artifacts ]]; then
   run cargo run --release --example overhead_bench -- 8 0.3
 else
   echo "ci.sh: artifacts/ absent; skipping overhead bench smoke"
+fi
+
+# Fault-injection smoke: the same trace replayed through the dist plane
+# at 0%/1%/5% injected fault rates with a fixed seed — throughput +
+# p50/p99 per rate, degraded-block counts, breaker trips, retry-budget
+# spend, written to BENCH_faults.json. Hard gate: zero failed requests
+# at every swept rate (faults may cost latency, never a request).
+if [[ -d artifacts ]]; then
+  run cargo run --release --example fault_bench -- 16 8 2
+else
+  echo "ci.sh: artifacts/ absent; skipping fault bench smoke"
 fi
 
 echo "ci.sh: all checks passed"

@@ -1,0 +1,217 @@
+//! Fault-injection bench: replay one Poisson trace through the
+//! distributed plane (router + worker nodes over loopback RPC) at swept
+//! injected fault rates — 0%, 1%, 5% across disk corruption, loader
+//! drops, device-upload refusals, step-boundary crashes and transport
+//! faults — and write `BENCH_faults.json`: throughput + p50/p99 per
+//! rate, degraded-block counts per ladder rung, breaker trips, and
+//! retry-budget spend.
+//!
+//! **Hard gate:** zero failed requests at every swept rate. The whole
+//! point of the degradation ladder is that injected faults cost latency,
+//! never correctness — a single failed request fails the bench (and
+//! ci.sh with it).
+//!
+//! Run: `cargo run --release --example fault_bench -- [requests] [rps] [workers]`
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use instgenie::cache::LatencyModel;
+use instgenie::cluster::ClusterOpts;
+use instgenie::config::{EngineConfig, SystemKind};
+use instgenie::dist::{DistConfig, Router, WorkerNode};
+use instgenie::faults::{FaultPlan, FaultSite};
+use instgenie::metrics::Recorder;
+use instgenie::runtime::Manifest;
+use instgenie::scheduler;
+use instgenie::util::json::Json;
+use instgenie::workload::{replay, MaskDist, TraceGen};
+
+const TEMPLATES: usize = 2;
+const SCHED: &str = "round-robin";
+const SEED: u64 = 43;
+const RATES: [f64; 3] = [0.0, 0.01, 0.05];
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ig-faultbench-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).expect("spill dir");
+    d
+}
+
+/// The swept plan: one rate across every ladder rung — storage, loader,
+/// device retention, engine crashes, transport.
+fn plan(rate: f64) -> Option<FaultPlan> {
+    if rate <= 0.0 {
+        return None;
+    }
+    Some(
+        FaultPlan::new(SEED)
+            .with_rate(FaultSite::DiskRead, rate)
+            .with_rate(FaultSite::DiskCorrupt, rate)
+            .with_rate(FaultSite::LoaderFail, rate)
+            .with_rate(FaultSite::DeviceUpload, rate)
+            .with_rate(FaultSite::WorkerCrash, rate)
+            .with_rate(FaultSite::RpcDrop, rate)
+            .with_rate(FaultSite::RpcConnect, rate)
+            .with_rate(FaultSite::RpcDelay, rate),
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(16);
+    let rps: f64 = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(8.0);
+    let workers: usize = args.get(2).and_then(|a| a.parse().ok()).unwrap_or(2).max(1);
+
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("[fault_bench] no artifacts; skipping (run `make artifacts`)");
+        return Ok(());
+    };
+    let model = if manifest.models.contains_key("sd21m") {
+        "sd21m".to_string()
+    } else {
+        match manifest.models.keys().next() {
+            Some(m) => m.clone(),
+            None => {
+                eprintln!("[fault_bench] empty manifest; skipping");
+                return Ok(());
+            }
+        }
+    };
+    let mcfg = manifest.model(&model)?.config.clone();
+    let lat = LatencyModel::load_or_nominal("artifacts", &model);
+    let events = TraceGen::new(rps, MaskDist::Production, TEMPLATES, 42).generate(requests);
+    println!(
+        "== fault bench: model={model} workers={workers} rps={rps} requests={requests} \
+         rates={RATES:?} =="
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    for (sweep, &rate) in RATES.iter().enumerate() {
+        // fresh plane per rate: small host budget keeps the disk tier on
+        // the serving path so storage faults actually exercise the ladder
+        let engine = |tag: &str| {
+            let mut e = EngineConfig::for_system(SystemKind::InstGenIE);
+            e.prepost_cpu_us = 200;
+            e.host_cache_budget = 1;
+            e.spill_dir = tmp_dir(&format!("{tag}-{sweep}"));
+            e.faults = plan(rate);
+            e
+        };
+        let mut cfg = DistConfig::fast();
+        cfg.faults = plan(rate);
+
+        let e = engine("sched");
+        let sched = scheduler::by_name(SCHED, &mcfg, &lat, e.cache_mode, e.max_batch)
+            .expect("scheduler");
+        let router = Router::new(mcfg.clone(), sched, None, cfg.clone());
+        let addr = router.start("127.0.0.1:0")?;
+        let mut nodes: Vec<Arc<WorkerNode>> = Vec::new();
+        for i in 0..workers {
+            let opts = ClusterOpts {
+                workers: 1,
+                engine: engine(&format!("w{i}")),
+                model: model.clone(),
+                artifact_dir: "artifacts".into(),
+                templates: (0..TEMPLATES).map(|i| format!("tpl-{i}")).collect(),
+                lat_model: lat.clone(),
+                warmup: false,
+            };
+            let node = Arc::new(WorkerNode::launch(format!("w{i}"), opts)?);
+            node.start("127.0.0.1:0")?;
+            node.announce_to(&addr.to_string(), &cfg);
+            nodes.push(node);
+        }
+        let deadline = Instant::now() + Duration::from_secs(120);
+        while router.ready_count() < workers {
+            anyhow::ensure!(Instant::now() < deadline, "workers never became ready");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+
+        let t0 = Instant::now();
+        let mut tickets = Vec::new();
+        let mut rec = Recorder::new();
+        replay(&events, |ev| match router.submit_event(ev) {
+            Ok(t) => tickets.push(t),
+            Err(e) => rec.record_failure(&e),
+        });
+        for t in &tickets {
+            match t.wait(Duration::from_secs(600)) {
+                Ok(resp) => rec.record(&resp),
+                Err(e) => rec.record_failure(&e),
+            }
+        }
+        let makespan = t0.elapsed().as_secs_f64();
+        let rep = rec.report(makespan);
+
+        // ladder observability, read off the in-thread worker engines
+        let mut degraded = (0u64, 0u64, 0u64);
+        let mut trips = 0u64;
+        for n in &nodes {
+            for s in n.cluster().worker_snapshots() {
+                degraded.0 += s.transfers.cache_degraded_disk;
+                degraded.1 += s.transfers.cache_degraded_device;
+                degraded.2 += s.transfers.cache_degraded_loader;
+            }
+            trips += n.cluster().breaker_trips();
+        }
+        let (_, cluster_body) = router.route("GET", "/v1/cluster", "");
+        let retry_spent = cluster_body.at("retry_budget_spent").as_f64().unwrap_or(0.0);
+
+        router.shutdown();
+        for n in &nodes {
+            n.stop();
+        }
+
+        println!(
+            "   rate={:>4.1}%  tput={:.2} req/s  p50={:.1}ms p99={:.1}ms  \
+             degraded disk/dev/loader={}/{}/{}  trips={trips}  retries={retry_spent}",
+            rate * 100.0,
+            rep.throughput,
+            rep.e2e.p50 * 1e3,
+            rep.e2e.p99 * 1e3,
+            degraded.0,
+            degraded.1,
+            degraded.2,
+        );
+        // the hard gate: faults may cost latency, never a request
+        anyhow::ensure!(
+            rep.failed == 0 && rep.completed == events.len(),
+            "fault rate {rate}: {}/{} completed, {} failed — the degradation \
+             ladder must absorb every injected fault",
+            rep.completed,
+            events.len(),
+            rep.failed
+        );
+        rows.push(Json::obj(vec![
+            ("fault_rate", Json::num(rate)),
+            ("throughput", Json::num(rep.throughput)),
+            ("p50_e2e", Json::num(rep.e2e.p50)),
+            ("p95_e2e", Json::num(rep.e2e.p95)),
+            ("p99_e2e", Json::num(rep.e2e.p99)),
+            ("mean_e2e", Json::num(rep.e2e.mean)),
+            ("completed", Json::num(rep.completed as f64)),
+            ("failed", Json::num(rep.failed as f64)),
+            ("makespan", Json::num(rep.makespan)),
+            ("degraded_disk", Json::num(degraded.0 as f64)),
+            ("degraded_device", Json::num(degraded.1 as f64)),
+            ("degraded_loader", Json::num(degraded.2 as f64)),
+            ("breaker_trips", Json::num(trips as f64)),
+            ("retry_budget_spent", Json::num(retry_spent)),
+        ]));
+    }
+
+    let out = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("workers", Json::num(workers as f64)),
+        ("requests", Json::num(requests as f64)),
+        ("rps", Json::num(rps)),
+        ("seed", Json::num(SEED as f64)),
+        ("gate", Json::str("zero failed requests at every swept fault rate")),
+        ("sweeps", Json::arr(rows)),
+    ]);
+    std::fs::write("BENCH_faults.json", out.to_string())?;
+    println!("[fault_bench] wrote BENCH_faults.json (gate: zero failed requests)");
+    Ok(())
+}

@@ -26,6 +26,9 @@
 
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::Arc;
+
+use crate::faults::{FaultInjector, FaultSite};
 
 /// Key of one cached block's device-resident K/V.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -59,6 +62,10 @@ pub struct KvTierStats {
     pub purged: u64,
     pub bytes: u64,
     pub entries: u64,
+    /// Injected (or real) upload/retention failures: the buffer served
+    /// this step but was not retained — the block re-uploads next step
+    /// (the device → host rung of the degradation ladder).
+    pub upload_faults: u64,
 }
 
 /// HBM-budgeted LRU over upload-once device buffers.
@@ -75,6 +82,8 @@ pub struct KvDeviceTier<P> {
     evictions: u64,
     rejected: u64,
     purged: u64,
+    upload_faults: u64,
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl<P> KvDeviceTier<P> {
@@ -94,7 +103,15 @@ impl<P> KvDeviceTier<P> {
             evictions: 0,
             rejected: 0,
             purged: 0,
+            upload_faults: 0,
+            faults: None,
         }
+    }
+
+    /// Attach a fault injector (chaos testing); builder-style.
+    pub fn with_faults(mut self, faults: Arc<FaultInjector>) -> KvDeviceTier<P> {
+        self.faults = Some(faults);
+        self
     }
 
     pub fn budget(&self) -> usize {
@@ -160,6 +177,18 @@ impl<P> KvDeviceTier<P> {
             // racing re-insert of a resident key (e.g. re-upload after a
             // probe raced an eviction): keep the resident entry.
             return (Rc::clone(&prev.payload), true);
+        }
+        // injected upload/retention failure: the freshly uploaded buffer
+        // still serves this step (correctness is untouched) but the tier
+        // does not retain it — the block demotes to per-step re-upload
+        if self
+            .faults
+            .as_ref()
+            .is_some_and(|f| f.should(FaultSite::DeviceUpload))
+        {
+            self.rejected += 1;
+            self.upload_faults += 1;
+            return (payload, false);
         }
         if bytes > self.budget || !self.make_room(bytes) {
             self.rejected += 1;
@@ -251,6 +280,7 @@ impl<P> KvDeviceTier<P> {
             purged: self.purged,
             bytes: self.bytes as u64,
             entries: self.entries.len() as u64,
+            upload_faults: self.upload_faults,
         }
     }
 }
@@ -350,6 +380,21 @@ mod tests {
         assert!(!stored);
         assert!(tier.get(&key(0, 0, 0)).is_none());
         assert_eq!(tier.bytes(), 0);
+    }
+
+    #[test]
+    fn injected_upload_fault_serves_but_does_not_retain() {
+        use crate::faults::{FaultPlan, FaultSite};
+        let plan = FaultPlan::new(2).with_rate(FaultSite::DeviceUpload, 1.0);
+        let mut tier: KvDeviceTier<u32> =
+            KvDeviceTier::new(100).with_faults(Arc::new(FaultInjector::new(plan)));
+        let k = key(0, 0, 0);
+        let (p, stored) = tier.insert(k, 7, 10);
+        assert!(!stored, "faulted upload must not be retained");
+        assert_eq!(*p, 7, "the buffer still serves the current step");
+        assert!(tier.get(&k).is_none(), "next step re-uploads");
+        let s = tier.stats();
+        assert_eq!((s.upload_faults, s.rejected, s.bytes, s.entries), (1, 1, 0, 0));
     }
 
     #[test]

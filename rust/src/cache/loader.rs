@@ -27,6 +27,7 @@ use std::time::Instant;
 
 use crate::cache::store::TemplateActivations;
 use crate::config::CacheMode;
+use crate::faults::{FaultInjector, FaultSite};
 
 /// What to stage for one batch member of one block.
 #[derive(Clone)]
@@ -75,11 +76,29 @@ impl CacheLoader {
     /// Spawn the loader with the given simulated bandwidth (bytes/sec;
     /// `0` disables pacing — the "ideal" ablation of Fig. 4-Left).
     pub fn spawn(bandwidth: f64) -> CacheLoader {
+        CacheLoader::spawn_with_faults(bandwidth, None)
+    }
+
+    /// Spawn with an optional fault injector. An injected `loader_fail`
+    /// drops the job's completion sender without staging anything — the
+    /// worker's recv error on the completion channel is its signal to
+    /// fall back to a synchronous host-store gather (bit-identical, just
+    /// unoverlapped).
+    pub fn spawn_with_faults(
+        bandwidth: f64,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> CacheLoader {
         let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
         let handle = std::thread::Builder::new()
             .name("cache-loader".into())
             .spawn(move || {
                 while let Ok(job) = rx.recv() {
+                    if faults.as_ref().is_some_and(|f| f.should(FaultSite::LoaderFail)) {
+                        // staging job "dies": the receiver observes a
+                        // disconnected channel, never a hang
+                        drop(job.done);
+                        continue;
+                    }
                     let t0 = Instant::now();
                     let staged =
                         gather(job.block, &job.members, job.mode, job.slots, job.skip_kv);
@@ -282,6 +301,22 @@ mod tests {
         // that the device tier made unnecessary
         assert_eq!(warm.bytes, 2 * 4, "y bytes only: 1 row x hidden 2 x 4B");
         assert_eq!(cold.bytes, warm.bytes + 2 * 2 * 4, "cold adds k+v bytes");
+    }
+
+    #[test]
+    fn injected_loader_failure_disconnects_instead_of_hanging() {
+        use crate::faults::FaultPlan;
+        let plan = FaultPlan::new(1).with_rate(FaultSite::LoaderFail, 1.0);
+        let loader =
+            CacheLoader::spawn_with_faults(0.0, Some(Arc::new(FaultInjector::new(plan))));
+        let m = MemberGather { store: store(false), step: 0, ids: Arc::new(vec![0]) };
+        let rx = loader.submit(0, vec![m], CacheMode::CacheY, 1, false);
+        assert!(rx.recv().is_err(), "dead job must disconnect, not hang");
+        // the loader thread survives the injected death: the sync path
+        // (the worker's fallback) still gathers correctly
+        let m = MemberGather { store: store(false), step: 1, ids: Arc::new(vec![3, 1]) };
+        let staged = loader.gather_sync(0, vec![m], CacheMode::CacheY, 1);
+        assert_eq!(staged.y[0], vec![26.0, 27.0, 22.0, 23.0]);
     }
 
     #[test]

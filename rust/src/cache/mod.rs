@@ -15,4 +15,4 @@ pub use latency_model::LatencyModel;
 pub use loader::{CacheLoader, MemberGather, StagedBlock};
 pub use pipeline::{plan, BlockCosts, PipelinePlan};
 pub use store::{register_template, CacheEntry, TemplateActivations};
-pub use tier::{Residency, TierStats, TieredStore};
+pub use tier::{Residency, TierError, TierStats, TieredStore};

@@ -16,7 +16,7 @@ use anyhow::Result;
 use crate::config::CacheMode;
 use crate::model::Latent;
 use crate::runtime::ModelRuntime;
-use crate::util::rng::hash_str;
+use crate::util::rng::{hash_str, splitmix64};
 
 /// Cached activations of one (step, block).
 #[derive(Debug, Clone)]
@@ -71,6 +71,38 @@ impl TemplateActivations {
         hash_str(template_id)
     }
 
+    /// Order-sensitive content checksum over the template id, shape,
+    /// seed, and every activation byte (FNV-1a folded through
+    /// splitmix64). Embedded in disk-tier spill artifacts so bit rot is
+    /// detected on promotion and demoted to a recompute instead of
+    /// silently denoising with garbage. The `model` field is excluded:
+    /// spills do not persist it, and the checksum must verify on the
+    /// deserialized copy.
+    pub fn content_checksum(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a offset basis
+        h = fnv_extend(h, self.template_id.as_bytes());
+        for d in [
+            self.steps as u64,
+            self.blocks as u64,
+            self.tokens as u64,
+            self.hidden as u64,
+            self.seed,
+        ] {
+            h = fnv_extend(h, &d.to_le_bytes());
+        }
+        for e in &self.entries {
+            for x in &e.y {
+                h = fnv_extend(h, &x.to_le_bytes());
+            }
+            if let Some((k, v)) = &e.kv {
+                for x in k.iter().chain(v.iter()) {
+                    h = fnv_extend(h, &x.to_le_bytes());
+                }
+            }
+        }
+        splitmix64(h)
+    }
+
     /// Rebuild the template's initial latent x_T.
     pub fn initial_latent(&self) -> Latent {
         Latent::noise(self.tokens, self.hidden, self.seed, 1.0)
@@ -103,6 +135,14 @@ impl TemplateActivations {
     pub fn entries(&self) -> &[CacheEntry] {
         &self.entries
     }
+}
+
+fn fnv_extend(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 /// Run the full model on a template and capture its activations.
@@ -196,6 +236,23 @@ mod tests {
         assert_eq!(s.size_bytes(), 4 * 8);
         s.entries[0].kv = Some((vec![0.0; 8], vec![0.0; 8]));
         assert_eq!(s.size_bytes(), 4 * 24);
+    }
+
+    #[test]
+    fn checksum_is_stable_and_content_sensitive() {
+        let a = dummy(2, 2);
+        let b = dummy(2, 2);
+        assert_eq!(a.content_checksum(), b.content_checksum());
+        let mut c = dummy(2, 2);
+        c.entries[3].y[5] += 1.0;
+        assert_ne!(a.content_checksum(), c.content_checksum());
+        let mut d = dummy(2, 2);
+        d.template_id = "other".into();
+        assert_ne!(a.content_checksum(), d.content_checksum());
+        // model is excluded: spills don't persist it
+        let mut e = dummy(2, 2);
+        e.model = String::new();
+        assert_eq!(a.content_checksum(), e.content_checksum());
     }
 
     #[test]

@@ -11,15 +11,47 @@
 //! atomic (temp file + rename), so concurrent evictions of the same
 //! template by different workers are safe, and [`TieredStore::remove`]
 //! (template retirement) frees both tiers.
+//!
+//! Disk is the one tier backed by a medium that can actually rot, so its
+//! failures are *typed*, never panics: every spill embeds a per-artifact
+//! content checksum (bit-flips read back as [`TierError::Corrupt`], and
+//! the poisoned file is dropped), read/write I/O errors surface as
+//! [`TierError::Io`], and a run of consecutive disk failures trips a
+//! [`CircuitBreaker`] that routes around the tier (reads skip to miss,
+//! evictions drop instead of spilling) until a cooldown probe succeeds.
+//! Callers treat every `Err` as "cache unavailable, recompute" — the
+//! degradation ladder, never a request failure. A [`FaultInjector`] can
+//! be attached to exercise all of it deterministically.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
-
 use super::store::{CacheEntry, TemplateActivations};
+use crate::faults::{CircuitBreaker, FaultInjector, FaultSite, BREAKER_COOLDOWN, BREAKER_THRESHOLD};
+
+/// Typed disk-tier failure. Every variant means "the cache copy is
+/// unavailable"; none of them means the request must fail — the caller
+/// falls back down the ladder (host → disk → full recompute).
+#[derive(Debug, thiserror::Error)]
+pub enum TierError {
+    /// Real (or injected write-path) I/O failure; the spill file, if
+    /// any, is left in place for a later retry.
+    #[error("disk tier I/O on {path:?}: {source}")]
+    Io {
+        path: PathBuf,
+        #[source]
+        source: std::io::Error,
+    },
+    /// The artifact failed structural validation or its content
+    /// checksum; the poisoned file has been dropped.
+    #[error("corrupt spill {path:?}: {detail}")]
+    Corrupt { path: PathBuf, detail: String },
+    /// A deterministic injected fault (chaos testing).
+    #[error("injected {0} fault")]
+    Injected(&'static str),
+}
 
 /// Counters for cache-behaviour observability (and tests).
 #[derive(Debug, Default, Clone)]
@@ -28,6 +60,11 @@ pub struct TierStats {
     pub disk_promotions: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Disk read/write failures (I/O errors, corruption, injected).
+    pub disk_faults: u64,
+    /// Evictions that dropped the template without a disk copy (spill
+    /// write failed or the breaker was open).
+    pub spill_failures: u64,
 }
 
 /// Where a template currently lives in one worker's tier hierarchy — the
@@ -64,6 +101,10 @@ pub struct TieredStore {
     spill_dir: PathBuf,
     /// Simulated disk bandwidth (bytes/s); promotion pacing.
     disk_bandwidth: f64,
+    /// Trips after [`BREAKER_THRESHOLD`] consecutive disk failures;
+    /// while open, the disk tier is skipped entirely.
+    breaker: CircuitBreaker,
+    faults: Option<Arc<FaultInjector>>,
     inner: Mutex<Inner>,
 }
 
@@ -83,6 +124,8 @@ impl TieredStore {
             budget,
             spill_dir,
             disk_bandwidth,
+            breaker: CircuitBreaker::new(BREAKER_THRESHOLD, BREAKER_COOLDOWN),
+            faults: None,
             inner: Mutex::new(Inner {
                 host: HashMap::new(),
                 bytes: 0,
@@ -92,8 +135,26 @@ impl TieredStore {
         }
     }
 
+    /// Attach a fault injector (chaos testing); builder-style, before the
+    /// store is shared.
+    pub fn with_faults(mut self, faults: Arc<FaultInjector>) -> TieredStore {
+        self.faults = Some(faults);
+        self
+    }
+
     pub fn stats(&self) -> TierStats {
         self.inner.lock().unwrap().stats.clone()
+    }
+
+    /// Whether the disk tier's circuit breaker is currently open (the
+    /// tier is being routed around). Feeds `/v1/readyz`.
+    pub fn breaker_open(&self) -> bool {
+        self.breaker.is_open()
+    }
+
+    /// Times the disk breaker has tripped.
+    pub fn breaker_trips(&self) -> u64 {
+        self.breaker.trips()
     }
 
     pub fn host_bytes(&self) -> usize {
@@ -107,8 +168,10 @@ impl TieredStore {
 
     /// Insert a freshly registered template (evicting LRU to disk if the
     /// budget overflows). Re-inserting a resident template replaces it
-    /// without double-counting its bytes.
-    pub fn insert(&self, store: Arc<TemplateActivations>) -> Result<()> {
+    /// without double-counting its bytes. Spill-write failures during
+    /// eviction degrade (the victim is dropped and re-registers on next
+    /// use) rather than erroring the insert.
+    pub fn insert(&self, store: Arc<TemplateActivations>) -> Result<(), TierError> {
         let size = store.size_bytes();
         let mut inner = self.inner.lock().unwrap();
         inner.tombstones.remove(&store.template_id); // re-registration revives
@@ -119,7 +182,7 @@ impl TieredStore {
         ) {
             inner.bytes -= old.store.size_bytes();
         }
-        self.evict_to_budget(&mut inner)?;
+        self.evict_to_budget(&mut inner);
         Ok(())
     }
 
@@ -156,8 +219,10 @@ impl TieredStore {
 
     /// Fetch a template's activations, promoting from disk if required.
     /// Returns `Ok(None)` when the template is unknown to both tiers
-    /// (caller must register it).
-    pub fn get(&self, template_id: &str) -> Result<Option<Arc<TemplateActivations>>> {
+    /// (caller must register it) and `Err` when a disk copy exists but
+    /// cannot be served — the caller recomputes either way; `Err` is the
+    /// degraded flavor.
+    pub fn get(&self, template_id: &str) -> Result<Option<Arc<TemplateActivations>>, TierError> {
         {
             let mut inner = self.inner.lock().unwrap();
             if let Some(slot) = inner.host.get_mut(template_id) {
@@ -173,18 +238,33 @@ impl TieredStore {
             self.inner.lock().unwrap().stats.misses += 1;
             return Ok(None);
         }
+        // open breaker: don't hammer a failing disk — read back as a
+        // plain miss so the caller re-registers without the disk touch
+        if !self.breaker.allow() {
+            self.inner.lock().unwrap().stats.misses += 1;
+            return Ok(None);
+        }
+        if let Some(inj) = &self.faults {
+            if inj.should(FaultSite::DiskRead) {
+                self.note_disk_failure();
+                return Err(TierError::Injected("disk_read"));
+            }
+        }
         let t0 = Instant::now();
         let store = match read_spill(&path) {
             Ok(s) => Arc::new(s),
-            Err(_) => {
-                // corrupt or foreign-format spill: drop it and treat the
-                // template as absent (callers re-register) rather than
-                // poisoning the engine with an IO error
-                let _ = std::fs::remove_file(&path);
-                self.inner.lock().unwrap().stats.misses += 1;
-                return Ok(None);
+            Err(e) => {
+                // corrupt or foreign-format spills are dropped (the next
+                // attempt re-registers a clean copy); transient I/O
+                // errors keep the file for a later retry
+                if matches!(e, TierError::Corrupt { .. }) {
+                    let _ = std::fs::remove_file(&path);
+                }
+                self.note_disk_failure();
+                return Err(e);
             }
         };
+        self.breaker.record_success();
         // the spill embeds its template id: a *different* id that merely
         // sanitizes to the same filename must never be served as ours
         // (the file legitimately belongs to the other template, so it is
@@ -212,7 +292,7 @@ impl TieredStore {
             ) {
                 inner.bytes -= old.store.size_bytes();
             }
-            self.evict_to_budget(&mut inner)?;
+            self.evict_to_budget(&mut inner);
         }
         Ok(Some(store))
     }
@@ -222,24 +302,53 @@ impl TieredStore {
         self.inner.lock().unwrap().host.contains_key(template_id)
     }
 
-    fn evict_to_budget(&self, inner: &mut Inner) -> Result<()> {
+    fn note_disk_failure(&self) {
+        self.breaker.record_failure();
+        self.inner.lock().unwrap().stats.disk_faults += 1;
+    }
+
+    fn evict_to_budget(&self, inner: &mut Inner) {
         while inner.bytes > self.budget && inner.host.len() > 1 {
             // LRU victim
-            let victim = inner
+            let Some(victim) = inner
                 .host
                 .iter()
                 .min_by_key(|(_, s)| s.last_used)
                 .map(|(k, _)| k.clone())
-                .expect("non-empty");
-            let slot = inner.host.remove(&victim).unwrap();
+            else {
+                break;
+            };
+            let Some(slot) = inner.host.remove(&victim) else { break };
             inner.bytes -= slot.store.size_bytes();
             inner.stats.evictions += 1;
             let path = self.spill_path(&victim);
-            if !path.exists() {
-                write_spill(&path, &slot.store)?;
+            if path.exists() {
+                continue;
+            }
+            // breaker open: drop the victim without a disk copy instead
+            // of hammering a failing disk — it re-registers on next use
+            if !self.breaker.allow() {
+                inner.stats.spill_failures += 1;
+                continue;
+            }
+            let injected = self
+                .faults
+                .as_ref()
+                .is_some_and(|f| f.should(FaultSite::DiskWrite));
+            let wrote = if injected {
+                Err(TierError::Injected("disk_write"))
+            } else {
+                write_spill(&path, &slot.store, self.faults.as_deref())
+            };
+            match wrote {
+                Ok(()) => self.breaker.record_success(),
+                Err(_) => {
+                    self.breaker.record_failure();
+                    inner.stats.disk_faults += 1;
+                    inner.stats.spill_failures += 1;
+                }
             }
         }
-        Ok(())
     }
 
     fn spill_path(&self, template_id: &str) -> PathBuf {
@@ -267,22 +376,33 @@ fn pace(bytes: usize, bandwidth: f64, t0: Instant) {
 
 // -- spill file format -------------------------------------------------------
 // header (little-endian u64s): magic, steps, blocks, tokens, hidden, seed,
-// has_kv, id_len; then the template id (id_len raw bytes — filenames are
-// sanitized, so distinct ids can share a path and the embedded id is the
-// authority); then entries in (step, block) order, each y [+ k, v] as raw
-// f32.
+// has_kv, id_len, content checksum; then the template id (id_len raw bytes
+// — filenames are sanitized, so distinct ids can share a path and the
+// embedded id is the authority); then entries in (step, block) order, each
+// y [+ k, v] as raw f32. The checksum is
+// `TemplateActivations::content_checksum` over id + shape + every
+// activation byte: any bit-flip in the payload reads back as
+// `TierError::Corrupt` instead of silently denoising with garbage.
 
 #[allow(clippy::unusual_byte_groupings)]
-const SPILL_MAGIC: u64 = 0x1057_6e13_ac71_ca12;
+const SPILL_MAGIC: u64 = 0x1057_6e13_ac71_ca13; // ..12 was the unchecksummed v1
 
-const SPILL_HEADER_BYTES: usize = 8 * 8;
+const SPILL_HEADER_BYTES: usize = 9 * 8;
 
 /// Per-process unique suffix for atomic spill writes.
 static SPILL_TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
 
-fn write_spill(path: &PathBuf, store: &TemplateActivations) -> Result<()> {
+fn write_spill(
+    path: &PathBuf,
+    store: &TemplateActivations,
+    faults: Option<&FaultInjector>,
+) -> Result<(), TierError> {
+    let io_err = |p: &PathBuf| {
+        let p = p.clone();
+        move |source: std::io::Error| TierError::Io { path: p, source }
+    };
     if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
+        std::fs::create_dir_all(dir).map_err(io_err(path))?;
     }
     let has_kv = store.entries().first().map(|e| e.kv.is_some()).unwrap_or(false);
     let id = store.template_id.as_bytes();
@@ -297,6 +417,7 @@ fn write_spill(path: &PathBuf, store: &TemplateActivations) -> Result<()> {
         store.seed,
         has_kv as u64,
         id.len() as u64,
+        store.content_checksum(),
     ] {
         buf.extend_from_slice(&v.to_le_bytes());
     }
@@ -313,6 +434,14 @@ fn write_spill(path: &PathBuf, store: &TemplateActivations) -> Result<()> {
             push(v);
         }
     }
+    // injected bit rot: flip one bit anywhere in the artifact — the
+    // checksum (or the structural validation) must catch it on read
+    if let Some(inj) = faults {
+        if inj.should(FaultSite::DiskCorrupt) {
+            let bit = inj.word(FaultSite::DiskCorrupt) as usize % (buf.len() * 8);
+            buf[bit / 8] ^= 1 << (bit % 8);
+        }
+    }
     // atomic publish: workers share the disk tier, so a concurrent
     // eviction of the same template must never interleave writes —
     // readers see either the old complete file or the new one
@@ -321,15 +450,17 @@ fn write_spill(path: &PathBuf, store: &TemplateActivations) -> Result<()> {
         std::process::id(),
         SPILL_TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
     ));
-    std::fs::write(&tmp, &buf).with_context(|| format!("writing spill {tmp:?}"))?;
-    std::fs::rename(&tmp, path).with_context(|| format!("publishing spill {path:?}"))?;
+    std::fs::write(&tmp, &buf).map_err(io_err(&tmp))?;
+    std::fs::rename(&tmp, path).map_err(io_err(path))?;
     Ok(())
 }
 
-fn read_spill(path: &PathBuf) -> Result<TemplateActivations> {
-    let bytes = std::fs::read(path).with_context(|| format!("reading spill {path:?}"))?;
+fn read_spill(path: &PathBuf) -> Result<TemplateActivations, TierError> {
+    let corrupt = |detail: String| TierError::Corrupt { path: path.clone(), detail };
+    let bytes = std::fs::read(path)
+        .map_err(|source| TierError::Io { path: path.clone(), source })?;
     if bytes.len() < SPILL_HEADER_BYTES {
-        bail!("spill file too short");
+        return Err(corrupt("spill file too short".into()));
     }
     let u64_at = |i: usize| {
         let mut b = [0u8; 8];
@@ -337,7 +468,7 @@ fn read_spill(path: &PathBuf) -> Result<TemplateActivations> {
         u64::from_le_bytes(b)
     };
     if u64_at(0) != SPILL_MAGIC {
-        bail!("bad spill magic");
+        return Err(corrupt("bad spill magic".into()));
     }
     let steps = u64_at(1) as usize;
     let blocks = u64_at(2) as usize;
@@ -346,6 +477,7 @@ fn read_spill(path: &PathBuf) -> Result<TemplateActivations> {
     let seed = u64_at(5);
     let has_kv = u64_at(6) != 0;
     let id_len = u64_at(7) as usize;
+    let checksum = u64_at(8);
     let lh = tokens * hidden;
     let per_entry = lh * if has_kv { 3 } else { 1 };
     let want = steps
@@ -356,12 +488,12 @@ fn read_spill(path: &PathBuf) -> Result<TemplateActivations> {
         .and_then(|n| n.checked_add(id_len))
         .unwrap_or(usize::MAX);
     if bytes.len() != want {
-        bail!("spill size mismatch: {} vs {}", bytes.len(), want);
+        return Err(corrupt(format!("spill size mismatch: {} vs {}", bytes.len(), want)));
     }
     let id = String::from_utf8(
         bytes[SPILL_HEADER_BYTES..SPILL_HEADER_BYTES + id_len].to_vec(),
     )
-    .context("spill template id not utf-8")?;
+    .map_err(|_| corrupt("spill template id not utf-8".into()))?;
     let mut off = SPILL_HEADER_BYTES + id_len;
     let mut read_f32s = |n: usize| {
         let mut out = vec![0f32; n];
@@ -383,14 +515,19 @@ fn read_spill(path: &PathBuf) -> Result<TemplateActivations> {
         };
         entries.push(CacheEntry { y, kv });
     }
-    Ok(TemplateActivations::from_parts(
+    let acts = TemplateActivations::from_parts(
         id, String::new(), steps, blocks, tokens, hidden, seed, entries,
-    ))
+    );
+    if acts.content_checksum() != checksum {
+        return Err(corrupt("content checksum mismatch".into()));
+    }
+    Ok(acts)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::faults::{FaultPlan, BREAKER_THRESHOLD};
 
     fn dummy(id: &str, steps: usize, blocks: usize, kv: bool) -> Arc<TemplateActivations> {
         let tokens = 4;
@@ -424,7 +561,7 @@ mod tests {
         let dir = tmp_dir("rt");
         let s = dummy("abc", 2, 3, true);
         let path = dir.join("abc.actcache");
-        write_spill(&path, &s).unwrap();
+        write_spill(&path, &s, None).unwrap();
         let back = read_spill(&path).unwrap();
         assert_eq!(back.template_id, "abc", "spill embeds its template id");
         assert_eq!(back.steps, 2);
@@ -509,14 +646,96 @@ mod tests {
     }
 
     #[test]
-    fn corrupt_spill_reads_as_miss_and_is_dropped() {
+    fn corrupt_spill_is_typed_and_dropped() {
         let dir = tmp_dir("corrupt");
         let store = TieredStore::new(1 << 20, dir.clone(), 0.0);
         let path = store.spill_path("bad");
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(&path, b"not a spill file").unwrap();
-        assert!(store.get("bad").unwrap().is_none(), "corrupt file is a miss");
+        let err = store.get("bad").expect_err("corrupt file is a typed failure");
+        assert!(matches!(err, TierError::Corrupt { .. }), "got {err:?}");
         assert!(!path.exists(), "corrupt file is dropped");
+        assert_eq!(store.stats().disk_faults, 1);
+        // with the poisoned file gone, the next lookup is a clean miss
+        // (the ladder's re-registration path)
+        assert!(store.get("bad").unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checksum_catches_payload_bit_flip() {
+        let dir = tmp_dir("bitflip");
+        let s = dummy("flip", 2, 2, false);
+        let path = dir.join("flip.actcache");
+        write_spill(&path, &s, None).unwrap();
+        // flip one bit in the activation payload; the size still matches
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_spill(&path).expect_err("bit rot must not round-trip");
+        assert!(
+            matches!(&err, TierError::Corrupt { detail, .. } if detail.contains("checksum")),
+            "got {err:?}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn injected_read_faults_trip_the_breaker() {
+        let dir = tmp_dir("inj-read");
+        let plan = FaultPlan::new(11).with_rate(crate::faults::FaultSite::DiskRead, 1.0);
+        let inj = Arc::new(FaultInjector::new(plan));
+        let one_size = dummy("x", 2, 2, false).size_bytes();
+        let store =
+            TieredStore::new(one_size, dir.clone(), 0.0).with_faults(Arc::clone(&inj));
+        store.insert(dummy("a", 2, 2, false)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        store.insert(dummy("b", 2, 2, false)).unwrap(); // spills a
+        assert_eq!(store.residency("a"), Residency::Disk);
+        for i in 0..BREAKER_THRESHOLD {
+            let err = store.get("a").expect_err("injected read fault");
+            assert!(matches!(err, TierError::Injected("disk_read")), "try {i}: {err:?}");
+        }
+        assert!(store.breaker_open(), "threshold failures open the breaker");
+        assert_eq!(store.breaker_trips(), 1);
+        // while open, the disk tier is skipped: a plain miss, no draw
+        let before = inj.injected(crate::faults::FaultSite::DiskRead);
+        assert!(store.get("a").unwrap().is_none(), "open breaker reads as miss");
+        assert_eq!(inj.injected(crate::faults::FaultSite::DiskRead), before);
+        assert_eq!(store.stats().disk_faults, BREAKER_THRESHOLD as u64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn injected_write_corruption_is_caught_on_promotion() {
+        let dir = tmp_dir("inj-corrupt");
+        let plan = FaultPlan::new(5).with_rate(crate::faults::FaultSite::DiskCorrupt, 1.0);
+        let store = TieredStore::new(dummy("x", 2, 2, false).size_bytes(), dir.clone(), 0.0)
+            .with_faults(Arc::new(FaultInjector::new(plan)));
+        store.insert(dummy("a", 2, 2, false)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        store.insert(dummy("b", 2, 2, false)).unwrap(); // spills a, corrupted
+        assert_eq!(store.residency("a"), Residency::Disk);
+        let err = store.get("a").expect_err("corrupted spill must not serve");
+        assert!(matches!(err, TierError::Corrupt { .. }), "got {err:?}");
+        assert_eq!(store.residency("a"), Residency::Absent, "poisoned file dropped");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn injected_write_failure_drops_victim_without_spill() {
+        let dir = tmp_dir("inj-write");
+        let plan = FaultPlan::new(9).with_rate(crate::faults::FaultSite::DiskWrite, 1.0);
+        let store = TieredStore::new(dummy("x", 2, 2, false).size_bytes(), dir.clone(), 0.0)
+            .with_faults(Arc::new(FaultInjector::new(plan)));
+        store.insert(dummy("a", 2, 2, false)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        store.insert(dummy("b", 2, 2, false)).unwrap(); // eviction spill fails
+        assert_eq!(store.residency("a"), Residency::Absent, "no disk copy");
+        assert!(store.stats().spill_failures >= 1);
+        // the degraded victim is a plain miss: callers re-register
+        assert!(store.get("a").unwrap().is_none());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -529,7 +748,7 @@ mod tests {
         assert_eq!(store.remove("a"), one.size_bytes());
         // simulate a promotion racing the removal: the spill file is
         // still readable when the promotion gets to the host insert
-        write_spill(&store.spill_path("a"), &one).unwrap();
+        write_spill(&store.spill_path("a"), &one, None).unwrap();
         let got = store.get("a").unwrap().expect("draining reader is served");
         assert_eq!(got.entry(0, 0).y, one.entry(0, 0).y);
         assert!(!store.is_host_resident("a"), "retired bytes must not resurrect");

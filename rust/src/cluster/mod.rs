@@ -60,6 +60,7 @@ use crate::config::{CacheMode, EngineConfig, ModelConfig};
 use crate::engine::queue::{Submitter, WorkerQueue};
 use crate::engine::request::{EditError, EditRequest, EditResponse, WorkerEvent};
 use crate::engine::worker::{Worker, WorkerShared, WorkerSnapshot};
+use crate::faults::FaultInjector;
 use crate::qos::{Admission, AdmissionController, ClassDepth, CLASS_COUNT};
 use crate::runtime::ModelRuntime;
 use crate::scheduler::{Outstanding, RouteCtx, Scheduler};
@@ -217,13 +218,21 @@ impl Cluster {
         // template spilled by one worker is promotable by all — spill
         // writes are atomic (tmp + rename), so concurrent evictions of
         // the same template are safe.
+        // One injector for the whole deployment (None in production):
+        // storage, loader, device and engine sites all draw from its
+        // seeded per-site streams, so a chaos run is one `--faults` spec.
+        let faults = FaultInjector::from_plan(opts.engine.faults.as_ref());
         let tiers: Vec<Arc<TieredStore>> = (0..opts.workers)
             .map(|_| {
-                Arc::new(TieredStore::new(
+                let mut tier = TieredStore::new(
                     opts.engine.host_cache_budget,
                     opts.engine.spill_dir.clone(),
                     0.0, // cluster benches exercise the host tier; disk pacing off
-                ))
+                );
+                if let Some(f) = &faults {
+                    tier = tier.with_faults(Arc::clone(f));
+                }
+                Arc::new(tier)
             })
             .collect();
 
@@ -271,7 +280,7 @@ impl Cluster {
                 rt.warmup(&[1, 2, 4, 8])?;
             }
             model_cfg.get_or_insert_with(|| rt.config.clone());
-            let worker = Worker::new(
+            let mut worker = Worker::new(
                 w,
                 opts.engine.clone(),
                 rt,
@@ -280,6 +289,9 @@ impl Cluster {
                 tx.clone(),
             )
             .with_registry(Arc::clone(&templates));
+            if let Some(f) = &faults {
+                worker = worker.with_faults(Arc::clone(f));
+            }
             submitters.push(worker.submitter());
             queues.push(worker.queue());
             shareds.push(worker.shared());
@@ -394,6 +406,19 @@ impl Cluster {
 
     pub fn workers(&self) -> usize {
         self.submitters.len()
+    }
+
+    /// Whether every worker tier's disk circuit breaker is closed. An
+    /// open breaker is not fatal — the tier is routed around and cold
+    /// promotions recompute — but readiness surfaces it so operators see
+    /// a cluster running degraded. Feeds `/v1/readyz`.
+    pub fn breakers_closed(&self) -> bool {
+        self.tiers.iter().all(|t| !t.breaker_open())
+    }
+
+    /// Total disk-breaker trips across worker tiers (chaos observability).
+    pub fn breaker_trips(&self) -> u64 {
+        self.tiers.iter().map(|t| t.breaker_trips()).sum()
     }
 
     /// Whether a submission against this template would be accepted:

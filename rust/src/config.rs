@@ -3,6 +3,7 @@
 
 use std::path::PathBuf;
 
+use crate::faults::FaultPlan;
 use crate::qos::QosConfig;
 
 /// Static description of a mini diffusion model (loaded from the manifest;
@@ -145,6 +146,9 @@ pub struct EngineConfig {
     /// Quality-of-service: priority-ordered queues with aging,
     /// step-boundary preemption, deadline expiry, and admission control.
     pub qos: QosConfig,
+    /// Deterministic fault injection (`--faults <spec>`); `None` (the
+    /// default) compiles the injection points down to a null check.
+    pub faults: Option<FaultPlan>,
 }
 
 impl EngineConfig {
@@ -171,6 +175,7 @@ impl EngineConfig {
             registration_wait_ms: 30_000,
             prepost_cpu_us: 2_000,
             qos: QosConfig::standard(),
+            faults: None,
         }
     }
 

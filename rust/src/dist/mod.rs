@@ -58,6 +58,22 @@ pub struct DistConfig {
     pub poll_ms: u64,
     /// Per-call RPC read/write timeout.
     pub rpc_timeout_ms: u64,
+    /// Per-worker retry-budget capacity (tokens; one token = one
+    /// transport retry). A flapping worker drains its own budget without
+    /// starving retries toward healthy peers.
+    pub retry_budget: f64,
+    /// Budget refill rate, tokens per second.
+    pub retry_refill_per_sec: f64,
+    /// Jittered-backoff base between retries toward the same worker.
+    pub retry_backoff_base_ms: u64,
+    /// Backoff ceiling (the exponential doubling saturates here).
+    pub retry_backoff_cap_ms: u64,
+    /// Max budgeted retries per placement attempt before the worker is
+    /// banned for this request and placement moves on.
+    pub retry_attempts: u32,
+    /// Deterministic transport fault injection on the router's RPC
+    /// clients (None in production).
+    pub faults: Option<crate::faults::FaultPlan>,
 }
 
 impl Default for DistConfig {
@@ -68,6 +84,12 @@ impl Default for DistConfig {
             dead_after_ms: 5_000,
             poll_ms: 100,
             rpc_timeout_ms: 10_000,
+            retry_budget: 10.0,
+            retry_refill_per_sec: 1.0,
+            retry_backoff_base_ms: 10,
+            retry_backoff_cap_ms: 500,
+            retry_attempts: 3,
+            faults: None,
         }
     }
 }
@@ -81,6 +103,12 @@ impl DistConfig {
             dead_after_ms: 800,
             poll_ms: 50,
             rpc_timeout_ms: 2_000,
+            retry_budget: 8.0,
+            retry_refill_per_sec: 4.0,
+            retry_backoff_base_ms: 5,
+            retry_backoff_cap_ms: 100,
+            retry_attempts: 3,
+            faults: None,
         }
     }
 }

@@ -21,6 +21,8 @@
 //! | `DELETE /rpc/template/purge/{id}`| retire + free the template               |
 //! | `POST /rpc/drain`                | finish held work, accept no more         |
 //! | `GET /rpc/health`                | liveness + accepting flag                |
+//! | `GET /v1/healthz`                | liveness (alias of `/rpc/health`)        |
+//! | `GET /v1/readyz`                 | readiness: 503 when draining/stopping    |
 //!
 //! Draining reuses the same semantics as template retirement: held work
 //! drains to completion, new submissions get a typed 503 reject.
@@ -226,7 +228,7 @@ impl WorkerNode {
             return self.purge_template(rest);
         }
         match (method, path) {
-            ("GET", "/rpc/health") | ("GET", "/healthz") => (
+            ("GET", "/rpc/health") | ("GET", "/healthz") | ("GET", "/v1/healthz") => (
                 200,
                 Json::obj(vec![
                     ("ok", Json::Bool(true)),
@@ -235,6 +237,7 @@ impl WorkerNode {
                     ("completed", Json::num(self.cluster.completed() as f64)),
                 ]),
             ),
+            ("GET", "/v1/readyz") => self.readyz(),
             ("POST", "/rpc/submit") => self.submit(body),
             ("GET", "/rpc/snapshot") => match self.cluster.worker_snapshots().into_iter().next() {
                 Some(s) => (200, proto::snapshot_to_json(&s)),
@@ -255,6 +258,21 @@ impl WorkerNode {
         }
     }
 
+    /// `GET /v1/readyz`: ready to take *new* work — alive (healthz) but
+    /// draining or stopping reads 503, so the router/LB steers around a
+    /// node that is winding down without killing its in-flight requests.
+    fn readyz(&self) -> (u16, Json) {
+        let ok = self.is_accepting() && !self.stopping.load(Ordering::SeqCst);
+        (
+            if ok { 200 } else { 503 },
+            Json::obj(vec![
+                ("ready", Json::Bool(ok)),
+                ("name", Json::str(self.name.clone())),
+                ("accepting", Json::Bool(self.is_accepting())),
+            ]),
+        )
+    }
+
     fn submit(&self, body: &str) -> (u16, Json) {
         if !self.is_accepting() {
             return (
@@ -272,6 +290,18 @@ impl WorkerNode {
         let Some(wire) = SubmitWire::parse(&parsed) else {
             return (400, error_obj("malformed submit wire"));
         };
+        // at-least-once delivery: a router whose reply was dropped in
+        // flight retries the same wire id. The first copy is
+        // authoritative — acknowledge instead of double-queueing.
+        if self.cluster.status(wire.id).is_some() {
+            return (
+                202,
+                Json::obj(vec![
+                    ("id", Json::num(wire.id as f64)),
+                    ("status", Json::str("duplicate")),
+                ]),
+            );
+        }
         match self.cluster.submit_checked(wire.into_request()) {
             Ok(ticket) => (
                 202,

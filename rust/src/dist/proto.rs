@@ -298,6 +298,9 @@ pub fn snapshot_to_json(s: &WorkerSnapshot) -> Json {
                 ("kv_dev_hits", Json::num(s.transfers.kv_dev_hits as f64)),
                 ("kv_dev_misses", Json::num(s.transfers.kv_dev_misses as f64)),
                 ("kv_prefetch_overlap_us", Json::num(s.transfers.kv_prefetch_overlap_us as f64)),
+                ("cache_degraded_disk", Json::num(s.transfers.cache_degraded_disk as f64)),
+                ("cache_degraded_device", Json::num(s.transfers.cache_degraded_device as f64)),
+                ("cache_degraded_loader", Json::num(s.transfers.cache_degraded_loader as f64)),
             ]),
         ),
     ])
@@ -337,6 +340,10 @@ pub fn snapshot_from_json(j: &Json) -> Option<WorkerSnapshot> {
             kv_dev_misses: t.at("kv_dev_misses").as_f64().unwrap_or(0.0) as u64,
             kv_prefetch_overlap_us: t.at("kv_prefetch_overlap_us").as_f64().unwrap_or(0.0)
                 as u64,
+            // absent on older peers: the ladder never fired there
+            cache_degraded_disk: t.at("cache_degraded_disk").as_f64().unwrap_or(0.0) as u64,
+            cache_degraded_device: t.at("cache_degraded_device").as_f64().unwrap_or(0.0) as u64,
+            cache_degraded_loader: t.at("cache_degraded_loader").as_f64().unwrap_or(0.0) as u64,
         },
     })
 }
@@ -491,6 +498,9 @@ mod tests {
                 kv_dev_hits: 9,
                 kv_dev_misses: 10,
                 kv_prefetch_overlap_us: 11,
+                cache_degraded_disk: 12,
+                cache_degraded_device: 13,
+                cache_degraded_loader: 14,
             },
         };
         let text = snapshot_to_json(&snap).to_string();

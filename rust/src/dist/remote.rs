@@ -4,10 +4,11 @@
 //! poll, cancel, template register/purge, snapshot, drain — so the
 //! router's scheduler/admission/registry plumbing is backend-agnostic.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::engine::request::EditError;
+use crate::faults::FaultInjector;
 use crate::engine::worker::WorkerSnapshot;
 use crate::util::json::Json;
 
@@ -50,10 +51,11 @@ impl RemoteWorker {
         &self.addr
     }
 
-    /// Transport-level retries burned by this handle's RPC client
-    /// (surfaced as `rpc_retries` on `GET /v1/cluster`).
-    pub fn rpc_retries(&self) -> u64 {
-        self.client.lock().unwrap().retries()
+    /// Attach a fault injector to the underlying RPC client (transport
+    /// drops/delays/truncations per its seeded plan).
+    pub fn with_faults(self, faults: Arc<FaultInjector>) -> RemoteWorker {
+        self.client.lock().unwrap().set_faults(faults);
+        self
     }
 
     fn call(&self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json), RpcError> {

@@ -26,6 +26,17 @@
 //!   per-request failover path;
 //! * router shutdown fails all remaining tickets with `WorkerShutdown`.
 //!
+//! ## Retry budgets
+//!
+//! Transport retries live *here*, not in the RPC client: each member gets
+//! a token bucket ([`RetryBudget`]) refilled at a configured rate, and an
+//! unreachable submit is retried in place — jittered exponential backoff
+//! between attempts — only while tokens remain. A drained budget bans the
+//! member for that placement; if no member accepts and some budget ran
+//! dry, the caller sees a typed `Overloaded` whose `Retry-After` is the
+//! earliest instant a token exists again. A persistently flapping worker
+//! therefore drains its own budget instead of amplifying load cluster-wide.
+//!
 //! ## Sessions
 //!
 //! The router hosts the same `/v1/sessions` lifecycle API as the
@@ -53,6 +64,7 @@ use crate::cache::tier::Residency;
 use crate::cluster::{EditTicket, RequestRegistry, RequestState};
 use crate::config::ModelConfig;
 use crate::engine::request::{EditError, EditRequest, EditRequestBuilder};
+use crate::faults::{jittered_backoff, FaultInjector, RetryBudget};
 use crate::qos::{Admission, AdmissionController, Priority};
 use crate::scheduler::{Outstanding, RouteCtx, Scheduler};
 use crate::server::{
@@ -79,6 +91,14 @@ pub struct Router {
     /// Slot-aligned RPC handles (same index space as membership slots and
     /// book lanes). A re-announce replaces the slot's handle in place.
     workers: Mutex<Vec<Arc<RemoteWorker>>>,
+    /// Slot-aligned retry budgets (token bucket per worker): a flapping
+    /// member drains its own budget without starving retries toward
+    /// healthy peers. Survives re-announces — a restart does not refill
+    /// the bucket.
+    budgets: Mutex<Vec<Arc<RetryBudget>>>,
+    /// Transport fault injection for the router's RPC clients (None in
+    /// production).
+    faults: Option<Arc<FaultInjector>>,
     /// Outstanding sets per member slot — the scheduler's world view.
     book: Mutex<Vec<Vec<Outstanding>>>,
     scheduler: Mutex<Box<dyn Scheduler>>,
@@ -106,12 +126,15 @@ impl Router {
         admission: Option<AdmissionController>,
         cfg: DistConfig,
     ) -> Arc<Router> {
+        let faults = FaultInjector::from_plan(cfg.faults.as_ref());
         Arc::new(Router {
             membership: Mutex::new(Membership::new(
                 Duration::from_millis(cfg.suspect_after_ms.max(1)),
                 Duration::from_millis(cfg.dead_after_ms.max(1)),
             )),
             workers: Mutex::new(Vec::new()),
+            budgets: Mutex::new(Vec::new()),
+            faults,
             book: Mutex::new(Vec::new()),
             scheduler: Mutex::new(scheduler),
             admission,
@@ -444,27 +467,79 @@ impl Router {
         Some((slot, remote))
     }
 
-    /// Place `wire` on some available member over RPC. Members that
-    /// reject or are unreachable are skipped; if nobody accepts, the last
-    /// typed reject (or `WorkerShutdown` when no member was available) is
-    /// returned. Bookkeeping is the caller's job — see [`Router::track`].
+    /// This slot's retry budget (None until the member announced).
+    fn budget_for(&self, slot: usize) -> Option<Arc<RetryBudget>> {
+        self.budgets.lock().unwrap().get(slot).cloned()
+    }
+
+    /// Place `wire` on some available member over RPC.
+    ///
+    /// An *unreachable* member is retried in place — jittered exponential
+    /// backoff between attempts, each retry paid from the member's token
+    /// bucket — up to `retry_attempts` per placement, then banned for
+    /// this request and placement moves on. Members that *reject* are
+    /// banned immediately (a typed verdict is not a transport blip). If
+    /// nobody accepts: the last typed reject wins; otherwise, if any
+    /// budget ran dry, a typed `Overloaded` carrying the earliest instant
+    /// a retry token exists again (surfaced as `Retry-After`); else
+    /// `WorkerShutdown`. Bookkeeping is the caller's job — see
+    /// [`Router::track`].
     fn try_place(&self, wire: &SubmitWire, outstanding: &Outstanding) -> Result<usize, EditError> {
         let mut reject: Option<EditError> = None;
         let mut banned: Vec<usize> = Vec::new();
+        let mut budget_dry_after_ms: Option<u64> = None;
+        let base = Duration::from_millis(self.cfg.retry_backoff_base_ms.max(1));
+        let cap = Duration::from_millis(
+            self.cfg.retry_backoff_cap_ms.max(self.cfg.retry_backoff_base_ms.max(1)),
+        );
         // session rounds prefer their owner slot (sticky affinity); a
         // dead/draining/banned owner falls back to the policy's pick
         let owner = wire.session.and_then(|sid| self.sessions.owner_of(sid));
         while let Some((slot, remote)) = self.pick(outstanding, &wire.template, owner, &banned) {
-            match remote.submit(wire) {
-                SubmitOutcome::Accepted => return Ok(slot),
-                SubmitOutcome::Rejected(e) => {
-                    reject = Some(e);
-                    banned.push(slot);
+            let mut attempt: u32 = 0;
+            loop {
+                match remote.submit(wire) {
+                    SubmitOutcome::Accepted => return Ok(slot),
+                    SubmitOutcome::Rejected(e) => {
+                        reject = Some(e);
+                        banned.push(slot);
+                        break;
+                    }
+                    SubmitOutcome::Unreachable(_) => {
+                        if attempt >= self.cfg.retry_attempts {
+                            banned.push(slot);
+                            break;
+                        }
+                        let budget = self.budget_for(slot);
+                        let spent = budget.as_ref().is_some_and(|b| b.try_spend());
+                        if !spent {
+                            if let Some(b) = &budget {
+                                let after = b.retry_after_ms();
+                                budget_dry_after_ms = Some(
+                                    budget_dry_after_ms.map_or(after, |a| a.min(after)),
+                                );
+                            }
+                            banned.push(slot);
+                            break;
+                        }
+                        let salt = wire.id
+                            ^ ((slot as u64) << 32)
+                            ^ ((u64::from(attempt) + 1) << 48);
+                        std::thread::sleep(jittered_backoff(base, cap, attempt, salt));
+                        attempt += 1;
+                    }
                 }
-                SubmitOutcome::Unreachable(_) => banned.push(slot),
             }
         }
-        Err(reject.unwrap_or(EditError::WorkerShutdown))
+        if let Some(e) = reject {
+            return Err(e);
+        }
+        match budget_dry_after_ms {
+            Some(retry_after_ms) => Err(EditError::Overloaded {
+                retry_after_ms: retry_after_ms.max(1),
+            }),
+            None => Err(EditError::WorkerShutdown),
+        }
     }
 
     /// Record an accepted placement in the book + pending map. Ordered
@@ -589,7 +664,10 @@ impl Router {
         match (method, path) {
             ("POST", "/rpc/announce") => self.announce(body),
             ("POST", "/rpc/heartbeat") => self.heartbeat(body),
-            ("GET", "/healthz") => (200, Json::obj(vec![("ok", Json::Bool(true))])),
+            ("GET", "/healthz") | ("GET", "/v1/healthz") => {
+                (200, Json::obj(vec![("ok", Json::Bool(true))]))
+            }
+            ("GET", "/v1/readyz") => self.readyz(),
             ("GET", "/v1/cluster") => self.cluster_body(),
             ("GET", "/stats") | ("GET", "/v1/stats") => self.stats_body(),
             ("POST", "/v1/edits") => self.edit_async(body),
@@ -618,7 +696,11 @@ impl Router {
         );
         {
             let mut ws = self.workers.lock().unwrap();
-            let remote = Arc::new(RemoteWorker::new(a.name.clone(), a.rpc_addr.clone(), timeout));
+            let mut remote = RemoteWorker::new(a.name.clone(), a.rpc_addr.clone(), timeout);
+            if let Some(f) = &self.faults {
+                remote = remote.with_faults(Arc::clone(f));
+            }
+            let remote = Arc::new(remote);
             if slot < ws.len() {
                 ws[slot] = remote;
             } else {
@@ -629,6 +711,17 @@ impl Router {
             let mut book = self.book.lock().unwrap();
             while book.len() <= slot {
                 book.push(Vec::new());
+            }
+        }
+        {
+            // budgets survive re-announces: a flapping worker that keeps
+            // restarting does not refill its own retry tokens
+            let mut budgets = self.budgets.lock().unwrap();
+            while budgets.len() <= slot {
+                budgets.push(Arc::new(RetryBudget::new(
+                    self.cfg.retry_budget.max(1.0),
+                    self.cfg.retry_refill_per_sec.max(1e-6),
+                )));
             }
         }
         eprintln!(
@@ -674,10 +767,26 @@ impl Router {
         }
     }
 
+    /// `GET /v1/readyz`: readiness — liveness is not enough to serve.
+    /// Ready means the router is not draining and at least one member is
+    /// available to the scheduler; 503 otherwise so load balancers steer
+    /// traffic away without tearing the process down.
+    fn readyz(&self) -> (u16, Json) {
+        let ready_members = self.ready_count();
+        let ok = !self.stopping.load(Ordering::SeqCst) && ready_members >= 1;
+        (
+            if ok { 200 } else { 503 },
+            Json::obj(vec![
+                ("ready", Json::Bool(ok)),
+                ("ready_members", Json::num(ready_members as f64)),
+            ]),
+        )
+    }
+
     /// `GET /v1/cluster`: the membership table + aggregate load. Session
     /// ownership is overlaid per slot from the router's registry (the
-    /// heartbeat snapshots are session-blind), and `rpc_retries` counts
-    /// transport blips absorbed by the bounded RPC retry across members.
+    /// heartbeat snapshots are session-blind), and `retry_budget_spent`
+    /// counts transport retries paid from the per-worker token buckets.
     fn cluster_body(&self) -> (u16, Json) {
         let ms = self.membership.lock().unwrap();
         let session_load = self.sessions.worker_load(ms.len());
@@ -714,12 +823,12 @@ impl Router {
             .collect();
         let ready = ms.available().iter().filter(|&&a| a).count();
         drop(ms);
-        let rpc_retries: u64 = self
-            .workers
+        let retry_spent: u64 = self
+            .budgets
             .lock()
             .unwrap()
             .iter()
-            .map(|w| w.rpc_retries())
+            .map(|b| b.spent())
             .sum();
         (
             200,
@@ -734,7 +843,7 @@ impl Router {
                 ),
                 ("completed", Json::num(self.completed() as f64)),
                 ("sessions_open", Json::num(self.sessions.open_count() as f64)),
-                ("rpc_retries", Json::num(rpc_retries as f64)),
+                ("retry_budget_spent", Json::num(retry_spent as f64)),
             ]),
         )
     }

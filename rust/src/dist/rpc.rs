@@ -2,38 +2,38 @@
 //!
 //! One [`RpcClient`] owns one TCP connection to one peer. Requests are
 //! sent with `Connection: keep-alive` so the server's
-//! [`crate::server::serve_connection`] loop reuses the socket; on a
-//! transient transport error (dropped keep-alive socket, refused or timed
-//! out connect/read) the client takes **one bounded retry** after a
-//! jittered backoff before reporting an IO error — so a blip doesn't
-//! immediately escalate toward `suspect` in the router's membership
-//! layer, while a genuinely dead peer still fails fast. Retries are
-//! counted ([`RpcClient::retries`]) and surfaced as `rpc_retries` on
-//! `GET /v1/cluster`. Read/write timeouts bound every call, so a hung
+//! [`crate::server::serve_connection`] loop reuses the socket. The client
+//! itself takes **no** retries: a transport failure surfaces immediately
+//! as a typed [`RpcError`], and the *router* decides — against its
+//! per-worker retry budget and jittered backoff
+//! ([`crate::faults::RetryBudget`] / [`crate::faults::jittered_backoff`])
+//! — whether the call is worth re-issuing. Centralizing the policy keeps
+//! a flapping peer from multiplying hidden low-level retries under the
+//! router's own ones. Read/write timeouts bound every call, so a hung
 //! peer turns into a typed [`RpcError::Io`] instead of a stuck thread.
+//!
+//! A [`FaultInjector`] can be attached ([`RpcClient::with_faults`]) to
+//! exercise the transport failure paths deterministically: connect
+//! refusals, dropped replies, truncated bodies and injected delays.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
+use std::sync::Arc;
 use std::time::Duration;
 
+use crate::faults::{FaultInjector, FaultSite};
 use crate::util::json::Json;
 
 /// Largest accepted RPC response body (tensor payloads are bounded by the
 /// model's latent size; 64 MiB is far above any real reply).
 pub const MAX_RESPONSE_BYTES: usize = 64 << 20;
 
-/// Base backoff before the bounded transport retry.
-const RETRY_BACKOFF_BASE: Duration = Duration::from_millis(10);
-
-/// Jitter span added on top of the base (exclusive upper bound, ms).
-const RETRY_BACKOFF_JITTER_MS: u64 = 25;
-
 /// Why an RPC call failed at the transport/protocol layer. HTTP-level
 /// failures (4xx/5xx) are *not* errors here — they come back as the
 /// status + body for the caller to interpret.
 #[derive(Debug, Clone, PartialEq)]
 pub enum RpcError {
-    /// Connect/read/write failure, after the bounded retry.
+    /// Connect/read/write failure.
     Io(String),
     /// The peer spoke something that isn't the expected HTTP/JSON.
     Proto(String),
@@ -53,36 +53,30 @@ pub struct RpcClient {
     addr: String,
     timeout: Duration,
     conn: Option<BufReader<TcpStream>>,
-    /// Transport-level retries taken so far (router stats: `rpc_retries`).
-    retries: u64,
+    /// Deterministic transport fault injection (None in production).
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl RpcClient {
     pub fn new(addr: impl Into<String>, timeout: Duration) -> RpcClient {
-        RpcClient { addr: addr.into(), timeout, conn: None, retries: 0 }
+        RpcClient { addr: addr.into(), timeout, conn: None, faults: None }
+    }
+
+    /// Attach a fault injector: calls may now fail or stall per its
+    /// seeded plan, before or after the real network exchange.
+    pub fn with_faults(mut self, faults: Arc<FaultInjector>) -> RpcClient {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// In-place variant of [`RpcClient::with_faults`] for clients already
+    /// behind a lock.
+    pub fn set_faults(&mut self, faults: Arc<FaultInjector>) {
+        self.faults = Some(faults);
     }
 
     pub fn addr(&self) -> &str {
         &self.addr
-    }
-
-    /// How many calls needed the bounded transport retry.
-    pub fn retries(&self) -> u64 {
-        self.retries
-    }
-
-    /// Jittered backoff before the retry: deterministic per (peer,
-    /// ordinal) — an FNV hash of the address mixed with the retry count —
-    /// so a fleet of clients reconnecting to the same restarted peer
-    /// doesn't do so in lockstep, without pulling in an RNG.
-    fn retry_backoff(&self) -> Duration {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in self.addr.bytes() {
-            h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
-        }
-        h ^= self.retries;
-        h = h.wrapping_mul(0x9e37_79b9_7f4a_7c15);
-        RETRY_BACKOFF_BASE + Duration::from_millis(h % RETRY_BACKOFF_JITTER_MS)
     }
 
     fn connect(&mut self) -> std::io::Result<()> {
@@ -167,38 +161,54 @@ impl RpcClient {
         }
     }
 
-    /// Issue one call. On a transport error (a keep-alive socket the peer
-    /// already closed looks exactly like a blip) the client takes one
-    /// bounded retry after a jittered backoff, then surfaces
-    /// [`RpcError::Io`] for the membership layer to escalate.
+    /// Issue one call — exactly one attempt. A transport error drops the
+    /// connection (the next call reconnects) and surfaces as
+    /// [`RpcError::Io`]; retrying is the caller's decision, made against
+    /// the router's per-worker retry budget.
     pub fn call(
         &mut self,
         method: &str,
         path: &str,
         body: Option<&Json>,
     ) -> Result<(u16, Json), RpcError> {
-        let body = body.map(|j| j.to_string()).unwrap_or_default();
-        match self.exchange(method, path, &body) {
-            Ok(result) => result,
-            Err(first) => {
+        if let Some(inj) = self.faults.clone() {
+            if inj.should(FaultSite::RpcDelay) {
+                std::thread::sleep(inj.delay());
+            }
+            if inj.should(FaultSite::RpcConnect) {
                 self.conn = None;
-                self.retries += 1;
-                std::thread::sleep(self.retry_backoff());
-                match self.exchange(method, path, &body) {
-                    Ok(result) => result,
-                    Err(e) => {
-                        self.conn = None;
-                        Err(RpcError::Io(format!("{first}; retry: {e}")))
-                    }
-                }
+                return Err(RpcError::Io("injected connect failure".into()));
             }
         }
+        let body = body.map(|j| j.to_string()).unwrap_or_default();
+        let result = match self.exchange(method, path, &body) {
+            Ok(result) => result,
+            Err(e) => {
+                self.conn = None;
+                return Err(RpcError::Io(e.to_string()));
+            }
+        };
+        // post-exchange faults model a reply lost or mangled on the way
+        // back: the peer may have applied the request (at-least-once
+        // delivery), so retried submits must stay idempotent worker-side.
+        if let Some(inj) = self.faults.clone() {
+            if inj.should(FaultSite::RpcDrop) {
+                self.conn = None;
+                return Err(RpcError::Io("injected reply drop".into()));
+            }
+            if inj.should(FaultSite::RpcTruncate) {
+                self.conn = None;
+                return Err(RpcError::Proto("injected truncated body".into()));
+            }
+        }
+        result
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::faults::FaultPlan;
     use crate::server::serve_connection;
     use std::net::TcpListener;
 
@@ -238,13 +248,12 @@ mod tests {
             assert_eq!(reply.at("path").as_str(), Some("/echo"));
             assert_eq!(reply.at("body").at("i").as_usize(), Some(i));
         }
-        // the connection survived all five calls, no retries burned
+        // the connection survived all five calls
         assert!(client.conn.is_some(), "keep-alive connection must be reused");
-        assert_eq!(client.retries(), 0);
     }
 
     #[test]
-    fn down_peer_reports_io_error() {
+    fn down_peer_reports_io_error_in_one_attempt() {
         // bind-and-drop: the port is (almost certainly) refused after drop
         let addr = {
             let l = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -255,23 +264,28 @@ mod tests {
             Err(RpcError::Io(_)) => {}
             other => panic!("expected Io error, got {other:?}"),
         }
-        // the failure burned exactly the one bounded retry
-        assert_eq!(client.retries(), 1);
     }
 
     #[test]
-    fn retry_backoff_is_jittered_and_bounded() {
-        let mut seen = std::collections::HashSet::new();
-        for port in 1000..1032 {
-            let c = RpcClient::new(format!("127.0.0.1:{port}"), Duration::from_secs(1));
-            let d = c.retry_backoff();
-            assert!(d >= RETRY_BACKOFF_BASE);
-            assert!(
-                d < RETRY_BACKOFF_BASE + Duration::from_millis(RETRY_BACKOFF_JITTER_MS)
-            );
-            seen.insert(d);
+    fn injected_transport_faults_are_typed_and_deterministic() {
+        let addr = echo_server();
+        // connect-fault at rate 1.0: fails before any network IO
+        let plan = FaultPlan::new(3).with_rate(FaultSite::RpcConnect, 1.0);
+        let mut client = RpcClient::new(addr.clone(), Duration::from_secs(5))
+            .with_faults(Arc::new(FaultInjector::new(plan)));
+        match client.call("GET", "/echo", None) {
+            Err(RpcError::Io(m)) => assert!(m.contains("injected")),
+            other => panic!("expected injected Io, got {other:?}"),
         }
-        // different peers de-synchronize (the jitter actually varies)
-        assert!(seen.len() > 1, "backoff must not be constant across peers");
+        // truncate-fault: the exchange really happens, then the reply is
+        // discarded as a protocol error and the connection is dropped
+        let plan = FaultPlan::new(4).with_rate(FaultSite::RpcTruncate, 1.0);
+        let mut client = RpcClient::new(addr, Duration::from_secs(5))
+            .with_faults(Arc::new(FaultInjector::new(plan)));
+        match client.call("GET", "/echo", None) {
+            Err(RpcError::Proto(m)) => assert!(m.contains("truncated")),
+            other => panic!("expected injected Proto, got {other:?}"),
+        }
+        assert!(client.conn.is_none(), "mangled reply must not reuse the socket");
     }
 }

@@ -36,6 +36,7 @@ use crate::engine::prepost::{postprocess, preprocess, PreparedRequest};
 use crate::engine::queue::{QueuePolicy, Submitter, WorkerQueue};
 use crate::engine::request::{EditError, EditResponse, RequestTiming, WorkerEvent};
 use crate::engine::teacache::TeaCacheGate;
+use crate::faults::{FaultInjector, FaultSite};
 use crate::model::{Latent, Schedule};
 use crate::qos::{ClassDepth, Priority, CLASS_COUNT};
 use crate::runtime::{ArtifactKind, ModelRuntime, TransferTotals};
@@ -257,6 +258,12 @@ pub struct WorkerShared {
     kv_dev_hits: AtomicU64,
     kv_dev_misses: AtomicU64,
     kv_prefetch_overlap_us: AtomicU64,
+    /// Degradation-ladder counters (see `TransferTotals`): disk-tier
+    /// promotions demoted to recompute, device-KV uploads demoted to
+    /// per-step staging, loader jobs demoted to synchronous gathers.
+    cache_degraded_disk: AtomicU64,
+    cache_degraded_device: AtomicU64,
+    cache_degraded_loader: AtomicU64,
     /// Template ids whose device-KV entries must be dropped — pushed by
     /// cluster retirement (any thread), drained by the engine thread at
     /// loop boundaries (the tier itself is engine-thread-confined).
@@ -389,6 +396,9 @@ impl WorkerShared {
             kv_dev_hits: self.kv_dev_hits.load(Ordering::Relaxed),
             kv_dev_misses: self.kv_dev_misses.load(Ordering::Relaxed),
             kv_prefetch_overlap_us: self.kv_prefetch_overlap_us.load(Ordering::Relaxed),
+            cache_degraded_disk: self.cache_degraded_disk.load(Ordering::Relaxed),
+            cache_degraded_device: self.cache_degraded_device.load(Ordering::Relaxed),
+            cache_degraded_loader: self.cache_degraded_loader.load(Ordering::Relaxed),
         }
     }
 }
@@ -435,6 +445,9 @@ pub struct Worker {
     /// The all-cached plan of the `force_all_cached` / `naive_loading`
     /// ablations (built once).
     forced_plan: Option<Arc<PipelinePlan>>,
+    /// Deterministic fault injector (None in production: every injection
+    /// point compiles down to a null check).
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl Worker {
@@ -481,6 +494,7 @@ impl Worker {
             plans: PlanCache::new(),
             kv_tier,
             forced_plan: None,
+            faults: None,
         }
     }
 
@@ -489,6 +503,22 @@ impl Worker {
     /// retired) instead of cold-registering unknown templates.
     pub fn with_registry(mut self, registry: Arc<TemplateRegistry>) -> Worker {
         self.registry = Some(registry);
+        self
+    }
+
+    /// Attach a fault injector: the loader thread, the device-KV tier and
+    /// the step loop all draw from its isolated RNG streams, so injected
+    /// faults decide which rung of the degradation ladder serves a
+    /// request — never its outcome. Replaces the loader/KV tier spawned
+    /// by `new` (both are empty at this point).
+    pub fn with_faults(mut self, faults: Arc<FaultInjector>) -> Worker {
+        let bandwidth =
+            if self.cfg.system == SystemKind::FisEdit { 0.0 } else { self.cfg.sim_bandwidth };
+        self.loader = CacheLoader::spawn_with_faults(bandwidth, Some(Arc::clone(&faults)));
+        self.kv_tier = EngineKvTier(
+            KvDeviceTier::new(self.cfg.kv_device_budget_bytes).with_faults(Arc::clone(&faults)),
+        );
+        self.faults = Some(faults);
         self
     }
 
@@ -566,11 +596,33 @@ impl Worker {
                 self.queue.wait_for_work(Duration::from_millis(1));
                 continue;
             }
+            // Simulated worker crash at a step boundary: the "restarted"
+            // engine re-runs every in-flight member from x_T. Requests
+            // are never lost, and because denoising is deterministic the
+            // replay converges to the no-fault latents bit-for-bit.
+            if self.faults.as_ref().is_some_and(|f| f.should(FaultSite::WorkerCrash)) {
+                self.crash_restart(&mut members);
+            }
             self.run_step(&mut members)?;
             self.complete_finished(&mut members);
             self.publish(&members);
         }
         Ok(())
+    }
+
+    /// Reset every in-flight member to its initial state, exactly as a
+    /// restarted worker that lost its step-loop progress would observe.
+    /// Only latency (and the interruption counter) shows the crash.
+    fn crash_restart(&self, members: &mut [Member]) {
+        for m in members.iter_mut() {
+            m.latent = m.acts.initial_latent();
+            m.step = 0;
+            m.last_eps = None;
+            if m.gate.is_some() {
+                m.gate = Some(TeaCacheGate::new(self.cfg.teacache_threshold));
+            }
+            m.interruptions += 1;
+        }
     }
 
     /// Apply cross-thread retirement to the device KV tier: drop every
@@ -1017,9 +1069,17 @@ impl Worker {
     /// Fetch (and on cold miss, register) a template's activations. In
     /// cluster mode a registration that is already in flight elsewhere is
     /// awaited instead of duplicated on the engine thread.
+    ///
+    /// A disk-tier promotion failure (I/O error, corrupt spill, open
+    /// breaker) is *not* a request failure: it demotes to the bottom rung
+    /// of the degradation ladder — full-model recompute via the cold
+    /// registration path below, which is deterministic and therefore
+    /// bit-identical to a cache hit.
     pub fn ensure_registered(&self, template_id: &str) -> Result<Arc<TemplateActivations>> {
-        if let Some(acts) = self.tiers.get(template_id)? {
-            return Ok(acts);
+        match self.tiers.get(template_id) {
+            Ok(Some(acts)) => return Ok(acts),
+            Ok(None) => {}
+            Err(_) => self.rt.note_cache_degraded_disk(),
         }
         if let Some(registry) = &self.registry {
             match registry.state(template_id) {
@@ -1030,8 +1090,10 @@ impl Worker {
                             Duration::from_millis(self.cfg.registration_wait_ms),
                         )
                         .map_err(anyhow::Error::new)?;
-                    if let Some(acts) = self.tiers.get(template_id)? {
-                        return Ok(acts);
+                    match self.tiers.get(template_id) {
+                        Ok(Some(acts)) => return Ok(acts),
+                        Ok(None) => {}
+                        Err(_) => self.rt.note_cache_degraded_disk(),
                     }
                 }
                 // never resurrect a retired template's bytes via the
@@ -1384,7 +1446,10 @@ impl Worker {
                     // buffer; miss: uploaded here, hidden under compute)
                     let mut prefetched: Option<(usize, Rc<KvPair>)> = None;
                     for k in blk..end {
-                        let mut staged = take_staged(&mut staged_now, &mut staged_rx, k);
+                        let mut staged = match take_staged(&mut staged_now, &mut staged_rx, k) {
+                            Some(s) => s,
+                            None => self.staged_fallback(k, gathers(&|i| steps[i]), mode, bb),
+                        };
                         x_buf = match mode {
                             CacheMode::CacheY => self.rt.run_block_y_dev(k, n, bb, &x_buf)?,
                             CacheMode::CacheKV => {
@@ -1452,7 +1517,10 @@ impl Worker {
                     // host-round-trip reference: per-block upload/download
                     // with the full scatter/gather of the seed loop
                     for k in blk..end {
-                        let staged = take_staged(&mut staged_now, &mut staged_rx, k);
+                        let staged = match take_staged(&mut staged_now, &mut staged_rx, k) {
+                            Some(s) => s,
+                            None => self.staged_fallback(k, gathers(&|i| steps[i]), mode, bb),
+                        };
                         self.scratch.pack_compute_rows(members, n, h, bb);
                         let out = match mode {
                             CacheMode::CacheY => {
@@ -1526,6 +1594,20 @@ impl Worker {
             );
         }
         Ok(())
+    }
+
+    /// Loader-rung fallback: a loader job that died (injected fault) is
+    /// re-gathered synchronously on the compute stream — correct but
+    /// unpipelined, one rung down the degradation ladder.
+    fn staged_fallback(
+        &self,
+        blk: usize,
+        members: Vec<MemberGather>,
+        mode: CacheMode,
+        bb: usize,
+    ) -> StagedBlock {
+        self.rt.note_cache_degraded_loader();
+        self.loader.gather_sync(blk, members, mode, bb)
     }
 
     /// Serve one cached block's K/V for the device loop: from the device
@@ -1662,6 +1744,18 @@ impl Worker {
         self.shared
             .kv_prefetch_overlap_us
             .store(t.kv_prefetch_overlap_us, Ordering::Relaxed);
+        // degradation-ladder counters: the device rung folds in the KV
+        // tier's rejected uploads (tracked tier-side, engine-confined)
+        let kv_faults = self.kv_tier.0.stats().upload_faults;
+        self.shared
+            .cache_degraded_disk
+            .store(t.cache_degraded_disk, Ordering::Relaxed);
+        self.shared
+            .cache_degraded_device
+            .store(t.cache_degraded_device + kv_faults, Ordering::Relaxed);
+        self.shared
+            .cache_degraded_loader
+            .store(t.cache_degraded_loader, Ordering::Relaxed);
         // session rounds: one progress event per member per step boundary,
         // with the Algo-2 per-step cost as the remaining-time estimator
         for m in members.iter().filter(|m| m.prep.request.session.is_some()) {
@@ -1693,15 +1787,16 @@ impl Worker {
 }
 
 /// Wait for the copy stream to deliver block `blk` (a bubble iff the DP
-/// mispredicts).
+/// mispredicts). `None` means the loader job died (injected fault): the
+/// caller degrades to a synchronous gather on the compute stream.
 fn take_staged(
     now: &mut [Option<StagedBlock>],
     rx: &mut [Option<Receiver<StagedBlock>>],
     blk: usize,
-) -> StagedBlock {
+) -> Option<StagedBlock> {
     match now[blk].take() {
-        Some(s) => s,
-        None => rx[blk].take().expect("staged rx").recv().expect("loader alive"),
+        Some(s) => Some(s),
+        None => rx[blk].take().expect("staged rx").recv().ok(),
     }
 }
 

@@ -1,0 +1,662 @@
+//! Deterministic fault-injection plane + the robustness primitives that
+//! absorb the injected (and real) failures.
+//!
+//! The serving stack has three layers that can actually fail in
+//! production: **storage** (disk-tier spill reads/writes, bit-flips,
+//! device-tier uploads), **transport** (RPC connects, drops, delays,
+//! truncated bodies), and the **engine** (loader jobs, worker crashes at
+//! step boundaries). A [`FaultPlan`] assigns each injection site a
+//! probability; the shared [`FaultInjector`] draws every decision from a
+//! per-site [`Pcg`] stream seeded by the plan, so
+//!
+//! * runs are reproducible — the same plan produces the same fault
+//!   sequence, and
+//! * injected faults never perturb request RNG (masks, prompts, noise
+//!   trajectories all read different streams), which is what lets the
+//!   chaos tests assert **bit-identical** latents against a fault-free
+//!   run.
+//!
+//! Plans parse from `--faults <spec>` / `EngineConfig.faults`:
+//!
+//! ```text
+//! seed=42,disk_read=0.05,disk_corrupt=0.01,rpc_drop=0.02,delay_ms=5
+//! ```
+//!
+//! Alongside the injector live the degradation-ladder primitives:
+//! [`CircuitBreaker`] (a repeatedly failing tier is routed around until a
+//! cooldown elapses) and [`RetryBudget`] + [`jittered_backoff`] (the
+//! router's per-worker token-bucket retry policy — exhausted budgets
+//! surface `Retry-After` instead of retrying). Both take explicit clocks
+//! so their math is unit-testable without sleeping.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::rng::{splitmix64, Pcg};
+
+/// One injectable failure site. The order is the wire/spec order; each
+/// site owns an isolated RNG stream inside the injector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Disk-tier spill read fails with an I/O error (transient: the
+    /// spill file itself is intact).
+    DiskRead,
+    /// Disk-tier spill write fails; the evicted template is dropped
+    /// instead of spilled (recomputable later — never a request error).
+    DiskWrite,
+    /// A bit-flip is written into the spill payload; the per-artifact
+    /// checksum catches it on the next read.
+    DiskCorrupt,
+    /// Device KV-tier upload/retention fails; the engine re-uploads per
+    /// step (device → host demotion).
+    DeviceUpload,
+    /// RPC connect refused.
+    RpcConnect,
+    /// RPC request dropped before a byte is written.
+    RpcDrop,
+    /// RPC response body truncated mid-flight (protocol error).
+    RpcTruncate,
+    /// RPC call delayed by the plan's `delay_ms` before running.
+    RpcDelay,
+    /// A cache-loader staging job dies before delivering its block.
+    LoaderFail,
+    /// The worker "crashes" at a step boundary: all in-flight denoise
+    /// progress is lost and members restart deterministically from step
+    /// 0 (the recovery the deterministic engine makes cheap).
+    WorkerCrash,
+}
+
+/// Number of injectable sites (array sizing).
+pub const SITE_COUNT: usize = 10;
+
+/// All sites, in spec order.
+pub const ALL_SITES: [FaultSite; SITE_COUNT] = [
+    FaultSite::DiskRead,
+    FaultSite::DiskWrite,
+    FaultSite::DiskCorrupt,
+    FaultSite::DeviceUpload,
+    FaultSite::RpcConnect,
+    FaultSite::RpcDrop,
+    FaultSite::RpcTruncate,
+    FaultSite::RpcDelay,
+    FaultSite::LoaderFail,
+    FaultSite::WorkerCrash,
+];
+
+impl FaultSite {
+    fn index(self) -> usize {
+        match self {
+            FaultSite::DiskRead => 0,
+            FaultSite::DiskWrite => 1,
+            FaultSite::DiskCorrupt => 2,
+            FaultSite::DeviceUpload => 3,
+            FaultSite::RpcConnect => 4,
+            FaultSite::RpcDrop => 5,
+            FaultSite::RpcTruncate => 6,
+            FaultSite::RpcDelay => 7,
+            FaultSite::LoaderFail => 8,
+            FaultSite::WorkerCrash => 9,
+        }
+    }
+
+    /// The spec key (`--faults disk_read=0.05`) and counter label.
+    pub fn key(self) -> &'static str {
+        match self {
+            FaultSite::DiskRead => "disk_read",
+            FaultSite::DiskWrite => "disk_write",
+            FaultSite::DiskCorrupt => "disk_corrupt",
+            FaultSite::DeviceUpload => "device_upload",
+            FaultSite::RpcConnect => "rpc_connect",
+            FaultSite::RpcDrop => "rpc_drop",
+            FaultSite::RpcTruncate => "rpc_truncate",
+            FaultSite::RpcDelay => "rpc_delay",
+            FaultSite::LoaderFail => "loader_fail",
+            FaultSite::WorkerCrash => "worker_crash",
+        }
+    }
+
+    fn from_key(key: &str) -> Option<FaultSite> {
+        ALL_SITES.iter().copied().find(|s| s.key() == key)
+    }
+}
+
+/// A seeded fault schedule: per-site probabilities plus the delay used by
+/// [`FaultSite::RpcDelay`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Base seed for every site stream.
+    pub seed: u64,
+    /// `rates[site.index()]` = probability in `[0, 1]` that one draw at
+    /// that site injects a fault.
+    pub rates: [f64; SITE_COUNT],
+    /// Injected delay for `rpc_delay` faults.
+    pub delay_ms: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan { seed: 0, rates: [0.0; SITE_COUNT], delay_ms: 5 }
+    }
+}
+
+impl FaultPlan {
+    /// An all-zero plan with the given seed (builder base).
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, ..FaultPlan::default() }
+    }
+
+    /// Builder: set one site's injection rate.
+    pub fn with_rate(mut self, site: FaultSite, rate: f64) -> FaultPlan {
+        self.rates[site.index()] = rate;
+        self
+    }
+
+    /// The rate configured for one site.
+    pub fn rate(&self, site: FaultSite) -> f64 {
+        self.rates[site.index()]
+    }
+
+    /// Whether any site can fire at all.
+    pub fn is_active(&self) -> bool {
+        self.rates.iter().any(|&r| r > 0.0)
+    }
+
+    /// Parse a `--faults` spec: comma-separated `key=value` pairs where
+    /// key is a site name (`disk_read`, `rpc_drop`, ...), `seed`, or
+    /// `delay_ms`. Rates outside `[0, 1]`, malformed numbers, and
+    /// unknown keys are rejected (a typo must not silently disable the
+    /// fault it meant to enable).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec item {part:?} is not key=value"))?;
+            let (key, value) = (key.trim(), value.trim());
+            match key {
+                "seed" => {
+                    plan.seed = value
+                        .parse()
+                        .map_err(|_| format!("bad fault seed {value:?}"))?;
+                }
+                "delay_ms" => {
+                    plan.delay_ms = value
+                        .parse()
+                        .map_err(|_| format!("bad delay_ms {value:?}"))?;
+                }
+                _ => {
+                    let site = FaultSite::from_key(key).ok_or_else(|| {
+                        format!("unknown fault site {key:?} (sites: disk_read, disk_write, disk_corrupt, device_upload, rpc_connect, rpc_drop, rpc_truncate, rpc_delay, loader_fail, worker_crash)")
+                    })?;
+                    let rate: f64 = value
+                        .parse()
+                        .map_err(|_| format!("bad rate {value:?} for {key}"))?;
+                    if !(0.0..=1.0).contains(&rate) {
+                        return Err(format!("rate {rate} for {key} outside [0, 1]"));
+                    }
+                    plan.rates[site.index()] = rate;
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// Per-site injector state: an isolated RNG stream plus a fired counter.
+struct SiteState {
+    rng: Mutex<Pcg>,
+    injected: AtomicU64,
+}
+
+/// Shared, thread-safe fault source. One injector per serving plane
+/// (cluster or router); every component that can fail holds an
+/// `Option<Arc<FaultInjector>>` and asks [`FaultInjector::should`] at
+/// its injection point. Sites with rate 0 never take the stream lock.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    sites: Vec<SiteState>,
+}
+
+/// RNG stream tag base for fault sites (disjoint from request streams).
+const FAULT_STREAM_BASE: u64 = 0xfa17_0000;
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let sites = (0..SITE_COUNT)
+            .map(|i| SiteState {
+                rng: Mutex::new(Pcg::with_stream(plan.seed, FAULT_STREAM_BASE + i as u64)),
+                injected: AtomicU64::new(0),
+            })
+            .collect();
+        FaultInjector { plan, sites }
+    }
+
+    /// Convenience: build from an optional plan, `None` when inactive
+    /// (the no-faults hot path stays a null check).
+    pub fn from_plan(plan: Option<&FaultPlan>) -> Option<Arc<FaultInjector>> {
+        plan.filter(|p| p.is_active())
+            .map(|p| Arc::new(FaultInjector::new(p.clone())))
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Draw one decision at `site`. Deterministic given the plan: the
+    /// n-th draw at a site always lands the same way, regardless of what
+    /// other sites drew in between.
+    pub fn should(&self, site: FaultSite) -> bool {
+        let rate = self.plan.rates[site.index()];
+        if rate <= 0.0 {
+            return false;
+        }
+        let state = &self.sites[site.index()];
+        let hit = rate >= 1.0 || state.rng.lock().unwrap().f64() < rate;
+        if hit {
+            state.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// A deterministic 64-bit word from a site's stream (corruption
+    /// offsets, jitter salts). Counts as an injection draw.
+    pub fn word(&self, site: FaultSite) -> u64 {
+        self.sites[site.index()].rng.lock().unwrap().next_u64()
+    }
+
+    /// The injected delay for [`FaultSite::RpcDelay`] faults.
+    pub fn delay(&self) -> Duration {
+        Duration::from_millis(self.plan.delay_ms)
+    }
+
+    /// Faults fired at one site so far.
+    pub fn injected(&self, site: FaultSite) -> u64 {
+        self.sites[site.index()].injected.load(Ordering::Relaxed)
+    }
+
+    /// Faults fired across all sites.
+    pub fn total_injected(&self) -> u64 {
+        self.sites
+            .iter()
+            .map(|s| s.injected.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// `(site key, fired count)` for every site (bench/report output).
+    pub fn counts(&self) -> Vec<(&'static str, u64)> {
+        ALL_SITES
+            .iter()
+            .map(|&s| (s.key(), self.injected(s)))
+            .collect()
+    }
+}
+
+impl std::fmt::Debug for FaultInjector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultInjector")
+            .field("plan", &self.plan)
+            .field("total_injected", &self.total_injected())
+            .finish()
+    }
+}
+
+/// Default consecutive-failure threshold before a tier breaker opens.
+pub const BREAKER_THRESHOLD: u32 = 3;
+
+/// Default breaker cooldown before a half-open probe is allowed.
+pub const BREAKER_COOLDOWN: Duration = Duration::from_millis(500);
+
+#[derive(Debug, Default)]
+struct BreakerInner {
+    consecutive: u32,
+    open_until: Option<Instant>,
+    trips: u64,
+}
+
+/// Per-tier circuit breaker: `threshold` *consecutive* failures open the
+/// circuit for `cooldown`; while open, callers skip the tier entirely
+/// (the degradation ladder recomputes instead of hammering a failing
+/// disk). After the cooldown one probe is allowed — its success closes
+/// the breaker, its failure re-opens immediately.
+pub struct CircuitBreaker {
+    threshold: u32,
+    cooldown: Duration,
+    inner: Mutex<BreakerInner>,
+}
+
+impl CircuitBreaker {
+    pub fn new(threshold: u32, cooldown: Duration) -> CircuitBreaker {
+        assert!(threshold > 0, "breaker threshold must be positive");
+        CircuitBreaker { threshold, cooldown, inner: Mutex::new(BreakerInner::default()) }
+    }
+
+    /// Whether a call may proceed right now (closed, or cooled down
+    /// enough for a half-open probe).
+    pub fn allow(&self) -> bool {
+        self.allow_at(Instant::now())
+    }
+
+    /// [`CircuitBreaker::allow`] against an explicit clock (tests).
+    pub fn allow_at(&self, now: Instant) -> bool {
+        let inner = self.inner.lock().unwrap();
+        match inner.open_until {
+            Some(until) => now >= until,
+            None => true,
+        }
+    }
+
+    pub fn record_success(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.consecutive = 0;
+        inner.open_until = None;
+    }
+
+    pub fn record_failure(&self) {
+        self.record_failure_at(Instant::now());
+    }
+
+    pub fn record_failure_at(&self, now: Instant) {
+        let mut inner = self.inner.lock().unwrap();
+        // a failed half-open probe re-opens without needing a fresh run
+        // of `threshold` failures
+        let reopen = inner.open_until.is_some();
+        inner.consecutive = inner.consecutive.saturating_add(1);
+        if reopen || inner.consecutive >= self.threshold {
+            inner.open_until = Some(now + self.cooldown);
+            inner.trips += 1;
+            inner.consecutive = 0;
+        }
+    }
+
+    /// Whether the circuit is open (cooldown still running).
+    pub fn is_open(&self) -> bool {
+        !self.allow()
+    }
+
+    /// Times the breaker has opened so far.
+    pub fn trips(&self) -> u64 {
+        self.inner.lock().unwrap().trips
+    }
+}
+
+#[derive(Debug)]
+struct BudgetInner {
+    tokens: f64,
+    last: Instant,
+    spent: u64,
+}
+
+/// Token-bucket retry budget: `capacity` tokens, refilled continuously
+/// at `refill_per_sec`. Each retry spends one token; an empty bucket
+/// refuses ([`RetryBudget::try_spend`] = false) and reports how long
+/// until the next token ([`RetryBudget::retry_after_ms`]) so the caller
+/// can surface `Retry-After` instead of retrying.
+pub struct RetryBudget {
+    capacity: f64,
+    refill_per_sec: f64,
+    inner: Mutex<BudgetInner>,
+}
+
+impl RetryBudget {
+    pub fn new(capacity: f64, refill_per_sec: f64) -> RetryBudget {
+        assert!(capacity >= 1.0, "budget capacity must hold >= 1 token");
+        assert!(refill_per_sec > 0.0, "refill rate must be positive");
+        RetryBudget {
+            capacity,
+            refill_per_sec,
+            inner: Mutex::new(BudgetInner {
+                tokens: capacity,
+                last: Instant::now(),
+                spent: 0,
+            }),
+        }
+    }
+
+    fn refill(&self, inner: &mut BudgetInner, now: Instant) {
+        let dt = now.saturating_duration_since(inner.last).as_secs_f64();
+        inner.tokens = (inner.tokens + dt * self.refill_per_sec).min(self.capacity);
+        inner.last = now;
+    }
+
+    /// Spend one token if available.
+    pub fn try_spend(&self) -> bool {
+        self.try_spend_at(Instant::now())
+    }
+
+    /// [`RetryBudget::try_spend`] against an explicit clock (tests). The
+    /// clock must be monotone across calls (earlier instants refill
+    /// nothing).
+    pub fn try_spend_at(&self, now: Instant) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        self.refill(&mut inner, now);
+        if inner.tokens >= 1.0 {
+            inner.tokens -= 1.0;
+            inner.spent += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current token count (refilled to `now`).
+    pub fn tokens_at(&self, now: Instant) -> f64 {
+        let mut inner = self.inner.lock().unwrap();
+        self.refill(&mut inner, now);
+        inner.tokens
+    }
+
+    /// Tokens spent over the budget's lifetime.
+    pub fn spent(&self) -> u64 {
+        self.inner.lock().unwrap().spent
+    }
+
+    /// Milliseconds until one full token is available (0 when spendable
+    /// now) — the `Retry-After` hint on budget exhaustion.
+    pub fn retry_after_ms(&self) -> u64 {
+        self.retry_after_ms_at(Instant::now())
+    }
+
+    pub fn retry_after_ms_at(&self, now: Instant) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        self.refill(&mut inner, now);
+        if inner.tokens >= 1.0 {
+            return 0;
+        }
+        let deficit = 1.0 - inner.tokens;
+        (deficit / self.refill_per_sec * 1e3).ceil() as u64
+    }
+}
+
+/// Jittered exponential backoff, bounded to `[base, cap]`: the ceiling
+/// doubles per attempt (`base << attempt`, saturating at `cap`) and the
+/// result is drawn uniformly in `[base, ceiling]` from `salt` — full
+/// jitter, but never below `base`, so property tests can pin both ends.
+pub fn jittered_backoff(base: Duration, cap: Duration, attempt: u32, salt: u64) -> Duration {
+    let base_ns = base.as_nanos() as u64;
+    let cap_ns = cap.as_nanos().min(u64::MAX as u128) as u64;
+    if cap_ns <= base_ns {
+        return base;
+    }
+    let ceiling = base_ns
+        .saturating_mul(1u64.checked_shl(attempt.min(32)).unwrap_or(u64::MAX))
+        .min(cap_ns);
+    // uniform in [base, ceiling] via a 53-bit fraction of the salt hash
+    let frac = (splitmix64(salt) >> 11) as f64 / (1u64 << 53) as f64;
+    let span = (ceiling - base_ns) as f64;
+    Duration::from_nanos(base_ns + (span * frac) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn plan_parses_full_spec_and_rejects_garbage() {
+        let plan =
+            FaultPlan::parse("seed=42, disk_read=0.05, rpc_drop=0.5, delay_ms=7, worker_crash=1")
+                .expect("valid spec");
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.delay_ms, 7);
+        assert_eq!(plan.rate(FaultSite::DiskRead), 0.05);
+        assert_eq!(plan.rate(FaultSite::RpcDrop), 0.5);
+        assert_eq!(plan.rate(FaultSite::WorkerCrash), 1.0);
+        assert_eq!(plan.rate(FaultSite::DiskWrite), 0.0);
+        assert!(plan.is_active());
+        assert!(!FaultPlan::parse("").unwrap().is_active());
+        assert!(FaultPlan::parse("disk_red=0.1").is_err(), "typo must be rejected");
+        assert!(FaultPlan::parse("disk_read=1.5").is_err(), "rate > 1 rejected");
+        assert!(FaultPlan::parse("disk_read=-0.1").is_err());
+        assert!(FaultPlan::parse("disk_read").is_err(), "missing value rejected");
+        assert!(FaultPlan::parse("seed=x").is_err());
+    }
+
+    #[test]
+    fn injector_is_deterministic_and_streams_are_isolated() {
+        let plan = FaultPlan::new(7)
+            .with_rate(FaultSite::DiskRead, 0.3)
+            .with_rate(FaultSite::RpcDrop, 0.3);
+        let a = FaultInjector::new(plan.clone());
+        let b = FaultInjector::new(plan.clone());
+        // same plan => identical decision sequences per site
+        let seq_a: Vec<bool> = (0..64).map(|_| a.should(FaultSite::DiskRead)).collect();
+        let seq_b: Vec<bool> = (0..64).map(|_| b.should(FaultSite::DiskRead)).collect();
+        assert_eq!(seq_a, seq_b);
+        // interleaving draws at another site must not shift the stream
+        let c = FaultInjector::new(plan);
+        let seq_c: Vec<bool> = (0..64)
+            .map(|_| {
+                c.should(FaultSite::RpcDrop); // foreign-site draw in between
+                c.should(FaultSite::DiskRead)
+            })
+            .collect();
+        assert_eq!(seq_a, seq_c, "per-site streams must be isolated");
+        assert_eq!(
+            a.injected(FaultSite::DiskRead),
+            seq_a.iter().filter(|&&h| h).count() as u64
+        );
+        assert_eq!(a.injected(FaultSite::WorkerCrash), 0);
+    }
+
+    #[test]
+    fn zero_and_one_rates_are_exact() {
+        let inj = FaultInjector::new(
+            FaultPlan::new(1)
+                .with_rate(FaultSite::LoaderFail, 1.0)
+                .with_rate(FaultSite::DiskRead, 0.0),
+        );
+        for _ in 0..32 {
+            assert!(inj.should(FaultSite::LoaderFail));
+            assert!(!inj.should(FaultSite::DiskRead));
+        }
+        assert_eq!(inj.injected(FaultSite::LoaderFail), 32);
+        assert_eq!(inj.total_injected(), 32);
+    }
+
+    #[test]
+    fn from_plan_gates_on_activity() {
+        assert!(FaultInjector::from_plan(None).is_none());
+        assert!(FaultInjector::from_plan(Some(&FaultPlan::new(3))).is_none());
+        let active = FaultPlan::new(3).with_rate(FaultSite::DiskRead, 0.1);
+        assert!(FaultInjector::from_plan(Some(&active)).is_some());
+    }
+
+    #[test]
+    fn breaker_trips_after_threshold_and_probes_after_cooldown() {
+        let t0 = Instant::now();
+        let br = CircuitBreaker::new(3, Duration::from_millis(100));
+        assert!(br.allow_at(t0));
+        br.record_failure_at(t0);
+        br.record_failure_at(t0);
+        assert!(br.allow_at(t0), "below threshold stays closed");
+        br.record_failure_at(t0);
+        assert!(!br.allow_at(t0), "third consecutive failure opens");
+        assert_eq!(br.trips(), 1);
+        // success resets nothing while open; cooldown gates the probe
+        assert!(!br.allow_at(t0 + Duration::from_millis(99)));
+        assert!(br.allow_at(t0 + Duration::from_millis(100)), "half-open probe");
+        // failed probe re-opens immediately (no fresh threshold run)
+        br.record_failure_at(t0 + Duration::from_millis(100));
+        assert!(!br.allow_at(t0 + Duration::from_millis(150)));
+        assert_eq!(br.trips(), 2);
+        // successful probe closes and clears the failure run
+        br.record_success();
+        assert!(br.allow_at(t0));
+        br.record_failure_at(t0);
+        br.record_failure_at(t0);
+        assert!(br.allow_at(t0), "success reset the consecutive count");
+    }
+
+    #[test]
+    fn property_backoff_stays_within_base_and_cap() {
+        prop_check("jittered backoff in [base, cap]", 300, |rng| {
+            let base = Duration::from_millis(1 + rng.below(50) as u64);
+            let cap = base + Duration::from_millis(rng.below(2_000) as u64);
+            let attempt = rng.below(40) as u32;
+            let d = jittered_backoff(base, cap, attempt, rng.next_u64());
+            prop_assert!(d >= base, "backoff {d:?} below base {base:?}");
+            prop_assert!(d <= cap, "backoff {d:?} above cap {cap:?}");
+            // attempt 0 has no headroom beyond base by construction
+            let first = jittered_backoff(base, cap, 0, rng.next_u64());
+            prop_assert!(first == base, "attempt 0 must sit at base, got {first:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_budget_refills_at_configured_rate() {
+        prop_check("token bucket refill rate + capacity", 200, |rng| {
+            let capacity = 1.0 + rng.below(20) as f64;
+            let rate = 0.5 + rng.f64() * 50.0;
+            let budget = RetryBudget::new(capacity, rate);
+            let t0 = Instant::now();
+            // drain the full bucket; the next spend must fail
+            for i in 0..capacity as usize {
+                prop_assert!(budget.try_spend_at(t0), "token {i} of {capacity} missing");
+            }
+            prop_assert!(!budget.try_spend_at(t0), "overdraw allowed");
+            prop_assert!(budget.spent() == capacity as u64, "spent {}", budget.spent());
+            // after dt seconds the bucket holds ~rate*dt tokens (capped)
+            let dt_ms = 1 + rng.below(5_000) as u64;
+            let later = t0 + Duration::from_millis(dt_ms);
+            let expect = (rate * dt_ms as f64 / 1e3).min(capacity);
+            let got = budget.tokens_at(later);
+            prop_assert!(
+                (got - expect).abs() < 1e-6,
+                "refill: expected {expect} tokens after {dt_ms}ms at {rate}/s, got {got}"
+            );
+            // and a long wait never exceeds capacity
+            let full = budget.tokens_at(later + Duration::from_secs(3_600));
+            prop_assert!((full - capacity).abs() < 1e-9, "cap breached: {full}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_exhausted_budget_reports_retry_after() {
+        prop_check("exhausted budget surfaces Retry-After", 200, |rng| {
+            let rate = 0.5 + rng.f64() * 20.0;
+            let budget = RetryBudget::new(1.0 + rng.below(5) as f64, rate);
+            let t0 = Instant::now();
+            while budget.try_spend_at(t0) {}
+            let wait = budget.retry_after_ms_at(t0);
+            prop_assert!(wait > 0, "empty bucket must report a positive wait");
+            let bound = (1e3 / rate).ceil() as u64 + 1;
+            prop_assert!(wait <= bound, "wait {wait}ms exceeds one-token bound {bound}ms");
+            // the reported wait is honest: a token exists once it elapses
+            let then = t0 + Duration::from_millis(wait);
+            prop_assert!(
+                budget.try_spend_at(then),
+                "token missing after the reported {wait}ms"
+            );
+            prop_assert!(budget.retry_after_ms_at(t0) > 0, "still exhausted at t0");
+            Ok(())
+        });
+    }
+}

@@ -34,6 +34,12 @@
 //!   worker processes over a keep-alive HTTP/JSON RPC data plane, with
 //!   membership/epochs, heartbeat failure detection, live drain, and
 //!   queued-work failover (`WorkerLost` for in-flight casualties).
+//! - [`faults`]: deterministic fault injection (`--faults <spec>`) across
+//!   storage / transport / engine, plus the degradation-ladder
+//!   primitives: per-tier circuit breakers, router retry budgets with
+//!   jittered backoff, and checksummed spill artifacts — cache faults
+//!   demote device → host → disk → full recompute, never a request
+//!   failure.
 //! - [`session`]: the interactive session serving plane — session
 //!   lifecycle + template pinning, sticky-affinity ownership with
 //!   failover re-homing, delta-mask round reuse, and SSE progress
@@ -53,6 +59,7 @@ pub mod cluster;
 pub mod config;
 pub mod dist;
 pub mod engine;
+pub mod faults;
 pub mod metrics;
 pub mod model;
 pub mod qos;

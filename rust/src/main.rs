@@ -16,6 +16,7 @@ use instgenie::cache::latency_model::{calibrate, LatencyModel};
 use instgenie::cluster::{Cluster, ClusterOpts, RequestState};
 use instgenie::config::{BatchingPolicy, CacheMode, EngineConfig, SystemKind};
 use instgenie::dist::{DistConfig, Router, WorkerNode};
+use instgenie::faults::FaultPlan;
 use instgenie::metrics::Recorder;
 use instgenie::qos::{AdmissionController, Priority};
 use instgenie::runtime::{Manifest, ModelRuntime};
@@ -55,12 +56,15 @@ fn print_help() {
          \x20                [--role cluster|router|worker]   distributed plane:\n\
          \x20                  router: --addr 127.0.0.1:8801 [--heartbeat-ms 500 --suspect-after-ms 2000\n\
          \x20                          --dead-after-ms 5000 --poll-ms 100 --rpc-timeout-ms 10000]\n\
+         \x20                          [--retry-budget 10 --retry-refill-per-sec 1 --retry-attempts 3\n\
+         \x20                          --retry-backoff-base-ms 10 --retry-backoff-cap-ms 500]\n\
          \x20                  worker: --rpc-addr 127.0.0.1:0 --router 127.0.0.1:8801 --name worker-a\n\
          \x20 run            --model sdxlm --workers 2 --rps 1.0 --requests 40 --system instgenie\n\
          \x20                --scheduler round-robin|request-lb|token-lb|cache-aware|mask-aware|qos-aware|session-affinity\n\
          \x20                --dist production --templates 4 --class-mix 0.2,0.5,0.3\n\
          \x20                [--popularity quadratic|zipf:<s>] [--shape steady|diurnal:<p>:<d>|bursts:<p>:<w>:<a>]\n\
          \x20                [--no-qos] [--aging-ms 2000] [--max-pending 4096] [--host-step-loop]\n\
+         \x20                [--faults seed=7,disk_read=0.05,rpc_drop=0.01,delay_ms=20]  chaos injection\n\
          \x20                [--no-kv-device-tier] [--kv-device-budget <bytes>]\n\
          \x20                [--sessions 8 --rounds-per-session 4 --mask-drift 0.2]  multi-round\n\
          \x20                  interactive sessions instead of one-shot edits (delta-mask reuse)\n\
@@ -138,6 +142,12 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     }
     cfg.qos.aging_ms = args.u64("aging-ms", cfg.qos.aging_ms);
     cfg.qos.max_pending = args.usize("max-pending", cfg.qos.max_pending);
+    // deterministic fault injection (chaos testing):
+    //   --faults "seed=7,disk_read=0.05,rpc_drop=0.01,delay_ms=20"
+    if let Some(spec) = args.flags.get("faults") {
+        let plan = FaultPlan::parse(spec).map_err(|e| anyhow::anyhow!("bad --faults: {e}"))?;
+        cfg.faults = Some(plan);
+    }
     Ok(cfg)
 }
 
@@ -173,15 +183,29 @@ fn launch_cluster(args: &Args) -> Result<Cluster> {
     )
 }
 
-fn dist_config(args: &Args) -> DistConfig {
+fn dist_config(args: &Args) -> Result<DistConfig> {
     let d = DistConfig::default();
-    DistConfig {
+    // transport faults on the router's RPC clients ride the same --faults
+    // spec as the engine sites (one chaos knob for the whole deployment)
+    let faults = match args.flags.get("faults") {
+        Some(spec) => {
+            Some(FaultPlan::parse(spec).map_err(|e| anyhow::anyhow!("bad --faults: {e}"))?)
+        }
+        None => None,
+    };
+    Ok(DistConfig {
         heartbeat_ms: args.u64("heartbeat-ms", d.heartbeat_ms),
         suspect_after_ms: args.u64("suspect-after-ms", d.suspect_after_ms),
         dead_after_ms: args.u64("dead-after-ms", d.dead_after_ms),
         poll_ms: args.u64("poll-ms", d.poll_ms),
         rpc_timeout_ms: args.u64("rpc-timeout-ms", d.rpc_timeout_ms),
-    }
+        retry_budget: args.f64("retry-budget", d.retry_budget),
+        retry_refill_per_sec: args.f64("retry-refill-per-sec", d.retry_refill_per_sec),
+        retry_backoff_base_ms: args.u64("retry-backoff-base-ms", d.retry_backoff_base_ms),
+        retry_backoff_cap_ms: args.u64("retry-backoff-cap-ms", d.retry_backoff_cap_ms),
+        retry_attempts: args.u64("retry-attempts", d.retry_attempts as u64) as u32,
+        faults,
+    })
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -225,7 +249,7 @@ fn cmd_serve_router(args: &Args) -> Result<()> {
             engine.qos.clone(),
         )
     });
-    let router = Router::new(mcfg, sched, admission, dist_config(args));
+    let router = Router::new(mcfg, sched, admission, dist_config(args)?);
     let addr = router.start(&args.str("addr", "127.0.0.1:8801"))?;
     eprintln!("[router] listening on {addr} (public api + worker rpc)");
     loop {
@@ -260,7 +284,7 @@ fn cmd_serve_worker(args: &Args) -> Result<()> {
     let addr = node.start(&args.str("rpc-addr", "127.0.0.1:0"))?;
     eprintln!("[worker] {} serving rpc on {addr}", node.name());
     if let Some(router) = args.flags.get("router") {
-        node.announce_to(router, &dist_config(args));
+        node.announce_to(router, &dist_config(args)?);
     } else {
         eprintln!("[worker] no --router given: standalone rpc mode");
     }

@@ -89,6 +89,15 @@ pub struct TransferTotals {
     /// Upload time hidden by prefetching block i+1's K/V while block i
     /// computes (microseconds).
     pub kv_prefetch_overlap_us: u64,
+    /// Degradation-ladder events: a disk-tier read error, corruption, or
+    /// checksum mismatch forced a full template recompute.
+    pub cache_degraded_disk: u64,
+    /// Device-KV-tier upload/retention failures (blocks fell back to
+    /// per-step re-upload from host).
+    pub cache_degraded_device: u64,
+    /// Loader staging jobs that died; the block was gathered
+    /// synchronously from the host store instead.
+    pub cache_degraded_loader: u64,
 }
 
 #[derive(Default)]
@@ -101,6 +110,9 @@ struct TransferCounters {
     kv_dev_hits: Cell<u64>,
     kv_dev_misses: Cell<u64>,
     kv_prefetch_overlap_us: Cell<u64>,
+    cache_degraded_disk: Cell<u64>,
+    cache_degraded_device: Cell<u64>,
+    cache_degraded_loader: Cell<u64>,
 }
 
 impl TransferCounters {
@@ -128,6 +140,9 @@ impl TransferCounters {
             kv_dev_hits: self.kv_dev_hits.get(),
             kv_dev_misses: self.kv_dev_misses.get(),
             kv_prefetch_overlap_us: self.kv_prefetch_overlap_us.get(),
+            cache_degraded_disk: self.cache_degraded_disk.get(),
+            cache_degraded_device: self.cache_degraded_device.get(),
+            cache_degraded_loader: self.cache_degraded_loader.get(),
         }
     }
 }
@@ -300,6 +315,27 @@ impl ModelRuntime {
     pub fn note_kv_prefetch_overlap(&self, d: std::time::Duration) {
         let c = &self.transfers.kv_prefetch_overlap_us;
         c.set(c.get() + d.as_micros() as u64);
+    }
+
+    /// Record a disk-tier degradation (read error / corruption forced a
+    /// full template recompute — the bottom rung of the ladder).
+    pub fn note_cache_degraded_disk(&self) {
+        let c = &self.transfers.cache_degraded_disk;
+        c.set(c.get() + 1);
+    }
+
+    /// Record a device-KV-tier degradation (upload/retention failure;
+    /// blocks re-upload from host per step).
+    pub fn note_cache_degraded_device(&self, n: u64) {
+        let c = &self.transfers.cache_degraded_device;
+        c.set(c.get() + n);
+    }
+
+    /// Record a loader degradation (staging job died; synchronous host
+    /// gather served the block instead).
+    pub fn note_cache_degraded_loader(&self) {
+        let c = &self.transfers.cache_degraded_loader;
+        c.set(c.get() + 1);
     }
 
     /// Root-aware readback of a block output into `out` (counted).

@@ -35,7 +35,9 @@
 //! - `POST /edit` — synchronous compatibility wrapper: submit + wait on
 //!   the request's own ticket (no cross-request rendezvous), returning
 //!   timing + image stats.
-//! - `GET /stats`, `GET /healthz` — legacy counters / liveness.
+//! - `GET /stats`, `GET /healthz` (alias `/v1/healthz`) — legacy
+//!   counters / liveness; `GET /v1/readyz` — readiness (503 while any
+//!   disk breaker is open).
 //!
 //! # Session endpoints (interactive editing, [`crate::session`])
 //!
@@ -241,7 +243,10 @@ impl HttpServer {
             }
         }
         match (method, path) {
-            ("GET", "/healthz") => (200, Json::obj(vec![("ok", Json::Bool(true))])),
+            ("GET", "/healthz") | ("GET", "/v1/healthz") => {
+                (200, Json::obj(vec![("ok", Json::Bool(true))]))
+            }
+            ("GET", "/v1/readyz") => self.readyz(),
             ("GET", "/stats") => (
                 200,
                 Json::obj(vec![
@@ -257,6 +262,26 @@ impl HttpServer {
             ("GET", "/v1/templates") => self.templates_list(),
             _ => (404, error_obj("not found")),
         }
+    }
+
+    /// `GET /v1/readyz`: liveness is not readiness — the process can be
+    /// up while every disk breaker is open and the cluster is serving
+    /// purely from recompute. 200 only when a worker exists and all
+    /// breakers are closed; 503 tells the balancer to prefer a healthy
+    /// peer without restarting this one.
+    fn readyz(&self) -> (u16, Json) {
+        let workers = self.cluster.workers();
+        let breakers_closed = self.cluster.breakers_closed();
+        let ok = workers >= 1 && breakers_closed;
+        (
+            if ok { 200 } else { 503 },
+            Json::obj(vec![
+                ("ready", Json::Bool(ok)),
+                ("workers", Json::num(workers as f64)),
+                ("breakers_closed", Json::Bool(breakers_closed)),
+                ("breaker_trips", Json::num(self.cluster.breaker_trips() as f64)),
+            ]),
+        )
     }
 
     /// Parse + validate a submit body into an `EditRequest`. The id is

@@ -1,0 +1,369 @@
+//! Chaos: seeded fault injection across the serving stack.
+//!
+//! Every scenario drives real requests through a plane with a
+//! deterministic [`FaultPlan`] attached and asserts the robustness
+//! invariants: **no hung tickets** (every wait resolves inside its
+//! timeout), **no lost or duplicated requests**, and — because the
+//! degradation ladder ends at deterministic full-model recompute —
+//! **bit-identical latents** to a fault-free baseline for solo requests.
+//!
+//! Engine-backed scenarios require `make artifacts` and skip silently
+//! otherwise (same idiom as `cluster_serving.rs`); the retry-budget
+//! scenario is engine-free and always runs.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use instgenie::cache::LatencyModel;
+use instgenie::cluster::{Cluster, ClusterOpts};
+use instgenie::config::{EngineConfig, ModelConfig, SystemKind};
+use instgenie::dist::{DistConfig, Router, WorkerNode};
+use instgenie::faults::{FaultPlan, FaultSite};
+use instgenie::runtime::Manifest;
+use instgenie::scheduler;
+use instgenie::server::HttpServer;
+use instgenie::util::json::Json;
+use instgenie::workload::{MaskDist, TraceEvent, TraceGen};
+
+const MODEL: &str = "sd21m";
+const WAIT: Duration = Duration::from_secs(120);
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ig-chaos-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn engine() -> EngineConfig {
+    let mut e = EngineConfig::for_system(SystemKind::InstGenIE);
+    e.prepost_cpu_us = 200; // keep tests quick
+    e
+}
+
+/// One single-worker in-process cluster (None without artifacts).
+fn launch(engine: EngineConfig) -> Option<Cluster> {
+    let manifest = Manifest::load("artifacts").ok()?;
+    let mcfg = manifest.model(MODEL).ok()?.config.clone();
+    let lat = LatencyModel::load_or_nominal("artifacts", MODEL);
+    let sched = scheduler::by_name("round-robin", &mcfg, &lat, engine.cache_mode, engine.max_batch)
+        .expect("scheduler");
+    let opts = ClusterOpts {
+        workers: 1,
+        engine,
+        model: MODEL.into(),
+        artifact_dir: "artifacts".into(),
+        templates: vec!["tpl-0".into(), "tpl-1".into()],
+        lat_model: LatencyModel::load_or_nominal("artifacts", MODEL),
+        warmup: false,
+    };
+    Some(Cluster::launch(opts, sched).expect("cluster launch"))
+}
+
+/// Run `events` one at a time (solo batches keep the fault-free and
+/// faulty runs on identical step schedules, so results must be
+/// bit-identical) and return (latent bytes, interruptions) per request.
+fn run_solo(cluster: &Cluster, events: &[TraceEvent]) -> Vec<(Vec<f32>, u64)> {
+    events
+        .iter()
+        .map(|ev| {
+            let t = cluster.submit_event(ev);
+            let resp = t.wait(WAIT).expect("every request must complete");
+            assert_eq!(resp.id, t.id());
+            (resp.latent.data().to_vec(), resp.timing.interruptions as u64)
+        })
+        .collect()
+}
+
+fn degraded_counts(cluster: &Cluster) -> (u64, u64, u64) {
+    let mut disk = 0;
+    let mut device = 0;
+    let mut loader = 0;
+    for s in cluster.worker_snapshots() {
+        disk += s.transfers.cache_degraded_disk;
+        device += s.transfers.cache_degraded_device;
+        loader += s.transfers.cache_degraded_loader;
+    }
+    (disk, device, loader)
+}
+
+/// Disk tier returning corrupted bytes on every read: the per-artifact
+/// checksum catches the flip, the ladder demotes to full recompute, the
+/// breaker trips after repeated failures — and no request fails.
+#[test]
+fn corrupt_disk_reads_degrade_to_recompute_with_identical_latents() {
+    let mut faulty = engine();
+    faulty.host_cache_budget = 1; // force every promotion through disk
+    faulty.spill_dir = tmp_dir("corrupt-faulty");
+    faulty.faults = Some(FaultPlan::new(7).with_rate(FaultSite::DiskCorrupt, 1.0));
+    let mut clean = engine();
+    clean.host_cache_budget = 1;
+    clean.spill_dir = tmp_dir("corrupt-clean");
+
+    let Some(faulty_cluster) = launch(faulty) else { return };
+    let clean_cluster = launch(clean).expect("baseline");
+
+    let events = TraceGen::new(50.0, MaskDist::Production, 2, 5).generate(5);
+    let with_faults = run_solo(&faulty_cluster, &events);
+    let baseline = run_solo(&clean_cluster, &events);
+    for (i, ((a, _), (b, _))) in with_faults.iter().zip(&baseline).enumerate() {
+        assert_eq!(a, b, "request {i}: recompute fallback must be bit-identical");
+    }
+
+    let (disk, _, _) = degraded_counts(&faulty_cluster);
+    assert!(disk > 0, "checksum mismatches must surface as CacheDegraded, got 0");
+    assert!(
+        faulty_cluster.breaker_trips() >= 1,
+        "an always-corrupt disk tier must trip the circuit breaker"
+    );
+
+    // the frontend surfaces degradation through readiness, not failures
+    let clean_http = HttpServer::new(Arc::new(clean_cluster), 1_000);
+    let (st, body) = clean_http.route("GET", "/v1/readyz", "");
+    assert_eq!(st, 200, "healthy cluster must be ready: {body}");
+    let (st, _) = clean_http.route("GET", "/v1/healthz", "");
+    assert_eq!(st, 200);
+    faulty_cluster.shutdown().expect("shutdown");
+}
+
+/// Loader jobs dropped on the floor: every staged block falls back to
+/// the synchronous gather, which is the same deterministic computation.
+#[test]
+fn dropped_loader_jobs_fall_back_to_synchronous_gather() {
+    let mut faulty = engine();
+    faulty.spill_dir = tmp_dir("loader-faulty");
+    faulty.faults = Some(FaultPlan::new(11).with_rate(FaultSite::LoaderFail, 1.0));
+    let mut clean = engine();
+    clean.spill_dir = tmp_dir("loader-clean");
+
+    let Some(faulty_cluster) = launch(faulty) else { return };
+    let clean_cluster = launch(clean).expect("baseline");
+
+    let events = TraceGen::new(50.0, MaskDist::Production, 2, 9).generate(3);
+    let with_faults = run_solo(&faulty_cluster, &events);
+    let baseline = run_solo(&clean_cluster, &events);
+    for (i, ((a, _), (b, _))) in with_faults.iter().zip(&baseline).enumerate() {
+        assert_eq!(a, b, "request {i}: sync-gather fallback must be bit-identical");
+    }
+    let (_, _, loader) = degraded_counts(&faulty_cluster);
+    assert!(loader > 0, "dropped loader jobs must count as CacheDegraded");
+    faulty_cluster.shutdown().expect("shutdown");
+    clean_cluster.shutdown().expect("shutdown");
+}
+
+/// Device (HBM) KV uploads that are never retained: every block demotes
+/// to per-step re-upload — the device → host rung of the ladder. Pure
+/// bandwidth cost; results and request outcomes are untouched.
+#[test]
+fn kv_upload_failures_demote_to_per_step_reupload() {
+    let mut faulty = engine();
+    faulty.cache_mode = instgenie::config::CacheMode::CacheKV;
+    faulty.spill_dir = tmp_dir("kvup-faulty");
+    faulty.faults = Some(FaultPlan::new(15).with_rate(FaultSite::DeviceUpload, 1.0));
+    let mut clean = engine();
+    clean.cache_mode = instgenie::config::CacheMode::CacheKV;
+    clean.spill_dir = tmp_dir("kvup-clean");
+
+    let Some(faulty_cluster) = launch(faulty) else { return };
+    let clean_cluster = launch(clean).expect("baseline");
+
+    let events = TraceGen::new(50.0, MaskDist::Production, 2, 19).generate(3);
+    let with_faults = run_solo(&faulty_cluster, &events);
+    let baseline = run_solo(&clean_cluster, &events);
+    for (i, ((a, _), (b, _))) in with_faults.iter().zip(&baseline).enumerate() {
+        assert_eq!(a, b, "request {i}: un-retained uploads must not change results");
+    }
+    let (_, device, _) = degraded_counts(&faulty_cluster);
+    assert!(device > 0, "refused device retention must count as CacheDegraded");
+    faulty_cluster.shutdown().expect("shutdown");
+    clean_cluster.shutdown().expect("shutdown");
+}
+
+/// Step-boundary worker crashes: in-flight members restart from step 0
+/// (reported as interruptions) and still produce the baseline's bits.
+#[test]
+fn step_boundary_crashes_restart_requests_deterministically() {
+    let mut faulty = engine();
+    faulty.spill_dir = tmp_dir("crash-faulty");
+    faulty.faults = Some(FaultPlan::new(21).with_rate(FaultSite::WorkerCrash, 0.2));
+    let mut clean = engine();
+    clean.spill_dir = tmp_dir("crash-clean");
+
+    let Some(faulty_cluster) = launch(faulty) else { return };
+    let clean_cluster = launch(clean).expect("baseline");
+
+    let events = TraceGen::new(50.0, MaskDist::Production, 2, 13).generate(4);
+    let with_faults = run_solo(&faulty_cluster, &events);
+    let baseline = run_solo(&clean_cluster, &events);
+    let mut interruptions = 0u64;
+    for (i, ((a, ints), (b, _))) in with_faults.iter().zip(&baseline).enumerate() {
+        assert_eq!(a, b, "request {i}: restarted run must be bit-identical");
+        interruptions += ints;
+    }
+    assert!(
+        interruptions > 0,
+        "a 20% per-step crash rate over 4 requests must interrupt at least once"
+    );
+    faulty_cluster.shutdown().expect("shutdown");
+    clean_cluster.shutdown().expect("shutdown");
+}
+
+/// Router + worker nodes over loopback with transport faults on the
+/// router's RPC clients: drops, delays and refused connects are absorbed
+/// by the budgeted retry — nothing is lost, nothing runs twice.
+#[test]
+fn transport_faults_lose_no_requests_across_the_dist_plane() {
+    let Some(manifest) = Manifest::load("artifacts").ok() else { return };
+    let mcfg = manifest.model(MODEL).unwrap().config.clone();
+    let mut cfg = DistConfig::fast();
+    cfg.faults = Some(
+        FaultPlan::new(31)
+            .with_rate(FaultSite::RpcDrop, 0.05)
+            .with_rate(FaultSite::RpcConnect, 0.05)
+            .with_rate(FaultSite::RpcTruncate, 0.03)
+            .with_rate(FaultSite::RpcDelay, 0.1),
+    );
+    let lat = LatencyModel::load_or_nominal("artifacts", MODEL);
+    let e = engine();
+    let sched =
+        scheduler::by_name("round-robin", &mcfg, &lat, e.cache_mode, e.max_batch).unwrap();
+    let router = Router::new(mcfg, sched, None, cfg.clone());
+    let addr = router.start("127.0.0.1:0").expect("router start");
+
+    let mut nodes = Vec::new();
+    for i in 0..2 {
+        let opts = ClusterOpts {
+            workers: 1,
+            engine: engine(),
+            model: MODEL.into(),
+            artifact_dir: "artifacts".into(),
+            templates: vec!["tpl-0".into(), "tpl-1".into()],
+            lat_model: LatencyModel::load_or_nominal("artifacts", MODEL),
+            warmup: false,
+        };
+        let node = Arc::new(WorkerNode::launch(format!("w{i}"), opts).expect("node"));
+        node.start("127.0.0.1:0").expect("node start");
+        node.announce_to(&addr.to_string(), &cfg);
+        nodes.push(node);
+    }
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while router.ready_count() < 2 {
+        assert!(Instant::now() < deadline, "workers never became ready");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // worker-local health/readiness while live
+    let (st, _) = nodes[0].route("GET", "/v1/healthz", "");
+    assert_eq!(st, 200);
+    let (st, _) = nodes[0].route("GET", "/v1/readyz", "");
+    assert_eq!(st, 200);
+
+    let events = TraceGen::new(100.0, MaskDist::Production, 2, 17).with_zipf(1.1).generate(10);
+    let tickets: Vec<_> = events
+        .iter()
+        .map(|ev| router.submit_event(ev).expect("router accepts through faults"))
+        .collect();
+    for t in &tickets {
+        let resp = t.wait(WAIT).expect("no ticket may hang or fail under transport faults");
+        assert_eq!(resp.id, t.id());
+    }
+    // no duplication: each request completed on exactly one node
+    let completed: usize = nodes.iter().map(|n| n.cluster().completed()).sum();
+    assert_eq!(completed, events.len(), "lost or duplicated requests");
+
+    // the cluster body exposes the budget spend (may be zero if no
+    // submit happened to draw a fault, but the field must exist)
+    let (st, body) = router.route("GET", "/v1/cluster", "");
+    assert_eq!(st, 200);
+    assert!(
+        body.at("retry_budget_spent").as_f64().is_some(),
+        "cluster body must expose retry_budget_spent: {body}"
+    );
+
+    // a drained node flips readiness without dropping liveness
+    let (st, _) = router.route("POST", "/v1/drain/w0", "");
+    assert_eq!(st, 200);
+    let (st, _) = nodes[0].route("GET", "/v1/readyz", "");
+    assert_eq!(st, 503, "a draining node must read not-ready");
+    let (st, _) = nodes[0].route("GET", "/v1/healthz", "");
+    assert_eq!(st, 200, "a draining node is still alive");
+
+    router.shutdown();
+    for n in &nodes {
+        n.stop();
+    }
+}
+
+/// Engine-free: a member that never answers drains its retry budget and
+/// the router sheds with 429 + Retry-After instead of spinning. Budgets
+/// survive re-announces, so a flapping worker cannot refill itself.
+#[test]
+fn exhausted_retry_budget_surfaces_retry_after() {
+    let mcfg = ModelConfig {
+        name: "t".into(),
+        latent_hw: 8,
+        tokens: 64,
+        hidden: 64,
+        heads: 4,
+        blocks: 4,
+        steps: 8,
+        token_buckets: vec![4, 8, 16, 32],
+        paper_analogue: String::new(),
+    };
+    let lat = LatencyModel::nominal(1e9, 1e8);
+    let e = engine();
+    let sched =
+        scheduler::by_name("round-robin", &mcfg, &lat, e.cache_mode, e.max_batch).unwrap();
+    let mut cfg = DistConfig::fast();
+    cfg.retry_budget = 1.0;
+    cfg.retry_refill_per_sec = 0.01; // one token per 100 s: no refill mid-test
+    cfg.retry_attempts = 5;
+    let router = Router::new(mcfg, sched, None, cfg);
+
+    // before any member: alive, but not ready
+    let (st, _) = router.route("GET", "/v1/healthz", "");
+    assert_eq!(st, 200);
+    let (st, _) = router.route("GET", "/v1/readyz", "");
+    assert_eq!(st, 503, "a routerless-of-members plane is not ready");
+
+    // a phantom member on a port nothing listens on; the heartbeat
+    // flips it joining → ready (announce alone leaves it joining)
+    let announce = Json::obj(vec![
+        ("name", Json::str("phantom")),
+        ("rpc_addr", Json::str("127.0.0.1:1")),
+        ("templates", Json::arr(vec![Json::str("tpl-0")])),
+    ])
+    .to_string();
+    let beat = r#"{"name":"phantom"}"#;
+    let (st, _) = router.route("POST", "/rpc/announce", &announce);
+    assert_eq!(st, 200);
+    let (st, _) = router.route("POST", "/rpc/heartbeat", beat);
+    assert_eq!(st, 200);
+    let (st, _) = router.route("GET", "/v1/readyz", "");
+    assert_eq!(st, 200, "a ready member makes the router ready");
+
+    // first submission: one real attempt + one budgeted retry, then the
+    // single token is gone and the caller is shed with Retry-After
+    let body = r#"{"template":"tpl-0","mask_ratio":0.2,"prompt_seed":1}"#;
+    let (st, reply) = router.route("POST", "/v1/edits", body);
+    assert_eq!(st, 429, "unreachable-member placement must shed: {reply}");
+    assert_eq!(reply.at("error_kind").as_str(), Some("overloaded"));
+    let after = reply.at("retry_after_ms").as_f64().expect("Retry-After surfaced");
+    assert!(after > 0.0, "retry_after_ms must be positive, got {after}");
+
+    // a re-announce (flap) must NOT refill the budget: the next
+    // submission is shed immediately, with zero retries spent
+    let (st, _) = router.route("POST", "/rpc/announce", &announce);
+    assert_eq!(st, 200);
+    let (st, _) = router.route("POST", "/rpc/heartbeat", beat);
+    assert_eq!(st, 200);
+    let (st, reply) = router.route("POST", "/v1/edits", body);
+    assert_eq!(st, 429, "budgets must survive re-announces: {reply}");
+    let (_, cluster) = router.route("GET", "/v1/cluster", "");
+    assert_eq!(
+        cluster.at("retry_budget_spent").as_f64(),
+        Some(1.0),
+        "exactly the one budgeted retry may have been spent: {cluster}"
+    );
+    router.shutdown();
+}
