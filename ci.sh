@@ -101,4 +101,11 @@ else
   echo "ci.sh: artifacts/ absent; skipping fault bench smoke"
 fi
 
+# Durability smoke: journal append throughput + cold replay per fsync
+# policy (always runs), and — with artifacts — the same trace journaled
+# vs volatile plus cold router recovery time, written to
+# BENCH_recovery.json. Hard gate: journaled throughput >= 95% of the
+# volatile baseline at the default batched policy.
+run cargo run --release --example recovery_bench -- 24 200 2
+
 echo "ci.sh: all checks passed"

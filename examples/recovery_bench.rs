@@ -1,0 +1,245 @@
+//! Durability bench: what does the write-ahead journal cost, and how
+//! fast is recovery?
+//!
+//! Three measurements, written to `BENCH_recovery.json`:
+//!
+//! 1. **Journal micro-bench** (always runs, no artifacts needed):
+//!    append throughput per fsync policy (`always` / `batched` / `off`)
+//!    and cold replay time over the same records.
+//! 2. **Serving overhead** (needs artifacts): the same trace through the
+//!    dist plane with the journal off vs on at the default `batched`
+//!    policy. **Hard gate:** journaled throughput ≥ 95% of the volatile
+//!    baseline — durability must cost less than 5% of throughput.
+//! 3. **Recovery time** (needs artifacts): after the journaled run, a
+//!    cold router replays the journal back into registries — the time
+//!    from "process start" to "ready to place work".
+//!
+//! Run: `cargo run --release --example recovery_bench -- [requests] [rps] [workers]`
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use instgenie::cache::LatencyModel;
+use instgenie::cluster::ClusterOpts;
+use instgenie::config::{EngineConfig, SystemKind};
+use instgenie::dist::{DistConfig, Router, WorkerNode};
+use instgenie::durable::{self, FsyncPolicy, Journal, JournalConfig};
+use instgenie::metrics::Recorder;
+use instgenie::runtime::Manifest;
+use instgenie::scheduler;
+use instgenie::util::json::Json;
+use instgenie::workload::{replay, MaskDist, TraceEvent, TraceGen};
+
+const TEMPLATES: usize = 2;
+const SCHED: &str = "round-robin";
+const OVERHEAD_GATE: f64 = 0.95; // journaled tput must stay within 5%
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ig-recbench-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).expect("bench dir");
+    d
+}
+
+/// Append `n` records under `policy`, then cold-replay them; returns
+/// (appends/sec, replay millis).
+fn journal_micro(policy: FsyncPolicy, n: usize) -> anyhow::Result<(f64, f64)> {
+    let mut cfg = JournalConfig::new(tmp_dir(&format!("micro-{}", policy.label())));
+    cfg.fsync = policy;
+    let (mut j, _) = Journal::open(cfg.clone())?;
+    let t0 = Instant::now();
+    for i in 0..n {
+        j.append(&durable::rec_req_state(i as u64, "done"))?;
+    }
+    j.flush()?;
+    let append_secs = t0.elapsed().as_secs_f64();
+    drop(j);
+
+    let t0 = Instant::now();
+    let (_, rep) = Journal::open(cfg)?;
+    let replay_ms = t0.elapsed().as_secs_f64() * 1e3;
+    anyhow::ensure!(rep.records.len() == n, "replay lost records: {}/{n}", rep.records.len());
+    Ok((n as f64 / append_secs.max(1e-9), replay_ms))
+}
+
+/// One trace through router + worker nodes; returns throughput (req/s).
+/// Fails hard if any request is lost.
+fn run_trace(
+    mcfg: &instgenie::config::ModelConfig,
+    lat: &LatencyModel,
+    model: &str,
+    events: &[TraceEvent],
+    cfg: &DistConfig,
+    workers: usize,
+    tag: &str,
+) -> anyhow::Result<f64> {
+    let e0 = EngineConfig::for_system(SystemKind::InstGenIE);
+    let sched = scheduler::by_name(SCHED, mcfg, lat, e0.cache_mode, e0.max_batch)
+        .expect("scheduler");
+    let router = Router::new(mcfg.clone(), sched, None, cfg.clone());
+    let addr = router.start("127.0.0.1:0")?;
+    let mut nodes: Vec<Arc<WorkerNode>> = Vec::new();
+    for i in 0..workers {
+        let mut e = EngineConfig::for_system(SystemKind::InstGenIE);
+        e.prepost_cpu_us = 200;
+        e.spill_dir = tmp_dir(&format!("{tag}-w{i}"));
+        let opts = ClusterOpts {
+            workers: 1,
+            engine: e,
+            model: model.to_string(),
+            artifact_dir: "artifacts".into(),
+            templates: (0..TEMPLATES).map(|i| format!("tpl-{i}")).collect(),
+            lat_model: lat.clone(),
+            warmup: false,
+        };
+        let node = Arc::new(WorkerNode::launch(format!("{tag}-w{i}"), opts)?);
+        node.start("127.0.0.1:0")?;
+        node.announce_to(&addr.to_string(), cfg);
+        nodes.push(node);
+    }
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while router.ready_count() < workers {
+        anyhow::ensure!(Instant::now() < deadline, "workers never became ready");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    let t0 = Instant::now();
+    let mut tickets = Vec::new();
+    let mut rec = Recorder::new();
+    replay(events, |ev| match router.submit_event(ev) {
+        Ok(t) => tickets.push(t),
+        Err(e) => rec.record_failure(&e),
+    });
+    for t in &tickets {
+        match t.wait(Duration::from_secs(600)) {
+            Ok(resp) => rec.record(&resp),
+            Err(e) => rec.record_failure(&e),
+        }
+    }
+    let rep = rec.report(t0.elapsed().as_secs_f64());
+    router.shutdown();
+    for n in &nodes {
+        n.stop();
+    }
+    anyhow::ensure!(
+        rep.failed == 0 && rep.completed == events.len(),
+        "{tag}: {}/{} completed, {} failed — journaling must never cost a request",
+        rep.completed,
+        events.len(),
+        rep.failed
+    );
+    Ok(rep.throughput)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(24);
+    let rps: f64 = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(200.0);
+    let workers: usize = args.get(2).and_then(|a| a.parse().ok()).unwrap_or(2).max(1);
+
+    // 1. journal micro-bench: always runs
+    println!("== recovery bench: journal micro ==");
+    let mut micro_rows = Vec::new();
+    for (policy, n) in [
+        (FsyncPolicy::Always, 500usize),
+        (FsyncPolicy::Batched, 5000),
+        (FsyncPolicy::Off, 5000),
+    ] {
+        let (aps, replay_ms) = journal_micro(policy, n)?;
+        println!(
+            "   fsync={:<7} appends/s={aps:>10.0}  cold replay of {n} recs: {replay_ms:.1}ms",
+            policy.label()
+        );
+        micro_rows.push(Json::obj(vec![
+            ("fsync", Json::str(policy.label())),
+            ("records", Json::num(n as f64)),
+            ("appends_per_sec", Json::num(aps)),
+            ("replay_ms", Json::num(replay_ms)),
+        ]));
+    }
+
+    // 2 + 3. serving overhead + recovery time: need artifacts
+    let mut serving = Json::Null;
+    if let Ok(manifest) = Manifest::load("artifacts") {
+        let model = if manifest.models.contains_key("sd21m") {
+            "sd21m".to_string()
+        } else {
+            manifest.models.keys().next().cloned().unwrap_or_default()
+        };
+        if !model.is_empty() {
+            let mcfg = manifest.model(&model)?.config.clone();
+            let lat = LatencyModel::load_or_nominal("artifacts", &model);
+            let events = TraceGen::new(rps, MaskDist::Production, TEMPLATES, 47).generate(requests);
+            println!(
+                "== recovery bench: serving overhead model={model} workers={workers} \
+                 requests={requests} rps={rps} =="
+            );
+
+            let volatile_cfg = DistConfig::fast();
+            let jdir = tmp_dir("serve-journal");
+            let mut journaled_cfg = DistConfig::fast();
+            journaled_cfg.journal_dir = Some(jdir.clone());
+            // default policy under test: batched group fsync
+
+            // interleave two runs per arm; best-of-two damps scheduler noise
+            let mut base_tput = 0f64;
+            let mut jour_tput = 0f64;
+            for round in 0..2 {
+                let b = run_trace(&mcfg, &lat, &model, &events, &volatile_cfg, workers,
+                    &format!("base{round}"))?;
+                let j = run_trace(&mcfg, &lat, &model, &events, &journaled_cfg, workers,
+                    &format!("jour{round}"))?;
+                base_tput = base_tput.max(b);
+                jour_tput = jour_tput.max(j);
+            }
+            let overhead_pct = (1.0 - jour_tput / base_tput) * 100.0;
+
+            // recovery time: a cold router replays the journal the
+            // serving runs just wrote (members, requests, sessions)
+            let t0 = Instant::now();
+            let e0 = EngineConfig::for_system(SystemKind::InstGenIE);
+            let sched = scheduler::by_name(SCHED, &mcfg, &lat, e0.cache_mode, e0.max_batch)
+                .expect("scheduler");
+            let recovered = Router::new(mcfg.clone(), sched, None, journaled_cfg.clone());
+            let recovery_ms = t0.elapsed().as_secs_f64() * 1e3;
+            recovered.shutdown();
+
+            println!(
+                "   baseline={base_tput:.2} req/s  journaled={jour_tput:.2} req/s  \
+                 overhead={overhead_pct:.2}%  cold recovery={recovery_ms:.1}ms"
+            );
+            // the hard gate: durability must cost < 5% throughput
+            anyhow::ensure!(
+                jour_tput >= OVERHEAD_GATE * base_tput,
+                "journal overhead gate failed: {jour_tput:.2} req/s journaled vs \
+                 {base_tput:.2} req/s baseline ({overhead_pct:.2}% > 5%)"
+            );
+            serving = Json::obj(vec![
+                ("model", Json::str(model)),
+                ("workers", Json::num(workers as f64)),
+                ("requests", Json::num(requests as f64)),
+                ("rps", Json::num(rps)),
+                ("fsync", Json::str(FsyncPolicy::default().label())),
+                ("baseline_throughput", Json::num(base_tput)),
+                ("journaled_throughput", Json::num(jour_tput)),
+                ("overhead_pct", Json::num(overhead_pct)),
+                ("recovery_ms", Json::num(recovery_ms)),
+            ]);
+        }
+    } else {
+        eprintln!("[recovery_bench] no artifacts; journal micro-bench only");
+    }
+
+    let out = Json::obj(vec![
+        ("gate", Json::str(format!(
+            "journaled throughput >= {:.0}% of volatile baseline at default fsync",
+            OVERHEAD_GATE * 100.0
+        ))),
+        ("journal_micro", Json::arr(micro_rows)),
+        ("serving", serving),
+    ]);
+    std::fs::write("BENCH_recovery.json", out.to_string())?;
+    println!("[recovery_bench] wrote BENCH_recovery.json");
+    Ok(())
+}

@@ -149,6 +149,12 @@ pub struct EngineConfig {
     /// Deterministic fault injection (`--faults <spec>`); `None` (the
     /// default) compiles the injection points down to a null check.
     pub faults: Option<FaultPlan>,
+    /// Spill a step-boundary latent checkpoint for every running member
+    /// each time its step count crosses a multiple of this, so a crashed
+    /// worker resumes the batch from the last checkpoint instead of step
+    /// 0 (the engine is deterministic, so the resumed run is
+    /// bit-identical). `0` disables checkpointing.
+    pub checkpoint_every_steps: usize,
 }
 
 impl EngineConfig {
@@ -176,6 +182,7 @@ impl EngineConfig {
             prepost_cpu_us: 2_000,
             qos: QosConfig::standard(),
             faults: None,
+            checkpoint_every_steps: 0,
         }
     }
 

@@ -140,6 +140,46 @@ impl Membership {
         }
     }
 
+    /// Re-seat a journaled member at recovery: same slot order, same
+    /// epoch, but `Suspect` until it heartbeats again — a recovered entry
+    /// must prove liveness before taking work, and a dead one expires
+    /// naturally. Slots are announce-order Vec indices, so restoring
+    /// members in journal slot order reproduces the assignment exactly
+    /// and a re-announcing live worker lands back on its old slot.
+    /// Returns the slot.
+    pub fn restore(
+        &mut self,
+        name: &str,
+        rpc_addr: &str,
+        templates: Vec<String>,
+        epoch: u64,
+        now: Instant,
+    ) -> usize {
+        let slot = match self.slot_of(name) {
+            Some(slot) => slot,
+            None => {
+                self.members.push(Member {
+                    name: name.to_string(),
+                    rpc_addr: rpc_addr.to_string(),
+                    state: MemberState::Suspect,
+                    epoch,
+                    last_heartbeat: now,
+                    snapshot: None,
+                    templates: Vec::new(),
+                });
+                self.members.len() - 1
+            }
+        };
+        let m = &mut self.members[slot];
+        m.rpc_addr = rpc_addr.to_string();
+        m.templates = templates;
+        m.state = MemberState::Suspect;
+        m.epoch = epoch;
+        m.last_heartbeat = now;
+        m.snapshot = None;
+        slot
+    }
+
     /// Record a heartbeat. `Joining`/`Suspect` members become `Ready`;
     /// `Draining` stays draining (the drain outlives load reports).
     /// A heartbeat carrying a template set refreshes the member's

@@ -74,6 +74,20 @@ pub struct DistConfig {
     /// Deterministic transport fault injection on the router's RPC
     /// clients (None in production).
     pub faults: Option<crate::faults::FaultPlan>,
+    /// Write-ahead journal directory for the router's durable control
+    /// plane (None: volatile, the pre-journal behavior).
+    pub journal_dir: Option<std::path::PathBuf>,
+    /// When acknowledged journal appends reach the platter.
+    pub journal_fsync: crate::durable::FsyncPolicy,
+    /// Journal segment rotation threshold.
+    pub journal_segment_bytes: u64,
+    /// Compact the journal into a snapshot every this many records.
+    pub journal_snapshot_every: u64,
+    /// Max unsynced window under the batched fsync policy.
+    pub journal_batch_ms: u64,
+    /// Standby: journal-tail silence from the primary after which the
+    /// standby takes over.
+    pub standby_takeover_ms: u64,
 }
 
 impl Default for DistConfig {
@@ -90,6 +104,12 @@ impl Default for DistConfig {
             retry_backoff_cap_ms: 500,
             retry_attempts: 3,
             faults: None,
+            journal_dir: None,
+            journal_fsync: crate::durable::FsyncPolicy::Batched,
+            journal_segment_bytes: 1 << 20,
+            journal_snapshot_every: 4096,
+            journal_batch_ms: 20,
+            standby_takeover_ms: 3_000,
         }
     }
 }
@@ -109,6 +129,24 @@ impl DistConfig {
             retry_backoff_cap_ms: 100,
             retry_attempts: 3,
             faults: None,
+            journal_dir: None,
+            journal_fsync: crate::durable::FsyncPolicy::Batched,
+            journal_segment_bytes: 1 << 20,
+            journal_snapshot_every: 4096,
+            journal_batch_ms: 20,
+            standby_takeover_ms: 600,
         }
+    }
+
+    /// The journal configuration these knobs describe (None when no
+    /// journal directory is set — the volatile pre-journal behavior).
+    pub fn journal_config(&self) -> Option<crate::durable::JournalConfig> {
+        self.journal_dir.as_ref().map(|dir| crate::durable::JournalConfig {
+            dir: dir.clone(),
+            fsync: self.journal_fsync,
+            segment_bytes: self.journal_segment_bytes,
+            snapshot_every: self.journal_snapshot_every,
+            batch_ms: self.journal_batch_ms,
+        })
     }
 }

@@ -35,6 +35,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::cluster::{CancelOutcome, Cluster, ClusterOpts, RequestState};
+use crate::durable::BoundedDedupe;
 use crate::scheduler::RoundRobin;
 use crate::server::{edit_error_reply, error_obj, serve_connection};
 use crate::templates::{RegisterAdmission, RetireOutcome};
@@ -43,6 +44,17 @@ use crate::util::json::Json;
 use super::proto::{self, Announce, PollState, SubmitWire};
 use super::rpc::RpcClient;
 use super::DistConfig;
+
+/// Wire-id dedupe window: ids remembered (count cap + TTL) after their
+/// result was consumed and evicted, so a late duplicate submit — a
+/// dropped ack retried, or a recovered router re-placing journaled work —
+/// acks instead of recomputing.
+const DEDUPE_CAP: usize = 4096;
+const DEDUPE_TTL: Duration = Duration::from_secs(600);
+
+/// Consecutive announce/heartbeat failures before the node rotates to the
+/// next router address (primary -> standby and back).
+const ROTATE_AFTER_MISSES: u32 = 3;
 
 pub struct WorkerNode {
     name: String,
@@ -53,6 +65,10 @@ pub struct WorkerNode {
     stopping: AtomicBool,
     /// Bound RPC address (set by [`WorkerNode::start`]).
     addr: Mutex<Option<SocketAddr>>,
+    /// Bounded wire-id dedupe (see [`DEDUPE_CAP`]): the registry forgets
+    /// an id once its result is evicted; this window keeps the
+    /// at-least-once contract honest past that point.
+    dedupe: BoundedDedupe,
 }
 
 impl WorkerNode {
@@ -71,6 +87,7 @@ impl WorkerNode {
             accepting: AtomicBool::new(true),
             stopping: AtomicBool::new(false),
             addr: Mutex::new(None),
+            dedupe: BoundedDedupe::new(DEDUPE_CAP, DEDUPE_TTL),
         })
     }
 
@@ -117,19 +134,55 @@ impl WorkerNode {
     /// Announce to the router and heartbeat until stopped. Re-announces
     /// whenever the router refuses a heartbeat (it declared us dead, or
     /// restarted and lost the membership table).
+    ///
+    /// `router_addr` may be a comma-separated list: the node talks to one
+    /// address at a time and rotates to the next after
+    /// [`ROTATE_AFTER_MISSES`] consecutive failures. Listing the primary
+    /// router first and a warm standby second makes workers re-announce to
+    /// the standby once it takes over the primary's write path.
     pub fn announce_to(self: &Arc<Self>, router_addr: &str, cfg: &DistConfig) {
         let this = Arc::clone(self);
-        let router = router_addr.to_string();
+        let routers: Vec<String> = router_addr
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
         let cadence = Duration::from_millis(cfg.heartbeat_ms.max(1));
         let timeout = Duration::from_millis(cfg.rpc_timeout_ms.max(1));
         std::thread::spawn(move || {
-            let mut client = RpcClient::new(router, timeout);
+            if routers.is_empty() {
+                return;
+            }
+            let mut which = 0usize;
+            let mut client = RpcClient::new(routers[which].clone(), timeout);
             let mut announced = false;
+            let mut misses = 0u32;
+            // rotate to the next configured router address; a standby
+            // refuses writes (503) until takeover, so the node keeps
+            // cycling primary -> standby -> primary until one accepts
+            let mut rotate = |which: &mut usize, client: &mut RpcClient, misses: &mut u32| {
+                *misses = 0;
+                if routers.len() > 1 {
+                    *which = (*which + 1) % routers.len();
+                    *client = RpcClient::new(routers[*which].clone(), timeout);
+                }
+            };
             while !this.stopping.load(Ordering::SeqCst) {
                 if !announced {
                     let body = this.announce_body();
-                    announced =
-                        matches!(client.call("POST", "/rpc/announce", Some(&body)), Ok((200, _)));
+                    match client.call("POST", "/rpc/announce", Some(&body)) {
+                        Ok((200, _)) => {
+                            announced = true;
+                            misses = 0;
+                        }
+                        // refused (standby) or unreachable (dead)
+                        _ => {
+                            misses += 1;
+                            if misses >= ROTATE_AFTER_MISSES {
+                                rotate(&mut which, &mut client, &mut misses);
+                            }
+                        }
+                    }
                 }
                 if announced {
                     let snap = this.cluster.worker_snapshots().into_iter().next();
@@ -145,9 +198,17 @@ impl WorkerNode {
                         Json::arr(this.serveable_templates().iter().map(Json::str).collect()),
                     ));
                     match client.call("POST", "/rpc/heartbeat", Some(&Json::obj(pairs))) {
-                        Ok((200, _)) => {}
+                        Ok((200, _)) => misses = 0,
                         Ok(_) => announced = false, // router wants a re-announce
-                        Err(_) => {}                // router unreachable: keep trying
+                        Err(_) => {
+                            // router unreachable: after enough silence,
+                            // fail over to the next address
+                            misses += 1;
+                            if misses >= ROTATE_AFTER_MISSES {
+                                announced = false;
+                                rotate(&mut which, &mut client, &mut misses);
+                            }
+                        }
                     }
                 }
                 std::thread::sleep(cadence);
@@ -292,8 +353,11 @@ impl WorkerNode {
         };
         // at-least-once delivery: a router whose reply was dropped in
         // flight retries the same wire id. The first copy is
-        // authoritative — acknowledge instead of double-queueing.
-        if self.cluster.status(wire.id).is_some() {
+        // authoritative — acknowledge instead of double-queueing. The
+        // registry answers while the result is live; the bounded dedupe
+        // window answers after eviction (and after a recovered router
+        // re-places journaled work that already ran here).
+        if self.dedupe.contains(wire.id) || self.cluster.status(wire.id).is_some() {
             return (
                 202,
                 Json::obj(vec![
@@ -303,13 +367,16 @@ impl WorkerNode {
             );
         }
         match self.cluster.submit_checked(wire.into_request()) {
-            Ok(ticket) => (
-                202,
-                Json::obj(vec![
-                    ("id", Json::num(ticket.id() as f64)),
-                    ("status", Json::str("queued")),
-                ]),
-            ),
+            Ok(ticket) => {
+                self.dedupe.insert(ticket.id());
+                (
+                    202,
+                    Json::obj(vec![
+                        ("id", Json::num(ticket.id() as f64)),
+                        ("status", Json::str("queued")),
+                    ]),
+                )
+            }
             Err(e) => edit_error_reply(&e),
         }
     }

@@ -50,6 +50,19 @@
 //! *not* proxied — they are served by the worker-local frontend that owns
 //! the engine's event buffers.
 //!
+//! ## Durability ([`crate::durable`])
+//!
+//! With `--journal <dir>` the router writes every externally visible
+//! state transition to a checksummed write-ahead journal *before* acking
+//! it, and a restarted router adopts the replayed state: still-queued
+//! work is re-placed on residency-compatible members (worker-side
+//! wire-id dedupe makes re-submission safe), in-flight work reconciles
+//! against `/rpc/poll`, and repeated `Idempotency-Key`s return the
+//! original ticket even across the crash. A warm standby
+//! ([`Router::start_standby`]) tails the journal over
+//! `GET /rpc/journal/tail`, treats tail success as the primary's
+//! heartbeat, and takes over on silence.
+//!
 //! [`Cluster`]: crate::cluster::Cluster
 
 use std::collections::HashMap;
@@ -63,12 +76,13 @@ use anyhow::{Context, Result};
 use crate::cache::tier::Residency;
 use crate::cluster::{EditTicket, RequestRegistry, RequestState};
 use crate::config::ModelConfig;
+use crate::durable::{self, DurableLog, IdemKeys, RecoveredState};
 use crate::engine::request::{EditError, EditRequest, EditRequestBuilder};
 use crate::faults::{jittered_backoff, FaultInjector, RetryBudget};
 use crate::qos::{Admission, AdmissionController, Priority};
 use crate::scheduler::{Outstanding, RouteCtx, Scheduler};
 use crate::server::{
-    done_body, edit_error_reply, error_obj, push_qos_pairs, serve_connection,
+    done_body, edit_error_reply, error_obj, push_qos_pairs, serve_connection_ext,
     session_error_reply, session_status_body, status_pairs,
 };
 use crate::session::{SessionError, SessionRegistry};
@@ -78,6 +92,7 @@ use crate::workload::TraceEvent;
 use super::membership::{MemberState, Membership};
 use super::proto::{self, Announce, PollState, SubmitWire};
 use super::remote::{RemoteWorker, SubmitOutcome};
+use super::rpc::RpcClient;
 use super::DistConfig;
 
 /// First id handed to HTTP submissions (same convention as
@@ -113,6 +128,18 @@ pub struct Router {
     /// Interactive sessions fronted by this router (sticky affinity over
     /// membership slots; failover orphans → re-home).
     sessions: SessionRegistry,
+    /// Write-ahead journal + state mirror (None: volatile, the
+    /// pre-journal behavior).
+    durable: Option<Arc<DurableLog>>,
+    /// `Idempotency-Key` -> original request id, hot-path view; the
+    /// journal's accepted records are the durable copy.
+    idem: IdemKeys,
+    /// True while this process is a warm standby tailing a primary
+    /// (mutating endpoints answer 503 until takeover).
+    standby: AtomicBool,
+    /// Journal-recovered requests awaiting re-placement; the supervisor
+    /// retries them each tick until workers re-announce.
+    replay: Mutex<Vec<u64>>,
     next_id: AtomicU64,
     stopping: AtomicBool,
     addr: Mutex<Option<SocketAddr>>,
@@ -127,7 +154,17 @@ impl Router {
         cfg: DistConfig,
     ) -> Arc<Router> {
         let faults = FaultInjector::from_plan(cfg.faults.as_ref());
-        Arc::new(Router {
+        let (durable, recovered) = match cfg.journal_config() {
+            None => (None, None),
+            Some(jc) => match DurableLog::open(jc) {
+                Ok((log, state)) => (Some(log), Some(state)),
+                Err(e) => {
+                    eprintln!("[router] journal open failed ({e:#}); running volatile");
+                    (None, None)
+                }
+            },
+        };
+        let router = Arc::new(Router {
             membership: Mutex::new(Membership::new(
                 Duration::from_millis(cfg.suspect_after_ms.max(1)),
                 Duration::from_millis(cfg.dead_after_ms.max(1)),
@@ -142,13 +179,21 @@ impl Router {
             registry: RequestRegistry::new(),
             pending: Mutex::new(HashMap::new()),
             sessions: SessionRegistry::default(),
+            durable,
+            idem: IdemKeys::new(4096),
+            standby: AtomicBool::new(false),
+            replay: Mutex::new(Vec::new()),
             next_id: AtomicU64::new(FIRST_HTTP_ID),
             stopping: AtomicBool::new(false),
             addr: Mutex::new(None),
             started: Instant::now(),
             model,
             cfg,
-        })
+        });
+        if let Some(state) = recovered {
+            router.adopt(&state);
+        }
+        router
     }
 
     pub fn registry(&self) -> &Arc<RequestRegistry> {
@@ -187,6 +232,26 @@ impl Router {
     /// worker-facing `/rpc/*` control endpoints) and spawn the accept
     /// loop + supervisor. Returns the bound address.
     pub fn start(self: &Arc<Self>, bind_addr: &str) -> Result<SocketAddr> {
+        let addr = self.bind_and_accept(bind_addr)?;
+        let this = Arc::clone(self);
+        std::thread::spawn(move || this.supervise());
+        Ok(addr)
+    }
+
+    /// Start as a warm standby of the primary at `primary`: serve reads
+    /// (mutations get 503), tail the primary's journal stream, and take
+    /// over — adopt the tailed state, start supervising — once the tail
+    /// is silent longer than `standby_takeover_ms`.
+    pub fn start_standby(self: &Arc<Self>, bind_addr: &str, primary: &str) -> Result<SocketAddr> {
+        self.standby.store(true, Ordering::SeqCst);
+        let addr = self.bind_and_accept(bind_addr)?;
+        let this = Arc::clone(self);
+        let primary = primary.to_string();
+        std::thread::spawn(move || this.standby_tail(primary));
+        Ok(addr)
+    }
+
+    fn bind_and_accept(self: &Arc<Self>, bind_addr: &str) -> Result<SocketAddr> {
         let listener =
             TcpListener::bind(bind_addr).with_context(|| format!("bind router {bind_addr}"))?;
         let addr = listener.local_addr()?;
@@ -200,12 +265,12 @@ impl Router {
                 let Ok(stream) = stream else { continue };
                 let router = Arc::clone(&this);
                 std::thread::spawn(move || {
-                    let _ = serve_connection(stream, |m, p, b| router.route(m, p, b));
+                    let _ = serve_connection_ext(stream, |m, p, b, k| {
+                        router.route_with_headers(m, p, b, k)
+                    });
                 });
             }
         });
-        let this = Arc::clone(self);
-        std::thread::spawn(move || this.supervise());
         Ok(addr)
     }
 
@@ -215,6 +280,48 @@ impl Router {
             return;
         }
         self.registry.fail_all_pending(EditError::WorkerShutdown);
+        if let Some(log) = &self.durable {
+            log.flush();
+        }
+        if let Some(addr) = self.bound_addr() {
+            let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(200));
+        }
+    }
+
+    /// Graceful SIGTERM path: stop accepting, let the workers finish what
+    /// is in flight (bounded by `drain`), journal the leftovers as failed,
+    /// flush, then resolve them with `WorkerShutdown`.
+    pub fn graceful_shutdown(&self, drain: Duration) {
+        if self.stopping.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let deadline = Instant::now() + drain;
+        while Instant::now() < deadline && !self.pending.lock().unwrap().is_empty() {
+            self.pump();
+            std::thread::sleep(Duration::from_millis(self.cfg.poll_ms.max(1)));
+        }
+        let leftovers: Vec<u64> = self.pending.lock().unwrap().keys().copied().collect();
+        for id in leftovers {
+            self.journal(durable::rec_req_state(id, "failed"));
+        }
+        if let Some(log) = &self.durable {
+            log.flush();
+        }
+        self.registry.fail_all_pending(EditError::WorkerShutdown);
+        if let Some(addr) = self.bound_addr() {
+            let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(200));
+        }
+    }
+
+    /// Test hook simulating `kill -9`: stop this process's loops without
+    /// draining, flushing, or resolving anything — exactly the state a
+    /// crash leaves behind. (Per-record appends are already flushed to
+    /// the OS, so a *process* kill loses nothing; the fsync policy only
+    /// matters for host crashes.)
+    pub fn halt_for_test(&self) {
+        if self.stopping.swap(true, Ordering::SeqCst) {
+            return;
+        }
         if let Some(addr) = self.bound_addr() {
             let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(200));
         }
@@ -248,6 +355,7 @@ impl Router {
             for slot in self.dead_slots_with_work() {
                 self.fail_over_slot(slot);
             }
+            self.drain_replay();
             self.pump();
             std::thread::sleep(cadence);
         }
@@ -292,14 +400,26 @@ impl Router {
                 match remote.poll(id) {
                     Err(_) => break, // unreachable: expiry decides its fate
                     Ok(PollState::Queued) => {}
-                    Ok(PollState::Running) => self.registry.mark_running(id),
+                    Ok(PollState::Running) => {
+                        let already = self
+                            .registry
+                            .status(id)
+                            .map(|s| matches!(s.state, RequestState::Running))
+                            .unwrap_or(false);
+                        if !already {
+                            self.journal(durable::rec_req_state(id, "running"));
+                        }
+                        self.registry.mark_running(id);
+                    }
                     Ok(PollState::Done(resp)) => {
+                        self.journal(durable::rec_req_state(id, "done"));
                         self.sessions.complete_round(id, true, Some(resp.timing.e2e));
                         self.registry.fulfill(id, Ok(Arc::new(*resp)));
                         let _ = remote.evict(id);
                         self.clear_entry(slot, id);
                     }
                     Ok(PollState::Failed(e)) => {
+                        self.journal(durable::rec_req_state(id, "failed"));
                         self.sessions.complete_round(id, false, None);
                         self.registry.fulfill(id, Err(e));
                         let _ = remote.evict(id);
@@ -342,11 +462,13 @@ impl Router {
             None => {}                    // evicted: nothing to recover
             Some(s) if s.is_terminal() => {}
             Some(RequestState::Running) => {
+                self.journal(durable::rec_req_state(id, "failed"));
                 self.sessions.complete_round(id, false, None);
                 self.registry.fulfill(id, Err(EditError::WorkerLost));
             }
             Some(_) => {
                 let Some(wire) = wire else {
+                    self.journal(durable::rec_req_state(id, "failed"));
                     self.sessions.complete_round(id, false, None);
                     self.registry.fulfill(id, Err(EditError::WorkerLost));
                     return;
@@ -356,6 +478,7 @@ impl Router {
                 match self.try_place(&wire, &outstanding) {
                     Ok(slot) => {
                         eprintln!("[router] request {id} failed over to slot {slot}");
+                        self.journal(durable::rec_req_placed(id, slot));
                         self.track(slot, outstanding, wire);
                         // re-home the session on the failover target
                         if let Some(sid) = session {
@@ -363,6 +486,7 @@ impl Router {
                         }
                     }
                     Err(_) => {
+                        self.journal(durable::rec_req_state(id, "failed"));
                         self.sessions.complete_round(id, false, None);
                         self.registry.fulfill(id, Err(EditError::WorkerLost));
                     }
@@ -380,6 +504,211 @@ impl Router {
         }
         drop(book);
         self.pending.lock().unwrap().remove(&id);
+    }
+
+    // ------------------------------------------------------------------
+    // durability: journal, recovery adoption, standby tail
+    // ------------------------------------------------------------------
+
+    /// Append one control-plane record (no-op without a journal).
+    fn journal(&self, rec: Json) {
+        if let Some(log) = &self.durable {
+            log.record(rec);
+        }
+    }
+
+    /// Fold a recovered state into this (empty) router: re-seat members
+    /// on their journaled slots, restore sessions and idempotency keys,
+    /// re-register every non-terminal request, and queue never-placed
+    /// ones for re-placement. Restored members come back `Suspect` — a
+    /// live worker's next heartbeat (or re-announce) proves it; a dead
+    /// one expires and its booked work fails over normally.
+    fn adopt(&self, state: &RecoveredState) {
+        let now = Instant::now();
+        let timeout = Duration::from_millis(self.cfg.rpc_timeout_ms.max(1));
+        {
+            let mut ms = self.membership.lock().unwrap();
+            let mut ws = self.workers.lock().unwrap();
+            let mut book = self.book.lock().unwrap();
+            let mut budgets = self.budgets.lock().unwrap();
+            for m in &state.members {
+                let slot = ms.restore(&m.name, &m.addr, Vec::new(), m.epoch, now);
+                let mut remote = RemoteWorker::new(m.name.clone(), m.addr.clone(), timeout);
+                if let Some(f) = &self.faults {
+                    remote = remote.with_faults(Arc::clone(f));
+                }
+                let remote = Arc::new(remote);
+                if slot < ws.len() {
+                    ws[slot] = remote;
+                } else {
+                    ws.push(remote);
+                }
+                while book.len() <= slot {
+                    book.push(Vec::new());
+                }
+                while budgets.len() <= slot {
+                    budgets.push(Arc::new(RetryBudget::new(
+                        self.cfg.retry_budget.max(1.0),
+                        self.cfg.retry_refill_per_sec.max(1e-6),
+                    )));
+                }
+            }
+        }
+        for (sid, s) in &state.sessions {
+            self.sessions
+                .restore(*sid, &s.template, s.closed, s.epoch, s.owner, s.rounds, &s.inflight);
+        }
+        for (key, id) in &state.idempotency {
+            self.idem.put(key, *id);
+        }
+        let mut recovered = 0usize;
+        for (id, r) in &state.requests {
+            if r.is_terminal() {
+                continue;
+            }
+            self.registry
+                .register(*id, r.slot.unwrap_or(0), r.wire.priority, r.wire.deadline_ms);
+            if r.running {
+                self.registry.mark_running(*id);
+            }
+            match r.slot {
+                // booked: the pump reconciles against the worker (done /
+                // still queued / forgotten -> per-request failover)
+                Some(slot) => {
+                    let outstanding = self.outstanding_from_wire(&r.wire);
+                    self.track(slot, outstanding, r.wire.clone());
+                }
+                // accepted but never placed: re-place once members rejoin
+                None => {
+                    self.pending.lock().unwrap().insert(*id, r.wire.clone());
+                    self.replay.lock().unwrap().push(*id);
+                }
+            }
+            recovered += 1;
+        }
+        self.next_id
+            .fetch_max(state.next_request_id.max(FIRST_HTTP_ID), Ordering::SeqCst);
+        if recovered > 0 || !state.members.is_empty() {
+            eprintln!(
+                "[router] journal recovery: {} in-flight request(s), {} member slot(s), {} session(s)",
+                recovered,
+                state.members.len(),
+                state.sessions.len()
+            );
+        }
+    }
+
+    /// Re-place journal-recovered requests that never reached a worker.
+    /// Placement failure (no ready members yet — workers re-announce
+    /// after a restart) keeps the id queued for the next supervisor tick
+    /// rather than failing it: an accepted request is never lost to a
+    /// slow rejoin.
+    fn drain_replay(&self) {
+        let ids: Vec<u64> = std::mem::take(&mut *self.replay.lock().unwrap());
+        if ids.is_empty() {
+            return;
+        }
+        let mut keep = Vec::new();
+        for id in ids {
+            match self.registry.status(id).map(|s| s.state) {
+                None => continue,
+                Some(s) if s.is_terminal() => continue,
+                _ => {}
+            }
+            let Some(wire) = self.pending.lock().unwrap().get(&id).cloned() else {
+                continue;
+            };
+            let outstanding = self.outstanding_from_wire(&wire);
+            match self.try_place(&wire, &outstanding) {
+                Ok(slot) => {
+                    eprintln!("[router] recovered request {id} re-placed on slot {slot}");
+                    self.journal(durable::rec_req_placed(id, slot));
+                    if let Some(sid) = wire.session {
+                        self.sessions.assign_owner(sid, id, slot);
+                    }
+                    self.track(slot, outstanding, wire);
+                }
+                Err(_) => keep.push(id),
+            }
+        }
+        if !keep.is_empty() {
+            self.replay.lock().unwrap().extend(keep);
+        }
+    }
+
+    /// `GET /rpc/journal/tail?from=N`: the standby replication stream.
+    fn journal_tail(&self, query: &str) -> (u16, Json) {
+        let Some(log) = &self.durable else {
+            return (404, error_obj("no journal configured"));
+        };
+        let from = query
+            .strip_prefix("?from=")
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(1);
+        (200, log.tail(from))
+    }
+
+    /// Warm-standby loop: tail the primary's journal, fold each record
+    /// into a shadow state, and treat tail success as the primary's
+    /// heartbeat. Silence beyond `standby_takeover_ms` promotes this
+    /// process.
+    fn standby_tail(self: Arc<Self>, primary: String) {
+        let client = RpcClient::new(
+            primary.clone(),
+            Duration::from_millis(self.cfg.rpc_timeout_ms.max(1)),
+        );
+        let takeover = Duration::from_millis(self.cfg.standby_takeover_ms.max(1));
+        let cadence = Duration::from_millis(self.cfg.heartbeat_ms.max(1));
+        let mut state = RecoveredState::new();
+        let mut next = 1u64;
+        let mut last_ok = Instant::now();
+        while !self.stopping.load(Ordering::SeqCst) {
+            match client.call("GET", &format!("/rpc/journal/tail?from={next}"), None) {
+                Ok((200, body)) => {
+                    last_ok = Instant::now();
+                    if let Some(snap) = body.get("snapshot") {
+                        // ring fell behind (or first contact): full resync
+                        state = RecoveredState::from_snapshot_json(snap);
+                        next = state.last_seq + 1;
+                    }
+                    if let Some(records) = body.at("records").as_arr() {
+                        for entry in records {
+                            let Some(seq) = entry.at("seq").as_f64().map(|x| x as u64) else {
+                                continue;
+                            };
+                            state.apply(seq, entry.at("rec"));
+                            next = seq + 1;
+                        }
+                    }
+                }
+                Ok(_) | Err(_) => {
+                    if last_ok.elapsed() >= takeover {
+                        eprintln!(
+                            "[router] primary {primary} silent past the takeover window; \
+                             standby promoting (seq {})",
+                            state.last_seq
+                        );
+                        self.take_over(state);
+                        return;
+                    }
+                }
+            }
+            std::thread::sleep(cadence);
+        }
+    }
+
+    /// Promote the standby: continue the primary's journal sequence in
+    /// our own journal, adopt the tailed state, open for mutations, and
+    /// start supervising. Workers rotate their announce/heartbeat here
+    /// once the primary stops answering, landing on their journaled slots.
+    fn take_over(self: &Arc<Self>, state: RecoveredState) {
+        if let Some(log) = &self.durable {
+            log.adopt_state(&state);
+        }
+        self.adopt(&state);
+        self.standby.store(false, Ordering::SeqCst);
+        let this = Arc::clone(self);
+        std::thread::spawn(move || this.supervise());
     }
 
     // ------------------------------------------------------------------
@@ -558,12 +887,23 @@ impl Router {
     /// worker accepted the submission, so a returned ticket always has an
     /// owner and will resolve (completion, failover, or `WorkerLost`).
     pub fn submit(&self, req: EditRequest) -> Result<EditTicket, EditError> {
+        self.submit_inner(req, None)
+    }
+
+    fn submit_inner(&self, req: EditRequest, idem: Option<&str>) -> Result<EditTicket, EditError> {
         if self.stopping.load(Ordering::SeqCst) {
             return Err(EditError::WorkerShutdown);
         }
         let wire = SubmitWire::from_request(&req);
         let outstanding = self.outstanding_for(&req);
         let slot = self.try_place(&wire, &outstanding)?;
+        // journal before the ticket exists: a crash from here on re-places
+        // the request on recovery instead of losing an acked submission
+        self.journal(durable::rec_req_accepted(&wire, idem));
+        self.journal(durable::rec_req_placed(req.id, slot));
+        if let Some(key) = idem {
+            self.idem.put(key, req.id);
+        }
         let ticket = self
             .registry
             .register(req.id, slot, req.priority, req.deadline_ms());
@@ -603,10 +943,18 @@ impl Router {
     /// enabled), then route + submit. Template admission happens at the
     /// workers — an unknown template comes back as their typed reject.
     pub fn submit_guarded(&self, req: EditRequest) -> Result<EditTicket, EditError> {
+        self.submit_guarded_inner(req, None)
+    }
+
+    fn submit_guarded_inner(
+        &self,
+        req: EditRequest,
+        idem: Option<&str>,
+    ) -> Result<EditTicket, EditError> {
         let outstanding = self.outstanding_for(&req);
         let _gate = self.admission_gate.lock().unwrap();
         self.assess_admission(&req, &outstanding)?;
-        self.submit(req)
+        self.submit_inner(req, idem)
     }
 
     /// Realize a trace event into a request (same semantics as
@@ -632,6 +980,35 @@ impl Router {
 
     /// Route one request (separated from IO for unit testing).
     pub fn route(&self, method: &str, path: &str, body: &str) -> (u16, Json) {
+        self.route_with_headers(method, path, body, None)
+    }
+
+    /// [`Router::route`] plus the request's `Idempotency-Key` (when sent):
+    /// a repeated key on `POST /v1/edits` or a round submit returns the
+    /// original ticket instead of minting a duplicate.
+    pub fn route_with_headers(
+        &self,
+        method: &str,
+        path: &str,
+        body: &str,
+        idem: Option<&str>,
+    ) -> (u16, Json) {
+        if let Some(query) = path.strip_prefix("/rpc/journal/tail") {
+            if method != "GET" {
+                return (405, error_obj("method not allowed"));
+            }
+            return self.journal_tail(query);
+        }
+        if self.standby.load(Ordering::SeqCst) && method != "GET" {
+            // mutations belong to the primary until takeover
+            return (
+                503,
+                Json::obj(vec![
+                    ("error", Json::str("standby: primary still holds the write path")),
+                    ("standby", Json::Bool(true)),
+                ]),
+            );
+        }
         if let Some(rest) = path.strip_prefix("/v1/edits/") {
             return match rest.parse::<u64>() {
                 Ok(id) => self.edit_by_id(method, id),
@@ -640,7 +1017,7 @@ impl Router {
         }
         if let Some(rest) = path.strip_prefix("/v1/sessions") {
             if rest.is_empty() || rest.starts_with('/') {
-                return self.sessions_route(method, rest, body);
+                return self.sessions_route(method, rest, body, idem);
             }
         }
         if let Some(rest) = path.strip_prefix("/v1/drain/") {
@@ -670,7 +1047,7 @@ impl Router {
             ("GET", "/v1/readyz") => self.readyz(),
             ("GET", "/v1/cluster") => self.cluster_body(),
             ("GET", "/stats") | ("GET", "/v1/stats") => self.stats_body(),
-            ("POST", "/v1/edits") => self.edit_async(body),
+            ("POST", "/v1/edits") => self.edit_async(body, idem),
             ("POST", "/v1/templates") => self.template_register(body),
             _ => (404, error_obj("not found")),
         }
@@ -724,6 +1101,7 @@ impl Router {
                 )));
             }
         }
+        self.journal(durable::rec_member(&a.name, &a.rpc_addr, slot, epoch));
         eprintln!(
             "[router] member {:?} announced at {} (slot {slot}, epoch {epoch})",
             a.name, a.rpc_addr
@@ -909,12 +1287,38 @@ impl Router {
         Ok(req)
     }
 
-    fn edit_async(&self, body: &str) -> (u16, Json) {
+    /// A repeated `Idempotency-Key` replays the original ticket (202 with
+    /// `idempotent: true` and the request's current status). The journal's
+    /// accepted records rebuild the key map on recovery, so the replay
+    /// survives a router crash or standby failover.
+    fn idempotent_replay(&self, idem: Option<&str>, sid: Option<u64>) -> Option<(u16, Json)> {
+        let id = self.idem.get(idem?)?;
+        let label = self
+            .registry
+            .status(id)
+            .map(|s| s.state.label().to_string())
+            .unwrap_or_else(|| "queued".to_string());
+        let mut pairs = vec![
+            ("id", Json::num(id as f64)),
+            ("status", Json::str(label)),
+            ("status_url", Json::str(format!("/v1/edits/{id}"))),
+            ("idempotent", Json::Bool(true)),
+        ];
+        if let Some(sid) = sid {
+            pairs.push(("session", Json::num(sid as f64)));
+        }
+        Some((202, Json::obj(pairs)))
+    }
+
+    fn edit_async(&self, body: &str, idem: Option<&str>) -> (u16, Json) {
+        if let Some(reply) = self.idempotent_replay(idem, None) {
+            return reply;
+        }
         let req = match self.build_request(body, Priority::default()) {
             Ok(r) => r,
             Err(reply) => return reply,
         };
-        match self.submit_guarded(req) {
+        match self.submit_guarded_inner(req, idem) {
             Ok(t) => (
                 202,
                 Json::obj(vec![
@@ -929,7 +1333,7 @@ impl Router {
 
     /// `/v1/sessions*` dispatch (`rest` is `""` or starts with `/`).
     /// Same surface as the in-process frontend, minus SSE (not proxied).
-    fn sessions_route(&self, method: &str, rest: &str, body: &str) -> (u16, Json) {
+    fn sessions_route(&self, method: &str, rest: &str, body: &str, idem: Option<&str>) -> (u16, Json) {
         if rest.is_empty() {
             return match method {
                 "POST" => self.session_open(body),
@@ -950,7 +1354,7 @@ impl Router {
                 None => (404, error_obj(&format!("no such session {sid}"))),
             },
             ("DELETE", "") => self.session_close(sid),
-            ("POST", "/rounds") => self.session_round(sid, body),
+            ("POST", "/rounds") => self.session_round(sid, body, idem),
             ("GET", t) if t.starts_with("/rounds/") && t.ends_with("/events") => (
                 501,
                 error_obj(
@@ -972,6 +1376,7 @@ impl Router {
         };
         let template = j.at("template").as_str().unwrap_or("tpl-0").to_string();
         let sid = self.sessions.open(&template);
+        self.journal(durable::rec_session_open(sid, &template));
         (
             201,
             Json::obj(vec![
@@ -986,7 +1391,10 @@ impl Router {
     /// `POST /v1/sessions/{id}/rounds`: admit one round against the
     /// session (delta-mask verdict, affinity hint), then place it through
     /// the guarded submit path. Priority defaults to `interactive`.
-    fn session_round(&self, sid: u64, body: &str) -> (u16, Json) {
+    fn session_round(&self, sid: u64, body: &str, idem: Option<&str>) -> (u16, Json) {
+        if let Some(reply) = self.idempotent_replay(idem, Some(sid)) {
+            return reply;
+        }
         let mut req = match self.build_request(body, Priority::Interactive) {
             Ok(r) => r,
             Err(reply) => return reply,
@@ -1007,18 +1415,21 @@ impl Router {
             self.sessions.abort_round(rid);
             return edit_error_reply(&e);
         }
-        match self.submit(req) {
-            Ok(ticket) => (
-                202,
-                Json::obj(vec![
-                    ("id", Json::num(rid as f64)),
-                    ("session", Json::num(sid as f64)),
-                    ("round", Json::num(plan.round as f64)),
-                    ("warm", Json::Bool(plan.warm)),
-                    ("worker", Json::num(ticket.worker() as f64)),
-                    ("status_url", Json::str(format!("/v1/edits/{rid}"))),
-                ]),
-            ),
+        match self.submit_inner(req, idem) {
+            Ok(ticket) => {
+                self.journal(durable::rec_session_round(sid, rid));
+                (
+                    202,
+                    Json::obj(vec![
+                        ("id", Json::num(rid as f64)),
+                        ("session", Json::num(sid as f64)),
+                        ("round", Json::num(plan.round as f64)),
+                        ("warm", Json::Bool(plan.warm)),
+                        ("worker", Json::num(ticket.worker() as f64)),
+                        ("status_url", Json::str(format!("/v1/edits/{rid}"))),
+                    ]),
+                )
+            }
             Err(e) => {
                 self.sessions.abort_round(rid);
                 edit_error_reply(&e)
@@ -1032,15 +1443,18 @@ impl Router {
     fn session_close(&self, sid: u64) -> (u16, Json) {
         match self.sessions.close(sid) {
             Err(e) => session_error_reply(&e),
-            Ok((template, inflight)) => (
-                200,
-                Json::obj(vec![
-                    ("session", Json::num(sid as f64)),
-                    ("template", Json::str(template)),
-                    ("state", Json::str("closed")),
-                    ("inflight", Json::num(inflight as f64)),
-                ]),
-            ),
+            Ok((template, inflight)) => {
+                self.journal(durable::rec_session_close(sid));
+                (
+                    200,
+                    Json::obj(vec![
+                        ("session", Json::num(sid as f64)),
+                        ("template", Json::str(template)),
+                        ("state", Json::str("closed")),
+                        ("inflight", Json::num(inflight as f64)),
+                    ]),
+                )
+            }
         }
     }
 
@@ -1116,6 +1530,7 @@ impl Router {
                 // the worker dropped it (cancelled while queued, or its
                 // terminal copy was evicted): resolve our ticket now
                 Some("cancelled") | Some("evicted") => {
+                    self.journal(durable::rec_req_state(id, "cancelled"));
                     self.sessions.complete_round(id, false, None);
                     self.registry.fulfill(id, Err(EditError::Cancelled));
                     self.clear_entry(slot, id);
@@ -1182,6 +1597,7 @@ impl Router {
                 reached += 1;
             }
         }
+        self.journal(durable::rec_template(template, "registering"));
         (
             202,
             Json::obj(vec![
@@ -1200,6 +1616,7 @@ impl Router {
                 reached += 1;
             }
         }
+        self.journal(durable::rec_template(template_id, "retiring"));
         (
             200,
             Json::obj(vec![

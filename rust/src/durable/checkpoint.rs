@@ -1,0 +1,124 @@
+//! Step-boundary latent checkpoints, spilled through the same
+//! checksummed-atomic-rename discipline as the disk cache tier
+//! (`cache/tier.rs`): magic + u64 LE header + payload checksum, written
+//! to a tmp file and renamed into place.
+//!
+//! A checkpoint binds to its request through a `request_checksum` over
+//! (id, prompt seed, masked-row count, template), so a stale file left by
+//! an id reuse or a different request shape is rejected, not resumed.
+//! The engine is deterministic, so the latent at a checkpointed step is
+//! bit-identical to the fault-free run's — resuming from it yields the
+//! same final latent as never crashing.
+
+use std::fs::{self, File};
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::rng::{hash_str, splitmix64};
+
+const CHECKPOINT_MAGIC: u64 = 0x1057_6e13_c4ec_9013;
+const CHECKPOINT_VERSION: u64 = 1;
+/// magic, version, id, step, len, request checksum, payload checksum.
+const HEADER_WORDS: usize = 7;
+
+/// Binds a checkpoint to the request that wrote it.
+pub fn request_checksum(id: u64, prompt_seed: u64, masked: usize, template: &str) -> u64 {
+    splitmix64(
+        id ^ prompt_seed.rotate_left(17)
+            ^ (masked as u64).rotate_left(33)
+            ^ hash_str(template),
+    )
+}
+
+pub fn checkpoint_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("ckpt-{id}.bin"))
+}
+
+fn payload_checksum(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    splitmix64(h)
+}
+
+/// Atomically persist `data` (the latent at step `step`, row-major f32).
+pub fn save_checkpoint(
+    dir: &Path,
+    id: u64,
+    step: usize,
+    req_sum: u64,
+    data: &[f32],
+) -> io::Result<()> {
+    fs::create_dir_all(dir)?;
+    let mut payload = Vec::with_capacity(data.len() * 4);
+    for &v in data {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    let header: [u64; HEADER_WORDS] = [
+        CHECKPOINT_MAGIC,
+        CHECKPOINT_VERSION,
+        id,
+        step as u64,
+        data.len() as u64,
+        req_sum,
+        payload_checksum(&payload),
+    ];
+    let tmp = dir.join(format!("tmp-{}-{id}", std::process::id()));
+    {
+        let mut f = File::create(&tmp)?;
+        for w in header {
+            f.write_all(&w.to_le_bytes())?;
+        }
+        f.write_all(&payload)?;
+        f.sync_data()?;
+    }
+    fs::rename(&tmp, checkpoint_path(dir, id))
+}
+
+/// Load and validate a checkpoint: `Some((step, data))` only when the
+/// magic, version, request binding, length, and payload checksum all
+/// match. Any mismatch removes the file (it can only mislead).
+pub fn load_checkpoint(dir: &Path, id: u64, req_sum: u64, len: usize) -> Option<(usize, Vec<f32>)> {
+    let path = checkpoint_path(dir, id);
+    let loaded = read_validated(&path, id, req_sum, len);
+    if loaded.is_none() {
+        let _ = fs::remove_file(&path);
+    }
+    loaded
+}
+
+fn read_validated(path: &Path, id: u64, req_sum: u64, len: usize) -> Option<(usize, Vec<f32>)> {
+    let mut f = File::open(path).ok()?;
+    let mut header = [0u64; HEADER_WORDS];
+    let mut word = [0u8; 8];
+    for w in header.iter_mut() {
+        f.read_exact(&mut word).ok()?;
+        *w = u64::from_le_bytes(word);
+    }
+    let [magic, version, file_id, step, file_len, file_sum, pay_sum] = header;
+    if magic != CHECKPOINT_MAGIC
+        || version != CHECKPOINT_VERSION
+        || file_id != id
+        || file_sum != req_sum
+        || file_len as usize != len
+    {
+        return None;
+    }
+    let mut payload = vec![0u8; len * 4];
+    f.read_exact(&mut payload).ok()?;
+    if payload_checksum(&payload) != pay_sum {
+        return None;
+    }
+    let data = payload
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Some((step as usize, data))
+}
+
+/// Drop a request's checkpoint (request finished or was resolved).
+pub fn remove_checkpoint(dir: &Path, id: u64) {
+    let _ = fs::remove_file(checkpoint_path(dir, id));
+}

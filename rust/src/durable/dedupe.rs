@@ -1,0 +1,124 @@
+//! Bounded dedupe sets for at-least-once delivery.
+//!
+//! [`BoundedDedupe`] caps the worker-side wire-id dedupe set (PR 9 left
+//! it implicit in the registry, growing per submit): a capacity bound
+//! with insertion-order eviction plus a TTL, so a dropped-ack retry
+//! inside the window still dedupes while the set stays O(cap).
+//!
+//! [`IdemKeys`] is the router-side `Idempotency-Key` -> request-id map,
+//! same capped insertion-order discipline (first write wins; the journal
+//! is the durable copy, this is the hot-path view).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Capped, TTL-bounded id set. `insert_at`/`contains_at` take an explicit
+/// clock so property tests drive time deterministically.
+pub struct BoundedDedupe {
+    cap: usize,
+    ttl: Duration,
+    inner: Mutex<DedupeInner>,
+}
+
+struct DedupeInner {
+    map: HashMap<u64, Instant>,
+    order: VecDeque<(u64, Instant)>,
+}
+
+impl BoundedDedupe {
+    pub fn new(cap: usize, ttl: Duration) -> BoundedDedupe {
+        BoundedDedupe {
+            cap: cap.max(1),
+            ttl,
+            inner: Mutex::new(DedupeInner { map: HashMap::new(), order: VecDeque::new() }),
+        }
+    }
+
+    pub fn insert(&self, id: u64) {
+        self.insert_at(id, Instant::now());
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.contains_at(id, Instant::now())
+    }
+
+    pub fn insert_at(&self, id: u64, now: Instant) {
+        let mut g = self.inner.lock().unwrap();
+        // Evict: capacity overflow (oldest first) and expired entries.
+        while g.order.len() >= self.cap
+            || g.order
+                .front()
+                .is_some_and(|&(_, at)| now.saturating_duration_since(at) > self.ttl)
+        {
+            let Some((old, at)) = g.order.pop_front() else { break };
+            // A re-inserted id has a fresher stamp in the map; only drop
+            // the map entry when this order entry is its current one.
+            if g.map.get(&old) == Some(&at) {
+                g.map.remove(&old);
+            }
+        }
+        g.map.insert(id, now);
+        g.order.push_back((id, now));
+    }
+
+    pub fn contains_at(&self, id: u64, now: Instant) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .map
+            .get(&id)
+            .is_some_and(|&at| now.saturating_duration_since(at) <= self.ttl)
+    }
+
+    /// Live (unexpired-by-eviction) entries; an upper bound on distinct ids.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Capped `Idempotency-Key` -> request-id map; first write wins.
+pub struct IdemKeys {
+    cap: usize,
+    inner: Mutex<(HashMap<String, u64>, VecDeque<String>)>,
+}
+
+impl IdemKeys {
+    pub fn new(cap: usize) -> IdemKeys {
+        IdemKeys {
+            cap: cap.max(1),
+            inner: Mutex::new((HashMap::new(), VecDeque::new())),
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<u64> {
+        self.inner.lock().unwrap().0.get(key).copied()
+    }
+
+    /// Record `key -> id` unless the key is already mapped (first wins).
+    pub fn put(&self, key: &str, id: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let (map, order) = &mut *g;
+        if map.contains_key(key) {
+            return;
+        }
+        while map.len() >= self.cap {
+            let Some(old) = order.pop_front() else { break };
+            map.remove(&old);
+        }
+        map.insert(key.to_string(), id);
+        order.push_back(key.to_string());
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

@@ -1,0 +1,335 @@
+//! Checksummed, segmented write-ahead journal for the control plane.
+//!
+//! Line-oriented: each record is `"<seq> <checksum-hex> <json>\n"` where
+//! the checksum is FNV-1a over the sequence number and the JSON body,
+//! finalized with splitmix64. Segments (`seg-<first_seq>.wal`) rotate at
+//! `segment_bytes`; [`Journal::snapshot`] compacts the log by writing the
+//! caller's state snapshot (`snapshot-<last_seq>.json`, atomic tmp+rename)
+//! and deleting every older segment and snapshot.
+//!
+//! Replay tolerates a torn tail: the first malformed line, checksum
+//! mismatch, or sequence gap ends the replay — records past a tear were
+//! never acknowledged, so dropping them preserves the write-ahead
+//! contract — and the journal resumes appending into a *fresh* segment so
+//! a torn line is never extended.
+
+use std::fs::{self, File};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::splitmix64;
+
+/// When acknowledged appends reach the disk platter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FsyncPolicy {
+    /// fsync after every append — zero loss on host power-cut, slowest.
+    Always,
+    /// fsync at most every `batch_ms` / 256 appends (default): bounded
+    /// loss window on power-cut, none on process crash (appends always
+    /// reach the OS page cache before being acknowledged).
+    #[default]
+    Batched,
+    /// Never fsync — process-crash durability only.
+    Off,
+}
+
+impl FsyncPolicy {
+    pub fn parse(s: &str) -> Option<FsyncPolicy> {
+        match s {
+            "always" => Some(FsyncPolicy::Always),
+            "batched" => Some(FsyncPolicy::Batched),
+            "off" | "none" => Some(FsyncPolicy::Off),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            FsyncPolicy::Always => "always",
+            FsyncPolicy::Batched => "batched",
+            FsyncPolicy::Off => "off",
+        }
+    }
+}
+
+/// Batched policy syncs at this many unsynced appends even if the time
+/// window has not elapsed.
+const BATCH_RECORDS: u64 = 256;
+
+/// Journal location and durability knobs.
+#[derive(Debug, Clone)]
+pub struct JournalConfig {
+    pub dir: PathBuf,
+    pub fsync: FsyncPolicy,
+    /// Rotate to a new segment once the current one reaches this size.
+    pub segment_bytes: u64,
+    /// Compact (snapshot + drop old segments) every this many records.
+    pub snapshot_every: u64,
+    /// Max time an acknowledged append stays unsynced under `Batched`.
+    pub batch_ms: u64,
+}
+
+impl JournalConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> JournalConfig {
+        JournalConfig {
+            dir: dir.into(),
+            fsync: FsyncPolicy::Batched,
+            segment_bytes: 1 << 20,
+            snapshot_every: 4096,
+            batch_ms: 20,
+        }
+    }
+}
+
+/// What [`Journal::open`] recovered from disk: the newest intact snapshot
+/// (if any) plus every intact record after it, in sequence order.
+#[derive(Debug)]
+pub struct JournalReplay {
+    pub snapshot: Option<Json>,
+    pub snapshot_seq: u64,
+    pub records: Vec<(u64, Json)>,
+}
+
+/// Append-only journal writer. Single-owner: callers serialize access
+/// (the control plane wraps it in a mutex).
+pub struct Journal {
+    cfg: JournalConfig,
+    writer: BufWriter<File>,
+    seg_path: PathBuf,
+    seg_bytes: u64,
+    next_seq: u64,
+    unsynced: u64,
+    last_sync: Instant,
+}
+
+impl Journal {
+    /// Open (creating the directory if needed), replay what is on disk,
+    /// and position the writer on a fresh segment at the next sequence
+    /// number. Sequence numbers start at 1; 0 means "nothing recorded".
+    pub fn open(cfg: JournalConfig) -> Result<(Journal, JournalReplay)> {
+        fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("creating journal dir {}", cfg.dir.display()))?;
+
+        // Newest intact snapshot wins; corrupt ones fall back to older.
+        let mut snapshot = None;
+        let mut snapshot_seq = 0;
+        for (seq, path) in list(&cfg.dir, "snapshot-", ".json").into_iter().rev() {
+            if let Ok(text) = fs::read_to_string(&path) {
+                if let Ok(j) = Json::parse(&text) {
+                    snapshot = Some(j);
+                    snapshot_seq = seq;
+                    break;
+                }
+            }
+        }
+
+        // Replay segments in order; stop at the first tear or gap. A torn
+        // segment is truncated back to its valid prefix so the garbage does
+        // not mask records appended to later segments after this recovery.
+        let mut records = Vec::new();
+        let mut expect = snapshot_seq + 1;
+        'replay: for (_first, path) in list(&cfg.dir, "seg-", ".wal") {
+            let Ok(file) = File::open(&path) else { break };
+            let mut valid = 0u64; // byte length of the intact line prefix
+            for line in BufReader::new(file).lines() {
+                let Ok(line) = line else {
+                    truncate_to(&path, valid);
+                    break 'replay;
+                };
+                match parse_line(&line) {
+                    _ if line.is_empty() => {}
+                    Some((seq, _)) if seq < expect => {} // covered by snapshot
+                    Some((seq, rec)) if seq == expect => {
+                        records.push((seq, rec));
+                        expect += 1;
+                    }
+                    _ => {
+                        // torn tail, corruption, or gap
+                        truncate_to(&path, valid);
+                        break 'replay;
+                    }
+                }
+                valid += line.len() as u64 + 1;
+            }
+        }
+
+        let next_seq = expect;
+        let seg_path = cfg.dir.join(segment_name(next_seq));
+        let file = File::create(&seg_path)
+            .with_context(|| format!("creating journal segment {}", seg_path.display()))?;
+        let journal = Journal {
+            cfg,
+            writer: BufWriter::new(file),
+            seg_path,
+            seg_bytes: 0,
+            next_seq,
+            unsynced: 0,
+            last_sync: Instant::now(),
+        };
+        Ok((journal, JournalReplay { snapshot, snapshot_seq, records }))
+    }
+
+    pub fn config(&self) -> &JournalConfig {
+        &self.cfg
+    }
+
+    /// Highest sequence number written (0 when empty).
+    pub fn last_seq(&self) -> u64 {
+        self.next_seq - 1
+    }
+
+    /// Append one record. The line always reaches the OS before the call
+    /// returns (process-crash durability); the fsync policy decides when
+    /// it reaches the platter.
+    pub fn append(&mut self, rec: &Json) -> Result<u64> {
+        let seq = self.next_seq;
+        let body = rec.to_string();
+        let sum = line_checksum(seq, &body);
+        let line = format!("{seq} {sum:016x} {body}\n");
+        self.writer.write_all(line.as_bytes()).context("journal write")?;
+        self.writer.flush().context("journal flush")?;
+        self.next_seq += 1;
+        self.seg_bytes += line.len() as u64;
+        self.unsynced += 1;
+        match self.cfg.fsync {
+            FsyncPolicy::Always => self.sync()?,
+            FsyncPolicy::Batched => {
+                if self.unsynced >= BATCH_RECORDS
+                    || self.last_sync.elapsed().as_millis() as u64 >= self.cfg.batch_ms
+                {
+                    self.sync()?;
+                }
+            }
+            FsyncPolicy::Off => {}
+        }
+        if self.seg_bytes >= self.cfg.segment_bytes {
+            self.rotate()?;
+        }
+        Ok(seq)
+    }
+
+    /// Flush buffered lines and fsync regardless of policy (shutdown path).
+    pub fn flush(&mut self) -> Result<()> {
+        self.writer.flush().context("journal flush")?;
+        self.sync()
+    }
+
+    /// Compact: persist `state` (which must reflect every record up to
+    /// `last_seq`) as the new recovery base, rotate to a fresh segment,
+    /// and delete everything the snapshot covers.
+    pub fn snapshot(&mut self, state: &Json) -> Result<()> {
+        let last = self.last_seq();
+        let tmp = self.cfg.dir.join(format!("tmp-snap-{}", std::process::id()));
+        {
+            let mut f = File::create(&tmp).context("snapshot tmp create")?;
+            f.write_all(state.to_string().as_bytes()).context("snapshot write")?;
+            f.sync_data().context("snapshot sync")?;
+        }
+        fs::rename(&tmp, self.cfg.dir.join(snapshot_name(last))).context("snapshot rename")?;
+        self.rotate()?;
+        for (_seq, path) in list(&self.cfg.dir, "seg-", ".wal") {
+            if path != self.seg_path {
+                let _ = fs::remove_file(path);
+            }
+        }
+        for (seq, path) in list(&self.cfg.dir, "snapshot-", ".json") {
+            if seq < last {
+                let _ = fs::remove_file(path);
+            }
+        }
+        Ok(())
+    }
+
+    /// Jump the sequence counter forward (standby takeover: continue the
+    /// primary's logical stream instead of restarting at 1). No-op when
+    /// `next` is not ahead.
+    pub fn advance_to(&mut self, next: u64) -> Result<()> {
+        if next > self.next_seq {
+            self.next_seq = next;
+            self.rotate()?;
+        }
+        Ok(())
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        self.writer.get_ref().sync_data().context("journal fsync")?;
+        self.unsynced = 0;
+        self.last_sync = Instant::now();
+        Ok(())
+    }
+
+    fn rotate(&mut self) -> Result<()> {
+        self.writer.flush().context("journal flush")?;
+        self.writer.get_ref().sync_data().context("journal fsync")?;
+        let path = self.cfg.dir.join(segment_name(self.next_seq));
+        let file = File::create(&path)
+            .with_context(|| format!("creating journal segment {}", path.display()))?;
+        self.writer = BufWriter::new(file);
+        self.seg_path = path;
+        self.seg_bytes = 0;
+        Ok(())
+    }
+}
+
+/// FNV-1a over the sequence number and record body, splitmix64-finalized.
+pub fn line_checksum(seq: u64, body: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in seq.to_le_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    for &b in body.as_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    splitmix64(h)
+}
+
+fn segment_name(first_seq: u64) -> String {
+    format!("seg-{first_seq:012}.wal")
+}
+
+fn snapshot_name(last_seq: u64) -> String {
+    format!("snapshot-{last_seq:012}.json")
+}
+
+/// Best-effort repair of a torn segment: drop everything past the intact
+/// prefix so stale bytes cannot mask records in later segments.
+fn truncate_to(path: &Path, len: u64) {
+    if let Ok(file) = fs::OpenOptions::new().write(true).open(path) {
+        let _ = file.set_len(len);
+    }
+}
+
+fn parse_line(line: &str) -> Option<(u64, Json)> {
+    let mut it = line.splitn(3, ' ');
+    let seq: u64 = it.next()?.parse().ok()?;
+    let sum = u64::from_str_radix(it.next()?, 16).ok()?;
+    let body = it.next()?;
+    if line_checksum(seq, body) != sum {
+        return None;
+    }
+    Some((seq, Json::parse(body).ok()?))
+}
+
+/// `(seq, path)` pairs for `<prefix><seq><suffix>` files, sequence-sorted.
+fn list(dir: &Path, prefix: &str, suffix: &str) -> Vec<(u64, PathBuf)> {
+    let mut out = Vec::new();
+    if let Ok(rd) = fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(mid) = name.strip_prefix(prefix).and_then(|r| r.strip_suffix(suffix)) {
+                if let Ok(seq) = mid.parse::<u64>() {
+                    out.push((seq, entry.path()));
+                }
+            }
+        }
+    }
+    out.sort();
+    out
+}

@@ -1,0 +1,248 @@
+//! Durable control plane: write-ahead journal, crash recovery, standby
+//! tailing, latent checkpoints, and bounded dedupe.
+//!
+//! The router journals every externally visible state transition —
+//! request accepted/placed/running/terminal, member announce, session
+//! open/round/owner/close, template register/retire — *before*
+//! acknowledging it. A restarted router folds snapshot + journal back
+//! into a [`RecoveredState`] and adopts it: accepted work is re-placed
+//! (worker-side wire-id dedupe makes re-submission safe), in-flight work
+//! reconciles against `/rpc/poll`, and no accepted request is lost. A
+//! warm standby tails the same stream over `GET /rpc/journal/tail` and
+//! takes over on primary silence.
+
+pub mod checkpoint;
+pub mod dedupe;
+pub mod journal;
+pub mod recover;
+pub mod signals;
+
+pub use checkpoint::{
+    checkpoint_path, load_checkpoint, remove_checkpoint, request_checksum, save_checkpoint,
+};
+pub use dedupe::{BoundedDedupe, IdemKeys};
+pub use journal::{FsyncPolicy, Journal, JournalConfig, JournalReplay};
+pub use recover::{RecoveredMember, RecoveredRequest, RecoveredSession, RecoveredState};
+pub use signals::{install_shutdown_handler, shutdown_requested, trigger_shutdown};
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::dist::proto::SubmitWire;
+use crate::util::json::Json;
+
+/// Records the standby tail endpoint serves from memory before falling
+/// back to a full snapshot resync.
+const RING_CAP: usize = 4096;
+
+/// The journal plus the state mirror compaction snapshots serialize and
+/// an in-memory ring serving the standby tail without file reads.
+pub struct DurableLog {
+    inner: Mutex<LogInner>,
+}
+
+struct LogInner {
+    journal: Journal,
+    mirror: RecoveredState,
+    ring: VecDeque<(u64, Json)>,
+    since_snapshot: u64,
+}
+
+impl DurableLog {
+    /// Open the journal and fold what is on disk into a [`RecoveredState`]
+    /// for the caller to adopt.
+    pub fn open(cfg: JournalConfig) -> Result<(Arc<DurableLog>, RecoveredState)> {
+        let (journal, replay) = Journal::open(cfg)?;
+        let state = RecoveredState::from_journal(replay.snapshot.as_ref(), &replay.records);
+        let log = Arc::new(DurableLog {
+            inner: Mutex::new(LogInner {
+                journal,
+                mirror: state.clone(),
+                ring: VecDeque::new(),
+                since_snapshot: 0,
+            }),
+        });
+        Ok((log, state))
+    }
+
+    /// Append one record, mirror it, and compact on schedule. Journal I/O
+    /// errors are reported, not propagated: an unwritable journal degrades
+    /// durability, never availability.
+    pub fn record(&self, rec: Json) {
+        let mut g = self.inner.lock().unwrap();
+        let seq = match g.journal.append(&rec) {
+            Ok(seq) => seq,
+            Err(e) => {
+                eprintln!("[durable] journal append failed: {e:#}");
+                return;
+            }
+        };
+        g.mirror.apply(seq, &rec);
+        g.ring.push_back((seq, rec));
+        while g.ring.len() > RING_CAP {
+            g.ring.pop_front();
+        }
+        g.since_snapshot += 1;
+        if g.since_snapshot >= g.journal.config().snapshot_every {
+            g.since_snapshot = 0;
+            let snap = g.mirror.to_snapshot_json();
+            if let Err(e) = g.journal.snapshot(&snap) {
+                eprintln!("[durable] snapshot compaction failed: {e:#}");
+            }
+        }
+    }
+
+    /// Force everything to the platter (shutdown path).
+    pub fn flush(&self) {
+        if let Err(e) = self.inner.lock().unwrap().journal.flush() {
+            eprintln!("[durable] journal flush failed: {e:#}");
+        }
+    }
+
+    pub fn last_seq(&self) -> u64 {
+        self.inner.lock().unwrap().journal.last_seq()
+    }
+
+    /// Serve a standby's tail request: records with `seq >= from` when
+    /// the ring still holds them, else a full snapshot to resync from.
+    pub fn tail(&self, from: u64) -> Json {
+        let g = self.inner.lock().unwrap();
+        let last = g.journal.last_seq();
+        if from > last {
+            return Json::obj(vec![
+                ("last_seq", Json::num(last as f64)),
+                ("records", Json::arr(vec![])),
+            ]);
+        }
+        if let Some(&(front, _)) = g.ring.front() {
+            if front <= from {
+                let records = g
+                    .ring
+                    .iter()
+                    .filter(|(s, _)| *s >= from)
+                    .map(|(s, r)| {
+                        Json::obj(vec![("seq", Json::num(*s as f64)), ("rec", r.clone())])
+                    })
+                    .collect();
+                return Json::obj(vec![
+                    ("last_seq", Json::num(last as f64)),
+                    ("records", Json::arr(records)),
+                ]);
+            }
+        }
+        Json::obj(vec![
+            ("last_seq", Json::num(last as f64)),
+            ("snapshot_seq", Json::num(last as f64)),
+            ("snapshot", g.mirror.to_snapshot_json()),
+            ("records", Json::arr(vec![])),
+        ])
+    }
+
+    /// Seed this (standby's) journal with an adopted state at takeover:
+    /// the sequence counter jumps to continue the primary's logical
+    /// stream, then the state is compacted in as the recovery base.
+    pub fn adopt_state(&self, state: &RecoveredState) {
+        let mut g = self.inner.lock().unwrap();
+        g.mirror = state.clone();
+        g.ring.clear();
+        g.since_snapshot = 0;
+        if let Err(e) = g.journal.advance_to(state.last_seq + 1) {
+            eprintln!("[durable] journal advance failed: {e:#}");
+        }
+        let snap = g.mirror.to_snapshot_json();
+        if let Err(e) = g.journal.snapshot(&snap) {
+            eprintln!("[durable] adoption snapshot failed: {e:#}");
+        }
+    }
+}
+
+// -- record constructors (the journal's write-side schema) ------------------
+
+pub fn rec_req_accepted(wire: &SubmitWire, idem: Option<&str>) -> Json {
+    let mut pairs = vec![
+        ("t", Json::str("req")),
+        ("st", Json::str("accepted")),
+        ("id", Json::num(wire.id as f64)),
+        ("wire", wire.to_json()),
+    ];
+    if let Some(key) = idem {
+        pairs.push(("idem", Json::str(key)));
+    }
+    Json::obj(pairs)
+}
+
+pub fn rec_req_placed(id: u64, slot: usize) -> Json {
+    Json::obj(vec![
+        ("t", Json::str("req")),
+        ("st", Json::str("placed")),
+        ("id", Json::num(id as f64)),
+        ("slot", Json::num(slot as f64)),
+    ])
+}
+
+/// `st` is one of `running` / `done` / `failed` / `cancelled`.
+pub fn rec_req_state(id: u64, st: &str) -> Json {
+    Json::obj(vec![
+        ("t", Json::str("req")),
+        ("st", Json::str(st)),
+        ("id", Json::num(id as f64)),
+    ])
+}
+
+pub fn rec_member(name: &str, addr: &str, slot: usize, epoch: u64) -> Json {
+    Json::obj(vec![
+        ("t", Json::str("member")),
+        ("st", Json::str("announce")),
+        ("name", Json::str(name)),
+        ("addr", Json::str(addr)),
+        ("slot", Json::num(slot as f64)),
+        ("epoch", Json::num(epoch as f64)),
+    ])
+}
+
+pub fn rec_session_open(sid: u64, template: &str) -> Json {
+    Json::obj(vec![
+        ("t", Json::str("session")),
+        ("st", Json::str("open")),
+        ("sid", Json::num(sid as f64)),
+        ("template", Json::str(template)),
+    ])
+}
+
+pub fn rec_session_round(sid: u64, rid: u64) -> Json {
+    Json::obj(vec![
+        ("t", Json::str("session")),
+        ("st", Json::str("round")),
+        ("sid", Json::num(sid as f64)),
+        ("rid", Json::num(rid as f64)),
+    ])
+}
+
+pub fn rec_session_owner(sid: u64, slot: usize, epoch: u64) -> Json {
+    Json::obj(vec![
+        ("t", Json::str("session")),
+        ("st", Json::str("owner")),
+        ("sid", Json::num(sid as f64)),
+        ("slot", Json::num(slot as f64)),
+        ("epoch", Json::num(epoch as f64)),
+    ])
+}
+
+pub fn rec_session_close(sid: u64) -> Json {
+    Json::obj(vec![
+        ("t", Json::str("session")),
+        ("st", Json::str("close")),
+        ("sid", Json::num(sid as f64)),
+    ])
+}
+
+/// `st` is the template lifecycle label (`registering` / `retiring` ...).
+pub fn rec_template(id: &str, st: &str) -> Json {
+    Json::obj(vec![
+        ("t", Json::str("template")),
+        ("st", Json::str(st)),
+        ("id", Json::str(id)),
+    ])
+}

@@ -1,0 +1,374 @@
+//! Replayable control-plane state: the reduction of a journal stream.
+//!
+//! [`RecoveredState`] is used three ways: (1) cold recovery — a restarted
+//! router folds snapshot + records into one and adopts it; (2) compaction
+//! — the live router keeps a mirror updated on every append, so a
+//! snapshot is just the mirror serialized (no live-registry traversal);
+//! (3) warm standby — the standby folds the tailed record stream and
+//! adopts the result at takeover. All three paths run the same `apply`,
+//! so they cannot drift.
+
+use std::collections::BTreeMap;
+
+use crate::dist::proto::SubmitWire;
+use crate::util::json::Json;
+
+/// One membership slot as the journal last saw it. Slots are Vec indices
+/// assigned in announce order, so replaying members in slot order
+/// reproduces the slot assignment exactly — a re-announcing live worker
+/// lands back on its old slot.
+#[derive(Debug, Clone)]
+pub struct RecoveredMember {
+    pub name: String,
+    pub addr: String,
+    pub epoch: u64,
+}
+
+/// One accepted request's lifecycle as journaled.
+#[derive(Debug, Clone)]
+pub struct RecoveredRequest {
+    pub wire: SubmitWire,
+    /// Last slot the request was placed on (None: accepted, never placed).
+    pub slot: Option<usize>,
+    pub running: bool,
+    /// Terminal state label (`done` / `failed` / `cancelled`), if reached.
+    pub terminal: Option<String>,
+    /// Idempotency key the request was accepted under, if any.
+    pub idem: Option<String>,
+}
+
+impl RecoveredRequest {
+    pub fn is_terminal(&self) -> bool {
+        self.terminal.is_some()
+    }
+}
+
+/// One session's lifecycle as journaled.
+#[derive(Debug, Clone)]
+pub struct RecoveredSession {
+    pub template: String,
+    pub closed: bool,
+    pub epoch: u64,
+    pub owner: Option<usize>,
+    pub rounds: u64,
+    /// Request ids of rounds that had not reached a terminal state.
+    pub inflight: Vec<u64>,
+}
+
+/// The full reduction of a journal stream.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveredState {
+    pub last_seq: u64,
+    pub next_request_id: u64,
+    pub next_session_id: u64,
+    pub members: Vec<RecoveredMember>,
+    pub requests: BTreeMap<u64, RecoveredRequest>,
+    pub sessions: BTreeMap<u64, RecoveredSession>,
+    /// Template id -> last journaled state label.
+    pub templates: BTreeMap<String, String>,
+    /// Idempotency key -> original request id.
+    pub idempotency: BTreeMap<String, u64>,
+}
+
+impl RecoveredState {
+    pub fn new() -> RecoveredState {
+        RecoveredState::default()
+    }
+
+    /// Fold snapshot (if any) + ordered records into one state.
+    pub fn from_journal(snapshot: Option<&Json>, records: &[(u64, Json)]) -> RecoveredState {
+        let mut st = snapshot.map(RecoveredState::from_snapshot_json).unwrap_or_default();
+        for (seq, rec) in records {
+            st.apply(*seq, rec);
+        }
+        st
+    }
+
+    /// Accepted-but-not-terminal request ids, ascending.
+    pub fn pending_ids(&self) -> Vec<u64> {
+        self.requests
+            .iter()
+            .filter(|(_, r)| !r.is_terminal())
+            .map(|(&id, _)| id)
+            .collect()
+    }
+
+    /// Apply one journal record. Unknown record shapes are ignored so an
+    /// older standby can tail a newer primary without wedging.
+    pub fn apply(&mut self, seq: u64, rec: &Json) {
+        self.last_seq = self.last_seq.max(seq);
+        match rec.at("t").as_str().unwrap_or("") {
+            "req" => self.apply_req(rec),
+            "member" => self.apply_member(rec),
+            "session" => self.apply_session(rec),
+            "template" => {
+                if let (Some(id), Some(st)) =
+                    (rec.at("id").as_str(), rec.at("st").as_str())
+                {
+                    self.templates.insert(id.to_string(), st.to_string());
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn apply_req(&mut self, rec: &Json) {
+        let Some(id) = rec.at("id").as_f64().map(|x| x as u64) else { return };
+        match rec.at("st").as_str().unwrap_or("") {
+            "accepted" => {
+                let Some(wire) = SubmitWire::parse(rec.at("wire")) else { return };
+                let idem = rec.at("idem").as_str().map(String::from);
+                if let Some(key) = &idem {
+                    self.idempotency.insert(key.clone(), id);
+                }
+                self.next_request_id = self.next_request_id.max(id + 1);
+                self.requests.insert(
+                    id,
+                    RecoveredRequest { wire, slot: None, running: false, terminal: None, idem },
+                );
+            }
+            "placed" => {
+                if let (Some(r), Some(slot)) =
+                    (self.requests.get_mut(&id), rec.at("slot").as_usize())
+                {
+                    r.slot = Some(slot);
+                }
+            }
+            "running" => {
+                if let Some(r) = self.requests.get_mut(&id) {
+                    r.running = true;
+                }
+            }
+            st @ ("done" | "failed" | "cancelled") => {
+                let sid = match self.requests.get_mut(&id) {
+                    Some(r) => {
+                        r.terminal = Some(st.to_string());
+                        r.wire.session
+                    }
+                    None => None,
+                };
+                if let Some(sid) = sid {
+                    if let Some(s) = self.sessions.get_mut(&sid) {
+                        s.inflight.retain(|&rid| rid != id);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn apply_member(&mut self, rec: &Json) {
+        let (Some(slot), Some(name), Some(addr)) = (
+            rec.at("slot").as_usize(),
+            rec.at("name").as_str(),
+            rec.at("addr").as_str(),
+        ) else {
+            return;
+        };
+        let epoch = rec.at("epoch").as_f64().unwrap_or(1.0) as u64;
+        while self.members.len() <= slot {
+            self.members.push(RecoveredMember {
+                name: String::new(),
+                addr: String::new(),
+                epoch: 0,
+            });
+        }
+        self.members[slot] =
+            RecoveredMember { name: name.to_string(), addr: addr.to_string(), epoch };
+    }
+
+    fn apply_session(&mut self, rec: &Json) {
+        let Some(sid) = rec.at("sid").as_f64().map(|x| x as u64) else { return };
+        match rec.at("st").as_str().unwrap_or("") {
+            "open" => {
+                let template = rec.at("template").as_str().unwrap_or("").to_string();
+                self.next_session_id = self.next_session_id.max(sid + 1);
+                self.sessions.insert(
+                    sid,
+                    RecoveredSession {
+                        template,
+                        closed: false,
+                        epoch: 0,
+                        owner: None,
+                        rounds: 0,
+                        inflight: Vec::new(),
+                    },
+                );
+            }
+            "round" => {
+                if let (Some(s), Some(rid)) = (
+                    self.sessions.get_mut(&sid),
+                    rec.at("rid").as_f64().map(|x| x as u64),
+                ) {
+                    s.rounds += 1;
+                    s.inflight.push(rid);
+                }
+            }
+            "owner" => {
+                if let Some(s) = self.sessions.get_mut(&sid) {
+                    s.owner = rec.at("slot").as_usize();
+                    s.epoch = rec.at("epoch").as_f64().unwrap_or(0.0) as u64;
+                }
+            }
+            "close" => {
+                if let Some(s) = self.sessions.get_mut(&sid) {
+                    s.closed = true;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // -- snapshot (de)serialization -----------------------------------------
+
+    pub fn to_snapshot_json(&self) -> Json {
+        let members = self
+            .members
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("name", Json::str(m.name.clone())),
+                    ("addr", Json::str(m.addr.clone())),
+                    ("epoch", Json::num(m.epoch as f64)),
+                ])
+            })
+            .collect();
+        let requests = self
+            .requests
+            .iter()
+            .map(|(&id, r)| {
+                let mut pairs = vec![
+                    ("id", Json::num(id as f64)),
+                    ("wire", r.wire.to_json()),
+                    ("running", Json::Bool(r.running)),
+                ];
+                if let Some(slot) = r.slot {
+                    pairs.push(("slot", Json::num(slot as f64)));
+                }
+                if let Some(t) = &r.terminal {
+                    pairs.push(("terminal", Json::str(t.clone())));
+                }
+                if let Some(k) = &r.idem {
+                    pairs.push(("idem", Json::str(k.clone())));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        let sessions = self
+            .sessions
+            .iter()
+            .map(|(&sid, s)| {
+                let mut pairs = vec![
+                    ("sid", Json::num(sid as f64)),
+                    ("template", Json::str(s.template.clone())),
+                    ("closed", Json::Bool(s.closed)),
+                    ("epoch", Json::num(s.epoch as f64)),
+                    ("rounds", Json::num(s.rounds as f64)),
+                    (
+                        "inflight",
+                        Json::arr(s.inflight.iter().map(|&r| Json::num(r as f64)).collect()),
+                    ),
+                ];
+                if let Some(owner) = s.owner {
+                    pairs.push(("owner", Json::num(owner as f64)));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        let templates = self
+            .templates
+            .iter()
+            .map(|(id, st)| {
+                Json::obj(vec![
+                    ("id", Json::str(id.clone())),
+                    ("state", Json::str(st.clone())),
+                ])
+            })
+            .collect();
+        let idempotency = self
+            .idempotency
+            .iter()
+            .map(|(k, &id)| {
+                Json::obj(vec![
+                    ("key", Json::str(k.clone())),
+                    ("id", Json::num(id as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("last_seq", Json::num(self.last_seq as f64)),
+            ("next_request_id", Json::num(self.next_request_id as f64)),
+            ("next_session_id", Json::num(self.next_session_id as f64)),
+            ("members", Json::arr(members)),
+            ("requests", Json::arr(requests)),
+            ("sessions", Json::arr(sessions)),
+            ("templates", Json::arr(templates)),
+            ("idempotency", Json::arr(idempotency)),
+        ])
+    }
+
+    pub fn from_snapshot_json(j: &Json) -> RecoveredState {
+        let mut st = RecoveredState {
+            last_seq: j.at("last_seq").as_f64().unwrap_or(0.0) as u64,
+            next_request_id: j.at("next_request_id").as_f64().unwrap_or(0.0) as u64,
+            next_session_id: j.at("next_session_id").as_f64().unwrap_or(0.0) as u64,
+            ..RecoveredState::default()
+        };
+        for m in j.at("members").as_arr().unwrap_or(&[]) {
+            st.members.push(RecoveredMember {
+                name: m.at("name").as_str().unwrap_or("").to_string(),
+                addr: m.at("addr").as_str().unwrap_or("").to_string(),
+                epoch: m.at("epoch").as_f64().unwrap_or(1.0) as u64,
+            });
+        }
+        for r in j.at("requests").as_arr().unwrap_or(&[]) {
+            let (Some(id), Some(wire)) = (
+                r.at("id").as_f64().map(|x| x as u64),
+                SubmitWire::parse(r.at("wire")),
+            ) else {
+                continue;
+            };
+            st.requests.insert(
+                id,
+                RecoveredRequest {
+                    wire,
+                    slot: r.at("slot").as_usize(),
+                    running: r.at("running").as_bool().unwrap_or(false),
+                    terminal: r.at("terminal").as_str().map(String::from),
+                    idem: r.at("idem").as_str().map(String::from),
+                },
+            );
+        }
+        for s in j.at("sessions").as_arr().unwrap_or(&[]) {
+            let Some(sid) = s.at("sid").as_f64().map(|x| x as u64) else { continue };
+            st.sessions.insert(
+                sid,
+                RecoveredSession {
+                    template: s.at("template").as_str().unwrap_or("").to_string(),
+                    closed: s.at("closed").as_bool().unwrap_or(false),
+                    epoch: s.at("epoch").as_f64().unwrap_or(0.0) as u64,
+                    owner: s.at("owner").as_usize(),
+                    rounds: s.at("rounds").as_f64().unwrap_or(0.0) as u64,
+                    inflight: s
+                        .at("inflight")
+                        .as_arr()
+                        .map(|v| v.iter().filter_map(|x| x.as_f64().map(|x| x as u64)).collect())
+                        .unwrap_or_default(),
+                },
+            );
+        }
+        for t in j.at("templates").as_arr().unwrap_or(&[]) {
+            if let (Some(id), Some(state)) = (t.at("id").as_str(), t.at("state").as_str()) {
+                st.templates.insert(id.to_string(), state.to_string());
+            }
+        }
+        for e in j.at("idempotency").as_arr().unwrap_or(&[]) {
+            if let (Some(key), Some(id)) =
+                (e.at("key").as_str(), e.at("id").as_f64().map(|x| x as u64))
+            {
+                st.idempotency.insert(key.to_string(), id);
+            }
+        }
+        st
+    }
+}

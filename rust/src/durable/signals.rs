@@ -1,0 +1,42 @@
+//! Graceful-shutdown signal plumbing (no libc dependency).
+//!
+//! `install_shutdown_handler` points SIGINT/SIGTERM at a handler that
+//! sets a process-wide flag; serve loops poll [`shutdown_requested`] and
+//! run their drain path (stop accepting, finish the running batch at a
+//! step boundary, flush the journal) instead of dying mid-batch.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// Has a shutdown signal (or [`trigger_shutdown`]) been seen?
+pub fn shutdown_requested() -> bool {
+    SHUTDOWN.load(Ordering::SeqCst)
+}
+
+/// Programmatic equivalent of receiving SIGTERM (tests, embedding).
+pub fn trigger_shutdown() {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+#[cfg(unix)]
+extern "C" fn on_signal(_sig: i32) {
+    // async-signal-safe: a relaxed-store-free atomic flag set, nothing else
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGINT (2) and SIGTERM (15) to the shutdown flag. Idempotent.
+#[cfg(unix)]
+pub fn install_shutdown_handler() {
+    unsafe extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    unsafe {
+        signal(2, on_signal); // SIGINT
+        signal(15, on_signal); // SIGTERM
+    }
+}
+
+/// Non-unix: no signal plumbing; [`trigger_shutdown`] still works.
+#[cfg(not(unix))]
+pub fn install_shutdown_handler() {}

@@ -16,6 +16,7 @@
 //!                 static batching.
 
 use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
@@ -32,6 +33,7 @@ use crate::cache::store::{register_template, TemplateActivations};
 use crate::cache::tier::{Residency, TieredStore};
 use crate::cache::LatencyModel;
 use crate::config::{BatchingPolicy, CacheMode, EngineConfig, SystemKind};
+use crate::durable::{load_checkpoint, remove_checkpoint, request_checksum, save_checkpoint};
 use crate::engine::prepost::{postprocess, preprocess, PreparedRequest};
 use crate::engine::queue::{QueuePolicy, Submitter, WorkerQueue};
 use crate::engine::request::{EditError, EditResponse, RequestTiming, WorkerEvent};
@@ -604,24 +606,80 @@ impl Worker {
                 self.crash_restart(&mut members);
             }
             self.run_step(&mut members)?;
+            self.checkpoint_members(&members);
             self.complete_finished(&mut members);
             self.publish(&members);
         }
         Ok(())
     }
 
+    /// Directory for step-boundary latent checkpoints — a subtree of the
+    /// cache spill dir, so checkpoints ride the same disk budget story.
+    fn checkpoint_dir(&self) -> PathBuf {
+        self.cfg.spill_dir.join("checkpoints")
+    }
+
+    /// Spill a latent checkpoint for every member whose step count just
+    /// crossed a `checkpoint_every_steps` boundary. TeaCache members are
+    /// skipped: their replayed-eps gate state is not checkpointed, so a
+    /// resume would not be bit-identical — they restart from step 0.
+    /// Write errors are logged and ignored (a checkpoint is an
+    /// optimization; losing one only costs recompute).
+    fn checkpoint_members(&self, members: &[Member]) {
+        let every = self.cfg.checkpoint_every_steps;
+        if every == 0 {
+            return;
+        }
+        let total = self.rt.config.steps;
+        let dir = self.checkpoint_dir();
+        for m in members {
+            if m.gate.is_some() || m.step == 0 || m.step >= total || m.step % every != 0 {
+                continue;
+            }
+            let req = &m.prep.request;
+            let sum =
+                request_checksum(req.id, req.prompt_seed, m.prep.masked_count, &req.template_id);
+            if let Err(e) = save_checkpoint(&dir, req.id, m.step, sum, m.latent.data()) {
+                eprintln!("worker {}: checkpoint for request {} failed: {e}", self.id, req.id);
+            }
+        }
+    }
+
     /// Reset every in-flight member to its initial state, exactly as a
     /// restarted worker that lost its step-loop progress would observe.
     /// Only latency (and the interruption counter) shows the crash.
+    ///
+    /// With checkpointing enabled, a member whose last step-boundary
+    /// checkpoint validates (request checksum + payload checksum + shape)
+    /// resumes from that step instead of x_T — the denoise loop is
+    /// deterministic, so the resumed trajectory is bit-identical to an
+    /// uninterrupted run.
     fn crash_restart(&self, members: &mut [Member]) {
+        let dir = self.checkpoint_dir();
         for m in members.iter_mut() {
+            m.interruptions += 1;
+            m.last_eps = None;
+            if self.cfg.checkpoint_every_steps > 0 && m.gate.is_none() {
+                let req = &m.prep.request;
+                let sum = request_checksum(
+                    req.id,
+                    req.prompt_seed,
+                    m.prep.masked_count,
+                    &req.template_id,
+                );
+                if let Some((step, data)) =
+                    load_checkpoint(&dir, req.id, sum, m.latent.data().len())
+                {
+                    m.latent.data_mut().copy_from_slice(&data);
+                    m.step = step;
+                    continue;
+                }
+            }
             m.latent = m.acts.initial_latent();
             m.step = 0;
-            m.last_eps = None;
             if m.gate.is_some() {
                 m.gate = Some(TeaCacheGate::new(self.cfg.teacache_threshold));
             }
-            m.interruptions += 1;
         }
     }
 
@@ -1666,6 +1724,9 @@ impl Worker {
     }
 
     fn finish_member(&self, m: Member, _remaining: usize, others: &mut [Member]) {
+        if self.cfg.checkpoint_every_steps > 0 {
+            remove_checkpoint(&self.checkpoint_dir(), m.prep.request.id);
+        }
         let cfg = &self.rt.config;
         let latent = Tensor::from_vec(
             &[cfg.tokens, cfg.hidden],

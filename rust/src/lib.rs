@@ -34,6 +34,10 @@
 //!   worker processes over a keep-alive HTTP/JSON RPC data plane, with
 //!   membership/epochs, heartbeat failure detection, live drain, and
 //!   queued-work failover (`WorkerLost` for in-flight casualties).
+//! - [`durable`]: the durable control plane — a checksummed segmented
+//!   write-ahead journal with snapshot compaction, crash-recovery replay,
+//!   warm-standby journal tailing, step-boundary latent checkpoints, and
+//!   bounded wire-id / idempotency-key dedupe.
 //! - [`faults`]: deterministic fault injection (`--faults <spec>`) across
 //!   storage / transport / engine, plus the degradation-ladder
 //!   primitives: per-tier circuit breakers, router retry budgets with
@@ -58,6 +62,7 @@ pub mod cache;
 pub mod cluster;
 pub mod config;
 pub mod dist;
+pub mod durable;
 pub mod engine;
 pub mod faults;
 pub mod metrics;

@@ -9,6 +9,7 @@
 //!   info            print manifest / model inventory
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -16,6 +17,7 @@ use instgenie::cache::latency_model::{calibrate, LatencyModel};
 use instgenie::cluster::{Cluster, ClusterOpts, RequestState};
 use instgenie::config::{BatchingPolicy, CacheMode, EngineConfig, SystemKind};
 use instgenie::dist::{DistConfig, Router, WorkerNode};
+use instgenie::durable::{install_shutdown_handler, shutdown_requested, FsyncPolicy};
 use instgenie::faults::FaultPlan;
 use instgenie::metrics::Recorder;
 use instgenie::qos::{AdmissionController, Priority};
@@ -58,7 +60,14 @@ fn print_help() {
          \x20                          --dead-after-ms 5000 --poll-ms 100 --rpc-timeout-ms 10000]\n\
          \x20                          [--retry-budget 10 --retry-refill-per-sec 1 --retry-attempts 3\n\
          \x20                          --retry-backoff-base-ms 10 --retry-backoff-cap-ms 500]\n\
+         \x20                          [--journal <dir> --fsync always|batched|off]  write-ahead journal:\n\
+         \x20                          crash recovery replays it; restart with the same --journal dir\n\
+         \x20                          [--standby-of 127.0.0.1:8801 --standby-takeover-ms 3000]  warm\n\
+         \x20                          standby: tails the primary's journal, takes over on silence\n\
          \x20                  worker: --rpc-addr 127.0.0.1:0 --router 127.0.0.1:8801 --name worker-a\n\
+         \x20                          [--checkpoint-every-steps 4]  step-boundary latent checkpoints\n\
+         \x20                          --router accepts a primary,standby list (failover rotation)\n\
+         \x20                  all roles drain + exit 0 on SIGTERM/SIGINT\n\
          \x20 run            --model sdxlm --workers 2 --rps 1.0 --requests 40 --system instgenie\n\
          \x20                --scheduler round-robin|request-lb|token-lb|cache-aware|mask-aware|qos-aware|session-affinity\n\
          \x20                --dist production --templates 4 --class-mix 0.2,0.5,0.3\n\
@@ -148,6 +157,9 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
         let plan = FaultPlan::parse(spec).map_err(|e| anyhow::anyhow!("bad --faults: {e}"))?;
         cfg.faults = Some(plan);
     }
+    // step-boundary latent checkpoints (crash resume); 0 disables
+    cfg.checkpoint_every_steps =
+        args.usize("checkpoint-every-steps", cfg.checkpoint_every_steps);
     Ok(cfg)
 }
 
@@ -193,6 +205,11 @@ fn dist_config(args: &Args) -> Result<DistConfig> {
         }
         None => None,
     };
+    let journal_fsync = match args.flags.get("fsync") {
+        Some(s) => FsyncPolicy::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("bad --fsync {s:?} (always|batched|off)"))?,
+        None => d.journal_fsync,
+    };
     Ok(DistConfig {
         heartbeat_ms: args.u64("heartbeat-ms", d.heartbeat_ms),
         suspect_after_ms: args.u64("suspect-after-ms", d.suspect_after_ms),
@@ -205,7 +222,24 @@ fn dist_config(args: &Args) -> Result<DistConfig> {
         retry_backoff_cap_ms: args.u64("retry-backoff-cap-ms", d.retry_backoff_cap_ms),
         retry_attempts: args.u64("retry-attempts", d.retry_attempts as u64) as u32,
         faults,
+        // durable control plane: --journal <dir> turns on the write-ahead
+        // journal; without it the router is volatile (pre-journal behavior)
+        journal_dir: args.flags.get("journal").map(std::path::PathBuf::from),
+        journal_fsync,
+        journal_segment_bytes: args.u64("journal-segment-bytes", d.journal_segment_bytes),
+        journal_snapshot_every: args.u64("journal-snapshot-every", d.journal_snapshot_every),
+        journal_batch_ms: args.u64("journal-batch-ms", d.journal_batch_ms),
+        standby_takeover_ms: args.u64("standby-takeover-ms", d.standby_takeover_ms),
     })
+}
+
+/// Block until a SIGTERM/SIGINT arrives (the graceful-shutdown signal
+/// plane shared by all three serve roles).
+fn wait_for_shutdown_signal() {
+    install_shutdown_handler();
+    while !shutdown_requested() {
+        std::thread::sleep(Duration::from_millis(200));
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -213,8 +247,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "cluster" => {
             let cluster = Arc::new(launch_cluster(args)?);
             let addr = args.str("addr", "127.0.0.1:8801");
-            let server = Arc::new(HttpServer::new(cluster, 1_000_000));
-            server.serve(&addr)
+            let server = Arc::new(HttpServer::new(Arc::clone(&cluster), 1_000_000));
+            // SIGTERM/SIGINT: close the listener so serve() returns, then
+            // drain below before exiting 0
+            let watcher = Arc::clone(&server);
+            std::thread::spawn(move || {
+                wait_for_shutdown_signal();
+                eprintln!("[serve] shutdown signal: closing listener");
+                watcher.shutdown();
+            });
+            server.serve(&addr)?;
+            // stop the engines and let running members finish at their
+            // step boundaries (the run loop drains before breaking)
+            cluster.request_stop();
+            let deadline = std::time::Instant::now() + Duration::from_secs(10);
+            while std::time::Instant::now() < deadline
+                && cluster
+                    .worker_snapshots()
+                    .iter()
+                    .any(|s| s.running > 0 || s.queued > 0)
+            {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            eprintln!("[serve] drained; exiting");
+            Ok(())
         }
         "router" => cmd_serve_router(args),
         "worker" => cmd_serve_worker(args),
@@ -250,11 +306,21 @@ fn cmd_serve_router(args: &Args) -> Result<()> {
         )
     });
     let router = Router::new(mcfg, sched, admission, dist_config(args)?);
-    let addr = router.start(&args.str("addr", "127.0.0.1:8801"))?;
-    eprintln!("[router] listening on {addr} (public api + worker rpc)");
-    loop {
-        std::thread::park();
+    let bind = args.str("addr", "127.0.0.1:8801");
+    if let Some(primary) = args.flags.get("standby-of") {
+        // warm standby: tail the primary's journal, refuse writes (503)
+        // until the primary goes silent, then take over in place
+        let addr = router.start_standby(&bind, primary)?;
+        eprintln!("[router] standby on {addr} (tailing primary {primary})");
+    } else {
+        let addr = router.start(&bind)?;
+        eprintln!("[router] listening on {addr} (public api + worker rpc)");
     }
+    wait_for_shutdown_signal();
+    eprintln!("[router] shutdown signal: draining");
+    router.graceful_shutdown(Duration::from_secs(10));
+    eprintln!("[router] drained; exiting");
+    Ok(())
 }
 
 /// `serve --role worker`: one worker process of the distributed plane.
@@ -284,13 +350,29 @@ fn cmd_serve_worker(args: &Args) -> Result<()> {
     let addr = node.start(&args.str("rpc-addr", "127.0.0.1:0"))?;
     eprintln!("[worker] {} serving rpc on {addr}", node.name());
     if let Some(router) = args.flags.get("router") {
+        // comma-separated list: primary first, warm standby second — the
+        // node rotates to the standby when the primary goes silent
         node.announce_to(router, &dist_config(args)?);
     } else {
         eprintln!("[worker] no --router given: standalone rpc mode");
     }
-    loop {
-        std::thread::park();
+    wait_for_shutdown_signal();
+    eprintln!("[worker] {} shutdown signal: draining", node.name());
+    node.stop();
+    // running members finish at their step boundaries before the engine
+    // loop breaks; wait for that drain so the exit is clean
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while std::time::Instant::now() < deadline
+        && node
+            .cluster()
+            .worker_snapshots()
+            .iter()
+            .any(|s| s.running > 0 || s.queued > 0)
+    {
+        std::thread::sleep(Duration::from_millis(50));
     }
+    eprintln!("[worker] {} drained; exiting", node.name());
+    Ok(())
 }
 
 fn cmd_run(args: &Args) -> Result<()> {

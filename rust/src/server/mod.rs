@@ -149,10 +149,13 @@ const SSE_POLL: Duration = Duration::from_millis(2);
 /// normally end at the round's terminal event).
 const SSE_MAX_DURATION: Duration = Duration::from_secs(120);
 
-/// Serve a cluster over HTTP until the process is killed.
+/// Serve a cluster over HTTP until the process is killed (or asked to
+/// stop via [`HttpServer::shutdown`]).
 pub struct HttpServer {
     cluster: Arc<Cluster>,
     next_id: AtomicU64,
+    stopping: std::sync::atomic::AtomicBool,
+    bound: std::sync::Mutex<Option<std::net::SocketAddr>>,
 }
 
 impl HttpServer {
@@ -160,22 +163,43 @@ impl HttpServer {
         // online serving is long-lived: don't accumulate the batch-replay
         // response log (results live in the registry until evicted)
         cluster.set_retain_responses(false);
-        HttpServer { cluster, next_id: AtomicU64::new(first_id) }
+        HttpServer {
+            cluster,
+            next_id: AtomicU64::new(first_id),
+            stopping: std::sync::atomic::AtomicBool::new(false),
+            bound: std::sync::Mutex::new(None),
+        }
     }
 
     /// Bind and serve (blocking). One thread per connection — fine for a
     /// control-plane frontend; the data plane is the worker engine.
     pub fn serve(self: Arc<Self>, addr: &str) -> Result<()> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        *self.bound.lock().unwrap() = listener.local_addr().ok();
         eprintln!("[http] listening on {addr}");
         for stream in listener.incoming() {
+            if self.stopping.load(Ordering::SeqCst) {
+                break;
+            }
             let Ok(stream) = stream else { continue };
             let this = Arc::clone(&self);
             std::thread::spawn(move || {
                 let _ = this.handle(stream);
             });
         }
+        eprintln!("[http] listener on {addr} stopped");
         Ok(())
+    }
+
+    /// Stop accepting connections: graceful-shutdown entry for the
+    /// in-process frontend. In-flight handler threads finish their
+    /// current request; the accept loop exits on its next wakeup (a
+    /// self-dial unblocks it immediately).
+    pub fn shutdown(&self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        if let Some(addr) = *self.bound.lock().unwrap() {
+            let _ = TcpStream::connect(addr);
+        }
     }
 
     /// Serve one connection. Mirrors [`serve_connection`] but intercepts
@@ -202,7 +226,7 @@ impl HttpServer {
                     )),
                     false,
                 ),
-                ReadOutcome::Request { method, path, body, keep_alive } => {
+                ReadOutcome::Request { method, path, body, keep_alive, .. } => {
                     if method == "GET" {
                         if let Some((sid, round)) = parse_events_path(&path) {
                             return self.stream_round_events(reader.get_mut(), sid, round);
@@ -962,6 +986,11 @@ pub enum ReadOutcome {
         /// clients (curl, the integration tests) keep working; the dist
         /// RPC client opts in for its long-lived data-plane links.
         keep_alive: bool,
+        /// `Idempotency-Key` header, verbatim (case preserved). Routers
+        /// dedupe `POST /v1/edits` and session-round submits on it so a
+        /// client retry after a dropped ack (or a router failover)
+        /// returns the original ticket instead of a duplicate.
+        idempotency_key: Option<String>,
     },
     /// Declared Content-Length exceeded [`MAX_BODY_BYTES`] (or did not
     /// parse, which gets the same refusal); the body was not read.
@@ -990,6 +1019,7 @@ pub fn read_request(reader: &mut BufReader<TcpStream>) -> Result<ReadOutcome> {
     let path = parts.next().unwrap_or("/").to_string();
     let mut content_length = 0usize;
     let mut keep_alive = false;
+    let mut idempotency_key = None;
     let mut lines = 0usize;
     loop {
         let mut h = String::new();
@@ -1013,6 +1043,9 @@ pub fn read_request(reader: &mut BufReader<TcpStream>) -> Result<ReadOutcome> {
             content_length = v.trim().parse().unwrap_or(usize::MAX);
         } else if let Some(v) = lower.strip_prefix("connection:") {
             keep_alive = v.trim() == "keep-alive";
+        } else if lower.starts_with("idempotency-key:") {
+            // slice the original-case line: keys are opaque client tokens
+            idempotency_key = Some(h["idempotency-key:".len()..].trim().to_string());
         }
     }
     if content_length > MAX_BODY_BYTES {
@@ -1028,6 +1061,7 @@ pub fn read_request(reader: &mut BufReader<TcpStream>) -> Result<ReadOutcome> {
         path,
         body: String::from_utf8_lossy(&body).into_owned(),
         keep_alive,
+        idempotency_key,
     })
 }
 
@@ -1076,6 +1110,16 @@ pub fn serve_connection<F>(stream: TcpStream, mut route: F) -> Result<()>
 where
     F: FnMut(&str, &str, &str) -> (u16, Json),
 {
+    serve_connection_ext(stream, move |m, p, b, _| route(m, p, b))
+}
+
+/// [`serve_connection`] plus header context: the route closure also
+/// receives the request's `Idempotency-Key` (when sent). The dist router
+/// uses this to make `POST /v1/edits` / round submits retry-safe.
+pub fn serve_connection_ext<F>(stream: TcpStream, mut route: F) -> Result<()>
+where
+    F: FnMut(&str, &str, &str, Option<&str>) -> (u16, Json),
+{
     stream.set_read_timeout(Some(READ_TIMEOUT))?;
     stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
     let mut reader = BufReader::new(stream);
@@ -1096,8 +1140,8 @@ where
                 )),
                 false,
             ),
-            ReadOutcome::Request { method, path, body, keep_alive } => {
-                let (status, reply) = route(&method, &path, &body);
+            ReadOutcome::Request { method, path, body, keep_alive, idempotency_key } => {
+                let (status, reply) = route(&method, &path, &body, idempotency_key.as_deref());
                 (status, reply, keep_alive)
             }
         };

@@ -201,6 +201,57 @@ impl SessionRegistry {
         id
     }
 
+    /// Re-seat a journaled session at recovery under its original id.
+    /// Round details (warm verdicts, latencies) are not journaled — the
+    /// restored history carries the round count and which rounds are
+    /// still in flight, so `complete_round` resolves recovered rounds
+    /// when the reconciling router pumps their results. The previous mask
+    /// is gone, so the next round reads cold (correctness over warmth).
+    #[allow(clippy::too_many_arguments)]
+    pub fn restore(
+        &self,
+        id: u64,
+        template: &str,
+        closed: bool,
+        epoch: u64,
+        owner: Option<usize>,
+        rounds: u64,
+        inflight: &[u64],
+    ) {
+        self.next_id.fetch_max(id + 1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        let mut records = Vec::with_capacity(rounds as usize);
+        for round in 1..=rounds {
+            records.push(RoundRecord {
+                round,
+                request_id: 0,
+                warm: false,
+                worker: None,
+                latency: None,
+                ok: None,
+            });
+        }
+        // The trailing rounds are the in-flight ones, oldest first.
+        let first_open = records.len().saturating_sub(inflight.len());
+        for (slot, &rid) in records[first_open..].iter_mut().zip(inflight) {
+            slot.request_id = rid;
+            inner.by_request.insert(rid, id);
+        }
+        inner.sessions.insert(
+            id,
+            SessionInner {
+                template: template.to_string(),
+                state: if closed { SessionState::Closed } else { SessionState::Open },
+                epoch,
+                owner,
+                rounds: records,
+                last_mask: None,
+                last_touch: Instant::now(),
+                inflight: inflight.len(),
+            },
+        );
+    }
+
     /// Admit one round: checks the session is open, computes the
     /// delta-mask verdict against the previous round, advances the round
     /// counter, and records the round as in-flight under `request_id`.

@@ -16,9 +16,10 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use instgenie::cache::LatencyModel;
-use instgenie::cluster::{Cluster, ClusterOpts};
+use instgenie::cluster::{Cluster, ClusterOpts, RequestState};
 use instgenie::config::{EngineConfig, ModelConfig, SystemKind};
 use instgenie::dist::{DistConfig, Router, WorkerNode};
+use instgenie::durable::FsyncPolicy;
 use instgenie::faults::{FaultPlan, FaultSite};
 use instgenie::runtime::Manifest;
 use instgenie::scheduler;
@@ -366,4 +367,281 @@ fn exhausted_retry_budget_surfaces_retry_after() {
         "exactly the one budgeted retry may have been spent: {cluster}"
     );
     router.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// durable control plane: journal replay, checkpoint resume, standby
+// ---------------------------------------------------------------------
+
+/// A journal dir that is guaranteed empty (replay is stateful, unlike
+/// the content-addressed spill dirs above).
+fn fresh_dir(tag: &str) -> PathBuf {
+    let d = tmp_dir(tag);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Two single-worker nodes announcing to `routers` (comma-separated
+/// failover list). `max_batch = 1` keeps every request in a solo batch
+/// so replayed placements stay on the baseline's step schedule.
+fn launch_nodes(routers: &str, cfg: &DistConfig) -> Vec<Arc<WorkerNode>> {
+    (0..2)
+        .map(|i| {
+            let mut e = engine();
+            e.max_batch = 1;
+            let opts = ClusterOpts {
+                workers: 1,
+                engine: e,
+                model: MODEL.into(),
+                artifact_dir: "artifacts".into(),
+                templates: vec!["tpl-0".into(), "tpl-1".into()],
+                lat_model: LatencyModel::load_or_nominal("artifacts", MODEL),
+                warmup: false,
+            };
+            let node = Arc::new(WorkerNode::launch(format!("w{i}"), opts).expect("node"));
+            node.start("127.0.0.1:0").expect("node start");
+            node.announce_to(routers, cfg);
+            node
+        })
+        .collect()
+}
+
+/// The Done latent for `id` from whichever router registry holds it
+/// (the replayed router for post-crash completions, the halted one for
+/// requests that finished before the kill).
+fn done_latent(routers: &[&Router], id: u64) -> Option<Vec<f32>> {
+    routers.iter().find_map(|r| match r.registry().status(id).map(|s| s.state) {
+        Some(RequestState::Done(resp)) => Some(resp.latent.data().to_vec()),
+        _ => None,
+    })
+}
+
+/// kill -9 on the router mid-trace: a fresh router over the same journal
+/// replays membership + every accepted request, workers re-announce into
+/// their journaled slots, and the pump reconciles in-flight work. Nothing
+/// is lost, nothing runs twice, and every latent matches the fault-free
+/// baseline bit-for-bit. Idempotency keys survive the crash.
+#[test]
+fn router_kill_and_journal_replay_loses_nothing() {
+    let Some(manifest) = Manifest::load("artifacts").ok() else { return };
+    let mcfg = manifest.model(MODEL).unwrap().config.clone();
+    let lat = LatencyModel::load_or_nominal("artifacts", MODEL);
+    let mut cfg = DistConfig::fast();
+    cfg.journal_dir = Some(fresh_dir("journal-replay"));
+    cfg.journal_fsync = FsyncPolicy::Always;
+
+    let sched = scheduler::by_name("round-robin", &mcfg, &lat, engine().cache_mode, 1).unwrap();
+    let router1 = Router::new(mcfg.clone(), sched, None, cfg.clone());
+    let addr1 = router1.start("127.0.0.1:0").expect("router start");
+    let nodes = launch_nodes(&addr1.to_string(), &cfg);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while router1.ready_count() < 2 {
+        assert!(Instant::now() < deadline, "workers never became ready");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    let events = TraceGen::new(100.0, MaskDist::Production, 2, 23).generate(6);
+    let ids: Vec<u64> = events
+        .iter()
+        .map(|ev| router1.submit_event(ev).expect("accept").id())
+        .collect();
+    let body = r#"{"template":"tpl-0","mask_ratio":0.2,"prompt_seed":77}"#;
+    let (st, reply) = router1.route_with_headers("POST", "/v1/edits", body, Some("retry-1"));
+    assert_eq!(st, 202, "idempotent submit accepted: {reply}");
+    let idem_id = reply.at("id").as_f64().expect("id") as u64;
+
+    // kill -9 mid-trace: no drain, no flush beyond the per-record appends
+    router1.halt_for_test();
+
+    // a fresh process over the same journal
+    let sched2 = scheduler::by_name("round-robin", &mcfg, &lat, engine().cache_mode, 1).unwrap();
+    let router2 = Router::new(mcfg, sched2, None, cfg.clone());
+    let addr2 = router2.start("127.0.0.1:0").expect("replayed router start");
+    for n in &nodes {
+        n.announce_to(&addr2.to_string(), &cfg);
+    }
+
+    // zero lost: every accepted request reaches exactly one terminal
+    let total = ids.len() + 1;
+    let deadline = Instant::now() + WAIT;
+    loop {
+        let completed: usize = nodes.iter().map(|n| n.cluster().completed()).sum();
+        let all_done = ids
+            .iter()
+            .chain(std::iter::once(&idem_id))
+            .all(|&id| done_latent(&[router2.as_ref(), router1.as_ref()], id).is_some());
+        if completed == total && all_done {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "replay lost work: {completed}/{total} completed on workers"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    // zero duplicated: the cumulative per-node count stays put
+    std::thread::sleep(Duration::from_millis(300));
+    let completed: usize = nodes.iter().map(|n| n.cluster().completed()).sum();
+    assert_eq!(completed, total, "replay re-ran already-completed work");
+
+    // the idempotency key survives the crash: a retry replays the ticket
+    let (st, reply) = router2.route_with_headers("POST", "/v1/edits", body, Some("retry-1"));
+    assert_eq!(st, 202);
+    assert_eq!(reply.at("id").as_f64(), Some(idem_id as f64), "key → original id: {reply}");
+    assert!(
+        matches!(reply.at("idempotent"), Json::Bool(true)),
+        "replay must be flagged idempotent: {reply}"
+    );
+
+    // bit-identical to a fault-free in-process baseline
+    let baseline_cluster = launch(engine()).expect("baseline");
+    let baseline = run_solo(&baseline_cluster, &events);
+    for (i, id) in ids.iter().enumerate() {
+        let latent = done_latent(&[router2.as_ref(), router1.as_ref()], *id).expect("done above");
+        assert_eq!(latent, baseline[i].0, "request {i}: replayed run must be bit-identical");
+    }
+
+    router2.shutdown();
+    for n in &nodes {
+        n.stop();
+    }
+    baseline_cluster.shutdown().expect("shutdown");
+}
+
+/// Step-boundary latent checkpoints: under the same seeded crash plan, a
+/// checkpointing worker resumes from the last boundary instead of step 0
+/// — strictly fewer steps redone — and the final latent still matches the
+/// fault-free golden run bit-for-bit. (Seed 23 at rate 0.35 provably
+/// crashes this single request several times; the draw sequence is
+/// deterministic, so the comparison is exact, not statistical.)
+#[test]
+fn checkpointed_worker_resumes_and_matches_golden() {
+    let mut ckpt = engine();
+    ckpt.spill_dir = fresh_dir("ckpt-resume");
+    ckpt.checkpoint_every_steps = 2;
+    ckpt.faults = Some(FaultPlan::new(23).with_rate(FaultSite::WorkerCrash, 0.35));
+    let mut plain = engine();
+    plain.spill_dir = fresh_dir("ckpt-plain");
+    plain.faults = Some(FaultPlan::new(23).with_rate(FaultSite::WorkerCrash, 0.35));
+    let mut clean = engine();
+    clean.spill_dir = fresh_dir("ckpt-clean");
+
+    let Some(ckpt_cluster) = launch(ckpt) else { return };
+    let plain_cluster = launch(plain).expect("plain");
+    let clean_cluster = launch(clean).expect("baseline");
+
+    // exactly one request: both faulty runs then consume the identical
+    // crash-draw sequence, which makes the step comparison provable
+    let events = TraceGen::new(50.0, MaskDist::Production, 2, 33).generate(1);
+    let resumed = run_solo(&ckpt_cluster, &events);
+    let restarted = run_solo(&plain_cluster, &events);
+    let golden = run_solo(&clean_cluster, &events);
+
+    assert_eq!(resumed[0].0, golden[0].0, "checkpoint resume must be bit-identical");
+    assert_eq!(restarted[0].0, golden[0].0, "restart-from-0 must be bit-identical");
+    assert!(resumed[0].1 > 0, "the seeded plan must interrupt the checkpointing run");
+    assert!(restarted[0].1 > 0, "the seeded plan must interrupt the plain run");
+
+    let s_ckpt: usize =
+        ckpt_cluster.worker_snapshots().iter().map(|s| s.steps_executed).sum();
+    let s_plain: usize =
+        plain_cluster.worker_snapshots().iter().map(|s| s.steps_executed).sum();
+    assert!(
+        s_ckpt < s_plain,
+        "resuming from checkpoints must redo fewer steps ({s_ckpt} vs {s_plain})"
+    );
+
+    ckpt_cluster.shutdown().expect("shutdown");
+    plain_cluster.shutdown().expect("shutdown");
+    clean_cluster.shutdown().expect("shutdown");
+}
+
+/// Warm standby: a second router tails the primary's journal, refuses
+/// writes while the primary is alive, and promotes itself once the
+/// primary goes silent. Workers rotate their announce loop onto the
+/// standby, idempotency keys replay across the failover, and the write
+/// path works end to end afterwards — with nothing lost or duplicated.
+#[test]
+fn standby_takes_over_on_primary_silence() {
+    let Some(manifest) = Manifest::load("artifacts").ok() else { return };
+    let mcfg = manifest.model(MODEL).unwrap().config.clone();
+    let lat = LatencyModel::load_or_nominal("artifacts", MODEL);
+    let mut pcfg = DistConfig::fast();
+    pcfg.journal_dir = Some(fresh_dir("standby-primary"));
+    pcfg.journal_fsync = FsyncPolicy::Always;
+    let mut scfg = pcfg.clone();
+    scfg.journal_dir = Some(fresh_dir("standby-standby"));
+
+    let sched_p = scheduler::by_name("round-robin", &mcfg, &lat, engine().cache_mode, 1).unwrap();
+    let primary = Router::new(mcfg.clone(), sched_p, None, pcfg.clone());
+    let paddr = primary.start("127.0.0.1:0").expect("primary start");
+    let sched_s = scheduler::by_name("round-robin", &mcfg, &lat, engine().cache_mode, 1).unwrap();
+    let standby = Router::new(mcfg, sched_s, None, scfg);
+    let saddr = standby.start_standby("127.0.0.1:0", &paddr.to_string()).expect("standby start");
+
+    let body = r#"{"template":"tpl-0","mask_ratio":0.2,"prompt_seed":5}"#;
+    let (st, reply) = standby.route("POST", "/v1/edits", body);
+    assert_eq!(st, 503, "a standby must refuse writes while the primary lives: {reply}");
+
+    // workers get the primary,standby failover list up front
+    let nodes = launch_nodes(&format!("{paddr},{saddr}"), &pcfg);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while primary.ready_count() < 2 {
+        assert!(Instant::now() < deadline, "workers never became ready");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    let events = TraceGen::new(100.0, MaskDist::Production, 2, 29).generate(5);
+    let tickets: Vec<_> = events[..4]
+        .iter()
+        .map(|ev| primary.submit_event(ev).expect("primary accepts"))
+        .collect();
+    let (st, reply) = primary.route_with_headers("POST", "/v1/edits", body, Some("sb-1"));
+    assert_eq!(st, 202, "{reply}");
+    let idem_id = reply.at("id").as_f64().expect("id") as u64;
+    for t in &tickets {
+        t.wait(WAIT).expect("pre-failover requests complete");
+    }
+    assert!(primary.await_finished(5, WAIT), "all five terminal before the kill");
+
+    // let the standby's tail catch up past the last record, then kill -9
+    std::thread::sleep(Duration::from_millis(1200));
+    primary.halt_for_test();
+
+    // silence past the takeover window promotes the standby; the retried
+    // idempotency key must replay the original ticket, not mint a new one
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let reply = loop {
+        let (st, reply) = standby.route_with_headers("POST", "/v1/edits", body, Some("sb-1"));
+        if st == 202 {
+            break reply;
+        }
+        assert_eq!(st, 503, "pre-takeover the standby still refuses: {reply}");
+        assert!(Instant::now() < deadline, "standby never took over");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert_eq!(
+        reply.at("id").as_f64(),
+        Some(idem_id as f64),
+        "idempotency must survive failover: {reply}"
+    );
+
+    // workers rotate their announce loop onto the promoted standby
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while standby.ready_count() < 2 {
+        assert!(Instant::now() < deadline, "workers never re-announced to the standby");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // and the write path works end to end after the takeover
+    let t = standby.submit_event(&events[4]).expect("standby accepts after takeover");
+    t.wait(WAIT).expect("post-failover request completes");
+
+    let completed: usize = nodes.iter().map(|n| n.cluster().completed()).sum();
+    assert_eq!(completed, 6, "failover lost or duplicated requests");
+
+    standby.shutdown();
+    for n in &nodes {
+        n.stop();
+    }
 }

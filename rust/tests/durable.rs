@@ -1,0 +1,324 @@
+//! Durable control plane units: journal round trips, torn-tail recovery,
+//! segment rotation + snapshot compaction, recovered-state serialization,
+//! bounded dedupe (property-tested retry window), latent checkpoints, and
+//! idempotency keys. Everything here is artifact-free and always runs.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use instgenie::dist::SubmitWire;
+use instgenie::durable::{
+    self, load_checkpoint, remove_checkpoint, request_checksum, save_checkpoint, BoundedDedupe,
+    DurableLog, FsyncPolicy, IdemKeys, Journal, JournalConfig, RecoveredState,
+};
+use instgenie::qos::Priority;
+use instgenie::util::json::Json;
+use instgenie::util::rng::Pcg;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ig-durable-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn wire(id: u64) -> SubmitWire {
+    SubmitWire {
+        id,
+        template: "tpl-0".into(),
+        masked: vec![0, 3, 7],
+        tokens: 64,
+        prompt_seed: 42,
+        priority: Priority::default(),
+        deadline_ms: None,
+        session: None,
+    }
+}
+
+fn cfg(dir: &std::path::Path) -> JournalConfig {
+    let mut c = JournalConfig::new(dir);
+    c.fsync = FsyncPolicy::Off; // unit tests: no platter guarantees needed
+    c
+}
+
+#[test]
+fn fsync_policy_parse_label_round_trip() {
+    for p in [FsyncPolicy::Always, FsyncPolicy::Batched, FsyncPolicy::Off] {
+        assert_eq!(FsyncPolicy::parse(p.label()), Some(p));
+    }
+    assert_eq!(FsyncPolicy::parse("none"), Some(FsyncPolicy::Off));
+    assert_eq!(FsyncPolicy::parse("sometimes"), None);
+}
+
+#[test]
+fn journal_append_replay_round_trip() {
+    let dir = tmp_dir("round-trip");
+    let recs: Vec<Json> = (0..5)
+        .map(|i| durable::rec_req_state(100 + i, if i % 2 == 0 { "done" } else { "failed" }))
+        .collect();
+    {
+        let (mut j, replay) = Journal::open(cfg(&dir)).unwrap();
+        assert_eq!(replay.records.len(), 0);
+        assert!(replay.snapshot.is_none());
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(j.append(r).unwrap(), i as u64 + 1);
+        }
+        assert_eq!(j.last_seq(), 5);
+    }
+    let (j, replay) = Journal::open(cfg(&dir)).unwrap();
+    assert_eq!(j.last_seq(), 5, "reopen must resume the sequence stream");
+    assert_eq!(replay.records.len(), 5);
+    for (i, (seq, rec)) in replay.records.iter().enumerate() {
+        assert_eq!(*seq, i as u64 + 1);
+        assert_eq!(rec, &recs[i], "record {i} must survive the round trip");
+    }
+}
+
+#[test]
+fn journal_torn_tail_is_dropped_not_fatal() {
+    let dir = tmp_dir("torn-tail");
+    {
+        let (mut j, _) = Journal::open(cfg(&dir)).unwrap();
+        for i in 0..5 {
+            j.append(&durable::rec_req_state(i, "done")).unwrap();
+        }
+    }
+    // Tear the newest segment mid-line, as a crash mid-write would.
+    let seg = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "wal"))
+        .max()
+        .unwrap();
+    let bytes = std::fs::read(&seg).unwrap();
+    assert!(bytes.len() > 10);
+    std::fs::write(&seg, &bytes[..bytes.len() - 7]).unwrap();
+
+    let (mut j, replay) = Journal::open(cfg(&dir)).unwrap();
+    assert_eq!(replay.records.len(), 4, "the torn record is dropped, intact ones kept");
+    assert_eq!(j.last_seq(), 4, "the torn seq is reused");
+    // appending after a tear lands in a fresh segment and replays cleanly
+    j.append(&durable::rec_req_state(99, "done")).unwrap();
+    drop(j);
+    let (_, replay) = Journal::open(cfg(&dir)).unwrap();
+    assert_eq!(replay.records.len(), 5);
+    assert_eq!(replay.records[4].0, 5);
+}
+
+#[test]
+fn journal_rotation_and_snapshot_compaction() {
+    let dir = tmp_dir("compact");
+    let mut c = cfg(&dir);
+    c.segment_bytes = 96; // rotate roughly every append
+    let wal_count = |dir: &std::path::Path| {
+        std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".wal"))
+            .count()
+    };
+    let (mut j, _) = Journal::open(c.clone()).unwrap();
+    for i in 0..8 {
+        j.append(&durable::rec_req_state(i, "done")).unwrap();
+    }
+    assert!(wal_count(&dir) >= 4, "tiny segment_bytes must rotate segments");
+
+    // compaction: the caller's state becomes the recovery base
+    let mut state = RecoveredState::new();
+    state.last_seq = j.last_seq();
+    state.templates.insert("tpl-0".into(), "ready".into());
+    j.snapshot(&state.to_snapshot_json()).unwrap();
+    assert_eq!(wal_count(&dir), 1, "compaction must delete covered segments");
+
+    j.append(&durable::rec_req_state(777, "cancelled")).unwrap();
+    drop(j);
+    let (_, replay) = Journal::open(c).unwrap();
+    let snap = replay.snapshot.expect("snapshot must be recovered");
+    assert_eq!(replay.snapshot_seq, 8);
+    let restored = RecoveredState::from_snapshot_json(&snap);
+    assert_eq!(restored.templates.get("tpl-0").map(String::as_str), Some("ready"));
+    assert_eq!(replay.records.len(), 1, "only post-snapshot records replay");
+    assert_eq!(replay.records[0].0, 9);
+}
+
+#[test]
+fn recovered_state_folds_records_and_survives_snapshot_json() {
+    let mut st = RecoveredState::new();
+    let mut seq = 0;
+    let mut apply = |st: &mut RecoveredState, rec: Json| {
+        seq += 1;
+        st.apply(seq, &rec);
+    };
+    apply(&mut st, durable::rec_member("w0", "127.0.0.1:9001", 0, 1));
+    apply(&mut st, durable::rec_member("w1", "127.0.0.1:9002", 1, 1));
+    apply(&mut st, durable::rec_req_accepted(&wire(1_000_000), Some("key-a")));
+    apply(&mut st, durable::rec_req_placed(1_000_000, 1));
+    apply(&mut st, durable::rec_req_state(1_000_000, "running"));
+    apply(&mut st, durable::rec_session_open(1, "tpl-0"));
+    let mut round = wire(1_000_001);
+    round.session = Some(1);
+    apply(&mut st, durable::rec_req_accepted(&round, None));
+    apply(&mut st, durable::rec_session_round(1, 1_000_001));
+    apply(&mut st, durable::rec_template("tpl-9", "registering"));
+    apply(&mut st, durable::rec_req_state(1_000_001, "done"));
+
+    assert_eq!(st.last_seq, 10);
+    assert_eq!(st.next_request_id, 1_000_002);
+    assert_eq!(st.pending_ids(), vec![1_000_000], "terminal requests are not pending");
+    assert_eq!(st.idempotency.get("key-a").copied(), Some(1_000_000));
+    let s = st.sessions.get(&1).unwrap();
+    assert_eq!(s.rounds, 1);
+    assert!(s.inflight.is_empty(), "a done round must leave the inflight set");
+
+    let back = RecoveredState::from_snapshot_json(&st.to_snapshot_json());
+    assert_eq!(back.last_seq, st.last_seq);
+    assert_eq!(back.next_request_id, st.next_request_id);
+    assert_eq!(back.next_session_id, st.next_session_id);
+    assert_eq!(back.members.len(), 2);
+    assert_eq!(back.members[1].name, "w1");
+    let r = back.requests.get(&1_000_000).unwrap();
+    assert_eq!(r.slot, Some(1));
+    assert!(r.running && !r.is_terminal());
+    assert_eq!(r.idem.as_deref(), Some("key-a"));
+    assert_eq!(
+        back.requests.get(&1_000_001).unwrap().terminal.as_deref(),
+        Some("done")
+    );
+    assert_eq!(back.idempotency.get("key-a").copied(), Some(1_000_000));
+    assert_eq!(back.templates.get("tpl-9").map(String::as_str), Some("registering"));
+    assert_eq!(back.sessions.get(&1).unwrap().rounds, 1);
+}
+
+#[test]
+fn durable_log_records_tails_and_recovers() {
+    let dir = tmp_dir("log");
+    {
+        let (log, state) = DurableLog::open(cfg(&dir)).unwrap();
+        assert_eq!(state.last_seq, 0);
+        log.record(durable::rec_req_accepted(&wire(5), None));
+        log.record(durable::rec_req_placed(5, 0));
+        log.record(durable::rec_req_state(5, "done"));
+        assert_eq!(log.last_seq(), 3);
+        // standby tail: ring-served records from any covered cursor
+        let tail = log.tail(2);
+        assert_eq!(tail.at("last_seq").as_f64(), Some(3.0));
+        let recs = tail.at("records").as_arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].at("seq").as_f64(), Some(2.0));
+        // a cursor past the end is an empty heartbeat, not an error
+        let ahead = log.tail(9);
+        assert_eq!(ahead.at("records").as_arr().unwrap().len(), 0);
+        log.flush();
+    }
+    let (log, state) = DurableLog::open(cfg(&dir)).unwrap();
+    assert_eq!(state.last_seq, 3, "reopen must fold the journal back");
+    assert_eq!(
+        state.requests.get(&5).unwrap().terminal.as_deref(),
+        Some("done")
+    );
+
+    // takeover adoption: sequence stream continues past the adopted state
+    let mut adopted = state.clone();
+    adopted.last_seq = 40;
+    log.adopt_state(&adopted);
+    log.record(durable::rec_req_state(6, "failed"));
+    assert_eq!(log.last_seq(), 41, "adoption must continue the primary's stream");
+}
+
+/// The satellite property test: a dropped-ack retry inside the window —
+/// fewer than `cap` newer inserts and within the TTL — always dedupes,
+/// while the set itself stays bounded by `cap`.
+#[test]
+fn bounded_dedupe_retry_inside_window_always_hits() {
+    const CAP: usize = 64;
+    const TTL_MS: u64 = 10_000;
+    let dd = BoundedDedupe::new(CAP, Duration::from_millis(TTL_MS));
+    let t0 = Instant::now();
+    let mut rng = Pcg::new(97);
+    let mut now_ms = 0u64;
+    let mut live: Vec<(u64, u64)> = Vec::new(); // newest-last (id, inserted_at_ms)
+    let mut next_id = 1u64;
+    for _ in 0..4000 {
+        now_ms += rng.below(400) as u64;
+        let now = t0 + Duration::from_millis(now_ms);
+        if !live.is_empty() && rng.f64() < 0.4 {
+            // a worker retrying a wire id whose ack was dropped
+            let k = live.len() - 1 - rng.below(live.len());
+            let (id, at) = live[k];
+            if now_ms - at <= TTL_MS {
+                assert!(
+                    dd.contains_at(id, now),
+                    "id {id} inserted {}ms ago (cap window {}, ttl {TTL_MS}ms) must dedupe",
+                    now_ms - at,
+                    live.len(),
+                );
+            }
+        } else {
+            let id = next_id;
+            next_id += 1;
+            dd.insert_at(id, now);
+            live.push((id, now_ms));
+            if live.len() > CAP {
+                live.remove(0); // older ids may be capacity-evicted
+            }
+        }
+        assert!(dd.len() <= CAP, "dedupe set must stay bounded");
+    }
+    // explicit TTL expiry at the boundary
+    let id = next_id;
+    dd.insert_at(id, t0 + Duration::from_millis(now_ms));
+    assert!(dd.contains_at(id, t0 + Duration::from_millis(now_ms + TTL_MS)));
+    assert!(!dd.contains_at(id, t0 + Duration::from_millis(now_ms + TTL_MS + 1)));
+}
+
+#[test]
+fn checkpoint_round_trip_and_corruption_rejection() {
+    let dir = tmp_dir("ckpt");
+    let sum = request_checksum(9, 42, 3, "tpl-0");
+    let mut rng = Pcg::new(5);
+    let data: Vec<f32> = (0..256).map(|_| rng.f32()).collect();
+
+    save_checkpoint(&dir, 9, 4, sum, &data).unwrap();
+    let (step, loaded) = load_checkpoint(&dir, 9, sum, data.len()).expect("valid checkpoint");
+    assert_eq!(step, 4);
+    assert_eq!(loaded, data, "resume payload must be bit-identical");
+
+    // wrong request identity: rejected AND deleted, so a later load with
+    // the right identity cannot resurrect a mismatched file
+    assert!(load_checkpoint(&dir, 9, sum ^ 1, data.len()).is_none());
+    assert!(load_checkpoint(&dir, 9, sum, data.len()).is_none());
+
+    // wrong shape: rejected
+    save_checkpoint(&dir, 9, 4, sum, &data).unwrap();
+    assert!(load_checkpoint(&dir, 9, sum, data.len() + 1).is_none());
+
+    // flipped payload byte: checksum rejects
+    save_checkpoint(&dir, 9, 4, sum, &data).unwrap();
+    let path = durable::checkpoint_path(&dir, 9);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(load_checkpoint(&dir, 9, sum, data.len()).is_none());
+
+    // explicit removal (request finished)
+    save_checkpoint(&dir, 9, 6, sum, &data).unwrap();
+    remove_checkpoint(&dir, 9);
+    assert!(load_checkpoint(&dir, 9, sum, data.len()).is_none());
+}
+
+#[test]
+fn idem_keys_first_write_wins_within_cap() {
+    let keys = IdemKeys::new(4);
+    keys.put("a", 1);
+    keys.put("a", 2);
+    assert_eq!(keys.get("a"), Some(1), "first write wins");
+    keys.put("b", 3);
+    keys.put("c", 4);
+    keys.put("d", 5);
+    assert_eq!(keys.len(), 4);
+    keys.put("e", 6); // evicts the oldest ("a")
+    assert_eq!(keys.get("a"), None, "capacity eviction drops the oldest key");
+    assert_eq!(keys.get("e"), Some(6));
+    assert!(keys.len() <= 4);
+}
